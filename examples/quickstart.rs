@@ -1,0 +1,62 @@
+//! Quickstart: generate one image with and without selective guidance.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the three-line API: load a [`ModelStack`], build an
+//! [`Engine`], submit a [`GenerationRequest`] — and the paper's headline
+//! trade-off: optimizing the last 20% of iterations cuts UNet executions
+//! from 100 to 90 with an imperceptible output change.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use selective_guidance::config::EngineConfig;
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::WindowSpec;
+use selective_guidance::quality::{psnr, ssim};
+use selective_guidance::runtime::ModelStack;
+
+fn main() -> selective_guidance::Result<()> {
+    let artifacts =
+        std::env::var("SG_ARTIFACTS").unwrap_or_else(|_| "artifacts/tiny".to_string());
+    eprintln!("loading artifacts from {artifacts} ...");
+    let stack = Arc::new(ModelStack::load(&artifacts)?);
+    let engine = Engine::new(stack, EngineConfig::default());
+
+    let prompt = "A person holding a cat";
+
+    // warm the executables (first PJRT execution pays one-off costs)
+    engine.generate(&GenerationRequest::new(prompt).steps(4).decode(false))?;
+
+    // -- baseline: full classifier-free guidance on every iteration -----
+    let baseline = engine.generate(&GenerationRequest::new(prompt).seed(7))?;
+    println!(
+        "baseline : {:>7.1} ms, {} UNet evals",
+        baseline.wall_ms, baseline.unet_evals
+    );
+
+    // -- the paper's recommended config: optimize the last 20% ----------
+    let optimized = engine.generate(
+        &GenerationRequest::new(prompt)
+            .seed(7)
+            .selective(WindowSpec::last(0.2)),
+    )?;
+    println!(
+        "last 20% : {:>7.1} ms, {} UNet evals",
+        optimized.wall_ms, optimized.unet_evals
+    );
+
+    let saving = 100.0 * (baseline.wall_ms - optimized.wall_ms) / baseline.wall_ms;
+    println!("saving   : {saving:>6.1} %  (paper: ~8.2%)");
+
+    let (a, b) = (baseline.image.as_ref().unwrap(), optimized.image.as_ref().unwrap());
+    println!("quality  : SSIM {:.4}, PSNR {:.1} dB vs baseline", ssim(a, b), psnr(a, b));
+
+    std::fs::create_dir_all("out").ok();
+    a.save_png(Path::new("out/quickstart_baseline.png"))?;
+    b.save_png(Path::new("out/quickstart_optimized.png"))?;
+    println!("wrote out/quickstart_baseline.png, out/quickstart_optimized.png");
+    Ok(())
+}

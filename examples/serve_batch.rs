@@ -1,0 +1,106 @@
+//! End-to-end serving validation (the DESIGN.md §6 driver).
+//!
+//! Boots the full stack — ModelStack → Engine → Coordinator → TCP server
+//! — then plays a mixed client workload over the JSON-lines protocol:
+//! baseline CFG requests interleaved with selective-guidance requests at
+//! the paper's operating points. Reports per-config latency and aggregate
+//! throughput. Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_batch
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
+use selective_guidance::engine::Engine;
+use selective_guidance::json::Value;
+use selective_guidance::metrics::SampleStats;
+use selective_guidance::prompts;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::server::{Client, Server};
+
+fn main() -> selective_guidance::Result<()> {
+    let artifacts =
+        std::env::var("SG_ARTIFACTS").unwrap_or_else(|_| "artifacts/tiny".to_string());
+    let steps: i64 = std::env::var("SG_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(50);
+    let per_config: usize =
+        std::env::var("SG_REQUESTS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    eprintln!("loading artifacts from {artifacts} ...");
+    let stack = Arc::new(ModelStack::load(&artifacts)?);
+    let engine = Arc::new(Engine::new(stack, EngineConfig::default()));
+    let coordinator = Coordinator::start(
+        Arc::clone(&engine),
+        CoordinatorConfig { max_batch: 4, workers: 2, batch_wait: Duration::from_millis(3) },
+    );
+    let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0")?;
+    let addr = server.addr().to_string();
+    println!("serving on {addr}; {steps} steps per image, {per_config} requests per config\n");
+
+    // mixed workload: the paper's Table-1 operating points
+    let configs: &[(&str, f64)] =
+        &[("baseline", 0.0), ("last 20%", 0.2), ("last 30%", 0.3), ("last 50%", 0.5)];
+
+    let t_all = Instant::now();
+    let mut handles = Vec::new();
+    for (ci, &(name, fraction)) in configs.iter().enumerate() {
+        let addr = addr.clone();
+        let name = name.to_string();
+        handles.push(std::thread::spawn(move || -> (String, Vec<f64>, i64) {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut latencies = Vec::new();
+            let mut evals = 0i64;
+            for i in 0..per_config {
+                let prompt = prompts::TABLE2[(ci * per_config + i) % prompts::TABLE2.len()];
+                let mut req = Value::obj()
+                    .with("op", "generate")
+                    .with("prompt", prompt)
+                    .with("steps", steps)
+                    .with("scheduler", "pndm")
+                    .with("seed", (1000 * ci + i) as i64);
+                if fraction > 0.0 {
+                    req = req.with("window_fraction", fraction).with("window_position", "last");
+                }
+                let t0 = Instant::now();
+                let resp = client.call(req).expect("generate");
+                latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+                assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp}");
+                evals += resp.get("unet_evals").and_then(Value::as_i64).unwrap_or(0);
+            }
+            (name, latencies, evals)
+        }));
+    }
+
+    let mut results = Vec::new();
+    for h in handles {
+        results.push(h.join().expect("client thread"));
+    }
+    let wall_s = t_all.elapsed().as_secs_f64();
+
+    println!("{:<10} | {:>9} | {:>9} | {:>9} | {:>11}", "config", "mean ms", "p50 ms", "max ms", "unet evals");
+    println!("{}", "-".repeat(60));
+    for (name, lat, evals) in &results {
+        let s = SampleStats::from(lat);
+        println!(
+            "{:<10} | {:>9.1} | {:>9.1} | {:>9.1} | {:>11}",
+            name, s.mean, s.p50, s.max, evals
+        );
+    }
+    let total_reqs = configs.len() * per_config;
+    let stats = coordinator.stats();
+    println!("\ntotal: {total_reqs} images in {wall_s:.1}s = {:.2} img/s", total_reqs as f64 / wall_s);
+    println!(
+        "coordinator: {} batches for {} requests (avg batch {:.2}), p90 latency {:.0} ms",
+        stats.batches,
+        stats.batched_requests,
+        stats.batched_requests as f64 / stats.batches.max(1) as f64,
+        stats.latency_ms_p90
+    );
+    assert_eq!(stats.completed as usize, total_reqs);
+    assert_eq!(stats.failed, 0);
+    println!("serve_batch OK");
+    Ok(())
+}

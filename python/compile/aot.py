@@ -1,0 +1,234 @@
+"""AOT compiler: lower every compute graph to HLO text + weight blobs.
+
+Run once at build time (``make artifacts``); the rust coordinator then
+serves forever without Python. For each model preset this emits, under
+``artifacts/<preset>/``:
+
+    unet_b{1,2,4}.hlo.txt     UNet eps-prediction at batch sizes 1/2/4
+                              (bucketed dynamic batching — DESIGN.md §5)
+    text_encoder.hlo.txt      token ids -> cross-attention context
+    vae_decoder.hlo.txt       latent -> RGB image
+    cfg_combine_b{1,2,4}.hlo.txt  Eq.-1 combine (Pallas kernel artifact)
+    unet.params.bin / text_encoder.params.bin / vae_decoder.params.bin
+                              flat little-endian f32 weight vectors
+    manifest.json             shapes, param counts, source hash
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+The emission is skipped when ``manifest.json`` already records the current
+source hash (``make artifacts`` is a no-op on unchanged inputs).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, params
+from .kernels import cfg_combine
+
+BATCH_SIZES = (1, 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, *arg_specs) -> str:
+    """jit-lower ``fn`` and convert to HLO text via stablehlo."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def source_hash() -> str:
+    """Hash of every python source feeding the artifacts."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(__file__)
+    for root, _, files in os.walk(pkg):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def _shape_entry(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+# ---------------------------------------------------------------------------
+# per-preset emission
+# ---------------------------------------------------------------------------
+
+def emit_preset(cfg: configs.ModelConfig, out_root: str,
+                batch_sizes=BATCH_SIZES) -> dict:
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    C, H, W = cfg.latent_shape
+    S, D = cfg.seq_len, cfg.text_dim
+    artifacts = {}
+
+    def write(name: str, text: str):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text) / 1e3:.0f} kB)")
+
+    def write_params(name: str, flat: jax.Array) -> int:
+        arr = np.asarray(flat, dtype="<f4")
+        path = os.path.join(out_dir, name)
+        arr.tofile(path)
+        print(f"  wrote {path} ({arr.size:,} params)")
+        return int(arr.size)
+
+    # ---- UNet ------------------------------------------------------------
+    def unet_example(b):
+        return (spec((b, C, H, W)), spec((b,)), spec((b, S, D)))
+
+    t0 = time.time()
+    uflat = params.init_flat(
+        lambda cur: model.unet(cur, cfg, jnp.zeros((1, C, H, W)),
+                               jnp.zeros((1,)), jnp.zeros((1, S, D))),
+        cfg.seed)
+    pu = write_params("unet.params.bin", uflat)
+    for b in batch_sizes:
+        def unet_fn(p, lat, t, ctx):
+            return (model.unet(params.ParamCursor(flat=p), cfg, lat, t, ctx),)
+        text = to_hlo_text(unet_fn, spec((pu,)), *unet_example(b))
+        name = f"unet_b{b}"
+        write(f"{name}.hlo.txt", text)
+        artifacts[name] = {
+            "hlo": f"{name}.hlo.txt", "params": "unet.params.bin",
+            "param_count": pu, "batch": b,
+            "inputs": [_shape_entry("params", "f32", (pu,)),
+                       _shape_entry("latent", "f32", (b, C, H, W)),
+                       _shape_entry("t", "f32", (b,)),
+                       _shape_entry("ctx", "f32", (b, S, D))],
+            "outputs": [_shape_entry("eps", "f32", (b, C, H, W))],
+        }
+    print(f"  unet done in {time.time() - t0:.1f}s")
+
+    # ---- text encoder ------------------------------------------------------
+    ids0 = jnp.zeros((1, S), jnp.int32)
+    tflat = params.init_flat(
+        lambda cur: model.text_encoder(cur, cfg, ids0), cfg.seed + 1)
+    pt = write_params("text_encoder.params.bin", tflat)
+
+    def te_fn(p, ids):
+        return (model.text_encoder(params.ParamCursor(flat=p), cfg, ids),)
+
+    write("text_encoder.hlo.txt",
+          to_hlo_text(te_fn, spec((pt,)), spec((1, S), jnp.int32)))
+    artifacts["text_encoder"] = {
+        "hlo": "text_encoder.hlo.txt", "params": "text_encoder.params.bin",
+        "param_count": pt, "batch": 1,
+        "inputs": [_shape_entry("params", "f32", (pt,)),
+                   _shape_entry("ids", "i32", (1, S))],
+        "outputs": [_shape_entry("ctx", "f32", (1, S, D))],
+    }
+
+    # ---- VAE decoder -------------------------------------------------------
+    lat0 = jnp.zeros((1, C, H, W))
+    vflat = params.init_flat(
+        lambda cur: model.vae_decoder(cur, cfg, lat0), cfg.seed + 2)
+    pv = write_params("vae_decoder.params.bin", vflat)
+
+    def vae_fn(p, lat):
+        return (model.vae_decoder(params.ParamCursor(flat=p), cfg, lat),)
+
+    img = cfg.image_size
+    write("vae_decoder.hlo.txt",
+          to_hlo_text(vae_fn, spec((pv,)), spec((1, C, H, W))))
+    artifacts["vae_decoder"] = {
+        "hlo": "vae_decoder.hlo.txt", "params": "vae_decoder.params.bin",
+        "param_count": pv, "batch": 1,
+        "inputs": [_shape_entry("params", "f32", (pv,)),
+                   _shape_entry("latent", "f32", (1, C, H, W))],
+        "outputs": [_shape_entry("image", "f32", (1, 3, img, img))],
+    }
+
+    # ---- CFG combine (the Eq.-1 Pallas kernel as its own artifact) ---------
+    for b in batch_sizes:
+        def cfg_fn(u, c, s):
+            return (cfg_combine(u, c, s),)
+        name = f"cfg_combine_b{b}"
+        write(f"{name}.hlo.txt",
+              to_hlo_text(cfg_fn, spec((b, C, H, W)), spec((b, C, H, W)),
+                          spec((1,))))
+        artifacts[name] = {
+            "hlo": f"{name}.hlo.txt", "params": None, "param_count": 0,
+            "batch": b,
+            "inputs": [_shape_entry("eps_uncond", "f32", (b, C, H, W)),
+                       _shape_entry("eps_cond", "f32", (b, C, H, W)),
+                       _shape_entry("scale", "f32", (1,))],
+            "outputs": [_shape_entry("eps_hat", "f32", (b, C, H, W))],
+        }
+
+    manifest = {
+        "version": 1,
+        "preset": cfg.name,
+        "source_hash": source_hash(),
+        "model": {
+            "latent_channels": C, "latent_size": H,
+            "image_size": cfg.image_size, "seq_len": S, "text_dim": D,
+            "vocab_size": cfg.vocab_size, "seed": cfg.seed,
+            "batch_sizes": list(batch_sizes),
+        },
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def up_to_date(cfg: configs.ModelConfig, out_root: str) -> bool:
+    path = os.path.join(out_root, cfg.name, "manifest.json")
+    try:
+        with open(path) as f:
+            m = json.load(f)
+        return m.get("source_hash") == source_hash()
+    except (OSError, ValueError):
+        return False
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output root")
+    ap.add_argument("--presets", default="tiny,small",
+                    help="comma-separated preset names (tiny,small,base)")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if manifests are current")
+    args = ap.parse_args(argv)
+
+    for name in args.presets.split(","):
+        cfg = configs.preset(name.strip())
+        if not args.force and up_to_date(cfg, args.out):
+            print(f"preset {cfg.name}: up to date, skipping")
+            continue
+        print(f"preset {cfg.name}: emitting artifacts...")
+        t0 = time.time()
+        emit_preset(cfg, args.out)
+        print(f"preset {cfg.name}: done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

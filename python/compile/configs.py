@@ -1,0 +1,109 @@
+"""Model size presets for the selective-guidance stack.
+
+The paper runs Stable Diffusion v1.x (860M-param UNet, 512x512 output).
+We reproduce the *architecture family* (latent-space UNet with ResNet
+blocks + self/cross-attention transformer blocks, CLIP-like text encoder,
+conv VAE decoder) at three reduced scales so the whole stack runs on the
+CPU PJRT backend. See DESIGN.md section 3 for the substitution ledger.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters shared by L2 (jax model) and recorded in the
+    artifact manifest for the rust coordinator."""
+
+    name: str
+    # --- latent space -----------------------------------------------------
+    latent_channels: int  # C of the UNet input/output
+    latent_size: int      # H == W of the latent
+    # --- UNet -------------------------------------------------------------
+    channels: Tuple[int, ...]      # per-resolution channel widths
+    blocks_per_level: int          # ResBlocks per resolution level
+    attn_levels: Tuple[int, ...]   # level indices that get transformer blocks
+    num_heads: int
+    time_embed_dim: int
+    # --- text encoder -----------------------------------------------------
+    vocab_size: int
+    seq_len: int       # S: padded token count
+    text_dim: int      # D: context embedding dim (== cross-attn kv dim)
+    text_layers: int
+    # --- VAE decoder ------------------------------------------------------
+    vae_channels: Tuple[int, ...]  # decoder widths, latent -> image
+    vae_upsamples: int             # number of 2x upsample stages
+    # --- misc ---------------------------------------------------------
+    groupnorm_groups: int = 8
+    seed: int = 0
+
+    @property
+    def image_size(self) -> int:
+        return self.latent_size * (2 ** self.vae_upsamples)
+
+    @property
+    def latent_shape(self) -> Tuple[int, int, int]:
+        """(C, H, W) of a single latent sample."""
+        return (self.latent_channels, self.latent_size, self.latent_size)
+
+
+TINY = ModelConfig(
+    name="tiny",
+    latent_channels=4,
+    latent_size=8,
+    channels=(32, 64),
+    blocks_per_level=1,
+    attn_levels=(1,),
+    num_heads=2,
+    time_embed_dim=64,
+    vocab_size=1024,
+    seq_len=8,
+    text_dim=32,
+    text_layers=1,
+    vae_channels=(32, 16),
+    vae_upsamples=2,
+)
+
+SMALL = ModelConfig(
+    name="small",
+    latent_channels=4,
+    latent_size=16,
+    channels=(32, 64, 96),
+    blocks_per_level=1,
+    attn_levels=(1, 2),
+    num_heads=4,
+    time_embed_dim=96,
+    vocab_size=2048,
+    seq_len=16,
+    text_dim=64,
+    text_layers=2,
+    vae_channels=(48, 24),
+    vae_upsamples=2,
+)
+
+BASE = ModelConfig(
+    name="base",
+    latent_channels=4,
+    latent_size=24,
+    channels=(48, 96, 144),
+    blocks_per_level=2,
+    attn_levels=(1, 2),
+    num_heads=4,
+    time_embed_dim=144,
+    vocab_size=4096,
+    seq_len=24,
+    text_dim=96,
+    text_layers=2,
+    vae_channels=(64, 32),
+    vae_upsamples=3,
+)
+
+PRESETS = {c.name: c for c in (TINY, SMALL, BASE)}
+
+
+def preset(name: str) -> ModelConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown preset {name!r}; have {sorted(PRESETS)}") from None

@@ -1,0 +1,13 @@
+"""Pallas kernels (L1) + pure-jnp reference oracles.
+
+Public surface used by the L2 model:
+    flash_attention, cfg_combine, groupnorm_silu
+and the oracles in ref.py used by pytest and the non-pallas model path.
+"""
+
+from .attention import flash_attention
+from .cfg_combine import cfg_combine
+from .groupnorm_silu import groupnorm_silu
+from . import ref
+
+__all__ = ["flash_attention", "cfg_combine", "groupnorm_silu", "ref"]

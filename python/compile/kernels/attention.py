@@ -1,0 +1,99 @@
+"""L1: flash-style attention as a Pallas kernel.
+
+This is the UNet's compute hot-spot (self-attention over latent tokens and
+cross-attention over the text context). The paper's system runs on
+V100/CUDA where the HF pipeline dispatches cuBLAS GEMMs + softmax kernels;
+the TPU re-think (DESIGN.md section 4) tiles Q into VMEM-resident blocks via
+BlockSpec, streams K/V blocks through an online-softmax accumulator, and
+shapes every contraction as an MXU-friendly matmul.
+
+Executed with ``interpret=True`` so it lowers to plain HLO runnable on the
+CPU PJRT backend (real-TPU lowering emits a Mosaic custom-call the CPU
+plugin cannot execute — see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Default VMEM tile sizes. At these blocks the per-program footprint is
+#   q_blk (bq*d) + K,V (2*S*d) + acc (bq*d) + m,l (2*bq)   floats,
+# far under the ~16 MiB VMEM budget for every preset (see DESIGN.md §Perf).
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One program instance: one (batch*head, q-block) tile.
+
+    q_ref: [1, bq, d]; k_ref/v_ref: [1, S, d]; o_ref: [1, bq, d].
+    Online softmax over K/V blocks (Milakov & Gimelshein / FlashAttention
+    style): running max m, running sum l, rescaled accumulator acc.
+    """
+    q = q_ref[0].astype(jnp.float32) * scale            # [bq, d]
+    bq, d = q.shape
+    skv = k_ref.shape[1]
+    nk = skv // block_k
+
+    def body(i, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.dslice(i * block_k, block_k),
+                            slice(None))).astype(jnp.float32)   # [bk, d]
+        v = pl.load(v_ref, (0, pl.dslice(i * block_k, block_k),
+                            slice(None))).astype(jnp.float32)   # [bk, d]
+        s = q @ k.T                                      # [bq, bk]  (MXU)
+        m_new = jnp.maximum(m, s.max(axis=-1))           # [bq]
+        p = jnp.exp(s - m_new[:, None])                  # [bq, bk]
+        alpha = jnp.exp(m - m_new)                       # [bq]
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v           # [bq, d]  (MXU)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = lax.fori_loop(0, nk, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of n that is <= preferred (>=1)."""
+    b = min(preferred, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+    """Batched multi-head attention via the Pallas kernel.
+
+    q: [BH, Sq, d]; k, v: [BH, Skv, d]  ->  [BH, Sq, d]
+    BH is batch*heads flattened by the caller. Sq/Skv need not be equal
+    (cross-attention). Block sizes are clamped to divisors of the sequence
+    lengths so no masking is required.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    assert k.shape == (bh, skv, d) and v.shape == (bh, skv, d)
+    bq = _pick_block(sq, block_q)
+    bk = _pick_block(skv, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (bh, sq // bq)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=bk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),   # Q tile
+            pl.BlockSpec((1, skv, d), lambda i, j: (i, 0, 0)),  # full K row
+            pl.BlockSpec((1, skv, d), lambda i, j: (i, 0, 0)),  # full V row
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

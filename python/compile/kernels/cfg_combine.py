@@ -1,0 +1,62 @@
+"""L1: classifier-free guidance combine (Eq. 1) as a Pallas kernel.
+
+    eps_hat = eps_u + s * (eps_c - eps_u)
+
+A purely elementwise VPU kernel: the grid walks 128-wide tiles of the
+flattened latent; the guidance scale rides along as a (1, 1) block so the
+same compiled artifact serves any scale (the paper's §3.4 GS-tuning sweeps
+change s at request time, not compile time).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128  # one VPU lane row
+
+
+def _cfg_kernel(s_ref, u_ref, c_ref, o_ref):
+    s = s_ref[0, 0]
+    u = u_ref[...]
+    c = c_ref[...]
+    o_ref[...] = u + s * (c - u)
+
+
+def _pick_tile(n: int, preferred: int = TILE) -> int:
+    t = min(preferred, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cfg_combine(eps_uncond, eps_cond, scale, *, interpret: bool = True):
+    """Fused Eq.-1 combine over arbitrary (equal) shapes.
+
+    eps_uncond / eps_cond: same shape; scale: scalar or [1] array.
+    """
+    assert eps_uncond.shape == eps_cond.shape
+    shape = eps_uncond.shape
+    n = 1
+    for dim in shape:
+        n *= dim
+    t = _pick_tile(n)
+    u = eps_uncond.reshape(n)
+    c = eps_cond.reshape(n)
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _cfg_kernel,
+        grid=(n // t,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # guidance scale
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), eps_uncond.dtype),
+        interpret=interpret,
+    )(s, u, c)
+    return out.reshape(shape)

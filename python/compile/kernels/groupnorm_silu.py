@@ -1,0 +1,56 @@
+"""L1: fused GroupNorm + SiLU as a Pallas kernel.
+
+Every ResBlock in the UNet (and the VAE decoder head) does
+GroupNorm -> SiLU -> conv. Fusing the normalization statistics, affine and
+activation into one VMEM-resident pass removes two HBM round-trips per
+block — the TPU analogue of the fused CUDA groupnorm kernels in the
+DeepSpeed inference pipeline the paper built on.
+
+Grid: one program per (batch, group). The group's (C/G, H*W) slab plus its
+gamma/beta slice live in VMEM; stats are computed in f32.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gn_silu_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[0, 0].astype(jnp.float32)        # [Cg, HW]
+    mean = x.mean()
+    var = ((x - mean) ** 2).mean()
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = xn * g_ref[0][:, None] + b_ref[0][:, None]
+    # numerically-stable SiLU
+    sig = jnp.where(y >= 0, 1.0 / (1.0 + jnp.exp(-y)),
+                    jnp.exp(y) / (1.0 + jnp.exp(y)))
+    o_ref[0, 0] = (y * sig).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "eps", "interpret"))
+def groupnorm_silu(x, gamma, beta, *, groups: int, eps: float = 1e-5,
+                   interpret: bool = True):
+    """Fused GroupNorm+SiLU.  x: [B, C, H, W]; gamma/beta: [C]."""
+    b, c, h, w = x.shape
+    assert c % groups == 0, (c, groups)
+    cg = c // groups
+    hw = h * w
+    xg = x.reshape(b, groups, cg, hw)
+    gg = gamma.astype(jnp.float32).reshape(groups, cg)
+    bg = beta.astype(jnp.float32).reshape(groups, cg)
+
+    out = pl.pallas_call(
+        functools.partial(_gn_silu_kernel, eps=eps),
+        grid=(b, groups),
+        in_specs=[
+            pl.BlockSpec((1, 1, cg, hw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, cg), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, cg), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cg, hw), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, groups, cg, hw), x.dtype),
+        interpret=interpret,
+    )(xg, gg, bg)
+    return out.reshape(b, c, h, w)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with plain jax.numpy ops only. pytest (python/tests/) asserts the Pallas
+interpret-mode outputs allclose against these across a hypothesis-driven
+sweep of shapes and dtypes. These are also the fallback path the L2 model
+uses when ``use_pallas=False`` (e.g. for fast shape tests).
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None):
+    """Scaled dot-product attention.
+
+    q: [BH, Sq, d], k/v: [BH, Skv, d]  ->  [BH, Sq, d]
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def cfg_combine_ref(eps_uncond, eps_cond, scale):
+    """Classifier-free guidance combine — Eq. (1) of the paper:
+
+        eps_hat = eps_u + s * (eps_c - eps_u)
+
+    eps_*: any equal shape; scale: scalar (or [1]) guidance scale s.
+    """
+    s = jnp.asarray(scale).reshape(())
+    return eps_uncond + s * (eps_cond - eps_uncond)
+
+
+def silu_ref(x):
+    """Numerically-stable SiLU, matching the fused kernel's activation."""
+    return x * jnp.where(x >= 0, 1.0 / (1.0 + jnp.exp(-x)),
+                         jnp.exp(x) / (1.0 + jnp.exp(x)))
+
+
+def groupnorm_silu_ref(x, gamma, beta, groups, eps=1e-5):
+    """Fused GroupNorm + SiLU.
+
+    x: [B, C, H, W]; gamma/beta: [C]. Normalizes over each group's
+    (C/groups, H, W) slab, applies affine, then SiLU.
+    """
+    b, c, h, w = x.shape
+    assert c % groups == 0, (c, groups)
+    xg = x.reshape(b, groups, c // groups, h, w).astype(jnp.float32)
+    mean = xg.mean(axis=(2, 3, 4), keepdims=True)
+    var = xg.var(axis=(2, 3, 4), keepdims=True)
+    xn = (xg - mean) / jnp.sqrt(var + eps)
+    xn = xn.reshape(b, c, h, w)
+    y = xn * gamma.reshape(1, c, 1, 1) + beta.reshape(1, c, 1, 1)
+    return silu_ref(y).astype(x.dtype)

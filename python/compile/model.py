@@ -1,0 +1,290 @@
+"""L2: the guided-diffusion model family in JAX.
+
+Three compute graphs, each AOT-lowered to an HLO artifact by ``aot.py``:
+
+  * ``unet``          — latent-space denoising UNet (ResBlocks + transformer
+                        blocks with self- and cross-attention, sinusoidal
+                        timestep embedding, down/up-sampling). The paper's
+                        SD v1.x UNet at reduced scale (DESIGN.md section 3).
+  * ``text_encoder``  — CLIP-substitute transformer encoder mapping token
+                        ids to the cross-attention context.
+  * ``vae_decoder``   — conv decoder mapping latents to RGB images.
+
+All hot-spots route through the L1 Pallas kernels
+(``kernels.flash_attention``, ``kernels.groupnorm_silu``); the Eq.-1 CFG
+combine ships as its own artifact so the rust engine can fuse the two UNet
+outputs on-device. ``use_pallas=False`` swaps in the pure-jnp oracles for
+fast shape tests.
+
+Every graph takes the flat parameter vector as its first argument — see
+``params.ParamCursor`` for the layout contract.
+"""
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .configs import ModelConfig
+from .kernels import flash_attention, groupnorm_silu
+from .kernels import ref as kref
+
+# dimension numbers for NCHW conv with OIHW kernels
+_DN = ("NCHW", "OIHW", "NCHW")
+
+
+# ---------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------
+
+def conv2d(cur, x, cin: int, cout: int, k: int = 3, stride: int = 1,
+           name: str = "conv"):
+    """3x3/1x1 convolution with bias, SAME padding."""
+    w = cur.take((cout, cin, k, k), init="normal", fan_in=cin * k * k,
+                 name=f"{name}.w")
+    b = cur.take((cout,), init="zeros", name=f"{name}.b")
+    pad = k // 2
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)), dimension_numbers=_DN)
+    return y + b.reshape(1, cout, 1, 1)
+
+
+def dense(cur, x, din: int, dout: int, name: str = "dense"):
+    w = cur.take((din, dout), init="normal", fan_in=din, name=f"{name}.w")
+    b = cur.take((dout,), init="zeros", name=f"{name}.b")
+    return x @ w + b
+
+
+def layernorm(cur, x, dim: int, name: str = "ln"):
+    g = cur.take((dim,), init="ones", name=f"{name}.g")
+    b = cur.take((dim,), init="zeros", name=f"{name}.b")
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) * lax.rsqrt(var + 1e-5) * g + b
+
+
+def groupnorm_plain(cur, x, ch: int, groups: int, name: str = "gn"):
+    """GroupNorm without activation (pre-attention norm)."""
+    g = cur.take((ch,), init="ones", name=f"{name}.g")
+    b = cur.take((ch,), init="zeros", name=f"{name}.b")
+    bsz, c, h, w = x.shape
+    xg = x.reshape(bsz, groups, c // groups, h, w)
+    mean = xg.mean(axis=(2, 3, 4), keepdims=True)
+    var = xg.var(axis=(2, 3, 4), keepdims=True)
+    xn = ((xg - mean) * lax.rsqrt(var + 1e-5)).reshape(bsz, c, h, w)
+    return xn * g.reshape(1, c, 1, 1) + b.reshape(1, c, 1, 1)
+
+
+def gn_silu(cur, x, ch: int, groups: int, use_pallas: bool, name: str = "gns"):
+    """Fused GroupNorm+SiLU via the L1 kernel (or its oracle)."""
+    g = cur.take((ch,), init="ones", name=f"{name}.g")
+    b = cur.take((ch,), init="zeros", name=f"{name}.b")
+    if use_pallas:
+        return groupnorm_silu(x, g, b, groups=groups)
+    return kref.groupnorm_silu_ref(x, g, b, groups)
+
+
+def attention(q, k, v, heads: int, use_pallas: bool):
+    """Multi-head attention dispatch. q: [B,Sq,C]; k/v: [B,Skv,C]."""
+    bsz, sq, c = q.shape
+    skv = k.shape[1]
+    d = c // heads
+
+    def split(t, s):
+        return (t.reshape(bsz, s, heads, d).transpose(0, 2, 1, 3)
+                .reshape(bsz * heads, s, d))
+
+    qh, kh, vh = split(q, sq), split(k, skv), split(v, skv)
+    if use_pallas:
+        oh = flash_attention(qh, kh, vh)
+    else:
+        oh = kref.attention_ref(qh, kh, vh)
+    return (oh.reshape(bsz, heads, sq, d).transpose(0, 2, 1, 3)
+            .reshape(bsz, sq, c))
+
+
+def timestep_embedding(t, dim: int):
+    """Sinusoidal embedding of (continuous) timesteps. t: [B] -> [B, dim]."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    args = t[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# UNet blocks
+# ---------------------------------------------------------------------------
+
+def resblock(cur, x, temb, cin: int, cout: int, groups: int,
+             use_pallas: bool, name: str):
+    """GN+SiLU -> conv -> +temb -> GN+SiLU -> conv, with skip."""
+    h = gn_silu(cur, x, cin, groups, use_pallas, name=f"{name}.gns1")
+    h = conv2d(cur, h, cin, cout, 3, name=f"{name}.conv1")
+    te = dense(cur, kref.silu_ref(temb), temb.shape[-1], cout,
+               name=f"{name}.temb")
+    h = h + te[:, :, None, None]
+    h = gn_silu(cur, h, cout, groups, use_pallas, name=f"{name}.gns2")
+    h = conv2d(cur, h, cout, cout, 3, name=f"{name}.conv2")
+    if cin != cout:
+        x = conv2d(cur, x, cin, cout, 1, name=f"{name}.skip")
+    return x + h
+
+
+def transformer_block(cur, x, ctx, ch: int, heads: int, groups: int,
+                      text_dim: int, use_pallas: bool, name: str):
+    """Self-attn + cross-attn(ctx) + feed-forward over latent tokens.
+
+    x: [B, ch, H, W]; ctx: [B, S, text_dim].
+    """
+    bsz, c, h, w = x.shape
+    hn = groupnorm_plain(cur, x, ch, groups, name=f"{name}.gn")
+    tok = hn.reshape(bsz, c, h * w).transpose(0, 2, 1)  # [B, HW, C]
+
+    # self-attention
+    t1 = layernorm(cur, tok, ch, name=f"{name}.ln1")
+    q = dense(cur, t1, ch, ch, name=f"{name}.sa.q")
+    k = dense(cur, t1, ch, ch, name=f"{name}.sa.k")
+    v = dense(cur, t1, ch, ch, name=f"{name}.sa.v")
+    a = attention(q, k, v, heads, use_pallas)
+    tok = tok + dense(cur, a, ch, ch, name=f"{name}.sa.o")
+
+    # cross-attention over the text context
+    t2 = layernorm(cur, tok, ch, name=f"{name}.ln2")
+    q = dense(cur, t2, ch, ch, name=f"{name}.ca.q")
+    k = dense(cur, ctx, text_dim, ch, name=f"{name}.ca.k")
+    v = dense(cur, ctx, text_dim, ch, name=f"{name}.ca.v")
+    a = attention(q, k, v, heads, use_pallas)
+    tok = tok + dense(cur, a, ch, ch, name=f"{name}.ca.o")
+
+    # feed-forward
+    t3 = layernorm(cur, tok, ch, name=f"{name}.ln3")
+    ff = dense(cur, t3, ch, 4 * ch, name=f"{name}.ff1")
+    ff = dense(cur, kref.silu_ref(ff), 4 * ch, ch, name=f"{name}.ff2")
+    tok = tok + ff
+
+    return x + tok.transpose(0, 2, 1).reshape(bsz, c, h, w)
+
+
+def downsample(cur, x, ch: int, name: str):
+    return conv2d(cur, x, ch, ch, 3, stride=2, name=name)
+
+
+def upsample(cur, x, ch: int, name: str):
+    bsz, c, h, w = x.shape
+    up = jax.image.resize(x, (bsz, c, 2 * h, 2 * w), method="nearest")
+    return conv2d(cur, up, ch, ch, 3, name=name)
+
+
+# ---------------------------------------------------------------------------
+# the three compute graphs
+# ---------------------------------------------------------------------------
+
+def unet(cur, cfg: ModelConfig, latent, t, ctx, use_pallas: bool = True):
+    """Denoising UNet: predict eps from (x_t, t, context).
+
+    latent: [B, C, H, W]; t: [B] (continuous timestep index);
+    ctx: [B, S, text_dim]  ->  eps: [B, C, H, W]
+    """
+    chs = cfg.channels
+    g = cfg.groupnorm_groups
+    ted = cfg.time_embed_dim
+
+    temb = timestep_embedding(t, chs[0])
+    temb = dense(cur, temb, chs[0], ted, name="temb1")
+    temb = dense(cur, kref.silu_ref(temb), ted, ted, name="temb2")
+
+    h = conv2d(cur, latent, cfg.latent_channels, chs[0], 3, name="in")
+    skips = [(h, chs[0])]
+
+    # down path
+    for lvl, ch in enumerate(chs):
+        cin = chs[max(lvl - 1, 0)] if lvl > 0 else chs[0]
+        for i in range(cfg.blocks_per_level):
+            h = resblock(cur, h, temb, cin if i == 0 else ch, ch, g,
+                         use_pallas, name=f"down{lvl}.res{i}")
+            if lvl in cfg.attn_levels:
+                h = transformer_block(cur, h, ctx, ch, cfg.num_heads, g,
+                                      cfg.text_dim, use_pallas,
+                                      name=f"down{lvl}.attn{i}")
+            skips.append((h, ch))
+        if lvl < len(chs) - 1:
+            h = downsample(cur, h, ch, name=f"down{lvl}.ds")
+            skips.append((h, ch))
+
+    # middle
+    mid_ch = chs[-1]
+    h = resblock(cur, h, temb, mid_ch, mid_ch, g, use_pallas, name="mid.res1")
+    h = transformer_block(cur, h, ctx, mid_ch, cfg.num_heads, g,
+                          cfg.text_dim, use_pallas, name="mid.attn")
+    h = resblock(cur, h, temb, mid_ch, mid_ch, g, use_pallas, name="mid.res2")
+
+    # up path (mirror, consuming skips)
+    for lvl in reversed(range(len(chs))):
+        ch = chs[lvl]
+        n_blocks = cfg.blocks_per_level + (1 if lvl < len(chs) - 1 else 1)
+        for i in range(n_blocks):
+            skip, sk_ch = skips.pop()
+            cin = h.shape[1] + sk_ch
+            h = jnp.concatenate([h, skip], axis=1)
+            h = resblock(cur, h, temb, cin, ch, g, use_pallas,
+                         name=f"up{lvl}.res{i}")
+            if lvl in cfg.attn_levels:
+                h = transformer_block(cur, h, ctx, ch, cfg.num_heads, g,
+                                      cfg.text_dim, use_pallas,
+                                      name=f"up{lvl}.attn{i}")
+        if lvl > 0:
+            h = upsample(cur, h, ch, name=f"up{lvl}.us")
+
+    h = gn_silu(cur, h, chs[0], g, use_pallas, name="out.gns")
+    return conv2d(cur, h, chs[0], cfg.latent_channels, 3, name="out.conv")
+
+
+def text_encoder(cur, cfg: ModelConfig, ids, use_pallas: bool = True):
+    """CLIP-substitute encoder. ids: i32[B, S] -> ctx f32[B, S, text_dim]."""
+    d = cfg.text_dim
+    table = cur.take((cfg.vocab_size, d), init="embed", name="te.tok")
+    pos = cur.take((cfg.seq_len, d), init="embed", name="te.pos")
+    h = jnp.take(table, ids, axis=0) + pos[None, :, :]
+    for layer in range(cfg.text_layers):
+        t1 = layernorm(cur, h, d, name=f"te.{layer}.ln1")
+        q = dense(cur, t1, d, d, name=f"te.{layer}.q")
+        k = dense(cur, t1, d, d, name=f"te.{layer}.k")
+        v = dense(cur, t1, d, d, name=f"te.{layer}.v")
+        a = attention(q, k, v, max(1, cfg.num_heads // 2), use_pallas)
+        h = h + dense(cur, a, d, d, name=f"te.{layer}.o")
+        t2 = layernorm(cur, h, d, name=f"te.{layer}.ln2")
+        ff = dense(cur, t2, d, 4 * d, name=f"te.{layer}.ff1")
+        h = h + dense(cur, kref.silu_ref(ff), 4 * d, d,
+                      name=f"te.{layer}.ff2")
+    return layernorm(cur, h, d, name="te.lnf")
+
+
+def vae_decoder(cur, cfg: ModelConfig, latent, use_pallas: bool = True):
+    """Latent -> RGB image in [-1, 1].
+
+    latent: [B, C, H, W] -> image [B, 3, H * 2**k, W * 2**k].
+    """
+    g = cfg.groupnorm_groups
+    widths: Sequence[int] = list(cfg.vae_channels)
+    while len(widths) < cfg.vae_upsamples:
+        widths.append(widths[-1])
+
+    ch = widths[0]
+    h = conv2d(cur, latent, cfg.latent_channels, ch, 3, name="vae.in")
+    h = h + conv2d(cur, gn_silu(cur, h, ch, g, use_pallas, name="vae.res.gns"),
+                   ch, ch, 3, name="vae.res.conv")
+    for i in range(cfg.vae_upsamples):
+        nxt = widths[min(i, len(widths) - 1)]
+        h = upsample(cur, h, ch, name=f"vae.up{i}")
+        if nxt != ch:
+            h = conv2d(cur, h, ch, nxt, 1, name=f"vae.ch{i}")
+            ch = nxt
+        h = h + conv2d(cur, gn_silu(cur, h, ch, g, use_pallas,
+                                    name=f"vae.res{i}.gns"),
+                       ch, ch, 3, name=f"vae.res{i}.conv")
+    h = gn_silu(cur, h, ch, g, use_pallas, name="vae.out.gns")
+    return jnp.tanh(conv2d(cur, h, ch, 3, 3, name="vae.out.conv"))

@@ -1,0 +1,112 @@
+"""Deterministic parameter store for the L2 model.
+
+The serving architecture keeps weights OUT of the HLO text: every artifact
+takes a single flat ``f32[P]`` parameter vector as its first input, and the
+rust runtime feeds it from ``artifacts/<name>.params.bin`` (raw little-
+endian f32). This mirrors a real deployment (program file + weights file)
+and keeps the HLO artifacts small and fast to parse.
+
+``ParamCursor`` realizes this: the model code calls ``cursor.take(shape,
+init)`` in a fixed order. In *init* mode the cursor draws the value from a
+seeded jax PRNG stream; in *apply* mode it slices the same range out of the
+flat vector. One code path defines both the initializer and the layout, so
+they cannot drift.
+
+The paper used trained SD v1.x weights; we substitute deterministic seeded
+initialization (DESIGN.md section 3) — quality *deltas* between guidance
+policies stay measurable, which is what the paper's experiments compare.
+"""
+
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _prod(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+class ParamCursor:
+    """Sequential parameter declaration / consumption.
+
+    init mode:  ParamCursor(key=jax.random.PRNGKey(seed)) — ``take`` draws
+                fresh values; ``flatten()`` returns the full f32[P] vector.
+    apply mode: ParamCursor(flat=params_vector) — ``take`` slices the next
+                range out of ``flat``.
+    """
+
+    def __init__(self, flat: Optional[jax.Array] = None,
+                 key: Optional[jax.Array] = None):
+        assert (flat is None) != (key is None), "exactly one of flat/key"
+        self.flat = flat
+        self.key = key
+        self.offset = 0
+        self.names: List[Tuple[str, Tuple[int, ...], int]] = []
+
+    # ------------------------------------------------------------------
+    def take(self, shape, init: str = "normal", fan_in: Optional[int] = None,
+             scale: float = 1.0, name: str = "") -> jax.Array:
+        """Declare/consume one parameter tensor.
+
+        init: 'normal' (scaled by 1/sqrt(fan_in) if given), 'zeros', 'ones',
+              'embed' (N(0, 0.02)).
+        """
+        shape = tuple(int(d) for d in shape)
+        n = _prod(shape)
+        self.names.append((name, shape, self.offset))
+        if self.flat is not None:
+            arr = lax.slice(self.flat, (self.offset,), (self.offset + n,))
+            out = arr.reshape(shape)
+        else:
+            self.key, sub = jax.random.split(self.key)
+            if init == "zeros":
+                out = jnp.zeros(shape, jnp.float32)
+            elif init == "ones":
+                out = jnp.ones(shape, jnp.float32)
+            elif init == "embed":
+                out = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+            elif init == "normal":
+                std = scale / math.sqrt(fan_in) if fan_in else scale
+                out = std * jax.random.normal(sub, shape, jnp.float32)
+            else:
+                raise ValueError(f"unknown init {init!r}")
+            self._init_parts.append(out.reshape(-1))
+        self.offset += n
+        return out
+
+    # init-mode helpers ---------------------------------------------------
+    @property
+    def _init_parts(self) -> List[jax.Array]:
+        if not hasattr(self, "_parts"):
+            self._parts: List[jax.Array] = []
+        return self._parts
+
+    def flatten(self) -> jax.Array:
+        assert self.flat is None, "flatten() only valid in init mode"
+        if not self._init_parts:
+            return jnp.zeros((0,), jnp.float32)
+        return jnp.concatenate(self._init_parts)
+
+    @property
+    def size(self) -> int:
+        return self.offset
+
+
+def count_params(model_fn, *example_args) -> int:
+    """Trace ``model_fn(cursor, *args)`` in init mode and return P."""
+    cur = ParamCursor(key=jax.random.PRNGKey(0))
+    jax.eval_shape(lambda: model_fn(cur, *example_args))
+    return cur.size
+
+
+def init_flat(model_fn, seed: int, *example_args) -> jax.Array:
+    """Materialize the flat parameter vector for ``model_fn``."""
+    cur = ParamCursor(key=jax.random.PRNGKey(seed))
+    model_fn(cur, *example_args)
+    return cur.flatten()

@@ -1,0 +1,101 @@
+"""AOT pipeline: HLO text emission, manifests, skip-if-unchanged."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs
+
+
+def test_to_hlo_text_smoke():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    text = aot.to_hlo_text(fn, aot.spec((2, 2)), aot.spec((2, 2)))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "dot(" in text or "dot " in text
+
+
+def test_to_hlo_text_pallas_kernel():
+    """A pallas interpret-mode kernel must lower to plain HLO (no
+    custom-call), otherwise the rust CPU client cannot execute it."""
+    from compile.kernels import cfg_combine
+
+    def fn(u, c, s):
+        return (cfg_combine(u, c, s),)
+
+    text = aot.to_hlo_text(fn, aot.spec((1, 4, 8, 8)),
+                           aot.spec((1, 4, 8, 8)), aot.spec((1,)))
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text
+
+
+def test_source_hash_stable_and_sensitive(tmp_path):
+    h1 = aot.source_hash()
+    h2 = aot.source_hash()
+    assert h1 == h2
+    assert len(h1) == 64
+
+
+def test_up_to_date_logic(tmp_path):
+    cfg = configs.preset("tiny")
+    root = str(tmp_path)
+    assert not aot.up_to_date(cfg, root)           # nothing on disk
+    d = os.path.join(root, "tiny")
+    os.makedirs(d)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"source_hash": "stale"}, f)
+    assert not aot.up_to_date(cfg, root)           # wrong hash
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"source_hash": aot.source_hash()}, f)
+    assert aot.up_to_date(cfg, root)               # current
+
+
+def test_built_manifest_structure():
+    """Validate the real manifest the rust side will parse (requires
+    `make artifacts` to have run; skipped otherwise)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "tiny", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    assert m["preset"] == "tiny"
+    mod = m["model"]
+    for key in ("latent_channels", "latent_size", "image_size", "seq_len",
+                "text_dim", "vocab_size", "batch_sizes"):
+        assert key in mod, key
+    arts = m["artifacts"]
+    for b in mod["batch_sizes"]:
+        assert f"unet_b{b}" in arts
+        assert f"cfg_combine_b{b}" in arts
+    assert "text_encoder" in arts and "vae_decoder" in arts
+    art_dir = os.path.dirname(path)
+    for a in arts.values():
+        assert os.path.exists(os.path.join(art_dir, a["hlo"]))
+        if a["params"]:
+            pb = os.path.join(art_dir, a["params"])
+            assert os.path.getsize(pb) == 4 * a["param_count"]
+
+
+def test_manifest_shapes_consistent():
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "tiny", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        m = json.load(f)
+    cfg = configs.preset("tiny")
+    C, H, W = cfg.latent_shape
+    u1 = m["artifacts"]["unet_b1"]
+    assert u1["inputs"][1]["shape"] == [1, C, H, W]
+    assert u1["outputs"][0]["shape"] == [1, C, H, W]
+    te = m["artifacts"]["text_encoder"]
+    assert te["outputs"][0]["shape"] == [1, cfg.seq_len, cfg.text_dim]
+    vae = m["artifacts"]["vae_decoder"]
+    assert vae["outputs"][0]["shape"] == [1, 3, cfg.image_size,
+                                          cfg.image_size]

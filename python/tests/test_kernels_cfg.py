@@ -1,0 +1,81 @@
+"""L1 CFG-combine kernel (Eq. 1) vs oracle + algebraic properties.
+
+Eq. 1 is the exact operation the paper's optimization *removes* on
+selected iterations, so its correctness anchors the whole reproduction:
+with s = 1 the combine degenerates to the conditional noise — the same
+output the optimized (cond-only) path produces.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cfg_combine
+from compile.kernels import ref
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 4, 8, 8), (2, 4, 8, 8), (4, 4, 16, 16), (1, 4, 24, 24), (128,),
+    (3, 5),  # non-multiple-of-128 total => tile clamping path
+])
+@pytest.mark.parametrize("scale", [0.0, 1.0, 7.5, 9.6])
+def test_matches_ref(shape, scale):
+    rng = np.random.default_rng(hash((shape, scale)) % 2**32)
+    u, c = _rand(rng, shape), _rand(rng, shape)
+    out = cfg_combine(u, c, scale)
+    exp = ref.cfg_combine_ref(u, c, scale)
+    np.testing.assert_allclose(out, exp, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 700),
+    scale=st.floats(-2.0, 20.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    u, c = _rand(rng, (n,)), _rand(rng, (n,))
+    out = cfg_combine(u, c, scale)
+    exp = ref.cfg_combine_ref(u, c, scale)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_scale_one_returns_conditional():
+    """s=1: eps_hat == eps_c — the identity behind the paper's 'optimized
+    steps equal full steps when guidance is neutral' sanity check."""
+    rng = np.random.default_rng(0)
+    u, c = _rand(rng, (2, 4, 8, 8)), _rand(rng, (2, 4, 8, 8))
+    np.testing.assert_allclose(cfg_combine(u, c, 1.0), c, rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_scale_zero_returns_unconditional():
+    rng = np.random.default_rng(1)
+    u, c = _rand(rng, (1, 4, 8, 8)), _rand(rng, (1, 4, 8, 8))
+    np.testing.assert_allclose(cfg_combine(u, c, 0.0), u, rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_linearity_in_scale():
+    """eps_hat(s) is affine in s: midpoint identity."""
+    rng = np.random.default_rng(2)
+    u, c = _rand(rng, (1, 4, 8, 8)), _rand(rng, (1, 4, 8, 8))
+    a = np.asarray(cfg_combine(u, c, 2.0))
+    b = np.asarray(cfg_combine(u, c, 8.0))
+    mid = np.asarray(cfg_combine(u, c, 5.0))
+    np.testing.assert_allclose((a + b) / 2, mid, rtol=1e-5, atol=1e-5)
+
+
+def test_equal_inputs_fixed_point():
+    """When eps_u == eps_c the guidance term vanishes for every s."""
+    rng = np.random.default_rng(3)
+    e = _rand(rng, (1, 4, 16, 16))
+    for s in (0.0, 7.5, 100.0):
+        np.testing.assert_allclose(cfg_combine(e, e, s), e, rtol=1e-6,
+                                   atol=1e-6)

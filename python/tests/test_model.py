@@ -1,0 +1,166 @@
+"""L2 model: shapes, pallas-vs-ref path equivalence, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, params
+
+
+def _inputs(cfg, batch=1, seed=0):
+    rng = np.random.default_rng(seed)
+    C, H, W = cfg.latent_shape
+    lat = jnp.asarray(rng.standard_normal((batch, C, H, W),
+                                          dtype=np.float32))
+    t = jnp.asarray(rng.uniform(0, 1000, batch).astype(np.float32))
+    ctx = jnp.asarray(rng.standard_normal(
+        (batch, cfg.seq_len, cfg.text_dim), dtype=np.float32))
+    return lat, t, ctx
+
+
+@pytest.mark.parametrize("name", ["tiny", "small", "base"])
+@pytest.mark.parametrize("batch", [1, 2])
+def test_unet_shapes(name, batch):
+    cfg = configs.preset(name)
+    lat, t, ctx = _inputs(cfg, batch)
+
+    def fn(cur):
+        return model.unet(cur, cfg, lat, t, ctx, use_pallas=False)
+
+    out = jax.eval_shape(
+        lambda: fn(params.ParamCursor(key=jax.random.PRNGKey(0))))
+    assert out.shape == lat.shape
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", ["tiny", "small"])
+def test_text_encoder_shapes(name):
+    cfg = configs.preset(name)
+    ids = jnp.zeros((1, cfg.seq_len), jnp.int32)
+    out = jax.eval_shape(lambda: model.text_encoder(
+        params.ParamCursor(key=jax.random.PRNGKey(0)), cfg, ids,
+        use_pallas=False))
+    assert out.shape == (1, cfg.seq_len, cfg.text_dim)
+
+
+@pytest.mark.parametrize("name", ["tiny", "small", "base"])
+def test_vae_shapes(name):
+    cfg = configs.preset(name)
+    C, H, W = cfg.latent_shape
+    lat = jnp.zeros((1, C, H, W))
+    out = jax.eval_shape(lambda: model.vae_decoder(
+        params.ParamCursor(key=jax.random.PRNGKey(0)), cfg, lat,
+        use_pallas=False))
+    assert out.shape == (1, 3, cfg.image_size, cfg.image_size)
+
+
+def test_unet_pallas_matches_ref_path():
+    """The L1-kernel path and the pure-jnp path must agree through the
+    whole UNet (the end-to-end kernel-correctness check)."""
+    cfg = configs.preset("tiny")
+    lat, t, ctx = _inputs(cfg)
+    flat = params.init_flat(
+        lambda cur: model.unet(cur, cfg, lat, t, ctx, use_pallas=False),
+        cfg.seed)
+    out_ref = model.unet(params.ParamCursor(flat=flat), cfg, lat, t, ctx,
+                         use_pallas=False)
+    out_pal = model.unet(params.ParamCursor(flat=flat), cfg, lat, t, ctx,
+                         use_pallas=True)
+    np.testing.assert_allclose(out_pal, out_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_vae_pallas_matches_ref_path():
+    cfg = configs.preset("tiny")
+    C, H, W = cfg.latent_shape
+    rng = np.random.default_rng(7)
+    lat = jnp.asarray(rng.standard_normal((1, C, H, W), dtype=np.float32))
+    flat = params.init_flat(
+        lambda cur: model.vae_decoder(cur, cfg, lat, use_pallas=False),
+        cfg.seed + 2)
+    a = model.vae_decoder(params.ParamCursor(flat=flat), cfg, lat,
+                          use_pallas=False)
+    b = model.vae_decoder(params.ParamCursor(flat=flat), cfg, lat,
+                          use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_param_layout_stable_between_modes():
+    """Init mode and apply mode must declare identical layouts."""
+    cfg = configs.preset("tiny")
+    lat, t, ctx = _inputs(cfg)
+
+    def fn(cur):
+        return model.unet(cur, cfg, lat, t, ctx, use_pallas=False)
+
+    cur_init = params.ParamCursor(key=jax.random.PRNGKey(0))
+    fn(cur_init)
+    flat = cur_init.flatten()
+    assert flat.shape == (cur_init.size,)
+
+    cur_apply = params.ParamCursor(flat=flat)
+    fn(cur_apply)
+    assert cur_apply.size == cur_init.size
+    assert [(n, s) for n, s, _ in cur_apply.names] == \
+           [(n, s) for n, s, _ in cur_init.names]
+
+
+def test_init_deterministic():
+    cfg = configs.preset("tiny")
+    lat, t, ctx = _inputs(cfg)
+
+    def fn(cur):
+        return model.unet(cur, cfg, lat, t, ctx, use_pallas=False)
+
+    f1 = params.init_flat(fn, cfg.seed)
+    f2 = params.init_flat(fn, cfg.seed)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    f3 = params.init_flat(fn, cfg.seed + 1)
+    assert not np.allclose(np.asarray(f1), np.asarray(f3))
+
+
+def test_unet_conditioning_matters():
+    """Different contexts must produce different noise predictions —
+    otherwise CFG (and the paper's whole premise) is vacuous."""
+    cfg = configs.preset("tiny")
+    lat, t, ctx = _inputs(cfg)
+    rng = np.random.default_rng(9)
+    ctx2 = jnp.asarray(rng.standard_normal(ctx.shape, dtype=np.float32))
+    flat = params.init_flat(
+        lambda cur: model.unet(cur, cfg, lat, t, ctx, use_pallas=False),
+        cfg.seed)
+    e1 = model.unet(params.ParamCursor(flat=flat), cfg, lat, t, ctx,
+                    use_pallas=False)
+    e2 = model.unet(params.ParamCursor(flat=flat), cfg, lat, t, ctx2,
+                    use_pallas=False)
+    assert float(jnp.abs(e1 - e2).max()) > 1e-4
+
+
+def test_unet_timestep_matters():
+    cfg = configs.preset("tiny")
+    lat, t, ctx = _inputs(cfg)
+    flat = params.init_flat(
+        lambda cur: model.unet(cur, cfg, lat, t, ctx, use_pallas=False),
+        cfg.seed)
+    e1 = model.unet(params.ParamCursor(flat=flat), cfg, lat,
+                    jnp.asarray([10.0]), ctx, use_pallas=False)
+    e2 = model.unet(params.ParamCursor(flat=flat), cfg, lat,
+                    jnp.asarray([900.0]), ctx, use_pallas=False)
+    assert float(jnp.abs(e1 - e2).max()) > 1e-4
+
+
+def test_batch_consistency():
+    """Running two samples in one batch == running them separately."""
+    cfg = configs.preset("tiny")
+    lat, t, ctx = _inputs(cfg, batch=2)
+    flat = params.init_flat(
+        lambda cur: model.unet(cur, cfg, lat[:1], t[:1], ctx[:1],
+                               use_pallas=False), cfg.seed)
+    both = model.unet(params.ParamCursor(flat=flat), cfg, lat, t, ctx,
+                      use_pallas=False)
+    one = model.unet(params.ParamCursor(flat=flat), cfg, lat[:1], t[:1],
+                     ctx[:1], use_pallas=False)
+    two = model.unet(params.ParamCursor(flat=flat), cfg, lat[1:], t[1:],
+                     ctx[1:], use_pallas=False)
+    np.testing.assert_allclose(both[0], one[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(both[1], two[0], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,79 @@
+"""ParamCursor: layout contract between init and apply modes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.params import ParamCursor, count_params, init_flat
+
+
+def toy_model(cur, x):
+    w1 = cur.take((4, 8), init="normal", fan_in=4, name="w1")
+    b1 = cur.take((8,), init="zeros", name="b1")
+    g = cur.take((8,), init="ones", name="g")
+    emb = cur.take((16, 8), init="embed", name="emb")
+    return (x @ w1 + b1) * g + emb[0]
+
+
+def test_count_matches_manual():
+    assert count_params(toy_model, jnp.zeros((2, 4))) == 4 * 8 + 8 + 8 + 16 * 8
+
+
+def test_flatten_apply_roundtrip():
+    flat = init_flat(toy_model, 0, jnp.zeros((2, 4)))
+    cur = ParamCursor(flat=flat)
+    x = jnp.ones((2, 4))
+    out = toy_model(cur, x)
+    assert cur.size == flat.shape[0]
+    # recompute manually from flat slices
+    w1 = np.asarray(flat[:32]).reshape(4, 8)
+    b1 = np.asarray(flat[32:40])
+    g = np.asarray(flat[40:48])
+    emb = np.asarray(flat[48:]).reshape(16, 8)
+    exp = (np.ones((2, 4)) @ w1 + b1) * g + emb[0]
+    np.testing.assert_allclose(out, exp, rtol=1e-6)
+
+
+def test_init_kinds():
+    cur = ParamCursor(key=jax.random.PRNGKey(0))
+    z = cur.take((5,), init="zeros")
+    o = cur.take((5,), init="ones")
+    n = cur.take((1000,), init="normal", fan_in=4)
+    e = cur.take((1000,), init="embed")
+    np.testing.assert_array_equal(np.asarray(z), 0.0)
+    np.testing.assert_array_equal(np.asarray(o), 1.0)
+    assert abs(float(jnp.std(n)) - 0.5) < 0.05       # 1/sqrt(4)
+    assert abs(float(jnp.std(e)) - 0.02) < 0.005
+
+
+def test_offsets_sequential():
+    cur = ParamCursor(key=jax.random.PRNGKey(0))
+    cur.take((3, 3), name="a")
+    cur.take((7,), name="b")
+    names = {n: off for n, _, off in cur.names}
+    assert names == {"a": 0, "b": 9}
+    assert cur.size == 16
+
+
+def test_apply_requires_exact_budget():
+    """Consuming more than the flat vector holds raises (slice OOB)."""
+    flat = jnp.zeros((10,))
+    cur = ParamCursor(flat=flat)
+    cur.take((10,))
+    with pytest.raises(Exception):
+        jax.eval_shape(lambda: cur.take((1,)))
+
+
+def test_exactly_one_mode():
+    with pytest.raises(AssertionError):
+        ParamCursor()
+    with pytest.raises(AssertionError):
+        ParamCursor(flat=jnp.zeros(1), key=jax.random.PRNGKey(0))
+
+
+def test_flatten_only_in_init_mode():
+    cur = ParamCursor(flat=jnp.zeros(4))
+    cur.take((4,))
+    with pytest.raises(AssertionError):
+        cur.flatten()

@@ -1,0 +1,52 @@
+"""HLO cost profiler: sanity of the §Perf numbers."""
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, profile
+
+
+def test_analyze_artifact_simple_matmul():
+    def fn(x, y):
+        return (x @ y,)
+
+    # 64x64 @ 64x64 matmul = 2*64^3 = 524288 flops
+    r = profile.analyze_artifact(fn, (aot.spec((64, 64)), aot.spec((64, 64))))
+    assert r["flops"] == pytest.approx(2 * 64**3, rel=0.01)
+    assert r["bytes_accessed"] > 3 * 64 * 64 * 4 * 0.9
+    assert r["arithmetic_intensity"] > 0
+
+
+def test_analyze_artifact_elementwise_low_intensity():
+    def fn(x):
+        return (x + 1.0,)
+
+    r = profile.analyze_artifact(fn, (aot.spec((1024,)),))
+    # one flop per element, ~8 bytes moved per element
+    assert r["arithmetic_intensity"] < 1.0
+
+
+def test_hlo_text_histogram():
+    text = """HloModule m
+ENTRY %main (x: f32[2,2]) -> f32[2,2] {
+  %x = f32[2,2] parameter(0)
+  %c = f32[2,2] constant({...})
+  ROOT %add = f32[2,2] add(%x, %c)
+}
+"""
+    ops = profile.analyze_hlo_text(text)
+    assert ops.get("parameter") == 1
+    assert ops.get("add") == 1
+
+
+@pytest.mark.slow
+def test_profile_tiny_preset(tmp_path):
+    cfg = configs.preset("tiny")
+    r = profile.profile_preset(cfg, str(tmp_path))
+    arts = r["artifacts"]
+    # dual/optimized FLOP ratio must match the paper's 2x model closely
+    ratio = r["derived"]["dual_step_over_optimized_fused"]
+    assert 1.8 < ratio < 2.2, ratio
+    # UNet dominates the per-step cost
+    assert arts["unet_b1"]["flops"] > 10 * arts["text_encoder"]["flops"]
+    assert (tmp_path / "tiny" / "profile.json").exists()

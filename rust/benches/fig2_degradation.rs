@@ -1,0 +1,113 @@
+//! Figure 2: quality vs *degree* of optimization.
+//!
+//! Paper protocol (§3.1): per prompt, five images — baseline plus the
+//! last {20, 30, 40, 50}% of iterations optimized. Finding: quality
+//! degrades gradually left → right; 20% is visually indistinguishable,
+//! 50% is still "visually pleasing".
+//!
+//! We run the sweep over the paper's figure prompts and report
+//! SSIM/PSNR/drift vs baseline per (prompt, fraction), checking that
+//! degradation is monotone in the fraction.
+//! Run: `cargo bench --bench fig2_degradation`
+
+use std::sync::Arc;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, Table};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::WindowSpec;
+use selective_guidance::json::Value;
+use selective_guidance::prompts;
+use selective_guidance::quality::{latent_drift, ssim};
+use selective_guidance::runtime::ModelStack;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = if args.fast { 20 } else { 50 };
+    eprintln!("[fig2] loading {} ...", args.artifacts);
+    let stack = Arc::new(ModelStack::load(&args.artifacts).expect("artifacts"));
+    let engine = Engine::new(stack, EngineConfig::default());
+
+    // the figure's prompts (2 shown in the paper's figure + 2 more from
+    // Table 2 for coverage)
+    let test_prompts: &[&str] = if args.fast {
+        &[prompts::FIG2_PROMPT]
+    } else {
+        &[
+            prompts::FIG2_PROMPT,
+            "A watercolor of a silver dragon head with colorful flowers growing out of the top",
+            "A person holding a cat",
+            "3d rendering of 5 tennis balls on top of a cake",
+        ]
+    };
+    let fractions = [0.2, 0.3, 0.4, 0.5];
+    let seed = 2;
+
+    let mut table = Table::new(&["prompt", "opt", "SSIM", "latent drift"]);
+    let mut rows_json = Vec::new();
+    let mut monotone_ok = 0usize;
+    let mut monotone_total = 0usize;
+
+    std::fs::create_dir_all("out/fig2").ok();
+    for (pi, prompt) in test_prompts.iter().enumerate() {
+        let base = engine
+            .generate(&GenerationRequest::new(*prompt).steps(steps).seed(seed))
+            .expect("baseline");
+        let base_img = base.image.as_ref().unwrap();
+        base_img
+            .save_png(std::path::Path::new(&format!("out/fig2/p{pi}_a_baseline.png")))
+            .ok();
+        let mut drifts = Vec::new();
+        for (fi, &f) in fractions.iter().enumerate() {
+            let out = engine
+                .generate(
+                    &GenerationRequest::new(*prompt)
+                        .steps(steps)
+                        .seed(seed)
+                        .selective(WindowSpec::last(f)),
+                )
+                .expect("optimized");
+            let s = ssim(base_img, out.image.as_ref().unwrap());
+            let d = latent_drift(&base.latent, &out.latent);
+            out.image
+                .as_ref()
+                .unwrap()
+                .save_png(std::path::Path::new(&format!(
+                    "out/fig2/p{pi}_{}_last{}.png",
+                    (b'b' + fi as u8) as char,
+                    (f * 100.0) as u32
+                )))
+                .ok();
+            let short: String = prompt.chars().take(28).collect();
+            table.row(&[short, format!("last {:.0}%", f * 100.0), format!("{s:.4}"), format!("{d:.4}")]);
+            rows_json.push(
+                Value::obj()
+                    .with("prompt", *prompt)
+                    .with("fraction", f)
+                    .with("ssim", s)
+                    .with("latent_drift", d),
+            );
+            drifts.push(d);
+        }
+        // degradation should be monotone (non-decreasing drift) in f
+        monotone_total += drifts.len() - 1;
+        monotone_ok += drifts.windows(2).filter(|w| w[1] >= w[0] - 1e-9).count();
+    }
+
+    println!("\nFigure 2 — degradation vs optimization degree, {steps} steps:\n");
+    table.print();
+    println!(
+        "\ndrift monotone in fraction: {monotone_ok}/{monotone_total} transitions \
+         (paper: quality degrades left -> right)"
+    );
+    println!("images written to out/fig2/ (a=baseline, b..e = last 20..50%)");
+
+    write_result_json(
+        "fig2_degradation",
+        &Value::obj()
+            .with("steps", steps)
+            .with("monotone_ok", monotone_ok as i64)
+            .with("monotone_total", monotone_total as i64)
+            .with("rows", Value::Arr(rows_json)),
+    );
+}

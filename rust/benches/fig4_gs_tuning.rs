@@ -1,0 +1,171 @@
+//! Figure 4: recovering aggressive-optimization losses by GS retuning.
+//!
+//! Paper protocol (§3.4): the wild-turkeys prompt at a 40% optimization
+//! window loses detail at GS 7.5 (the third bird disappears); raising GS
+//! to 9.6 restores it.
+//!
+//! What "lost detail" means mechanically: the optimized iterations apply
+//! an effective guidance scale of 1, so the trajectory receives *less
+//! total conditioning* than the baseline. We quantify delivered
+//! conditioning as the **guidance displacement**
+//! `G = ||latent(s, f) − latent_unguided|| / ||latent_unguided||` —
+//! distance from the same-seed unguided (s = 1) trajectory — and verify
+//! the paper's mechanism: a 40% window leaves a G-deficit at GS 7.5, and
+//! raising GS closes it (with an overshoot beyond the compensation
+//! point). SSIM vs the baseline image is reported for context.
+//!
+//! Run: `cargo bench --bench fig4_gs_tuning`
+
+use std::sync::Arc;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, Table};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::{retuned_scale, WindowSpec};
+use selective_guidance::json::Value;
+use selective_guidance::prompts;
+use selective_guidance::quality::{latent_drift, ssim};
+use selective_guidance::runtime::ModelStack;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = if args.fast { 20 } else { 50 };
+    let grid: usize = if args.fast { 5 } else { 9 };
+    eprintln!("[fig4] loading {} ...", args.artifacts);
+    let stack = Arc::new(ModelStack::load(&args.artifacts).expect("artifacts"));
+    let engine = Engine::new(stack, EngineConfig::default());
+
+    let prompt = prompts::FIG4_PROMPT;
+    let fraction = 0.4;
+    let seed = 4;
+
+    let gen = |gs: f32, f: f64| {
+        engine
+            .generate(
+                &GenerationRequest::new(prompt)
+                    .steps(steps)
+                    .seed(seed)
+                    .guidance_scale(gs)
+                    .selective(WindowSpec::last(f)),
+            )
+            .expect("generate")
+    };
+
+    // references: unguided trajectory (conditioning = 0 displacement) and
+    // the full-CFG baseline
+    let unguided = gen(1.0, 0.0);
+    let baseline = gen(7.5, 0.0);
+    let g_base = latent_drift(&unguided.latent, &baseline.latent);
+    let base_img = baseline.image.as_ref().unwrap();
+
+    // sweep GS over [7.5, full mean-compensation]
+    let hi = retuned_scale(7.5, fraction, 1.0);
+    let scales: Vec<f32> =
+        (0..grid).map(|i| 7.5 + (hi - 7.5) * i as f32 / (grid - 1) as f32).collect();
+
+    let mut table = Table::new(&["GS", "guidance G", "G deficit", "SSIM vs base", "note"]);
+    let mut rows = Vec::new();
+    let mut best: Option<(f32, f64)> = None;
+    let mut naive_deficit = 0.0;
+    for &s in &scales {
+        let out = gen(s, fraction);
+        let g = latent_drift(&unguided.latent, &out.latent);
+        let deficit = g - g_base;
+        let q = ssim(base_img, out.image.as_ref().unwrap());
+        if (s - 7.5).abs() < 1e-3 {
+            naive_deficit = deficit;
+        }
+        if best.map(|(_, d)| deficit.abs() < d).unwrap_or(true) {
+            best = Some((s, deficit.abs()));
+        }
+        let note = if (s - 7.5).abs() < 1e-3 { "naive (fig 4b)" } else { "" };
+        table.row(&[
+            format!("{s:.2}"),
+            format!("{g:.4}"),
+            format!("{deficit:+.4}"),
+            format!("{q:.4}"),
+            note.into(),
+        ]);
+        rows.push(
+            Value::obj()
+                .with("scale", s as f64)
+                .with("guidance_displacement", g)
+                .with("deficit", deficit)
+                .with("ssim_vs_baseline", q),
+        );
+    }
+    // the paper's hand-tuned point
+    let paper = gen(9.6, fraction);
+    let g_paper = latent_drift(&unguided.latent, &paper.latent);
+
+    // bisection refinement: G is monotone in s, so the deficit crosses
+    // zero between the last negative and first positive grid points
+    let (mut best_scale, mut best_def) = best.unwrap();
+    let deficit_at = |s: f32| {
+        let out = gen(s, fraction);
+        latent_drift(&unguided.latent, &out.latent) - g_base
+    };
+    let mut lo = scales[0];
+    let mut hi_s = scales[scales.len() - 1];
+    let mut d_lo = naive_deficit;
+    if d_lo < 0.0 {
+        for w in rows.windows(2) {
+            let (d0, d1) = (
+                w[0].get("deficit").unwrap().as_f64().unwrap(),
+                w[1].get("deficit").unwrap().as_f64().unwrap(),
+            );
+            if d0 < 0.0 && d1 >= 0.0 {
+                lo = w[0].get("scale").unwrap().as_f64().unwrap() as f32;
+                hi_s = w[1].get("scale").unwrap().as_f64().unwrap() as f32;
+                d_lo = d0;
+                break;
+            }
+        }
+        for _ in 0..6 {
+            let mid = (lo + hi_s) / 2.0;
+            let d = deficit_at(mid);
+            if d.abs() < best_def {
+                best_scale = mid;
+                best_def = d.abs();
+            }
+            if (d < 0.0) == (d_lo < 0.0) {
+                lo = mid;
+                d_lo = d;
+            } else {
+                hi_s = mid;
+            }
+        }
+    }
+    println!(
+        "\nFigure 4 — GS retuning at a 40% window, {steps} steps \
+         (baseline guidance G = {g_base:.4}):\n"
+    );
+    table.print();
+    println!(
+        "\nmechanism check: naive GS 7.5 leaves a guidance deficit of {naive_deficit:+.4}; \
+         retuned GS {best_scale:.2} closes it to ±{best_def:.4}"
+    );
+    println!(
+        "paper's hand-tuned 9.6 delivers G = {g_paper:.4} ({:+.4} vs baseline) — \
+         on a trained SD model the compensation point sits there; on our \
+         random-weight substrate the optimized window contributes less, so \
+         the crossing lands nearer the base scale (DESIGN.md section 3).",
+        g_paper - g_base
+    );
+    let mechanism_holds = naive_deficit < 0.0 && best_def < naive_deficit.abs();
+    println!("shape check: deficit-then-recovery {}", if mechanism_holds { "PASS" } else { "DIVERGES" });
+
+    write_result_json(
+        "fig4_gs_tuning",
+        &Value::obj()
+            .with("steps", steps)
+            .with("fraction", fraction)
+            .with("g_baseline", g_base)
+            .with("naive_deficit", naive_deficit)
+            .with("best_scale", best_scale as f64)
+            .with("best_abs_deficit", best_def)
+            .with("paper_scale_g", g_paper)
+            .with("mechanism_holds", mechanism_holds)
+            .with("rows", Value::Arr(rows)),
+    );
+}

@@ -1,0 +1,121 @@
+//! Micro-benchmarks: per-operation cost inside the serving hot path.
+//!
+//! Feeds EXPERIMENTS.md §Perf: UNet execution per batch size, CFG
+//! combine (device vs host), VAE decode, text encode, scheduler step,
+//! latent init, PNG encode. The UNet share reported here grounds the
+//! Table-1 analytic model.
+//!
+//! Run: `cargo bench --bench microbench`
+
+use std::sync::Arc;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, BenchRunner, Table};
+use selective_guidance::image::RgbImage;
+use selective_guidance::json::Value;
+use selective_guidance::rng::Rng;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::{NoiseSchedule, Scheduler, SchedulerKind};
+use selective_guidance::tokenizer::Tokenizer;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let runner = if args.fast { BenchRunner::new(2, 5) } else { BenchRunner::new(5, 30) };
+    eprintln!("[micro] loading {} ...", args.artifacts);
+    let stack = Arc::new(ModelStack::load(&args.artifacts).expect("artifacts"));
+    let m = stack.model().clone();
+
+    let mut rng = Rng::new(0);
+    let mut table = Table::new(&["operation", "mean ms", "p50 ms", "max ms"]);
+    let mut json = Value::obj();
+    let mut record = |table: &mut Table, name: &str, stats: &selective_guidance::metrics::SampleStats| {
+        table.row(&[
+            name.into(),
+            format!("{:.3}", stats.mean * 1e3),
+            format!("{:.3}", stats.p50 * 1e3),
+            format!("{:.3}", stats.max * 1e3),
+        ]);
+        eprintln!("[micro] {name}: {:.3} ms", stats.mean * 1e3);
+    };
+
+    // UNet per batch size
+    let mut unet_b1_ms = 0.0;
+    for &b in &m.batch_sizes {
+        let lat = rng.normal_vec(b * m.latent_elems());
+        let ts = vec![500.0f32; b];
+        let ctx = rng.normal_vec(b * m.ctx_elems());
+        let s = runner.run(|| stack.unet_eps(b, &lat, &ts, &ctx).unwrap());
+        if b == 1 {
+            unet_b1_ms = s.mean * 1e3;
+        }
+        record(&mut table, &format!("unet_eps b={b}"), &s);
+        json = json.with(format!("unet_b{b}_ms").as_str(), s.mean * 1e3);
+    }
+
+    // CFG combine: device artifact vs host loop
+    let u = rng.normal_vec(m.latent_elems());
+    let c = rng.normal_vec(m.latent_elems());
+    let s_dev = runner.run(|| stack.cfg_combine(1, &u, &c, 7.5).unwrap());
+    record(&mut table, "cfg_combine (device)", &s_dev);
+    json = json.with("cfg_combine_device_ms", s_dev.mean * 1e3);
+    let s_host = runner.run(|| {
+        let out: Vec<f32> = u.iter().zip(&c).map(|(&a, &b)| a + 7.5 * (b - a)).collect();
+        std::hint::black_box(out)
+    });
+    record(&mut table, "cfg_combine (host)", &s_host);
+    json = json.with("cfg_combine_host_ms", s_host.mean * 1e3);
+
+    // text encode
+    let tok = Tokenizer::new(m.vocab_size, m.seq_len);
+    let ids = tok.encode("A person holding a cat");
+    let s = runner.run(|| stack.encode_text(&ids).unwrap());
+    record(&mut table, "text_encoder", &s);
+    json = json.with("text_encoder_ms", s.mean * 1e3);
+
+    // VAE decode
+    let lat = rng.normal_vec(m.latent_elems());
+    let s = runner.run(|| stack.decode(&lat).unwrap());
+    record(&mut table, "vae_decoder", &s);
+    json = json.with("vae_decoder_ms", s.mean * 1e3);
+
+    // scheduler step (host math)
+    let mut sched = SchedulerKind::Pndm.build(NoiseSchedule::default(), 50);
+    let x = rng.normal_vec(m.latent_elems());
+    let eps = rng.normal_vec(m.latent_elems());
+    let mut step_rng = Rng::new(1);
+    let s = runner.run(|| {
+        sched.reset();
+        std::hint::black_box(sched.step(0, &x, &eps, &mut step_rng))
+    });
+    record(&mut table, "scheduler step (pndm)", &s);
+    json = json.with("scheduler_step_ms", s.mean * 1e3);
+
+    // latent init
+    let s = runner.run(|| {
+        let mut r = Rng::new(7);
+        std::hint::black_box(r.normal_vec(m.latent_elems()))
+    });
+    record(&mut table, "latent init (box-muller)", &s);
+    json = json.with("latent_init_ms", s.mean * 1e3);
+
+    // PNG encode
+    let mut img = RgbImage::new(m.image_size, m.image_size);
+    let mut r2 = Rng::new(9);
+    for b in img.data.iter_mut() {
+        *b = r2.next_below(256) as u8;
+    }
+    let s = runner.run(|| selective_guidance::image::encode_png(&img).unwrap());
+    record(&mut table, "png encode", &s);
+    json = json.with("png_encode_ms", s.mean * 1e3);
+
+    println!("\nMicrobench — per-op cost on the serving hot path:\n");
+    table.print();
+
+    // the paper's premise: UNet dominates the per-step cost
+    let step_dual = 2.0 * unet_b1_ms + s_dev.mean * 1e3;
+    println!(
+        "\nper-dual-step estimate: {step_dual:.2} ms, UNet share {:.0}% \
+         (paper: 'the denoising Unet comprises the bulk of the computation')",
+        100.0 * 2.0 * unet_b1_ms / step_dual
+    );
+    write_result_json("microbench", &json);
+}

@@ -1,0 +1,142 @@
+//! Table 1: average time to generate an image vs optimized fraction.
+//!
+//! Paper protocol (§3.3): fixed prompt, 50 denoising iterations, 10
+//! warmup generations, then the mean over 50 images with different
+//! seeds, for optimization fractions {0, 20, 30, 40, 50}% of the last
+//! iterations. Paper result (Tesla V100): 9.94s baseline and savings of
+//! 8.2 / 12.1 / 16.2 / 20.3%.
+//!
+//! Our substrate is the CPU PJRT backend, so absolute times differ; the
+//! reproduced quantity is the *saving* column and its agreement with the
+//! analytic model saving ≈ f·u/2 (u = UNet share of image time).
+//!
+//! Run: `cargo bench --bench table1_timing` (add `--fast` for a smoke run)
+
+use std::sync::Arc;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, Table};
+use selective_guidance::config::{DualStrategy, EngineConfig};
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::{CostModel, WindowSpec};
+use selective_guidance::json::Value;
+use selective_guidance::metrics::SampleStats;
+use selective_guidance::runtime::ModelStack;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let (warmup, samples, steps) = if args.fast { (2, 6, 20) } else { (10, 50, 50) };
+    eprintln!("[table1] loading {} ...", args.artifacts);
+    let stack = Arc::new(ModelStack::load(&args.artifacts).expect("artifacts (run `make artifacts`)"));
+    let engine = Engine::new(Arc::clone(&stack), EngineConfig::default());
+    let mut fused_cfg = EngineConfig::default();
+    fused_cfg.dual_strategy = DualStrategy::FusedB2;
+    let engine_fused = Engine::new(stack, fused_cfg);
+
+    let prompt = "A Hokusai painting of a happy dragon head with flowers growing out of the top";
+    let fractions = [0.0, 0.2, 0.3, 0.4, 0.5];
+
+    // paper protocol: warm up, then time `samples` images w/ varying seeds
+    let run_one = |eng: &Engine, fraction: f64, seed: u64| -> (f64, f64) {
+        let req = GenerationRequest::new(prompt)
+            .steps(steps)
+            .seed(seed)
+            .decode(false)
+            .selective(WindowSpec::last(fraction));
+        let out = eng.generate(&req).expect("generate");
+        (out.wall_ms, out.breakdown.unet_cond_ms + out.breakdown.unet_uncond_ms)
+    };
+
+    eprintln!("[table1] warmup x{warmup} ...");
+    for w in 0..warmup {
+        run_one(&engine, 0.0, w as u64);
+        run_one(&engine_fused, 0.0, w as u64);
+    }
+
+    let mut means = Vec::new();
+    let mut fused_means = Vec::new();
+    let mut unet_share_acc = 0.0;
+    for &f in &fractions {
+        let mut wall = Vec::with_capacity(samples);
+        let mut wall_fused = Vec::with_capacity(samples);
+        for s in 0..samples {
+            let (w, unet_ms) = run_one(&engine, f, 1000 + s as u64);
+            wall.push(w);
+            if f == 0.0 {
+                unet_share_acc += unet_ms / w;
+            }
+            let (wf, _) = run_one(&engine_fused, f, 1000 + s as u64);
+            wall_fused.push(wf);
+        }
+        let stats = SampleStats::from(&wall);
+        eprintln!("[table1] f={f:.1}: mean {:.1} ms (std {:.1})", stats.mean, stats.std);
+        means.push(stats);
+        fused_means.push(SampleStats::from(&wall_fused));
+    }
+    let unet_share = unet_share_acc / samples as f64;
+
+    // analytic model from the measured baseline decomposition
+    let base_ms = means[0].mean;
+    let model = CostModel {
+        unet_eval_s: unet_share * base_ms / 1e3 / (2.0 * steps as f64),
+        per_step_overhead_s: (1.0 - unet_share) * base_ms / 1e3 / steps as f64,
+        fixed_s: 0.0,
+    };
+
+    let mut table = Table::new(&[
+        "Iterations optimized",
+        "Time(s)",
+        "Saving",
+        "Paper saving",
+        "Model saving",
+        "Fused-b2 saving",
+    ]);
+    let paper = [("No opt.", 0.0), ("20% of iters", 8.2), ("30% of iters", 12.1), ("40% of iters", 16.2), ("50% of iters", 20.3)];
+    let fused_base = fused_means[0].mean;
+    let mut rows_json = Vec::new();
+    for (i, &f) in fractions.iter().enumerate() {
+        let t = means[i].mean / 1e3;
+        let saving = 100.0 * (base_ms - means[i].mean) / base_ms;
+        let fused_saving = 100.0 * (fused_base - fused_means[i].mean) / fused_base;
+        let policy = selective_guidance::guidance::SelectiveGuidancePolicy::new(
+            WindowSpec::last(f),
+            7.5,
+        )
+        .unwrap();
+        let model_saving = 100.0 * model.predicted_saving(&policy, steps);
+        table.row(&[
+            paper[i].0.to_string(),
+            format!("{t:.3}"),
+            if i == 0 { "-".into() } else { format!("{saving:.1}%") },
+            if i == 0 { "-".into() } else { format!("{:.1}%", paper[i].1) },
+            if i == 0 { "-".into() } else { format!("{model_saving:.1}%") },
+            if i == 0 { "-".into() } else { format!("{fused_saving:.1}%") },
+        ]);
+        rows_json.push(
+            Value::obj()
+                .with("fraction", f)
+                .with("time_s", t)
+                .with("saving_pct", saving)
+                .with("paper_saving_pct", paper[i].1)
+                .with("model_saving_pct", model_saving)
+                .with("fused_time_s", fused_means[i].mean / 1e3)
+                .with("fused_saving_pct", fused_saving),
+        );
+    }
+    println!("\nTable 1 — mean image time, {steps} steps, {samples} samples (UNet share {:.0}%):\n", 100.0 * unet_share);
+    table.print();
+    println!(
+        "\n'Saving' uses the paper-matching two-b1 engine (linear batching, as on a \
+         compute-bound V100).\n'Fused-b2 saving' keeps the HF-style fused dual pass as the \
+         baseline — CPU batch-2 is sublinear,\nso the achievable saving shrinks (ablation A \
+         quantifies the per-step gap)."
+    );
+
+    write_result_json(
+        "table1_timing",
+        &Value::obj()
+            .with("steps", steps)
+            .with("samples", samples)
+            .with("unet_share", unet_share)
+            .with("rows", Value::Arr(rows_json)),
+    );
+}

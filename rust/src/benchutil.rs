@@ -1,0 +1,179 @@
+//! Bench harness utilities (offline substitute for `criterion`).
+//!
+//! Each `[[bench]]` target is a plain `harness = false` binary that uses
+//! [`BenchRunner`] for warmup + timed samples and prints aligned tables
+//! matching the paper's rows. Results are also dumped as JSON next to the
+//! binary output so EXPERIMENTS.md numbers are machine-checkable.
+
+use std::time::Instant;
+
+use crate::json::Value;
+use crate::metrics::SampleStats;
+
+/// Warmup-then-measure runner.
+pub struct BenchRunner {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup_iters: 3, sample_iters: 10 }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup_iters: usize, sample_iters: usize) -> Self {
+        BenchRunner { warmup_iters, sample_iters }
+    }
+
+    /// Time `f` (seconds per call) after warmup; returns per-call stats.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> SampleStats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        SampleStats::from(&samples)
+    }
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Write a bench result JSON next to the repo root (bench_results/).
+pub fn write_result_json(bench_name: &str, value: &Value) {
+    let dir = std::path::Path::new("bench_results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return; // benches must not fail on result-dump problems
+    }
+    let path = dir.join(format!("{bench_name}.json"));
+    let _ = std::fs::write(&path, value.to_string());
+    eprintln!("[bench] wrote {}", path.display());
+}
+
+/// Parse `--fast` style flags shared by all bench binaries.
+pub struct BenchArgs {
+    /// Reduced sample counts for CI smoke runs.
+    pub fast: bool,
+    /// Artifact directory override.
+    pub artifacts: String,
+}
+
+impl BenchArgs {
+    pub fn parse() -> Self {
+        let mut fast = false;
+        let mut artifacts = default_artifacts_dir();
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--fast" => fast = true,
+                "--artifacts" => {
+                    artifacts = args.next().unwrap_or(artifacts);
+                }
+                // `cargo bench` passes --bench; ignore unknown flags so the
+                // harness stays robust under test runners
+                _ => {}
+            }
+        }
+        BenchArgs { fast, artifacts }
+    }
+}
+
+/// Resolve the artifacts dir from the env or the standard layout.
+pub fn default_artifacts_dir() -> String {
+    if let Ok(dir) = std::env::var("SG_ARTIFACTS") {
+        return dir;
+    }
+    "artifacts/tiny".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_collects_samples() {
+        let r = BenchRunner::new(1, 5);
+        let mut calls = 0;
+        let stats = r.run(|| {
+            calls += 1;
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        assert_eq!(calls, 6); // 1 warmup + 5 samples
+        assert_eq!(stats.n, 5);
+        assert!(stats.mean >= 50e-6);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Iterations optimized", "Time(s)", "Saving"]);
+        t.row(&["No opt.".into(), "9.94".into(), "-".into()]);
+        t.row(&["20% of iters".into(), "9.13".into(), "8.2%".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{s}");
+        assert!(s.contains("8.2%"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline snapshot).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: a subcommand, `--key value` options and flags.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an argument iterator (excluding `argv[0]`).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    cli.options.insert(name.to_string(), v);
+                } else {
+                    cli.flags.push(name.to_string());
+                }
+            } else if cli.command.is_none() {
+                cli.command = Some(arg);
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn parse() -> Result<Cli> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("--{name}: cannot parse {s:?}"))),
+        }
+    }
+
+    pub fn opt_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Cli {
+        Cli::parse_from(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let c = parse(&["generate", "--prompt", "a cat", "--steps", "25", "--fast"]);
+        assert_eq!(c.command.as_deref(), Some("generate"));
+        assert_eq!(c.opt("prompt"), Some("a cat"));
+        assert_eq!(c.opt_or::<usize>("steps", 50).unwrap(), 25);
+        assert!(c.flag("fast"));
+        assert!(!c.flag("slow"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let c = parse(&["serve", "--bind=0.0.0.0:9000"]);
+        assert_eq!(c.opt("bind"), Some("0.0.0.0:9000"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let c = parse(&["x", "--a", "--b", "v"]);
+        assert!(c.flag("a"));
+        assert_eq!(c.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let c = parse(&["bench", "t1", "t2"]);
+        assert_eq!(c.positional, vec!["t1", "t2"]);
+    }
+
+    #[test]
+    fn parse_errors() {
+        let c = parse(&["x", "--steps", "abc"]);
+        assert!(c.opt_parse::<usize>("steps").is_err());
+        assert!(Cli::parse_from(vec!["--".to_string()]).is_err());
+    }
+
+    #[test]
+    fn default_when_missing() {
+        let c = parse(&["x"]);
+        assert_eq!(c.opt_or::<u64>("seed", 42).unwrap(), 42);
+        assert_eq!(c.opt_parse::<u64>("seed").unwrap(), None);
+    }
+}

@@ -1,0 +1,290 @@
+//! Typed configuration tree + a TOML-subset file format.
+//!
+//! The offline registry snapshot has no `toml`/`serde`, so we parse the
+//! subset we need: `[section]` headers and `key = value` pairs with
+//! string / integer / float / boolean values and `#` comments — enough
+//! for deployment configs like `configs/serve.toml`.
+
+mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use crate::error::{Error, Result};
+use crate::guidance::{SelectiveGuidancePolicy, WindowSpec};
+use crate::scheduler::SchedulerKind;
+
+/// How a full-CFG (dual) iteration executes its two UNet passes.
+///
+/// The HF pipeline fuses them into one batch-2 call; the paper's
+/// optimization requires the passes to be separable. On compute-bound
+/// accelerators (the paper's V100) batch-2 costs ~2x batch-1, so the
+/// strategies tie at baseline and `TwoB1` wins once any window is
+/// optimized; on overhead-dominated backends (CPU PJRT) `FusedB2` is
+/// sublinear and the trade-off shifts — quantified by ablation A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DualStrategy {
+    /// Two independent batch-1 executions (cond, uncond) — skippable.
+    TwoB1,
+    /// One fused batch-2 execution [cond, uncond] — HF-pipeline style.
+    FusedB2,
+}
+
+impl DualStrategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "two-b1" | "two_b1" | "split" => Ok(DualStrategy::TwoB1),
+            "fused-b2" | "fused_b2" | "fused" => Ok(DualStrategy::FusedB2),
+            other => Err(Error::Config(format!("unknown dual strategy {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DualStrategy::TwoB1 => "two-b1",
+            DualStrategy::FusedB2 => "fused-b2",
+        }
+    }
+}
+
+/// Engine-level defaults applied to requests that don't override them.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Denoising iterations (the paper uses 50).
+    pub steps: usize,
+    /// Scheduler driving the loop (paper/HF default: PNDM).
+    pub scheduler: SchedulerKind,
+    /// Classifier-free guidance scale (SD default 7.5).
+    pub guidance_scale: f32,
+    /// Default selective-guidance window (none = full CFG baseline).
+    pub window: WindowSpec,
+    /// Whether to run the VAE decode + return images.
+    pub decode_images: bool,
+    /// Base seed for latent noise streams.
+    pub seed: u64,
+    /// Dual-pass execution strategy (ablation A).
+    pub dual_strategy: DualStrategy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            steps: 50,
+            scheduler: SchedulerKind::Pndm,
+            guidance_scale: 7.5,
+            window: WindowSpec::none(),
+            decode_images: true,
+            seed: 0,
+            dual_strategy: DualStrategy::TwoB1,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 || self.steps > 1000 {
+            return Err(Error::Config(format!("steps {} outside [1, 1000]", self.steps)));
+        }
+        self.window.validate()?;
+        SelectiveGuidancePolicy::new(self.window, self.guidance_scale)?;
+        Ok(())
+    }
+
+    /// Build from a `[engine]` TOML section (missing keys keep defaults).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = EngineConfig::default();
+        if let Some(v) = doc.get("engine", "steps") {
+            cfg.steps = v.as_usize().ok_or_else(|| Error::Config("steps must be int".into()))?;
+        }
+        if let Some(v) = doc.get("engine", "scheduler") {
+            cfg.scheduler = SchedulerKind::parse(
+                v.as_str().ok_or_else(|| Error::Config("scheduler must be string".into()))?,
+            )?;
+        }
+        if let Some(v) = doc.get("engine", "guidance_scale") {
+            cfg.guidance_scale =
+                v.as_f64().ok_or_else(|| Error::Config("guidance_scale must be number".into()))?
+                    as f32;
+        }
+        if let Some(v) = doc.get("engine", "window_fraction") {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("window_fraction must be number".into()))?;
+            let pos = doc
+                .get("engine", "window_position")
+                .and_then(|p| p.as_str().map(String::from))
+                .unwrap_or_else(|| "last".into());
+            cfg.window = match pos.as_str() {
+                "last" => WindowSpec::last(f),
+                "first" => WindowSpec::first(f),
+                "middle" => WindowSpec::middle(f),
+                other => {
+                    return Err(Error::Config(format!("unknown window_position {other:?}")))
+                }
+            };
+        }
+        if let Some(v) = doc.get("engine", "decode_images") {
+            cfg.decode_images =
+                v.as_bool().ok_or_else(|| Error::Config("decode_images must be bool".into()))?;
+        }
+        if let Some(v) = doc.get("engine", "seed") {
+            cfg.seed =
+                v.as_i64().ok_or_else(|| Error::Config("seed must be int".into()))? as u64;
+        }
+        if let Some(v) = doc.get("engine", "dual_strategy") {
+            cfg.dual_strategy = DualStrategy::parse(
+                v.as_str().ok_or_else(|| Error::Config("dual_strategy must be string".into()))?,
+            )?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Server front-end settings.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub bind: String,
+    pub max_batch: usize,
+    pub workers: usize,
+    /// Batching window: how long the batcher waits to fill a batch.
+    pub batch_wait_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { bind: "127.0.0.1:7878".into(), max_batch: 4, workers: 1, batch_wait_ms: 2 }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = ServerConfig::default();
+        if let Some(v) = doc.get("server", "bind") {
+            cfg.bind = v
+                .as_str()
+                .ok_or_else(|| Error::Config("bind must be string".into()))?
+                .to_string();
+        }
+        if let Some(v) = doc.get("server", "max_batch") {
+            cfg.max_batch =
+                v.as_usize().ok_or_else(|| Error::Config("max_batch must be int".into()))?;
+        }
+        if let Some(v) = doc.get("server", "workers") {
+            cfg.workers =
+                v.as_usize().ok_or_else(|| Error::Config("workers must be int".into()))?;
+        }
+        if let Some(v) = doc.get("server", "batch_wait_ms") {
+            cfg.batch_wait_ms =
+                v.as_i64().ok_or_else(|| Error::Config("batch_wait_ms must be int".into()))?
+                    as u64;
+        }
+        if cfg.max_batch == 0 || cfg.workers == 0 {
+            return Err(Error::Config("max_batch and workers must be >= 1".into()));
+        }
+        Ok(cfg)
+    }
+}
+
+/// Complete deployment configuration (engine + server + artifact dir).
+#[derive(Debug, Clone, Default)]
+pub struct RunConfig {
+    pub artifacts_dir: Option<String>,
+    pub engine: EngineConfig,
+    pub server: ServerConfig,
+}
+
+impl RunConfig {
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("reading {}", path.display()), e))?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let artifacts_dir = doc
+            .get("model", "artifacts")
+            .and_then(|v| v.as_str().map(String::from));
+        Ok(RunConfig {
+            artifacts_dir,
+            engine: EngineConfig::from_toml(&doc)?,
+            server: ServerConfig::from_toml(&doc)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample deployment config
+[model]
+artifacts = "artifacts/tiny"
+
+[engine]
+steps = 50
+scheduler = "ddim"
+guidance_scale = 7.5
+window_fraction = 0.2
+window_position = "last"
+decode_images = true
+seed = 42
+
+[server]
+bind = "0.0.0.0:9000"
+max_batch = 4
+workers = 2
+batch_wait_ms = 5
+"#;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = RunConfig::from_str(SAMPLE).unwrap();
+        assert_eq!(cfg.artifacts_dir.as_deref(), Some("artifacts/tiny"));
+        assert_eq!(cfg.engine.steps, 50);
+        assert_eq!(cfg.engine.scheduler, SchedulerKind::Ddim);
+        assert_eq!(cfg.engine.window, WindowSpec::last(0.2));
+        assert_eq!(cfg.engine.seed, 42);
+        assert_eq!(cfg.server.bind, "0.0.0.0:9000");
+        assert_eq!(cfg.server.workers, 2);
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.engine.steps, 50);
+        assert_eq!(cfg.engine.scheduler, SchedulerKind::Pndm);
+        assert_eq!(cfg.engine.window, WindowSpec::none());
+        assert_eq!(cfg.server.max_batch, 4);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(RunConfig::from_str("[engine]\nsteps = 0\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nscheduler = \"bogus\"\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nwindow_fraction = 1.5\n").is_err());
+        assert!(RunConfig::from_str("[server]\nworkers = 0\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nwindow_fraction = 0.2\nwindow_position = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn dual_strategy_parse() {
+        assert_eq!(DualStrategy::parse("two-b1").unwrap(), DualStrategy::TwoB1);
+        assert_eq!(DualStrategy::parse("fused").unwrap(), DualStrategy::FusedB2);
+        assert!(DualStrategy::parse("bogus").is_err());
+        let cfg =
+            RunConfig::from_str("[engine]\ndual_strategy = \"fused-b2\"\n").unwrap();
+        assert_eq!(cfg.engine.dual_strategy, DualStrategy::FusedB2);
+    }
+
+    #[test]
+    fn engine_validate_bounds() {
+        let mut cfg = EngineConfig::default();
+        cfg.steps = 1001;
+        assert!(cfg.validate().is_err());
+        cfg.steps = 50;
+        cfg.guidance_scale = f32::INFINITY;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//! Values: quoted strings, booleans, integers, floats.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Keys outside any section go
+/// into the "" section.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(Error::Config(format!("line {}: empty section", lineno + 1)));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(Error::Config(format!(
+                    "line {}: expected `key = value`, got {raw:?}",
+                    lineno + 1
+                )));
+            };
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(value.trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
+        self.sections.get(name)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            return Err(format!("unterminated string {s:?}"));
+        };
+        if inner.contains('"') {
+            return Err(format!("embedded quote in {s:?}"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        if f.is_finite() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_scalar_kinds() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = 2.5\nc = true\nd = \"hi\"\n[s]\ne = -3\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(doc.get("", "c"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.get("", "d"), Some(&TomlValue::Str("hi".into())));
+        assert_eq!(doc.get("s", "e"), Some(&TomlValue::Int(-3)));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = TomlDoc::parse("# top\n\na = 1 # trailing\nb = \"x # not comment\"\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&TomlValue::Str("x # not comment".into())));
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let err = TomlDoc::parse("a = 1\nbogus line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(TomlDoc::parse("[]\n").is_err());
+        assert!(TomlDoc::parse("= 3\n").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("x = nan\n").is_err());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(TomlValue::Int(5).as_f64(), Some(5.0));
+        assert_eq!(TomlValue::Int(5).as_usize(), Some(5));
+        assert_eq!(TomlValue::Int(-5).as_usize(), None);
+        assert_eq!(TomlValue::Float(1.5).as_i64(), None);
+        assert_eq!(TomlValue::Bool(true).as_str(), None);
+    }
+
+    #[test]
+    fn later_values_override() {
+        let doc = TomlDoc::parse("[s]\na = 1\na = 2\n").unwrap();
+        assert_eq!(doc.get("s", "a"), Some(&TomlValue::Int(2)));
+    }
+}

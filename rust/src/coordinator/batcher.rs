@@ -1,0 +1,86 @@
+//! Batch-compatibility rules for the dynamic batcher.
+//!
+//! Requests fuse into one engine batch when they step in lock-step: same
+//! step count and scheduler kind. Prompts, seeds, guidance scales and
+//! selective-guidance windows may differ per sample — the engine splits
+//! the unconditional pass per iteration (engine/mod.rs), which is exactly
+//! what makes *mixed* optimized/baseline traffic batchable.
+
+use crate::engine::GenerationRequest;
+use crate::scheduler::SchedulerKind;
+
+/// The lock-step compatibility class of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchClass {
+    pub steps: usize,
+    pub scheduler: SchedulerKind,
+}
+
+impl BatchClass {
+    pub fn of(req: &GenerationRequest) -> BatchClass {
+        BatchClass { steps: req.steps, scheduler: req.scheduler }
+    }
+}
+
+/// Can `req` join a batch of class `class`?
+pub fn compatible(class: &BatchClass, req: &GenerationRequest) -> bool {
+    BatchClass::of(req) == *class
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::guidance::WindowSpec;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn same_steps_and_scheduler_compatible() {
+        let a = GenerationRequest::new("a").steps(50);
+        let b = GenerationRequest::new("completely different prompt")
+            .steps(50)
+            .seed(99)
+            .guidance_scale(9.6)
+            .selective(WindowSpec::last(0.5));
+        assert!(compatible(&BatchClass::of(&a), &b));
+    }
+
+    #[test]
+    fn different_steps_incompatible() {
+        let a = GenerationRequest::new("a").steps(50);
+        let b = GenerationRequest::new("b").steps(25);
+        assert!(!compatible(&BatchClass::of(&a), &b));
+    }
+
+    #[test]
+    fn different_scheduler_incompatible() {
+        let a = GenerationRequest::new("a").scheduler(SchedulerKind::Pndm);
+        let b = GenerationRequest::new("b").scheduler(SchedulerKind::Ddim);
+        assert!(!compatible(&BatchClass::of(&a), &b));
+    }
+
+    #[test]
+    fn compatibility_is_equivalence() {
+        forall("batch class equivalence", 100, |g| {
+            let mk = |g: &mut crate::testutil::prop::Gen| {
+                GenerationRequest::new("p")
+                    .steps(*g.choose(&[10usize, 25, 50]))
+                    .scheduler(*g.choose(&[SchedulerKind::Pndm, SchedulerKind::Ddim]))
+                    .seed(g.u64())
+            };
+            let a = mk(g);
+            let b = mk(g);
+            let c = mk(g);
+            // reflexive
+            assert!(compatible(&BatchClass::of(&a), &a));
+            // symmetric
+            assert_eq!(
+                compatible(&BatchClass::of(&a), &b),
+                compatible(&BatchClass::of(&b), &a)
+            );
+            // transitive
+            if compatible(&BatchClass::of(&a), &b) && compatible(&BatchClass::of(&b), &c) {
+                assert!(compatible(&BatchClass::of(&a), &c));
+            }
+        });
+    }
+}

@@ -1,0 +1,326 @@
+//! Request coordinator: admission queue, dynamic batcher, worker pool.
+//!
+//! The serving topology mirrors a vLLM-style router scaled to this stack:
+//!
+//! ```text
+//!   clients ──> submit() ──> [admission queue]
+//!                                  │  batcher thread: group compatible
+//!                                  │  requests (same steps+scheduler) up
+//!                                  │  to max_batch within batch_wait
+//!                                  ▼
+//!                            [batch channel] ──> worker threads ──> Engine
+//! ```
+//!
+//! Concurrency uses std threads + mpsc channels (tokio is absent from the
+//! offline registry snapshot — DESIGN.md §5); the structure (admission /
+//! batching / execution decoupled, graceful drain) is the same.
+
+mod batcher;
+
+pub use batcher::{compatible, BatchClass};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::{Engine, GenerationOutput, GenerationRequest};
+use crate::error::{Error, Result};
+use crate::metrics::LatencyHistogram;
+
+/// Coordinator tuning knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Maximum requests fused into one engine batch.
+    pub max_batch: usize,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub batch_wait: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { max_batch: 4, workers: 1, batch_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Aggregate serving stats (snapshot via [`Coordinator::stats`]).
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub latency_ms_mean: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p90: f64,
+    pub latency_ms_max: f64,
+}
+
+struct StatsInner {
+    latency: LatencyHistogram,
+    batches: u64,
+    batched_requests: u64,
+    completed: u64,
+    failed: u64,
+}
+
+struct Job {
+    req: GenerationRequest,
+    enqueued: Instant,
+    respond: Sender<(Result<GenerationOutput>, Duration)>,
+}
+
+struct Batch {
+    jobs: Vec<Job>,
+}
+
+/// Handle to one in-flight request.
+pub struct Ticket {
+    rx: Receiver<(Result<GenerationOutput>, Duration)>,
+}
+
+impl Ticket {
+    /// Block until the result is ready.
+    pub fn wait(self) -> Result<GenerationOutput> {
+        Ok(self.wait_timed()?.0)
+    }
+
+    /// Block until the result is ready; also return the request's
+    /// queue+service latency as measured at completion time (immune to
+    /// late consumption by the caller).
+    pub fn wait_timed(self) -> Result<(GenerationOutput, Duration)> {
+        let (result, latency) = self
+            .rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped without responding".into()))?;
+        Ok((result?, latency))
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<GenerationOutput>> {
+        self.rx.try_recv().ok().map(|(r, _)| r)
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    submit_tx: Mutex<Option<Sender<Job>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    stats: Arc<Mutex<StatsInner>>,
+    submitted: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Start the batcher + worker threads over an engine.
+    pub fn start(engine: Arc<Engine>, config: CoordinatorConfig) -> Arc<Coordinator> {
+        assert!(config.max_batch >= 1 && config.workers >= 1);
+        let (submit_tx, submit_rx) = mpsc::channel::<Job>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let stats = Arc::new(Mutex::new(StatsInner {
+            latency: LatencyHistogram::new(),
+            batches: 0,
+            batched_requests: 0,
+            completed: 0,
+            failed: 0,
+        }));
+        let mut handles = Vec::new();
+
+        // ---- batcher thread ----------------------------------------------
+        {
+            let stats = Arc::clone(&stats);
+            let max_batch = config.max_batch;
+            let wait = config.batch_wait;
+            handles.push(std::thread::spawn(move || {
+                batcher_loop(submit_rx, batch_tx, max_batch, wait, stats);
+            }));
+        }
+
+        // ---- worker threads ----------------------------------------------
+        for worker_id in 0..config.workers {
+            let engine = Arc::clone(&engine);
+            let batch_rx = Arc::clone(&batch_rx);
+            let stats = Arc::clone(&stats);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sgd-worker-{worker_id}"))
+                    .spawn(move || worker_loop(engine, batch_rx, stats))
+                    .expect("spawn worker"),
+            );
+        }
+
+        Arc::new(Coordinator {
+            submit_tx: Mutex::new(Some(submit_tx)),
+            handles: Mutex::new(handles),
+            stats,
+            submitted: Arc::new(AtomicU64::new(0)),
+            draining: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Enqueue a request; returns a [`Ticket`] for the result.
+    pub fn submit(&self, req: GenerationRequest) -> Result<Ticket> {
+        req.validate()?;
+        if self.draining.load(Ordering::SeqCst) {
+            return Err(Error::Coordinator("coordinator is draining".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        let job = Job { req, enqueued: Instant::now(), respond: tx };
+        let guard = self.submit_tx.lock().unwrap();
+        match guard.as_ref() {
+            Some(sender) => sender
+                .send(job)
+                .map_err(|_| Error::Coordinator("queue closed".into()))?,
+            None => return Err(Error::Coordinator("coordinator stopped".into())),
+        }
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Ticket { rx })
+    }
+
+    /// Submit + wait.
+    pub fn generate(&self, req: GenerationRequest) -> Result<GenerationOutput> {
+        self.submit(req)?.wait()
+    }
+
+    /// Snapshot aggregate stats.
+    pub fn stats(&self) -> CoordinatorStats {
+        let inner = self.stats.lock().unwrap();
+        CoordinatorStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: inner.completed,
+            failed: inner.failed,
+            batches: inner.batches,
+            batched_requests: inner.batched_requests,
+            latency_ms_mean: inner.latency.mean_ms(),
+            latency_ms_p50: inner.latency.quantile_ms(0.5),
+            latency_ms_p90: inner.latency.quantile_ms(0.9),
+            latency_ms_max: inner.latency.max_ms(),
+        }
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight work, join threads.
+    pub fn shutdown(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        // closing the submit channel ends the batcher, which ends workers
+        *self.submit_tx.lock().unwrap() = None;
+        let mut handles = self.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn batcher_loop(
+    submit_rx: Receiver<Job>,
+    batch_tx: Sender<Batch>,
+    max_batch: usize,
+    wait: Duration,
+    stats: Arc<Mutex<StatsInner>>,
+) {
+    loop {
+        // block for the first job
+        let first = match submit_rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // queue closed -> drain done
+        };
+        let class = BatchClass::of(&first.req);
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + wait;
+        let mut deferred: Vec<Job> = Vec::new();
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match submit_rx.recv_timeout(deadline - now) {
+                Ok(job) => {
+                    if compatible(&class, &job.req) {
+                        jobs.push(job);
+                    } else {
+                        // incompatible: defer to its own future batch
+                        deferred.push(job);
+                        // one deferred class at a time is enough; dispatch
+                        // current batch promptly to avoid head-of-line
+                        // blocking across classes
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        {
+            let mut s = stats.lock().unwrap();
+            s.batches += 1;
+            s.batched_requests += jobs.len() as u64;
+        }
+        if batch_tx.send(Batch { jobs }).is_err() {
+            return;
+        }
+        // deferred jobs become the seed of the next batch
+        for job in deferred {
+            let mut s = stats.lock().unwrap();
+            s.batches += 1;
+            s.batched_requests += 1;
+            drop(s);
+            if batch_tx.send(Batch { jobs: vec![job] }).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    engine: Arc<Engine>,
+    batch_rx: Arc<Mutex<Receiver<Batch>>>,
+    stats: Arc<Mutex<StatsInner>>,
+) {
+    loop {
+        let batch = {
+            let rx = batch_rx.lock().unwrap();
+            match rx.recv() {
+                Ok(b) => b,
+                Err(_) => return, // channel closed -> shut down
+            }
+        };
+        let reqs: Vec<GenerationRequest> = batch.jobs.iter().map(|j| j.req.clone()).collect();
+        match engine.generate_batch(&reqs) {
+            Ok(outputs) => {
+                let mut s = stats.lock().unwrap();
+                for (job, out) in batch.jobs.into_iter().zip(outputs) {
+                    let latency = job.enqueued.elapsed();
+                    s.latency.record(latency);
+                    s.completed += 1;
+                    let _ = job.respond.send((Ok(out), latency));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                let mut s = stats.lock().unwrap();
+                for job in batch.jobs {
+                    let latency = job.enqueued.elapsed();
+                    s.failed += 1;
+                    let _ = job
+                        .respond
+                        .send((Err(Error::Coordinator(msg.clone())), latency));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Coordinator integration tests (with a real engine + artifacts) live
+    // in rust/tests/; the batching-class logic is tested in batcher.rs.
+}

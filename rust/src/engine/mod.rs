@@ -1,0 +1,503 @@
+//! The denoising engine: the paper's optimized inference loop.
+//!
+//! Per iteration the engine consults the [`SelectiveGuidancePolicy`]:
+//!
+//! * `Dual`    — two UNet executions (conditional + unconditional) and an
+//!               on-device Eq.-1 combine — classic classifier-free
+//!               guidance;
+//! * `CondOnly`/`Unguided` — a single conditional execution, `eps_hat =
+//!               eps_c` — the paper's optimized iteration, at half the
+//!               UNet cost.
+//!
+//! [`Engine::generate`] runs one request; [`Engine::generate_batch`] runs
+//! a compatible batch in lock-step, bucketizing UNet calls into the
+//! compiled batch sizes (dynamic batching, DESIGN.md §5). Per-sample
+//! policies may differ inside one batch: at each step the batch splits
+//! into "needs uncond" / "cond only" sub-sets and only the former pays
+//! for the second pass.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::{DualStrategy, EngineConfig};
+use crate::error::{Error, Result};
+use crate::guidance::{
+    guidance_delta, AdaptiveConfig, AdaptiveController, AdaptiveDecision, GuidanceMode,
+    SelectiveGuidancePolicy, WindowSpec,
+};
+use crate::image::RgbImage;
+use crate::metrics::StepBreakdown;
+use crate::rng::Rng;
+use crate::runtime::ModelStack;
+use crate::scheduler::{NoiseSchedule, Scheduler, SchedulerKind};
+use crate::tokenizer::Tokenizer;
+
+/// One image-generation request.
+#[derive(Debug, Clone)]
+pub struct GenerationRequest {
+    pub prompt: String,
+    pub steps: usize,
+    pub guidance_scale: f32,
+    pub window: WindowSpec,
+    pub scheduler: SchedulerKind,
+    pub seed: u64,
+    pub decode: bool,
+    /// Online skip controller (paper's future-work variant); supersedes
+    /// the static `window` when set.
+    pub adaptive: Option<AdaptiveConfig>,
+}
+
+impl GenerationRequest {
+    pub fn new(prompt: impl Into<String>) -> Self {
+        let cfg = EngineConfig::default();
+        GenerationRequest {
+            prompt: prompt.into(),
+            steps: cfg.steps,
+            guidance_scale: cfg.guidance_scale,
+            window: cfg.window,
+            scheduler: cfg.scheduler,
+            seed: cfg.seed,
+            decode: cfg.decode_images,
+            adaptive: None,
+        }
+    }
+
+    /// Builder setters ------------------------------------------------
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn guidance_scale(mut self, s: f32) -> Self {
+        self.guidance_scale = s;
+        self
+    }
+
+    /// Apply a selective-guidance window (the paper's optimization).
+    pub fn selective(mut self, w: WindowSpec) -> Self {
+        self.window = w;
+        self
+    }
+
+    pub fn scheduler(mut self, k: SchedulerKind) -> Self {
+        self.scheduler = k;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn decode(mut self, decode: bool) -> Self {
+        self.decode = decode;
+        self
+    }
+
+    /// Enable the adaptive (online) skip controller.
+    pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
+        self.adaptive = Some(cfg);
+        self
+    }
+
+    pub fn policy(&self) -> Result<SelectiveGuidancePolicy> {
+        SelectiveGuidancePolicy::new(self.window, self.guidance_scale)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.prompt.trim().is_empty() {
+            return Err(Error::Request("empty prompt".into()));
+        }
+        if self.steps == 0 || self.steps > 1000 {
+            return Err(Error::Request(format!("steps {} outside [1, 1000]", self.steps)));
+        }
+        self.policy()?;
+        if let Some(a) = &self.adaptive {
+            a.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// The result of one generation.
+#[derive(Debug, Clone)]
+pub struct GenerationOutput {
+    /// Final latent (x0-space), C*H*W.
+    pub latent: Vec<f32>,
+    /// Decoded image (when `decode` was requested).
+    pub image: Option<RgbImage>,
+    /// End-to-end wall time, milliseconds.
+    pub wall_ms: f64,
+    /// Per-component time totals across the loop.
+    pub breakdown: StepBreakdown,
+    /// UNet executions actually performed.
+    pub unet_evals: usize,
+    /// Steps run (== request.steps).
+    pub steps: usize,
+}
+
+/// The serving engine: a [`ModelStack`] plus engine defaults.
+pub struct Engine {
+    stack: Arc<ModelStack>,
+    config: EngineConfig,
+    tokenizer: Tokenizer,
+}
+
+impl Engine {
+    pub fn new(stack: Arc<ModelStack>, config: EngineConfig) -> Engine {
+        let m = stack.model();
+        let tokenizer = Tokenizer::new(m.vocab_size, m.seq_len);
+        Engine { stack, config, tokenizer }
+    }
+
+    pub fn stack(&self) -> &Arc<ModelStack> {
+        &self.stack
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// A request pre-filled from the engine defaults.
+    pub fn request(&self, prompt: &str) -> GenerationRequest {
+        GenerationRequest {
+            prompt: prompt.to_string(),
+            steps: self.config.steps,
+            guidance_scale: self.config.guidance_scale,
+            window: self.config.window,
+            scheduler: self.config.scheduler,
+            seed: self.config.seed,
+            decode: self.config.decode_images,
+            adaptive: None,
+        }
+    }
+
+    /// Generate one image.
+    pub fn generate(&self, req: &GenerationRequest) -> Result<GenerationOutput> {
+        let mut outs = self.generate_batch(std::slice::from_ref(req))?;
+        Ok(outs.pop().expect("one output per request"))
+    }
+
+    /// Generate a batch in lock-step. All requests must share `steps` and
+    /// `scheduler` (the batcher guarantees this); prompts, seeds, windows
+    /// and scales may differ per sample.
+    pub fn generate_batch(&self, reqs: &[GenerationRequest]) -> Result<Vec<GenerationOutput>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t_start = Instant::now();
+        let steps = reqs[0].steps;
+        let sched_kind = reqs[0].scheduler;
+        for r in reqs {
+            r.validate()?;
+            if r.steps != steps || r.scheduler != sched_kind {
+                return Err(Error::Request(
+                    "batched requests must share steps and scheduler".into(),
+                ));
+            }
+        }
+        let n = reqs.len();
+        let m = self.stack.model();
+        let latent_elems = m.latent_elems();
+        let ctx_elems = m.ctx_elems();
+
+        let mut breakdown = StepBreakdown::default();
+        let mut unet_evals = 0usize;
+        let mut evals_per_sample = vec![0usize; n];
+        let mut controllers: Vec<Option<AdaptiveController>> =
+            reqs.iter().map(|r| r.adaptive.map(|a| a.controller())).collect();
+
+        // ---- per-request setup ------------------------------------------
+        let t0 = Instant::now();
+        let policies: Vec<SelectiveGuidancePolicy> =
+            reqs.iter().map(|r| r.policy()).collect::<Result<_>>()?;
+        let cond_ctx: Vec<Vec<f32>> = reqs
+            .iter()
+            .map(|r| self.stack.encode_text(&self.tokenizer.encode(&r.prompt)))
+            .collect::<Result<_>>()?;
+        let uncond_ctx = self.stack.uncond_ctx()?;
+        let mut schedulers: Vec<Box<dyn Scheduler>> = (0..n)
+            .map(|_| sched_kind.build(NoiseSchedule::default(), steps))
+            .collect();
+        let mut rngs: Vec<Rng> =
+            reqs.iter().map(|r| Rng::for_stream(r.seed, 0)).collect();
+        let mut latents: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let mut l = rngs[i].normal_vec(latent_elems);
+                let sigma = schedulers[i].init_noise_sigma();
+                for v in l.iter_mut() {
+                    *v *= sigma;
+                }
+                l
+            })
+            .collect();
+        breakdown.overhead_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+        // scratch buffers reused across steps (no steady-state allocation
+        // beyond the PJRT boundary)
+        let mut in_latents: Vec<f32> = Vec::with_capacity(n * latent_elems);
+        let mut in_ts: Vec<f32> = Vec::with_capacity(n);
+        let mut in_ctx: Vec<f32> = Vec::with_capacity(n * ctx_elems);
+
+        // ---- the denoising loop ------------------------------------------
+        let strategy = self.config.dual_strategy;
+        for i in 0..steps {
+            // which samples need the unconditional pass this iteration?
+            let modes: Vec<GuidanceMode> = (0..n)
+                .map(|s| match controllers[s].as_mut() {
+                    Some(ctrl) => match ctrl.decide(i, steps) {
+                        AdaptiveDecision::Dual => {
+                            GuidanceMode::Dual { scale: reqs[s].guidance_scale }
+                        }
+                        AdaptiveDecision::CondOnly => GuidanceMode::CondOnly,
+                    },
+                    None => policies[s].decide(i, steps),
+                })
+                .collect();
+            let dual: Vec<usize> = (0..n)
+                .filter(|&s| matches!(modes[s], GuidanceMode::Dual { .. }))
+                .collect();
+            let single: Vec<usize> = (0..n)
+                .filter(|&s| !matches!(modes[s], GuidanceMode::Dual { .. }))
+                .collect();
+
+            let t0 = Instant::now();
+            let scaled: Vec<Vec<f32>> = (0..n)
+                .map(|s| schedulers[s].scale_model_input(&latents[s], i))
+                .collect();
+            breakdown.scheduler_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+            // per-sample eps_hat for this iteration
+            let mut eps_hat: Vec<Vec<f32>> = vec![Vec::new(); n];
+
+            match strategy {
+                DualStrategy::TwoB1 => {
+                    // 1) conditional pass for every sample (bucketized)
+                    let t0 = Instant::now();
+                    let all: Vec<usize> = (0..n).collect();
+                    let eps_cond = self.unet_over(
+                        &all,
+                        &scaled,
+                        &mut in_latents,
+                        &mut in_ts,
+                        &mut in_ctx,
+                        |s| &cond_ctx[s],
+                        |s| schedulers[s].model_timestep(i),
+                    )?;
+                    unet_evals += n;
+                    for e in evals_per_sample.iter_mut() {
+                        *e += 1;
+                    }
+                    breakdown.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+                    // 2) unconditional pass only for Dual samples
+                    if !dual.is_empty() {
+                        let t0 = Instant::now();
+                        let eps_uncond = self.unet_over(
+                            &dual,
+                            &scaled,
+                            &mut in_latents,
+                            &mut in_ts,
+                            &mut in_ctx,
+                            |_| &uncond_ctx,
+                            |s| schedulers[s].model_timestep(i),
+                        )?;
+                        unet_evals += dual.len();
+                        breakdown.unet_uncond_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+                        // 3) Eq.-1 combine on device
+                        for (di, &s) in dual.iter().enumerate() {
+                            let GuidanceMode::Dual { scale } = modes[s] else { unreachable!() };
+                            evals_per_sample[s] += 1;
+                            let t0 = Instant::now();
+                            let u = &eps_uncond[di * latent_elems..(di + 1) * latent_elems];
+                            let c = &eps_cond[s * latent_elems..(s + 1) * latent_elems];
+                            if let Some(ctrl) = controllers[s].as_mut() {
+                                ctrl.observe_delta(guidance_delta(c, u));
+                            }
+                            eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
+                            breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+                        }
+                    }
+                    for &s in &single {
+                        eps_hat[s] =
+                            eps_cond[s * latent_elems..(s + 1) * latent_elems].to_vec();
+                    }
+                }
+                DualStrategy::FusedB2 => {
+                    // HF-pipeline style: each dual sample runs one fused
+                    // batch-2 [cond, uncond] execution
+                    for &s in &dual {
+                        let GuidanceMode::Dual { scale } = modes[s] else { unreachable!() };
+                        let t0 = Instant::now();
+                        in_latents.clear();
+                        in_latents.extend_from_slice(&scaled[s]);
+                        in_latents.extend_from_slice(&scaled[s]);
+                        let t_s = schedulers[s].model_timestep(i);
+                        in_ctx.clear();
+                        in_ctx.extend_from_slice(&cond_ctx[s]);
+                        in_ctx.extend_from_slice(&uncond_ctx);
+                        let both =
+                            self.stack.unet_eps(2, &in_latents, &[t_s, t_s], &in_ctx)?;
+                        unet_evals += 2;
+                        evals_per_sample[s] += 2;
+                        breakdown.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3 / 2.0;
+                        breakdown.unet_uncond_ms += t0.elapsed().as_secs_f64() * 1e3 / 2.0;
+                        let t0 = Instant::now();
+                        let (c, u) = both.split_at(latent_elems);
+                        if let Some(ctrl) = controllers[s].as_mut() {
+                            ctrl.observe_delta(guidance_delta(c, u));
+                        }
+                        eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
+                        breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    }
+                    // optimized/unguided samples: bucketized cond-only pass
+                    if !single.is_empty() {
+                        let t0 = Instant::now();
+                        let eps_cond = self.unet_over(
+                            &single,
+                            &scaled,
+                            &mut in_latents,
+                            &mut in_ts,
+                            &mut in_ctx,
+                            |s| &cond_ctx[s],
+                            |s| schedulers[s].model_timestep(i),
+                        )?;
+                        unet_evals += single.len();
+                        breakdown.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3;
+                        for (si, &s) in single.iter().enumerate() {
+                            evals_per_sample[s] += 1;
+                            eps_hat[s] =
+                                eps_cond[si * latent_elems..(si + 1) * latent_elems].to_vec();
+                        }
+                    }
+                }
+            }
+
+            // 4) scheduler update per sample
+            let t0 = Instant::now();
+            for s in 0..n {
+                latents[s] = schedulers[s].step(i, &latents[s], &eps_hat[s], &mut rngs[s]);
+            }
+            breakdown.scheduler_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+
+        // consistency: per-sample counts must sum to the executed total,
+        // and static-policy samples must match their analytic cost model
+        debug_assert_eq!(unet_evals, evals_per_sample.iter().sum::<usize>());
+        for (s, req) in reqs.iter().enumerate() {
+            if req.adaptive.is_none() {
+                debug_assert_eq!(
+                    evals_per_sample[s],
+                    policies[s].total_unet_evals(steps),
+                    "sample {s}: executed evals diverge from the policy cost model"
+                );
+            }
+        }
+
+        // ---- decode + package -------------------------------------------
+        let wall_base = t_start.elapsed().as_secs_f64() * 1e3;
+        let mut outputs = Vec::with_capacity(n);
+        for (s, req) in reqs.iter().enumerate() {
+            let image = if req.decode {
+                let t0 = Instant::now();
+                let chw = self.stack.decode(&latents[s])?;
+                let img = RgbImage::from_chw_f32(&chw, m.image_size, m.image_size)?;
+                breakdown.overhead_ms += t0.elapsed().as_secs_f64() * 1e3;
+                Some(img)
+            } else {
+                None
+            };
+            outputs.push(GenerationOutput {
+                latent: std::mem::take(&mut latents[s]),
+                image,
+                wall_ms: 0.0, // patched below with the shared wall time
+                breakdown: breakdown.clone(),
+                // per-request count of actually-executed evaluations
+                unet_evals: evals_per_sample[s],
+                steps,
+            });
+        }
+        let wall = t_start.elapsed().as_secs_f64() * 1e3;
+        let _ = wall_base;
+        for o in outputs.iter_mut() {
+            o.wall_ms = wall;
+        }
+        Ok(outputs)
+    }
+
+    /// Run the UNet for the sample subset `subset`, bucketizing into the
+    /// compiled batch sizes. Returns eps flattened in subset order.
+    #[allow(clippy::too_many_arguments)]
+    fn unet_over<'a>(
+        &self,
+        subset: &[usize],
+        scaled_latents: &[Vec<f32>],
+        in_latents: &mut Vec<f32>,
+        in_ts: &mut Vec<f32>,
+        in_ctx: &mut Vec<f32>,
+        ctx_of: impl Fn(usize) -> &'a [f32],
+        t_of: impl Fn(usize) -> f32,
+    ) -> Result<Vec<f32>> {
+        let m = self.stack.model();
+        let latent_elems = m.latent_elems();
+        let mut out = Vec::with_capacity(subset.len() * latent_elems);
+        let mut cursor = 0usize;
+        for bucket in self.stack.bucketize(subset.len()) {
+            in_latents.clear();
+            in_ts.clear();
+            in_ctx.clear();
+            for &s in &subset[cursor..cursor + bucket] {
+                in_latents.extend_from_slice(&scaled_latents[s]);
+                in_ts.push(t_of(s));
+                in_ctx.extend_from_slice(ctx_of(s));
+            }
+            let eps = self.stack.unet_eps(bucket, in_latents, in_ts, in_ctx)?;
+            out.extend_from_slice(&eps);
+            cursor += bucket;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builder_chain() {
+        let r = GenerationRequest::new("a cat")
+            .steps(25)
+            .guidance_scale(9.0)
+            .selective(WindowSpec::last(0.3))
+            .scheduler(SchedulerKind::Ddim)
+            .seed(7)
+            .decode(false);
+        assert_eq!(r.steps, 25);
+        assert_eq!(r.guidance_scale, 9.0);
+        assert_eq!(r.window, WindowSpec::last(0.3));
+        assert_eq!(r.scheduler, SchedulerKind::Ddim);
+        assert_eq!(r.seed, 7);
+        assert!(!r.decode);
+        assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn request_validation() {
+        assert!(GenerationRequest::new("").validate().is_err());
+        assert!(GenerationRequest::new("x").steps(0).validate().is_err());
+        assert!(GenerationRequest::new("x")
+            .selective(WindowSpec::last(1.5))
+            .validate()
+            .is_err());
+        assert!(GenerationRequest::new("x").guidance_scale(-2.0).validate().is_err());
+    }
+
+    #[test]
+    fn default_request_matches_paper_setup() {
+        let r = GenerationRequest::new("prompt");
+        assert_eq!(r.steps, 50); // "Denoising iterations were fixed at 50"
+        assert_eq!(r.guidance_scale, 7.5);
+        assert_eq!(r.window, WindowSpec::none());
+    }
+}

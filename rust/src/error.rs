@@ -1,0 +1,89 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for the serving stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// PJRT / XLA failures (compile, execute, literal conversion).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact loading / manifest problems.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// JSON parse errors (manifests, wire protocol).
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Configuration errors (invalid values, unknown keys).
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Request validation failures (bad steps, batch, prompt).
+    #[error("request: {0}")]
+    Request(String),
+
+    /// Coordinator lifecycle problems (shutdown, disconnected workers).
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    /// Wire-protocol violations on the TCP front-end.
+    #[error("protocol: {0}")]
+    Protocol(String),
+
+    /// I/O, with context.
+    #[error("io: {context}: {source}")]
+    Io {
+        context: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { context: context.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Helper for formatting shape vectors in messages.
+pub fn fmt_shape(shape: &[usize]) -> String {
+    let mut s = String::from("[");
+    for (i, d) in shape.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        fmt::Write::write_fmt(&mut s, format_args!("{d}")).unwrap();
+    }
+    s.push(']');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_context() {
+        let e = Error::io("reading manifest", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let s = e.to_string();
+        assert!(s.contains("reading manifest"), "{s}");
+    }
+
+    #[test]
+    fn fmt_shape_matches_convention() {
+        assert_eq!(fmt_shape(&[1, 4, 8, 8]), "[1,4,8,8]");
+        assert_eq!(fmt_shape(&[]), "[]");
+    }
+}

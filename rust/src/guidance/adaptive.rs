@@ -1,0 +1,284 @@
+//! Adaptive selective guidance — the paper's future-work direction.
+//!
+//! The static policy fixes the optimization window ahead of time. The
+//! paper's §2 observation suggests something stronger: the unconditional
+//! pass is skippable exactly when it stops mattering, i.e. when the
+//! *guidance delta* `‖ε_c − ε_u‖ / ‖ε_u‖` becomes small. This controller
+//! measures that delta on every dual iteration and switches to cond-only
+//! once the observed delta stays below a threshold for `patience`
+//! consecutive iterations — an online version of "the later iterations
+//! only refine detail".
+//!
+//! Properties:
+//! * never skips during the first `min_dual_fraction` of the loop (layout
+//!   formation is protected, per Figure 1);
+//! * optional re-probing: every `probe_every` iterations after switching,
+//!   one dual iteration re-measures the delta and re-enables CFG if it
+//!   grew back above the threshold (hysteresis factor 2x).
+//!
+//! The engine drives this via [`AdaptiveController::decide`] +
+//! [`AdaptiveController::observe_delta`]; the ablation bench compares the
+//! latency/quality frontier against static windows.
+
+/// Online skip controller for one trajectory.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    /// Relative guidance-delta threshold below which the uncond pass is
+    /// considered dead weight.
+    pub threshold: f64,
+    /// Consecutive below-threshold dual iterations required to switch.
+    pub patience: usize,
+    /// Fraction of the loop that always runs dual (protects layout).
+    pub min_dual_fraction: f64,
+    /// After switching, re-probe with a dual iteration this often
+    /// (0 = never re-probe).
+    pub probe_every: usize,
+    // --- state ---
+    below_count: usize,
+    skipping: bool,
+    since_probe: usize,
+    deltas: Vec<f64>,
+}
+
+impl Default for AdaptiveController {
+    fn default() -> Self {
+        AdaptiveController {
+            threshold: 0.05,
+            patience: 2,
+            min_dual_fraction: 0.3,
+            probe_every: 8,
+            below_count: 0,
+            skipping: false,
+            since_probe: 0,
+            deltas: Vec::new(),
+        }
+    }
+}
+
+/// What the controller wants for iteration `i`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptiveDecision {
+    /// Run both passes and report the delta via `observe_delta`.
+    Dual,
+    /// Run the conditional pass only.
+    CondOnly,
+}
+
+impl AdaptiveController {
+    pub fn new(threshold: f64, patience: usize, min_dual_fraction: f64) -> Self {
+        AdaptiveController {
+            threshold,
+            patience: patience.max(1),
+            min_dual_fraction: min_dual_fraction.clamp(0.0, 1.0),
+            ..Default::default()
+        }
+    }
+
+    /// Decide iteration `i` of `n`.
+    pub fn decide(&mut self, i: usize, n: usize) -> AdaptiveDecision {
+        if (i as f64) < self.min_dual_fraction * n as f64 {
+            return AdaptiveDecision::Dual;
+        }
+        if self.skipping {
+            self.since_probe += 1;
+            if self.probe_every > 0 && self.since_probe >= self.probe_every {
+                self.since_probe = 0;
+                return AdaptiveDecision::Dual; // re-probe
+            }
+            return AdaptiveDecision::CondOnly;
+        }
+        AdaptiveDecision::Dual
+    }
+
+    /// Report the relative guidance delta measured on a dual iteration.
+    pub fn observe_delta(&mut self, delta: f64) {
+        self.deltas.push(delta);
+        if self.skipping {
+            // re-probe result: hysteresis — only re-enable when the delta
+            // grew well above the switch-off threshold
+            if delta > 2.0 * self.threshold {
+                self.skipping = false;
+                self.below_count = 0;
+            }
+            return;
+        }
+        if delta < self.threshold {
+            self.below_count += 1;
+            if self.below_count >= self.patience {
+                self.skipping = true;
+                self.since_probe = 0;
+            }
+        } else {
+            self.below_count = 0;
+        }
+    }
+
+    /// Observed delta history (for diagnostics / benches).
+    pub fn deltas(&self) -> &[f64] {
+        &self.deltas
+    }
+
+    pub fn is_skipping(&self) -> bool {
+        self.skipping
+    }
+
+    /// Reset for a fresh trajectory.
+    pub fn reset(&mut self) {
+        self.below_count = 0;
+        self.skipping = false;
+        self.since_probe = 0;
+        self.deltas.clear();
+    }
+}
+
+/// Relative guidance delta `‖ε_c − ε_u‖ / ‖ε_u‖` on host buffers.
+pub fn guidance_delta(eps_cond: &[f32], eps_uncond: &[f32]) -> f64 {
+    assert_eq!(eps_cond.len(), eps_uncond.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&c, &u) in eps_cond.iter().zip(eps_uncond) {
+        let d = (c - u) as f64;
+        num += d * d;
+        den += (u as f64) * (u as f64);
+    }
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn protects_early_iterations() {
+        let mut c = AdaptiveController::new(0.5, 1, 0.3);
+        // even huge thresholds never skip in the first 30%
+        for i in 0..3 {
+            assert_eq!(c.decide(i, 10), AdaptiveDecision::Dual);
+            c.observe_delta(0.0);
+        }
+        assert_eq!(c.decide(3, 10), AdaptiveDecision::CondOnly);
+    }
+
+    #[test]
+    fn switches_after_patience() {
+        let mut c = AdaptiveController::new(0.1, 3, 0.0);
+        for i in 0..2 {
+            assert_eq!(c.decide(i, 100), AdaptiveDecision::Dual);
+            c.observe_delta(0.01);
+            assert!(!c.is_skipping(), "switched too early at {i}");
+        }
+        assert_eq!(c.decide(2, 100), AdaptiveDecision::Dual);
+        c.observe_delta(0.01);
+        assert!(c.is_skipping());
+        assert_eq!(c.decide(3, 100), AdaptiveDecision::CondOnly);
+    }
+
+    #[test]
+    fn above_threshold_resets_patience() {
+        let mut c = AdaptiveController::new(0.1, 2, 0.0);
+        c.decide(0, 10);
+        c.observe_delta(0.01);
+        c.decide(1, 10);
+        c.observe_delta(0.5); // resets
+        c.decide(2, 10);
+        c.observe_delta(0.01);
+        assert!(!c.is_skipping());
+        c.decide(3, 10);
+        c.observe_delta(0.01);
+        assert!(c.is_skipping());
+    }
+
+    #[test]
+    fn reprobe_reenables_on_delta_growth() {
+        let mut c = AdaptiveController { probe_every: 2, ..AdaptiveController::new(0.1, 1, 0.0) };
+        c.decide(0, 100);
+        c.observe_delta(0.01);
+        assert!(c.is_skipping());
+        assert_eq!(c.decide(1, 100), AdaptiveDecision::CondOnly);
+        // second skipped iteration triggers a probe
+        assert_eq!(c.decide(2, 100), AdaptiveDecision::Dual);
+        c.observe_delta(0.5); // grew back above 2x threshold
+        assert!(!c.is_skipping());
+        assert_eq!(c.decide(3, 100), AdaptiveDecision::Dual);
+    }
+
+    #[test]
+    fn hysteresis_band_keeps_skipping() {
+        let mut c = AdaptiveController { probe_every: 1, ..AdaptiveController::new(0.1, 1, 0.0) };
+        c.decide(0, 100);
+        c.observe_delta(0.05);
+        assert!(c.is_skipping());
+        // probe measures 0.15: above threshold but below 2x -> keep skipping
+        assert_eq!(c.decide(1, 100), AdaptiveDecision::Dual);
+        c.observe_delta(0.15);
+        assert!(c.is_skipping());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut c = AdaptiveController::new(0.1, 1, 0.0);
+        c.decide(0, 10);
+        c.observe_delta(0.01);
+        assert!(c.is_skipping());
+        c.reset();
+        assert!(!c.is_skipping());
+        assert!(c.deltas().is_empty());
+    }
+
+    #[test]
+    fn guidance_delta_math() {
+        assert_eq!(guidance_delta(&[1.0, 1.0], &[1.0, 1.0]), 0.0);
+        // ||c-u||/||u|| = ||(1,0)-(0,0)... den 0
+        assert!(guidance_delta(&[1.0], &[0.0]).is_infinite());
+        assert_eq!(guidance_delta(&[0.0], &[0.0]), 0.0);
+        let d = guidance_delta(&[2.0, 0.0], &[1.0, 0.0]);
+        assert!((d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_skips_with_infinite_threshold_zero() {
+        forall("adaptive never-skip", 50, |g| {
+            let mut c = AdaptiveController::new(0.0, 1, 0.0);
+            let n = g.usize_in(1, 50);
+            for i in 0..n {
+                if c.decide(i, n) == AdaptiveDecision::Dual {
+                    c.observe_delta(g.f64_in(1e-6, 10.0));
+                }
+            }
+            assert!(!c.is_skipping(), "threshold 0 must never skip");
+        });
+    }
+
+    #[test]
+    fn decisions_respect_min_dual_fraction_property() {
+        forall("adaptive min-dual", 100, |g| {
+            let frac = g.f64_in(0.0, 1.0);
+            let n = g.usize_in(1, 100);
+            let mut c = AdaptiveController::new(1e9, 1, frac); // skip asap
+            let mut first_skip = None;
+            for i in 0..n {
+                match c.decide(i, n) {
+                    AdaptiveDecision::Dual => c.observe_delta(0.0),
+                    AdaptiveDecision::CondOnly => {
+                        first_skip.get_or_insert(i);
+                    }
+                }
+            }
+            if let Some(i) = first_skip {
+                assert!(
+                    i as f64 >= frac * n as f64,
+                    "skipped at {i} before min dual fraction {frac} of {n}"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,136 @@
+//! Guidance-scale retuning (§3.4 of the paper).
+//!
+//! Aggressive optimization windows weaken the *net* guidance applied over
+//! the trajectory (optimized steps apply an effective scale of 1). The
+//! paper's demonstration raises GS from 7.5 to 9.6 at a 40% window to
+//! recover lost detail and leaves a systematic treatment to future work —
+//! which we provide here: [`retuned_scale`] chooses the scale that keeps
+//! the trajectory-averaged guidance scale equal to the baseline's, and
+//! [`GsTuner`] sweeps candidate scales with a quality metric to pick the
+//! best (the benches drive it with SSIM-vs-baseline).
+
+/// Scale preserving the mean per-iteration guidance under an optimized
+/// fraction `f`:
+///
+///   baseline mean  = s
+///   optimized mean = (1-f)·s' + f·1     (optimized steps act as s = 1)
+///   equate  =>  s' = (s - f) / (1 - f)
+///
+/// For s = 7.5, f = 0.4 this gives s' ≈ 11.8; the paper's hand-tuned 9.6
+/// sits between the naive s and this bound — consistent with later steps
+/// contributing less to layout. A `damping` in [0, 1] interpolates:
+/// damping = 0 returns s, damping = 1 returns the full compensation.
+/// The paper's (7.5 → 9.6, f = 0.4) point corresponds to damping ≈ 0.49.
+pub fn retuned_scale(base_scale: f32, fraction: f64, damping: f64) -> f32 {
+    assert!((0.0..=1.0).contains(&fraction), "fraction {fraction}");
+    assert!((0.0..=1.0).contains(&damping), "damping {damping}");
+    if fraction >= 1.0 {
+        return base_scale; // everything optimized; scale is moot
+    }
+    let s = base_scale as f64;
+    let full = (s - fraction) / (1.0 - fraction);
+    (s + damping * (full - s)) as f32
+}
+
+/// Sweep-based tuner: evaluate a quality score at candidate scales and
+/// return the argmax (ties -> lowest scale, favoring stability).
+#[derive(Debug, Clone)]
+pub struct GsTuner {
+    pub candidates: Vec<f32>,
+}
+
+impl GsTuner {
+    /// Candidate grid around the compensation interval
+    /// [base, retuned_scale(base, f, 1)].
+    pub fn around(base_scale: f32, fraction: f64, steps: usize) -> GsTuner {
+        assert!(steps >= 2);
+        let hi = retuned_scale(base_scale, fraction, 1.0);
+        let lo = base_scale;
+        let candidates = (0..steps)
+            .map(|i| lo + (hi - lo) * i as f32 / (steps - 1) as f32)
+            .collect();
+        GsTuner { candidates }
+    }
+
+    /// Pick the candidate maximizing `score` (higher is better).
+    pub fn tune(&self, mut score: impl FnMut(f32) -> f64) -> (f32, f64) {
+        assert!(!self.candidates.is_empty());
+        let mut best = (self.candidates[0], f64::NEG_INFINITY);
+        for &c in &self.candidates {
+            let s = score(c);
+            if s > best.1 {
+                best = (c, s);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn no_optimization_no_change() {
+        assert_eq!(retuned_scale(7.5, 0.0, 1.0), 7.5);
+        assert_eq!(retuned_scale(7.5, 0.4, 0.0), 7.5);
+    }
+
+    #[test]
+    fn paper_point_within_interval() {
+        // §3.4: f=0.4 moves 7.5 -> 9.6; our compensation interval must
+        // contain that hand-tuned value.
+        let full = retuned_scale(7.5, 0.4, 1.0);
+        assert!(full > 9.6, "full compensation {full} should exceed 9.6");
+        // damping ~0.49 reproduces the paper's number
+        let mid = retuned_scale(7.5, 0.4, 0.49);
+        assert!((mid - 9.6).abs() < 0.15, "damped {mid} vs paper 9.6");
+    }
+
+    #[test]
+    fn full_compensation_closed_form() {
+        // s'=(s-f)/(1-f): s=7.5, f=0.4 -> 7.1/0.6 ≈ 11.833
+        let s = retuned_scale(7.5, 0.4, 1.0);
+        assert!((s - 11.8333).abs() < 1e-3, "{s}");
+    }
+
+    #[test]
+    fn monotone_in_fraction_and_damping() {
+        forall("retune monotone", 200, |g| {
+            let base = g.f32_in(1.5, 15.0);
+            let f1 = g.f64_in(0.0, 0.8);
+            let f2 = g.f64_in(f1, 0.9);
+            let d = g.f64_in(0.0, 1.0);
+            assert!(retuned_scale(base, f2, d) >= retuned_scale(base, f1, d) - 1e-6);
+            let d2 = g.f64_in(d, 1.0);
+            assert!(retuned_scale(base, f1, d2) >= retuned_scale(base, f1, d) - 1e-6);
+            // never below the base scale for s > 1
+            assert!(retuned_scale(base, f1, d) >= base - 1e-6);
+        });
+    }
+
+    #[test]
+    fn tuner_grid_spans_interval() {
+        let t = GsTuner::around(7.5, 0.4, 5);
+        assert_eq!(t.candidates.len(), 5);
+        assert!((t.candidates[0] - 7.5).abs() < 1e-6);
+        assert!((t.candidates[4] - retuned_scale(7.5, 0.4, 1.0)).abs() < 1e-6);
+        assert!(t.candidates.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn tuner_finds_peak() {
+        let t = GsTuner { candidates: vec![1.0, 2.0, 3.0, 4.0] };
+        let (best, score) = t.tune(|s| -((s - 3.0) as f64).powi(2));
+        assert_eq!(best, 3.0);
+        assert_eq!(score, 0.0);
+    }
+
+    #[test]
+    fn tuner_tie_breaks_low() {
+        let t = GsTuner { candidates: vec![1.0, 2.0, 3.0] };
+        let (best, _) = t.tune(|_| 1.0);
+        assert_eq!(best, 1.0);
+    }
+}

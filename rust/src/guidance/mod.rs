@@ -1,0 +1,75 @@
+//! Selective guidance — the paper's contribution, as a first-class policy.
+//!
+//! Classifier-free guidance (Eq. 1) costs two UNet evaluations per
+//! denoising iteration. The paper's proposal: on a chosen *window* of
+//! iterations, skip the unconditional evaluation and use the conditional
+//! noise directly, halving that iteration's UNet cost. Section 2 shows the
+//! window should sit on the **last** iterations (they refine detail and
+//! are least sensitive); §3 quantifies the quality/latency trade-off and
+//! §3.4 adds a guidance-scale retuning trick for aggressive windows.
+//!
+//! This module turns that paper-text into types:
+//! * [`WindowSpec`] — which fraction of the loop is optimized, and where;
+//! * [`SelectiveGuidancePolicy`] — the per-iteration decision object the
+//!   engine consults;
+//! * [`GuidanceMode`] — what the engine must execute this iteration;
+//! * [`CostModel`] — the analytic saving model the benches validate
+//!   against (saving ≈ f/2 of UNet time, §3.3);
+//! * [`retuned_scale`] / [`GsTuner`] — the §3.4 guidance-scale retuning.
+
+mod adaptive;
+mod cost;
+mod gs_tuning;
+mod policy;
+mod window;
+
+pub use adaptive::{guidance_delta, AdaptiveController, AdaptiveDecision};
+pub use cost::CostModel;
+pub use gs_tuning::{retuned_scale, GsTuner};
+pub use policy::{GuidanceMode, SelectiveGuidancePolicy};
+pub use window::{WindowPosition, WindowSpec};
+
+/// Configuration for the adaptive (online) skip controller — the paper's
+/// future-work variant. When set on a request it supersedes the static
+/// window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Relative guidance-delta threshold (see [`AdaptiveController`]).
+    pub threshold: f64,
+    /// Consecutive below-threshold iterations before switching.
+    pub patience: usize,
+    /// Fraction of the loop that always runs full CFG.
+    pub min_dual_fraction: f64,
+    /// Re-probe cadence after switching (0 = never).
+    pub probe_every: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig { threshold: 0.05, patience: 2, min_dual_fraction: 0.3, probe_every: 8 }
+    }
+}
+
+impl AdaptiveConfig {
+    pub fn controller(&self) -> AdaptiveController {
+        let mut c = AdaptiveController::new(self.threshold, self.patience, self.min_dual_fraction);
+        c.probe_every = self.probe_every;
+        c
+    }
+
+    pub fn validate(&self) -> crate::error::Result<()> {
+        if !self.threshold.is_finite() || self.threshold < 0.0 {
+            return Err(crate::error::Error::Config(format!(
+                "adaptive threshold {} must be finite and >= 0",
+                self.threshold
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.min_dual_fraction) {
+            return Err(crate::error::Error::Config(format!(
+                "adaptive min_dual_fraction {} outside [0, 1]",
+                self.min_dual_fraction
+            )));
+        }
+        Ok(())
+    }
+}

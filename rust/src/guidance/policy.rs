@@ -1,0 +1,162 @@
+//! The per-iteration guidance decision the engine executes.
+
+use super::window::WindowSpec;
+use crate::error::Result;
+
+/// What the engine must run for one denoising iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GuidanceMode {
+    /// Full CFG: two UNet evaluations + Eq.-1 combine with scale `s`.
+    Dual { scale: f32 },
+    /// Optimized: conditional evaluation only (`eps_hat = eps_c`).
+    CondOnly,
+    /// Unguided sampling (guidance scale == 1 collapses Eq. 1 to the
+    /// conditional term; skip the dead uncond pass *everywhere*).
+    Unguided,
+}
+
+impl GuidanceMode {
+    /// UNet evaluations this mode costs.
+    pub fn unet_evals(&self) -> usize {
+        match self {
+            GuidanceMode::Dual { .. } => 2,
+            GuidanceMode::CondOnly | GuidanceMode::Unguided => 1,
+        }
+    }
+}
+
+/// The paper's selective-guidance policy: a validated (window, scale)
+/// pair yielding a [`GuidanceMode`] per iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SelectiveGuidancePolicy {
+    window: WindowSpec,
+    guidance_scale: f32,
+}
+
+impl SelectiveGuidancePolicy {
+    pub fn new(window: WindowSpec, guidance_scale: f32) -> Result<Self> {
+        window.validate()?;
+        if !guidance_scale.is_finite() || guidance_scale < 0.0 {
+            return Err(crate::error::Error::Config(format!(
+                "guidance scale {guidance_scale} must be finite and >= 0"
+            )));
+        }
+        Ok(SelectiveGuidancePolicy { window, guidance_scale })
+    }
+
+    /// Full CFG at the SD default scale of 7.5.
+    pub fn baseline() -> Self {
+        SelectiveGuidancePolicy::new(WindowSpec::none(), 7.5).unwrap()
+    }
+
+    pub fn window(&self) -> WindowSpec {
+        self.window
+    }
+
+    pub fn guidance_scale(&self) -> f32 {
+        self.guidance_scale
+    }
+
+    /// Decide iteration `i` of an `n`-step loop.
+    ///
+    /// Note the `scale <= 1 + eps` fast path: with s = 1, Eq. 1 reduces to
+    /// `eps_hat = eps_c` *exactly*, so the unconditional pass is dead code
+    /// at every iteration — selective guidance generalizes this identity
+    /// from "everywhere when s=1" to "a chosen window for any s".
+    pub fn decide(&self, i: usize, n: usize) -> GuidanceMode {
+        debug_assert!(i < n, "iteration {i} out of range for {n}-step loop");
+        if (self.guidance_scale - 1.0).abs() < 1e-6 {
+            return GuidanceMode::Unguided;
+        }
+        if self.window.contains(i, n) {
+            GuidanceMode::CondOnly
+        } else {
+            GuidanceMode::Dual { scale: self.guidance_scale }
+        }
+    }
+
+    /// Total UNet evaluations for an `n`-step trajectory.
+    pub fn total_unet_evals(&self, n: usize) -> usize {
+        (0..n).map(|i| self.decide(i, n).unet_evals()).sum()
+    }
+
+    /// Copy with a different guidance scale (the §3.4 retuning path).
+    pub fn with_scale(&self, scale: f32) -> Result<Self> {
+        SelectiveGuidancePolicy::new(self.window, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn baseline_all_dual() {
+        let p = SelectiveGuidancePolicy::baseline();
+        for i in 0..50 {
+            assert_eq!(p.decide(i, 50), GuidanceMode::Dual { scale: 7.5 });
+        }
+        assert_eq!(p.total_unet_evals(50), 100);
+    }
+
+    #[test]
+    fn last20_matches_paper() {
+        let p = SelectiveGuidancePolicy::new(WindowSpec::last(0.2), 7.5).unwrap();
+        // first 40 dual, last 10 cond-only => 40*2 + 10 = 90 evals
+        assert_eq!(p.total_unet_evals(50), 90);
+        assert_eq!(p.decide(39, 50), GuidanceMode::Dual { scale: 7.5 });
+        assert_eq!(p.decide(40, 50), GuidanceMode::CondOnly);
+    }
+
+    #[test]
+    fn scale_one_is_unguided_everywhere() {
+        let p = SelectiveGuidancePolicy::new(WindowSpec::none(), 1.0).unwrap();
+        for i in 0..10 {
+            assert_eq!(p.decide(i, 10), GuidanceMode::Unguided);
+        }
+        assert_eq!(p.total_unet_evals(10), 10);
+    }
+
+    #[test]
+    fn eval_counts_exact_for_all_policies() {
+        forall("policy eval counts", 200, |g| {
+            let n = g.usize_in(1, 200);
+            let f = g.f64_in(0.0, 1.0);
+            let s = g.f32_in(1.5, 15.0);
+            let p = SelectiveGuidancePolicy::new(WindowSpec::last(f), s).unwrap();
+            let k = WindowSpec::last(f).optimized_count(n);
+            assert_eq!(p.total_unet_evals(n), 2 * n - k);
+        });
+    }
+
+    #[test]
+    fn decide_is_pure() {
+        let p = SelectiveGuidancePolicy::new(WindowSpec::last(0.3), 9.0).unwrap();
+        for i in 0..20 {
+            assert_eq!(p.decide(i, 20), p.decide(i, 20));
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(SelectiveGuidancePolicy::new(WindowSpec::last(2.0), 7.5).is_err());
+        assert!(SelectiveGuidancePolicy::new(WindowSpec::none(), f32::NAN).is_err());
+        assert!(SelectiveGuidancePolicy::new(WindowSpec::none(), -1.0).is_err());
+    }
+
+    #[test]
+    fn with_scale_keeps_window() {
+        let p = SelectiveGuidancePolicy::new(WindowSpec::last(0.4), 7.5).unwrap();
+        let q = p.with_scale(9.6).unwrap();
+        assert_eq!(q.window(), WindowSpec::last(0.4));
+        assert_eq!(q.guidance_scale(), 9.6);
+    }
+
+    #[test]
+    fn mode_eval_counts() {
+        assert_eq!(GuidanceMode::Dual { scale: 7.5 }.unet_evals(), 2);
+        assert_eq!(GuidanceMode::CondOnly.unet_evals(), 1);
+        assert_eq!(GuidanceMode::Unguided.unet_evals(), 1);
+    }
+}

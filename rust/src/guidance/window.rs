@@ -1,0 +1,225 @@
+//! Optimization-window algebra: which denoising iterations drop the
+//! unconditional pass.
+
+use crate::error::{Error, Result};
+
+/// Where in the denoising loop the optimization window sits.
+///
+/// Figure 1 of the paper slides a fixed-size window across the loop and
+/// shows quality improving as it moves right (later iterations); the
+/// recommended placement is [`WindowPosition::Last`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WindowPosition {
+    /// First `fraction` of iterations (paper's worst case — layout
+    /// formation is most sensitive).
+    First,
+    /// Centered window.
+    Middle,
+    /// Last `fraction` of iterations (the paper's recommendation).
+    Last,
+    /// Window starting at a given offset fraction in [0, 1].
+    Offset(f64),
+}
+
+impl WindowPosition {
+    pub fn name(&self) -> String {
+        match self {
+            WindowPosition::First => "first".into(),
+            WindowPosition::Middle => "middle".into(),
+            WindowPosition::Last => "last".into(),
+            WindowPosition::Offset(o) => format!("offset({o:.2})"),
+        }
+    }
+}
+
+/// A validated optimization-window specification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowSpec {
+    /// Fraction of iterations optimized, in [0, 1].
+    pub fraction: f64,
+    /// Placement of the window.
+    pub position: WindowPosition,
+}
+
+impl WindowSpec {
+    /// No optimization — the CFG baseline.
+    pub fn none() -> WindowSpec {
+        WindowSpec { fraction: 0.0, position: WindowPosition::Last }
+    }
+
+    /// The paper's recommended configuration: optimize the last
+    /// `fraction` of iterations.
+    pub fn last(fraction: f64) -> WindowSpec {
+        WindowSpec { fraction, position: WindowPosition::Last }
+    }
+
+    pub fn first(fraction: f64) -> WindowSpec {
+        WindowSpec { fraction, position: WindowPosition::First }
+    }
+
+    pub fn middle(fraction: f64) -> WindowSpec {
+        WindowSpec { fraction, position: WindowPosition::Middle }
+    }
+
+    /// Window of size `fraction` starting at `offset` (both fractions of
+    /// the loop length) — the Figure-1 sliding-window experiments.
+    pub fn at_offset(offset: f64, fraction: f64) -> WindowSpec {
+        WindowSpec { fraction, position: WindowPosition::Offset(offset) }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.fraction) || !self.fraction.is_finite() {
+            return Err(Error::Config(format!(
+                "window fraction {} outside [0, 1]",
+                self.fraction
+            )));
+        }
+        if let WindowPosition::Offset(o) = self.position {
+            if !(0.0..=1.0).contains(&o) || !o.is_finite() {
+                return Err(Error::Config(format!("window offset {o} outside [0, 1]")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of optimized iterations for an `n`-step loop: ⌊f·n⌋,
+    /// matching the paper's "last K% of the iterations".
+    pub fn optimized_count(&self, n: usize) -> usize {
+        ((self.fraction * n as f64).floor() as usize).min(n)
+    }
+
+    /// Half-open iteration range [start, end) that is optimized.
+    pub fn range(&self, n: usize) -> (usize, usize) {
+        let k = self.optimized_count(n);
+        if k == 0 {
+            return (0, 0);
+        }
+        match self.position {
+            WindowPosition::First => (0, k),
+            WindowPosition::Last => (n - k, n),
+            WindowPosition::Middle => {
+                let start = (n - k) / 2;
+                (start, start + k)
+            }
+            WindowPosition::Offset(o) => {
+                let start = ((o * n as f64).round() as usize).min(n - k);
+                (start, start + k)
+            }
+        }
+    }
+
+    /// Is iteration `i` (0-based position in the inference loop, 0 =
+    /// noisiest) inside the optimization window?
+    pub fn contains(&self, i: usize, n: usize) -> bool {
+        let (s, e) = self.range(n);
+        i >= s && i < e
+    }
+
+    /// Human-readable label used in bench tables (e.g. "last 20%").
+    pub fn label(&self) -> String {
+        if self.fraction == 0.0 {
+            "no opt.".into()
+        } else {
+            format!("{} {:.0}%", self.position.name(), self.fraction * 100.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn paper_table1_counts() {
+        // 50-step loop: 20/30/40/50% -> 10/15/20/25 optimized iterations
+        for (f, k) in [(0.2, 10), (0.3, 15), (0.4, 20), (0.5, 25)] {
+            assert_eq!(WindowSpec::last(f).optimized_count(50), k);
+        }
+        assert_eq!(WindowSpec::none().optimized_count(50), 0);
+    }
+
+    #[test]
+    fn last_window_covers_tail() {
+        let w = WindowSpec::last(0.2);
+        assert_eq!(w.range(50), (40, 50));
+        assert!(!w.contains(39, 50));
+        assert!(w.contains(40, 50));
+        assert!(w.contains(49, 50));
+    }
+
+    #[test]
+    fn first_window_covers_head() {
+        let w = WindowSpec::first(0.25);
+        assert_eq!(w.range(48), (0, 12));
+        assert!(w.contains(0, 48));
+        assert!(!w.contains(12, 48));
+    }
+
+    #[test]
+    fn middle_window_centered() {
+        let w = WindowSpec::middle(0.5);
+        assert_eq!(w.range(40), (10, 30));
+    }
+
+    #[test]
+    fn offset_window_clamped() {
+        // offset so late the window would overflow -> clamped to the tail
+        let w = WindowSpec::at_offset(0.95, 0.25);
+        let (s, e) = w.range(40);
+        assert_eq!(e - s, 10);
+        assert_eq!(e, 40);
+    }
+
+    #[test]
+    fn figure1_sliding_windows() {
+        // the four Figure-1 variants: 25% window at offsets 0/0.25/0.5/0.75
+        let n = 48;
+        for (off, expect_start) in [(0.0, 0), (0.25, 12), (0.5, 24), (0.75, 36)] {
+            let w = WindowSpec::at_offset(off, 0.25);
+            let (s, e) = w.range(n);
+            assert_eq!(s, expect_start);
+            assert_eq!(e - s, 12);
+        }
+    }
+
+    #[test]
+    fn validation() {
+        assert!(WindowSpec::last(0.2).validate().is_ok());
+        assert!(WindowSpec::last(-0.1).validate().is_err());
+        assert!(WindowSpec::last(1.1).validate().is_err());
+        assert!(WindowSpec::at_offset(2.0, 0.1).validate().is_err());
+        assert!(WindowSpec::last(f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn properties_hold_for_all_specs() {
+        forall("window algebra", 300, |g| {
+            let n = g.usize_in(1, 200);
+            let fraction = g.f64_in(0.0, 1.0);
+            let pos = match g.usize_in(0, 3) {
+                0 => WindowPosition::First,
+                1 => WindowPosition::Middle,
+                2 => WindowPosition::Last,
+                _ => WindowPosition::Offset(g.f64_in(0.0, 1.0)),
+            };
+            let w = WindowSpec { fraction, position: pos };
+            w.validate().unwrap();
+            let k = w.optimized_count(n);
+            assert_eq!(k, (fraction * n as f64).floor() as usize);
+            let (s, e) = w.range(n);
+            assert!(e <= n, "range end {e} beyond {n}");
+            assert_eq!(e - s, k, "range size != optimized count");
+            // contains() agrees with range() exactly
+            let contained = (0..n).filter(|&i| w.contains(i, n)).count();
+            assert_eq!(contained, k);
+        });
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(WindowSpec::none().label(), "no opt.");
+        assert_eq!(WindowSpec::last(0.2).label(), "last 20%");
+        assert_eq!(WindowSpec::first(0.25).label(), "first 25%");
+    }
+}

@@ -1,0 +1,128 @@
+//! Image output: tensor → RGB conversion, PNG and PPM encoders.
+//!
+//! The offline registry snapshot has no `image`/`png` crate, so the PNG
+//! encoder is implemented here directly on top of `flate2` (zlib) and
+//! `crc32fast` — both available. Output is standard 8-bit RGB PNG.
+
+mod png;
+mod ppm;
+
+pub use png::encode_png;
+pub use ppm::encode_ppm;
+
+use crate::error::{Error, Result};
+
+/// An 8-bit RGB image.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RgbImage {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major RGB triples, `3 * width * height` bytes.
+    pub data: Vec<u8>,
+}
+
+impl RgbImage {
+    pub fn new(width: usize, height: usize) -> Self {
+        RgbImage { width, height, data: vec![0; 3 * width * height] }
+    }
+
+    /// Build from a CHW float tensor in [-1, 1] (the VAE decoder output).
+    ///
+    /// `chw` must have shape `[3, height, width]` flattened.
+    pub fn from_chw_f32(chw: &[f32], height: usize, width: usize) -> Result<Self> {
+        let expect = 3 * height * width;
+        if chw.len() != expect {
+            return Err(Error::Request(format!(
+                "image tensor has {} elements, expected {}",
+                chw.len(),
+                expect
+            )));
+        }
+        let mut img = RgbImage::new(width, height);
+        let plane = height * width;
+        for y in 0..height {
+            for x in 0..width {
+                let p = y * width + x;
+                for c in 0..3 {
+                    let v = chw[c * plane + p];
+                    let byte = (((v.clamp(-1.0, 1.0) + 1.0) * 0.5) * 255.0).round() as u8;
+                    img.data[3 * p + c] = byte;
+                }
+            }
+        }
+        Ok(img)
+    }
+
+    pub fn pixel(&self, x: usize, y: usize) -> [u8; 3] {
+        let p = 3 * (y * self.width + x);
+        [self.data[p], self.data[p + 1], self.data[p + 2]]
+    }
+
+    pub fn set_pixel(&mut self, x: usize, y: usize, rgb: [u8; 3]) {
+        let p = 3 * (y * self.width + x);
+        self.data[p..p + 3].copy_from_slice(&rgb);
+    }
+
+    /// Per-pixel luma (ITU-R BT.601), used by the quality metrics.
+    pub fn luma(&self) -> Vec<f32> {
+        self.data
+            .chunks_exact(3)
+            .map(|p| 0.299 * p[0] as f32 + 0.587 * p[1] as f32 + 0.114 * p[2] as f32)
+            .collect()
+    }
+
+    /// Write as PNG.
+    pub fn save_png(&self, path: &std::path::Path) -> Result<()> {
+        let bytes = encode_png(self)?;
+        std::fs::write(path, bytes)
+            .map_err(|e| Error::io(format!("writing {}", path.display()), e))
+    }
+
+    /// Write as binary PPM (P6).
+    pub fn save_ppm(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, encode_ppm(self))
+            .map_err(|e| Error::io(format!("writing {}", path.display()), e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_chw_maps_range() {
+        // 1x1 image: channel values -1, 0, 1 -> 0, 128, 255
+        let img = RgbImage::from_chw_f32(&[-1.0, 0.0, 1.0], 1, 1).unwrap();
+        assert_eq!(img.pixel(0, 0), [0, 128, 255]);
+    }
+
+    #[test]
+    fn from_chw_clamps() {
+        let img = RgbImage::from_chw_f32(&[-5.0, 9.0, 0.0], 1, 1).unwrap();
+        assert_eq!(img.pixel(0, 0), [0, 255, 128]);
+    }
+
+    #[test]
+    fn from_chw_rejects_bad_len() {
+        assert!(RgbImage::from_chw_f32(&[0.0; 5], 1, 1).is_err());
+    }
+
+    #[test]
+    fn chw_layout_correct() {
+        // 2x1 image, distinct per-channel planes
+        // R plane [10, 20], G plane [30, 40], B plane [50, 60] in [-1,1]-ish
+        let to_f = |b: u8| (b as f32 / 255.0) * 2.0 - 1.0;
+        let chw = vec![to_f(10), to_f(20), to_f(30), to_f(40), to_f(50), to_f(60)];
+        let img = RgbImage::from_chw_f32(&chw, 1, 2).unwrap();
+        assert_eq!(img.pixel(0, 0), [10, 30, 50]);
+        assert_eq!(img.pixel(1, 0), [20, 40, 60]);
+    }
+
+    #[test]
+    fn luma_white_is_255() {
+        let mut img = RgbImage::new(1, 1);
+        img.set_pixel(0, 0, [255, 255, 255]);
+        let l = img.luma();
+        assert!((l[0] - 255.0).abs() < 0.5);
+    }
+}

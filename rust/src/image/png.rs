@@ -1,0 +1,207 @@
+//! Minimal standards-compliant PNG encoder (8-bit RGB, no interlace).
+//!
+//! Built directly on `flate2` (zlib stream) + `crc32fast` (chunk CRCs).
+//! Uses per-row filter heuristics (None vs Sub vs Up, minimum-sum-of-
+//! absolute-differences) — small files without a full filter search.
+
+use std::io::Write;
+
+use crate::error::{Error, Result};
+
+use super::RgbImage;
+
+const PNG_SIGNATURE: [u8; 8] = [0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1A, b'\n'];
+
+fn chunk(out: &mut Vec<u8>, kind: &[u8; 4], data: &[u8]) {
+    out.extend_from_slice(&(data.len() as u32).to_be_bytes());
+    out.extend_from_slice(kind);
+    out.extend_from_slice(data);
+    let mut h = crc32fast::Hasher::new();
+    h.update(kind);
+    h.update(data);
+    out.extend_from_slice(&h.finalize().to_be_bytes());
+}
+
+/// Apply the `Sub` filter (delta vs previous pixel) into `dst`.
+fn filter_sub(row: &[u8], bpp: usize, dst: &mut Vec<u8>) {
+    dst.clear();
+    dst.extend_from_slice(row);
+    for i in (bpp..dst.len()).rev() {
+        dst[i] = dst[i].wrapping_sub(row[i - bpp]);
+    }
+}
+
+/// Apply the `Up` filter (delta vs previous row) into `dst`.
+fn filter_up(row: &[u8], prev: &[u8], dst: &mut Vec<u8>) {
+    dst.clear();
+    dst.extend(row.iter().zip(prev).map(|(&a, &b)| a.wrapping_sub(b)));
+}
+
+fn sad(filtered: &[u8]) -> u64 {
+    // sum of absolute differences, treating bytes as signed — the
+    // standard PNG filter heuristic
+    filtered.iter().map(|&b| (b as i8).unsigned_abs() as u64).sum()
+}
+
+/// Encode an [`RgbImage`] to PNG bytes.
+pub fn encode_png(img: &RgbImage) -> Result<Vec<u8>> {
+    if img.width == 0 || img.height == 0 {
+        return Err(Error::Request("cannot encode empty image".into()));
+    }
+    if img.data.len() != 3 * img.width * img.height {
+        return Err(Error::Request("image buffer size mismatch".into()));
+    }
+
+    let bpp = 3usize;
+    let stride = bpp * img.width;
+
+    // build the filtered scanline stream
+    let mut raw = Vec::with_capacity((stride + 1) * img.height);
+    let zero_row = vec![0u8; stride];
+    let mut buf_sub = Vec::with_capacity(stride);
+    let mut buf_up = Vec::with_capacity(stride);
+    for y in 0..img.height {
+        let row = &img.data[y * stride..(y + 1) * stride];
+        let prev = if y == 0 { &zero_row[..] } else { &img.data[(y - 1) * stride..y * stride] };
+        filter_sub(row, bpp, &mut buf_sub);
+        filter_up(row, prev, &mut buf_up);
+        let s_none = sad(row);
+        let s_sub = sad(&buf_sub);
+        let s_up = sad(&buf_up);
+        if s_sub <= s_none && s_sub <= s_up {
+            raw.push(1u8);
+            raw.extend_from_slice(&buf_sub);
+        } else if s_up <= s_none {
+            raw.push(2u8);
+            raw.extend_from_slice(&buf_up);
+        } else {
+            raw.push(0u8);
+            raw.extend_from_slice(row);
+        }
+    }
+
+    // zlib-compress the stream
+    let mut enc = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::new(6));
+    enc.write_all(&raw)
+        .and_then(|_| enc.finish())
+        .map_err(|e| Error::io("png zlib compression", e))
+        .map(|compressed| {
+            let mut out = Vec::with_capacity(compressed.len() + 128);
+            out.extend_from_slice(&PNG_SIGNATURE);
+            // IHDR
+            let mut ihdr = Vec::with_capacity(13);
+            ihdr.extend_from_slice(&(img.width as u32).to_be_bytes());
+            ihdr.extend_from_slice(&(img.height as u32).to_be_bytes());
+            ihdr.push(8); // bit depth
+            ihdr.push(2); // color type: truecolor RGB
+            ihdr.push(0); // compression
+            ihdr.push(0); // filter method
+            ihdr.push(0); // no interlace
+            chunk(&mut out, b"IHDR", &ihdr);
+            chunk(&mut out, b"IDAT", &compressed);
+            chunk(&mut out, b"IEND", &[]);
+            out
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn decode_idat(png: &[u8]) -> Vec<u8> {
+        // walk chunks, collect IDAT, inflate
+        assert_eq!(&png[..8], &PNG_SIGNATURE);
+        let mut pos = 8;
+        let mut idat = Vec::new();
+        while pos < png.len() {
+            let len = u32::from_be_bytes(png[pos..pos + 4].try_into().unwrap()) as usize;
+            let kind = &png[pos + 4..pos + 8];
+            let data = &png[pos + 8..pos + 8 + len];
+            // CRC check
+            let mut h = crc32fast::Hasher::new();
+            h.update(kind);
+            h.update(data);
+            let crc = u32::from_be_bytes(png[pos + 8 + len..pos + 12 + len].try_into().unwrap());
+            assert_eq!(h.finalize(), crc, "bad CRC for {:?}", std::str::from_utf8(kind));
+            if kind == b"IDAT" {
+                idat.extend_from_slice(data);
+            }
+            pos += 12 + len;
+        }
+        let mut out = Vec::new();
+        flate2::read::ZlibDecoder::new(&idat[..]).read_to_end(&mut out).unwrap();
+        out
+    }
+
+    fn unfilter(raw: &[u8], width: usize, height: usize) -> Vec<u8> {
+        let stride = 3 * width;
+        let mut img = vec![0u8; stride * height];
+        for y in 0..height {
+            let ftype = raw[y * (stride + 1)];
+            let src = &raw[y * (stride + 1) + 1..(y + 1) * (stride + 1)];
+            for i in 0..stride {
+                let left = if i >= 3 { img[y * stride + i - 3] } else { 0 };
+                let up = if y > 0 { img[(y - 1) * stride + i] } else { 0 };
+                img[y * stride + i] = match ftype {
+                    0 => src[i],
+                    1 => src[i].wrapping_add(left),
+                    2 => src[i].wrapping_add(up),
+                    _ => panic!("unexpected filter {ftype}"),
+                };
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn round_trip_gradient() {
+        let mut img = RgbImage::new(16, 9);
+        for y in 0..9 {
+            for x in 0..16 {
+                img.set_pixel(x, y, [(x * 16) as u8, (y * 28) as u8, ((x + y) * 9) as u8]);
+            }
+        }
+        let png = encode_png(&img).unwrap();
+        let raw = decode_idat(&png);
+        assert_eq!(raw.len(), (3 * 16 + 1) * 9);
+        let decoded = unfilter(&raw, 16, 9);
+        assert_eq!(decoded, img.data);
+    }
+
+    #[test]
+    fn round_trip_noise() {
+        let mut rng = crate::rng::Rng::new(0);
+        let mut img = RgbImage::new(33, 17); // odd sizes
+        for b in img.data.iter_mut() {
+            *b = rng.next_below(256) as u8;
+        }
+        let png = encode_png(&img).unwrap();
+        assert_eq!(unfilter(&decode_idat(&png), 33, 17), img.data);
+    }
+
+    #[test]
+    fn header_fields() {
+        let img = RgbImage::new(640, 480);
+        let png = encode_png(&img).unwrap();
+        assert_eq!(&png[..8], &PNG_SIGNATURE);
+        let w = u32::from_be_bytes(png[16..20].try_into().unwrap());
+        let h = u32::from_be_bytes(png[20..24].try_into().unwrap());
+        assert_eq!((w, h), (640, 480));
+        assert_eq!(png[24], 8); // bit depth
+        assert_eq!(png[25], 2); // RGB
+        assert_eq!(&png[png.len() - 8..png.len() - 4], b"IEND");
+    }
+
+    #[test]
+    fn flat_image_compresses_well() {
+        let img = RgbImage::new(128, 128); // all black
+        let png = encode_png(&img).unwrap();
+        assert!(png.len() < 1200, "flat image should compress, got {}", png.len());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(encode_png(&RgbImage::new(0, 4)).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Binary PPM (P6) writer — zero-dependency fallback output format,
+//! convenient for quick inspection with any netpbm-aware viewer.
+
+use super::RgbImage;
+
+/// Encode an [`RgbImage`] as binary PPM bytes.
+pub fn encode_ppm(img: &RgbImage) -> Vec<u8> {
+    let header = format!("P6\n{} {}\n255\n", img.width, img.height);
+    let mut out = Vec::with_capacity(header.len() + img.data.len());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(&img.data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_and_payload() {
+        let mut img = RgbImage::new(2, 1);
+        img.set_pixel(0, 0, [1, 2, 3]);
+        img.set_pixel(1, 0, [4, 5, 6]);
+        let ppm = encode_ppm(&img);
+        assert!(ppm.starts_with(b"P6\n2 1\n255\n"));
+        assert_eq!(&ppm[ppm.len() - 6..], &[1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn size_formula() {
+        let img = RgbImage::new(10, 7);
+        let ppm = encode_ppm(&img);
+        assert_eq!(ppm.len(), "P6\n10 7\n255\n".len() + 3 * 10 * 7);
+    }
+}

@@ -1,0 +1,45 @@
+//! Minimal JSON substrate (no `serde` in the offline registry snapshot).
+//!
+//! Used for the artifact manifests written by `python/compile/aot.py`,
+//! the JSON-lines wire protocol of the TCP front-end, and run manifests
+//! written next to benchmark outputs.
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::{Number, Value};
+
+use crate::error::{Error, Result};
+
+/// Parse a JSON document from a string, mapping errors into [`Error`].
+pub fn from_str(s: &str) -> Result<Value> {
+    parse(s).map_err(|e| Error::Json(e.to_string()))
+}
+
+/// Read + parse a JSON file.
+pub fn from_file(path: &std::path::Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(format!("reading {}", path.display()), e))?;
+    from_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_nested() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": true, "d": null}, "e": "x\ny"}"#;
+        let v = from_str(src).unwrap();
+        let out = v.to_string();
+        let v2 = from_str(&out).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn file_error_has_path() {
+        let err = from_file(std::path::Path::new("/nonexistent/x.json")).unwrap_err();
+        assert!(err.to_string().contains("/nonexistent/x.json"));
+    }
+}

@@ -1,0 +1,57 @@
+//! # Selective Guidance serving stack
+//!
+//! Production reproduction of *"Selective Guidance: Are All the Denoising
+//! Steps of Guided Diffusion Important?"* (Golnari, Yao & He, 2023).
+//!
+//! The paper observes that classifier-free guidance (CFG) runs the
+//! denoising UNet **twice** per iteration (conditional + unconditional,
+//! combined by Eq. 1) and that the *later* iterations of the denoising
+//! loop tolerate dropping the unconditional pass — halving their cost.
+//! Optimizing the last 20% of 50 iterations saves ~8.2% of end-to-end
+//! latency with imperceptible quality change; the last 50% saves ~20.3%.
+//!
+//! This crate is the Layer-3 **rust coordinator** of a three-layer stack:
+//!
+//! * L1 — Pallas kernels (attention, fused GroupNorm+SiLU, Eq.-1 combine),
+//! * L2 — a JAX latent-diffusion model (UNet + text encoder + VAE),
+//! * L3 — this crate: request routing, dynamic batching, the denoising
+//!   loop with the per-iteration **selective-guidance decision**, PJRT
+//!   execution of the AOT artifacts, and metrics.
+//!
+//! Python runs once at build time (`make artifacts`); the request path is
+//! 100% rust. See `DESIGN.md` for the full architecture and the
+//! experiment index mapping every paper table/figure to a bench target.
+
+pub mod benchutil;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod error;
+pub mod guidance;
+pub mod image;
+pub mod json;
+pub mod metrics;
+pub mod prompts;
+pub mod quality;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod testutil;
+pub mod tokenizer;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// One-stop imports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::EngineConfig;
+    pub use crate::coordinator::{Coordinator, CoordinatorConfig};
+    pub use crate::engine::{Engine, GenerationOutput, GenerationRequest};
+    pub use crate::error::{Error, Result};
+    pub use crate::guidance::{GuidanceMode, SelectiveGuidancePolicy, WindowPosition, WindowSpec};
+    pub use crate::quality::{mse, psnr, ssim};
+    pub use crate::runtime::ModelStack;
+    pub use crate::scheduler::{Scheduler, SchedulerKind};
+}

@@ -1,0 +1,148 @@
+//! `sgd-serve` — the selective-guidance serving binary.
+//!
+//! ```text
+//! sgd-serve generate --prompt "A person holding a cat" [--steps 50]
+//!           [--guidance-scale 7.5] [--window 0.2] [--position last]
+//!           [--scheduler pndm] [--seed 0] [--out out.png]
+//!           [--artifacts artifacts/tiny]
+//! sgd-serve serve    [--bind 127.0.0.1:7878] [--workers 1]
+//!           [--max-batch 4] [--config configs/serve.toml]
+//! sgd-serve info     [--artifacts artifacts/tiny]
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use selective_guidance::cli::Cli;
+use selective_guidance::config::{EngineConfig, RunConfig};
+use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::error::{Error, Result};
+use selective_guidance::guidance::WindowSpec;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::server::Server;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let cli = Cli::parse()?;
+    match cli.command.as_deref() {
+        Some("generate") => cmd_generate(&cli),
+        Some("serve") => cmd_serve(&cli),
+        Some("info") => cmd_info(&cli),
+        Some(other) => Err(Error::Config(format!("unknown command {other:?}"))),
+        None => {
+            eprintln!("usage: sgd-serve <generate|serve|info> [options]");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(cli: &Cli) -> String {
+    cli.opt("artifacts")
+        .map(String::from)
+        .or_else(|| std::env::var("SG_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts/tiny".into())
+}
+
+fn window_from(cli: &Cli) -> Result<WindowSpec> {
+    let fraction: f64 = cli.opt_or("window", 0.0)?;
+    let position = cli.opt("position").unwrap_or("last");
+    let w = match position {
+        "last" => WindowSpec::last(fraction),
+        "first" => WindowSpec::first(fraction),
+        "middle" => WindowSpec::middle(fraction),
+        other => return Err(Error::Config(format!("unknown position {other:?}"))),
+    };
+    w.validate()?;
+    Ok(w)
+}
+
+fn cmd_generate(cli: &Cli) -> Result<()> {
+    let dir = artifacts_dir(cli);
+    eprintln!("loading artifacts from {dir} ...");
+    let stack = Arc::new(ModelStack::load(&dir)?);
+    let engine = Engine::new(stack, EngineConfig::default());
+
+    let prompt = cli
+        .opt("prompt")
+        .ok_or_else(|| Error::Config("--prompt is required".into()))?;
+    let req = GenerationRequest::new(prompt)
+        .steps(cli.opt_or("steps", 50)?)
+        .guidance_scale(cli.opt_or("guidance-scale", 7.5)?)
+        .selective(window_from(cli)?)
+        .scheduler(SchedulerKind::parse(cli.opt("scheduler").unwrap_or("pndm"))?)
+        .seed(cli.opt_or("seed", 0)?);
+
+    let out = engine.generate(&req)?;
+    println!(
+        "generated in {:.1} ms  (unet evals: {}, cond {:.1} ms, uncond {:.1} ms, combine {:.1} ms, scheduler {:.1} ms)",
+        out.wall_ms,
+        out.unet_evals,
+        out.breakdown.unet_cond_ms,
+        out.breakdown.unet_uncond_ms,
+        out.breakdown.combine_ms,
+        out.breakdown.scheduler_ms,
+    );
+    if let Some(img) = &out.image {
+        let path = cli.opt("out").unwrap_or("out.png");
+        img.save_png(Path::new(path))?;
+        println!("wrote {path} ({}x{})", img.width, img.height);
+    }
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let mut run_cfg = match cli.opt("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(b) = cli.opt("bind") {
+        run_cfg.server.bind = b.to_string();
+    }
+    run_cfg.server.workers = cli.opt_or("workers", run_cfg.server.workers)?;
+    run_cfg.server.max_batch = cli.opt_or("max-batch", run_cfg.server.max_batch)?;
+
+    let dir = cli
+        .opt("artifacts")
+        .map(String::from)
+        .or(run_cfg.artifacts_dir.clone())
+        .unwrap_or_else(|| artifacts_dir(cli));
+    eprintln!("loading artifacts from {dir} ...");
+    let stack = Arc::new(ModelStack::load(&dir)?);
+    let engine = Arc::new(Engine::new(stack, run_cfg.engine.clone()));
+    let coordinator = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            max_batch: run_cfg.server.max_batch,
+            workers: run_cfg.server.workers,
+            batch_wait: std::time::Duration::from_millis(run_cfg.server.batch_wait_ms),
+        },
+    );
+    let server = Server::start(coordinator, &run_cfg.server.bind)?;
+    println!("sgd-serve listening on {}", server.addr());
+    println!("protocol: JSON lines; try: {{\"op\":\"ping\"}}");
+    // serve until the listener thread exits (shutdown op or signal)
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let dir = artifacts_dir(cli);
+    let stack = ModelStack::load(&dir)?;
+    let m = stack.model();
+    println!("preset:       {}", m.preset);
+    println!("latent:       {}x{}x{}", m.latent_channels, m.latent_size, m.latent_size);
+    println!("image:        {0}x{0}", m.image_size);
+    println!("text:         seq_len={} dim={} vocab={}", m.seq_len, m.text_dim, m.vocab_size);
+    println!("batch sizes:  {:?}", m.batch_sizes);
+    println!("artifacts:    {}", stack.manifest().artifacts.len());
+    Ok(())
+}

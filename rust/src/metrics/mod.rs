@@ -1,0 +1,332 @@
+//! Serving metrics: timers, latency histograms, throughput counters, and
+//! the per-step breakdown used by EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Log-bucketed latency histogram (HDR-style): buckets grow geometrically
+/// from 1µs to ~17min, ~3.5% relative resolution. Fixed memory, O(1)
+/// record, mergeable.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+const BUCKETS_PER_OCTAVE: usize = 20;
+const NUM_OCTAVES: usize = 30; // 1µs .. ~17.9min
+const NUM_BUCKETS: usize = BUCKETS_PER_OCTAVE * NUM_OCTAVES;
+const BASE_NS: f64 = 1_000.0; // 1µs
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    fn bucket_index(ns: u64) -> usize {
+        if ns == 0 {
+            return 0;
+        }
+        let idx = ((ns as f64 / BASE_NS).log2() * BUCKETS_PER_OCTAVE as f64).floor();
+        idx.clamp(0.0, (NUM_BUCKETS - 1) as f64) as usize
+    }
+
+    fn bucket_upper_ns(idx: usize) -> f64 {
+        BASE_NS * 2f64.powf((idx + 1) as f64 / BUCKETS_PER_OCTAVE as f64)
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
+        self.buckets[Self::bucket_index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.record(Duration::from_secs_f64(ms / 1e3));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64 / 1e6
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_ns as f64 / 1e6
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ns as f64 / 1e6
+    }
+
+    /// Quantile in milliseconds (upper bucket bound — conservative).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_upper_ns(i) / 1e6;
+            }
+        }
+        self.max_ms()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p90={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count,
+            self.mean_ms(),
+            self.quantile_ms(0.5),
+            self.quantile_ms(0.9),
+            self.quantile_ms(0.99),
+            self.max_ms()
+        )
+    }
+}
+
+/// Throughput counter over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 / secs
+        }
+    }
+}
+
+/// Per-step timing breakdown of one generation — who costs what inside
+/// the denoising loop (feeds EXPERIMENTS.md §Perf and the microbench).
+#[derive(Debug, Clone, Default)]
+pub struct StepBreakdown {
+    /// UNet executions (conditional pass).
+    pub unet_cond_ms: f64,
+    /// UNet executions (unconditional pass; 0 on optimized steps).
+    pub unet_uncond_ms: f64,
+    /// Eq.-1 combine.
+    pub combine_ms: f64,
+    /// Scheduler update (host math).
+    pub scheduler_ms: f64,
+    /// Literal/host transfers & everything else.
+    pub overhead_ms: f64,
+}
+
+impl StepBreakdown {
+    pub fn total_ms(&self) -> f64 {
+        self.unet_cond_ms
+            + self.unet_uncond_ms
+            + self.combine_ms
+            + self.scheduler_ms
+            + self.overhead_ms
+    }
+
+    pub fn accumulate(&mut self, other: &StepBreakdown) {
+        self.unet_cond_ms += other.unet_cond_ms;
+        self.unet_uncond_ms += other.unet_uncond_ms;
+        self.combine_ms += other.combine_ms;
+        self.scheduler_ms += other.scheduler_ms;
+        self.overhead_ms += other.overhead_ms;
+    }
+}
+
+/// Basic mean/std/percentile summary of raw f64 samples (bench harness).
+#[derive(Debug, Clone)]
+pub struct SampleStats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub max: f64,
+}
+
+impl SampleStats {
+    pub fn from(samples: &[f64]) -> SampleStats {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| sorted[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        SampleStats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: pct(0.5),
+            p90: pct(0.9),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_ms(0.5);
+        let p90 = h.quantile_ms(0.9);
+        let p99 = h.quantile_ms(0.99);
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        // ~3.5% bucket resolution
+        assert!((p50 - 0.5).abs() / 0.5 < 0.1, "p50={p50}");
+        assert!((p90 - 0.9).abs() / 0.9 < 0.1, "p90={p90}");
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(20));
+        assert!((h.mean_ms() - 15.0).abs() < 1e-9);
+        assert!((h.min_ms() - 10.0).abs() < 1e-6);
+        assert!((h.max_ms() - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_millis(1));
+        b.record(Duration::from_millis(100));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max_ms() >= 100.0);
+        assert!(a.min_ms() <= 1.01);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn breakdown_totals() {
+        let mut b = StepBreakdown::default();
+        b.unet_cond_ms = 2.0;
+        b.unet_uncond_ms = 2.0;
+        b.combine_ms = 0.1;
+        b.scheduler_ms = 0.05;
+        b.overhead_ms = 0.2;
+        assert!((b.total_ms() - 4.35).abs() < 1e-12);
+        let mut c = StepBreakdown::default();
+        c.accumulate(&b);
+        c.accumulate(&b);
+        assert!((c.total_ms() - 8.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_stats() {
+        let s = SampleStats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(5);
+        t.add(3);
+        assert_eq!(t.items(), 8);
+        assert!(t.per_second() > 0.0);
+    }
+}

@@ -1,0 +1,362 @@
+//! FID-lite: Fréchet distance between image-set feature distributions.
+//!
+//! The paper evaluates quality pair-wise with humans; a distribution-
+//! level metric complements that when comparing *sets* of generations
+//! (e.g. 60 baseline images vs 60 optimized images). True FID uses an
+//! InceptionV3 embedding, unavailable offline — we substitute a
+//! hand-crafted patch-statistics feature (per-patch luma mean/std over a
+//! 4x4 grid + global gradient energy, 33 dims), fit Gaussians and compute
+//! the exact Fréchet distance
+//!
+//! ```text
+//! d² = ‖μ₁−μ₂‖² + tr(Σ₁ + Σ₂ − 2 (Σ₁^{1/2} Σ₂ Σ₁^{1/2})^{1/2})
+//! ```
+//!
+//! with a Jacobi symmetric eigensolver (no linalg crates offline). The
+//! *ranking* behaviour (more distortion → larger distance) is what the
+//! benches rely on, mirroring how FID is used in the diffusion
+//! literature.
+
+use crate::image::RgbImage;
+
+const GRID: usize = 4;
+/// Feature dimension: GRID*GRID * (mean, std) + gradient energy.
+pub const FEATURE_DIM: usize = GRID * GRID * 2 + 1;
+
+/// Per-image feature vector (patch statistics).
+pub fn image_features(img: &RgbImage) -> Vec<f64> {
+    let luma = img.luma();
+    let (w, h) = (img.width, img.height);
+    let mut feat = Vec::with_capacity(FEATURE_DIM);
+    let (pw, ph) = (w.div_ceil(GRID), h.div_ceil(GRID));
+    for gy in 0..GRID {
+        for gx in 0..GRID {
+            let (x0, y0) = (gx * pw, gy * ph);
+            let (x1, y1) = (((gx + 1) * pw).min(w), ((gy + 1) * ph).min(h));
+            let mut n = 0.0f64;
+            let (mut s, mut ss) = (0.0f64, 0.0f64);
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    let v = luma[y * w + x] as f64 / 255.0;
+                    s += v;
+                    ss += v * v;
+                    n += 1.0;
+                }
+            }
+            let mean = if n > 0.0 { s / n } else { 0.0 };
+            let var = if n > 0.0 { (ss / n - mean * mean).max(0.0) } else { 0.0 };
+            feat.push(mean);
+            feat.push(var.sqrt());
+        }
+    }
+    // global gradient energy (detail proxy)
+    let mut ge = 0.0f64;
+    for y in 0..h.saturating_sub(1) {
+        for x in 0..w.saturating_sub(1) {
+            let dx = (luma[y * w + x + 1] - luma[y * w + x]) as f64 / 255.0;
+            let dy = (luma[(y + 1) * w + x] - luma[y * w + x]) as f64 / 255.0;
+            ge += dx * dx + dy * dy;
+        }
+    }
+    feat.push((ge / ((w * h) as f64)).sqrt());
+    debug_assert_eq!(feat.len(), FEATURE_DIM);
+    feat
+}
+
+/// Mean + covariance of a feature set.
+#[derive(Debug, Clone)]
+pub struct GaussianStats {
+    pub mean: Vec<f64>,
+    /// Row-major d x d covariance.
+    pub cov: Vec<f64>,
+    pub dim: usize,
+}
+
+impl GaussianStats {
+    /// Fit from feature vectors (rows). Uses the biased (1/n) estimator,
+    /// matching the standard FID implementation's `np.cov(..., rowvar=False)`
+    /// up to the n/(n-1) factor which cancels in comparisons.
+    pub fn fit(features: &[Vec<f64>]) -> GaussianStats {
+        assert!(!features.is_empty());
+        let d = features[0].len();
+        let n = features.len() as f64;
+        let mut mean = vec![0.0; d];
+        for f in features {
+            assert_eq!(f.len(), d);
+            for (m, &v) in mean.iter_mut().zip(f) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n;
+        }
+        let mut cov = vec![0.0; d * d];
+        for f in features {
+            for i in 0..d {
+                let di = f[i] - mean[i];
+                for j in i..d {
+                    cov[i * d + j] += di * (f[j] - mean[j]);
+                }
+            }
+        }
+        for i in 0..d {
+            for j in i..d {
+                let v = cov[i * d + j] / n;
+                cov[i * d + j] = v;
+                cov[j * d + i] = v;
+            }
+        }
+        GaussianStats { mean, cov, dim: d }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// small symmetric linear algebra (Jacobi)
+// ---------------------------------------------------------------------------
+
+fn matmul(a: &[f64], b: &[f64], d: usize) -> Vec<f64> {
+    let mut out = vec![0.0; d * d];
+    for i in 0..d {
+        for k in 0..d {
+            let aik = a[i * d + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                out[i * d + j] += aik * b[k * d + j];
+            }
+        }
+    }
+    out
+}
+
+/// Jacobi eigendecomposition of a symmetric matrix. Returns
+/// (eigenvalues, row-major eigenvector matrix V with rows = eigenvectors).
+pub fn sym_eigen(mat: &[f64], d: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(mat.len(), d * d);
+    let mut a = mat.to_vec();
+    let mut v = vec![0.0; d * d];
+    for i in 0..d {
+        v[i * d + i] = 1.0;
+    }
+    for _sweep in 0..100 {
+        // largest off-diagonal magnitude
+        let mut off = 0.0f64;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off = off.max(a[i * d + j].abs());
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = a[p * d + q];
+                if apq.abs() < 1e-14 {
+                    continue;
+                }
+                let app = a[p * d + p];
+                let aqq = a[q * d + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of a
+                for k in 0..d {
+                    let akp = a[k * d + p];
+                    let akq = a[k * d + q];
+                    a[k * d + p] = c * akp - s * akq;
+                    a[k * d + q] = s * akp + c * akq;
+                }
+                for k in 0..d {
+                    let apk = a[p * d + k];
+                    let aqk = a[q * d + k];
+                    a[p * d + k] = c * apk - s * aqk;
+                    a[q * d + k] = s * apk + c * aqk;
+                }
+                // accumulate eigenvectors (rows of v)
+                for k in 0..d {
+                    let vpk = v[p * d + k];
+                    let vqk = v[q * d + k];
+                    v[p * d + k] = c * vpk - s * vqk;
+                    v[q * d + k] = s * vpk + c * vqk;
+                }
+            }
+        }
+    }
+    let eig = (0..d).map(|i| a[i * d + i]).collect();
+    (eig, v)
+}
+
+/// Symmetric PSD matrix square root via eigendecomposition.
+pub fn sym_sqrt(mat: &[f64], d: usize) -> Vec<f64> {
+    let (eig, v) = sym_eigen(mat, d);
+    // sqrt = V^T diag(sqrt(max(eig,0))) V   (rows of V are eigenvectors)
+    let mut out = vec![0.0; d * d];
+    for (k, &lam) in eig.iter().enumerate() {
+        let s = lam.max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..d {
+            let vik = v[k * d + i];
+            for j in 0..d {
+                out[i * d + j] += s * vik * v[k * d + j];
+            }
+        }
+    }
+    out
+}
+
+/// Fréchet distance squared between two Gaussian fits.
+pub fn frechet_distance(a: &GaussianStats, b: &GaussianStats) -> f64 {
+    assert_eq!(a.dim, b.dim);
+    let d = a.dim;
+    let mean_term: f64 = a
+        .mean
+        .iter()
+        .zip(&b.mean)
+        .map(|(&x, &y)| (x - y) * (x - y))
+        .sum();
+    // tr(S1 + S2 - 2 sqrt(S1^{1/2} S2 S1^{1/2}))
+    let s1_sqrt = sym_sqrt(&a.cov, d);
+    let inner = matmul(&matmul(&s1_sqrt, &b.cov, d), &s1_sqrt, d);
+    let (eig, _) = sym_eigen(&inner, d);
+    let tr_sqrt: f64 = eig.iter().map(|&l| l.max(0.0).sqrt()).sum();
+    let tr1: f64 = (0..d).map(|i| a.cov[i * d + i]).sum();
+    let tr2: f64 = (0..d).map(|i| b.cov[i * d + i]).sum();
+    (mean_term + tr1 + tr2 - 2.0 * tr_sqrt).max(0.0)
+}
+
+/// Convenience: FID-lite between two image sets.
+pub fn fid_lite(set_a: &[RgbImage], set_b: &[RgbImage]) -> f64 {
+    let fa: Vec<Vec<f64>> = set_a.iter().map(image_features).collect();
+    let fb: Vec<Vec<f64>> = set_b.iter().map(image_features).collect();
+    frechet_distance(&GaussianStats::fit(&fa), &GaussianStats::fit(&fb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn noise_img(seed: u64, w: usize, h: usize) -> RgbImage {
+        let mut rng = Rng::new(seed);
+        let mut img = RgbImage::new(w, h);
+        for b in img.data.iter_mut() {
+            *b = rng.next_below(256) as u8;
+        }
+        img
+    }
+
+    #[test]
+    fn jacobi_diagonal_matrix() {
+        let m = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        let (mut eig, _) = sym_eigen(&m, 3);
+        eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((eig[0] - 1.0).abs() < 1e-10);
+        assert!((eig[1] - 2.0).abs() < 1e-10);
+        assert!((eig[2] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1, 3
+        let m = vec![2.0, 1.0, 1.0, 2.0];
+        let (mut eig, v) = sym_eigen(&m, 2);
+        eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((eig[0] - 1.0).abs() < 1e-10);
+        assert!((eig[1] - 3.0).abs() < 1e-10);
+        // eigenvectors orthonormal
+        let dot = v[0] * v[2] + v[1] * v[3];
+        assert!(dot.abs() < 1e-10);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        // random symmetric PSD: A = B B^T
+        let mut rng = Rng::new(1);
+        let d = 5;
+        let b: Vec<f64> = (0..d * d).map(|_| rng.next_normal()).collect();
+        let mut a = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                for k in 0..d {
+                    a[i * d + j] += b[i * d + k] * b[j * d + k];
+                }
+            }
+        }
+        let r = sym_sqrt(&a, d);
+        let rr = matmul(&r, &r, d);
+        for (x, y) in rr.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn frechet_identical_sets_zero() {
+        let imgs: Vec<RgbImage> = (0..12).map(|i| noise_img(i, 32, 32)).collect();
+        let d = fid_lite(&imgs, &imgs);
+        assert!(d < 1e-9, "identical sets must have ~0 distance, got {d}");
+    }
+
+    #[test]
+    fn frechet_closed_form_univariate() {
+        // d=1 Gaussians: FID = (m1-m2)^2 + (s1-s2)^2
+        let a = GaussianStats { mean: vec![1.0], cov: vec![4.0], dim: 1 };
+        let b = GaussianStats { mean: vec![3.0], cov: vec![9.0], dim: 1 };
+        let d = frechet_distance(&a, &b);
+        let expect = (1.0f64 - 3.0).powi(2) + (2.0f64 - 3.0).powi(2);
+        assert!((d - expect).abs() < 1e-9, "{d} vs {expect}");
+    }
+
+    #[test]
+    fn frechet_symmetric() {
+        let sa: Vec<Vec<f64>> = (0..20).map(|i| image_features(&noise_img(i, 16, 16))).collect();
+        let sb: Vec<Vec<f64>> =
+            (100..120).map(|i| image_features(&noise_img(i, 16, 16))).collect();
+        let ga = GaussianStats::fit(&sa);
+        let gb = GaussianStats::fit(&sb);
+        let d1 = frechet_distance(&ga, &gb);
+        let d2 = frechet_distance(&gb, &ga);
+        assert!((d1 - d2).abs() < 1e-6 * (1.0 + d1.abs()), "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn frechet_monotone_in_distortion() {
+        // distorting one set more must increase the distance
+        let base: Vec<RgbImage> = (0..16).map(|i| noise_img(i, 32, 32)).collect();
+        let distort = |amount: f64, seed_off: u64| -> Vec<RgbImage> {
+            base.iter()
+                .enumerate()
+                .map(|(i, img)| {
+                    let mut rng = Rng::new(1000 + seed_off + i as u64);
+                    let mut out = img.clone();
+                    for b in out.data.iter_mut() {
+                        let v = *b as f64 + rng.next_normal() * amount;
+                        *b = v.clamp(0.0, 255.0) as u8;
+                    }
+                    out
+                })
+                .collect()
+        };
+        let d_small = fid_lite(&base, &distort(5.0, 0));
+        let d_big = fid_lite(&base, &distort(60.0, 1));
+        assert!(
+            d_big > d_small,
+            "bigger distortion must raise FID-lite: {d_small} vs {d_big}"
+        );
+    }
+
+    #[test]
+    fn features_dimension_and_finiteness() {
+        let f = image_features(&noise_img(0, 33, 17)); // non-divisible dims
+        assert_eq!(f.len(), FEATURE_DIM);
+        assert!(f.iter().all(|v| v.is_finite()));
+        // all means in [0, 1]
+        for i in (0..32).step_by(2) {
+            assert!((0.0..=1.0).contains(&f[i]));
+        }
+    }
+}

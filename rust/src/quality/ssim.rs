@@ -1,0 +1,126 @@
+//! SSIM (structural similarity) on luma, 8x8 sliding windows.
+//!
+//! Standard Wang et al. 2004 formulation with C1/C2 stabilizers for an
+//! 8-bit dynamic range, uniform (box) windows of 8x8 with stride 1, mean
+//! over all windows. For the small images this stack generates, the box
+//! window matches what torchmetrics' `ssim(..., gaussian_kernel=False)`
+//! computes.
+
+const C1: f64 = 6.5025; // (0.01 * 255)^2
+const C2: f64 = 58.5225; // (0.03 * 255)^2
+const WIN: usize = 8;
+
+/// SSIM over luma planes (values in [0, 255]); `w` x `h` row-major.
+///
+/// Falls back to a single full-image window when the image is smaller
+/// than 8x8.
+pub fn ssim_luma(a: &[f32], b: &[f32], w: usize, h: usize) -> f64 {
+    assert_eq!(a.len(), w * h, "ssim: plane size mismatch");
+    assert_eq!(b.len(), w * h, "ssim: plane size mismatch");
+    let win_w = WIN.min(w);
+    let win_h = WIN.min(h);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for y0 in 0..=(h - win_h) {
+        for x0 in 0..=(w - win_w) {
+            total += window_ssim(a, b, w, x0, y0, win_w, win_h);
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+fn window_ssim(a: &[f32], b: &[f32], stride: usize, x0: usize, y0: usize, ww: usize, wh: usize) -> f64 {
+    let n = (ww * wh) as f64;
+    let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0.0f64, 0.0, 0.0, 0.0, 0.0);
+    for y in y0..y0 + wh {
+        let row = y * stride;
+        for x in x0..x0 + ww {
+            let va = a[row + x] as f64;
+            let vb = b[row + x] as f64;
+            sa += va;
+            sb += vb;
+            saa += va * va;
+            sbb += vb * vb;
+            sab += va * vb;
+        }
+    }
+    let mu_a = sa / n;
+    let mu_b = sb / n;
+    let var_a = (saa / n - mu_a * mu_a).max(0.0);
+    let var_b = (sbb / n - mu_b * mu_b).max(0.0);
+    let cov = sab / n - mu_a * mu_b;
+    ((2.0 * mu_a * mu_b + C1) * (2.0 * cov + C2))
+        / ((mu_a * mu_a + mu_b * mu_b + C1) * (var_a + var_b + C2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn noise_plane(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.next_below(256) as f32).collect()
+    }
+
+    #[test]
+    fn identical_images_ssim_one() {
+        let a = noise_plane(0, 32 * 32);
+        assert!((ssim_luma(&a, &a, 32, 32) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_noise_low_ssim() {
+        let a = noise_plane(1, 32 * 32);
+        let b = noise_plane(2, 32 * 32);
+        let s = ssim_luma(&a, &b, 32, 32);
+        assert!(s < 0.2, "independent noise should have low SSIM, got {s}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = noise_plane(3, 16 * 16);
+        let b: Vec<f32> = a.iter().map(|v| (v * 0.9 + 10.0).min(255.0)).collect();
+        let s1 = ssim_luma(&a, &b, 16, 16);
+        let s2 = ssim_luma(&b, &a, 16, 16);
+        assert!((s1 - s2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded() {
+        for seed in 0..5 {
+            let a = noise_plane(seed, 16 * 16);
+            let b = noise_plane(seed + 100, 16 * 16);
+            let s = ssim_luma(&a, &b, 16, 16);
+            assert!((-1.0..=1.0).contains(&s), "{s}");
+        }
+    }
+
+    #[test]
+    fn degrades_with_noise_amplitude() {
+        let a = noise_plane(4, 32 * 32);
+        let mut r = Rng::new(5);
+        let small: Vec<f32> = a.iter().map(|v| (v + r.next_normal() as f32 * 2.0).clamp(0.0, 255.0)).collect();
+        let big: Vec<f32> = a.iter().map(|v| (v + r.next_normal() as f32 * 40.0).clamp(0.0, 255.0)).collect();
+        let s_small = ssim_luma(&a, &small, 32, 32);
+        let s_big = ssim_luma(&a, &big, 32, 32);
+        assert!(s_small > s_big, "{s_small} vs {s_big}");
+        assert!(s_small > 0.9);
+    }
+
+    #[test]
+    fn tiny_image_single_window() {
+        let a = vec![100.0f32; 4 * 4];
+        let b = vec![110.0f32; 4 * 4];
+        let s = ssim_luma(&a, &b, 4, 4);
+        assert!(s > 0.0 && s < 1.0);
+    }
+
+    #[test]
+    fn luminance_shift_penalized() {
+        let a = noise_plane(6, 16 * 16);
+        let b: Vec<f32> = a.iter().map(|v| (v + 60.0).min(255.0)).collect();
+        assert!(ssim_luma(&a, &b, 16, 16) < 0.95);
+    }
+}

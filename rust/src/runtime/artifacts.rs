@@ -1,0 +1,348 @@
+//! Artifact manifest model — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+
+/// Element type of a tensor boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Artifact(format!("unsupported dtype {other:?}"))),
+        }
+    }
+}
+
+/// Shape+dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Artifact("tensor spec missing name".into()))?
+            .to_string();
+        let dtype = DType::parse(
+            v.get("dtype")
+                .and_then(Value::as_str)
+                .ok_or_else(|| Error::Artifact(format!("tensor {name}: missing dtype")))?,
+        )?;
+        let shape = v
+            .get("shape")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Artifact(format!("tensor {name}: missing shape")))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| Error::Artifact(format!("tensor {name}: bad dim")))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(TensorSpec { name, dtype, shape })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo_file: String,
+    pub params_file: Option<String>,
+    pub param_count: usize,
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    fn from_json(name: &str, v: &Value) -> Result<Self> {
+        let hlo_file = v
+            .get("hlo")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Artifact(format!("{name}: missing hlo path")))?
+            .to_string();
+        let params_file = match v.get("params") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(Value::Null) | None => None,
+            Some(other) => {
+                return Err(Error::Artifact(format!("{name}: bad params field {other}")))
+            }
+        };
+        let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing {key}")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: name.to_string(),
+            hlo_file,
+            params_file,
+            param_count: v.get("param_count").and_then(Value::as_usize).unwrap_or(0),
+            batch: v.get("batch").and_then(Value::as_usize).unwrap_or(1),
+            inputs: parse_specs("inputs")?,
+            outputs: parse_specs("outputs")?,
+        })
+    }
+}
+
+/// Model-level metadata shared by all artifacts of a preset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub preset: String,
+    pub latent_channels: usize,
+    pub latent_size: usize,
+    pub image_size: usize,
+    pub seq_len: usize,
+    pub text_dim: usize,
+    pub vocab_size: usize,
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ModelMeta {
+    /// Elements in one latent sample (C*H*W).
+    pub fn latent_elems(&self) -> usize {
+        self.latent_channels * self.latent_size * self.latent_size
+    }
+
+    /// Elements in one context tensor (S*D).
+    pub fn ctx_elems(&self) -> usize {
+        self.seq_len * self.text_dim
+    }
+
+    /// Elements in one decoded image (3*H*W).
+    pub fn image_elems(&self) -> usize {
+        3 * self.image_size * self.image_size
+    }
+}
+
+/// The parsed manifest for one preset directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = json::from_file(&dir.join("manifest.json"))?;
+        Self::from_json(dir, &v)
+    }
+
+    pub fn from_json(dir: &Path, v: &Value) -> Result<Manifest> {
+        let version = v.get("version").and_then(Value::as_i64).unwrap_or(0);
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported (want 1)"
+            )));
+        }
+        let preset = v
+            .get("preset")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Artifact("manifest missing preset".into()))?
+            .to_string();
+        let m = v
+            .get("model")
+            .ok_or_else(|| Error::Artifact("manifest missing model".into()))?;
+        let req = |key: &str| -> Result<usize> {
+            m.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| Error::Artifact(format!("model missing {key}")))
+        };
+        let batch_sizes = m
+            .get("batch_sizes")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Artifact("model missing batch_sizes".into()))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| Error::Artifact("bad batch size".into())))
+            .collect::<Result<Vec<usize>>>()?;
+        if batch_sizes.is_empty() || !batch_sizes.contains(&1) {
+            return Err(Error::Artifact("batch_sizes must contain 1".into()));
+        }
+        let model = ModelMeta {
+            preset,
+            latent_channels: req("latent_channels")?,
+            latent_size: req("latent_size")?,
+            image_size: req("image_size")?,
+            seq_len: req("seq_len")?,
+            text_dim: req("text_dim")?,
+            vocab_size: req("vocab_size")?,
+            batch_sizes,
+        };
+        let arts_json = v
+            .get("artifacts")
+            .ok_or_else(|| Error::Artifact("manifest missing artifacts".into()))?;
+        let mut artifacts = BTreeMap::new();
+        if let Value::Obj(map) = arts_json {
+            for (name, av) in map {
+                artifacts.insert(name.clone(), ArtifactMeta::from_json(name, av)?);
+            }
+        } else {
+            return Err(Error::Artifact("artifacts must be an object".into()));
+        }
+        // required set
+        for b in &model.batch_sizes {
+            for prefix in ["unet_b", "cfg_combine_b"] {
+                let key = format!("{prefix}{b}");
+                if !artifacts.contains_key(&key) {
+                    return Err(Error::Artifact(format!("manifest missing artifact {key}")));
+                }
+            }
+        }
+        for key in ["text_encoder", "vae_decoder"] {
+            if !artifacts.contains_key(key) {
+                return Err(Error::Artifact(format!("manifest missing artifact {key}")));
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), model, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))
+    }
+
+    /// Load a params blob (raw little-endian f32) for an artifact.
+    pub fn load_params(&self, meta: &ArtifactMeta) -> Result<Option<Vec<f32>>> {
+        let Some(file) = &meta.params_file else {
+            return Ok(None);
+        };
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::io(format!("reading {}", path.display()), e))?;
+        if bytes.len() != 4 * meta.param_count {
+            return Err(Error::Artifact(format!(
+                "{}: params file has {} bytes, expected {}",
+                meta.name,
+                bytes.len(),
+                4 * meta.param_count
+            )));
+        }
+        let mut out = Vec::with_capacity(meta.param_count);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(Some(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_manifest_json() -> String {
+        // smallest manifest passing validation
+        let art = |b: usize, kind: &str| {
+            format!(
+                r#""{kind}_b{b}": {{"hlo": "{kind}_b{b}.hlo.txt", "params": null,
+                   "param_count": 0, "batch": {b},
+                   "inputs": [{{"name": "x", "dtype": "f32", "shape": [{b}, 4]}}],
+                   "outputs": [{{"name": "y", "dtype": "f32", "shape": [{b}, 4]}}]}}"#
+            )
+        };
+        format!(
+            r#"{{"version": 1, "preset": "t",
+               "model": {{"latent_channels": 4, "latent_size": 8, "image_size": 32,
+                          "seq_len": 8, "text_dim": 32, "vocab_size": 1024,
+                          "batch_sizes": [1]}},
+               "artifacts": {{
+                 {u}, {c},
+                 "text_encoder": {{"hlo": "te.hlo.txt", "params": "te.bin",
+                   "param_count": 2, "batch": 1,
+                   "inputs": [{{"name": "ids", "dtype": "i32", "shape": [1, 8]}}],
+                   "outputs": [{{"name": "ctx", "dtype": "f32", "shape": [1, 8, 32]}}]}},
+                 "vae_decoder": {{"hlo": "vae.hlo.txt", "params": null,
+                   "param_count": 0, "batch": 1,
+                   "inputs": [{{"name": "l", "dtype": "f32", "shape": [1, 4, 8, 8]}}],
+                   "outputs": [{{"name": "img", "dtype": "f32", "shape": [1, 3, 32, 32]}}]}}
+               }}}}"#,
+            u = art(1, "unet"),
+            c = art(1, "cfg_combine"),
+        )
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let v = crate::json::from_str(&minimal_manifest_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &v).unwrap();
+        assert_eq!(m.model.preset, "t");
+        assert_eq!(m.model.latent_elems(), 4 * 8 * 8);
+        assert_eq!(m.model.ctx_elems(), 8 * 32);
+        assert_eq!(m.model.image_elems(), 3 * 32 * 32);
+        let te = m.artifact("text_encoder").unwrap();
+        assert_eq!(te.params_file.as_deref(), Some("te.bin"));
+        assert_eq!(te.inputs[0].dtype, DType::I32);
+        assert_eq!(te.outputs[0].elements(), 8 * 32);
+    }
+
+    #[test]
+    fn missing_required_artifact_rejected() {
+        let json = minimal_manifest_json().replace("\"vae_decoder\"", "\"vae_dec\"");
+        let v = crate::json::from_str(&json).unwrap();
+        let err = Manifest::from_json(Path::new("/tmp/x"), &v).unwrap_err();
+        assert!(err.to_string().contains("vae_decoder"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let json = minimal_manifest_json().replace("\"version\": 1", "\"version\": 9");
+        let v = crate::json::from_str(&json).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp/x"), &v).is_err());
+    }
+
+    #[test]
+    fn batch_sizes_must_include_one() {
+        let json = minimal_manifest_json().replace("\"batch_sizes\": [1]", "\"batch_sizes\": [2]");
+        let v = crate::json::from_str(&json).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp/x"), &v).is_err());
+    }
+
+    #[test]
+    fn params_size_validated() {
+        let dir = std::env::temp_dir().join("sg_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("te.bin"), [0u8; 8]).unwrap(); // 2 f32s
+        let v = crate::json::from_str(&minimal_manifest_json()).unwrap();
+        let m = Manifest::from_json(&dir, &v).unwrap();
+        let te = m.artifact("text_encoder").unwrap().clone();
+        let params = m.load_params(&te).unwrap().unwrap();
+        assert_eq!(params, vec![0.0, 0.0]);
+        // wrong size
+        std::fs::write(dir.join("te.bin"), [0u8; 12]).unwrap();
+        assert!(m.load_params(&te).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = Path::new("artifacts/tiny");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert_eq!(m.model.preset, "tiny");
+            assert!(m.artifacts.len() >= 8);
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! PJRT runtime: load the AOT artifacts and execute them on the hot path.
+//!
+//! The interchange contract (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): HLO **text** parsed via
+//! `HloModuleProto::from_text_file`, compiled once per process with the
+//! CPU PJRT client, executed via device buffers. Weights are loaded from
+//! the `.params.bin` blobs and kept **resident on device** so the steady
+//! state moves only latents/contexts across the host boundary.
+
+mod artifacts;
+
+pub use artifacts::{ArtifactMeta, DType, Manifest, ModelMeta, TensorSpec};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// A compiled computation plus its resident parameter buffer.
+struct LoadedArtifact {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Device-resident flat parameter vector (None for param-free kernels
+    /// like the CFG combine).
+    params: Option<xla::PjRtBuffer>,
+}
+
+impl LoadedArtifact {
+    /// Execute with host f32 inputs (params prepended automatically).
+    /// Returns the flattened f32 output.
+    fn run_f32(&self, client: &xla::PjRtClient, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let expected = self.meta.inputs.len() - usize::from(self.params.is_some());
+        debug_assert_eq!(
+            inputs.len(),
+            expected,
+            "{}: wrong input count",
+            self.meta.name
+        );
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len() + 1);
+        for (data, dims) in inputs {
+            bufs.push(client.buffer_from_host_buffer(data, dims, None)?);
+        }
+        self.execute_buffers(&bufs)
+    }
+
+    fn execute_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        // assemble: params first (runtime contract), then the inputs
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len() + 1);
+        if let Some(p) = &self.params {
+            args.push(p);
+        }
+        args.extend(inputs.iter());
+        let out = self.exe.execute_b(&args)?;
+        let literal = out[0][0].to_literal_sync()?;
+        let inner = literal.to_tuple1()?; // lowered with return_tuple=True
+        Ok(inner.to_vec::<f32>()?)
+    }
+
+    /// Execute with one i32 input (text encoder).
+    fn run_i32(&self, client: &xla::PjRtClient, data: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        let buf = client.buffer_from_host_buffer(data, dims, None)?;
+        self.execute_buffers(&[buf])
+    }
+}
+
+/// The full set of compiled executables for one model preset, ready to
+/// serve. Cheap to share behind `Arc` across worker threads.
+pub struct ModelStack {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// UNet executables keyed by batch size.
+    unet: BTreeMap<usize, LoadedArtifact>,
+    /// CFG-combine executables keyed by batch size.
+    combine: BTreeMap<usize, LoadedArtifact>,
+    text_encoder: LoadedArtifact,
+    vae_decoder: LoadedArtifact,
+    /// Cache of the unconditional context (encode once, reuse forever).
+    uncond_ctx: Mutex<Option<Vec<f32>>>,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe for compilation and
+// execution (XLA's CPU PjRtClient serializes internally where needed);
+// our artifacts and resident buffers are immutable after load. The `xla`
+// crate only wraps raw pointers without declaring Send/Sync, so we assert
+// it here — every mutation after `load()` goes through `Mutex`es.
+unsafe impl Send for ModelStack {}
+unsafe impl Sync for ModelStack {}
+
+impl ModelStack {
+    /// Load every artifact of a preset directory and compile it on the
+    /// CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelStack> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let load_one = |name: &str| -> Result<LoadedArtifact> {
+            let meta = manifest.artifact(name)?.clone();
+            let hlo_path = dir.join(&meta.hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path
+                    .to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let params = match manifest.load_params(&meta)? {
+                Some(p) => Some(client.buffer_from_host_buffer(&p, &[p.len()], None)?),
+                None => None,
+            };
+            Ok(LoadedArtifact { meta, exe, params })
+        };
+
+        let mut unet = BTreeMap::new();
+        let mut combine = BTreeMap::new();
+        for &b in &manifest.model.batch_sizes {
+            unet.insert(b, load_one(&format!("unet_b{b}"))?);
+            combine.insert(b, load_one(&format!("cfg_combine_b{b}"))?);
+        }
+        let text_encoder = load_one("text_encoder")?;
+        let vae_decoder = load_one("vae_decoder")?;
+
+        Ok(ModelStack {
+            client,
+            manifest,
+            unet,
+            combine,
+            text_encoder,
+            vae_decoder,
+            uncond_ctx: Mutex::new(None),
+        })
+    }
+
+    pub fn model(&self) -> &ModelMeta {
+        &self.manifest.model
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Batch sizes with compiled UNet executables, descending.
+    pub fn batch_sizes_desc(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.unet.keys().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    /// Decompose a logical batch of `n` samples into available compiled
+    /// bucket sizes (greedy, largest first). Always succeeds because
+    /// batch size 1 is mandatory.
+    pub fn bucketize(&self, n: usize) -> Vec<usize> {
+        let sizes = self.batch_sizes_desc();
+        let mut rem = n;
+        let mut out = Vec::new();
+        while rem > 0 {
+            let b = sizes.iter().copied().find(|&b| b <= rem).unwrap_or(1);
+            out.push(b);
+            rem -= b;
+        }
+        out
+    }
+
+    /// Encode a prompt's token ids (shape [1, seq_len]) to a context
+    /// tensor (flattened [1, S, D]).
+    pub fn encode_text(&self, ids: &[i32]) -> Result<Vec<f32>> {
+        let s = self.manifest.model.seq_len;
+        if ids.len() != s {
+            return Err(Error::Request(format!(
+                "token ids length {} != seq_len {}",
+                ids.len(),
+                s
+            )));
+        }
+        self.text_encoder.run_i32(&self.client, ids, &[1, s])
+    }
+
+    /// The cached unconditional context (empty prompt).
+    pub fn uncond_ctx(&self) -> Result<Vec<f32>> {
+        let mut guard = self.uncond_ctx.lock().unwrap();
+        if let Some(ctx) = guard.as_ref() {
+            return Ok(ctx.clone());
+        }
+        let tok = crate::tokenizer::Tokenizer::new(
+            self.manifest.model.vocab_size,
+            self.manifest.model.seq_len,
+        );
+        let ctx = self.encode_text(&tok.encode_uncond())?;
+        *guard = Some(ctx.clone());
+        Ok(ctx)
+    }
+
+    /// One UNet evaluation over a *compiled* batch size `b`.
+    ///
+    /// `latents`: b*C*H*W, `ts`: b, `ctx`: b*S*D; returns eps (b*C*H*W).
+    pub fn unet_eps(&self, b: usize, latents: &[f32], ts: &[f32], ctx: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let art = self
+            .unet
+            .get(&b)
+            .ok_or_else(|| Error::Request(format!("no unet compiled for batch {b}")))?;
+        debug_assert_eq!(latents.len(), b * m.latent_elems());
+        debug_assert_eq!(ts.len(), b);
+        debug_assert_eq!(ctx.len(), b * m.ctx_elems());
+        art.run_f32(
+            &self.client,
+            &[
+                (latents, &[b, m.latent_channels, m.latent_size, m.latent_size]),
+                (ts, &[b]),
+                (ctx, &[b, m.seq_len, m.text_dim]),
+            ],
+        )
+    }
+
+    /// Eq.-1 combine on device (the Pallas kernel artifact):
+    /// `eps_hat = eps_u + s (eps_c - eps_u)` over a compiled batch `b`.
+    pub fn cfg_combine(&self, b: usize, eps_u: &[f32], eps_c: &[f32], scale: f32) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let art = self
+            .combine
+            .get(&b)
+            .ok_or_else(|| Error::Request(format!("no cfg_combine compiled for batch {b}")))?;
+        let dims = [b, m.latent_channels, m.latent_size, m.latent_size];
+        art.run_f32(&self.client, &[(eps_u, &dims), (eps_c, &dims), (&[scale], &[1])])
+    }
+
+    /// Decode one latent to a flattened [3, image, image] tensor in [-1, 1].
+    pub fn decode(&self, latent: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        debug_assert_eq!(latent.len(), m.latent_elems());
+        self.vae_decoder.run_f32(
+            &self.client,
+            &[(latent, &[1, m.latent_channels, m.latent_size, m.latent_size])],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ModelStack execution tests live in rust/tests/ (integration) since
+    // they need built artifacts; here we cover the pure helpers.
+
+    #[test]
+    fn bucketize_logic() {
+        // fake a stack-free check by replicating the greedy logic
+        let sizes = [4usize, 2, 1];
+        let bucketize = |n: usize| {
+            let mut rem = n;
+            let mut out = Vec::new();
+            while rem > 0 {
+                let b = sizes.iter().copied().find(|&b| b <= rem).unwrap_or(1);
+                out.push(b);
+                rem -= b;
+            }
+            out
+        };
+        assert_eq!(bucketize(1), vec![1]);
+        assert_eq!(bucketize(3), vec![2, 1]);
+        assert_eq!(bucketize(7), vec![4, 2, 1]);
+        assert_eq!(bucketize(8), vec![4, 4]);
+        assert_eq!(bucketize(5), vec![4, 1]);
+    }
+}

@@ -1,0 +1,170 @@
+//! β-schedules and the cumulative noise tables shared by all schedulers.
+
+/// How β_t varies over the training timesteps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BetaSchedule {
+    /// Linear in β (DDPM paper).
+    Linear,
+    /// Linear in sqrt(β) (Stable Diffusion's `scaled_linear`).
+    ScaledLinear,
+    /// Cosine ᾱ schedule (Nichol & Dhariwal) with β clipping.
+    Cosine,
+}
+
+/// Precomputed noise tables over the training timesteps.
+#[derive(Debug, Clone)]
+pub struct NoiseSchedule {
+    pub betas: Vec<f64>,
+    pub alphas: Vec<f64>,
+    pub alphas_cumprod: Vec<f64>,
+    pub kind: BetaSchedule,
+}
+
+impl Default for NoiseSchedule {
+    /// Stable Diffusion's defaults: scaled-linear, β in [8.5e-4, 1.2e-2],
+    /// 1000 train timesteps.
+    fn default() -> Self {
+        NoiseSchedule::new(BetaSchedule::ScaledLinear, 1000, 0.00085, 0.012)
+    }
+}
+
+impl NoiseSchedule {
+    pub fn new(kind: BetaSchedule, train_timesteps: usize, beta_start: f64, beta_end: f64) -> Self {
+        assert!(train_timesteps >= 2);
+        assert!(0.0 < beta_start && beta_start <= beta_end && beta_end < 1.0);
+        let n = train_timesteps;
+        let betas: Vec<f64> = match kind {
+            BetaSchedule::Linear => (0..n)
+                .map(|i| beta_start + (beta_end - beta_start) * i as f64 / (n - 1) as f64)
+                .collect(),
+            BetaSchedule::ScaledLinear => {
+                let (s, e) = (beta_start.sqrt(), beta_end.sqrt());
+                (0..n)
+                    .map(|i| {
+                        let b = s + (e - s) * i as f64 / (n - 1) as f64;
+                        b * b
+                    })
+                    .collect()
+            }
+            BetaSchedule::Cosine => {
+                let f = |t: f64| ((t + 0.008) / 1.008 * std::f64::consts::FRAC_PI_2).cos().powi(2);
+                (0..n)
+                    .map(|i| {
+                        let t0 = i as f64 / n as f64;
+                        let t1 = (i + 1) as f64 / n as f64;
+                        (1.0 - f(t1) / f(t0)).clamp(1e-8, 0.999)
+                    })
+                    .collect()
+            }
+        };
+        let alphas: Vec<f64> = betas.iter().map(|b| 1.0 - b).collect();
+        let mut alphas_cumprod = Vec::with_capacity(n);
+        let mut acc = 1.0;
+        for &a in &alphas {
+            acc *= a;
+            alphas_cumprod.push(acc);
+        }
+        NoiseSchedule { betas, alphas, alphas_cumprod, kind }
+    }
+
+    pub fn train_timesteps(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// ᾱ_t (cumulative product of α up to and including t).
+    pub fn alpha_bar(&self, t: usize) -> f64 {
+        self.alphas_cumprod[t]
+    }
+
+    /// ᾱ for "one before the trajectory starts" (t = -1) == 1.
+    pub fn alpha_bar_prev(&self, t_prev: Option<usize>) -> f64 {
+        match t_prev {
+            Some(t) => self.alphas_cumprod[t],
+            None => 1.0,
+        }
+    }
+
+    /// σ_t in the variance-exploding parameterization:
+    /// `sigma_t = sqrt((1 - ᾱ_t) / ᾱ_t)` — used by the Euler family.
+    pub fn sigma(&self, t: usize) -> f64 {
+        let ab = self.alpha_bar(t);
+        ((1.0 - ab) / ab).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn default_matches_sd_config() {
+        let s = NoiseSchedule::default();
+        assert_eq!(s.train_timesteps(), 1000);
+        assert!((s.betas[0] - 0.00085).abs() < 1e-12);
+        assert!((s.betas[999] - 0.012).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_bar_strictly_decreasing_all_kinds() {
+        for kind in [BetaSchedule::Linear, BetaSchedule::ScaledLinear, BetaSchedule::Cosine] {
+            let s = NoiseSchedule::new(kind, 1000, 0.00085, 0.012);
+            for t in 1..1000 {
+                assert!(
+                    s.alpha_bar(t) < s.alpha_bar(t - 1),
+                    "{kind:?}: alpha_bar not decreasing at {t}"
+                );
+            }
+            assert!(s.alpha_bar(0) < 1.0);
+            assert!(s.alpha_bar(999) > 0.0);
+        }
+    }
+
+    #[test]
+    fn betas_within_bounds() {
+        forall("beta bounds", 30, |g| {
+            let n = g.usize_in(2, 2000);
+            let b0 = g.f64_in(1e-5, 1e-3);
+            let b1 = g.f64_in(b0, 0.05);
+            for kind in [BetaSchedule::Linear, BetaSchedule::ScaledLinear] {
+                let s = NoiseSchedule::new(kind, n, b0, b1);
+                for &b in &s.betas {
+                    assert!(b >= b0 - 1e-12 && b <= b1 + 1e-12, "{kind:?} b={b}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cosine_betas_clipped() {
+        let s = NoiseSchedule::new(BetaSchedule::Cosine, 1000, 0.00085, 0.012);
+        for &b in &s.betas {
+            assert!(b > 0.0 && b <= 0.999);
+        }
+    }
+
+    #[test]
+    fn sigma_increasing_in_t() {
+        let s = NoiseSchedule::default();
+        assert!(s.sigma(999) > s.sigma(500));
+        assert!(s.sigma(500) > s.sigma(0));
+        assert!(s.sigma(0) > 0.0);
+    }
+
+    #[test]
+    fn alpha_bar_prev_boundary() {
+        let s = NoiseSchedule::default();
+        assert_eq!(s.alpha_bar_prev(None), 1.0);
+        assert_eq!(s.alpha_bar_prev(Some(10)), s.alpha_bar(10));
+    }
+
+    #[test]
+    fn cumprod_consistency() {
+        let s = NoiseSchedule::default();
+        let mut acc = 1.0;
+        for t in 0..100 {
+            acc *= s.alphas[t];
+            assert!((s.alpha_bar(t) - acc).abs() < 1e-12);
+        }
+    }
+}

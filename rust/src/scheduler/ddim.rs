@@ -1,0 +1,162 @@
+//! DDIM (Song et al. 2021) with η = 0 — fully deterministic stepping.
+
+use super::{leading_timesteps, NoiseSchedule, Scheduler, SchedulerKind};
+use crate::rng::Rng;
+
+/// Deterministic DDIM stepper.
+#[derive(Debug, Clone)]
+pub struct Ddim {
+    schedule: NoiseSchedule,
+    timesteps: Vec<usize>,
+}
+
+impl Ddim {
+    pub fn new(schedule: NoiseSchedule, num_steps: usize) -> Self {
+        let timesteps = leading_timesteps(schedule.train_timesteps(), num_steps);
+        Ddim { schedule, timesteps }
+    }
+
+    /// Predicted x0 from (x_t, eps): `(x_t - sqrt(1-ᾱ_t) eps) / sqrt(ᾱ_t)`.
+    pub fn predict_x0(&self, i: usize, sample: &[f32], eps: &[f32]) -> Vec<f32> {
+        let t = self.timesteps[i];
+        let ab = self.schedule.alpha_bar(t);
+        let sqrt_ab = ab.sqrt() as f32;
+        let sqrt_1mab = (1.0 - ab).sqrt() as f32;
+        sample
+            .iter()
+            .zip(eps)
+            .map(|(&x, &e)| (x - sqrt_1mab * e) / sqrt_ab)
+            .collect()
+    }
+}
+
+impl Scheduler for Ddim {
+    fn timesteps(&self) -> &[usize] {
+        &self.timesteps
+    }
+
+    fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], _rng: &mut Rng) -> Vec<f32> {
+        assert_eq!(sample.len(), eps.len());
+        let t = self.timesteps[i];
+        let t_prev = self.timesteps.get(i + 1).copied();
+        let ab_t = self.schedule.alpha_bar(t);
+        let ab_prev = self.schedule.alpha_bar_prev(t_prev);
+
+        let sqrt_ab_t = ab_t.sqrt() as f32;
+        let sqrt_1mab_t = (1.0 - ab_t).sqrt() as f32;
+        let sqrt_ab_prev = ab_prev.sqrt() as f32;
+        let sqrt_1mab_prev = (1.0 - ab_prev).sqrt() as f32;
+
+        // x0 estimate, then reproject to t_prev along the same eps
+        sample
+            .iter()
+            .zip(eps)
+            .map(|(&x, &e)| {
+                let x0 = (x - sqrt_1mab_t * e) / sqrt_ab_t;
+                sqrt_ab_prev * x0 + sqrt_1mab_prev * e
+            })
+            .collect()
+    }
+
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Ddim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    fn make(n: usize) -> Ddim {
+        Ddim::new(NoiseSchedule::default(), n)
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut s1 = make(10);
+        let mut s2 = make(10);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999); // rng must not matter for DDIM
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        let e: Vec<f32> = (0..8).map(|i| (i as f32 - 4.0) * 0.2).collect();
+        assert_eq!(s1.step(0, &x, &e, &mut r1), s2.step(0, &x, &e, &mut r2));
+    }
+
+    #[test]
+    fn zero_eps_rescales_toward_x0() {
+        // with eps = 0, x_{t-1} = sqrt(ᾱ_prev/ᾱ_t) * x_t
+        let mut s = make(10);
+        let x = vec![1.0f32; 4];
+        let e = vec![0.0f32; 4];
+        let t = s.timesteps[0];
+        let tp = s.timesteps[1];
+        let expect = (s.schedule.alpha_bar(tp) / s.schedule.alpha_bar(t)).sqrt() as f32;
+        let out = s.step(0, &x, &e, &mut Rng::new(0));
+        for v in out {
+            assert!((v - expect).abs() < 1e-6, "{v} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn exact_x0_recovery_with_oracle_eps() {
+        // Construct x_t = sqrt(ᾱ_t) x0 + sqrt(1-ᾱ_t) ε with a FIXED ε.
+        // Feeding that exact ε at every step must hand back x0 at the end
+        // (DDIM inverts its own forward map along a fixed noise ray).
+        forall("ddim oracle recovery", 20, |g| {
+            let n = g.usize_in(2, 50);
+            let mut s = make(n);
+            let dim = 12;
+            let x0: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let eps: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let t0 = s.timesteps[0];
+            let ab = s.schedule.alpha_bar(t0);
+            let mut x: Vec<f32> = x0
+                .iter()
+                .zip(&eps)
+                .map(|(&x0v, &ev)| (ab.sqrt() as f32) * x0v + ((1.0 - ab).sqrt() as f32) * ev)
+                .collect();
+            let mut rng = Rng::new(0);
+            for i in 0..n {
+                x = s.step(i, &x, &eps, &mut rng);
+            }
+            for (a, b) in x.iter().zip(&x0) {
+                assert!((a - b).abs() < 2e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn predict_x0_consistency() {
+        // predict_x0 then re-noising at the same t returns the sample
+        forall("ddim x0 consistency", 30, |g| {
+            let n = g.usize_in(1, 50);
+            let s = make(n);
+            let i = g.usize_in(0, n - 1);
+            let dim = 6;
+            let x: Vec<f32> = (0..dim).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let e: Vec<f32> = (0..dim).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let x0 = s.predict_x0(i, &x, &e);
+            let t = s.timesteps[i];
+            let ab = s.schedule.alpha_bar(t);
+            for d in 0..dim {
+                let renoised = (ab.sqrt() as f32) * x0[d] + ((1.0 - ab).sqrt() as f32) * e[d];
+                assert!((renoised - x[d]).abs() < 1e-3, "{renoised} vs {}", x[d]);
+            }
+        });
+    }
+
+    #[test]
+    fn last_step_lands_in_x0_space() {
+        // final step uses ᾱ_prev = 1, so output == predicted x0
+        let mut s = make(5);
+        let i = 4;
+        let x = vec![0.7f32; 4];
+        let e = vec![0.3f32; 4];
+        let x0 = s.predict_x0(i, &x, &e);
+        let out = s.step(i, &x, &e, &mut Rng::new(0));
+        for (a, b) in out.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

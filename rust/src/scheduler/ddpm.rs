@@ -1,0 +1,152 @@
+//! DDPM ancestral sampling (Ho et al. 2020), adapted to subsampled
+//! inference timesteps.
+
+use super::{leading_timesteps, NoiseSchedule, Scheduler, SchedulerKind};
+use crate::rng::Rng;
+
+/// Stochastic DDPM stepper.
+#[derive(Debug, Clone)]
+pub struct Ddpm {
+    schedule: NoiseSchedule,
+    timesteps: Vec<usize>,
+}
+
+impl Ddpm {
+    pub fn new(schedule: NoiseSchedule, num_steps: usize) -> Self {
+        let timesteps = leading_timesteps(schedule.train_timesteps(), num_steps);
+        Ddpm { schedule, timesteps }
+    }
+}
+
+impl Scheduler for Ddpm {
+    fn timesteps(&self) -> &[usize] {
+        &self.timesteps
+    }
+
+    fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], rng: &mut Rng) -> Vec<f32> {
+        assert_eq!(sample.len(), eps.len());
+        let t = self.timesteps[i];
+        let t_prev = self.timesteps.get(i + 1).copied();
+        let ab_t = self.schedule.alpha_bar(t);
+        let ab_prev = self.schedule.alpha_bar_prev(t_prev);
+        // effective single-step alpha/beta over the (possibly subsampled)
+        // interval [t_prev, t]
+        let alpha_t = ab_t / ab_prev;
+        let beta_t = 1.0 - alpha_t;
+
+        // mean: standard posterior mean via predicted x0 (clip-free)
+        let sqrt_ab_t = ab_t.sqrt();
+        let sqrt_1mab_t = (1.0 - ab_t).sqrt();
+        // posterior variance (Ho et al. eq. 7): β̃ = (1-ᾱ_prev)/(1-ᾱ_t) β_t
+        let var = if t_prev.is_some() {
+            ((1.0 - ab_prev) / (1.0 - ab_t) * beta_t).max(0.0)
+        } else {
+            0.0 // final step is deterministic
+        };
+        let sigma = var.sqrt() as f32;
+
+        let c_x0 = (ab_prev.sqrt() * beta_t / (1.0 - ab_t)) as f32;
+        let c_xt = (alpha_t.sqrt() * (1.0 - ab_prev) / (1.0 - ab_t)) as f32;
+
+        sample
+            .iter()
+            .zip(eps)
+            .map(|(&x, &e)| {
+                let x0 = ((x as f64 - sqrt_1mab_t * e as f64) / sqrt_ab_t) as f32;
+                let mean = c_x0 * x0 + c_xt * x;
+                if sigma > 0.0 {
+                    mean + sigma * rng.next_normal() as f32
+                } else {
+                    mean
+                }
+            })
+            .collect()
+    }
+
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Ddpm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    fn make(n: usize) -> Ddpm {
+        Ddpm::new(NoiseSchedule::default(), n)
+    }
+
+    #[test]
+    fn reproducible_with_same_rng_seed() {
+        let mut s1 = make(10);
+        let mut s2 = make(10);
+        let x = vec![0.5f32; 8];
+        let e = vec![0.1f32; 8];
+        let out1 = s1.step(0, &x, &e, &mut Rng::new(7));
+        let out2 = s2.step(0, &x, &e, &mut Rng::new(7));
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn stochastic_across_seeds() {
+        let mut s = make(10);
+        let x = vec![0.5f32; 8];
+        let e = vec![0.1f32; 8];
+        let out1 = s.step(0, &x, &e, &mut Rng::new(1));
+        let out2 = s.step(0, &x, &e, &mut Rng::new(2));
+        assert_ne!(out1, out2);
+    }
+
+    #[test]
+    fn final_step_deterministic() {
+        // last step has zero posterior variance: rng must not matter
+        let mut s = make(5);
+        let x = vec![0.5f32; 8];
+        let e = vec![0.1f32; 8];
+        let out1 = s.step(4, &x, &e, &mut Rng::new(1));
+        let out2 = s.step(4, &x, &e, &mut Rng::new(2));
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn mean_matches_ddim_direction() {
+        // DDPM's posterior mean and DDIM's deterministic step both move
+        // toward the same x0; with eps=0 and x fixed, both should shrink
+        // x by a similar factor (not equal — different interpolants).
+        let mut ddpm = make(10);
+        let x = vec![1.0f32; 4];
+        let e = vec![0.0f32; 4];
+        // average many stochastic draws to estimate the mean
+        let mut acc = vec![0.0f64; 4];
+        let trials = 4000;
+        for seed in 0..trials {
+            let out = ddpm.step(0, &x, &e, &mut Rng::new(seed));
+            for (a, o) in acc.iter_mut().zip(out) {
+                *a += o as f64;
+            }
+        }
+        let mean = acc[0] / trials as f64;
+        let mut ddim = super::super::Ddim::new(NoiseSchedule::default(), 10);
+        let ddim_out = ddim.step(0, &x, &e, &mut Rng::new(0));
+        assert!(
+            (mean - ddim_out[0] as f64).abs() < 0.05,
+            "ddpm mean {mean} vs ddim {}",
+            ddim_out[0]
+        );
+    }
+
+    #[test]
+    fn variance_positive_mid_trajectory() {
+        forall("ddpm variance sign", 30, |g| {
+            let n = g.usize_in(2, 50);
+            let mut s = make(n);
+            let i = g.usize_in(0, n - 2); // non-final
+            let x = vec![0.0f32; 64];
+            let e = vec![0.0f32; 64];
+            let out = s.step(i, &x, &e, &mut Rng::new(g.u64()));
+            // zero mean inputs + noise => some nonzero outputs
+            assert!(out.iter().any(|v| *v != 0.0), "no noise injected at step {i}");
+        });
+    }
+}

@@ -1,0 +1,210 @@
+//! Euler-discrete and Euler-ancestral steppers (k-diffusion style),
+//! operating in sigma space: `x = sqrt(ᾱ) x0 + sqrt(1-ᾱ) ε` is rewritten
+//! as `x/sqrt(ᾱ) = x0 + σ ε` with `σ = sqrt((1-ᾱ)/ᾱ)`.
+
+use super::{leading_timesteps, NoiseSchedule, Scheduler, SchedulerKind};
+use crate::rng::Rng;
+
+fn sigmas_for(schedule: &NoiseSchedule, timesteps: &[usize]) -> Vec<f64> {
+    // one sigma per inference step, plus the terminal 0
+    let mut s: Vec<f64> = timesteps.iter().map(|&t| schedule.sigma(t)).collect();
+    s.push(0.0);
+    s
+}
+
+/// Deterministic Euler stepper.
+#[derive(Debug, Clone)]
+pub struct Euler {
+    timesteps: Vec<usize>,
+    sigmas: Vec<f64>,
+}
+
+impl Euler {
+    pub fn new(schedule: NoiseSchedule, num_steps: usize) -> Self {
+        let timesteps = leading_timesteps(schedule.train_timesteps(), num_steps);
+        let sigmas = sigmas_for(&schedule, &timesteps);
+        Euler { timesteps, sigmas }
+    }
+}
+
+fn euler_step(sample: &[f32], eps: &[f32], sigma: f64, sigma_next: f64) -> Vec<f32> {
+    // derivative d = eps (the eps-prediction is the score direction in
+    // sigma space); x_{i+1} = x + (σ_{i+1} - σ_i) d
+    let dt = (sigma_next - sigma) as f32;
+    sample.iter().zip(eps).map(|(&x, &e)| x + dt * e).collect()
+}
+
+impl Scheduler for Euler {
+    fn timesteps(&self) -> &[usize] {
+        &self.timesteps
+    }
+
+    fn init_noise_sigma(&self) -> f32 {
+        self.sigmas[0] as f32
+    }
+
+    fn scale_model_input(&self, sample: &[f32], i: usize) -> Vec<f32> {
+        let s = self.sigmas[i];
+        let scale = (1.0 / (s * s + 1.0).sqrt()) as f32;
+        sample.iter().map(|&x| x * scale).collect()
+    }
+
+    fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], _rng: &mut Rng) -> Vec<f32> {
+        assert_eq!(sample.len(), eps.len());
+        euler_step(sample, eps, self.sigmas[i], self.sigmas[i + 1])
+    }
+
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Euler
+    }
+}
+
+/// Stochastic Euler-ancestral stepper.
+#[derive(Debug, Clone)]
+pub struct EulerAncestral {
+    timesteps: Vec<usize>,
+    sigmas: Vec<f64>,
+}
+
+impl EulerAncestral {
+    pub fn new(schedule: NoiseSchedule, num_steps: usize) -> Self {
+        let timesteps = leading_timesteps(schedule.train_timesteps(), num_steps);
+        let sigmas = sigmas_for(&schedule, &timesteps);
+        EulerAncestral { timesteps, sigmas }
+    }
+}
+
+impl Scheduler for EulerAncestral {
+    fn timesteps(&self) -> &[usize] {
+        &self.timesteps
+    }
+
+    fn init_noise_sigma(&self) -> f32 {
+        self.sigmas[0] as f32
+    }
+
+    fn scale_model_input(&self, sample: &[f32], i: usize) -> Vec<f32> {
+        let s = self.sigmas[i];
+        let scale = (1.0 / (s * s + 1.0).sqrt()) as f32;
+        sample.iter().map(|&x| x * scale).collect()
+    }
+
+    fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], rng: &mut Rng) -> Vec<f32> {
+        assert_eq!(sample.len(), eps.len());
+        let sigma = self.sigmas[i];
+        let sigma_next = self.sigmas[i + 1];
+        // ancestral split: sigma_next^2 = sigma_down^2 + sigma_up^2
+        let (sigma_down, sigma_up) = if sigma_next == 0.0 {
+            (0.0, 0.0)
+        } else {
+            let up2 = sigma_next.powi(2) * (sigma.powi(2) - sigma_next.powi(2)) / sigma.powi(2);
+            let up = up2.max(0.0).sqrt().min(sigma_next);
+            let down = (sigma_next.powi(2) - up * up).max(0.0).sqrt();
+            (down, up)
+        };
+        let mut out = euler_step(sample, eps, sigma, sigma_down);
+        if sigma_up > 0.0 {
+            for v in out.iter_mut() {
+                *v += (sigma_up as f32) * rng.next_normal() as f32;
+            }
+        }
+        out
+    }
+
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::EulerAncestral
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn sigmas_descend_to_zero() {
+        let e = Euler::new(NoiseSchedule::default(), 50);
+        assert_eq!(e.sigmas.len(), 51);
+        assert!(e.sigmas.windows(2).all(|w| w[0] > w[1]));
+        assert_eq!(*e.sigmas.last().unwrap(), 0.0);
+        assert!(e.init_noise_sigma() > 1.0); // SD's terminal sigma ~ 14
+    }
+
+    #[test]
+    fn zero_eps_is_identity() {
+        let mut e = Euler::new(NoiseSchedule::default(), 10);
+        let x = vec![0.3f32; 8];
+        let eps = vec![0.0f32; 8];
+        let out = e.step(0, &x, &eps, &mut Rng::new(0));
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn oracle_recovery_full_trajectory() {
+        // x = x0 + sigma*eps with fixed eps; stepping with that eps must
+        // return exactly x0 at sigma=0 (Euler integrates a straight ray).
+        forall("euler oracle", 20, |g| {
+            let n = g.usize_in(2, 60);
+            let mut e = Euler::new(NoiseSchedule::default(), n);
+            let dim = 10;
+            let x0: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let eps: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let s0 = e.sigmas[0] as f32;
+            let mut x: Vec<f32> = x0.iter().zip(&eps).map(|(&a, &b)| a + s0 * b).collect();
+            let mut rng = Rng::new(0);
+            for i in 0..n {
+                x = e.step(i, &x, &eps, &mut rng);
+            }
+            for (a, b) in x.iter().zip(&x0) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn scale_model_input_bounded() {
+        let e = Euler::new(NoiseSchedule::default(), 10);
+        let x = vec![1.0f32; 4];
+        for i in 0..10 {
+            let scaled = e.scale_model_input(&x, i);
+            assert!(scaled[0] > 0.0 && scaled[0] <= 1.0);
+        }
+        // high sigma -> strong downscaling at the first step
+        assert!(e.scale_model_input(&x, 0)[0] < 0.2);
+    }
+
+    #[test]
+    fn ancestral_variance_decomposition() {
+        let ea = EulerAncestral::new(NoiseSchedule::default(), 20);
+        for i in 0..19 {
+            let sigma = ea.sigmas[i];
+            let sigma_next = ea.sigmas[i + 1];
+            let up2 = sigma_next.powi(2) * (sigma.powi(2) - sigma_next.powi(2)) / sigma.powi(2);
+            let up = up2.max(0.0).sqrt().min(sigma_next);
+            let down = (sigma_next.powi(2) - up * up).max(0.0).sqrt();
+            assert!(((down * down + up * up) - sigma_next * sigma_next).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ancestral_reproducible_and_stochastic() {
+        let mut ea = EulerAncestral::new(NoiseSchedule::default(), 10);
+        let x = vec![0.5f32; 8];
+        let eps = vec![0.1f32; 8];
+        let a = ea.step(0, &x, &eps, &mut Rng::new(5));
+        let b = ea.step(0, &x, &eps, &mut Rng::new(5));
+        let c = ea.step(0, &x, &eps, &mut Rng::new(6));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ancestral_final_step_deterministic() {
+        let mut ea = EulerAncestral::new(NoiseSchedule::default(), 10);
+        let x = vec![0.5f32; 8];
+        let eps = vec![0.1f32; 8];
+        let a = ea.step(9, &x, &eps, &mut Rng::new(1));
+        let b = ea.step(9, &x, &eps, &mut Rng::new(2));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,172 @@
+//! Heun's second-order method (Karras et al. 2022, Algorithm 1 without
+//! stochastic churn) in sigma space.
+//!
+//! Heun needs a *second* model evaluation at the predicted point to form
+//! the trapezoidal correction. The engine drives this through the
+//! [`Scheduler`] contract by treating each inference step as one call —
+//! Heun here applies the correction using the *same* eps for both slopes
+//! when no second evaluation is available (degenerating to Euler), and
+//! exposes [`Heun::step2`] for callers that can afford the second eval.
+//! The serving engine uses the one-eval path (the paper's cost model
+//! counts UNet evaluations; doubling them would confound Table 1), while
+//! tests exercise both.
+
+use super::{leading_timesteps, NoiseSchedule, Scheduler, SchedulerKind};
+use crate::rng::Rng;
+
+/// Heun stepper (deterministic).
+#[derive(Debug, Clone)]
+pub struct Heun {
+    timesteps: Vec<usize>,
+    sigmas: Vec<f64>,
+}
+
+impl Heun {
+    pub fn new(schedule: NoiseSchedule, num_steps: usize) -> Self {
+        let timesteps = leading_timesteps(schedule.train_timesteps(), num_steps);
+        let mut sigmas: Vec<f64> = timesteps.iter().map(|&t| schedule.sigma(t)).collect();
+        sigmas.push(0.0);
+        Heun { timesteps, sigmas }
+    }
+
+    /// Full two-evaluation Heun step: the caller provides a closure that
+    /// evaluates eps at (sample, step-index-like sigma position).
+    pub fn step2(
+        &self,
+        i: usize,
+        sample: &[f32],
+        eps: &[f32],
+        eval_at_next: impl FnOnce(&[f32]) -> Vec<f32>,
+    ) -> Vec<f32> {
+        let sigma = self.sigmas[i];
+        let sigma_next = self.sigmas[i + 1];
+        let dt = (sigma_next - sigma) as f32;
+        // Euler predictor
+        let predicted: Vec<f32> =
+            sample.iter().zip(eps).map(|(&x, &e)| x + dt * e).collect();
+        if sigma_next == 0.0 {
+            return predicted; // final step: Euler per Karras Alg. 1
+        }
+        // trapezoidal corrector
+        let eps2 = eval_at_next(&predicted);
+        sample
+            .iter()
+            .zip(eps.iter().zip(&eps2))
+            .map(|(&x, (&e1, &e2))| x + dt * 0.5 * (e1 + e2))
+            .collect()
+    }
+}
+
+impl Scheduler for Heun {
+    fn timesteps(&self) -> &[usize] {
+        &self.timesteps
+    }
+
+    fn init_noise_sigma(&self) -> f32 {
+        self.sigmas[0] as f32
+    }
+
+    fn scale_model_input(&self, sample: &[f32], i: usize) -> Vec<f32> {
+        let s = self.sigmas[i];
+        let scale = (1.0 / (s * s + 1.0).sqrt()) as f32;
+        sample.iter().map(|&x| x * scale).collect()
+    }
+
+    fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], _rng: &mut Rng) -> Vec<f32> {
+        // one-eval contract: both slopes equal -> Euler step
+        assert_eq!(sample.len(), eps.len());
+        let dt = (self.sigmas[i + 1] - self.sigmas[i]) as f32;
+        sample.iter().zip(eps).map(|(&x, &e)| x + dt * e).collect()
+    }
+
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Heun
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    fn make(n: usize) -> Heun {
+        Heun::new(NoiseSchedule::default(), n)
+    }
+
+    #[test]
+    fn one_eval_path_equals_euler() {
+        let mut h = make(10);
+        let mut e = super::super::Euler::new(NoiseSchedule::default(), 10);
+        let x: Vec<f32> = (0..6).map(|i| i as f32 * 0.3 - 0.9).collect();
+        let eps: Vec<f32> = (0..6).map(|i| 0.4 - i as f32 * 0.1).collect();
+        let mut rng = Rng::new(0);
+        assert_eq!(h.step(2, &x, &eps, &mut rng), e.step(2, &x, &eps, &mut rng));
+    }
+
+    #[test]
+    fn step2_with_equal_slopes_equals_euler() {
+        let h = make(10);
+        let x = vec![1.0f32; 4];
+        let eps = vec![0.5f32; 4];
+        let euler: Vec<f32> = {
+            let dt = (h.sigmas[1] - h.sigmas[0]) as f32;
+            x.iter().map(|&v| v + dt * 0.5).collect()
+        };
+        let out = h.step2(0, &x, &eps, |_| eps.clone());
+        for (a, b) in out.iter().zip(&euler) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn step2_final_step_is_euler_predictor() {
+        let h = make(5);
+        let x = vec![0.3f32; 4];
+        let eps = vec![0.2f32; 4];
+        let mut called = false;
+        let out = h.step2(4, &x, &eps, |_| {
+            called = true;
+            vec![0.0; 4]
+        });
+        assert!(!called, "final step must not request a second eval");
+        let dt = (0.0 - h.sigmas[4]) as f32;
+        for (o, &xv) in out.iter().zip(&x) {
+            assert!((o - (xv + dt * 0.2)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn heun_beats_euler_on_curved_trajectory() {
+        // integrate dx/dsigma = -x (a curved exact solution x ∝ e^{-sigma})
+        // from sigma_0 to 0; Heun's trapezoidal correction must land
+        // closer to the exact endpoint than Euler for the same step count
+        forall("heun order", 10, |g| {
+            let n = g.usize_in(8, 40);
+            let h = make(n);
+            let x0 = g.f32_in(0.5, 2.0);
+            // run both integrators with slope field f(x) = -x
+            let mut xe = vec![x0];
+            let mut xh = vec![x0];
+            for i in 0..n {
+                let dt = (h.sigmas[i + 1] - h.sigmas[i]) as f32;
+                // euler
+                let e1 = -xe[0];
+                xe[0] += dt * e1;
+                // heun via step2
+                let cur = xh[0];
+                let eps1 = vec![-cur];
+                let out = h.step2(i, &[cur], &eps1, |pred| vec![-pred[0]]);
+                xh[0] = out[0];
+            }
+            // dx/dsigma = -x integrated from sigma_0 down to 0:
+            // x(0) = x0 * e^{sigma_0} (dsigma < 0 makes x grow)
+            let exact_end = x0 * ((h.sigmas[0] as f32).exp());
+            let err_e = (xe[0] - exact_end).abs();
+            let err_h = (xh[0] - exact_end).abs();
+            assert!(
+                err_h <= err_e * 1.001,
+                "heun {err_h} should beat euler {err_e} (n={n})"
+            );
+        });
+    }
+}

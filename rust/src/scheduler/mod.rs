@@ -1,0 +1,220 @@
+//! Diffusion timestep schedulers (pure-Rust host math).
+//!
+//! The denoising loop the paper optimizes ("executed multiple times,
+//! usually ranging from 50 to 200 iterations for SD", §2) is driven by a
+//! scheduler that maps the UNet's noise prediction to the next latent.
+//! The paper's experiments use the HF pipeline's default (PNDM); we
+//! implement DDIM, DDPM, PNDM/PLMS, and Euler(+ancestral) so the
+//! ablations (DESIGN.md §6, ablation B) can show that the selective-
+//! guidance saving is scheduler-independent.
+//!
+//! All schedulers share a [`NoiseSchedule`] (β-schedule + cumulative-ᾱ
+//! tables over `train_timesteps`) and the standard "leading" inference
+//! timestep spacing used by the HF Stable Diffusion pipeline.
+
+mod beta;
+mod ddim;
+mod ddpm;
+mod dpm;
+mod euler;
+mod heun;
+mod pndm;
+
+pub use beta::{BetaSchedule, NoiseSchedule};
+pub use ddim::Ddim;
+pub use ddpm::Ddpm;
+pub use dpm::DpmSolverPP;
+pub use euler::{Euler, EulerAncestral};
+pub use heun::Heun;
+pub use pndm::Pndm;
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+
+/// Which scheduler to run (config/CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Ddim,
+    Ddpm,
+    Pndm,
+    Euler,
+    EulerAncestral,
+    DpmSolverPP,
+    Heun,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ddim" => Ok(SchedulerKind::Ddim),
+            "ddpm" => Ok(SchedulerKind::Ddpm),
+            "pndm" | "plms" => Ok(SchedulerKind::Pndm),
+            "euler" => Ok(SchedulerKind::Euler),
+            "euler-a" | "euler_ancestral" | "eulera" => Ok(SchedulerKind::EulerAncestral),
+            "dpm" | "dpm++" | "dpm-solver++" | "dpmpp" => Ok(SchedulerKind::DpmSolverPP),
+            "heun" => Ok(SchedulerKind::Heun),
+            other => Err(Error::Config(format!("unknown scheduler {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Ddim => "ddim",
+            SchedulerKind::Ddpm => "ddpm",
+            SchedulerKind::Pndm => "pndm",
+            SchedulerKind::Euler => "euler",
+            SchedulerKind::EulerAncestral => "euler-a",
+            SchedulerKind::DpmSolverPP => "dpm++",
+            SchedulerKind::Heun => "heun",
+        }
+    }
+
+    /// Whether the scheduler draws random noise during stepping.
+    pub fn is_stochastic(&self) -> bool {
+        matches!(self, SchedulerKind::Ddpm | SchedulerKind::EulerAncestral)
+    }
+
+    /// Instantiate with the given schedule and inference step count.
+    pub fn build(&self, schedule: NoiseSchedule, num_steps: usize) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Ddim => Box::new(Ddim::new(schedule, num_steps)),
+            SchedulerKind::Ddpm => Box::new(Ddpm::new(schedule, num_steps)),
+            SchedulerKind::Pndm => Box::new(Pndm::new(schedule, num_steps)),
+            SchedulerKind::Euler => Box::new(Euler::new(schedule, num_steps)),
+            SchedulerKind::EulerAncestral => {
+                Box::new(EulerAncestral::new(schedule, num_steps))
+            }
+            SchedulerKind::DpmSolverPP => Box::new(DpmSolverPP::new(schedule, num_steps)),
+            SchedulerKind::Heun => Box::new(Heun::new(schedule, num_steps)),
+        }
+    }
+}
+
+/// A configured scheduler instance driving one denoising trajectory.
+///
+/// Contract:
+/// * `timesteps()` is strictly decreasing, length == `num_steps`.
+/// * `step(i, ...)` consumes the UNet output for `timesteps()[i]` and
+///   returns the latent for `timesteps()[i+1]` (or the final x0-space
+///   latent for the last step).
+/// * Schedulers are stateful only where the algorithm requires history
+///   (PNDM); `reset()` clears that state between trajectories.
+pub trait Scheduler: Send {
+    /// Descending train-timestep indices for each inference step.
+    fn timesteps(&self) -> &[usize];
+
+    /// The continuous timestep value fed to the UNet at step `i`.
+    fn model_timestep(&self, i: usize) -> f32 {
+        self.timesteps()[i] as f32
+    }
+
+    /// Scale the initial N(0,1) latent (sigma-space schedulers != 1).
+    fn init_noise_sigma(&self) -> f32 {
+        1.0
+    }
+
+    /// Scale the latent before feeding the UNet at step `i` (identity for
+    /// ᾱ-space schedulers, `1/sqrt(sigma^2+1)` for Euler).
+    fn scale_model_input(&self, sample: &[f32], _i: usize) -> Vec<f32> {
+        sample.to_vec()
+    }
+
+    /// Advance one step: latent(t_i) + eps -> latent(t_{i+1}).
+    fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], rng: &mut Rng) -> Vec<f32>;
+
+    /// Clear multistep history (PNDM) for a fresh trajectory.
+    fn reset(&mut self) {}
+
+    /// Scheduler identity, for logs/metrics.
+    fn kind(&self) -> SchedulerKind;
+}
+
+/// Shared inference-timestep spacing ("leading" spacing, HF default):
+/// `t_i = (T / n) * i`, emitted in descending order.
+pub(crate) fn leading_timesteps(train_timesteps: usize, num_steps: usize) -> Vec<usize> {
+    assert!(num_steps >= 1 && num_steps <= train_timesteps);
+    let ratio = train_timesteps / num_steps;
+    let mut ts: Vec<usize> = (0..num_steps).map(|i| i * ratio).collect();
+    ts.reverse();
+    ts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [
+            SchedulerKind::Ddim,
+            SchedulerKind::Ddpm,
+            SchedulerKind::Pndm,
+            SchedulerKind::Euler,
+            SchedulerKind::EulerAncestral,
+            SchedulerKind::DpmSolverPP,
+            SchedulerKind::Heun,
+        ] {
+            assert_eq!(SchedulerKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(SchedulerKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn leading_spacing_descending_unique() {
+        let ts = leading_timesteps(1000, 50);
+        assert_eq!(ts.len(), 50);
+        assert_eq!(ts[0], 980);
+        assert_eq!(ts[49], 0);
+        assert!(ts.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn all_schedulers_satisfy_timestep_contract() {
+        forall("timestep contract", 40, |g| {
+            let n = g.usize_in(1, 100);
+            let kind = *g.choose(&[
+                SchedulerKind::Ddim,
+                SchedulerKind::Ddpm,
+                SchedulerKind::Pndm,
+                SchedulerKind::Euler,
+                SchedulerKind::EulerAncestral,
+                SchedulerKind::DpmSolverPP,
+                SchedulerKind::Heun,
+            ]);
+            let sched = kind.build(NoiseSchedule::default(), n);
+            let ts = sched.timesteps();
+            assert_eq!(ts.len(), n);
+            assert!(ts.windows(2).all(|w| w[0] > w[1]), "{kind:?} not descending");
+            assert!(*ts.last().unwrap() < 1000);
+        });
+    }
+
+    #[test]
+    fn full_trajectories_stay_finite() {
+        forall("finite trajectories", 12, |g| {
+            let n = g.usize_in(2, 20);
+            let kind = *g.choose(&[
+                SchedulerKind::Ddim,
+                SchedulerKind::Ddpm,
+                SchedulerKind::Pndm,
+                SchedulerKind::Euler,
+                SchedulerKind::EulerAncestral,
+                SchedulerKind::DpmSolverPP,
+                SchedulerKind::Heun,
+            ]);
+            let mut sched = kind.build(NoiseSchedule::default(), n);
+            let mut rng = Rng::new(g.u64());
+            let dim = 16;
+            let mut x: Vec<f32> = rng.normal_vec(dim);
+            for v in x.iter_mut() {
+                *v *= sched.init_noise_sigma();
+            }
+            for i in 0..n {
+                let eps = rng.normal_vec(dim);
+                x = sched.step(i, &x, &eps, &mut rng);
+                assert!(x.iter().all(|v| v.is_finite()), "{kind:?} step {i} produced non-finite");
+            }
+        });
+    }
+}

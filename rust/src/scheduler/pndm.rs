@@ -1,0 +1,199 @@
+//! PNDM / PLMS (Liu et al. 2022) — the HF Stable Diffusion pipeline's
+//! default scheduler, i.e. the one the paper's Table 1 timings ran under.
+//!
+//! This is the `skip_prk_steps=true` variant the SD pipeline uses: pure
+//! linear-multistep (Adams–Bashforth) on the eps history with lower-order
+//! warmup for the first steps, stepping in ᾱ space like DDIM.
+
+use super::{leading_timesteps, NoiseSchedule, Scheduler, SchedulerKind};
+use crate::rng::Rng;
+
+/// PLMS stepper with eps-history state (reset between trajectories).
+#[derive(Debug, Clone)]
+pub struct Pndm {
+    schedule: NoiseSchedule,
+    timesteps: Vec<usize>,
+    /// Most-recent-first history of eps predictions (max 4).
+    eps_history: Vec<Vec<f32>>,
+}
+
+impl Pndm {
+    pub fn new(schedule: NoiseSchedule, num_steps: usize) -> Self {
+        let timesteps = leading_timesteps(schedule.train_timesteps(), num_steps);
+        Pndm { schedule, timesteps, eps_history: Vec::new() }
+    }
+
+    /// Adams–Bashforth blend of the eps history (order = history length).
+    fn blended_eps(&self, eps: &[f32]) -> Vec<f32> {
+        let h = &self.eps_history;
+        match h.len() {
+            0 => eps.to_vec(),
+            1 => eps
+                .iter()
+                .zip(&h[0])
+                .map(|(&e, &e1)| (3.0 * e - e1) / 2.0)
+                .collect(),
+            2 => eps
+                .iter()
+                .zip(&h[0])
+                .zip(&h[1])
+                .map(|((&e, &e1), &e2)| (23.0 * e - 16.0 * e1 + 5.0 * e2) / 12.0)
+                .collect(),
+            _ => eps
+                .iter()
+                .zip(&h[0])
+                .zip(&h[1])
+                .zip(&h[2])
+                .map(|(((&e, &e1), &e2), &e3)| {
+                    (55.0 * e - 59.0 * e1 + 37.0 * e2 - 9.0 * e3) / 24.0
+                })
+                .collect(),
+        }
+    }
+
+    /// The DDIM-style transfer x_t -> x_{t_prev} under a given eps.
+    fn transfer(&self, i: usize, sample: &[f32], eps: &[f32]) -> Vec<f32> {
+        let t = self.timesteps[i];
+        let t_prev = self.timesteps.get(i + 1).copied();
+        let ab_t = self.schedule.alpha_bar(t);
+        let ab_prev = self.schedule.alpha_bar_prev(t_prev);
+        let sqrt_ab_t = ab_t.sqrt() as f32;
+        let sqrt_1mab_t = (1.0 - ab_t).sqrt() as f32;
+        let sqrt_ab_prev = ab_prev.sqrt() as f32;
+        let sqrt_1mab_prev = (1.0 - ab_prev).sqrt() as f32;
+        sample
+            .iter()
+            .zip(eps)
+            .map(|(&x, &e)| {
+                let x0 = (x - sqrt_1mab_t * e) / sqrt_ab_t;
+                sqrt_ab_prev * x0 + sqrt_1mab_prev * e
+            })
+            .collect()
+    }
+}
+
+impl Scheduler for Pndm {
+    fn timesteps(&self) -> &[usize] {
+        &self.timesteps
+    }
+
+    fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], _rng: &mut Rng) -> Vec<f32> {
+        assert_eq!(sample.len(), eps.len());
+        let blended = self.blended_eps(eps);
+        // update history (most recent first, cap 3 past values + current)
+        self.eps_history.insert(0, eps.to_vec());
+        self.eps_history.truncate(3);
+        self.transfer(i, sample, &blended)
+    }
+
+    fn reset(&mut self) {
+        self.eps_history.clear();
+    }
+
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Pndm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    fn make(n: usize) -> Pndm {
+        Pndm::new(NoiseSchedule::default(), n)
+    }
+
+    #[test]
+    fn first_step_equals_ddim() {
+        // with empty history, PLMS order-1 == DDIM
+        let mut p = make(10);
+        let mut d = super::super::Ddim::new(NoiseSchedule::default(), 10);
+        let x: Vec<f32> = (0..8).map(|i| (i as f32) * 0.1 - 0.4).collect();
+        let e: Vec<f32> = (0..8).map(|i| (i as f32) * -0.05 + 0.2).collect();
+        let mut rng = Rng::new(0);
+        assert_eq!(p.step(0, &x, &e, &mut rng), d.step(0, &x, &e, &mut rng));
+    }
+
+    #[test]
+    fn constant_eps_history_collapses_to_ddim() {
+        // if all eps are identical, every AB blend equals eps, so the
+        // whole PLMS trajectory equals the DDIM trajectory
+        forall("plms constant eps", 15, |g| {
+            let n = g.usize_in(2, 30);
+            let mut p = make(n);
+            let mut d = super::super::Ddim::new(NoiseSchedule::default(), n);
+            let dim = 8;
+            let e: Vec<f32> = (0..dim).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let mut xp: Vec<f32> = (0..dim).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let mut xd = xp.clone();
+            let mut rng = Rng::new(0);
+            for i in 0..n {
+                xp = p.step(i, &xp, &e, &mut rng);
+                xd = d.step(i, &xd, &e, &mut rng);
+            }
+            for (a, b) in xp.iter().zip(&xd) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn history_orders_engage() {
+        let mut p = make(10);
+        let x = vec![0.0f32; 4];
+        let mut rng = Rng::new(0);
+        assert_eq!(p.eps_history.len(), 0);
+        p.step(0, &x, &[1.0; 4], &mut rng);
+        assert_eq!(p.eps_history.len(), 1);
+        p.step(1, &x, &[2.0; 4], &mut rng);
+        p.step(2, &x, &[3.0; 4], &mut rng);
+        p.step(3, &x, &[4.0; 4], &mut rng);
+        assert_eq!(p.eps_history.len(), 3); // capped
+        assert_eq!(p.eps_history[0][0], 4.0); // most recent first
+    }
+
+    #[test]
+    fn reset_clears_history() {
+        let mut p = make(10);
+        let x = vec![0.0f32; 4];
+        p.step(0, &x, &[1.0; 4], &mut Rng::new(0));
+        assert!(!p.eps_history.is_empty());
+        p.reset();
+        assert!(p.eps_history.is_empty());
+    }
+
+    #[test]
+    fn ab2_blend_coefficients() {
+        let mut p = make(10);
+        p.eps_history = vec![vec![1.0f32]];
+        let blended = p.blended_eps(&[2.0]);
+        // (3*2 - 1)/2 = 2.5
+        assert!((blended[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ab4_blend_coefficients() {
+        let mut p = make(10);
+        p.eps_history = vec![vec![1.0f32], vec![1.0], vec![1.0]];
+        let blended = p.blended_eps(&[1.0]);
+        // all-equal history: (55-59+37-9)/24 = 24/24 = 1
+        assert!((blended[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multistep_differs_from_ddim_with_varying_eps() {
+        let mut p = make(10);
+        let mut d = super::super::Ddim::new(NoiseSchedule::default(), 10);
+        let x = vec![0.5f32; 4];
+        let mut rng = Rng::new(0);
+        let mut xp = x.clone();
+        let mut xd = x;
+        for i in 0..4 {
+            let e = vec![(i as f32 + 1.0) * 0.1; 4];
+            xp = p.step(i, &xp, &e, &mut rng);
+            xd = d.step(i, &xd, &e, &mut rng);
+        }
+        assert!((xp[0] - xd[0]).abs() > 1e-6, "PLMS should diverge from DDIM");
+    }
+}

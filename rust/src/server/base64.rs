@@ -1,0 +1,106 @@
+//! Standard base64 (RFC 4648, with padding) — used to ship PNG bytes
+//! over the JSON-lines protocol.
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes to base64.
+pub fn b64encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = *chunk.get(1).unwrap_or(&0) as u32;
+        let b2 = *chunk.get(2).unwrap_or(&0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+fn decode_char(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some((c - b'A') as u32),
+        b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+        b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Decode base64 (padded). Returns None on malformed input.
+pub fn b64decode(s: &str) -> Option<Vec<u8>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for chunk in bytes.chunks(4) {
+        let pad = chunk.iter().rev().take_while(|&&c| c == b'=').count();
+        if pad > 2 {
+            return None;
+        }
+        let mut n: u32 = 0;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = if c == b'=' {
+                if i < 4 - pad {
+                    return None; // '=' only at the end
+                }
+                0
+            } else {
+                decode_char(c)?
+            };
+            n = (n << 6) | v;
+        }
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        assert_eq!(b64encode(b""), "");
+        assert_eq!(b64encode(b"f"), "Zg==");
+        assert_eq!(b64encode(b"fo"), "Zm8=");
+        assert_eq!(b64encode(b"foo"), "Zm9v");
+        assert_eq!(b64encode(b"foob"), "Zm9vYg==");
+        assert_eq!(b64encode(b"fooba"), "Zm9vYmE=");
+        assert_eq!(b64encode(b"foobar"), "Zm9vYmFy");
+    }
+
+    #[test]
+    fn decode_vectors() {
+        assert_eq!(b64decode("Zm9vYmFy").unwrap(), b"foobar");
+        assert_eq!(b64decode("Zg==").unwrap(), b"f");
+        assert_eq!(b64decode("").unwrap(), b"");
+    }
+
+    #[test]
+    fn round_trip_binary() {
+        let mut rng = crate::rng::Rng::new(1);
+        for len in [0usize, 1, 2, 3, 4, 57, 256, 1000] {
+            let data: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+            assert_eq!(b64decode(&b64encode(&data)).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(b64decode("a").is_none()); // bad length
+        assert!(b64decode("====").is_none());
+        assert!(b64decode("Zm9v!b==").is_none());
+        assert!(b64decode("Z=9v").is_none()); // '=' in the middle
+    }
+}

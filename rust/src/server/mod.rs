@@ -1,0 +1,240 @@
+//! TCP front-end: JSON-lines protocol + blocking client library.
+//!
+//! One JSON object per line in each direction. Operations:
+//!
+//! * `{"op":"generate", "prompt":..., ...}` → generation result (metrics
+//!   and, when `return_image` is true, the PNG as base64);
+//! * `{"op":"ping"}` → `{"ok":true,"pong":true}`;
+//! * `{"op":"stats"}` → coordinator stats snapshot;
+//! * `{"op":"shutdown"}` → acks and stops the listener.
+//!
+//! No HTTP stack exists in the offline registry snapshot; JSON-over-TCP
+//! keeps the wire format inspectable (`nc localhost 7878`).
+
+mod base64;
+mod protocol;
+
+pub use base64::{b64decode, b64encode};
+pub use protocol::{parse_request, render_output, ServerRequest};
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+
+/// A running server (listener thread + per-connection threads).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve in background threads.
+    pub fn start(coordinator: Arc<Coordinator>, bind: &str) -> Result<Server> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| Error::io(format!("binding {bind}"), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::io("local_addr", e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            listener.set_nonblocking(false).ok();
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let coord = Arc::clone(&coordinator);
+                        let stop3 = Arc::clone(&stop2);
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(s, coord, stop3);
+                        });
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Request the listener to stop (it wakes on the next connection).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the listener so `incoming()` yields once more
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = dispatch(&line, &coordinator, &stop);
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop.load(Ordering::SeqCst) {
+            let _ = peer;
+            return Ok(());
+        }
+    }
+}
+
+fn dispatch(line: &str, coordinator: &Arc<Coordinator>, stop: &Arc<AtomicBool>) -> Value {
+    let parsed = match json::from_str(line) {
+        Ok(v) => v,
+        Err(e) => return err_response(None, &format!("bad json: {e}")),
+    };
+    let id = parsed.get("id").and_then(Value::as_i64);
+    match parsed.get("op").and_then(Value::as_str) {
+        Some("ping") => ok_base(id).with("pong", true),
+        Some("stats") => {
+            let s = coordinator.stats();
+            ok_base(id)
+                .with("submitted", s.submitted as i64)
+                .with("completed", s.completed as i64)
+                .with("failed", s.failed as i64)
+                .with("batches", s.batches as i64)
+                .with("batched_requests", s.batched_requests as i64)
+                .with("latency_ms_mean", s.latency_ms_mean)
+                .with("latency_ms_p50", s.latency_ms_p50)
+                .with("latency_ms_p90", s.latency_ms_p90)
+        }
+        Some("shutdown") => {
+            stop.store(true, Ordering::SeqCst);
+            ok_base(id).with("stopping", true)
+        }
+        Some("generate") => match parse_request(&parsed) {
+            Ok(sr) => match coordinator.generate(sr.request.clone()) {
+                Ok(out) => render_output(id, &sr, &out),
+                Err(e) => err_response(id, &e.to_string()),
+            },
+            Err(e) => err_response(id, &e.to_string()),
+        },
+        Some(other) => err_response(id, &format!("unknown op {other:?}")),
+        None => err_response(id, "missing op"),
+    }
+}
+
+fn ok_base(id: Option<i64>) -> Value {
+    let v = Value::obj().with("ok", true);
+    match id {
+        Some(id) => v.with("id", id),
+        None => v,
+    }
+}
+
+fn err_response(id: Option<i64>, msg: &str) -> Value {
+    let v = Value::obj().with("ok", false).with("error", msg);
+    match id {
+        Some(id) => v.with("id", id),
+        None => v,
+    }
+}
+
+/// Blocking client for the JSON-lines protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: i64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::io(format!("connecting {addr}"), e))?;
+        let reader = BufReader::new(stream.try_clone().map_err(|e| Error::io("clone", e))?);
+        Ok(Client { reader, writer: stream, next_id: 1 })
+    }
+
+    /// Send one op object (the `id` field is added automatically) and
+    /// block for its response.
+    pub fn call(&mut self, mut payload: Value) -> Result<Value> {
+        let id = self.next_id;
+        self.next_id += 1;
+        if let Value::Obj(m) = &mut payload {
+            m.insert("id".into(), Value::int(id));
+        }
+        let line = payload.to_string();
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| Error::io("sending request", e))?;
+        let mut resp = String::new();
+        self.reader
+            .read_line(&mut resp)
+            .map_err(|e| Error::io("reading response", e))?;
+        if resp.is_empty() {
+            return Err(Error::Protocol("server closed connection".into()));
+        }
+        let v = json::from_str(&resp)?;
+        match v.get("id").and_then(Value::as_i64) {
+            Some(rid) if rid == id => Ok(v),
+            Some(rid) => Err(Error::Protocol(format!("response id {rid} != request id {id}"))),
+            None => Ok(v), // error responses may lack an id
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let v = self.call(Value::obj().with("op", "ping"))?;
+        Ok(v.get("pong").and_then(Value::as_bool).unwrap_or(false))
+    }
+
+    pub fn stats(&mut self) -> Result<Value> {
+        self.call(Value::obj().with("op", "stats"))
+    }
+
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.call(Value::obj().with("op", "shutdown"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_helpers() {
+        let ok = ok_base(Some(3)).with("x", 1i64);
+        assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(ok.get("id").unwrap().as_i64(), Some(3));
+        let err = err_response(None, "boom");
+        assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(err.get("error").unwrap().as_str(), Some("boom"));
+    }
+}

@@ -1,0 +1,192 @@
+//! Wire-format mapping: JSON objects <-> engine request/output types.
+
+use crate::engine::{GenerationOutput, GenerationRequest};
+use crate::error::{Error, Result};
+use crate::guidance::WindowSpec;
+use crate::image::encode_png;
+use crate::json::Value;
+use crate::scheduler::SchedulerKind;
+
+use super::base64::b64encode;
+
+/// A parsed `generate` operation.
+#[derive(Debug, Clone)]
+pub struct ServerRequest {
+    pub request: GenerationRequest,
+    /// Include the PNG (base64) in the response.
+    pub return_image: bool,
+    /// Include the raw final latent in the response.
+    pub return_latent: bool,
+}
+
+/// Parse a `{"op":"generate", ...}` JSON object.
+pub fn parse_request(v: &Value) -> Result<ServerRequest> {
+    let prompt = v
+        .get("prompt")
+        .and_then(Value::as_str)
+        .ok_or_else(|| Error::Protocol("generate: missing prompt".into()))?;
+    let mut req = GenerationRequest::new(prompt);
+    if let Some(steps) = v.get("steps") {
+        req.steps = steps
+            .as_usize()
+            .ok_or_else(|| Error::Protocol("steps must be a positive integer".into()))?;
+    }
+    if let Some(gs) = v.get("guidance_scale") {
+        req.guidance_scale =
+            gs.as_f64().ok_or_else(|| Error::Protocol("guidance_scale must be a number".into()))?
+                as f32;
+    }
+    if let Some(seed) = v.get("seed") {
+        req.seed =
+            seed.as_i64().ok_or_else(|| Error::Protocol("seed must be an integer".into()))? as u64;
+    }
+    if let Some(s) = v.get("scheduler") {
+        req.scheduler = SchedulerKind::parse(
+            s.as_str().ok_or_else(|| Error::Protocol("scheduler must be a string".into()))?,
+        )?;
+    }
+    if let Some(f) = v.get("window_fraction") {
+        let fraction = f
+            .as_f64()
+            .ok_or_else(|| Error::Protocol("window_fraction must be a number".into()))?;
+        let position = v
+            .get("window_position")
+            .map(|p| {
+                p.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| Error::Protocol("window_position must be a string".into()))
+            })
+            .transpose()?
+            .unwrap_or_else(|| "last".into());
+        req.window = match position.as_str() {
+            "last" => WindowSpec::last(fraction),
+            "first" => WindowSpec::first(fraction),
+            "middle" => WindowSpec::middle(fraction),
+            other => {
+                return Err(Error::Protocol(format!("unknown window_position {other:?}")))
+            }
+        };
+    }
+    let return_image = v.get("return_image").and_then(Value::as_bool).unwrap_or(false);
+    let return_latent = v.get("return_latent").and_then(Value::as_bool).unwrap_or(false);
+    req.decode = return_image || req.decode;
+    req.validate()?;
+    Ok(ServerRequest { request: req, return_image, return_latent })
+}
+
+/// Render a generation result for the wire.
+pub fn render_output(id: Option<i64>, sr: &ServerRequest, out: &GenerationOutput) -> Value {
+    let mut v = Value::obj()
+        .with("ok", true)
+        .with("wall_ms", out.wall_ms)
+        .with("unet_evals", out.unet_evals as i64)
+        .with("steps", out.steps as i64)
+        .with("unet_cond_ms", out.breakdown.unet_cond_ms)
+        .with("unet_uncond_ms", out.breakdown.unet_uncond_ms)
+        .with("combine_ms", out.breakdown.combine_ms)
+        .with("scheduler_ms", out.breakdown.scheduler_ms);
+    if let Some(id) = id {
+        v = v.with("id", id);
+    }
+    if sr.return_image {
+        if let Some(img) = &out.image {
+            if let Ok(png) = encode_png(img) {
+                v = v
+                    .with("png_b64", b64encode(&png))
+                    .with("width", img.width as i64)
+                    .with("height", img.height as i64);
+            }
+        }
+    }
+    if sr.return_latent {
+        let latent: Vec<Value> = out.latent.iter().map(|&f| Value::float(f as f64)).collect();
+        v = v.with("latent", Value::Arr(latent));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+    use crate::metrics::StepBreakdown;
+
+    fn parse(s: &str) -> Result<ServerRequest> {
+        parse_request(&json::from_str(s).unwrap())
+    }
+
+    #[test]
+    fn full_request_parses() {
+        let sr = parse(
+            r#"{"op":"generate","prompt":"a cat","steps":25,"guidance_scale":9.6,
+               "seed":3,"scheduler":"ddim","window_fraction":0.4,
+               "window_position":"last","return_image":true}"#,
+        )
+        .unwrap();
+        assert_eq!(sr.request.prompt, "a cat");
+        assert_eq!(sr.request.steps, 25);
+        assert_eq!(sr.request.guidance_scale, 9.6);
+        assert_eq!(sr.request.seed, 3);
+        assert_eq!(sr.request.scheduler, SchedulerKind::Ddim);
+        assert_eq!(sr.request.window, WindowSpec::last(0.4));
+        assert!(sr.return_image);
+        assert!(!sr.return_latent);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let sr = parse(r#"{"op":"generate","prompt":"x"}"#).unwrap();
+        assert_eq!(sr.request.steps, 50);
+        assert_eq!(sr.request.guidance_scale, 7.5);
+        assert_eq!(sr.request.window, WindowSpec::none());
+    }
+
+    #[test]
+    fn invalid_requests_rejected() {
+        assert!(parse(r#"{"op":"generate"}"#).is_err()); // no prompt
+        assert!(parse(r#"{"op":"generate","prompt":"x","steps":-1}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","window_fraction":3.0}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","scheduler":"bogus"}"#).is_err());
+        assert!(
+            parse(r#"{"op":"generate","prompt":"x","window_fraction":0.2,"window_position":"bogus"}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn render_includes_metrics() {
+        let sr = parse(r#"{"op":"generate","prompt":"x"}"#).unwrap();
+        let out = GenerationOutput {
+            latent: vec![0.5, -0.5],
+            image: None,
+            wall_ms: 123.4,
+            breakdown: StepBreakdown { unet_cond_ms: 100.0, ..Default::default() },
+            unet_evals: 90,
+            steps: 50,
+        };
+        let v = render_output(Some(7), &sr, &out);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(7));
+        assert_eq!(v.get("unet_evals").unwrap().as_i64(), Some(90));
+        assert!(v.get("png_b64").is_none());
+        assert!(v.get("latent").is_none());
+    }
+
+    #[test]
+    fn render_latent_when_requested() {
+        let mut sr = parse(r#"{"op":"generate","prompt":"x","return_latent":true}"#).unwrap();
+        sr.return_latent = true;
+        let out = GenerationOutput {
+            latent: vec![1.0, 2.0],
+            image: None,
+            wall_ms: 1.0,
+            breakdown: StepBreakdown::default(),
+            unet_evals: 2,
+            steps: 1,
+        };
+        let v = render_output(None, &sr, &out);
+        let arr = v.get("latent").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+    }
+}

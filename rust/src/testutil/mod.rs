@@ -1,0 +1,6 @@
+//! Test utilities, including the in-repo property-testing mini-framework
+//! (`proptest` is not in the offline registry snapshot — DESIGN.md §5).
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

@@ -1,0 +1,157 @@
+//! Prompt tokenizer — the CLIP-tokenizer substitute.
+//!
+//! The paper conditions SD on CLIP-tokenized prompts. Offline we cannot
+//! ship CLIP's BPE vocabulary, so we use a deterministic *hash-bucket*
+//! word tokenizer: lowercase, split on non-alphanumerics, FNV-1a hash
+//! into the model's vocab range (reserving special ids). What matters for
+//! the reproduction is that (a) the mapping is deterministic, (b) distinct
+//! prompts map to distinct-enough id sequences to produce distinct
+//! conditioning tensors, and (c) the *empty prompt* has a canonical
+//! encoding (the unconditional branch of CFG). See DESIGN.md section 3.
+
+/// Special token ids (reserved at the bottom of the vocab).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+const NUM_SPECIAL: i64 = 3;
+
+/// Deterministic hash-bucket tokenizer targeting a fixed vocab/seq-len.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab_size: usize,
+    seq_len: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize, seq_len: usize) -> Self {
+        assert!(vocab_size as i64 > NUM_SPECIAL, "vocab too small");
+        assert!(seq_len >= 2, "seq_len must fit BOS+EOS");
+        Tokenizer { vocab_size, seq_len }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    fn fnv1a(word: &str) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in word.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    fn word_id(&self, word: &str) -> i32 {
+        let range = self.vocab_size as u64 - NUM_SPECIAL as u64;
+        (NUM_SPECIAL as u64 + Self::fnv1a(word) % range) as i32
+    }
+
+    /// Split into lowercase alphanumeric words.
+    pub fn words(text: &str) -> Vec<String> {
+        text.to_lowercase()
+            .split(|c: char| !c.is_alphanumeric())
+            .filter(|w| !w.is_empty())
+            .map(String::from)
+            .collect()
+    }
+
+    /// Encode to exactly `seq_len` ids: BOS, words..., EOS, PAD...
+    /// Truncates long prompts (keeping EOS), pads short ones.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids = Vec::with_capacity(self.seq_len);
+        ids.push(BOS);
+        for w in Self::words(text) {
+            if ids.len() >= self.seq_len - 1 {
+                break;
+            }
+            ids.push(self.word_id(&w));
+        }
+        ids.push(EOS);
+        while ids.len() < self.seq_len {
+            ids.push(PAD);
+        }
+        ids
+    }
+
+    /// Canonical encoding of the *unconditional* (empty) prompt — the
+    /// `eps(x_t | 0)` branch of Eq. 1.
+    pub fn encode_uncond(&self) -> Vec<i32> {
+        self.encode("")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(1024, 8)
+    }
+
+    #[test]
+    fn encode_shape_and_specials() {
+        let ids = tok().encode("A person holding a cat");
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], BOS);
+        assert!(ids.contains(&EOS));
+        for &id in &ids {
+            assert!((0..1024).contains(&id));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(tok().encode("hello world"), tok().encode("hello world"));
+    }
+
+    #[test]
+    fn case_and_punctuation_normalized() {
+        assert_eq!(tok().encode("Hello, WORLD!"), tok().encode("hello world"));
+    }
+
+    #[test]
+    fn distinct_prompts_distinct_ids() {
+        let a = tok().encode("a red ball");
+        let b = tok().encode("a blue pyramid");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn uncond_is_bos_eos_pad() {
+        let ids = tok().encode_uncond();
+        assert_eq!(ids[0], BOS);
+        assert_eq!(ids[1], EOS);
+        assert!(ids[2..].iter().all(|&i| i == PAD));
+    }
+
+    #[test]
+    fn truncation_keeps_eos() {
+        let long = "one two three four five six seven eight nine ten";
+        let ids = tok().encode(long);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[7], EOS);
+        assert!(!ids.contains(&PAD));
+    }
+
+    #[test]
+    fn word_ids_avoid_specials() {
+        let t = tok();
+        for w in ["a", "cat", "dragon", "x1", "zzz"] {
+            assert!(t.word_id(w) >= NUM_SPECIAL as i32);
+        }
+    }
+
+    #[test]
+    fn words_splitter() {
+        assert_eq!(
+            Tokenizer::words("3d-rendering of 5 tennis balls!"),
+            vec!["3d", "rendering", "of", "5", "tennis", "balls"]
+        );
+        assert!(Tokenizer::words("  ., !").is_empty());
+    }
+}

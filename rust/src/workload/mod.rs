@@ -1,0 +1,279 @@
+//! Workload generation + trace replay — the serving-evaluation substrate.
+//!
+//! The paper measures single-stream latency; a serving system also cares
+//! how the saving translates under load (queueing amplifies per-image
+//! savings into latency/throughput headroom). This module provides
+//! deterministic arrival processes (Poisson / uniform / bursty), trace
+//! synthesis over the Table-2 prompt corpus, and a replay driver that
+//! submits against a [`crate::coordinator::Coordinator`]
+//! with per-request SLO accounting. The `slo_serving` bench builds its
+//! load-vs-latency curves on top.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::engine::GenerationRequest;
+use crate::error::Result;
+use crate::guidance::WindowSpec;
+use crate::metrics::SampleStats;
+use crate::prompts;
+use crate::rng::Rng;
+use crate::scheduler::SchedulerKind;
+
+/// Inter-arrival process for synthetic request streams.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// Deterministic uniform spacing at `rate_per_s`.
+    Uniform { rate_per_s: f64 },
+    /// On/off bursts: Poisson at `burst_rate_per_s` for `on_ms`, idle for
+    /// `off_ms`, repeating.
+    Bursty { burst_rate_per_s: f64, on_ms: u64, off_ms: u64 },
+}
+
+impl ArrivalProcess {
+    /// Generate `n` arrival offsets (milliseconds from start), sorted.
+    pub fn arrivals(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::for_stream(seed, 0x41525256); // "ARRV"
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                assert!(rate_per_s > 0.0);
+                let mean_gap_ms = 1e3 / rate_per_s;
+                for _ in 0..n {
+                    // exponential inter-arrival via inverse CDF
+                    let u = 1.0 - rng.next_f64(); // (0, 1]
+                    t += -mean_gap_ms * u.ln();
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Uniform { rate_per_s } => {
+                assert!(rate_per_s > 0.0);
+                let gap = 1e3 / rate_per_s;
+                for i in 0..n {
+                    out.push(gap * i as f64);
+                }
+            }
+            ArrivalProcess::Bursty { burst_rate_per_s, on_ms, off_ms } => {
+                assert!(burst_rate_per_s > 0.0);
+                let mean_gap_ms = 1e3 / burst_rate_per_s;
+                let period = (on_ms + off_ms) as f64;
+                for _ in 0..n {
+                    let u = 1.0 - rng.next_f64();
+                    t += -mean_gap_ms * u.ln();
+                    // skip the off window: fold the raw timeline onto
+                    // on-periods only
+                    let cycle = (t / on_ms as f64).floor();
+                    out.push(t + cycle * off_ms as f64 - if cycle > 0.0 { 0.0 } else { 0.0 });
+                    let _ = period;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Arrival offset from trace start, milliseconds.
+    pub at_ms: f64,
+    pub request: GenerationRequest,
+}
+
+/// Trace synthesis parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub arrivals: ArrivalProcess,
+    pub num_requests: usize,
+    pub steps: usize,
+    pub scheduler: SchedulerKind,
+    /// Selective-guidance window applied to all requests.
+    pub window: WindowSpec,
+    pub guidance_scale: f32,
+    pub decode: bool,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            arrivals: ArrivalProcess::Poisson { rate_per_s: 4.0 },
+            num_requests: 32,
+            steps: 50,
+            scheduler: SchedulerKind::Pndm,
+            window: WindowSpec::none(),
+            guidance_scale: 7.5,
+            decode: false,
+            seed: 0,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Synthesize a deterministic trace over the Table-2 corpus.
+    pub fn synthesize(&self) -> Vec<TraceEntry> {
+        let arrivals = self.arrivals.arrivals(self.num_requests, self.seed);
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, at_ms)| {
+                let prompt = prompts::TABLE2[i % prompts::TABLE2.len()];
+                let request = GenerationRequest::new(prompt)
+                    .steps(self.steps)
+                    .scheduler(self.scheduler)
+                    .guidance_scale(self.guidance_scale)
+                    .selective(self.window)
+                    .seed(self.seed.wrapping_add(i as u64))
+                    .decode(self.decode);
+                TraceEntry { at_ms, request }
+            })
+            .collect()
+    }
+}
+
+/// Result of replaying one trace.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// End-to-end latency per request (submit -> response), ms, in
+    /// completion order.
+    pub latencies_ms: Vec<f64>,
+    /// Wall time of the whole replay, seconds.
+    pub wall_s: f64,
+    /// Achieved throughput, images/s.
+    pub throughput: f64,
+    /// Requests that failed.
+    pub failures: usize,
+}
+
+impl ReplayReport {
+    pub fn latency_stats(&self) -> SampleStats {
+        SampleStats::from(&self.latencies_ms)
+    }
+
+    /// Fraction of requests meeting a latency SLO.
+    pub fn slo_attainment(&self, slo_ms: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ms.iter().filter(|&&l| l <= slo_ms).count() as f64
+            / self.latencies_ms.len() as f64
+    }
+}
+
+/// Replay a trace against a coordinator, honoring arrival times
+/// (open-loop). Blocks until every request completes.
+pub fn replay(coordinator: &Arc<Coordinator>, trace: &[TraceEntry]) -> Result<ReplayReport> {
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(trace.len());
+    for entry in trace {
+        let target = Duration::from_secs_f64(entry.at_ms.max(0.0) / 1e3);
+        let now = start.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        pending.push(coordinator.submit(entry.request.clone())?);
+    }
+    let mut latencies = Vec::with_capacity(pending.len());
+    let mut failures = 0usize;
+    for ticket in pending {
+        // latency is stamped by the worker at completion, so consuming
+        // the tickets late (after the open-loop submission ends) does not
+        // inflate the numbers
+        match ticket.wait_timed() {
+            Ok((_, latency)) => latencies.push(latency.as_secs_f64() * 1e3),
+            Err(_) => failures += 1,
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let throughput = latencies.len() as f64 / wall_s;
+    Ok(ReplayReport { latencies_ms: latencies, wall_s, throughput, failures })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn poisson_arrivals_sorted_and_rate_correct() {
+        let ap = ArrivalProcess::Poisson { rate_per_s: 100.0 };
+        let arr = ap.arrivals(2000, 1);
+        assert_eq!(arr.len(), 2000);
+        assert!(arr.windows(2).all(|w| w[1] >= w[0]));
+        // mean gap ~ 10ms within 10%
+        let mean_gap = arr.last().unwrap() / 2000.0;
+        assert!((mean_gap - 10.0).abs() < 1.0, "mean gap {mean_gap}ms");
+    }
+
+    #[test]
+    fn uniform_arrivals_exact() {
+        let ap = ArrivalProcess::Uniform { rate_per_s: 10.0 };
+        let arr = ap.arrivals(5, 0);
+        assert_eq!(arr, vec![0.0, 100.0, 200.0, 300.0, 400.0]);
+    }
+
+    #[test]
+    fn arrivals_deterministic_by_seed() {
+        let ap = ArrivalProcess::Poisson { rate_per_s: 5.0 };
+        assert_eq!(ap.arrivals(50, 7), ap.arrivals(50, 7));
+        assert_ne!(ap.arrivals(50, 7), ap.arrivals(50, 8));
+    }
+
+    #[test]
+    fn bursty_arrivals_monotone() {
+        let ap = ArrivalProcess::Bursty { burst_rate_per_s: 50.0, on_ms: 100, off_ms: 400 };
+        let arr = ap.arrivals(100, 3);
+        assert!(arr.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn trace_synthesis_covers_corpus() {
+        let spec = WorkloadSpec {
+            num_requests: 70,
+            window: WindowSpec::last(0.2),
+            ..WorkloadSpec::default()
+        };
+        let trace = spec.synthesize();
+        assert_eq!(trace.len(), 70);
+        // prompts cycle through Table 2
+        assert_eq!(trace[0].request.prompt, prompts::TABLE2[0]);
+        assert_eq!(trace[61].request.prompt, prompts::TABLE2[0]);
+        // every request carries the spec's policy and a distinct seed
+        assert!(trace.iter().all(|t| t.request.window == WindowSpec::last(0.2)));
+        let mut seeds: Vec<u64> = trace.iter().map(|t| t.request.seed).collect();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 70);
+    }
+
+    #[test]
+    fn replay_report_slo_math() {
+        let report = ReplayReport {
+            latencies_ms: vec![10.0, 20.0, 30.0, 40.0],
+            wall_s: 1.0,
+            throughput: 4.0,
+            failures: 0,
+        };
+        assert_eq!(report.slo_attainment(25.0), 0.5);
+        assert_eq!(report.slo_attainment(100.0), 1.0);
+        assert_eq!(report.slo_attainment(5.0), 0.0);
+    }
+
+    #[test]
+    fn arrival_rates_scale_property() {
+        forall("arrival rate scaling", 20, |g| {
+            let rate = g.f64_in(1.0, 200.0);
+            let ap = ArrivalProcess::Poisson { rate_per_s: rate };
+            let n = 500;
+            let arr = ap.arrivals(n, g.u64());
+            let measured_rate = n as f64 / (arr.last().unwrap() / 1e3);
+            assert!(
+                (measured_rate - rate).abs() / rate < 0.25,
+                "target {rate}/s, measured {measured_rate}/s"
+            );
+        });
+    }
+}

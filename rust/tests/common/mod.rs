@@ -1,0 +1,40 @@
+//! Shared helpers for integration tests (need built artifacts).
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use selective_guidance::runtime::ModelStack;
+
+/// Locate the tiny-preset artifacts, or None when not built.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("SG_ARTIFACTS").unwrap_or_else(|_| "artifacts/tiny".into());
+    let p = PathBuf::from(dir);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+/// Process-wide shared stack (PJRT compile is expensive; share it).
+pub fn shared_stack() -> Option<Arc<ModelStack>> {
+    static STACK: OnceLock<Option<Arc<ModelStack>>> = OnceLock::new();
+    STACK
+        .get_or_init(|| artifacts_dir().map(|d| Arc::new(ModelStack::load(d).expect("load stack"))))
+        .clone()
+}
+
+/// Skip (return early) when artifacts aren't built. Prints a notice so
+/// skipped coverage is visible in CI output.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        match $crate::common::shared_stack() {
+            Some(stack) => stack,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}

@@ -1,0 +1,273 @@
+//! Integration: the denoising engine over real artifacts.
+
+mod common;
+
+use selective_guidance::config::EngineConfig;
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::WindowSpec;
+use selective_guidance::quality::latent_drift;
+use selective_guidance::scheduler::SchedulerKind;
+
+fn engine() -> Option<Engine> {
+    common::shared_stack().map(|s| Engine::new(s, EngineConfig::default()))
+}
+
+macro_rules! require_engine {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn quick(prompt: &str) -> GenerationRequest {
+    GenerationRequest::new(prompt)
+        .steps(10)
+        .scheduler(SchedulerKind::Ddim)
+        .decode(false)
+        .seed(42)
+}
+
+#[test]
+fn generate_deterministic() {
+    let e = require_engine!();
+    let a = e.generate(&quick("A person holding a cat")).unwrap();
+    let b = e.generate(&quick("A person holding a cat")).unwrap();
+    assert_eq!(a.latent, b.latent, "same seed must be bit-identical");
+    assert!(a.latent.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn seeds_change_output() {
+    let e = require_engine!();
+    let a = e.generate(&quick("x y z")).unwrap();
+    let b = e.generate(&quick("x y z").seed(43)).unwrap();
+    assert_ne!(a.latent, b.latent);
+}
+
+#[test]
+fn prompts_change_output() {
+    let e = require_engine!();
+    let a = e.generate(&quick("A red ball")).unwrap();
+    let b = e.generate(&quick("A blue pyramid")).unwrap();
+    assert_ne!(a.latent, b.latent);
+}
+
+#[test]
+fn unet_eval_counts_match_policy() {
+    let e = require_engine!();
+    // baseline: 2 evals per step
+    let base = e.generate(&quick("p")).unwrap();
+    assert_eq!(base.unet_evals, 20);
+    // last 50% optimized: 10 steps -> 5 dual + 5 single = 15
+    let opt = e
+        .generate(&quick("p").selective(WindowSpec::last(0.5)))
+        .unwrap();
+    assert_eq!(opt.unet_evals, 15);
+    // unguided (s=1): 1 eval per step
+    let ung = e.generate(&quick("p").guidance_scale(1.0)).unwrap();
+    assert_eq!(ung.unet_evals, 10);
+}
+
+#[test]
+fn scale_one_equals_full_window_optimization() {
+    // With s=1, Dual and CondOnly produce identical eps_hat, so a fully
+    // optimized window must give the exact same trajectory.
+    let e = require_engine!();
+    let a = e.generate(&quick("p").guidance_scale(1.0)).unwrap();
+    let b = e
+        .generate(&quick("p").guidance_scale(1.0).selective(WindowSpec::last(1.0)))
+        .unwrap();
+    assert_eq!(a.latent, b.latent);
+}
+
+#[test]
+fn optimized_window_changes_latent_but_not_wildly() {
+    let e = require_engine!();
+    let base = e.generate(&quick("A silver dragon head")).unwrap();
+    let opt = e
+        .generate(&quick("A silver dragon head").selective(WindowSpec::last(0.2)))
+        .unwrap();
+    let drift = latent_drift(&base.latent, &opt.latent);
+    assert!(drift > 0.0, "optimization must alter the trajectory");
+    assert!(drift < 2.0, "20% window should not explode the latent (drift {drift})");
+}
+
+#[test]
+fn later_windows_drift_less_than_earlier() {
+    // the paper's §2 claim, at latent level: optimizing the FIRST 25%
+    // hurts (drifts) more than optimizing the LAST 25%
+    let e = require_engine!();
+    let req = |w| quick("A person holding a cat").steps(16).selective(w);
+    let base = e.generate(&quick("A person holding a cat").steps(16)).unwrap();
+    let first = e.generate(&req(WindowSpec::first(0.25))).unwrap();
+    let last = e.generate(&req(WindowSpec::last(0.25))).unwrap();
+    let d_first = latent_drift(&base.latent, &first.latent);
+    let d_last = latent_drift(&base.latent, &last.latent);
+    assert!(
+        d_last < d_first,
+        "last-window drift {d_last} should be below first-window drift {d_first}"
+    );
+}
+
+#[test]
+fn batch_matches_individual_runs() {
+    let e = require_engine!();
+    let reqs = vec![
+        quick("A red ball").seed(1),
+        quick("A blue pyramid").seed(2).selective(WindowSpec::last(0.5)),
+        quick("A cat").seed(3).guidance_scale(9.6),
+    ];
+    let batch = e.generate_batch(&reqs).unwrap();
+    for (req, out) in reqs.iter().zip(&batch) {
+        let solo = e.generate(req).unwrap();
+        assert_eq!(out.latent.len(), solo.latent.len());
+        let max_diff = out
+            .latent
+            .iter()
+            .zip(&solo.latent)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_diff < 1e-3,
+            "batched result differs from solo run by {max_diff} for {:?}",
+            req.prompt
+        );
+    }
+}
+
+#[test]
+fn decode_produces_image() {
+    let e = require_engine!();
+    let out = e.generate(&quick("p").decode(true)).unwrap();
+    let img = out.image.expect("image requested");
+    let m = e.stack().model();
+    assert_eq!((img.width, img.height), (m.image_size, m.image_size));
+    // non-degenerate image
+    let luma = img.luma();
+    let mean = luma.iter().sum::<f32>() / luma.len() as f32;
+    assert!(luma.iter().any(|v| (v - mean).abs() > 1.0));
+}
+
+#[test]
+fn stochastic_scheduler_reproducible_by_seed() {
+    let e = require_engine!();
+    let req = quick("p").scheduler(SchedulerKind::EulerAncestral);
+    let a = e.generate(&req).unwrap();
+    let b = e.generate(&req).unwrap();
+    assert_eq!(a.latent, b.latent);
+}
+
+#[test]
+fn all_schedulers_run_end_to_end() {
+    let e = require_engine!();
+    for kind in [
+        SchedulerKind::Ddim,
+        SchedulerKind::Ddpm,
+        SchedulerKind::Pndm,
+        SchedulerKind::Euler,
+        SchedulerKind::EulerAncestral,
+    ] {
+        let out = e.generate(&quick("p").scheduler(kind)).unwrap();
+        assert!(
+            out.latent.iter().all(|v| v.is_finite()),
+            "{kind:?} produced non-finite latent"
+        );
+    }
+}
+
+#[test]
+fn breakdown_accounts_for_wall_time() {
+    let e = require_engine!();
+    let out = e.generate(&quick("p")).unwrap();
+    let accounted = out.breakdown.total_ms();
+    assert!(accounted > 0.0);
+    assert!(
+        accounted <= out.wall_ms * 1.05,
+        "breakdown {accounted}ms exceeds wall {}ms",
+        out.wall_ms
+    );
+    // UNet should dominate (the premise of the paper's cost model)
+    let unet = out.breakdown.unet_cond_ms + out.breakdown.unet_uncond_ms;
+    assert!(unet > 0.5 * out.wall_ms, "unet {unet}ms of wall {}ms", out.wall_ms);
+}
+
+#[test]
+fn fused_b2_strategy_matches_two_b1() {
+    // ablation A's two execution strategies must be numerically
+    // equivalent — they run the same HLO math, just batched differently
+    let stack = match common::shared_stack() {
+        Some(s) => s,
+        None => return,
+    };
+    let mut cfg = EngineConfig::default();
+    cfg.dual_strategy = selective_guidance::config::DualStrategy::FusedB2;
+    let fused = Engine::new(std::sync::Arc::clone(&stack), cfg);
+    let split = Engine::new(stack, EngineConfig::default());
+    let req = quick("A cat on a mat").selective(WindowSpec::last(0.3));
+    let a = split.generate(&req).unwrap();
+    let b = fused.generate(&req).unwrap();
+    assert_eq!(a.unet_evals, b.unet_evals);
+    let max_diff = a
+        .latent
+        .iter()
+        .zip(&b.latent)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "strategies diverge by {max_diff}");
+}
+
+#[test]
+fn adaptive_controller_skips_and_stays_sane() {
+    let e = require_engine!();
+    let base = e.generate(&quick("A foggy sunrise over a valley").steps(20)).unwrap();
+    let adaptive = e
+        .generate(
+            &quick("A foggy sunrise over a valley").steps(20).adaptive(
+                selective_guidance::guidance::AdaptiveConfig {
+                    threshold: 10.0, // huge: skip as soon as allowed
+                    patience: 1,
+                    min_dual_fraction: 0.3,
+                    probe_every: 0,
+                },
+            ),
+        )
+        .unwrap();
+    // 20 steps, 30% protected: the first 6 iterations stay dual (the
+    // controller may arm during them but decide() protects the prefix),
+    // the remaining 14 run cond-only => exactly 6*2 + 14 = 26 evals
+    assert!(adaptive.unet_evals < base.unet_evals);
+    assert_eq!(adaptive.unet_evals, 26, "protected prefix must stay dual");
+    assert!(adaptive.latent.iter().all(|v| v.is_finite()));
+    let drift = latent_drift(&base.latent, &adaptive.latent);
+    assert!(drift < 2.0, "adaptive skipping exploded the latent: {drift}");
+}
+
+#[test]
+fn adaptive_zero_threshold_never_skips() {
+    let e = require_engine!();
+    let out = e
+        .generate(&quick("p").steps(10).adaptive(
+            selective_guidance::guidance::AdaptiveConfig {
+                threshold: 0.0,
+                patience: 1,
+                min_dual_fraction: 0.0,
+                probe_every: 0,
+            },
+        ))
+        .unwrap();
+    assert_eq!(out.unet_evals, 20, "threshold 0 must behave like the baseline");
+}
+
+#[test]
+fn mixed_steps_rejected_in_batch() {
+    let e = require_engine!();
+    let err = e
+        .generate_batch(&[quick("a").steps(10), quick("b").steps(20)])
+        .unwrap_err();
+    assert!(err.to_string().contains("share steps"));
+}

@@ -1,0 +1,163 @@
+//! Integration: artifact loading + PJRT execution of every executable.
+
+mod common;
+
+use selective_guidance::rng::Rng;
+use selective_guidance::tokenizer::Tokenizer;
+
+#[test]
+fn manifest_and_stack_load() {
+    let stack = require_artifacts!();
+    let m = stack.model();
+    assert_eq!(m.preset, "tiny");
+    assert_eq!(m.latent_channels, 4);
+    assert!(m.batch_sizes.contains(&1));
+    assert_eq!(m.image_size, m.latent_size * 4); // two upsample stages
+}
+
+#[test]
+fn text_encoder_runs_and_discriminates() {
+    let stack = require_artifacts!();
+    let m = stack.model();
+    let tok = Tokenizer::new(m.vocab_size, m.seq_len);
+    let a = stack.encode_text(&tok.encode("A person holding a cat")).unwrap();
+    let b = stack.encode_text(&tok.encode("A silver dragon head")).unwrap();
+    assert_eq!(a.len(), m.ctx_elems());
+    assert!(a.iter().all(|v| v.is_finite()));
+    let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+    assert!(diff > 1e-3, "different prompts must encode differently");
+    // determinism
+    let a2 = stack.encode_text(&tok.encode("A person holding a cat")).unwrap();
+    assert_eq!(a, a2);
+}
+
+#[test]
+fn uncond_ctx_cached_and_stable() {
+    let stack = require_artifacts!();
+    let u1 = stack.uncond_ctx().unwrap();
+    let u2 = stack.uncond_ctx().unwrap();
+    assert_eq!(u1, u2);
+    assert_eq!(u1.len(), stack.model().ctx_elems());
+}
+
+#[test]
+fn unet_executes_all_batch_sizes() {
+    let stack = require_artifacts!();
+    let m = stack.model();
+    let mut rng = Rng::new(0);
+    for &b in &m.batch_sizes.clone() {
+        let latents = rng.normal_vec(b * m.latent_elems());
+        let ts = vec![500.0f32; b];
+        let ctx = rng.normal_vec(b * m.ctx_elems());
+        let eps = stack.unet_eps(b, &latents, &ts, &ctx).unwrap();
+        assert_eq!(eps.len(), b * m.latent_elems(), "batch {b}");
+        assert!(eps.iter().all(|v| v.is_finite()), "batch {b}");
+        // output must not be trivially zero
+        let norm: f32 = eps.iter().map(|v| v * v).sum();
+        assert!(norm > 1e-6, "batch {b}: zero eps");
+    }
+}
+
+#[test]
+fn unet_batch_consistency() {
+    // running [a, b] as batch-2 equals running a and b separately
+    let stack = require_artifacts!();
+    let m = stack.model();
+    if !m.batch_sizes.contains(&2) {
+        return;
+    }
+    let mut rng = Rng::new(1);
+    let la = rng.normal_vec(m.latent_elems());
+    let lb = rng.normal_vec(m.latent_elems());
+    let ca = rng.normal_vec(m.ctx_elems());
+    let cb = rng.normal_vec(m.ctx_elems());
+    let ea = stack.unet_eps(1, &la, &[300.0], &ca).unwrap();
+    let eb = stack.unet_eps(1, &lb, &[700.0], &cb).unwrap();
+    let mut lat2 = la.clone();
+    lat2.extend_from_slice(&lb);
+    let mut ctx2 = ca.clone();
+    ctx2.extend_from_slice(&cb);
+    let e2 = stack.unet_eps(2, &lat2, &[300.0, 700.0], &ctx2).unwrap();
+    for (i, (x, y)) in e2[..m.latent_elems()].iter().zip(&ea).enumerate() {
+        assert!((x - y).abs() < 1e-4, "sample 0 elem {i}: {x} vs {y}");
+    }
+    for (i, (x, y)) in e2[m.latent_elems()..].iter().zip(&eb).enumerate() {
+        assert!((x - y).abs() < 1e-4, "sample 1 elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn cfg_combine_matches_host_math() {
+    let stack = require_artifacts!();
+    let m = stack.model();
+    let mut rng = Rng::new(2);
+    let u = rng.normal_vec(m.latent_elems());
+    let c = rng.normal_vec(m.latent_elems());
+    for scale in [0.0f32, 1.0, 7.5, 9.6] {
+        let dev = stack.cfg_combine(1, &u, &c, scale).unwrap();
+        for i in 0..u.len() {
+            let host = u[i] + scale * (c[i] - u[i]);
+            assert!(
+                (dev[i] - host).abs() < 1e-5,
+                "scale {scale} elem {i}: {} vs {host}",
+                dev[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn cfg_combine_scale_one_is_conditional() {
+    // the identity underpinning the paper's optimization
+    let stack = require_artifacts!();
+    let m = stack.model();
+    let mut rng = Rng::new(3);
+    let u = rng.normal_vec(m.latent_elems());
+    let c = rng.normal_vec(m.latent_elems());
+    let out = stack.cfg_combine(1, &u, &c, 1.0).unwrap();
+    for (a, b) in out.iter().zip(&c) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn vae_decodes_to_image_range() {
+    let stack = require_artifacts!();
+    let m = stack.model();
+    let mut rng = Rng::new(4);
+    let latent = rng.normal_vec(m.latent_elems());
+    let img = stack.decode(&latent).unwrap();
+    assert_eq!(img.len(), m.image_elems());
+    // tanh output in [-1, 1]
+    assert!(img.iter().all(|v| (-1.0..=1.0).contains(v) && v.is_finite()));
+    // and not constant
+    let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+    assert!(img.iter().any(|v| (v - mean).abs() > 1e-4));
+}
+
+#[test]
+fn unet_timestep_sensitivity() {
+    // the UNet must respond to t — otherwise selective windows are
+    // indistinguishable from global optimization
+    let stack = require_artifacts!();
+    let m = stack.model();
+    let mut rng = Rng::new(5);
+    let latent = rng.normal_vec(m.latent_elems());
+    let ctx = rng.normal_vec(m.ctx_elems());
+    let e1 = stack.unet_eps(1, &latent, &[10.0], &ctx).unwrap();
+    let e2 = stack.unet_eps(1, &latent, &[900.0], &ctx).unwrap();
+    let diff: f32 = e1.iter().zip(&e2).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-3);
+}
+
+#[test]
+fn bucketize_covers_any_count() {
+    let stack = require_artifacts!();
+    for n in 1..=9 {
+        let buckets = stack.bucketize(n);
+        assert_eq!(buckets.iter().sum::<usize>(), n);
+        for b in buckets {
+            assert!(stack.model().batch_sizes.contains(&b));
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Integration: TCP JSON-lines server end-to-end over localhost.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
+use selective_guidance::engine::Engine;
+use selective_guidance::json::Value;
+use selective_guidance::server::{b64decode, Client, Server};
+
+fn start_server() -> Option<(Server, String)> {
+    let stack = common::shared_stack()?;
+    let engine = Arc::new(Engine::new(stack, EngineConfig::default()));
+    let coordinator = Coordinator::start(
+        engine,
+        CoordinatorConfig { max_batch: 4, workers: 1, batch_wait: Duration::from_millis(2) },
+    );
+    let server = Server::start(coordinator, "127.0.0.1:0").expect("bind");
+    let addr = server.addr().to_string();
+    Some((server, addr))
+}
+
+macro_rules! require_server {
+    () => {
+        match start_server() {
+            Some(s) => s,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn ping_and_stats() {
+    let (_server, addr) = require_server!();
+    let mut client = Client::connect(&addr).unwrap();
+    assert!(client.ping().unwrap());
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(stats.get("submitted").unwrap().as_i64(), Some(0));
+}
+
+#[test]
+fn generate_over_wire() {
+    let (_server, addr) = require_server!();
+    let mut client = Client::connect(&addr).unwrap();
+    let resp = client
+        .call(
+            Value::obj()
+                .with("op", "generate")
+                .with("prompt", "A person holding a cat")
+                .with("steps", 6i64)
+                .with("scheduler", "ddim")
+                .with("seed", 5i64)
+                .with("window_fraction", 0.5)
+                .with("return_image", true),
+        )
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    // 6 steps, half optimized: 3*2 + 3*1 = 9 evals
+    assert_eq!(resp.get("unet_evals").unwrap().as_i64(), Some(9));
+    assert!(resp.get("wall_ms").unwrap().as_f64().unwrap() > 0.0);
+    // PNG round-trips through base64 and carries the PNG signature
+    let png_b64 = resp.get("png_b64").unwrap().as_str().unwrap();
+    let png = b64decode(png_b64).expect("valid base64");
+    assert_eq!(&png[..4], &[0x89, b'P', b'N', b'G']);
+}
+
+#[test]
+fn error_responses_for_bad_requests() {
+    let (_server, addr) = require_server!();
+    let mut client = Client::connect(&addr).unwrap();
+    let resp = client.call(Value::obj().with("op", "generate")).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("prompt"));
+
+    let resp = client.call(Value::obj().with("op", "definitely-not-an-op")).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+}
+
+#[test]
+fn multiple_sequential_requests_one_connection() {
+    let (_server, addr) = require_server!();
+    let mut client = Client::connect(&addr).unwrap();
+    for seed in 0..3i64 {
+        let resp = client
+            .call(
+                Value::obj()
+                    .with("op", "generate")
+                    .with("prompt", "x")
+                    .with("steps", 4i64)
+                    .with("scheduler", "ddim")
+                    .with("seed", seed),
+            )
+            .unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    }
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("completed").unwrap().as_i64(), Some(3));
+}
+
+#[test]
+fn concurrent_clients() {
+    let (_server, addr) = require_server!();
+    let mut handles = Vec::new();
+    for seed in 0..4i64 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let resp = client
+                .call(
+                    Value::obj()
+                        .with("op", "generate")
+                        .with("prompt", "concurrent")
+                        .with("steps", 4i64)
+                        .with("scheduler", "ddim")
+                        .with("seed", seed),
+                )
+                .unwrap();
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn malformed_json_reported() {
+    let (_server, addr) = require_server!();
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.write_all(b"this is not json\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = selective_guidance::json::from_str(&line).unwrap();
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("bad json"));
+}
