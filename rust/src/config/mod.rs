@@ -11,6 +11,7 @@ pub use toml::{TomlDoc, TomlValue};
 
 use crate::error::{Error, Result};
 use crate::guidance::{SelectiveGuidancePolicy, WindowSpec};
+use crate::qos::QosConfig;
 use crate::scheduler::SchedulerKind;
 
 /// How a full-CFG (dual) iteration executes its two UNet passes.
@@ -185,12 +186,14 @@ impl ServerConfig {
     }
 }
 
-/// Complete deployment configuration (engine + server + artifact dir).
+/// Complete deployment configuration (engine + server + qos + artifacts).
 #[derive(Debug, Clone, Default)]
 pub struct RunConfig {
     pub artifacts_dir: Option<String>,
     pub engine: EngineConfig,
     pub server: ServerConfig,
+    /// `[qos]` section — disabled by default (see `qos::QosConfig`).
+    pub qos: QosConfig,
 }
 
 impl RunConfig {
@@ -209,6 +212,7 @@ impl RunConfig {
             artifacts_dir,
             engine: EngineConfig::from_toml(&doc)?,
             server: ServerConfig::from_toml(&doc)?,
+            qos: QosConfig::from_toml(&doc)?,
         })
     }
 }
@@ -236,6 +240,15 @@ bind = "0.0.0.0:9000"
 max_batch = 4
 workers = 2
 batch_wait_ms = 5
+
+[qos]
+enabled = true
+max_queue_depth = 32
+floor_fraction = 0.4
+ramp_low = 1
+ramp_high = 8
+default_deadline_ms = 2500.0
+ewma_alpha = 0.3
 "#;
 
     #[test]
@@ -248,6 +261,13 @@ batch_wait_ms = 5
         assert_eq!(cfg.engine.seed, 42);
         assert_eq!(cfg.server.bind, "0.0.0.0:9000");
         assert_eq!(cfg.server.workers, 2);
+        assert!(cfg.qos.enabled);
+        assert_eq!(cfg.qos.max_queue_depth, 32);
+        assert!((cfg.qos.floor_fraction - 0.4).abs() < 1e-12);
+        assert_eq!(cfg.qos.ramp_low, 1);
+        assert_eq!(cfg.qos.ramp_high, 8);
+        assert!((cfg.qos.default_deadline_ms - 2500.0).abs() < 1e-12);
+        assert!((cfg.qos.ewma_alpha - 0.3).abs() < 1e-12);
     }
 
     #[test]
@@ -257,6 +277,17 @@ batch_wait_ms = 5
         assert_eq!(cfg.engine.scheduler, SchedulerKind::Pndm);
         assert_eq!(cfg.engine.window, WindowSpec::none());
         assert_eq!(cfg.server.max_batch, 4);
+        assert!(!cfg.qos.enabled);
+        assert_eq!(cfg.qos, QosConfig::default());
+    }
+
+    #[test]
+    fn invalid_qos_section_rejected() {
+        assert!(RunConfig::from_str("[qos]\nmax_queue_depth = 0\n").is_err());
+        assert!(RunConfig::from_str("[qos]\nfloor_fraction = 1.5\n").is_err());
+        assert!(RunConfig::from_str("[qos]\nramp_low = 9\nramp_high = 3\n").is_err());
+        assert!(RunConfig::from_str("[qos]\newma_alpha = 0.0\n").is_err());
+        assert!(RunConfig::from_str("[qos]\nenabled = \"yes\"\n").is_err());
     }
 
     #[test]

@@ -59,6 +59,45 @@ mod tests {
     }
 
     #[test]
+    fn both_axes_mismatched_incompatible() {
+        let a = GenerationRequest::new("a").steps(50).scheduler(SchedulerKind::Pndm);
+        let b = GenerationRequest::new("b").steps(25).scheduler(SchedulerKind::Ddim);
+        assert!(!compatible(&BatchClass::of(&a), &b));
+        assert!(!compatible(&BatchClass::of(&b), &a));
+    }
+
+    #[test]
+    fn singleton_class_admits_itself() {
+        // the max_batch = 1 degenerate case: every batch is a singleton,
+        // so the only compatibility question is reflexivity — which must
+        // hold for any request, whatever its knobs
+        let r = GenerationRequest::new("solo")
+            .steps(1)
+            .seed(123)
+            .guidance_scale(1.0)
+            .selective(WindowSpec::last(1.0));
+        assert!(compatible(&BatchClass::of(&r), &r));
+    }
+
+    #[test]
+    fn window_and_scale_never_split_classes() {
+        // mixed optimized/baseline traffic is the whole point: the
+        // engine splits the uncond pass per iteration, so windows and
+        // scales must not fragment batches
+        let base = GenerationRequest::new("a").steps(50);
+        let class = BatchClass::of(&base);
+        for f in [0.0, 0.2, 0.5, 1.0] {
+            for gs in [1.0f32, 7.5, 15.0] {
+                let r = GenerationRequest::new("b")
+                    .steps(50)
+                    .selective(WindowSpec::last(f))
+                    .guidance_scale(gs);
+                assert!(compatible(&class, &r), "f={f} gs={gs}");
+            }
+        }
+    }
+
+    #[test]
     fn compatibility_is_equivalence() {
         forall("batch class equivalence", 100, |g| {
             let mk = |g: &mut crate::testutil::prop::Gen| {

@@ -3,17 +3,27 @@
 //! The serving topology mirrors a vLLM-style router scaled to this stack:
 //!
 //! ```text
-//!   clients ──> submit() ──> [admission queue]
-//!                                  │  batcher thread: group compatible
-//!                                  │  requests (same steps+scheduler) up
-//!                                  │  to max_batch within batch_wait
-//!                                  ▼
-//!                            [batch channel] ──> worker threads ──> Engine
+//!   clients ──> submit() ──> [QosPolicy] ──> [admission queue]
+//!                               │                  │  batcher thread: group
+//!                               │ 429/503          │  compatible requests
+//!                               ▼ rejection       │  (same steps+scheduler)
+//!                             shed                 ▼  up to max_batch
+//!                                            [batch channel] ──> workers ──> Engine
+//!                                                  ▲                │
+//!                                                  └── per-batch timing
+//!                                                      (QoS feedback)
 //! ```
 //!
 //! Concurrency uses std threads + mpsc channels (tokio is absent from the
 //! offline registry snapshot — DESIGN.md §5); the structure (admission /
 //! batching / execution decoupled, graceful drain) is the same.
+//!
+//! QoS (DESIGN.md §7) is pluggable: [`Coordinator::start_qos`] installs a
+//! [`QosPolicy`] consulted *before* a request enters the queue — it may
+//! shed (explicit [`Error::Rejected`]) or widen the request's
+//! selective-guidance window — and workers feed per-batch service times
+//! back to it. Jobs whose deadline expires while queued are failed with
+//! [`Error::DeadlineExceeded`] instead of wasting UNet work.
 
 mod batcher;
 
@@ -27,6 +37,7 @@ use std::time::{Duration, Instant};
 use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
+use crate::qos::{expired, AdmissionDecision, QosMeta, QosPolicy};
 
 /// Coordinator tuning knobs.
 #[derive(Debug, Clone)]
@@ -51,8 +62,19 @@ pub struct CoordinatorStats {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Shed at admission by the QoS policy (never entered the queue).
+    pub rejected: u64,
+    /// Expired in the queue past their deadline (never executed).
+    pub deadline_missed: u64,
     pub batches: u64,
     pub batched_requests: u64,
+    /// Outstanding requests right now (queued + executing).
+    pub queue_depth: u64,
+    /// High-water mark of `queue_depth` since start.
+    pub queue_depth_max: u64,
+    /// Last selective-guidance window fraction applied by the actuator
+    /// (0 when no QoS policy is installed).
+    pub actuator_fraction: f64,
     pub latency_ms_mean: f64,
     pub latency_ms_p50: f64,
     pub latency_ms_p90: f64,
@@ -65,10 +87,12 @@ struct StatsInner {
     batched_requests: u64,
     completed: u64,
     failed: u64,
+    deadline_missed: u64,
 }
 
 struct Job {
     req: GenerationRequest,
+    meta: QosMeta,
     enqueued: Instant,
     respond: Sender<(Result<GenerationOutput>, Duration)>,
 }
@@ -111,12 +135,35 @@ pub struct Coordinator {
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     stats: Arc<Mutex<StatsInner>>,
     submitted: Arc<AtomicU64>,
+    rejected: Arc<AtomicU64>,
+    /// Outstanding requests (queued + executing).
+    pending: Arc<AtomicU64>,
+    queue_depth_max: Arc<AtomicU64>,
+    qos: Option<Arc<dyn QosPolicy>>,
     draining: Arc<AtomicBool>,
 }
 
 impl Coordinator {
-    /// Start the batcher + worker threads over an engine.
+    /// Start the batcher + worker threads over an engine (no QoS policy:
+    /// the queue is unbounded and requests are served as submitted).
     pub fn start(engine: Arc<Engine>, config: CoordinatorConfig) -> Arc<Coordinator> {
+        Self::start_inner(engine, config, None)
+    }
+
+    /// Start with a pluggable [`QosPolicy`] ahead of the batcher.
+    pub fn start_qos(
+        engine: Arc<Engine>,
+        config: CoordinatorConfig,
+        qos: Arc<dyn QosPolicy>,
+    ) -> Arc<Coordinator> {
+        Self::start_inner(engine, config, Some(qos))
+    }
+
+    fn start_inner(
+        engine: Arc<Engine>,
+        config: CoordinatorConfig,
+        qos: Option<Arc<dyn QosPolicy>>,
+    ) -> Arc<Coordinator> {
         assert!(config.max_batch >= 1 && config.workers >= 1);
         let (submit_tx, submit_rx) = mpsc::channel::<Job>();
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
@@ -127,7 +174,9 @@ impl Coordinator {
             batched_requests: 0,
             completed: 0,
             failed: 0,
+            deadline_missed: 0,
         }));
+        let pending = Arc::new(AtomicU64::new(0));
         let mut handles = Vec::new();
 
         // ---- batcher thread ----------------------------------------------
@@ -145,10 +194,12 @@ impl Coordinator {
             let engine = Arc::clone(&engine);
             let batch_rx = Arc::clone(&batch_rx);
             let stats = Arc::clone(&stats);
+            let pending = Arc::clone(&pending);
+            let qos = qos.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("sgd-worker-{worker_id}"))
-                    .spawn(move || worker_loop(engine, batch_rx, stats))
+                    .spawn(move || worker_loop(engine, batch_rx, stats, pending, qos))
                     .expect("spawn worker"),
             );
         }
@@ -158,24 +209,63 @@ impl Coordinator {
             handles: Mutex::new(handles),
             stats,
             submitted: Arc::new(AtomicU64::new(0)),
+            rejected: Arc::new(AtomicU64::new(0)),
+            pending,
+            queue_depth_max: Arc::new(AtomicU64::new(0)),
+            qos,
             draining: Arc::new(AtomicBool::new(false)),
         })
     }
 
     /// Enqueue a request; returns a [`Ticket`] for the result.
     pub fn submit(&self, req: GenerationRequest) -> Result<Ticket> {
+        self.submit_qos(req, QosMeta::default())
+    }
+
+    /// Enqueue with serving metadata (deadline, priority). When a QoS
+    /// policy is installed it decides admission here — a rejection is
+    /// returned synchronously as [`Error::Rejected`] and the request
+    /// never occupies queue space.
+    pub fn submit_qos(&self, mut req: GenerationRequest, mut meta: QosMeta) -> Result<Ticket> {
         req.validate()?;
         if self.draining.load(Ordering::SeqCst) {
             return Err(Error::Coordinator("coordinator is draining".into()));
         }
+        // Reserve the outstanding slot *before* admission so the depth
+        // bound is exact under concurrent submitters: each one sees the
+        // others' reservations, so max_queue_depth can never be
+        // overshot. The reservation also precedes worker visibility, so
+        // a fast worker can never decrement `pending` below zero.
+        let depth_before = self.pending.fetch_add(1, Ordering::Relaxed) as usize;
+        if let Some(qos) = &self.qos {
+            match qos.admit(&mut req, &mut meta, depth_before) {
+                AdmissionDecision::Admit => {}
+                AdmissionDecision::Reject(reason) => {
+                    self.pending.fetch_sub(1, Ordering::Relaxed);
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::Rejected {
+                        code: reason.code(),
+                        reason: reason.message(),
+                    });
+                }
+            }
+        }
+        self.queue_depth_max
+            .fetch_max(depth_before as u64 + 1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let job = Job { req, enqueued: Instant::now(), respond: tx };
-        let guard = self.submit_tx.lock().unwrap();
-        match guard.as_ref() {
-            Some(sender) => sender
-                .send(job)
-                .map_err(|_| Error::Coordinator("queue closed".into()))?,
-            None => return Err(Error::Coordinator("coordinator stopped".into())),
+        let job = Job { req, meta, enqueued: Instant::now(), respond: tx };
+        let send_result = {
+            let guard = self.submit_tx.lock().unwrap();
+            match guard.as_ref() {
+                Some(sender) => sender
+                    .send(job)
+                    .map_err(|_| Error::Coordinator("queue closed".into())),
+                None => Err(Error::Coordinator("coordinator stopped".into())),
+            }
+        };
+        if let Err(e) = send_result {
+            self.pending.fetch_sub(1, Ordering::Relaxed);
+            return Err(e);
         }
         self.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(Ticket { rx })
@@ -189,12 +279,22 @@ impl Coordinator {
     /// Snapshot aggregate stats.
     pub fn stats(&self) -> CoordinatorStats {
         let inner = self.stats.lock().unwrap();
+        let actuator_fraction = self
+            .qos
+            .as_ref()
+            .map(|q| q.qos_snapshot().actuator_fraction)
+            .unwrap_or(0.0);
         CoordinatorStats {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: inner.completed,
             failed: inner.failed,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_missed: inner.deadline_missed,
             batches: inner.batches,
             batched_requests: inner.batched_requests,
+            queue_depth: self.pending.load(Ordering::Relaxed),
+            queue_depth_max: self.queue_depth_max.load(Ordering::Relaxed),
+            actuator_fraction,
             latency_ms_mean: inner.latency.mean_ms(),
             latency_ms_p50: inner.latency.quantile_ms(0.5),
             latency_ms_p90: inner.latency.quantile_ms(0.9),
@@ -284,6 +384,8 @@ fn worker_loop(
     engine: Arc<Engine>,
     batch_rx: Arc<Mutex<Receiver<Batch>>>,
     stats: Arc<Mutex<StatsInner>>,
+    pending: Arc<AtomicU64>,
+    qos: Option<Arc<dyn QosPolicy>>,
 ) {
     loop {
         let batch = {
@@ -293,23 +395,63 @@ fn worker_loop(
                 Err(_) => return, // channel closed -> shut down
             }
         };
-        let reqs: Vec<GenerationRequest> = batch.jobs.iter().map(|j| j.req.clone()).collect();
-        match engine.generate_batch(&reqs) {
+        // ---- deadline expiry: fail stale jobs before paying for UNet
+        // work that cannot possibly be useful anymore
+        let now = Instant::now();
+        let (live, stale): (Vec<Job>, Vec<Job>) = batch
+            .jobs
+            .into_iter()
+            .partition(|j| !expired(&j.meta, j.enqueued, now));
+        if !stale.is_empty() {
+            let mut s = stats.lock().unwrap();
+            for job in stale {
+                let waited = job.enqueued.elapsed();
+                s.deadline_missed += 1;
+                if let Some(q) = &qos {
+                    q.observe_deadline_miss();
+                }
+                pending.fetch_sub(1, Ordering::Relaxed);
+                let msg = format!(
+                    "expired in queue after {:.0} ms (deadline {:.0} ms)",
+                    waited.as_secs_f64() * 1e3,
+                    job.meta.deadline_ms().unwrap_or(0.0)
+                );
+                let _ = job.respond.send((Err(Error::DeadlineExceeded(msg)), waited));
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let reqs: Vec<GenerationRequest> = live.iter().map(|j| j.req.clone()).collect();
+        let t_service = Instant::now();
+        let result = engine.generate_batch(&reqs);
+        // feed the QoS loop *before* responding so admission sees fresh
+        // service estimates as early as possible; the mean window
+        // fraction lets the policy normalize the sample back to a
+        // full-CFG baseline (cost depends on fraction, not placement)
+        if let Some(q) = &qos {
+            let mean_fraction =
+                reqs.iter().map(|r| r.window.fraction).sum::<f64>() / reqs.len() as f64;
+            q.observe_batch(reqs.len(), t_service.elapsed(), mean_fraction);
+        }
+        match result {
             Ok(outputs) => {
                 let mut s = stats.lock().unwrap();
-                for (job, out) in batch.jobs.into_iter().zip(outputs) {
+                for (job, out) in live.into_iter().zip(outputs) {
                     let latency = job.enqueued.elapsed();
                     s.latency.record(latency);
                     s.completed += 1;
+                    pending.fetch_sub(1, Ordering::Relaxed);
                     let _ = job.respond.send((Ok(out), latency));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
                 let mut s = stats.lock().unwrap();
-                for job in batch.jobs {
+                for job in live {
                     let latency = job.enqueued.elapsed();
                     s.failed += 1;
+                    pending.fetch_sub(1, Ordering::Relaxed);
                     let _ = job
                         .respond
                         .send((Err(Error::Coordinator(msg.clone())), latency));
@@ -322,5 +464,27 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     // Coordinator integration tests (with a real engine + artifacts) live
-    // in rust/tests/; the batching-class logic is tested in batcher.rs.
+    // in rust/tests/ (integration_coordinator.rs, integration_qos.rs);
+    // the batching-class logic is tested in batcher.rs and the QoS
+    // control law in qos/ (including the engine-free simulator).
+    use super::*;
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = CoordinatorConfig::default();
+        assert!(c.max_batch >= 1 && c.workers >= 1);
+        // max_batch = 1 is a legal degenerate configuration: every batch
+        // is a singleton and compatibility never has to merge classes
+        let single = CoordinatorConfig { max_batch: 1, ..CoordinatorConfig::default() };
+        assert_eq!(single.max_batch, 1);
+    }
+
+    #[test]
+    fn stats_default_zeroed() {
+        let s = CoordinatorStats::default();
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.deadline_missed, 0);
+        assert_eq!(s.queue_depth_max, 0);
+        assert_eq!(s.actuator_fraction, 0.0);
+    }
 }

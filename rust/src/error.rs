@@ -1,50 +1,90 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror` in the offline
+//! registry snapshot) — the formats below are load-bearing: tests and
+//! the wire protocol match on them.
 
 use std::fmt;
 
+use crate::xla;
+
 /// Unified error for the serving stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA failures (compile, execute, literal conversion).
-    #[error("xla: {0}")]
     Xla(String),
 
     /// Artifact loading / manifest problems.
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// JSON parse errors (manifests, wire protocol).
-    #[error("json: {0}")]
     Json(String),
 
     /// Configuration errors (invalid values, unknown keys).
-    #[error("config: {0}")]
     Config(String),
 
     /// Request validation failures (bad steps, batch, prompt).
-    #[error("request: {0}")]
     Request(String),
 
     /// Coordinator lifecycle problems (shutdown, disconnected workers).
-    #[error("coordinator: {0}")]
     Coordinator(String),
 
     /// Wire-protocol violations on the TCP front-end.
-    #[error("protocol: {0}")]
     Protocol(String),
 
+    /// QoS admission rejection — the explicit load-shedding path. `code`
+    /// follows HTTP semantics (429 queue full, 503 infeasible) so the
+    /// server front-end can surface it without string matching.
+    Rejected { code: u16, reason: String },
+
+    /// A request's deadline expired before (or while) it was served.
+    DeadlineExceeded(String),
+
     /// I/O, with context.
-    #[error("io: {context}: {source}")]
     Io {
         context: String,
-        #[source]
         source: std::io::Error,
     },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Request(m) => write!(f, "request: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Rejected { code, reason } => write!(f, "rejected ({code}): {reason}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Io { context, source } => write!(f, "io: {context}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
     pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
         Error::Io { context: context.into(), source }
+    }
+
+    /// The HTTP-style status code of a QoS outcome error, if any.
+    pub fn qos_code(&self) -> Option<u16> {
+        match self {
+            Error::Rejected { code, .. } => Some(*code),
+            Error::DeadlineExceeded(_) => Some(504),
+            _ => None,
+        }
     }
 }
 
@@ -76,7 +116,10 @@ mod tests {
 
     #[test]
     fn error_display_includes_context() {
-        let e = Error::io("reading manifest", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = Error::io(
+            "reading manifest",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
         let s = e.to_string();
         assert!(s.contains("reading manifest"), "{s}");
     }
@@ -85,5 +128,22 @@ mod tests {
     fn fmt_shape_matches_convention() {
         assert_eq!(fmt_shape(&[1, 4, 8, 8]), "[1,4,8,8]");
         assert_eq!(fmt_shape(&[]), "[]");
+    }
+
+    #[test]
+    fn io_error_exposes_source() {
+        let e = Error::io("ctx", std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        let src = std::error::Error::source(&e).expect("io carries a source");
+        assert_eq!(src.to_string(), "inner");
+        assert!(std::error::Error::source(&Error::Config("x".into())).is_none());
+    }
+
+    #[test]
+    fn qos_codes() {
+        let r = Error::Rejected { code: 429, reason: "queue full".into() };
+        assert_eq!(r.qos_code(), Some(429));
+        assert!(r.to_string().contains("429"), "{r}");
+        assert_eq!(Error::DeadlineExceeded("late".into()).qos_code(), Some(504));
+        assert_eq!(Error::Config("x".into()).qos_code(), None);
     }
 }

@@ -16,7 +16,9 @@
 //! * L2 — a JAX latent-diffusion model (UNet + text encoder + VAE),
 //! * L3 — this crate: request routing, dynamic batching, the denoising
 //!   loop with the per-iteration **selective-guidance decision**, PJRT
-//!   execution of the AOT artifacts, and metrics.
+//!   execution of the AOT artifacts, metrics, and a QoS layer
+//!   ([`qos`]) that turns the selective-guidance window into a
+//!   deadline-aware load-shedding actuator.
 //!
 //! Python runs once at build time (`make artifacts`); the request path is
 //! 100% rust. See `DESIGN.md` for the full architecture and the
@@ -33,6 +35,7 @@ pub mod image;
 pub mod json;
 pub mod metrics;
 pub mod prompts;
+pub mod qos;
 pub mod quality;
 pub mod rng;
 pub mod runtime;
@@ -41,6 +44,7 @@ pub mod server;
 pub mod testutil;
 pub mod tokenizer;
 pub mod workload;
+pub mod xla;
 
 pub use error::{Error, Result};
 
@@ -51,6 +55,7 @@ pub mod prelude {
     pub use crate::engine::{Engine, GenerationOutput, GenerationRequest};
     pub use crate::error::{Error, Result};
     pub use crate::guidance::{GuidanceMode, SelectiveGuidancePolicy, WindowPosition, WindowSpec};
+    pub use crate::qos::{DeadlineQos, Priority, QosConfig, QosMeta, QosPolicy};
     pub use crate::quality::{mse, psnr, ssim};
     pub use crate::runtime::ModelStack;
     pub use crate::scheduler::{Scheduler, SchedulerKind};

@@ -7,8 +7,14 @@
 //!           [--artifacts artifacts/tiny]
 //! sgd-serve serve    [--bind 127.0.0.1:7878] [--workers 1]
 //!           [--max-batch 4] [--config configs/serve.toml]
+//!           [--qos] [--max-queue 64] [--quality-floor 0.5]
+//!           [--deadline-ms 0]
 //! sgd-serve info     [--artifacts artifacts/tiny]
 //! ```
+//!
+//! `--qos` (or `enabled = true` in the config's `[qos]` section) turns on
+//! deadline-aware admission control with the selective-guidance window as
+//! the load-shedding actuator (DESIGN.md §7).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -19,6 +25,7 @@ use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
 use selective_guidance::engine::{Engine, GenerationRequest};
 use selective_guidance::error::{Error, Result};
 use selective_guidance::guidance::WindowSpec;
+use selective_guidance::qos::DeadlineQos;
 use selective_guidance::runtime::ModelStack;
 use selective_guidance::scheduler::SchedulerKind;
 use selective_guidance::server::Server;
@@ -109,6 +116,16 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     run_cfg.server.workers = cli.opt_or("workers", run_cfg.server.workers)?;
     run_cfg.server.max_batch = cli.opt_or("max-batch", run_cfg.server.max_batch)?;
 
+    // QoS overrides: the flag force-enables, the knobs refine the config
+    if cli.flag("qos") {
+        run_cfg.qos.enabled = true;
+    }
+    run_cfg.qos.max_queue_depth = cli.opt_or("max-queue", run_cfg.qos.max_queue_depth)?;
+    run_cfg.qos.floor_fraction = cli.opt_or("quality-floor", run_cfg.qos.floor_fraction)?;
+    run_cfg.qos.default_deadline_ms =
+        cli.opt_or("deadline-ms", run_cfg.qos.default_deadline_ms)?;
+    run_cfg.qos.validate()?;
+
     let dir = cli
         .opt("artifacts")
         .map(String::from)
@@ -117,14 +134,22 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     eprintln!("loading artifacts from {dir} ...");
     let stack = Arc::new(ModelStack::load(&dir)?);
     let engine = Arc::new(Engine::new(stack, run_cfg.engine.clone()));
-    let coordinator = Coordinator::start(
-        engine,
-        CoordinatorConfig {
-            max_batch: run_cfg.server.max_batch,
-            workers: run_cfg.server.workers,
-            batch_wait: std::time::Duration::from_millis(run_cfg.server.batch_wait_ms),
-        },
-    );
+    let coord_cfg = CoordinatorConfig {
+        max_batch: run_cfg.server.max_batch,
+        workers: run_cfg.server.workers,
+        batch_wait: std::time::Duration::from_millis(run_cfg.server.batch_wait_ms),
+    };
+    let coordinator = if run_cfg.qos.enabled {
+        println!(
+            "qos: enabled (max queue {}, quality floor {:.0}%, default deadline {} ms)",
+            run_cfg.qos.max_queue_depth,
+            run_cfg.qos.floor_fraction * 100.0,
+            run_cfg.qos.default_deadline_ms,
+        );
+        Coordinator::start_qos(engine, coord_cfg, Arc::new(DeadlineQos::new(run_cfg.qos.clone())?))
+    } else {
+        Coordinator::start(engine, coord_cfg)
+    };
     let server = Server::start(coordinator, &run_cfg.server.bind)?;
     println!("sgd-serve listening on {}", server.addr());
     println!("protocol: JSON lines; try: {{\"op\":\"ping\"}}");

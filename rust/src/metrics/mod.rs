@@ -1,6 +1,8 @@
-//! Serving metrics: timers, latency histograms, throughput counters, and
+//! Serving metrics: timers, latency histograms, throughput counters,
+//! QoS counters (rejections / deadline misses / actuator position), and
 //! the per-step breakdown used by EXPERIMENTS.md §Perf.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Simple scoped stopwatch.
@@ -214,6 +216,100 @@ impl StepBreakdown {
     }
 }
 
+/// Exponentially-weighted moving average — the smoothing primitive of
+/// the QoS feedback loop (service-rate and actuator-position estimates).
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Ewma {
+        assert!(alpha > 0.0 && alpha <= 1.0, "ewma alpha {alpha} outside (0, 1]");
+        Ewma { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    /// Current estimate (None until the first observation).
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn value_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
+/// Lock-free QoS counters, shared between the admission path and the
+/// stats endpoints. The actuator position is a gauge stored as
+/// milli-units (fraction × 1000) so it fits an atomic integer.
+#[derive(Debug, Default)]
+pub struct QosCounters {
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    deadline_missed: AtomicU64,
+    /// How many admitted requests had their window widened by the actuator.
+    shaped: AtomicU64,
+    /// Last applied window fraction, in milli-units.
+    actuator_milli: AtomicU64,
+}
+
+/// Point-in-time copy of [`QosCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct QosSnapshot {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub deadline_missed: u64,
+    pub shaped: u64,
+    /// Last applied selective-guidance window fraction in [0, 1].
+    pub actuator_fraction: f64,
+}
+
+impl QosCounters {
+    pub fn new() -> QosCounters {
+        QosCounters::default()
+    }
+
+    pub fn inc_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_deadline_missed(&self) {
+        self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the actuator position applied to one admitted request.
+    pub fn observe_fraction(&self, fraction: f64, widened: bool) {
+        if widened {
+            self.shaped.fetch_add(1, Ordering::Relaxed);
+        }
+        let milli = (fraction.clamp(0.0, 1.0) * 1000.0).round() as u64;
+        self.actuator_milli.store(milli, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> QosSnapshot {
+        QosSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            shaped: self.shaped.load(Ordering::Relaxed),
+            actuator_fraction: self.actuator_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+        }
+    }
+}
+
 /// Basic mean/std/percentile summary of raw f64 samples (bench harness).
 #[derive(Debug, Clone)]
 pub struct SampleStats {
@@ -328,5 +424,44 @@ mod tests {
         t.add(3);
         assert_eq!(t.items(), 8);
         assert!(t.per_second() > 0.0);
+    }
+
+    #[test]
+    fn ewma_tracks_mean() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.value_or(7.0), 7.0);
+        e.observe(10.0); // first observation seeds the estimate exactly
+        assert_eq!(e.value(), Some(10.0));
+        e.observe(20.0);
+        assert!((e.value().unwrap() - 15.0).abs() < 1e-12);
+        // converges toward a constant signal
+        for _ in 0..50 {
+            e.observe(8.0);
+        }
+        assert!((e.value().unwrap() - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ewma_rejects_bad_alpha() {
+        let _ = Ewma::new(0.0);
+    }
+
+    #[test]
+    fn qos_counters_roundtrip() {
+        let c = QosCounters::new();
+        c.inc_admitted();
+        c.inc_admitted();
+        c.inc_rejected();
+        c.inc_deadline_missed();
+        c.observe_fraction(0.35, true);
+        c.observe_fraction(0.5, false);
+        let s = c.snapshot();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.deadline_missed, 1);
+        assert_eq!(s.shaped, 1);
+        assert!((s.actuator_fraction - 0.5).abs() < 1e-9);
     }
 }

@@ -1,0 +1,172 @@
+//! The window actuator: observed load → selective-guidance window
+//! fraction.
+//!
+//! The paper's dial — "optimize the last f of the iterations" — buys
+//! roughly `f·u/2` of service time (§3.3, u = UNet share). The actuator
+//! turns that dial per request from two signals:
+//!
+//! 1. **Load ramp** — queue depth between `ramp_low` and `ramp_high`
+//!    maps linearly onto `[0, floor_fraction]`, biased per priority
+//!    class (batch traffic gives up quality earlier than interactive).
+//! 2. **Deadline slack** — if the EWMA-predicted completion overruns the
+//!    request's deadline, widen to the *minimal* fraction that fits.
+//!
+//! The combined position is monotone in load and clamped at the quality
+//! floor: heavier load never narrows the window, and quality never drops
+//! below the configured floor.
+
+use super::feedback::LoadSnapshot;
+use super::{QosConfig, QosMeta};
+
+/// Maps load snapshots to window fractions. Pure — all serving state
+/// arrives via [`LoadSnapshot`], which keeps the control law trivially
+/// testable.
+#[derive(Debug, Clone)]
+pub struct WindowActuator {
+    cfg: QosConfig,
+}
+
+impl WindowActuator {
+    pub fn new(cfg: QosConfig) -> WindowActuator {
+        WindowActuator { cfg }
+    }
+
+    /// Load-driven component: 0 below `ramp_low`, the floor at or above
+    /// `ramp_high`, linear in between.
+    pub fn fraction_for(&self, load: &LoadSnapshot) -> f64 {
+        let d = load.queue_depth;
+        let (lo, hi) = (self.cfg.ramp_low, self.cfg.ramp_high);
+        // `hi` first so a degenerate ramp (lo == hi) acts as a step up
+        let ramp = if d >= hi {
+            1.0
+        } else if d <= lo {
+            0.0
+        } else {
+            (d - lo) as f64 / (hi - lo) as f64
+        };
+        (ramp * self.cfg.floor_fraction).clamp(0.0, self.cfg.floor_fraction)
+    }
+
+    /// Full per-request position: load ramp (priority-biased) combined
+    /// with the deadline-slack requirement, clamped to the floor.
+    pub fn fraction_for_request(&self, load: &LoadSnapshot, meta: &QosMeta) -> f64 {
+        let mut f = (self.fraction_for(load) * meta.priority.actuator_bias())
+            .clamp(0.0, self.cfg.floor_fraction);
+        if let (Some(deadline), true) = (meta.deadline, load.service_ms > 0.0) {
+            let budget_ms = deadline.as_secs_f64() * 1e3 - load.est_wait_ms;
+            // invert service(f) = s·(1 − u·f/2) <= budget for the
+            // smallest sufficient f; budget >= s needs no widening, a
+            // negative budget is the admission controller's problem
+            // (clamp covers the race between the two checks)
+            if budget_ms < load.service_ms {
+                let needed =
+                    (1.0 - budget_ms / load.service_ms) * 2.0 / self.cfg.unet_share;
+                f = f.max(needed.clamp(0.0, self.cfg.floor_fraction));
+            }
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::Priority;
+    use crate::testutil::prop::forall;
+
+    fn actuator(floor: f64, lo: usize, hi: usize) -> WindowActuator {
+        WindowActuator::new(QosConfig {
+            floor_fraction: floor,
+            ramp_low: lo,
+            ramp_high: hi,
+            ..QosConfig::default()
+        })
+    }
+
+    fn load(depth: usize, service_ms: f64) -> LoadSnapshot {
+        LoadSnapshot {
+            queue_depth: depth,
+            service_ms,
+            est_wait_ms: depth as f64 * service_ms,
+        }
+    }
+
+    #[test]
+    fn idle_runs_full_cfg() {
+        let a = actuator(0.5, 2, 16);
+        assert_eq!(a.fraction_for(&load(0, 100.0)), 0.0);
+        assert_eq!(a.fraction_for(&load(2, 100.0)), 0.0);
+    }
+
+    #[test]
+    fn ramp_reaches_floor() {
+        let a = actuator(0.5, 2, 10);
+        assert!((a.fraction_for(&load(6, 0.0)) - 0.25).abs() < 1e-12);
+        assert_eq!(a.fraction_for(&load(10, 0.0)), 0.5);
+        assert_eq!(a.fraction_for(&load(1000, 0.0)), 0.5);
+    }
+
+    #[test]
+    fn degenerate_ramp_is_a_step() {
+        // ramp_low == ramp_high: a step function, still monotone
+        let a = actuator(0.4, 3, 3);
+        assert_eq!(a.fraction_for(&load(2, 0.0)), 0.0);
+        assert_eq!(a.fraction_for(&load(3, 0.0)), 0.4);
+        assert_eq!(a.fraction_for(&load(4, 0.0)), 0.4);
+    }
+
+    #[test]
+    fn monotone_in_load_and_clamped() {
+        forall("actuator monotonicity", 100, |g| {
+            let floor = g.f64_in(0.05, 1.0);
+            let lo = g.usize_in(0, 8);
+            let hi = lo + g.usize_in(0, 24);
+            let a = actuator(floor, lo, hi);
+            let service = g.f64_in(1.0, 500.0);
+            let meta = QosMeta { priority: *g.choose(&[
+                Priority::Batch,
+                Priority::Standard,
+                Priority::Interactive,
+            ]), ..QosMeta::default() };
+            let mut prev = 0.0f64;
+            for depth in 0..=(hi + 4) {
+                let f = a.fraction_for_request(&load(depth, service), &meta);
+                assert!(
+                    f + 1e-12 >= prev,
+                    "higher load narrowed the window: depth {depth}, {f} < {prev}"
+                );
+                assert!(f <= floor + 1e-12, "exceeded quality floor: {f} > {floor}");
+                assert!(f >= 0.0);
+                prev = f;
+            }
+        });
+    }
+
+    #[test]
+    fn deadline_slack_forces_widening() {
+        let a = actuator(0.5, 100, 200); // load ramp effectively off
+        // idle queue, 100 ms service, 90 ms deadline: needs f with
+        // 100·(1 − 0.95·f/2) <= 90  ->  f >= 0.2105…
+        let meta = QosMeta::with_deadline_ms(90.0);
+        let f = a.fraction_for_request(&load(0, 100.0), &meta);
+        assert!(f > 0.21 && f < 0.22, "slack widening {f}");
+        // plentiful slack: no widening
+        let meta = QosMeta::with_deadline_ms(500.0);
+        assert_eq!(a.fraction_for_request(&load(0, 100.0), &meta), 0.0);
+        // impossible budget clamps at the floor (admission sheds it)
+        let meta = QosMeta::with_deadline_ms(1.0);
+        assert_eq!(a.fraction_for_request(&load(3, 100.0), &meta), 0.5);
+    }
+
+    #[test]
+    fn batch_widens_before_interactive() {
+        let a = actuator(0.5, 2, 10);
+        let l = load(6, 0.0);
+        let batch = QosMeta { priority: Priority::Batch, ..QosMeta::default() };
+        let interactive = QosMeta { priority: Priority::Interactive, ..QosMeta::default() };
+        let b = a.fraction_for_request(&l, &batch);
+        let s = a.fraction_for_request(&l, &QosMeta::default());
+        let i = a.fraction_for_request(&l, &interactive);
+        assert!(b > s && s > i, "bias ordering: batch {b}, standard {s}, interactive {i}");
+    }
+}

@@ -1,0 +1,258 @@
+//! Admission control: bounded queues, priority shares, deadline
+//! feasibility — explicit rejection instead of unbounded queuing.
+//!
+//! The pre-QoS coordinator accepted every request and let the queue grow
+//! without bound; under sustained overload that turns every response
+//! into a deadline miss. Admission control converts the failure mode
+//! into an explicit, *early* signal (429-style) the client can act on —
+//! retry against another replica, downgrade, or drop.
+
+use std::time::{Duration, Instant};
+
+use super::feedback::LoadSnapshot;
+use super::{service_ms_at, QosConfig, QosMeta};
+
+/// Why a request was shed at admission.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The outstanding-request bound for this priority class is reached.
+    QueueFull { depth: usize, limit: usize },
+    /// Even with maximal window widening the request cannot finish
+    /// before its deadline, so serving it would only waste capacity.
+    DeadlineInfeasible { needed_ms: u64, deadline_ms: u64 },
+}
+
+impl RejectReason {
+    /// HTTP-style status code for the wire protocol.
+    pub fn code(&self) -> u16 {
+        match self {
+            RejectReason::QueueFull { .. } => 429,
+            RejectReason::DeadlineInfeasible { .. } => 503,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            RejectReason::QueueFull { depth, limit } => {
+                format!("queue full: depth {depth} >= class limit {limit}")
+            }
+            RejectReason::DeadlineInfeasible { needed_ms, deadline_ms } => format!(
+                "deadline infeasible: needs ~{needed_ms} ms even at the widest \
+                 achievable window, deadline is {deadline_ms} ms"
+            ),
+        }
+    }
+}
+
+/// The admission verdict for one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    Admit,
+    Reject(RejectReason),
+}
+
+/// Stateless admission rules over a [`QosConfig`]; all the state it
+/// consults arrives in the [`LoadSnapshot`].
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: QosConfig,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: QosConfig) -> AdmissionController {
+        AdmissionController { cfg }
+    }
+
+    /// Outstanding-request limit for a priority class (≥ 1 so a lone
+    /// request of any class is always admissible on an idle server).
+    pub fn class_limit(&self, meta: &QosMeta) -> usize {
+        let share = meta.priority.queue_share();
+        ((self.cfg.max_queue_depth as f64 * share).ceil() as usize).max(1)
+    }
+
+    /// Admission decision given the current load. `achievable_fraction`
+    /// is the widest selective-guidance window this request can actually
+    /// run at — the quality floor for widenable requests, the request's
+    /// own fixed fraction for explicit non-`Last` placements the policy
+    /// refuses to move.
+    pub fn decide(
+        &self,
+        meta: &QosMeta,
+        load: &LoadSnapshot,
+        achievable_fraction: f64,
+    ) -> AdmissionDecision {
+        let limit = self.class_limit(meta);
+        if load.queue_depth >= limit {
+            return AdmissionDecision::Reject(RejectReason::QueueFull {
+                depth: load.queue_depth,
+                limit,
+            });
+        }
+        if let Some(deadline) = meta.deadline {
+            // Feasibility uses the *optimistic* bound — service at the
+            // widest achievable window — so we only shed what provably
+            // cannot make it. No estimate yet (cold start) means no
+            // feasibility check; the first batches calibrate the
+            // estimator.
+            if load.service_ms > 0.0 {
+                let best_ms = load.est_wait_ms
+                    + service_ms_at(load.service_ms, self.cfg.unet_share, achievable_fraction);
+                let deadline_ms = deadline.as_secs_f64() * 1e3;
+                if best_ms > deadline_ms {
+                    return AdmissionDecision::Reject(RejectReason::DeadlineInfeasible {
+                        needed_ms: best_ms.round() as u64,
+                        deadline_ms: deadline_ms.round() as u64,
+                    });
+                }
+            }
+        }
+        AdmissionDecision::Admit
+    }
+}
+
+/// Has a request's deadline passed while it sat in the queue? Used by
+/// the coordinator workers to expire stale jobs before paying for their
+/// UNet evaluations.
+pub fn expired(meta: &QosMeta, enqueued: Instant, now: Instant) -> bool {
+    match meta.deadline {
+        Some(d) => now.duration_since(enqueued) > d,
+        None => false,
+    }
+}
+
+/// Convenience: duration helper for expiry math in tests and the sim.
+pub fn remaining_budget(meta: &QosMeta, waited: Duration) -> Option<Duration> {
+    meta.deadline.map(|d| d.saturating_sub(waited))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::Priority;
+
+    /// The achievable fraction most tests use: a widenable request at
+    /// the default quality floor.
+    const FLOOR: f64 = 0.5;
+
+    fn load(depth: usize, service_ms: f64) -> LoadSnapshot {
+        LoadSnapshot {
+            queue_depth: depth,
+            service_ms,
+            est_wait_ms: depth as f64 * service_ms,
+        }
+    }
+
+    fn cfg() -> QosConfig {
+        QosConfig { max_queue_depth: 8, enabled: true, ..QosConfig::default() }
+    }
+
+    #[test]
+    fn accepts_when_idle() {
+        let a = AdmissionController::new(cfg());
+        let meta = QosMeta::default();
+        assert_eq!(a.decide(&meta, &load(0, 0.0), FLOOR), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&meta, &load(0, 100.0), FLOOR), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn rejects_at_class_limit() {
+        let a = AdmissionController::new(cfg());
+        // standard: 75% of 8 -> limit 6
+        let meta = QosMeta::default();
+        assert_eq!(a.class_limit(&meta), 6);
+        assert_eq!(a.decide(&meta, &load(5, 100.0), FLOOR), AdmissionDecision::Admit);
+        assert!(matches!(
+            a.decide(&meta, &load(6, 100.0), FLOOR),
+            AdmissionDecision::Reject(RejectReason::QueueFull { depth: 6, limit: 6 })
+        ));
+    }
+
+    #[test]
+    fn lower_classes_shed_first() {
+        let a = AdmissionController::new(cfg());
+        let batch = QosMeta { priority: Priority::Batch, ..QosMeta::default() };
+        let standard = QosMeta::default();
+        let interactive = QosMeta { priority: Priority::Interactive, ..QosMeta::default() };
+        assert_eq!(a.class_limit(&batch), 4);
+        assert_eq!(a.class_limit(&standard), 6);
+        assert_eq!(a.class_limit(&interactive), 8);
+        // at depth 5, batch bounces but standard and interactive enter
+        assert!(matches!(a.decide(&batch, &load(5, 100.0), FLOOR), AdmissionDecision::Reject(_)));
+        assert_eq!(a.decide(&standard, &load(5, 100.0), FLOOR), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&interactive, &load(5, 100.0), FLOOR), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn class_limit_never_zero() {
+        let tiny = AdmissionController::new(QosConfig { max_queue_depth: 1, ..cfg() });
+        let batch = QosMeta { priority: Priority::Batch, ..QosMeta::default() };
+        assert_eq!(tiny.class_limit(&batch), 1);
+        assert_eq!(tiny.decide(&batch, &load(0, 0.0), FLOOR), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn infeasible_deadline_rejected() {
+        let a = AdmissionController::new(cfg());
+        // 3 queued x 100 ms wait + >=76 ms best-case service > 200 ms deadline
+        let meta = QosMeta::with_deadline_ms(200.0);
+        assert!(matches!(
+            a.decide(&meta, &load(3, 100.0), FLOOR),
+            AdmissionDecision::Reject(RejectReason::DeadlineInfeasible { .. })
+        ));
+        // generous deadline admits
+        let meta = QosMeta::with_deadline_ms(5000.0);
+        assert_eq!(a.decide(&meta, &load(3, 100.0), FLOOR), AdmissionDecision::Admit);
+        // cold start (no estimate) admits: nothing to extrapolate from
+        let meta = QosMeta::with_deadline_ms(1.0);
+        assert_eq!(a.decide(&meta, &load(3, 0.0), FLOOR), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn non_widenable_requests_judged_at_their_own_fraction() {
+        // a request pinned to a narrow window cannot be saved by the
+        // floor: feasibility must use ITS fraction, not the floor's
+        let a = AdmissionController::new(cfg());
+        let meta = QosMeta::with_deadline_ms(80.0);
+        // widenable at the floor: ~76 ms best case fits the 80 ms budget
+        assert_eq!(a.decide(&meta, &load(0, 100.0), FLOOR), AdmissionDecision::Admit);
+        // pinned at 10%: ~95 ms best case cannot fit -> shed early
+        assert!(matches!(
+            a.decide(&meta, &load(0, 100.0), 0.1),
+            AdmissionDecision::Reject(RejectReason::DeadlineInfeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let enqueued = Instant::now();
+        let meta = QosMeta::with_deadline_ms(50.0);
+        assert!(!expired(&meta, enqueued, enqueued + Duration::from_millis(10)));
+        assert!(expired(&meta, enqueued, enqueued + Duration::from_millis(60)));
+        // no deadline never expires
+        assert!(!expired(&QosMeta::default(), enqueued, enqueued + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn remaining_budget_saturates() {
+        let meta = QosMeta::with_deadline_ms(100.0);
+        assert_eq!(
+            remaining_budget(&meta, Duration::from_millis(30)),
+            Some(Duration::from_millis(70))
+        );
+        assert_eq!(
+            remaining_budget(&meta, Duration::from_millis(300)),
+            Some(Duration::ZERO)
+        );
+        assert_eq!(remaining_budget(&QosMeta::default(), Duration::ZERO), None);
+    }
+
+    #[test]
+    fn reject_reason_codes() {
+        assert_eq!(RejectReason::QueueFull { depth: 9, limit: 8 }.code(), 429);
+        assert_eq!(
+            RejectReason::DeadlineInfeasible { needed_ms: 500, deadline_ms: 100 }.code(),
+            503
+        );
+        assert!(RejectReason::QueueFull { depth: 9, limit: 8 }.message().contains("9"));
+    }
+}

@@ -1,0 +1,124 @@
+//! The QoS feedback path: per-batch engine timings → load snapshots.
+//!
+//! Coordinator workers report `(batch_size, wall_time)` after every
+//! engine batch; the estimator folds that into an EWMA of *per-request*
+//! service time. Combined with the instantaneous queue depth this yields
+//! the [`LoadSnapshot`] the admission controller and window actuator
+//! consume.
+//!
+//! The per-request time deliberately ignores batching superlinearity
+//! (a batch of 4 is cheaper than 4 singles): the estimate then over-
+//! approximates service time under load, which errs on the safe side —
+//! shed slightly early rather than promise deadlines we cannot keep.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::metrics::Ewma;
+
+/// Point-in-time view of serving load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadSnapshot {
+    /// Outstanding requests (queued + in service).
+    pub queue_depth: usize,
+    /// EWMA per-request service time, ms (0 until the first batch).
+    pub service_ms: f64,
+    /// Estimated queueing delay for a new arrival, ms.
+    pub est_wait_ms: f64,
+}
+
+impl LoadSnapshot {
+    /// An idle, uncalibrated system.
+    pub fn idle() -> LoadSnapshot {
+        LoadSnapshot { queue_depth: 0, service_ms: 0.0, est_wait_ms: 0.0 }
+    }
+}
+
+/// Thread-safe EWMA service-time estimator.
+#[derive(Debug)]
+pub struct ServiceEstimator {
+    ewma: Mutex<Ewma>,
+}
+
+impl ServiceEstimator {
+    pub fn new(alpha: f64) -> ServiceEstimator {
+        ServiceEstimator { ewma: Mutex::new(Ewma::new(alpha)) }
+    }
+
+    /// Fold in one finished batch.
+    pub fn observe_batch(&self, batch_size: usize, service: Duration) {
+        if batch_size == 0 {
+            return;
+        }
+        let per_request_ms = service.as_secs_f64() * 1e3 / batch_size as f64;
+        self.ewma.lock().unwrap().observe(per_request_ms);
+    }
+
+    /// Current per-request service estimate, ms (0 before calibration).
+    pub fn service_ms(&self) -> f64 {
+        self.ewma.lock().unwrap().value_or(0.0)
+    }
+
+    /// Snapshot against an instantaneous queue depth. The wait estimate
+    /// is `depth × service` — single-server FIFO, the conservative
+    /// bound (extra workers only make it pessimistic, see module docs).
+    pub fn snapshot(&self, queue_depth: usize) -> LoadSnapshot {
+        let service_ms = self.service_ms();
+        LoadSnapshot {
+            queue_depth,
+            service_ms,
+            est_wait_ms: queue_depth as f64 * service_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_is_zero() {
+        let e = ServiceEstimator::new(0.2);
+        assert_eq!(e.service_ms(), 0.0);
+        let s = e.snapshot(5);
+        assert_eq!(s.queue_depth, 5);
+        assert_eq!(s.service_ms, 0.0);
+        assert_eq!(s.est_wait_ms, 0.0);
+    }
+
+    #[test]
+    fn batch_timing_amortized_per_request() {
+        let e = ServiceEstimator::new(1.0); // no smoothing: track exactly
+        e.observe_batch(4, Duration::from_millis(400));
+        assert!((e.service_ms() - 100.0).abs() < 1e-9);
+        e.observe_batch(1, Duration::from_millis(50));
+        assert!((e.service_ms() - 50.0).abs() < 1e-9);
+        // empty batches are ignored
+        e.observe_batch(0, Duration::from_secs(999));
+        assert!((e.service_ms() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smoothing_converges() {
+        let e = ServiceEstimator::new(0.3);
+        for _ in 0..60 {
+            e.observe_batch(2, Duration::from_millis(240));
+        }
+        assert!((e.service_ms() - 120.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn wait_scales_with_depth() {
+        let e = ServiceEstimator::new(1.0);
+        e.observe_batch(1, Duration::from_millis(80));
+        assert!((e.snapshot(3).est_wait_ms - 240.0).abs() < 1e-9);
+        assert!((e.snapshot(0).est_wait_ms - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_snapshot() {
+        let s = LoadSnapshot::idle();
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.service_ms, 0.0);
+    }
+}

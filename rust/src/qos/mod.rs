@@ -1,0 +1,543 @@
+//! QoS subsystem: deadline-aware admission control with selective
+//! guidance as the load-shedding actuator.
+//!
+//! The paper shows the selective-guidance window is a continuous
+//! latency/quality dial (last 20% of 50 steps → ~8.2% faster, last 50%
+//! → ~20.3%, §3.3). Serving stacks usually treat such dials as static
+//! per-request settings; this module closes the loop and drives the dial
+//! from observed load instead:
+//!
+//! ```text
+//!             ┌────────────── feedback: per-batch service time ─────────┐
+//!             ▼                                                         │
+//!   submit → [AdmissionController] → [WindowActuator] → queue → batcher → engine
+//!               │ explicit 429/503        │ widens the cond-only
+//!               ▼ rejection               ▼ window as load rises
+//!             shed                      quality floor clamp
+//! ```
+//!
+//! * [`AdmissionController`] — per-request deadlines, priority classes,
+//!   queue-depth bounds, and *explicit* rejection instead of unbounded
+//!   queuing (`Error::Rejected`, 429-style).
+//! * [`WindowActuator`] — maps load (queue depth, EWMA service time,
+//!   deadline slack) to a selective-guidance window fraction per request:
+//!   light load runs full dual-pass CFG, heavy load widens the cond-only
+//!   window up to a configurable quality floor.
+//! * [`ServiceEstimator`] — the feedback path, fed by per-batch timing
+//!   from the coordinator workers.
+//! * [`DeadlineQos`] — the default [`QosPolicy`] combining the three.
+//! * [`sim`] — a deterministic discrete-event model of the serving loop
+//!   that exercises the *real* policy objects without PJRT artifacts;
+//!   `benches/qos_control.rs` builds its sweeps on it.
+//!
+//! Related work grounds the actuator choice: guidance can be confined to
+//! a limited interval with little quality loss (Kynkäänniemi et al.),
+//! and per-input step-level compute adaptation is effective (AdaDiff) —
+//! so the window fraction is a safe knob to turn at runtime.
+
+pub mod actuator;
+pub mod admission;
+pub mod feedback;
+pub mod sim;
+
+pub use actuator::WindowActuator;
+pub use admission::{expired, AdmissionController, AdmissionDecision, RejectReason};
+pub use feedback::{LoadSnapshot, ServiceEstimator};
+pub use sim::{simulate, SimReport, SimSpec};
+
+use std::time::Duration;
+
+use crate::config::TomlDoc;
+use crate::engine::GenerationRequest;
+use crate::error::{Error, Result};
+use crate::guidance::{WindowPosition, WindowSpec};
+use crate::metrics::{QosCounters, QosSnapshot};
+
+/// Request priority class. Lower classes are shed first under load:
+/// each class may only occupy a fraction of the admission queue (see
+/// [`Priority::queue_share`]), so when the queue fills, `Batch` traffic
+/// bounces before `Standard`, and `Interactive` has the full budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Best-effort background work (lowest).
+    Batch,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Latency-sensitive traffic (highest).
+    Interactive,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" | "high" => Ok(Priority::Interactive),
+            "standard" | "normal" => Ok(Priority::Standard),
+            "batch" | "low" => Ok(Priority::Batch),
+            other => Err(Error::Config(format!("unknown priority {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Fraction of the admission queue this class may occupy.
+    pub fn queue_share(&self) -> f64 {
+        match self {
+            Priority::Interactive => 1.0,
+            Priority::Standard => 0.75,
+            Priority::Batch => 0.5,
+        }
+    }
+
+    /// Bias on the load-driven actuator position: lower classes widen
+    /// (give up quality) earlier than interactive traffic.
+    pub fn actuator_bias(&self) -> f64 {
+        match self {
+            Priority::Interactive => 0.75,
+            Priority::Standard => 1.0,
+            Priority::Batch => 1.25,
+        }
+    }
+}
+
+/// Upper bound on deadlines, ms (~30 years). `Duration::from_secs_f64`
+/// panics past `Duration::MAX`; every deadline entering the system is
+/// validated or clamped against this bound instead.
+pub const MAX_DEADLINE_MS: f64 = 1e12;
+
+/// Per-request serving metadata, carried alongside the engine request
+/// (the engine itself never sees deadlines — QoS is a serving concern).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct QosMeta {
+    /// Completion deadline, measured from submission.
+    pub deadline: Option<Duration>,
+    pub priority: Priority,
+}
+
+impl QosMeta {
+    /// Deadline helper; `ms` is clamped into `[0, MAX_DEADLINE_MS]`
+    /// (non-finite collapses to 0 — immediate expiry, never a panic).
+    pub fn with_deadline_ms(ms: f64) -> QosMeta {
+        let ms = if ms.is_finite() { ms.clamp(0.0, MAX_DEADLINE_MS) } else { 0.0 };
+        QosMeta { deadline: Some(Duration::from_secs_f64(ms / 1e3)), priority: Priority::Standard }
+    }
+
+    pub fn deadline_ms(&self) -> Option<f64> {
+        self.deadline.map(|d| d.as_secs_f64() * 1e3)
+    }
+}
+
+/// Tuning knobs for the QoS control loop (the `[qos]` config section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosConfig {
+    /// Master switch: when false the coordinator runs the pre-QoS
+    /// unbounded-queue behavior.
+    pub enabled: bool,
+    /// Outstanding-request bound; submissions beyond it are rejected
+    /// (per-class shares apply, see [`Priority::queue_share`]).
+    pub max_queue_depth: usize,
+    /// Quality floor: the actuator never widens the cond-only window
+    /// beyond this fraction (0.5 ≈ the paper's "last 50%" point).
+    pub floor_fraction: f64,
+    /// Queue depth at which the actuator starts widening.
+    pub ramp_low: usize,
+    /// Queue depth at which the actuator reaches the floor.
+    pub ramp_high: usize,
+    /// Deadline applied to requests that carry none (0 = none).
+    pub default_deadline_ms: f64,
+    /// EWMA weight for the service-time feedback.
+    pub ewma_alpha: f64,
+    /// UNet share of service time in the actuator's cost model
+    /// (saving ≈ fraction × share / 2, §3.3 of the paper).
+    pub unet_share: f64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            enabled: false,
+            max_queue_depth: 64,
+            floor_fraction: 0.5,
+            ramp_low: 2,
+            ramp_high: 16,
+            default_deadline_ms: 0.0,
+            ewma_alpha: 0.2,
+            unet_share: 0.95,
+        }
+    }
+}
+
+impl QosConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_queue_depth == 0 {
+            return Err(Error::Config("qos max_queue_depth must be >= 1".into()));
+        }
+        if !(0.0..=1.0).contains(&self.floor_fraction) || !self.floor_fraction.is_finite() {
+            return Err(Error::Config(format!(
+                "qos floor_fraction {} outside [0, 1]",
+                self.floor_fraction
+            )));
+        }
+        if self.ramp_low > self.ramp_high {
+            return Err(Error::Config(format!(
+                "qos ramp_low {} > ramp_high {}",
+                self.ramp_low, self.ramp_high
+            )));
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(Error::Config(format!(
+                "qos ewma_alpha {} outside (0, 1]",
+                self.ewma_alpha
+            )));
+        }
+        if !(self.unet_share > 0.0 && self.unet_share <= 1.0) {
+            return Err(Error::Config(format!(
+                "qos unet_share {} outside (0, 1]",
+                self.unet_share
+            )));
+        }
+        if !self.default_deadline_ms.is_finite()
+            || self.default_deadline_ms < 0.0
+            || self.default_deadline_ms > MAX_DEADLINE_MS
+        {
+            return Err(Error::Config(format!(
+                "qos default_deadline_ms {} outside [0, {MAX_DEADLINE_MS}]",
+                self.default_deadline_ms
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build from a `[qos]` TOML section (missing keys keep defaults).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = QosConfig::default();
+        if let Some(v) = doc.get("qos", "enabled") {
+            cfg.enabled =
+                v.as_bool().ok_or_else(|| Error::Config("qos enabled must be bool".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "max_queue_depth") {
+            cfg.max_queue_depth = v
+                .as_usize()
+                .ok_or_else(|| Error::Config("qos max_queue_depth must be int".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "floor_fraction") {
+            cfg.floor_fraction = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("qos floor_fraction must be number".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "ramp_low") {
+            cfg.ramp_low =
+                v.as_usize().ok_or_else(|| Error::Config("qos ramp_low must be int".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "ramp_high") {
+            cfg.ramp_high =
+                v.as_usize().ok_or_else(|| Error::Config("qos ramp_high must be int".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "default_deadline_ms") {
+            cfg.default_deadline_ms = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("qos default_deadline_ms must be number".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "ewma_alpha") {
+            cfg.ewma_alpha =
+                v.as_f64().ok_or_else(|| Error::Config("qos ewma_alpha must be number".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "unet_share") {
+            cfg.unet_share =
+                v.as_f64().ok_or_else(|| Error::Config("qos unet_share must be number".into()))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Predicted service time at a widened window, relative to the full-CFG
+/// time `base_ms`: the paper's §3.3 model, saving ≈ fraction·share/2.
+pub fn service_ms_at(base_ms: f64, unet_share: f64, fraction: f64) -> f64 {
+    base_ms * (1.0 - unet_share * fraction.clamp(0.0, 1.0) / 2.0)
+}
+
+/// The pluggable QoS hook the coordinator consults ahead of the batcher.
+///
+/// Implementations must be cheap and thread-safe: `admit` runs on the
+/// submitting thread with the submission lock *not* held, and
+/// `observe_batch` runs on worker threads after each engine batch.
+pub trait QosPolicy: Send + Sync {
+    /// Admission + shaping for one request given the current outstanding
+    /// depth. May mutate `req` (widen the selective-guidance window) and
+    /// `meta` (apply a default deadline).
+    fn admit(
+        &self,
+        req: &mut GenerationRequest,
+        meta: &mut QosMeta,
+        queue_depth: usize,
+    ) -> AdmissionDecision;
+
+    /// Feedback: one engine batch of `batch_size` requests completed in
+    /// `service` wall time. `mean_fraction` is the mean selective-
+    /// guidance window fraction the batch ran at, so implementations can
+    /// normalize the sample back to a full-CFG baseline — otherwise the
+    /// estimator would absorb the widening speedup and admission would
+    /// discount it a second time.
+    fn observe_batch(&self, batch_size: usize, service: Duration, mean_fraction: f64);
+
+    /// Feedback: one admitted request expired in the queue past its
+    /// deadline (it was never executed).
+    fn observe_deadline_miss(&self) {}
+
+    /// Counters for the stats endpoints.
+    fn qos_snapshot(&self) -> QosSnapshot;
+}
+
+/// The default policy: deadline-aware admission + load-driven window
+/// actuation + EWMA service feedback.
+pub struct DeadlineQos {
+    cfg: QosConfig,
+    admission: AdmissionController,
+    actuator: WindowActuator,
+    estimator: ServiceEstimator,
+    counters: QosCounters,
+}
+
+impl DeadlineQos {
+    pub fn new(cfg: QosConfig) -> Result<DeadlineQos> {
+        cfg.validate()?;
+        Ok(DeadlineQos {
+            admission: AdmissionController::new(cfg.clone()),
+            actuator: WindowActuator::new(cfg.clone()),
+            estimator: ServiceEstimator::new(cfg.ewma_alpha),
+            counters: QosCounters::new(),
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &QosConfig {
+        &self.cfg
+    }
+
+    pub fn counters(&self) -> &QosCounters {
+        &self.counters
+    }
+
+    /// Current load view (exposed for tests and the simulator).
+    pub fn load(&self, queue_depth: usize) -> LoadSnapshot {
+        self.estimator.snapshot(queue_depth)
+    }
+}
+
+impl QosPolicy for DeadlineQos {
+    fn admit(
+        &self,
+        req: &mut GenerationRequest,
+        meta: &mut QosMeta,
+        queue_depth: usize,
+    ) -> AdmissionDecision {
+        if meta.deadline.is_none() && self.cfg.default_deadline_ms > 0.0 {
+            meta.deadline = Some(Duration::from_secs_f64(self.cfg.default_deadline_ms / 1e3));
+        }
+        let load = self.estimator.snapshot(queue_depth);
+        // Explicit client windows are a floor, and non-`Last` placements
+        // are deliberate experiments we must not silently move (the
+        // paper shows placement matters more than size, Figure 1) — so
+        // the widest window this request can *actually* run at, which
+        // feasibility must be judged against, differs per request.
+        let widenable = req.window.fraction == 0.0
+            || matches!(req.window.position, WindowPosition::Last);
+        let achievable = if widenable {
+            self.cfg.floor_fraction.max(req.window.fraction)
+        } else {
+            req.window.fraction
+        };
+        match self.admission.decide(meta, &load, achievable) {
+            AdmissionDecision::Reject(reason) => {
+                self.counters.inc_rejected();
+                AdmissionDecision::Reject(reason)
+            }
+            AdmissionDecision::Admit => {
+                let target = self.actuator.fraction_for_request(&load, meta);
+                let widen = widenable && target > req.window.fraction;
+                if widen {
+                    req.window = WindowSpec::last(target);
+                }
+                let applied = if matches!(req.window.position, WindowPosition::Last) {
+                    req.window.fraction
+                } else {
+                    0.0
+                };
+                self.counters.inc_admitted();
+                self.counters.observe_fraction(applied, widen);
+                AdmissionDecision::Admit
+            }
+        }
+    }
+
+    fn observe_batch(&self, batch_size: usize, service: Duration, mean_fraction: f64) {
+        // normalize to the full-CFG baseline (inverse of service_ms_at):
+        // the EWMA must estimate un-widened service time, or feasibility
+        // would double-count the widening speedup
+        let denom = 1.0 - self.cfg.unet_share * mean_fraction.clamp(0.0, 1.0) / 2.0;
+        let baseline = Duration::from_secs_f64(service.as_secs_f64() / denom.max(0.5));
+        self.estimator.observe_batch(batch_size, baseline);
+    }
+
+    fn observe_deadline_miss(&self) {
+        self.counters.inc_deadline_missed();
+    }
+
+    fn qos_snapshot(&self) -> QosSnapshot {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loaded_policy(cfg: QosConfig) -> DeadlineQos {
+        let q = DeadlineQos::new(cfg).unwrap();
+        // prime the feedback loop: 100 ms per request at full CFG
+        for _ in 0..20 {
+            q.observe_batch(1, Duration::from_millis(100), 0.0);
+        }
+        q
+    }
+
+    #[test]
+    fn priority_parse_and_order() {
+        assert_eq!(Priority::parse("interactive").unwrap(), Priority::Interactive);
+        assert_eq!(Priority::parse("normal").unwrap(), Priority::Standard);
+        assert_eq!(Priority::parse("low").unwrap(), Priority::Batch);
+        assert!(Priority::parse("bogus").is_err());
+        assert!(Priority::Interactive > Priority::Standard);
+        assert!(Priority::Standard > Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Standard);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(QosConfig::default().validate().is_ok());
+        assert!(QosConfig { max_queue_depth: 0, ..QosConfig::default() }.validate().is_err());
+        assert!(QosConfig { floor_fraction: 1.5, ..QosConfig::default() }.validate().is_err());
+        assert!(QosConfig { ramp_low: 9, ramp_high: 3, ..QosConfig::default() }
+            .validate()
+            .is_err());
+        assert!(QosConfig { ewma_alpha: 0.0, ..QosConfig::default() }.validate().is_err());
+        assert!(QosConfig { unet_share: 1.5, ..QosConfig::default() }.validate().is_err());
+        assert!(QosConfig { default_deadline_ms: -1.0, ..QosConfig::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn service_model_matches_paper() {
+        // full widening at 50% with pure-UNet share halves 25% of the time
+        assert!((service_ms_at(100.0, 1.0, 0.5) - 75.0).abs() < 1e-9);
+        assert_eq!(service_ms_at(100.0, 0.95, 0.0), 100.0);
+        // clamped fraction
+        assert!((service_ms_at(100.0, 1.0, 2.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admit_accepts_idle_and_sheds_when_full() {
+        let q = loaded_policy(QosConfig {
+            max_queue_depth: 4,
+            enabled: true,
+            ..QosConfig::default()
+        });
+        let mut req = GenerationRequest::new("p").decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(q.admit(&mut req, &mut meta, 0), AdmissionDecision::Admit));
+        let mut req2 = GenerationRequest::new("p").decode(false);
+        match q.admit(&mut req2, &mut meta, 4) {
+            AdmissionDecision::Reject(RejectReason::QueueFull { .. }) => {}
+            other => panic!("expected queue-full rejection, got {other:?}"),
+        }
+        let s = q.qos_snapshot();
+        assert_eq!(s.admitted, 1);
+        assert_eq!(s.rejected, 1);
+    }
+
+    #[test]
+    fn admit_widens_window_under_load_but_respects_explicit_windows() {
+        let cfg = QosConfig {
+            enabled: true,
+            ramp_low: 0,
+            ramp_high: 4,
+            floor_fraction: 0.5,
+            max_queue_depth: 64,
+            ..QosConfig::default()
+        };
+        let q = loaded_policy(cfg);
+        // deep queue -> full widening to the floor
+        let mut req = GenerationRequest::new("p").decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(q.admit(&mut req, &mut meta, 4), AdmissionDecision::Admit));
+        assert_eq!(req.window, WindowSpec::last(0.5));
+        // an explicit larger client window is kept
+        let mut req = GenerationRequest::new("p").selective(WindowSpec::last(0.8)).decode(false);
+        let mut meta = QosMeta::default();
+        q.admit(&mut req, &mut meta, 4);
+        assert_eq!(req.window, WindowSpec::last(0.8));
+        // a deliberate non-Last placement is never moved
+        let mut req = GenerationRequest::new("p").selective(WindowSpec::first(0.25)).decode(false);
+        let mut meta = QosMeta::default();
+        q.admit(&mut req, &mut meta, 4);
+        assert_eq!(req.window, WindowSpec::first(0.25));
+    }
+
+    #[test]
+    fn feedback_normalizes_widened_batches() {
+        let q = DeadlineQos::new(QosConfig {
+            enabled: true,
+            ewma_alpha: 1.0,
+            ..QosConfig::default()
+        })
+        .unwrap();
+        // a batch served at the floor (f=0.5, u=0.95) in 76.25 ms is a
+        // 100 ms request at full CFG — the estimator must see 100, or
+        // feasibility would discount the widening twice
+        q.observe_batch(1, Duration::from_secs_f64(0.07625), 0.5);
+        assert!((q.load(0).service_ms - 100.0).abs() < 1e-6);
+        // full-CFG batches pass through unchanged
+        q.observe_batch(1, Duration::from_millis(100), 0.0);
+        assert!((q.load(0).service_ms - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn default_deadline_applied() {
+        let q = loaded_policy(QosConfig {
+            enabled: true,
+            default_deadline_ms: 2000.0,
+            ..QosConfig::default()
+        });
+        let mut req = GenerationRequest::new("p").decode(false);
+        let mut meta = QosMeta::default();
+        q.admit(&mut req, &mut meta, 0);
+        assert_eq!(meta.deadline, Some(Duration::from_secs(2)));
+        // an explicit deadline is not overwritten
+        let mut meta = QosMeta::with_deadline_ms(500.0);
+        q.admit(&mut req, &mut meta, 0);
+        assert_eq!(meta.deadline, Some(Duration::from_millis(500)));
+    }
+
+    #[test]
+    fn qos_meta_helpers() {
+        let m = QosMeta::with_deadline_ms(250.0);
+        assert!((m.deadline_ms().unwrap() - 250.0).abs() < 1e-9);
+        assert_eq!(QosMeta::default().deadline_ms(), None);
+        // hostile inputs clamp instead of panicking in Duration math
+        assert!(QosMeta::with_deadline_ms(1e300).deadline_ms().unwrap() <= MAX_DEADLINE_MS);
+        assert_eq!(QosMeta::with_deadline_ms(f64::NAN).deadline_ms(), Some(0.0));
+        assert_eq!(QosMeta::with_deadline_ms(-10.0).deadline_ms(), Some(0.0));
+        // config validation enforces the same bound
+        assert!(QosConfig { default_deadline_ms: 1e300, ..QosConfig::default() }
+            .validate()
+            .is_err());
+    }
+}

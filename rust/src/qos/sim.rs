@@ -1,0 +1,403 @@
+//! Deterministic discrete-event model of the serving loop, driving the
+//! *real* QoS policy objects.
+//!
+//! The PJRT artifacts (and therefore the real engine) are a build
+//! product that is absent in CI and on dev laptops; the control law
+//! still needs an end-to-end evaluation path. This simulator replays an
+//! arrival trace through [`DeadlineQos`] — the same admission,
+//! actuation and feedback code the coordinator runs — against the §3.3
+//! analytic service model (`service = base · (1 − u·f/2)`), in virtual
+//! time. Everything is pure math: runs are exactly reproducible and take
+//! microseconds per thousand requests, which is what lets
+//! `benches/qos_control.rs` sweep arrival rates densely.
+//!
+//! Fidelity notes: service times are deterministic (no engine jitter)
+//! and batching superlinearity is ignored, consistent with the
+//! estimator's conservative model (see `feedback.rs`). The engine-in-
+//! the-loop path is covered by `tests/integration_qos.rs` and the
+//! `slo_serving` bench when artifacts are built.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::Duration;
+
+use crate::engine::GenerationRequest;
+use crate::guidance::WindowPosition;
+
+use super::{service_ms_at, AdmissionDecision, DeadlineQos, QosMeta, QosPolicy};
+
+/// Virtual serving-loop parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SimSpec {
+    /// Full-CFG (dual-pass) service time of one request, virtual ms.
+    pub base_service_ms: f64,
+    /// UNet share of service time (the §3.3 cost model).
+    pub unet_share: f64,
+    /// Per-request deadline == the SLO both modes are scored against.
+    pub deadline_ms: f64,
+    /// Parallel servers.
+    pub workers: usize,
+    /// Steps carried by the simulated requests (shaping metadata only).
+    pub steps: usize,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            base_service_ms: 100.0,
+            unet_share: 0.95,
+            deadline_ms: 300.0,
+            workers: 1,
+            steps: 50,
+        }
+    }
+}
+
+/// Outcome of one simulated replay.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimReport {
+    pub offered: usize,
+    pub completed: usize,
+    /// Shed at admission (queue full / deadline infeasible).
+    pub rejected: usize,
+    /// Expired in the queue before service started (policy mode only).
+    pub expired: usize,
+    /// Completed within the SLO.
+    pub slo_met: usize,
+    /// Mean applied window fraction over admitted requests.
+    pub mean_fraction: f64,
+    pub p50_latency_ms: f64,
+    pub p90_latency_ms: f64,
+}
+
+impl SimReport {
+    /// Fraction of *offered* requests that finished within the SLO —
+    /// shed and expired requests count against attainment, so admission
+    /// control cannot game the metric by rejecting everything.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.slo_met as f64 / self.offered as f64
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Queued {
+    arrive_ms: f64,
+    service_ms: f64,
+    /// Window fraction this request runs at (feedback normalization).
+    fraction: f64,
+    /// Expiry budget from arrival (None = no deadline enforcement).
+    deadline_ms: Option<f64>,
+}
+
+/// Completion event ordered by finish time (min-heap via `Reverse`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Finish {
+    at_ms: f64,
+    service_ms: f64,
+    fraction: f64,
+}
+
+impl Eq for Finish {}
+
+impl PartialOrd for Finish {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Finish {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // finite virtual times only; ties broken by service for determinism
+        self.at_ms
+            .partial_cmp(&other.at_ms)
+            .unwrap_or(CmpOrdering::Equal)
+            .then(
+                self.service_ms
+                    .partial_cmp(&other.service_ms)
+                    .unwrap_or(CmpOrdering::Equal),
+            )
+    }
+}
+
+struct SimState<'a> {
+    spec: SimSpec,
+    policy: Option<&'a DeadlineQos>,
+    workers: Vec<f64>,
+    queue: VecDeque<Queued>,
+    finishes: BinaryHeap<std::cmp::Reverse<Finish>>,
+    outstanding: usize,
+    latencies: Vec<f64>,
+    completed: usize,
+    expired: usize,
+    slo_met: usize,
+}
+
+impl SimState<'_> {
+    /// Advance virtual time to `until`: retire finished services and
+    /// start queued work as servers free up.
+    fn drain(&mut self, until: f64) {
+        loop {
+            // retire everything that finished by `until`
+            while let Some(&std::cmp::Reverse(ev)) = self.finishes.peek() {
+                if ev.at_ms > until {
+                    break;
+                }
+                self.finishes.pop();
+                self.outstanding -= 1;
+                if let Some(p) = self.policy {
+                    // the feedback loop sees per-request timings exactly
+                    // as the coordinator workers would report them
+                    p.observe_batch(1, Duration::from_secs_f64(ev.service_ms / 1e3), ev.fraction);
+                }
+            }
+            let Some(&head) = self.queue.front() else { break };
+            let (wi, free) = self
+                .workers
+                .iter()
+                .copied()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(CmpOrdering::Equal))
+                .expect("workers >= 1");
+            let start = free.max(head.arrive_ms);
+            if start > until {
+                break;
+            }
+            self.queue.pop_front();
+            // deadline-expire: don't pay for UNet work that is already
+            // too late (mirrors the coordinator worker check)
+            if let Some(p) = self.policy {
+                if let Some(d) = head.deadline_ms {
+                    if start > head.arrive_ms + d {
+                        self.expired += 1;
+                        self.outstanding -= 1;
+                        p.observe_deadline_miss();
+                        continue;
+                    }
+                }
+            }
+            let finish = start + head.service_ms;
+            self.workers[wi] = finish;
+            self.finishes.push(std::cmp::Reverse(Finish {
+                at_ms: finish,
+                service_ms: head.service_ms,
+                fraction: head.fraction,
+            }));
+            let latency = finish - head.arrive_ms;
+            self.latencies.push(latency);
+            self.completed += 1;
+            if latency <= self.spec.deadline_ms {
+                self.slo_met += 1;
+            }
+        }
+    }
+}
+
+/// Replay `arrivals_ms` (sorted offsets, virtual ms) through the serving
+/// model. `policy = None` is the pre-QoS baseline: unbounded FIFO, full
+/// dual-pass CFG for everyone. `policy = Some(..)` runs the full control
+/// loop; pass a freshly-built [`DeadlineQos`] per run — it accumulates
+/// feedback state.
+pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos>) -> SimReport {
+    assert!(spec.workers >= 1, "sim needs at least one worker");
+    debug_assert!(
+        arrivals_ms.windows(2).all(|w| w[1] >= w[0]),
+        "arrivals must be sorted"
+    );
+    let mut st = SimState {
+        spec: *spec,
+        policy,
+        workers: vec![0.0; spec.workers],
+        queue: VecDeque::new(),
+        finishes: BinaryHeap::new(),
+        outstanding: 0,
+        latencies: Vec::with_capacity(arrivals_ms.len()),
+        completed: 0,
+        expired: 0,
+        slo_met: 0,
+    };
+    let mut rejected = 0usize;
+    let mut fractions: Vec<f64> = Vec::with_capacity(arrivals_ms.len());
+
+    for &t in arrivals_ms {
+        st.drain(t);
+        match policy {
+            Some(p) => {
+                let mut req = GenerationRequest::new("qos sim").steps(spec.steps).decode(false);
+                let mut meta = QosMeta::with_deadline_ms(spec.deadline_ms);
+                match p.admit(&mut req, &mut meta, st.outstanding) {
+                    AdmissionDecision::Reject(_) => {
+                        rejected += 1;
+                    }
+                    AdmissionDecision::Admit => {
+                        let f = if matches!(req.window.position, WindowPosition::Last) {
+                            req.window.fraction
+                        } else {
+                            0.0
+                        };
+                        fractions.push(f);
+                        st.queue.push_back(Queued {
+                            arrive_ms: t,
+                            service_ms: service_ms_at(spec.base_service_ms, spec.unet_share, f),
+                            fraction: f,
+                            deadline_ms: meta.deadline_ms(),
+                        });
+                        st.outstanding += 1;
+                    }
+                }
+            }
+            None => {
+                fractions.push(0.0);
+                st.queue.push_back(Queued {
+                    arrive_ms: t,
+                    service_ms: spec.base_service_ms,
+                    fraction: 0.0,
+                    deadline_ms: None,
+                });
+                st.outstanding += 1;
+            }
+        }
+    }
+    st.drain(f64::INFINITY);
+
+    let mean_fraction = if fractions.is_empty() {
+        0.0
+    } else {
+        fractions.iter().sum::<f64>() / fractions.len() as f64
+    };
+    let mut sorted = st.latencies.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(CmpOrdering::Equal));
+    let pct = |q: f64| {
+        if sorted.is_empty() {
+            0.0
+        } else {
+            sorted[((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)]
+        }
+    };
+    SimReport {
+        offered: arrivals_ms.len(),
+        completed: st.completed,
+        rejected,
+        expired: st.expired,
+        slo_met: st.slo_met,
+        mean_fraction,
+        p50_latency_ms: pct(0.5),
+        p90_latency_ms: pct(0.9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::QosConfig;
+    use crate::workload::ArrivalProcess;
+
+    fn policy() -> DeadlineQos {
+        DeadlineQos::new(QosConfig {
+            enabled: true,
+            ramp_low: 1,
+            ramp_high: 4,
+            floor_fraction: 0.5,
+            ..QosConfig::default()
+        })
+        .unwrap()
+    }
+
+    fn poisson(rate: f64, n: usize) -> Vec<f64> {
+        ArrivalProcess::Poisson { rate_per_s: rate }.arrivals(n, 7)
+    }
+
+    #[test]
+    fn light_load_is_untouched() {
+        // service 100 ms, arrivals every 250 ms: no queue forms
+        let arr: Vec<f64> = (0..200).map(|i| i as f64 * 250.0).collect();
+        let spec = SimSpec::default();
+        let off = simulate(&arr, &spec, None);
+        let q = policy();
+        let on = simulate(&arr, &spec, Some(&q));
+        assert_eq!(off.slo_attainment(), 1.0);
+        assert_eq!(on.slo_attainment(), 1.0);
+        assert_eq!(on.rejected, 0);
+        assert_eq!(on.expired, 0);
+        // idle actuator: everyone gets full CFG
+        assert_eq!(on.mean_fraction, 0.0);
+    }
+
+    #[test]
+    fn overload_sheds_and_wins_on_slo() {
+        // capacity 10/s at full CFG; offer 2x
+        let arr = poisson(20.0, 800);
+        let spec = SimSpec::default();
+        let off = simulate(&arr, &spec, None);
+        let q = policy();
+        let on = simulate(&arr, &spec, Some(&q));
+        assert!(on.rejected > 0, "overload must shed: {on:?}");
+        assert!(
+            on.slo_attainment() > off.slo_attainment(),
+            "actuator must win at overload: on {:?} vs off {:?}",
+            on.slo_attainment(),
+            off.slo_attainment()
+        );
+        // the queue bound keeps served latency near the SLO while the
+        // baseline's unbounded queue blows past it
+        assert!(on.p90_latency_ms <= spec.deadline_ms * 1.5, "{on:?}");
+        assert!(off.p90_latency_ms > spec.deadline_ms * 2.0, "{off:?}");
+    }
+
+    #[test]
+    fn actuator_widens_under_pressure() {
+        // just past capacity: widening (not only shedding) should engage
+        let arr = poisson(12.0, 600);
+        let q = policy();
+        let on = simulate(&arr, &SimSpec::default(), Some(&q));
+        assert!(on.mean_fraction > 0.0, "{on:?}");
+        assert!(
+            on.mean_fraction <= q.config().floor_fraction + 1e-12,
+            "quality floor violated: {on:?}"
+        );
+    }
+
+    #[test]
+    fn burst_expires_stale_requests() {
+        // 10 simultaneous arrivals, 150 ms deadline, 100 ms service: the
+        // cold-start estimator admits them all, then expiry fires for
+        // jobs whose turn comes after the deadline
+        let arr = vec![0.0; 10];
+        let spec = SimSpec { deadline_ms: 150.0, ..SimSpec::default() };
+        let q = DeadlineQos::new(QosConfig {
+            enabled: true,
+            max_queue_depth: 64,
+            ..QosConfig::default()
+        })
+        .unwrap();
+        let on = simulate(&arr, &spec, Some(&q));
+        assert!(on.expired > 0, "{on:?}");
+        assert!(on.completed >= 1, "{on:?}");
+        assert_eq!(on.completed + on.expired + on.rejected, 10, "{on:?}");
+    }
+
+    #[test]
+    fn deterministic_replays() {
+        let arr = poisson(15.0, 300);
+        let spec = SimSpec::default();
+        let a = simulate(&arr, &spec, Some(&policy()));
+        let b = simulate(&arr, &spec, Some(&policy()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn multi_worker_capacity() {
+        // 12/s offered: one 10/s worker drowns, two workers keep up
+        let arr = poisson(12.0, 400);
+        let one = simulate(&arr, &SimSpec::default(), None);
+        let two = simulate(&arr, &SimSpec { workers: 2, ..SimSpec::default() }, None);
+        assert_eq!(two.completed, two.offered); // baseline never sheds
+        assert!(
+            two.slo_attainment() > one.slo_attainment(),
+            "two workers must beat one: {two:?} vs {one:?}"
+        );
+        assert!(two.p90_latency_ms < one.p90_latency_ms);
+    }
+}

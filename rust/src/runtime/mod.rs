@@ -16,6 +16,9 @@ use std::path::Path;
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
+// PJRT surface: the in-crate stub by default; swap for the native
+// bindings by changing this one import (DESIGN.md §2).
+use crate::xla;
 
 /// A compiled computation plus its resident parameter buffer.
 struct LoadedArtifact {
@@ -215,7 +218,13 @@ impl ModelStack {
 
     /// Eq.-1 combine on device (the Pallas kernel artifact):
     /// `eps_hat = eps_u + s (eps_c - eps_u)` over a compiled batch `b`.
-    pub fn cfg_combine(&self, b: usize, eps_u: &[f32], eps_c: &[f32], scale: f32) -> Result<Vec<f32>> {
+    pub fn cfg_combine(
+        &self,
+        b: usize,
+        eps_u: &[f32],
+        eps_c: &[f32],
+        scale: f32,
+    ) -> Result<Vec<f32>> {
         let m = &self.manifest.model;
         let art = self
             .combine

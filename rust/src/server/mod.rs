@@ -3,9 +3,14 @@
 //! One JSON object per line in each direction. Operations:
 //!
 //! * `{"op":"generate", "prompt":..., ...}` → generation result (metrics
-//!   and, when `return_image` is true, the PNG as base64);
+//!   and, when `return_image` is true, the PNG as base64). Optional QoS
+//!   fields: `deadline_ms` (number) and `priority`
+//!   (`interactive|standard|batch`); a shed request answers
+//!   `{"ok":false,"rejected":true,"code":429|503,...}` and a
+//!   queue-expired one `{"ok":false,"deadline_exceeded":true,"code":504}`;
 //! * `{"op":"ping"}` → `{"ok":true,"pong":true}`;
-//! * `{"op":"stats"}` → coordinator stats snapshot;
+//! * `{"op":"stats"}` → coordinator stats snapshot (incl. `rejected`,
+//!   `deadline_missed`, `queue_depth_max`, `actuator_fraction`);
 //! * `{"op":"shutdown"}` → acks and stops the listener.
 //!
 //! No HTTP stack exists in the offline registry snapshot; JSON-over-TCP
@@ -15,7 +20,7 @@ mod base64;
 mod protocol;
 
 pub use base64::{b64decode, b64encode};
-pub use protocol::{parse_request, render_output, ServerRequest};
+pub use protocol::{parse_request, render_failure, render_output, ServerRequest};
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -127,8 +132,13 @@ fn dispatch(line: &str, coordinator: &Arc<Coordinator>, stop: &Arc<AtomicBool>) 
                 .with("submitted", s.submitted as i64)
                 .with("completed", s.completed as i64)
                 .with("failed", s.failed as i64)
+                .with("rejected", s.rejected as i64)
+                .with("deadline_missed", s.deadline_missed as i64)
                 .with("batches", s.batches as i64)
                 .with("batched_requests", s.batched_requests as i64)
+                .with("queue_depth", s.queue_depth as i64)
+                .with("queue_depth_max", s.queue_depth_max as i64)
+                .with("actuator_fraction", s.actuator_fraction)
                 .with("latency_ms_mean", s.latency_ms_mean)
                 .with("latency_ms_p50", s.latency_ms_p50)
                 .with("latency_ms_p90", s.latency_ms_p90)
@@ -138,9 +148,14 @@ fn dispatch(line: &str, coordinator: &Arc<Coordinator>, stop: &Arc<AtomicBool>) 
             ok_base(id).with("stopping", true)
         }
         Some("generate") => match parse_request(&parsed) {
-            Ok(sr) => match coordinator.generate(sr.request.clone()) {
+            // submit through the QoS path: a shed request comes back as
+            // a structured 429/503 response, a queue-expired one as 504
+            Ok(sr) => match coordinator
+                .submit_qos(sr.request.clone(), sr.meta)
+                .and_then(|ticket| ticket.wait())
+            {
                 Ok(out) => render_output(id, &sr, &out),
-                Err(e) => err_response(id, &e.to_string()),
+                Err(e) => render_failure(id, &e),
             },
             Err(e) => err_response(id, &e.to_string()),
         },

@@ -5,6 +5,7 @@ use crate::error::{Error, Result};
 use crate::guidance::WindowSpec;
 use crate::image::encode_png;
 use crate::json::Value;
+use crate::qos::{Priority, QosMeta};
 use crate::scheduler::SchedulerKind;
 
 use super::base64::b64encode;
@@ -13,6 +14,8 @@ use super::base64::b64encode;
 #[derive(Debug, Clone)]
 pub struct ServerRequest {
     pub request: GenerationRequest,
+    /// Serving metadata: deadline + priority class (QoS admission).
+    pub meta: QosMeta,
     /// Include the PNG (base64) in the response.
     pub return_image: bool,
     /// Include the raw final latent in the response.
@@ -67,11 +70,56 @@ pub fn parse_request(v: &Value) -> Result<ServerRequest> {
             }
         };
     }
+    let mut meta = QosMeta::default();
+    if let Some(d) = v.get("deadline_ms") {
+        let ms = d
+            .as_f64()
+            .ok_or_else(|| Error::Protocol("deadline_ms must be a number".into()))?;
+        // the upper bound keeps Duration::from_secs_f64 panic-free on
+        // hostile input — a connection must never die to a bad field
+        if !ms.is_finite() || ms <= 0.0 || ms > crate::qos::MAX_DEADLINE_MS {
+            return Err(Error::Protocol(format!(
+                "deadline_ms {ms} outside (0, {}]",
+                crate::qos::MAX_DEADLINE_MS
+            )));
+        }
+        meta.deadline = Some(std::time::Duration::from_secs_f64(ms / 1e3));
+    }
+    if let Some(p) = v.get("priority") {
+        meta.priority = Priority::parse(
+            p.as_str().ok_or_else(|| Error::Protocol("priority must be a string".into()))?,
+        )?;
+    }
     let return_image = v.get("return_image").and_then(Value::as_bool).unwrap_or(false);
     let return_latent = v.get("return_latent").and_then(Value::as_bool).unwrap_or(false);
     req.decode = return_image || req.decode;
     req.validate()?;
-    Ok(ServerRequest { request: req, return_image, return_latent })
+    Ok(ServerRequest { request: req, meta, return_image, return_latent })
+}
+
+/// Render a generation failure, giving QoS outcomes their structured
+/// 429/503/504-style shape so clients can branch without parsing
+/// message strings.
+pub fn render_failure(id: Option<i64>, e: &Error) -> Value {
+    let mut v = Value::obj().with("ok", false).with("error", e.to_string());
+    // qos_code() owns the error -> HTTP-code mapping; only the shape
+    // flags are decided here
+    if let Some(code) = e.qos_code() {
+        v = v.with("code", code as i64);
+    }
+    match e {
+        Error::Rejected { reason, .. } => {
+            v = v.with("rejected", true).with("reason", reason.as_str());
+        }
+        Error::DeadlineExceeded(_) => {
+            v = v.with("deadline_exceeded", true);
+        }
+        _ => {}
+    }
+    if let Some(id) = id {
+        v = v.with("id", id);
+    }
+    v
 }
 
 /// Render a generation result for the wire.
@@ -151,6 +199,53 @@ mod tests {
             parse(r#"{"op":"generate","prompt":"x","window_fraction":0.2,"window_position":"bogus"}"#)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn qos_fields_parse() {
+        let sr = parse(
+            r#"{"op":"generate","prompt":"x","deadline_ms":250.5,"priority":"interactive"}"#,
+        )
+        .unwrap();
+        assert!((sr.meta.deadline_ms().unwrap() - 250.5).abs() < 1e-9);
+        assert_eq!(sr.meta.priority, crate::qos::Priority::Interactive);
+        // defaults: no deadline, standard priority
+        let sr = parse(r#"{"op":"generate","prompt":"x"}"#).unwrap();
+        assert_eq!(sr.meta, crate::qos::QosMeta::default());
+    }
+
+    #[test]
+    fn bad_qos_fields_rejected() {
+        assert!(parse(r#"{"op":"generate","prompt":"x","deadline_ms":-5}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","deadline_ms":"soon"}"#).is_err());
+        // overflow guard: a huge deadline is a protocol error, not a
+        // Duration::from_secs_f64 panic killing the connection
+        assert!(parse(r#"{"op":"generate","prompt":"x","deadline_ms":1e30}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","priority":"urgent"}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","priority":3}"#).is_err());
+    }
+
+    #[test]
+    fn rejection_renders_structured() {
+        let e = Error::Rejected {
+            code: 429,
+            reason: "queue full: depth 8 >= class limit 8".into(),
+        };
+        let v = render_failure(Some(4), &e);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("rejected").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("code").unwrap().as_i64(), Some(429));
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(4));
+        assert!(v.get("reason").unwrap().as_str().unwrap().contains("queue full"));
+
+        let d = render_failure(None, &Error::DeadlineExceeded("expired in queue".into()));
+        assert_eq!(d.get("deadline_exceeded").unwrap().as_bool(), Some(true));
+        assert_eq!(d.get("code").unwrap().as_i64(), Some(504));
+
+        // ordinary errors keep the legacy shape
+        let o = render_failure(None, &Error::Request("empty prompt".into()));
+        assert!(o.get("code").is_none());
+        assert!(o.get("error").unwrap().as_str().unwrap().contains("empty prompt"));
     }
 
     #[test]

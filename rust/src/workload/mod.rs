@@ -14,10 +14,11 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::Coordinator;
 use crate::engine::GenerationRequest;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::guidance::WindowSpec;
 use crate::metrics::SampleStats;
 use crate::prompts;
+use crate::qos::{Priority, QosMeta};
 use crate::rng::Rng;
 use crate::scheduler::SchedulerKind;
 
@@ -82,6 +83,8 @@ pub struct TraceEntry {
     /// Arrival offset from trace start, milliseconds.
     pub at_ms: f64,
     pub request: GenerationRequest,
+    /// Serving metadata (deadline, priority) for the QoS replay path.
+    pub meta: QosMeta,
 }
 
 /// Trace synthesis parameters.
@@ -96,6 +99,10 @@ pub struct WorkloadSpec {
     pub guidance_scale: f32,
     pub decode: bool,
     pub seed: u64,
+    /// Deadline attached to every request (None = best effort).
+    pub deadline_ms: Option<f64>,
+    /// Priority class attached to every request.
+    pub priority: Priority,
 }
 
 impl Default for WorkloadSpec {
@@ -109,6 +116,8 @@ impl Default for WorkloadSpec {
             guidance_scale: 7.5,
             decode: false,
             seed: 0,
+            deadline_ms: None,
+            priority: Priority::Standard,
         }
     }
 }
@@ -117,6 +126,15 @@ impl WorkloadSpec {
     /// Synthesize a deterministic trace over the Table-2 corpus.
     pub fn synthesize(&self) -> Vec<TraceEntry> {
         let arrivals = self.arrivals.arrivals(self.num_requests, self.seed);
+        // with_deadline_ms owns the clamp (MAX_DEADLINE_MS, non-finite)
+        // so a hostile spec can't panic Duration construction
+        let meta = QosMeta {
+            priority: self.priority,
+            ..self
+                .deadline_ms
+                .map(QosMeta::with_deadline_ms)
+                .unwrap_or_default()
+        };
         arrivals
             .into_iter()
             .enumerate()
@@ -129,7 +147,7 @@ impl WorkloadSpec {
                     .selective(self.window)
                     .seed(self.seed.wrapping_add(i as u64))
                     .decode(self.decode);
-                TraceEntry { at_ms, request }
+                TraceEntry { at_ms, request, meta }
             })
             .collect()
     }
@@ -165,8 +183,86 @@ impl ReplayReport {
 }
 
 /// Replay a trace against a coordinator, honoring arrival times
-/// (open-loop). Blocks until every request completes.
+/// (open-loop). Blocks until every request completes. Thin projection of
+/// [`replay_qos`]: the trace's QoS metadata is honored (not dropped),
+/// and rejections/expiries fold into the aggregate `failures` count.
 pub fn replay(coordinator: &Arc<Coordinator>, trace: &[TraceEntry]) -> Result<ReplayReport> {
+    let report = replay_qos(coordinator, trace)?;
+    let failures = report.outcomes.len() - report.completed();
+    Ok(ReplayReport {
+        latencies_ms: report.latencies_ms,
+        wall_s: report.wall_s,
+        throughput: report.throughput,
+        failures,
+    })
+}
+
+/// How one traced request ended — the per-request QoS record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RequestOutcome {
+    Completed { latency_ms: f64 },
+    /// Shed at admission (429/503) — never occupied queue space.
+    Rejected,
+    /// Expired in the queue past its deadline (504).
+    DeadlineMissed,
+    /// Engine or coordinator failure.
+    Failed,
+}
+
+/// Replay result with per-request QoS outcomes, in trace order.
+#[derive(Debug, Clone)]
+pub struct QosReplayReport {
+    pub outcomes: Vec<RequestOutcome>,
+    /// Latencies of completed requests only, ms.
+    pub latencies_ms: Vec<f64>,
+    /// Wall time of the whole replay, seconds.
+    pub wall_s: f64,
+    /// Completed images/s.
+    pub throughput: f64,
+}
+
+impl QosReplayReport {
+    pub fn completed(&self) -> usize {
+        self.latencies_ms.len()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.outcomes.iter().filter(|o| matches!(o, RequestOutcome::Rejected)).count()
+    }
+
+    pub fn deadline_missed(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| matches!(o, RequestOutcome::DeadlineMissed))
+            .count()
+    }
+
+    pub fn failures(&self) -> usize {
+        self.outcomes.iter().filter(|o| matches!(o, RequestOutcome::Failed)).count()
+    }
+
+    /// Fraction of *offered* requests completed within `slo_ms` —
+    /// rejected, expired and failed requests count against attainment.
+    pub fn slo_attainment(&self, slo_ms: f64) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        let met = self
+            .outcomes
+            .iter()
+            .filter(|o| {
+                matches!(o, RequestOutcome::Completed { latency_ms } if *latency_ms <= slo_ms)
+            })
+            .count();
+        met as f64 / self.outcomes.len() as f64
+    }
+}
+
+/// Replay a trace through the QoS submission path, recording one
+/// [`RequestOutcome`] per entry (open-loop; blocks until every admitted
+/// request resolves). Unlike [`replay`], synchronous admission
+/// rejections are recorded instead of treated as failures.
+pub fn replay_qos(coordinator: &Arc<Coordinator>, trace: &[TraceEntry]) -> Result<QosReplayReport> {
     let start = Instant::now();
     let mut pending = Vec::with_capacity(trace.len());
     for entry in trace {
@@ -175,22 +271,31 @@ pub fn replay(coordinator: &Arc<Coordinator>, trace: &[TraceEntry]) -> Result<Re
         if target > now {
             std::thread::sleep(target - now);
         }
-        pending.push(coordinator.submit(entry.request.clone())?);
+        match coordinator.submit_qos(entry.request.clone(), entry.meta) {
+            Ok(ticket) => pending.push(Some(ticket)),
+            Err(Error::Rejected { .. }) => pending.push(None),
+            Err(e) => return Err(e), // setup errors (validation, drain) abort
+        }
     }
-    let mut latencies = Vec::with_capacity(pending.len());
-    let mut failures = 0usize;
-    for ticket in pending {
-        // latency is stamped by the worker at completion, so consuming
-        // the tickets late (after the open-loop submission ends) does not
-        // inflate the numbers
-        match ticket.wait_timed() {
-            Ok((_, latency)) => latencies.push(latency.as_secs_f64() * 1e3),
-            Err(_) => failures += 1,
+    let mut outcomes = Vec::with_capacity(trace.len());
+    let mut latencies = Vec::new();
+    for slot in pending {
+        match slot {
+            None => outcomes.push(RequestOutcome::Rejected),
+            Some(ticket) => match ticket.wait_timed() {
+                Ok((_, latency)) => {
+                    let ms = latency.as_secs_f64() * 1e3;
+                    latencies.push(ms);
+                    outcomes.push(RequestOutcome::Completed { latency_ms: ms });
+                }
+                Err(Error::DeadlineExceeded(_)) => outcomes.push(RequestOutcome::DeadlineMissed),
+                Err(_) => outcomes.push(RequestOutcome::Failed),
+            },
         }
     }
     let wall_s = start.elapsed().as_secs_f64();
     let throughput = latencies.len() as f64 / wall_s;
-    Ok(ReplayReport { latencies_ms: latencies, wall_s, throughput, failures })
+    Ok(QosReplayReport { outcomes, latencies_ms: latencies, wall_s, throughput })
 }
 
 #[cfg(test)]
@@ -231,6 +336,44 @@ mod tests {
     }
 
     #[test]
+    fn bursty_arrivals_land_inside_on_windows() {
+        // the fold maps the compressed on-only timeline onto wall clock
+        // by inserting the off gap each cycle, so every arrival must sit
+        // inside an on-window: t mod (on+off) < on
+        let (on, off) = (100u64, 400u64);
+        let ap = ArrivalProcess::Bursty { burst_rate_per_s: 80.0, on_ms: on, off_ms: off };
+        let period = (on + off) as f64;
+        for seed in [0u64, 1, 2, 3] {
+            let arr = ap.arrivals(300, seed);
+            for &t in &arr {
+                let phase = t.rem_euclid(period);
+                assert!(
+                    phase < on as f64 + 1e-9,
+                    "seed {seed}: arrival {t} at phase {phase} inside the off window"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_deterministic_and_seed_sensitive() {
+        let ap = ArrivalProcess::Bursty { burst_rate_per_s: 30.0, on_ms: 50, off_ms: 150 };
+        assert_eq!(ap.arrivals(64, 9), ap.arrivals(64, 9));
+        assert_ne!(ap.arrivals(64, 9), ap.arrivals(64, 10));
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_rate_across_seeds() {
+        // mean-gap sanity at a second operating point, over several seeds
+        let ap = ArrivalProcess::Poisson { rate_per_s: 25.0 };
+        for seed in [11u64, 22, 33] {
+            let arr = ap.arrivals(1500, seed);
+            let mean_gap = arr.last().unwrap() / 1500.0;
+            assert!((mean_gap - 40.0).abs() < 6.0, "seed {seed}: mean gap {mean_gap}ms");
+        }
+    }
+
+    #[test]
     fn trace_synthesis_covers_corpus() {
         let spec = WorkloadSpec {
             num_requests: 70,
@@ -250,6 +393,24 @@ mod tests {
     }
 
     #[test]
+    fn trace_carries_qos_meta() {
+        let spec = WorkloadSpec {
+            num_requests: 5,
+            deadline_ms: Some(1500.0),
+            priority: Priority::Interactive,
+            ..WorkloadSpec::default()
+        };
+        let trace = spec.synthesize();
+        assert!(trace.iter().all(|t| {
+            t.meta.priority == Priority::Interactive
+                && (t.meta.deadline_ms().unwrap() - 1500.0).abs() < 1e-9
+        }));
+        // default: best-effort standard
+        let plain = WorkloadSpec { num_requests: 2, ..WorkloadSpec::default() }.synthesize();
+        assert!(plain.iter().all(|t| t.meta == QosMeta::default()));
+    }
+
+    #[test]
     fn replay_report_slo_math() {
         let report = ReplayReport {
             latencies_ms: vec![10.0, 20.0, 30.0, 40.0],
@@ -260,6 +421,31 @@ mod tests {
         assert_eq!(report.slo_attainment(25.0), 0.5);
         assert_eq!(report.slo_attainment(100.0), 1.0);
         assert_eq!(report.slo_attainment(5.0), 0.0);
+    }
+
+    #[test]
+    fn qos_replay_report_math() {
+        let report = QosReplayReport {
+            outcomes: vec![
+                RequestOutcome::Completed { latency_ms: 10.0 },
+                RequestOutcome::Completed { latency_ms: 40.0 },
+                RequestOutcome::Rejected,
+                RequestOutcome::DeadlineMissed,
+                RequestOutcome::Failed,
+            ],
+            latencies_ms: vec![10.0, 40.0],
+            wall_s: 1.0,
+            throughput: 2.0,
+        };
+        assert_eq!(report.completed(), 2);
+        assert_eq!(report.rejected(), 1);
+        assert_eq!(report.deadline_missed(), 1);
+        assert_eq!(report.failures(), 1);
+        // only completions inside the SLO count; shed/expired/failed
+        // requests count against attainment
+        assert!((report.slo_attainment(25.0) - 0.2).abs() < 1e-12);
+        assert!((report.slo_attainment(100.0) - 0.4).abs() < 1e-12);
+        assert_eq!(report.slo_attainment(1.0), 0.0);
     }
 
     #[test]

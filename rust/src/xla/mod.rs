@@ -1,0 +1,169 @@
+//! In-crate stand-in for the PJRT `xla` bindings.
+//!
+//! The serving stack executes its AOT artifacts through a thin PJRT
+//! surface (client / executable / buffer / literal). On machines with
+//! the native XLA toolchain those types come from the real bindings; the
+//! offline registry snapshot this repo must build from has none, so this
+//! module provides the same *shape* as a null backend: every entry point
+//! type-checks, and the first call that would need a real device —
+//! [`PjRtClient::cpu`] — returns a descriptive error.
+//!
+//! The rest of the stack is designed so that this degrades gracefully:
+//! [`crate::runtime::ModelStack::load`] is the only constructor that
+//! touches PJRT, integration tests skip via `require_artifacts!`, and
+//! the QoS control loop ships its own artifact-free evaluation path
+//! ([`crate::qos::sim`]). Swapping the real bindings back in is a
+//! one-line change: replace `use crate::xla;` with the external crate in
+//! `runtime/mod.rs` and `error.rs` (DESIGN.md §2).
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` — an opaque message.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    fn unavailable(what: &str) -> Error {
+        Error::new(format!(
+            "{what}: PJRT runtime unavailable — this build uses the in-crate \
+             xla stub (see rust/src/xla/mod.rs and DESIGN.md §2)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Stub PJRT client. [`PjRtClient::cpu`] fails, so no downstream method
+/// is ever reached at runtime; they exist to keep the call sites typed.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The real bindings construct a host-CPU PJRT client here; the stub
+    /// reports that no runtime is linked in.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Upload a host tensor (`data` flattened, `dims` its shape) to the
+    /// device identified by `device` (None = default).
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("buffer_from_host_buffer"))
+    }
+
+    /// Compile an [`XlaComputation`] for this client's platform.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+}
+
+/// Parsed HLO module (the AOT artifacts ship HLO text).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO **text** file (the artifact interchange format).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, device-loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over device buffers; one output list per device.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute_b"))
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy device → host as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("to_literal_sync"))
+    }
+}
+
+/// A host-side tensor value.
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Unwrap a 1-element tuple literal (artifacts are lowered with
+    /// `return_tuple=True`).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unavailable("to_tuple1"))
+    }
+
+    /// Flatten to a host vector of element type `T`.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT runtime unavailable"), "{msg}");
+        assert!(msg.contains("xla stub"), "{msg}");
+    }
+
+    #[test]
+    fn stub_error_is_std_error() {
+        let err = Error::new("boom");
+        let dy: &dyn std::error::Error = &err;
+        assert_eq!(dy.to_string(), "boom");
+    }
+}

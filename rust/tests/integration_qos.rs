@@ -1,0 +1,117 @@
+//! Integration: the QoS layer over a real engine (needs built artifacts;
+//! skips otherwise — the engine-free control-law coverage lives in
+//! `src/qos/` and `benches/qos_control.rs`).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::error::Error;
+use selective_guidance::qos::{DeadlineQos, QosConfig, QosMeta};
+use selective_guidance::scheduler::SchedulerKind;
+
+fn qos_coordinator(cfg: QosConfig) -> Option<Arc<Coordinator>> {
+    let stack = common::shared_stack()?;
+    let engine = Arc::new(Engine::new(stack, EngineConfig::default()));
+    Some(Coordinator::start_qos(
+        engine,
+        CoordinatorConfig { max_batch: 4, workers: 1, batch_wait: Duration::from_millis(2) },
+        Arc::new(DeadlineQos::new(cfg).expect("valid qos config")),
+    ))
+}
+
+macro_rules! require_qos_coordinator {
+    ($cfg:expr) => {
+        match qos_coordinator($cfg) {
+            Some(c) => c,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn quick(prompt: &str, seed: u64) -> GenerationRequest {
+    GenerationRequest::new(prompt)
+        .steps(6)
+        .scheduler(SchedulerKind::Ddim)
+        .decode(false)
+        .seed(seed)
+}
+
+#[test]
+fn admitted_request_completes_and_counts() {
+    let c = require_qos_coordinator!(QosConfig { enabled: true, ..QosConfig::default() });
+    let out = c
+        .submit_qos(quick("A cat", 1), QosMeta::default())
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out.steps, 6);
+    let s = c.stats();
+    assert_eq!(s.completed, 1);
+    assert_eq!(s.rejected, 0);
+    assert!(s.queue_depth_max >= 1);
+    assert_eq!(s.queue_depth, 0);
+    c.shutdown();
+}
+
+#[test]
+fn queue_bound_sheds_excess_load() {
+    // queue bound of 1: a burst must produce explicit rejections
+    let c = require_qos_coordinator!(QosConfig {
+        enabled: true,
+        max_queue_depth: 1,
+        ..QosConfig::default()
+    });
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..8u64 {
+        match c.submit_qos(quick("burst", i), QosMeta::default()) {
+            Ok(t) => tickets.push(t),
+            Err(Error::Rejected { code, .. }) => {
+                assert_eq!(code, 429);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "a burst over a 1-deep queue must shed");
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let s = c.stats();
+    assert_eq!(s.rejected, rejected as u64);
+    assert_eq!(s.completed + s.rejected, 8);
+    c.shutdown();
+}
+
+#[test]
+fn stale_requests_expire_instead_of_executing() {
+    // deadline far below any real service time: queued requests behind
+    // the first batch expire with a 504-style error
+    let c = require_qos_coordinator!(QosConfig { enabled: true, ..QosConfig::default() });
+    let meta = QosMeta::with_deadline_ms(1.0);
+    let mut results = Vec::new();
+    for i in 0..6u64 {
+        if let Ok(t) = c.submit_qos(quick("stale", i), meta) {
+            results.push(t);
+        }
+    }
+    let mut expired = 0usize;
+    for t in results {
+        match t.wait() {
+            Err(Error::DeadlineExceeded(_)) => expired += 1,
+            Ok(_) | Err(_) => {}
+        }
+    }
+    let s = c.stats();
+    assert_eq!(s.deadline_missed, expired as u64);
+    assert_eq!(s.queue_depth, 0, "every job must be accounted for");
+    c.shutdown();
+}
