@@ -1,0 +1,150 @@
+//! Figure 5 (repo extension): guidance-reuse strategies vs the paper's
+//! drop-guidance optimization.
+//!
+//! Protocol: per prompt and window fraction, four trajectories with the
+//! same seed — full CFG (baseline), the paper's CondOnly window, and the
+//! two Reuse windows (zero-order hold / linear extrapolation, DESIGN.md
+//! §8). Everything runs on the deterministic synthetic backend
+//! ([`ModelStack::synthetic`]), so the run needs no artifacts, is
+//! bit-reproducible in CI, and the assertions below are *hard*:
+//!
+//! (a) Reuse UNet evals < Dual evals for every window with fraction > 0
+//!     (and >= CondOnly evals — refresh steps are paid, not free);
+//! (b) SSIM(Reuse, full CFG) >= SSIM(CondOnly, full CFG) at the same
+//!     window — cached guidance tracks the baseline at least as well as
+//!     dropped guidance, which is the point of the strategy lattice.
+//!
+//! Run: `cargo bench --bench fig5_reuse_strategies [-- --fast]`
+
+use std::sync::Arc;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, Table};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::{GuidanceStrategy, ReuseKind, WindowSpec};
+use selective_guidance::json::Value;
+use selective_guidance::prompts;
+use selective_guidance::quality::{latent_drift, ssim};
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = if args.fast { 20 } else { 50 };
+    let prompts: &[&str] = if args.fast {
+        &[prompts::FIG2_PROMPT]
+    } else {
+        &[
+            prompts::FIG2_PROMPT,
+            "A watercolor of a silver dragon head with colorful flowers growing out of the top",
+            "A person holding a cat",
+        ]
+    };
+    let fractions = [0.2, 0.3, 0.4, 0.5];
+    let refresh = 4usize;
+    let seed = 11u64;
+
+    eprintln!("[fig5] synthetic backend, {steps} steps, refresh cadence {refresh}");
+    let engine = Engine::new(Arc::new(ModelStack::synthetic()), EngineConfig::default());
+
+    let strategies = [
+        ("cond-only", GuidanceStrategy::CondOnly),
+        ("hold", GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: refresh }),
+        (
+            "extrapolate",
+            GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every: refresh },
+        ),
+    ];
+
+    let mut table = Table::new(&["prompt", "window", "strategy", "evals", "SSIM", "drift"]);
+    let mut rows_json = Vec::new();
+    let mut checked = 0usize;
+
+    for (pi, prompt) in prompts.iter().enumerate() {
+        let request = |w: WindowSpec, s: GuidanceStrategy| {
+            GenerationRequest::new(*prompt)
+                .steps(steps)
+                .scheduler(SchedulerKind::Ddim)
+                .seed(seed)
+                .selective(w)
+                .strategy(s)
+                .decode(true)
+        };
+        let base = engine
+            .generate(&request(WindowSpec::none(), GuidanceStrategy::CondOnly))
+            .expect("baseline");
+        let base_img = base.image.as_ref().unwrap();
+        assert_eq!(base.unet_evals, 2 * steps, "baseline must be dual everywhere");
+
+        for &f in &fractions {
+            let mut ssim_cond = f64::NAN;
+            for (name, strategy) in strategies {
+                let out = engine
+                    .generate(&request(WindowSpec::last(f), strategy))
+                    .expect("optimized");
+                let s = ssim(base_img, out.image.as_ref().unwrap());
+                let d = latent_drift(&base.latent, &out.latent);
+
+                // (a) every optimized run beats the dual baseline on cost
+                assert!(
+                    out.unet_evals < 2 * steps,
+                    "{name} last {f}: {} evals not below dual {}",
+                    out.unet_evals,
+                    2 * steps
+                );
+                match strategy {
+                    GuidanceStrategy::CondOnly => ssim_cond = s,
+                    GuidanceStrategy::Reuse { .. } => {
+                        // reuse pays for its refresh steps ...
+                        let k = WindowSpec::last(f).optimized_count(steps);
+                        assert!(
+                            out.unet_evals >= 2 * steps - k,
+                            "{name} last {f}: reuse cheaper than cond-only?"
+                        );
+                        // ... and (b) buys baseline fidelity back for it
+                        assert!(
+                            s >= ssim_cond,
+                            "{name} last {f}: SSIM {s:.4} below cond-only {ssim_cond:.4}"
+                        );
+                        checked += 1;
+                    }
+                }
+
+                let short: String = prompt.chars().take(24).collect();
+                table.row(&[
+                    short,
+                    format!("last {:.0}%", f * 100.0),
+                    name.into(),
+                    format!("{}", out.unet_evals),
+                    format!("{s:.4}"),
+                    format!("{d:.4}"),
+                ]);
+                rows_json.push(
+                    Value::obj()
+                        .with("prompt_index", pi as i64)
+                        .with("fraction", f)
+                        .with("strategy", name)
+                        .with("unet_evals", out.unet_evals as i64)
+                        .with("ssim", s)
+                        .with("latent_drift", d),
+                );
+            }
+        }
+    }
+
+    println!("\nFigure 5 — guidance-reuse strategies, {steps} steps (synthetic backend):\n");
+    table.print();
+    println!(
+        "\nall {checked} reuse runs: evals < dual baseline and \
+         SSIM(reuse) >= SSIM(cond-only) at the same window"
+    );
+
+    write_result_json(
+        "fig5_reuse_strategies",
+        &Value::obj()
+            .with("steps", steps)
+            .with("refresh_every", refresh as i64)
+            .with("reuse_runs_checked", checked as i64)
+            .with("rows", Value::Arr(rows_json)),
+    );
+}

@@ -49,6 +49,9 @@ fn main() {
         default_deadline_ms: 0.0, // the trace carries explicit deadlines
         ewma_alpha: 0.2,
         unet_share: spec.unet_share,
+        // escalation split: moderate sheds keep guidance via reuse
+        // (DESIGN.md §8), heavy sheds drop it
+        ..QosConfig::default()
     };
 
     eprintln!(

@@ -10,7 +10,7 @@ mod toml;
 pub use toml::{TomlDoc, TomlValue};
 
 use crate::error::{Error, Result};
-use crate::guidance::{SelectiveGuidancePolicy, WindowSpec};
+use crate::guidance::{GuidanceStrategy, SelectiveGuidancePolicy, WindowSpec};
 use crate::qos::QosConfig;
 use crate::scheduler::SchedulerKind;
 
@@ -58,6 +58,9 @@ pub struct EngineConfig {
     pub guidance_scale: f32,
     /// Default selective-guidance window (none = full CFG baseline).
     pub window: WindowSpec,
+    /// What optimized-window iterations execute (DESIGN.md §8): drop
+    /// guidance (the paper) or reuse a cached/extrapolated uncond eps.
+    pub guidance_strategy: GuidanceStrategy,
     /// Whether to run the VAE decode + return images.
     pub decode_images: bool,
     /// Base seed for latent noise streams.
@@ -73,6 +76,7 @@ impl Default for EngineConfig {
             scheduler: SchedulerKind::Pndm,
             guidance_scale: 7.5,
             window: WindowSpec::none(),
+            guidance_strategy: GuidanceStrategy::CondOnly,
             decode_images: true,
             seed: 0,
             dual_strategy: DualStrategy::TwoB1,
@@ -86,7 +90,11 @@ impl EngineConfig {
             return Err(Error::Config(format!("steps {} outside [1, 1000]", self.steps)));
         }
         self.window.validate()?;
-        SelectiveGuidancePolicy::new(self.window, self.guidance_scale)?;
+        SelectiveGuidancePolicy::with_strategy(
+            self.window,
+            self.guidance_scale,
+            self.guidance_strategy,
+        )?;
         Ok(())
     }
 
@@ -122,6 +130,22 @@ impl EngineConfig {
                     return Err(Error::Config(format!("unknown window_position {other:?}")))
                 }
             };
+        }
+        if let Some(v) = doc.get("engine", "guidance_strategy") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| Error::Config("guidance_strategy must be string".into()))?;
+            let refresh = match doc.get("engine", "refresh_every") {
+                Some(r) => r
+                    .as_usize()
+                    .ok_or_else(|| Error::Config("refresh_every must be int >= 0".into()))?,
+                None => 0,
+            };
+            cfg.guidance_strategy = GuidanceStrategy::parse(name, refresh)?;
+        } else if doc.get("engine", "refresh_every").is_some() {
+            // mirror the wire protocol: a cadence without a strategy is
+            // an operator error, not a silent no-op
+            return Err(Error::Config("refresh_every requires guidance_strategy".into()));
         }
         if let Some(v) = doc.get("engine", "decode_images") {
             cfg.decode_images =
@@ -297,6 +321,34 @@ ewma_alpha = 0.3
         assert!(RunConfig::from_str("[engine]\nwindow_fraction = 1.5\n").is_err());
         assert!(RunConfig::from_str("[server]\nworkers = 0\n").is_err());
         assert!(RunConfig::from_str("[engine]\nwindow_fraction = 0.2\nwindow_position = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn guidance_strategy_parse() {
+        use crate::guidance::ReuseKind;
+        let cfg = RunConfig::from_str(
+            "[engine]\nguidance_strategy = \"hold\"\nrefresh_every = 4\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.engine.guidance_strategy,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 }
+        );
+        let cfg = RunConfig::from_str("[engine]\nguidance_strategy = \"extrapolate\"\n").unwrap();
+        assert_eq!(
+            cfg.engine.guidance_strategy,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every: 0 }
+        );
+        // default: the paper's drop-guidance optimization
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.engine.guidance_strategy, GuidanceStrategy::CondOnly);
+        assert!(RunConfig::from_str("[engine]\nguidance_strategy = \"bogus\"\n").is_err());
+        assert!(RunConfig::from_str(
+            "[engine]\nguidance_strategy = \"hold\"\nrefresh_every = -2\n"
+        )
+        .is_err());
+        // a cadence without a strategy is an error, not a silent no-op
+        assert!(RunConfig::from_str("[engine]\nrefresh_every = 4\n").is_err());
     }
 
     #[test]

@@ -426,12 +426,16 @@ fn worker_loop(
         let t_service = Instant::now();
         let result = engine.generate_batch(&reqs);
         // feed the QoS loop *before* responding so admission sees fresh
-        // service estimates as early as possible; the mean window
-        // fraction lets the policy normalize the sample back to a
-        // full-CFG baseline (cost depends on fraction, not placement)
+        // service estimates as early as possible; the mean *effective*
+        // single-pass fraction lets the policy normalize the sample back
+        // to a full-CFG baseline (a reuse window sheds less than its
+        // size, so cost depends on strategy + fraction, not placement)
         if let Some(q) = &qos {
-            let mean_fraction =
-                reqs.iter().map(|r| r.window.fraction).sum::<f64>() / reqs.len() as f64;
+            let mean_fraction = reqs
+                .iter()
+                .map(|r| r.strategy.effective_fraction(r.window.fraction))
+                .sum::<f64>()
+                / reqs.len() as f64;
             q.observe_batch(reqs.len(), t_service.elapsed(), mean_fraction);
         }
         match result {

@@ -7,14 +7,19 @@
 //!               guidance;
 //! * `CondOnly`/`Unguided` — a single conditional execution, `eps_hat =
 //!               eps_c` — the paper's optimized iteration, at half the
-//!               UNet cost.
+//!               UNet cost;
+//! * `Reuse`   — a single conditional execution plus the Eq.-1 combine
+//!               against a **cached** (zero-order hold) or **linearly
+//!               extrapolated** unconditional eps from the most recent
+//!               dual iterations — guidance kept at single-pass cost
+//!               (DESIGN.md §8).
 //!
 //! [`Engine::generate`] runs one request; [`Engine::generate_batch`] runs
 //! a compatible batch in lock-step, bucketizing UNet calls into the
 //! compiled batch sizes (dynamic batching, DESIGN.md §5). Per-sample
 //! policies may differ inside one batch: at each step the batch splits
-//! into "needs uncond" / "cond only" sub-sets and only the former pays
-//! for the second pass.
+//! into dual / reuse / cond-only sub-sets and only the dual set pays for
+//! the second pass.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -23,7 +28,7 @@ use crate::config::{DualStrategy, EngineConfig};
 use crate::error::{Error, Result};
 use crate::guidance::{
     guidance_delta, AdaptiveConfig, AdaptiveController, AdaptiveDecision, GuidanceMode,
-    SelectiveGuidancePolicy, WindowSpec,
+    GuidanceStrategy, ReuseKind, SelectiveGuidancePolicy, WindowSpec,
 };
 use crate::image::RgbImage;
 use crate::metrics::StepBreakdown;
@@ -39,6 +44,9 @@ pub struct GenerationRequest {
     pub steps: usize,
     pub guidance_scale: f32,
     pub window: WindowSpec,
+    /// What optimized-window iterations execute: drop guidance (the
+    /// paper's default) or reuse a cached/extrapolated uncond eps.
+    pub strategy: GuidanceStrategy,
     pub scheduler: SchedulerKind,
     pub seed: u64,
     pub decode: bool,
@@ -55,6 +63,7 @@ impl GenerationRequest {
             steps: cfg.steps,
             guidance_scale: cfg.guidance_scale,
             window: cfg.window,
+            strategy: cfg.guidance_strategy,
             scheduler: cfg.scheduler,
             seed: cfg.seed,
             decode: cfg.decode_images,
@@ -76,6 +85,12 @@ impl GenerationRequest {
     /// Apply a selective-guidance window (the paper's optimization).
     pub fn selective(mut self, w: WindowSpec) -> Self {
         self.window = w;
+        self
+    }
+
+    /// Choose what the optimized window runs (guidance-reuse lattice).
+    pub fn strategy(mut self, s: GuidanceStrategy) -> Self {
+        self.strategy = s;
         self
     }
 
@@ -101,7 +116,7 @@ impl GenerationRequest {
     }
 
     pub fn policy(&self) -> Result<SelectiveGuidancePolicy> {
-        SelectiveGuidancePolicy::new(self.window, self.guidance_scale)
+        SelectiveGuidancePolicy::with_strategy(self.window, self.guidance_scale, self.strategy)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -134,6 +149,47 @@ pub struct GenerationOutput {
     pub unet_evals: usize,
     /// Steps run (== request.steps).
     pub steps: usize,
+    /// Guidance strategy the request ran with — reported from the
+    /// *executed* request, so QoS actuation (which may rewrite the
+    /// strategy at admission) is reflected honestly.
+    pub strategy: GuidanceStrategy,
+}
+
+/// Per-sample history of true unconditional eps evaluations — the state
+/// behind the Reuse guidance modes. Dual iterations record; reuse
+/// iterations estimate (zero-order hold, or a linear forecast through
+/// the last two anchors).
+struct UncondCache {
+    /// Second-most-recent (iteration, eps_u) anchor.
+    prev: Option<(usize, Vec<f32>)>,
+    /// Most recent (iteration, eps_u) anchor.
+    last: Option<(usize, Vec<f32>)>,
+}
+
+impl UncondCache {
+    fn new() -> UncondCache {
+        UncondCache { prev: None, last: None }
+    }
+
+    fn record(&mut self, i: usize, eps: Vec<f32>) {
+        self.prev = self.last.take();
+        self.last = Some((i, eps));
+    }
+
+    /// Estimated uncond eps for iteration `i`; None while cold (the
+    /// policy's cold-start rule keeps that unreachable in practice).
+    fn estimate(&self, i: usize, kind: ReuseKind) -> Option<Vec<f32>> {
+        let (i2, last) = self.last.as_ref()?;
+        match (kind, &self.prev) {
+            (ReuseKind::Hold, _) | (ReuseKind::Extrapolate, None) => Some(last.clone()),
+            (ReuseKind::Extrapolate, Some((i1, prev))) => {
+                // linear forecast through the two anchors, weighted by
+                // iteration distance (anchors are strictly increasing)
+                let w = (i - i2) as f32 / (i2 - i1) as f32;
+                Some(last.iter().zip(prev.iter()).map(|(l, p)| l + (l - p) * w).collect())
+            }
+        }
+    }
 }
 
 /// The serving engine: a [`ModelStack`] plus engine defaults.
@@ -165,6 +221,7 @@ impl Engine {
             steps: self.config.steps,
             guidance_scale: self.config.guidance_scale,
             window: self.config.window,
+            strategy: self.config.guidance_strategy,
             scheduler: self.config.scheduler,
             seed: self.config.seed,
             decode: self.config.decode_images,
@@ -239,6 +296,17 @@ impl Engine {
         let mut in_ts: Vec<f32> = Vec::with_capacity(n);
         let mut in_ctx: Vec<f32> = Vec::with_capacity(n * ctx_elems);
 
+        // per-sample uncond-eps history for the Reuse guidance modes;
+        // recording is gated so the default (drop-guidance) path keeps
+        // its no-steady-state-allocation property
+        let mut caches: Vec<UncondCache> = (0..n).map(|_| UncondCache::new()).collect();
+        let wants_reuse: Vec<bool> = (0..n)
+            .map(|s| {
+                reqs[s].adaptive.is_none()
+                    && matches!(policies[s].strategy(), GuidanceStrategy::Reuse { .. })
+            })
+            .collect();
+
         // ---- the denoising loop ------------------------------------------
         let strategy = self.config.dual_strategy;
         for i in 0..steps {
@@ -257,8 +325,13 @@ impl Engine {
             let dual: Vec<usize> = (0..n)
                 .filter(|&s| matches!(modes[s], GuidanceMode::Dual { .. }))
                 .collect();
+            let reuse: Vec<usize> = (0..n)
+                .filter(|&s| matches!(modes[s], GuidanceMode::Reuse { .. }))
+                .collect();
             let single: Vec<usize> = (0..n)
-                .filter(|&s| !matches!(modes[s], GuidanceMode::Dual { .. }))
+                .filter(|&s| {
+                    matches!(modes[s], GuidanceMode::CondOnly | GuidanceMode::Unguided)
+                })
                 .collect();
 
             let t0 = Instant::now();
@@ -315,9 +388,26 @@ impl Engine {
                             if let Some(ctrl) = controllers[s].as_mut() {
                                 ctrl.observe_delta(guidance_delta(c, u));
                             }
+                            if wants_reuse[s] {
+                                caches[s].record(i, u.to_vec());
+                            }
                             eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
                             breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
                         }
+                    }
+                    // reuse samples: Eq.-1 combine against the cached /
+                    // extrapolated uncond eps (no second UNet pass)
+                    for &s in &reuse {
+                        let GuidanceMode::Reuse { scale, kind } = modes[s] else {
+                            unreachable!()
+                        };
+                        let t0 = Instant::now();
+                        let c = &eps_cond[s * latent_elems..(s + 1) * latent_elems];
+                        let u_hat = caches[s]
+                            .estimate(i, kind)
+                            .expect("reuse step with a cold uncond cache");
+                        eps_hat[s] = self.stack.cfg_combine(1, &u_hat, c, scale)?;
+                        breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
                     }
                     for &s in &single {
                         eps_hat[s] =
@@ -348,14 +438,21 @@ impl Engine {
                         if let Some(ctrl) = controllers[s].as_mut() {
                             ctrl.observe_delta(guidance_delta(c, u));
                         }
+                        if wants_reuse[s] {
+                            caches[s].record(i, u.to_vec());
+                        }
                         eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
                         breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
                     }
-                    // optimized/unguided samples: bucketized cond-only pass
-                    if !single.is_empty() {
+                    // optimized samples (reuse + cond-only/unguided): one
+                    // bucketized cond pass, then per-mode post-processing
+                    let others: Vec<usize> = (0..n)
+                        .filter(|&s| !matches!(modes[s], GuidanceMode::Dual { .. }))
+                        .collect();
+                    if !others.is_empty() {
                         let t0 = Instant::now();
                         let eps_cond = self.unet_over(
-                            &single,
+                            &others,
                             &scaled,
                             &mut in_latents,
                             &mut in_ts,
@@ -363,12 +460,21 @@ impl Engine {
                             |s| &cond_ctx[s],
                             |s| schedulers[s].model_timestep(i),
                         )?;
-                        unet_evals += single.len();
+                        unet_evals += others.len();
                         breakdown.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3;
-                        for (si, &s) in single.iter().enumerate() {
+                        for (oi, &s) in others.iter().enumerate() {
                             evals_per_sample[s] += 1;
-                            eps_hat[s] =
-                                eps_cond[si * latent_elems..(si + 1) * latent_elems].to_vec();
+                            let c = &eps_cond[oi * latent_elems..(oi + 1) * latent_elems];
+                            if let GuidanceMode::Reuse { scale, kind } = modes[s] {
+                                let t0 = Instant::now();
+                                let u_hat = caches[s]
+                                    .estimate(i, kind)
+                                    .expect("reuse step with a cold uncond cache");
+                                eps_hat[s] = self.stack.cfg_combine(1, &u_hat, c, scale)?;
+                                breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+                            } else {
+                                eps_hat[s] = c.to_vec();
+                            }
                         }
                     }
                 }
@@ -383,11 +489,14 @@ impl Engine {
         }
 
         // consistency: per-sample counts must sum to the executed total,
-        // and static-policy samples must match their analytic cost model
-        debug_assert_eq!(unet_evals, evals_per_sample.iter().sum::<usize>());
+        // and static-policy samples must match their analytic cost model.
+        // Hard asserts (not debug_assert): the cost model is the contract
+        // QoS feasibility and the benches are built on, so `--release`
+        // tests must check it too.
+        assert_eq!(unet_evals, evals_per_sample.iter().sum::<usize>());
         for (s, req) in reqs.iter().enumerate() {
             if req.adaptive.is_none() {
-                debug_assert_eq!(
+                assert_eq!(
                     evals_per_sample[s],
                     policies[s].total_unet_evals(steps),
                     "sample {s}: executed evals diverge from the policy cost model"
@@ -396,14 +505,18 @@ impl Engine {
         }
 
         // ---- decode + package -------------------------------------------
-        let wall_base = t_start.elapsed().as_secs_f64() * 1e3;
+        // each output carries its 1/N share of the shared loop costs plus
+        // its own decode time (cloning the whole-batch totals would
+        // over-report N× when aggregating per-request breakdowns)
+        let shared = breakdown.scaled(1.0 / n as f64);
         let mut outputs = Vec::with_capacity(n);
         for (s, req) in reqs.iter().enumerate() {
+            let mut per_sample = shared.clone();
             let image = if req.decode {
                 let t0 = Instant::now();
                 let chw = self.stack.decode(&latents[s])?;
                 let img = RgbImage::from_chw_f32(&chw, m.image_size, m.image_size)?;
-                breakdown.overhead_ms += t0.elapsed().as_secs_f64() * 1e3;
+                per_sample.overhead_ms += t0.elapsed().as_secs_f64() * 1e3;
                 Some(img)
             } else {
                 None
@@ -412,14 +525,14 @@ impl Engine {
                 latent: std::mem::take(&mut latents[s]),
                 image,
                 wall_ms: 0.0, // patched below with the shared wall time
-                breakdown: breakdown.clone(),
+                breakdown: per_sample,
                 // per-request count of actually-executed evaluations
                 unet_evals: evals_per_sample[s],
                 steps,
+                strategy: req.strategy,
             });
         }
         let wall = t_start.elapsed().as_secs_f64() * 1e3;
-        let _ = wall_base;
         for o in outputs.iter_mut() {
             o.wall_ms = wall;
         }
@@ -470,12 +583,17 @@ mod tests {
             .steps(25)
             .guidance_scale(9.0)
             .selective(WindowSpec::last(0.3))
+            .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 })
             .scheduler(SchedulerKind::Ddim)
             .seed(7)
             .decode(false);
         assert_eq!(r.steps, 25);
         assert_eq!(r.guidance_scale, 9.0);
         assert_eq!(r.window, WindowSpec::last(0.3));
+        assert_eq!(
+            r.strategy,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 }
+        );
         assert_eq!(r.scheduler, SchedulerKind::Ddim);
         assert_eq!(r.seed, 7);
         assert!(!r.decode);
@@ -499,5 +617,24 @@ mod tests {
         assert_eq!(r.steps, 50); // "Denoising iterations were fixed at 50"
         assert_eq!(r.guidance_scale, 7.5);
         assert_eq!(r.window, WindowSpec::none());
+        // the paper's optimized iteration drops guidance outright
+        assert_eq!(r.strategy, GuidanceStrategy::CondOnly);
+    }
+
+    #[test]
+    fn uncond_cache_hold_and_extrapolate() {
+        let mut c = UncondCache::new();
+        assert!(c.estimate(0, ReuseKind::Hold).is_none());
+        c.record(2, vec![1.0, 2.0]);
+        // one anchor: both kinds hold
+        assert_eq!(c.estimate(3, ReuseKind::Hold).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(c.estimate(3, ReuseKind::Extrapolate).unwrap(), vec![1.0, 2.0]);
+        c.record(4, vec![3.0, 2.0]);
+        // hold replays the newest anchor
+        assert_eq!(c.estimate(5, ReuseKind::Hold).unwrap(), vec![3.0, 2.0]);
+        // extrapolate continues the (2 -> 4) trend one half-gap further:
+        // slope (3-1)/2 = 1 per iteration on the first element
+        assert_eq!(c.estimate(5, ReuseKind::Extrapolate).unwrap(), vec![4.0, 2.0]);
+        assert_eq!(c.estimate(6, ReuseKind::Extrapolate).unwrap(), vec![5.0, 2.0]);
     }
 }

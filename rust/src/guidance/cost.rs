@@ -46,6 +46,13 @@ impl CostModel {
         fraction / 2.0
     }
 
+    /// Idealized saving for a reuse strategy: refresh steps pay the dual
+    /// cost back, so only the strategy's *effective* single-pass fraction
+    /// saves (see [`super::GuidanceStrategy::effective_fraction`]).
+    pub fn ideal_saving_for(strategy: &super::GuidanceStrategy, fraction: f64) -> f64 {
+        strategy.effective_fraction(fraction) / 2.0
+    }
+
     /// UNet share of baseline time under this model.
     pub fn unet_share(&self, n: usize) -> f64 {
         let unet = 2.0 * n as f64 * self.unet_eval_s;
@@ -112,6 +119,31 @@ mod tests {
             // bounded by the ideal model
             assert!(s2 <= CostModel::ideal_saving(1.0) + 1e-12);
         });
+    }
+
+    #[test]
+    fn reuse_saving_sits_between_dual_and_cond_only() {
+        use crate::guidance::{GuidanceStrategy, ReuseKind};
+        // pure-UNet model: cond-only saves f/2, reuse with refresh m
+        // saves f/2 · m/(m+1), dual saves nothing
+        let m = CostModel { unet_eval_s: 0.1, per_step_overhead_s: 0.0, fixed_s: 0.0 };
+        let n = 50;
+        let w = WindowSpec::last(0.4);
+        let cond = SelectiveGuidancePolicy::new(w, 7.5).unwrap();
+        let hold = SelectiveGuidancePolicy::with_strategy(
+            w,
+            7.5,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 },
+        )
+        .unwrap();
+        let s_cond = m.predicted_saving(&cond, n);
+        let s_hold = m.predicted_saving(&hold, n);
+        assert!(s_hold > 0.0, "reuse must still save: {s_hold}");
+        assert!(s_hold < s_cond, "refresh steps must cost: {s_hold} vs {s_cond}");
+        // the ideal model brackets it (cold-start makes the real count
+        // differ by at most one refresh step)
+        let ideal = CostModel::ideal_saving_for(&hold.strategy(), 0.4);
+        assert!((s_hold - ideal).abs() < 0.02, "model {s_hold} vs ideal {ideal}");
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //! * [`SelectiveGuidancePolicy`] — the per-iteration decision object the
 //!   engine consults;
 //! * [`GuidanceMode`] — what the engine must execute this iteration;
+//! * [`GuidanceStrategy`] — what optimized iterations do instead of the
+//!   second pass: drop guidance (the paper), or keep applying Eq. 1 with
+//!   a cached / extrapolated unconditional eps (guidance reuse);
 //! * [`CostModel`] — the analytic saving model the benches validate
 //!   against (saving ≈ f/2 of UNet time, §3.3);
 //! * [`retuned_scale`] / [`GsTuner`] — the §3.4 guidance-scale retuning.
@@ -21,12 +24,14 @@ mod adaptive;
 mod cost;
 mod gs_tuning;
 mod policy;
+mod strategy;
 mod window;
 
 pub use adaptive::{guidance_delta, AdaptiveController, AdaptiveDecision};
 pub use cost::CostModel;
 pub use gs_tuning::{retuned_scale, GsTuner};
 pub use policy::{GuidanceMode, SelectiveGuidancePolicy};
+pub use strategy::{GuidanceStrategy, ReuseKind};
 pub use window::{WindowPosition, WindowSpec};
 
 /// Configuration for the adaptive (online) skip controller — the paper's

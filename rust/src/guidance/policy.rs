@@ -1,5 +1,6 @@
 //! The per-iteration guidance decision the engine executes.
 
+use super::strategy::{GuidanceStrategy, ReuseKind};
 use super::window::WindowSpec;
 use crate::error::Result;
 
@@ -10,6 +11,9 @@ pub enum GuidanceMode {
     Dual { scale: f32 },
     /// Optimized: conditional evaluation only (`eps_hat = eps_c`).
     CondOnly,
+    /// Optimized with guidance kept: conditional evaluation + Eq.-1
+    /// combine against a cached/extrapolated unconditional eps.
+    Reuse { scale: f32, kind: ReuseKind },
     /// Unguided sampling (guidance scale == 1 collapses Eq. 1 to the
     /// conditional term; skip the dead uncond pass *everywhere*).
     Unguided,
@@ -20,28 +24,39 @@ impl GuidanceMode {
     pub fn unet_evals(&self) -> usize {
         match self {
             GuidanceMode::Dual { .. } => 2,
-            GuidanceMode::CondOnly | GuidanceMode::Unguided => 1,
+            GuidanceMode::CondOnly | GuidanceMode::Reuse { .. } | GuidanceMode::Unguided => 1,
         }
     }
 }
 
-/// The paper's selective-guidance policy: a validated (window, scale)
-/// pair yielding a [`GuidanceMode`] per iteration.
+/// The paper's selective-guidance policy: a validated (window, scale,
+/// strategy) triple yielding a [`GuidanceMode`] per iteration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SelectiveGuidancePolicy {
     window: WindowSpec,
     guidance_scale: f32,
+    strategy: GuidanceStrategy,
 }
 
 impl SelectiveGuidancePolicy {
+    /// The paper's policy: optimized iterations drop guidance entirely.
     pub fn new(window: WindowSpec, guidance_scale: f32) -> Result<Self> {
+        Self::with_strategy(window, guidance_scale, GuidanceStrategy::CondOnly)
+    }
+
+    /// A policy whose optimized iterations follow `strategy`.
+    pub fn with_strategy(
+        window: WindowSpec,
+        guidance_scale: f32,
+        strategy: GuidanceStrategy,
+    ) -> Result<Self> {
         window.validate()?;
         if !guidance_scale.is_finite() || guidance_scale < 0.0 {
             return Err(crate::error::Error::Config(format!(
                 "guidance scale {guidance_scale} must be finite and >= 0"
             )));
         }
-        Ok(SelectiveGuidancePolicy { window, guidance_scale })
+        Ok(SelectiveGuidancePolicy { window, guidance_scale, strategy })
     }
 
     /// Full CFG at the SD default scale of 7.5.
@@ -57,6 +72,10 @@ impl SelectiveGuidancePolicy {
         self.guidance_scale
     }
 
+    pub fn strategy(&self) -> GuidanceStrategy {
+        self.strategy
+    }
+
     /// Decide iteration `i` of an `n`-step loop.
     ///
     /// Note the `scale <= 1 + eps` fast path: with s = 1, Eq. 1 reduces to
@@ -69,7 +88,8 @@ impl SelectiveGuidancePolicy {
             return GuidanceMode::Unguided;
         }
         if self.window.contains(i, n) {
-            GuidanceMode::CondOnly
+            let (start, _) = self.window.range(n);
+            self.strategy.in_window_mode(i - start, start, self.guidance_scale)
         } else {
             GuidanceMode::Dual { scale: self.guidance_scale }
         }
@@ -82,7 +102,7 @@ impl SelectiveGuidancePolicy {
 
     /// Copy with a different guidance scale (the §3.4 retuning path).
     pub fn with_scale(&self, scale: f32) -> Result<Self> {
-        SelectiveGuidancePolicy::new(self.window, scale)
+        SelectiveGuidancePolicy::with_strategy(self.window, scale, self.strategy)
     }
 }
 
@@ -157,6 +177,60 @@ mod tests {
     fn mode_eval_counts() {
         assert_eq!(GuidanceMode::Dual { scale: 7.5 }.unet_evals(), 2);
         assert_eq!(GuidanceMode::CondOnly.unet_evals(), 1);
+        assert_eq!(GuidanceMode::Reuse { scale: 7.5, kind: ReuseKind::Hold }.unet_evals(), 1);
         assert_eq!(GuidanceMode::Unguided.unet_evals(), 1);
+    }
+
+    #[test]
+    fn reuse_policy_mode_sequence() {
+        // last 40% of 10 steps, hold/2: steps 0..6 dual, then R R D R
+        let p = SelectiveGuidancePolicy::with_strategy(
+            WindowSpec::last(0.4),
+            7.5,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 2 },
+        )
+        .unwrap();
+        for i in 0..6 {
+            assert_eq!(p.decide(i, 10), GuidanceMode::Dual { scale: 7.5 });
+        }
+        assert_eq!(p.decide(6, 10), GuidanceMode::Reuse { scale: 7.5, kind: ReuseKind::Hold });
+        assert_eq!(p.decide(7, 10), GuidanceMode::Reuse { scale: 7.5, kind: ReuseKind::Hold });
+        assert_eq!(p.decide(8, 10), GuidanceMode::Dual { scale: 7.5 });
+        assert_eq!(p.decide(9, 10), GuidanceMode::Reuse { scale: 7.5, kind: ReuseKind::Hold });
+        // 6 dual + 1 refresh = 7 dual steps, 3 reuse -> 7*2 + 3 = 17
+        assert_eq!(p.total_unet_evals(10), 17);
+    }
+
+    #[test]
+    fn reuse_eval_counts_exact_for_all_policies() {
+        forall("reuse policy eval counts", 200, |g| {
+            let n = g.usize_in(1, 200);
+            let f = g.f64_in(0.0, 1.0);
+            let kind = if g.bool() { ReuseKind::Hold } else { ReuseKind::Extrapolate };
+            let strategy = GuidanceStrategy::Reuse { kind, refresh_every: g.usize_in(0, 8) };
+            let w = WindowSpec::last(f);
+            let p = SelectiveGuidancePolicy::with_strategy(w, 7.5, strategy).unwrap();
+            let k = w.optimized_count(n);
+            let (start, _) = w.range(n);
+            let single = strategy.single_pass_count(k, start);
+            assert_eq!(p.total_unet_evals(n), 2 * n - single);
+            // reuse is never cheaper than cond-only, never pricier than dual
+            let cond = SelectiveGuidancePolicy::new(w, 7.5).unwrap();
+            assert!(p.total_unet_evals(n) >= cond.total_unet_evals(n));
+            assert!(p.total_unet_evals(n) <= 2 * n);
+        });
+    }
+
+    #[test]
+    fn scale_one_unguided_overrides_strategy() {
+        let p = SelectiveGuidancePolicy::with_strategy(
+            WindowSpec::last(0.5),
+            1.0,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 },
+        )
+        .unwrap();
+        for i in 0..10 {
+            assert_eq!(p.decide(i, 10), GuidanceMode::Unguided);
+        }
     }
 }

@@ -1,0 +1,260 @@
+//! Guidance-reuse strategies: what an *optimized* iteration does instead
+//! of the second UNet pass.
+//!
+//! The paper's optimized iteration drops the unconditional pass outright
+//! (`eps_hat = eps_c`). Related work shows a middle ground — *Compress
+//! Guidance* (Dinh et al., 2024) reuses guidance signals across steps and
+//! *How Much To Guide* (Zhang et al., 2025) caches CFG terms — so the
+//! binary Dual/CondOnly decision generalizes into a small lattice:
+//!
+//! ```text
+//!   quality ▲   Dual ──────────── two passes, exact Eq. 1
+//!           │   Reuse{Extrapolate} one pass + linear eps_u forecast
+//!           │   Reuse{Hold}       one pass + zero-order-hold eps_u
+//!           │   CondOnly ──────── one pass, guidance dropped
+//!   cost    ▼   (all single-pass modes cost one UNet eval)
+//! ```
+//!
+//! Reuse modes still apply the Eq.-1 combine, substituting a **cached**
+//! unconditional eps from the last dual iteration (zero-order hold) or a
+//! **linear extrapolation** from the last two dual iterations. A refresh
+//! cadence (`refresh_every = m`: at most `m` consecutive reuse steps,
+//! then one true dual step) re-anchors the cache; `m == 0` never
+//! refreshes. The first window step falls back to Dual when no dual
+//! iteration precedes the window (cold cache), which keeps the mode
+//! sequence a *pure* function of `(strategy, window, step)` — the engine
+//! executes exactly what [`super::SelectiveGuidancePolicy::decide`]
+//! predicts, and the analytic cost model stays exact.
+
+use super::policy::GuidanceMode;
+use crate::error::{Error, Result};
+
+/// How a reuse step estimates the unconditional eps it did not compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReuseKind {
+    /// Zero-order hold: replay the eps_u of the last dual iteration.
+    #[default]
+    Hold,
+    /// Linear extrapolation from the last two dual iterations (falls back
+    /// to hold while only one anchor exists).
+    Extrapolate,
+}
+
+impl ReuseKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReuseKind::Hold => "hold",
+            ReuseKind::Extrapolate => "extrapolate",
+        }
+    }
+}
+
+/// What optimized-window iterations execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GuidanceStrategy {
+    /// The paper's optimization: drop guidance, `eps_hat = eps_c`.
+    #[default]
+    CondOnly,
+    /// Keep applying Eq. 1 with a cached/extrapolated eps_u;
+    /// `refresh_every = m` runs a true dual step after every `m`
+    /// consecutive reuse steps (0 = never refresh).
+    Reuse { kind: ReuseKind, refresh_every: usize },
+}
+
+impl GuidanceStrategy {
+    /// Parse a strategy name; `refresh_every` applies to reuse variants.
+    pub fn parse(name: &str, refresh_every: usize) -> Result<GuidanceStrategy> {
+        match name.to_ascii_lowercase().as_str() {
+            "cond-only" | "cond_only" | "drop" | "none" => Ok(GuidanceStrategy::CondOnly),
+            "hold" | "cached" | "reuse" => {
+                Ok(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every })
+            }
+            "extrapolate" | "extrap" | "linear" => {
+                Ok(GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every })
+            }
+            other => Err(Error::Config(format!("unknown guidance strategy {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GuidanceStrategy::CondOnly => "cond-only",
+            GuidanceStrategy::Reuse { kind, .. } => kind.name(),
+        }
+    }
+
+    /// Human-readable label for bench tables (e.g. "hold/4").
+    pub fn label(&self) -> String {
+        match self {
+            GuidanceStrategy::CondOnly => "cond-only".into(),
+            GuidanceStrategy::Reuse { kind, refresh_every } => {
+                format!("{}/{}", kind.name(), refresh_every)
+            }
+        }
+    }
+
+    /// Initial window steps forced Dual because the uncond cache has no
+    /// anchor: one when no dual iteration precedes the window.
+    fn cold_steps(&self, prior_duals: usize) -> usize {
+        match self {
+            GuidanceStrategy::CondOnly => 0,
+            GuidanceStrategy::Reuse { .. } => usize::from(prior_duals == 0),
+        }
+    }
+
+    /// Mode for the `j`-th iteration *inside* the optimization window
+    /// (`j` 0-based); `prior_duals` is the number of dual iterations that
+    /// run before the window starts.
+    pub fn in_window_mode(&self, j: usize, prior_duals: usize, scale: f32) -> GuidanceMode {
+        match *self {
+            GuidanceStrategy::CondOnly => GuidanceMode::CondOnly,
+            GuidanceStrategy::Reuse { kind, refresh_every } => {
+                let cold = self.cold_steps(prior_duals);
+                if j < cold {
+                    return GuidanceMode::Dual { scale };
+                }
+                // after warm-up: runs of `m` reuse steps, then one refresh
+                let j = j - cold;
+                if refresh_every > 0 && (j + 1) % (refresh_every + 1) == 0 {
+                    GuidanceMode::Dual { scale }
+                } else {
+                    GuidanceMode::Reuse { scale, kind }
+                }
+            }
+        }
+    }
+
+    /// How many of `k` window iterations run a single UNet pass (the
+    /// complement — cold-start and refresh steps — stays dual).
+    pub fn single_pass_count(&self, k: usize, prior_duals: usize) -> usize {
+        match *self {
+            GuidanceStrategy::CondOnly => k,
+            GuidanceStrategy::Reuse { refresh_every, .. } => {
+                let warm = k.saturating_sub(self.cold_steps(prior_duals));
+                let refreshes = if refresh_every > 0 { warm / (refresh_every + 1) } else { 0 };
+                warm - refreshes
+            }
+        }
+    }
+
+    /// The §3.3 cost model generalized to reuse: the *effective* fraction
+    /// of the loop that runs single-pass for a window of `fraction`.
+    /// CondOnly converts the whole window; Reuse gives back `1/(m+1)` of
+    /// it to refresh steps (cold-start ignored — this feeds the QoS
+    /// service predictor, not the exact eval count).
+    pub fn effective_fraction(&self, window_fraction: f64) -> f64 {
+        match *self {
+            GuidanceStrategy::CondOnly => window_fraction,
+            GuidanceStrategy::Reuse { refresh_every, .. } => {
+                if refresh_every == 0 {
+                    window_fraction
+                } else {
+                    window_fraction * refresh_every as f64 / (refresh_every + 1) as f64
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(GuidanceStrategy::parse("cond-only", 0).unwrap(), GuidanceStrategy::CondOnly);
+        assert_eq!(GuidanceStrategy::parse("drop", 9).unwrap(), GuidanceStrategy::CondOnly);
+        assert_eq!(
+            GuidanceStrategy::parse("hold", 4).unwrap(),
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 }
+        );
+        assert_eq!(
+            GuidanceStrategy::parse("extrapolate", 2).unwrap(),
+            GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every: 2 }
+        );
+        assert!(GuidanceStrategy::parse("bogus", 0).is_err());
+        assert_eq!(GuidanceStrategy::default(), GuidanceStrategy::CondOnly);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(GuidanceStrategy::CondOnly.label(), "cond-only");
+        let s = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 };
+        assert_eq!(s.label(), "hold/4");
+        assert_eq!(s.name(), "hold");
+    }
+
+    #[test]
+    fn cond_only_never_dual_in_window() {
+        let s = GuidanceStrategy::CondOnly;
+        for j in 0..20 {
+            assert_eq!(s.in_window_mode(j, 0, 7.5), GuidanceMode::CondOnly);
+        }
+        assert_eq!(s.single_pass_count(20, 0), 20);
+    }
+
+    #[test]
+    fn reuse_refresh_cadence() {
+        // m = 2, warm cache: R R D R R D R R ...
+        let s = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 2 };
+        let modes: Vec<GuidanceMode> = (0..8).map(|j| s.in_window_mode(j, 5, 7.5)).collect();
+        let dual = |m: &GuidanceMode| matches!(m, GuidanceMode::Dual { .. });
+        assert!(!dual(&modes[0]) && !dual(&modes[1]) && dual(&modes[2]));
+        assert!(!dual(&modes[3]) && !dual(&modes[4]) && dual(&modes[5]));
+        assert_eq!(s.single_pass_count(8, 5), 6);
+        // m = 0: never refresh once warm
+        let s0 = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 };
+        assert!((0..50).all(|j| !dual(&s0.in_window_mode(j, 5, 7.5))));
+        assert_eq!(s0.single_pass_count(50, 5), 50);
+    }
+
+    #[test]
+    fn cold_cache_forces_one_dual() {
+        let s = GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every: 0 };
+        // no prior dual iterations: the first window step must anchor
+        assert_eq!(s.in_window_mode(0, 0, 7.5), GuidanceMode::Dual { scale: 7.5 });
+        assert!(matches!(s.in_window_mode(1, 0, 7.5), GuidanceMode::Reuse { .. }));
+        assert_eq!(s.single_pass_count(10, 0), 9);
+        // with history available, step 0 reuses immediately
+        assert!(matches!(s.in_window_mode(0, 3, 7.5), GuidanceMode::Reuse { .. }));
+        assert_eq!(s.single_pass_count(10, 3), 10);
+    }
+
+    #[test]
+    fn single_pass_count_matches_mode_sequence() {
+        use crate::testutil::prop::forall;
+        forall("strategy single-pass count", 300, |g| {
+            let k = g.usize_in(0, 64);
+            let prior = g.usize_in(0, 3);
+            let s = match g.usize_in(0, 2) {
+                0 => GuidanceStrategy::CondOnly,
+                1 => GuidanceStrategy::Reuse {
+                    kind: ReuseKind::Hold,
+                    refresh_every: g.usize_in(0, 8),
+                },
+                _ => GuidanceStrategy::Reuse {
+                    kind: ReuseKind::Extrapolate,
+                    refresh_every: g.usize_in(0, 8),
+                },
+            };
+            let counted = (0..k)
+                .filter(|&j| s.in_window_mode(j, prior, 7.5).unet_evals() == 1)
+                .count();
+            assert_eq!(counted, s.single_pass_count(k, prior), "{s:?} k={k} prior={prior}");
+        });
+    }
+
+    #[test]
+    fn effective_fraction_bounds() {
+        let hold4 = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 };
+        assert!((hold4.effective_fraction(0.5) - 0.4).abs() < 1e-12);
+        assert_eq!(GuidanceStrategy::CondOnly.effective_fraction(0.5), 0.5);
+        let never = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 };
+        assert_eq!(never.effective_fraction(0.3), 0.3);
+        // reuse never claims more single-pass work than cond-only
+        for m in 0..10 {
+            let s = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: m };
+            assert!(s.effective_fraction(0.4) <= 0.4 + 1e-12);
+        }
+    }
+}

@@ -54,7 +54,10 @@ pub mod prelude {
     pub use crate::coordinator::{Coordinator, CoordinatorConfig};
     pub use crate::engine::{Engine, GenerationOutput, GenerationRequest};
     pub use crate::error::{Error, Result};
-    pub use crate::guidance::{GuidanceMode, SelectiveGuidancePolicy, WindowPosition, WindowSpec};
+    pub use crate::guidance::{
+        GuidanceMode, GuidanceStrategy, ReuseKind, SelectiveGuidancePolicy, WindowPosition,
+        WindowSpec,
+    };
     pub use crate::qos::{DeadlineQos, Priority, QosConfig, QosMeta, QosPolicy};
     pub use crate::quality::{mse, psnr, ssim};
     pub use crate::runtime::ModelStack;

@@ -3,6 +3,7 @@
 //! ```text
 //! sgd-serve generate --prompt "A person holding a cat" [--steps 50]
 //!           [--guidance-scale 7.5] [--window 0.2] [--position last]
+//!           [--strategy cond-only|hold|extrapolate] [--refresh-every 0]
 //!           [--scheduler pndm] [--seed 0] [--out out.png]
 //!           [--artifacts artifacts/tiny]
 //! sgd-serve serve    [--bind 127.0.0.1:7878] [--workers 1]
@@ -24,7 +25,7 @@ use selective_guidance::config::{EngineConfig, RunConfig};
 use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
 use selective_guidance::engine::{Engine, GenerationRequest};
 use selective_guidance::error::{Error, Result};
-use selective_guidance::guidance::WindowSpec;
+use selective_guidance::guidance::{GuidanceStrategy, WindowSpec};
 use selective_guidance::qos::DeadlineQos;
 use selective_guidance::runtime::ModelStack;
 use selective_guidance::scheduler::SchedulerKind;
@@ -80,10 +81,15 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
     let prompt = cli
         .opt("prompt")
         .ok_or_else(|| Error::Config("--prompt is required".into()))?;
+    let strategy = GuidanceStrategy::parse(
+        cli.opt("strategy").unwrap_or("cond-only"),
+        cli.opt_or("refresh-every", 0)?,
+    )?;
     let req = GenerationRequest::new(prompt)
         .steps(cli.opt_or("steps", 50)?)
         .guidance_scale(cli.opt_or("guidance-scale", 7.5)?)
         .selective(window_from(cli)?)
+        .strategy(strategy)
         .scheduler(SchedulerKind::parse(cli.opt("scheduler").unwrap_or("pndm"))?)
         .seed(cli.opt_or("seed", 0)?);
 

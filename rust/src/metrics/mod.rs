@@ -214,6 +214,18 @@ impl StepBreakdown {
         self.scheduler_ms += other.scheduler_ms;
         self.overhead_ms += other.overhead_ms;
     }
+
+    /// Uniformly scaled copy — used to attribute a shared batch loop's
+    /// component times across its N samples (1/N each).
+    pub fn scaled(&self, factor: f64) -> StepBreakdown {
+        StepBreakdown {
+            unet_cond_ms: self.unet_cond_ms * factor,
+            unet_uncond_ms: self.unet_uncond_ms * factor,
+            combine_ms: self.combine_ms * factor,
+            scheduler_ms: self.scheduler_ms * factor,
+            overhead_ms: self.overhead_ms * factor,
+        }
+    }
 }
 
 /// Exponentially-weighted moving average — the smoothing primitive of

@@ -14,6 +14,15 @@
 //! The combined position is monotone in load and clamped at the quality
 //! floor: heavier load never narrows the window, and quality never drops
 //! below the configured floor.
+//!
+//! Since the guidance-reuse lattice landed (DESIGN.md §8), the actuator
+//! escalates through *strategies*, not just window sizes: light load
+//! runs full dual-pass CFG, moderate load serves its shed via **Reuse**
+//! (cached uncond eps — near-CFG quality at single-pass cost), and only
+//! heavy load falls back to the paper's drop-guidance mode. De-escalation
+//! is the mirror image, so quality recovers as load drains.
+
+use crate::guidance::GuidanceStrategy;
 
 use super::feedback::LoadSnapshot;
 use super::{QosConfig, QosMeta};
@@ -66,6 +75,44 @@ impl WindowActuator {
         }
         f
     }
+
+    /// Full actuation: the *effective* single-pass fraction this request
+    /// must shed (from [`Self::fraction_for_request`]), escalated through
+    /// the strategy lattice. Positions at or below
+    /// `reuse_threshold · floor` are served via guidance reuse with the
+    /// window widened so the reuse strategy still delivers the required
+    /// shed (refresh steps give part of the window back); past the
+    /// threshold the actuator escalates to the paper's drop-guidance
+    /// mode. The effective shed is monotone in load either way.
+    pub fn plan_for_request(&self, load: &LoadSnapshot, meta: &QosMeta) -> ActuationPlan {
+        let f = self.fraction_for_request(load, meta);
+        if f <= 0.0 {
+            return ActuationPlan { fraction: 0.0, strategy: GuidanceStrategy::CondOnly };
+        }
+        let m = self.cfg.reuse_refresh_every;
+        let strategy = GuidanceStrategy::Reuse {
+            kind: crate::guidance::ReuseKind::Hold,
+            refresh_every: m,
+        };
+        if f <= self.cfg.reuse_threshold * self.cfg.floor_fraction {
+            // widen so that effective_fraction(window) == f, floor-capped
+            let window = (f / strategy.effective_fraction(1.0)).min(self.cfg.floor_fraction);
+            if strategy.effective_fraction(window) + 1e-12 >= f {
+                return ActuationPlan { fraction: window, strategy };
+            }
+        }
+        ActuationPlan { fraction: f, strategy: GuidanceStrategy::CondOnly }
+    }
+}
+
+/// One actuation decision: the window to apply and what the optimized
+/// iterations should run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActuationPlan {
+    /// Selective-guidance window fraction (Last placement).
+    pub fraction: f64,
+    /// Strategy for the optimized iterations.
+    pub strategy: GuidanceStrategy,
 }
 
 #[cfg(test)]
@@ -156,6 +203,55 @@ mod tests {
         // impossible budget clamps at the floor (admission sheds it)
         let meta = QosMeta::with_deadline_ms(1.0);
         assert_eq!(a.fraction_for_request(&load(3, 100.0), &meta), 0.5);
+    }
+
+    #[test]
+    fn plan_escalates_dual_reuse_cond_only() {
+        use crate::guidance::GuidanceStrategy;
+        let a = actuator(0.5, 0, 10); // reuse_threshold 0.6, refresh 4 (defaults)
+        let meta = QosMeta::default();
+        // idle: full CFG, no window
+        let p = a.plan_for_request(&load(0, 0.0), &meta);
+        assert_eq!(p.fraction, 0.0);
+        // moderate load (shed 0.15 <= 0.6*0.5): reuse, window widened by
+        // (m+1)/m so the effective shed still matches
+        let p = a.plan_for_request(&load(3, 0.0), &meta);
+        assert!(matches!(p.strategy, GuidanceStrategy::Reuse { .. }), "{p:?}");
+        assert!((p.strategy.effective_fraction(p.fraction) - 0.15).abs() < 1e-9, "{p:?}");
+        assert!(p.fraction <= 0.5 + 1e-12);
+        // heavy load (shed 0.5 > 0.3): escalate to drop-guidance
+        let p = a.plan_for_request(&load(10, 0.0), &meta);
+        assert_eq!(p.strategy, GuidanceStrategy::CondOnly);
+        assert!((p.fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_effective_shed_monotone_in_load() {
+        forall("plan monotone effective shed", 100, |g| {
+            let floor = g.f64_in(0.05, 1.0);
+            let lo = g.usize_in(0, 8);
+            let hi = lo + g.usize_in(0, 24);
+            let a = WindowActuator::new(QosConfig {
+                floor_fraction: floor,
+                ramp_low: lo,
+                ramp_high: hi,
+                reuse_threshold: g.f64_in(0.0, 1.0),
+                reuse_refresh_every: g.usize_in(0, 8),
+                ..QosConfig::default()
+            });
+            let meta = QosMeta::default();
+            let mut prev = 0.0f64;
+            for depth in 0..=(hi + 4) {
+                let p = a.plan_for_request(&load(depth, 0.0), &meta);
+                let eff = p.strategy.effective_fraction(p.fraction);
+                assert!(
+                    eff + 1e-9 >= prev,
+                    "effective shed fell under load: depth {depth}, {eff} < {prev}"
+                );
+                assert!(p.fraction <= floor + 1e-12, "window above floor: {p:?}");
+                prev = eff;
+            }
+        });
     }
 
     #[test]

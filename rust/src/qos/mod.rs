@@ -21,8 +21,10 @@
 //!   queuing (`Error::Rejected`, 429-style).
 //! * [`WindowActuator`] — maps load (queue depth, EWMA service time,
 //!   deadline slack) to a selective-guidance window fraction per request:
-//!   light load runs full dual-pass CFG, heavy load widens the cond-only
-//!   window up to a configurable quality floor.
+//!   light load runs full dual-pass CFG, heavy load widens the optimized
+//!   window up to a configurable quality floor. Since the guidance-reuse
+//!   lattice (DESIGN.md §8) it escalates through *strategies* too:
+//!   Dual → Reuse (cached uncond eps, near-CFG quality) → CondOnly.
 //! * [`ServiceEstimator`] — the feedback path, fed by per-batch timing
 //!   from the coordinator workers.
 //! * [`DeadlineQos`] — the default [`QosPolicy`] combining the three.
@@ -156,6 +158,13 @@ pub struct QosConfig {
     /// UNet share of service time in the actuator's cost model
     /// (saving ≈ fraction × share / 2, §3.3 of the paper).
     pub unet_share: f64,
+    /// Escalation split: actuator positions at or below this fraction of
+    /// the floor serve their shed via guidance *reuse* (cached uncond
+    /// eps, quality near full CFG); beyond it the actuator escalates to
+    /// the paper's drop-guidance mode. 0 disables reuse, 1 never drops.
+    pub reuse_threshold: f64,
+    /// Refresh cadence for actuator-applied reuse windows (0 = never).
+    pub reuse_refresh_every: usize,
 }
 
 impl Default for QosConfig {
@@ -169,6 +178,8 @@ impl Default for QosConfig {
             default_deadline_ms: 0.0,
             ewma_alpha: 0.2,
             unet_share: 0.95,
+            reuse_threshold: 0.6,
+            reuse_refresh_every: 4,
         }
     }
 }
@@ -200,6 +211,12 @@ impl QosConfig {
             return Err(Error::Config(format!(
                 "qos unet_share {} outside (0, 1]",
                 self.unet_share
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.reuse_threshold) || !self.reuse_threshold.is_finite() {
+            return Err(Error::Config(format!(
+                "qos reuse_threshold {} outside [0, 1]",
+                self.reuse_threshold
             )));
         }
         if !self.default_deadline_ms.is_finite()
@@ -251,6 +268,16 @@ impl QosConfig {
         if let Some(v) = doc.get("qos", "unet_share") {
             cfg.unet_share =
                 v.as_f64().ok_or_else(|| Error::Config("qos unet_share must be number".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "reuse_threshold") {
+            cfg.reuse_threshold = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("qos reuse_threshold must be number".into()))?;
+        }
+        if let Some(v) = doc.get("qos", "reuse_refresh_every") {
+            cfg.reuse_refresh_every = v
+                .as_usize()
+                .ok_or_else(|| Error::Config("qos reuse_refresh_every must be int >= 0".into()))?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -360,10 +387,21 @@ impl QosPolicy for DeadlineQos {
                 AdmissionDecision::Reject(reason)
             }
             AdmissionDecision::Admit => {
-                let target = self.actuator.fraction_for_request(&load, meta);
-                let widen = widenable && target > req.window.fraction;
+                // escalation lattice: Dual (no window) -> Reuse (cached
+                // guidance, near-CFG quality) -> CondOnly (drop), see
+                // WindowActuator::plan_for_request. The comparison is in
+                // *effective shed* terms: a client's explicit window +
+                // strategy is a floor on how much it already gives up,
+                // and the actuator only ever replaces it with a plan
+                // that sheds strictly more (a reuse plan's window can be
+                // larger yet shed less — raw fractions would lie here).
+                let plan = self.actuator.plan_for_request(&load, meta);
+                let widen = widenable
+                    && plan.strategy.effective_fraction(plan.fraction)
+                        > req.strategy.effective_fraction(req.window.fraction);
                 if widen {
-                    req.window = WindowSpec::last(target);
+                    req.window = WindowSpec::last(plan.fraction);
+                    req.strategy = plan.strategy;
                 }
                 let applied = if matches!(req.window.position, WindowPosition::Last) {
                     req.window.fraction
@@ -429,6 +467,10 @@ mod tests {
             .is_err());
         assert!(QosConfig { ewma_alpha: 0.0, ..QosConfig::default() }.validate().is_err());
         assert!(QosConfig { unet_share: 1.5, ..QosConfig::default() }.validate().is_err());
+        assert!(QosConfig { reuse_threshold: 1.5, ..QosConfig::default() }.validate().is_err());
+        assert!(QosConfig { reuse_threshold: -0.1, ..QosConfig::default() }
+            .validate()
+            .is_err());
         assert!(QosConfig { default_deadline_ms: -1.0, ..QosConfig::default() }
             .validate()
             .is_err());
@@ -489,6 +531,61 @@ mod tests {
         let mut meta = QosMeta::default();
         q.admit(&mut req, &mut meta, 4);
         assert_eq!(req.window, WindowSpec::first(0.25));
+    }
+
+    #[test]
+    fn admit_serves_moderate_load_via_reuse() {
+        use crate::guidance::{GuidanceStrategy, ReuseKind};
+        let cfg = QosConfig {
+            enabled: true,
+            ramp_low: 0,
+            ramp_high: 4,
+            floor_fraction: 0.5,
+            max_queue_depth: 64,
+            ..QosConfig::default()
+        };
+        let q = loaded_policy(cfg);
+        // moderate depth: shed 0.25 <= reuse_threshold·floor = 0.3, so
+        // the request keeps guidance via a (widened) reuse window
+        let mut req = GenerationRequest::new("p").decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(q.admit(&mut req, &mut meta, 2), AdmissionDecision::Admit));
+        assert_eq!(
+            req.strategy,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 }
+        );
+        // window widened by (m+1)/m so the effective shed still lands
+        assert!((req.strategy.effective_fraction(req.window.fraction) - 0.25).abs() < 1e-9);
+        // heavy depth escalates to the paper's drop-guidance mode
+        let mut req = GenerationRequest::new("p").decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(q.admit(&mut req, &mut meta, 4), AdmissionDecision::Admit));
+        assert_eq!(req.strategy, GuidanceStrategy::CondOnly);
+        assert_eq!(req.window, WindowSpec::last(0.5));
+    }
+
+    #[test]
+    fn admit_never_downgrades_explicit_effective_shed() {
+        use crate::guidance::GuidanceStrategy;
+        let cfg = QosConfig {
+            enabled: true,
+            ramp_low: 0,
+            ramp_high: 4,
+            floor_fraction: 0.5,
+            max_queue_depth: 64,
+            ..QosConfig::default()
+        };
+        let q = loaded_policy(cfg);
+        // client already sheds 0.3 (cond-only). The depth-2 plan is a
+        // reuse window with effective shed 0.25 — a *larger* raw window
+        // (0.3125) but less shed, so the request must stay untouched.
+        let mut req = GenerationRequest::new("p")
+            .selective(WindowSpec::last(0.3))
+            .decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(q.admit(&mut req, &mut meta, 2), AdmissionDecision::Admit));
+        assert_eq!(req.window, WindowSpec::last(0.3));
+        assert_eq!(req.strategy, GuidanceStrategy::CondOnly);
     }
 
     #[test]

@@ -232,8 +232,11 @@ pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos
                         rejected += 1;
                     }
                     AdmissionDecision::Admit => {
+                        // the service model keys on the *effective*
+                        // single-pass fraction: a reuse window sheds less
+                        // than its size (refresh steps pay dual cost)
                         let f = if matches!(req.window.position, WindowPosition::Last) {
-                            req.window.fraction
+                            req.strategy.effective_fraction(req.window.fraction)
                         } else {
                             0.0
                         };

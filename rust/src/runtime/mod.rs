@@ -6,13 +6,20 @@
 //! CPU PJRT client, executed via device buffers. Weights are loaded from
 //! the `.params.bin` blobs and kept **resident on device** so the steady
 //! state moves only latents/contexts across the host boundary.
+//!
+//! A second backend, [`ModelStack::synthetic`], swaps the PJRT artifacts
+//! for a deterministic pure-Rust model ([`SyntheticModel`]) with the same
+//! tensor contracts — the execution path engine tests and quality benches
+//! use when the artifacts (and the native toolchain) are absent.
 
 mod artifacts;
+mod synthetic;
 
 pub use artifacts::{ArtifactMeta, DType, Manifest, ModelMeta, TensorSpec};
+pub use synthetic::SyntheticModel;
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
@@ -67,17 +74,27 @@ impl LoadedArtifact {
     }
 }
 
+/// How a [`ModelStack`] executes its four computations.
+enum Backend {
+    /// AOT artifacts compiled onto the PJRT client (production path).
+    Pjrt {
+        client: xla::PjRtClient,
+        /// UNet executables keyed by batch size.
+        unet: BTreeMap<usize, LoadedArtifact>,
+        /// CFG-combine executables keyed by batch size.
+        combine: BTreeMap<usize, LoadedArtifact>,
+        text_encoder: LoadedArtifact,
+        vae_decoder: LoadedArtifact,
+    },
+    /// Deterministic pure-Rust stand-in (tests/benches, no toolchain).
+    Synthetic(SyntheticModel),
+}
+
 /// The full set of compiled executables for one model preset, ready to
 /// serve. Cheap to share behind `Arc` across worker threads.
 pub struct ModelStack {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    /// UNet executables keyed by batch size.
-    unet: BTreeMap<usize, LoadedArtifact>,
-    /// CFG-combine executables keyed by batch size.
-    combine: BTreeMap<usize, LoadedArtifact>,
-    text_encoder: LoadedArtifact,
-    vae_decoder: LoadedArtifact,
+    backend: Backend,
     /// Cache of the unconditional context (encode once, reuse forever).
     uncond_ctx: Mutex<Option<Vec<f32>>>,
 }
@@ -125,14 +142,35 @@ impl ModelStack {
         let vae_decoder = load_one("vae_decoder")?;
 
         Ok(ModelStack {
-            client,
             manifest,
-            unet,
-            combine,
-            text_encoder,
-            vae_decoder,
+            backend: Backend::Pjrt { client, unet, combine, text_encoder, vae_decoder },
             uncond_ctx: Mutex::new(None),
         })
+    }
+
+    /// A fully deterministic artifact-free stack (see [`SyntheticModel`]):
+    /// the execution path tests and benches use when the PJRT artifacts
+    /// aren't built. Tiny tensor sizes keep end-to-end runs cheap.
+    pub fn synthetic() -> ModelStack {
+        let model = ModelMeta {
+            preset: "synthetic".into(),
+            latent_channels: 4,
+            latent_size: 8,
+            image_size: 32,
+            seq_len: 8,
+            text_dim: 32,
+            vocab_size: 1024,
+            batch_sizes: vec![1, 2, 4],
+        };
+        ModelStack {
+            manifest: Manifest {
+                dir: PathBuf::from("<synthetic>"),
+                model: model.clone(),
+                artifacts: BTreeMap::new(),
+            },
+            backend: Backend::Synthetic(SyntheticModel::new(model)),
+            uncond_ctx: Mutex::new(None),
+        }
     }
 
     pub fn model(&self) -> &ModelMeta {
@@ -145,7 +183,7 @@ impl ModelStack {
 
     /// Batch sizes with compiled UNet executables, descending.
     pub fn batch_sizes_desc(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self.unet.keys().copied().collect();
+        let mut v: Vec<usize> = self.manifest.model.batch_sizes.clone();
         v.sort_unstable_by(|a, b| b.cmp(a));
         v
     }
@@ -176,7 +214,12 @@ impl ModelStack {
                 s
             )));
         }
-        self.text_encoder.run_i32(&self.client, ids, &[1, s])
+        match &self.backend {
+            Backend::Pjrt { client, text_encoder, .. } => {
+                text_encoder.run_i32(client, ids, &[1, s])
+            }
+            Backend::Synthetic(m) => Ok(m.encode_text(ids)),
+        }
     }
 
     /// The cached unconditional context (empty prompt).
@@ -199,21 +242,28 @@ impl ModelStack {
     /// `latents`: b*C*H*W, `ts`: b, `ctx`: b*S*D; returns eps (b*C*H*W).
     pub fn unet_eps(&self, b: usize, latents: &[f32], ts: &[f32], ctx: &[f32]) -> Result<Vec<f32>> {
         let m = &self.manifest.model;
-        let art = self
-            .unet
-            .get(&b)
-            .ok_or_else(|| Error::Request(format!("no unet compiled for batch {b}")))?;
+        if !m.batch_sizes.contains(&b) {
+            return Err(Error::Request(format!("no unet compiled for batch {b}")));
+        }
         debug_assert_eq!(latents.len(), b * m.latent_elems());
         debug_assert_eq!(ts.len(), b);
         debug_assert_eq!(ctx.len(), b * m.ctx_elems());
-        art.run_f32(
-            &self.client,
-            &[
-                (latents, &[b, m.latent_channels, m.latent_size, m.latent_size]),
-                (ts, &[b]),
-                (ctx, &[b, m.seq_len, m.text_dim]),
-            ],
-        )
+        match &self.backend {
+            Backend::Pjrt { client, unet, .. } => {
+                let art = unet
+                    .get(&b)
+                    .ok_or_else(|| Error::Request(format!("no unet compiled for batch {b}")))?;
+                art.run_f32(
+                    client,
+                    &[
+                        (latents, &[b, m.latent_channels, m.latent_size, m.latent_size]),
+                        (ts, &[b]),
+                        (ctx, &[b, m.seq_len, m.text_dim]),
+                    ],
+                )
+            }
+            Backend::Synthetic(model) => Ok(model.unet_eps(b, latents, ts, ctx)),
+        }
     }
 
     /// Eq.-1 combine on device (the Pallas kernel artifact):
@@ -226,22 +276,34 @@ impl ModelStack {
         scale: f32,
     ) -> Result<Vec<f32>> {
         let m = &self.manifest.model;
-        let art = self
-            .combine
-            .get(&b)
-            .ok_or_else(|| Error::Request(format!("no cfg_combine compiled for batch {b}")))?;
-        let dims = [b, m.latent_channels, m.latent_size, m.latent_size];
-        art.run_f32(&self.client, &[(eps_u, &dims), (eps_c, &dims), (&[scale], &[1])])
+        match &self.backend {
+            Backend::Pjrt { client, combine, .. } => {
+                let art = combine.get(&b).ok_or_else(|| {
+                    Error::Request(format!("no cfg_combine compiled for batch {b}"))
+                })?;
+                let dims = [b, m.latent_channels, m.latent_size, m.latent_size];
+                art.run_f32(client, &[(eps_u, &dims), (eps_c, &dims), (&[scale], &[1])])
+            }
+            Backend::Synthetic(model) => {
+                if !m.batch_sizes.contains(&b) {
+                    return Err(Error::Request(format!("no cfg_combine compiled for batch {b}")));
+                }
+                Ok(model.cfg_combine(b, eps_u, eps_c, scale))
+            }
+        }
     }
 
     /// Decode one latent to a flattened [3, image, image] tensor in [-1, 1].
     pub fn decode(&self, latent: &[f32]) -> Result<Vec<f32>> {
         let m = &self.manifest.model;
         debug_assert_eq!(latent.len(), m.latent_elems());
-        self.vae_decoder.run_f32(
-            &self.client,
-            &[(latent, &[1, m.latent_channels, m.latent_size, m.latent_size])],
-        )
+        match &self.backend {
+            Backend::Pjrt { client, vae_decoder, .. } => vae_decoder.run_f32(
+                client,
+                &[(latent, &[1, m.latent_channels, m.latent_size, m.latent_size])],
+            ),
+            Backend::Synthetic(model) => Ok(model.decode(latent)),
+        }
     }
 }
 
@@ -271,5 +333,32 @@ mod tests {
         assert_eq!(bucketize(7), vec![4, 2, 1]);
         assert_eq!(bucketize(8), vec![4, 4]);
         assert_eq!(bucketize(5), vec![4, 1]);
+    }
+
+    #[test]
+    fn synthetic_stack_serves_all_computations() {
+        let stack = ModelStack::synthetic();
+        let m = stack.model().clone();
+        assert_eq!(stack.batch_sizes_desc(), vec![4, 2, 1]);
+        assert_eq!(stack.bucketize(7), vec![4, 2, 1]);
+        let ids: Vec<i32> = (0..m.seq_len as i32).collect();
+        let ctx = stack.encode_text(&ids).unwrap();
+        assert_eq!(ctx.len(), m.ctx_elems());
+        let uncond = stack.uncond_ctx().unwrap();
+        assert_eq!(uncond.len(), m.ctx_elems());
+        assert_ne!(ctx, uncond, "cond and uncond contexts must differ");
+        let latents = vec![0.1f32; m.latent_elems()];
+        let eps = stack.unet_eps(1, &latents, &[980.0], &ctx).unwrap();
+        assert_eq!(eps.len(), m.latent_elems());
+        let eps_u = stack.unet_eps(1, &latents, &[980.0], &uncond).unwrap();
+        assert_ne!(eps, eps_u, "guidance must have signal to work with");
+        let combined = stack.cfg_combine(1, &eps_u, &eps, 7.5).unwrap();
+        assert_eq!(combined.len(), m.latent_elems());
+        let img = stack.decode(&latents).unwrap();
+        assert_eq!(img.len(), m.image_elems());
+        // unsupported batch sizes error instead of panicking
+        let bad_latents = vec![0.0; 3 * m.latent_elems()];
+        let bad_ctx = vec![0.0; 3 * m.ctx_elems()];
+        assert!(stack.unet_eps(3, &bad_latents, &[1.0; 3], &bad_ctx).is_err());
     }
 }

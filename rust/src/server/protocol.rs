@@ -2,7 +2,7 @@
 
 use crate::engine::{GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
-use crate::guidance::WindowSpec;
+use crate::guidance::{GuidanceStrategy, WindowSpec};
 use crate::image::encode_png;
 use crate::json::Value;
 use crate::qos::{Priority, QosMeta};
@@ -70,6 +70,20 @@ pub fn parse_request(v: &Value) -> Result<ServerRequest> {
             }
         };
     }
+    if let Some(s) = v.get("strategy") {
+        let name = s
+            .as_str()
+            .ok_or_else(|| Error::Protocol("strategy must be a string".into()))?;
+        let refresh = match v.get("refresh_every") {
+            Some(r) => r.as_usize().ok_or_else(|| {
+                Error::Protocol("refresh_every must be a non-negative integer".into())
+            })?,
+            None => 0,
+        };
+        req.strategy = GuidanceStrategy::parse(name, refresh)?;
+    } else if v.get("refresh_every").is_some() {
+        return Err(Error::Protocol("refresh_every requires a strategy field".into()));
+    }
     let mut meta = QosMeta::default();
     if let Some(d) = v.get("deadline_ms") {
         let ms = d
@@ -129,6 +143,9 @@ pub fn render_output(id: Option<i64>, sr: &ServerRequest, out: &GenerationOutput
         .with("wall_ms", out.wall_ms)
         .with("unet_evals", out.unet_evals as i64)
         .with("steps", out.steps as i64)
+        // from the output, not sr: QoS admission may have rewritten the
+        // request's strategy/window after parsing
+        .with("strategy", out.strategy.name())
         .with("unet_cond_ms", out.breakdown.unet_cond_ms)
         .with("unet_uncond_ms", out.breakdown.unet_uncond_ms)
         .with("combine_ms", out.breakdown.combine_ms)
@@ -202,6 +219,36 @@ mod tests {
     }
 
     #[test]
+    fn strategy_fields_parse() {
+        use crate::guidance::ReuseKind;
+        let sr = parse(
+            r#"{"op":"generate","prompt":"x","window_fraction":0.3,
+               "strategy":"hold","refresh_every":4}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            sr.request.strategy,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 }
+        );
+        let sr = parse(r#"{"op":"generate","prompt":"x","strategy":"extrapolate"}"#).unwrap();
+        assert_eq!(
+            sr.request.strategy,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every: 0 }
+        );
+        // default stays the paper's drop-guidance mode
+        let sr = parse(r#"{"op":"generate","prompt":"x"}"#).unwrap();
+        assert_eq!(sr.request.strategy, GuidanceStrategy::CondOnly);
+        // bad fields are protocol errors, not silent defaults
+        assert!(parse(r#"{"op":"generate","prompt":"x","strategy":"warp"}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","strategy":7}"#).is_err());
+        assert!(
+            parse(r#"{"op":"generate","prompt":"x","strategy":"hold","refresh_every":-1}"#)
+                .is_err()
+        );
+        assert!(parse(r#"{"op":"generate","prompt":"x","refresh_every":2}"#).is_err());
+    }
+
+    #[test]
     fn qos_fields_parse() {
         let sr = parse(
             r#"{"op":"generate","prompt":"x","deadline_ms":250.5,"priority":"interactive"}"#,
@@ -258,11 +305,15 @@ mod tests {
             breakdown: StepBreakdown { unet_cond_ms: 100.0, ..Default::default() },
             unet_evals: 90,
             steps: 50,
+            strategy: GuidanceStrategy::CondOnly,
         };
         let v = render_output(Some(7), &sr, &out);
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("id").unwrap().as_i64(), Some(7));
         assert_eq!(v.get("unet_evals").unwrap().as_i64(), Some(90));
+        // the echoed strategy comes from the executed output, not the
+        // parsed request (QoS admission may rewrite it)
+        assert_eq!(v.get("strategy").unwrap().as_str(), Some("cond-only"));
         assert!(v.get("png_b64").is_none());
         assert!(v.get("latent").is_none());
     }
@@ -278,6 +329,7 @@ mod tests {
             breakdown: StepBreakdown::default(),
             unet_evals: 2,
             steps: 1,
+            strategy: GuidanceStrategy::CondOnly,
         };
         let v = render_output(None, &sr, &out);
         let arr = v.get("latent").unwrap().as_arr().unwrap();

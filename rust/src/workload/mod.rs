@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::Coordinator;
 use crate::engine::GenerationRequest;
 use crate::error::{Error, Result};
-use crate::guidance::WindowSpec;
+use crate::guidance::{GuidanceStrategy, WindowSpec};
 use crate::metrics::SampleStats;
 use crate::prompts;
 use crate::qos::{Priority, QosMeta};
@@ -96,6 +96,8 @@ pub struct WorkloadSpec {
     pub scheduler: SchedulerKind,
     /// Selective-guidance window applied to all requests.
     pub window: WindowSpec,
+    /// Guidance strategy for the optimized window (reuse lattice).
+    pub strategy: GuidanceStrategy,
     pub guidance_scale: f32,
     pub decode: bool,
     pub seed: u64,
@@ -113,6 +115,7 @@ impl Default for WorkloadSpec {
             steps: 50,
             scheduler: SchedulerKind::Pndm,
             window: WindowSpec::none(),
+            strategy: GuidanceStrategy::CondOnly,
             guidance_scale: 7.5,
             decode: false,
             seed: 0,
@@ -145,6 +148,7 @@ impl WorkloadSpec {
                     .scheduler(self.scheduler)
                     .guidance_scale(self.guidance_scale)
                     .selective(self.window)
+                    .strategy(self.strategy)
                     .seed(self.seed.wrapping_add(i as u64))
                     .decode(self.decode);
                 TraceEntry { at_ms, request, meta }
@@ -390,6 +394,23 @@ mod tests {
         let mut seeds: Vec<u64> = trace.iter().map(|t| t.request.seed).collect();
         seeds.dedup();
         assert_eq!(seeds.len(), 70);
+    }
+
+    #[test]
+    fn trace_carries_strategy() {
+        use crate::guidance::ReuseKind;
+        let strategy = GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every: 3 };
+        let spec = WorkloadSpec {
+            num_requests: 6,
+            window: WindowSpec::last(0.3),
+            strategy,
+            ..WorkloadSpec::default()
+        };
+        let trace = spec.synthesize();
+        assert!(trace.iter().all(|t| t.request.strategy == strategy));
+        // default spec keeps the paper's drop-guidance mode
+        let plain = WorkloadSpec { num_requests: 2, ..WorkloadSpec::default() }.synthesize();
+        assert!(plain.iter().all(|t| t.request.strategy == GuidanceStrategy::CondOnly));
     }
 
     #[test]

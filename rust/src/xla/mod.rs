@@ -10,11 +10,14 @@
 //!
 //! The rest of the stack is designed so that this degrades gracefully:
 //! [`crate::runtime::ModelStack::load`] is the only constructor that
-//! touches PJRT, integration tests skip via `require_artifacts!`, and
-//! the QoS control loop ships its own artifact-free evaluation path
-//! ([`crate::qos::sim`]). Swapping the real bindings back in is a
-//! one-line change: replace `use crate::xla;` with the external crate in
-//! `runtime/mod.rs` and `error.rs` (DESIGN.md §2).
+//! touches PJRT, integration tests skip via `require_artifacts!`, the
+//! QoS control loop ships its own artifact-free evaluation path
+//! ([`crate::qos::sim`]), and the engine itself runs end-to-end on the
+//! deterministic synthetic backend
+//! ([`crate::runtime::ModelStack::synthetic`]) so equivalence tests and
+//! quality benches don't need the toolchain either. Swapping the real
+//! bindings back in is a one-line change: replace `use crate::xla;` with
+//! the external crate in `runtime/mod.rs` and `error.rs` (DESIGN.md §2).
 
 use std::fmt;
 

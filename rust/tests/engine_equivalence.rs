@@ -1,0 +1,168 @@
+//! Engine equivalence properties on the deterministic synthetic backend
+//! (no PJRT artifacts needed — this suite always runs).
+//!
+//! For random seeded requests, `generate(r)` must equal the per-sample
+//! output of `generate_batch([r, other])` **bit-for-bit**, under both
+//! [`DualStrategy`] variants and across the whole guidance-strategy
+//! lattice; and the executed `unet_evals` must match the policy's
+//! analytic `total_unet_evals` (the engine itself hard-asserts this on
+//! every run — these tests drive it through randomized configurations).
+
+use std::sync::Arc;
+
+use selective_guidance::config::{DualStrategy, EngineConfig};
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::{GuidanceStrategy, ReuseKind, WindowSpec};
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::testutil::prop::{forall, Gen};
+
+fn engine(dual: DualStrategy) -> Engine {
+    let cfg = EngineConfig { dual_strategy: dual, ..EngineConfig::default() };
+    Engine::new(Arc::new(ModelStack::synthetic()), cfg)
+}
+
+fn random_strategy(g: &mut Gen) -> GuidanceStrategy {
+    match g.usize_in(0, 2) {
+        0 => GuidanceStrategy::CondOnly,
+        1 => GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: g.usize_in(0, 5) },
+        _ => GuidanceStrategy::Reuse {
+            kind: ReuseKind::Extrapolate,
+            refresh_every: g.usize_in(0, 5),
+        },
+    }
+}
+
+fn random_window(g: &mut Gen) -> WindowSpec {
+    let f = g.f64_in(0.0, 1.0);
+    match g.usize_in(0, 3) {
+        0 => WindowSpec::last(f),
+        1 => WindowSpec::first(f),
+        2 => WindowSpec::middle(f),
+        _ => WindowSpec::none(),
+    }
+}
+
+/// A random request on shared (steps, scheduler) so it can batch.
+fn random_request(g: &mut Gen, steps: usize, sched: SchedulerKind) -> GenerationRequest {
+    let scale = if g.bool() { g.f32_in(1.5, 12.0) } else { 1.0 };
+    GenerationRequest::new(format!("{} {}", g.word(8), g.word(8)))
+        .steps(steps)
+        .scheduler(sched)
+        .seed(g.u64())
+        .guidance_scale(scale)
+        .selective(random_window(g))
+        .strategy(random_strategy(g))
+        .decode(false)
+}
+
+fn solo_matches_batch(dual: DualStrategy) {
+    let e = engine(dual);
+    let kinds = [
+        SchedulerKind::Ddim,
+        SchedulerKind::Ddpm,
+        SchedulerKind::Pndm,
+        SchedulerKind::Euler,
+        SchedulerKind::EulerAncestral,
+        SchedulerKind::DpmSolverPP,
+        SchedulerKind::Heun,
+    ];
+    forall(&format!("solo == batch member ({dual:?})"), 60, |g| {
+        let steps = g.usize_in(2, 10);
+        let sched = *g.choose(&kinds);
+        let r = random_request(g, steps, sched);
+        let other = random_request(g, steps, sched);
+
+        let solo = e.generate(&r).expect("solo");
+        let batch = e.generate_batch(&[r.clone(), other.clone()]).expect("batch");
+
+        // bit-for-bit: the synthetic backend computes each sample
+        // independently, so bucketing must not change anything
+        assert_eq!(
+            solo.latent, batch[0].latent,
+            "batched member diverged from solo run ({dual:?})"
+        );
+        assert_eq!(solo.unet_evals, batch[0].unet_evals);
+
+        // executed evals == the analytic policy cost model, hard
+        let policy = r.policy().unwrap();
+        assert_eq!(
+            solo.unet_evals,
+            policy.total_unet_evals(steps),
+            "evals diverge from cost model for {:?}",
+            r.strategy
+        );
+
+        // the second member must also match its own solo run
+        let solo_other = e.generate(&other).expect("solo other");
+        assert_eq!(solo_other.latent, batch[1].latent);
+        assert_eq!(solo_other.unet_evals, batch[1].unet_evals);
+    });
+}
+
+#[test]
+fn solo_matches_batch_two_b1() {
+    solo_matches_batch(DualStrategy::TwoB1);
+}
+
+#[test]
+fn solo_matches_batch_fused_b2() {
+    solo_matches_batch(DualStrategy::FusedB2);
+}
+
+#[test]
+fn dual_strategies_agree_bitwise_on_synthetic() {
+    // both execution strategies run the same per-sample math on the
+    // synthetic backend, so they must agree exactly
+    let split = engine(DualStrategy::TwoB1);
+    let fused = engine(DualStrategy::FusedB2);
+    forall("two-b1 == fused-b2", 40, |g| {
+        let steps = g.usize_in(2, 10);
+        let r = random_request(g, steps, SchedulerKind::Ddim);
+        let a = split.generate(&r).expect("two-b1");
+        let b = fused.generate(&r).expect("fused-b2");
+        assert_eq!(a.latent, b.latent);
+        assert_eq!(a.unet_evals, b.unet_evals);
+    });
+}
+
+#[test]
+fn batch_of_four_buckets_match_solo() {
+    // a batch of 4 exercises the larger compiled bucket sizes
+    let e = engine(DualStrategy::TwoB1);
+    forall("batch of four", 25, |g| {
+        let steps = g.usize_in(2, 8);
+        let sched = *g.choose(&[SchedulerKind::Ddim, SchedulerKind::Pndm]);
+        let reqs: Vec<GenerationRequest> =
+            (0..4).map(|_| random_request(g, steps, sched)).collect();
+        let outs = e.generate_batch(&reqs).expect("batch");
+        for (r, out) in reqs.iter().zip(&outs) {
+            let solo = e.generate(r).expect("solo");
+            assert_eq!(solo.latent, out.latent);
+            assert_eq!(solo.unet_evals, out.unet_evals);
+        }
+    });
+}
+
+#[test]
+fn per_sample_breakdown_not_multiplied_by_batch() {
+    // regression: the whole-batch breakdown used to be cloned into every
+    // output, so N outputs over-reported component times N×
+    let e = engine(DualStrategy::TwoB1);
+    let reqs: Vec<GenerationRequest> = (0..4)
+        .map(|i| {
+            GenerationRequest::new("breakdown probe")
+                .steps(6)
+                .scheduler(SchedulerKind::Ddim)
+                .seed(i)
+                .decode(false)
+        })
+        .collect();
+    let outs = e.generate_batch(&reqs).expect("batch");
+    let wall = outs[0].wall_ms;
+    let summed: f64 = outs.iter().map(|o| o.breakdown.total_ms()).sum();
+    assert!(
+        summed <= wall * 1.05,
+        "per-sample breakdowns sum to {summed:.3} ms, exceeding the batch wall {wall:.3} ms"
+    );
+}
