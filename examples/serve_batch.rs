@@ -34,7 +34,12 @@ fn main() -> selective_guidance::Result<()> {
     let engine = Arc::new(Engine::new(stack, EngineConfig::default()));
     let coordinator = Coordinator::start(
         Arc::clone(&engine),
-        CoordinatorConfig { max_batch: 4, workers: 2, batch_wait: Duration::from_millis(3) },
+        CoordinatorConfig {
+            max_batch: 4,
+            workers: 2,
+            batch_wait: Duration::from_millis(3),
+            ..CoordinatorConfig::default()
+        },
     );
     let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0")?;
     let addr = server.addr().to_string();

@@ -72,6 +72,11 @@ fn main() {
     ]);
     let mut rows = Vec::new();
     let mut overloaded_checked = false;
+    // gate metrics (tools/bench_gate.rs): worst-case overload win and
+    // light-load regression across the sweep — virtual-time, so exact
+    let mut slo_gain_overload = f64::INFINITY;
+    let mut slo_on_overload_min = f64::INFINITY;
+    let mut light_regression_max = f64::NEG_INFINITY;
 
     for &m in multipliers {
         let rate = m * capacity_per_s;
@@ -119,7 +124,13 @@ fn main() {
             "{m:.1}x: quality floor violated ({})",
             on.mean_fraction
         );
+        if m >= 1.4 {
+            slo_gain_overload = slo_gain_overload.min(on.slo_attainment() - off.slo_attainment());
+            slo_on_overload_min = slo_on_overload_min.min(on.slo_attainment());
+        }
         if m <= 0.9 {
+            light_regression_max =
+                light_regression_max.max(off.slo_attainment() - on.slo_attainment());
             // light load: the control loop must not regress attainment.
             // (It may still shed a little during Poisson bursts — but
             // only requests the feasibility model proves would have been
@@ -166,5 +177,14 @@ fn main() {
             .with("requests", n_requests as i64)
             .with("floor_fraction", qos_cfg.floor_fraction)
             .with("rows", Value::Arr(rows)),
+    );
+    // the regression-gate view, compared against
+    // ci/bench_baselines/BENCH_qos.json by tools/bench_gate.rs
+    write_result_json(
+        "BENCH_qos",
+        &Value::obj()
+            .with("slo_gain_overload", slo_gain_overload)
+            .with("slo_on_overload_min", slo_on_overload_min)
+            .with("light_regression_max", light_regression_max),
     );
 }

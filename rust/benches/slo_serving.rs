@@ -66,6 +66,7 @@ fn main() {
                 max_batch: 4,
                 workers: 1,
                 batch_wait: Duration::from_millis(2),
+                ..CoordinatorConfig::default()
             },
         );
         let spec = WorkloadSpec {

@@ -9,6 +9,7 @@ mod toml;
 
 pub use toml::{TomlDoc, TomlValue};
 
+use crate::coordinator::BatchMode;
 use crate::error::{Error, Result};
 use crate::guidance::{GuidanceStrategy, SelectiveGuidancePolicy, WindowSpec};
 use crate::qos::QosConfig;
@@ -169,19 +170,47 @@ impl EngineConfig {
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub bind: String,
+    /// Batch composition: classic fixed batches or continuous
+    /// (iteration-level) batching under a UNet slot budget (DESIGN.md §9).
+    pub mode: BatchMode,
     pub max_batch: usize,
+    /// Continuous mode: UNet slots packed per iteration (a dual step
+    /// costs 2, single-pass steps cost 1). Must be >= 2.
+    pub slot_budget: usize,
     pub workers: usize,
-    /// Batching window: how long the batcher waits to fill a batch.
+    /// Batching window: how long the fixed batcher waits to fill a batch.
     pub batch_wait_ms: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { bind: "127.0.0.1:7878".into(), max_batch: 4, workers: 1, batch_wait_ms: 2 }
+        ServerConfig {
+            bind: "127.0.0.1:7878".into(),
+            mode: BatchMode::Fixed,
+            max_batch: 4,
+            slot_budget: 8,
+            workers: 1,
+            batch_wait_ms: 2,
+        }
     }
 }
 
 impl ServerConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 || self.workers == 0 {
+            return Err(Error::Config("max_batch and workers must be >= 1".into()));
+        }
+        // the bound only binds when the knob is actually read; a fixed-mode
+        // config carrying a stale slot_budget must not fail startup
+        if self.mode == BatchMode::Continuous && self.slot_budget < 2 {
+            return Err(Error::Config(format!(
+                "slot_budget {} must be >= 2 (a dual-guidance step costs 2 slots)",
+                self.slot_budget
+            )));
+        }
+        Ok(())
+    }
+
     pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
         let mut cfg = ServerConfig::default();
         if let Some(v) = doc.get("server", "bind") {
@@ -190,9 +219,18 @@ impl ServerConfig {
                 .ok_or_else(|| Error::Config("bind must be string".into()))?
                 .to_string();
         }
+        if let Some(v) = doc.get("server", "mode") {
+            cfg.mode = BatchMode::parse(
+                v.as_str().ok_or_else(|| Error::Config("mode must be string".into()))?,
+            )?;
+        }
         if let Some(v) = doc.get("server", "max_batch") {
             cfg.max_batch =
                 v.as_usize().ok_or_else(|| Error::Config("max_batch must be int".into()))?;
+        }
+        if let Some(v) = doc.get("server", "slot_budget") {
+            cfg.slot_budget =
+                v.as_usize().ok_or_else(|| Error::Config("slot_budget must be int".into()))?;
         }
         if let Some(v) = doc.get("server", "workers") {
             cfg.workers =
@@ -203,9 +241,7 @@ impl ServerConfig {
                 v.as_i64().ok_or_else(|| Error::Config("batch_wait_ms must be int".into()))?
                     as u64;
         }
-        if cfg.max_batch == 0 || cfg.workers == 0 {
-            return Err(Error::Config("max_batch and workers must be >= 1".into()));
-        }
+        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -321,6 +357,26 @@ ewma_alpha = 0.3
         assert!(RunConfig::from_str("[engine]\nwindow_fraction = 1.5\n").is_err());
         assert!(RunConfig::from_str("[server]\nworkers = 0\n").is_err());
         assert!(RunConfig::from_str("[engine]\nwindow_fraction = 0.2\nwindow_position = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn batch_mode_parse() {
+        // default: the classic fixed batcher
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.server.mode, BatchMode::Fixed);
+        assert_eq!(cfg.server.slot_budget, 8);
+        let cfg = RunConfig::from_str("[server]\nmode = \"continuous\"\nslot_budget = 12\n")
+            .unwrap();
+        assert_eq!(cfg.server.mode, BatchMode::Continuous);
+        assert_eq!(cfg.server.slot_budget, 12);
+        assert!(RunConfig::from_str("[server]\nmode = \"bogus\"\n").is_err());
+        // a slot budget below one dual step can never admit CFG traffic —
+        // but the bound only applies when continuous mode will read it
+        assert!(
+            RunConfig::from_str("[server]\nmode = \"continuous\"\nslot_budget = 1\n").is_err()
+        );
+        assert!(RunConfig::from_str("[server]\nslot_budget = 1\n").is_ok());
+        assert!(RunConfig::from_str("[server]\nslot_budget = \"many\"\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Continuous (iteration-level) batching: a slot-budgeted cohort over the
+//! engine's step-resumable [`SampleState`] API (DESIGN.md §9).
+//!
+//! The fixed batcher freezes a batch's composition at dispatch, so a
+//! sample's cond-only window only shortens *its own* latency. This
+//! batcher re-decides the cohort at **every iteration boundary**: new
+//! requests join as soon as slot headroom exists and finished samples
+//! retire immediately, vLLM-style, so the UNet slots the selective-
+//! guidance window frees become throughput for other requests.
+//!
+//! Slot accounting: a dual-guidance step costs 2 UNet slots, single-pass
+//! steps (reuse / cond-only / unguided) cost 1. Admission charges each
+//! sample its **peak remaining** per-iteration cost
+//! ([`SampleState::peak_remaining_cost`]) — conservative enough that the
+//! per-iteration slot usage can never overshoot the budget, yet exact
+//! where it matters: a static-policy sample's peak drops to 1 the moment
+//! it enters its window, which is precisely when its headroom becomes
+//! admissible capacity.
+//!
+//! The core is single-threaded and deterministic (the threaded driver
+//! lives in the coordinator's continuous worker loop), which is what lets
+//! `tests/continuous_equivalence.rs` and `benches/continuous_batching.rs`
+//! assert the cohort-independence invariant and throughput wins exactly.
+
+use std::sync::Arc;
+
+use crate::engine::{Engine, GenerationOutput, GenerationRequest, SampleState};
+use crate::error::{Error, Result};
+
+/// A slot-budgeted, continuously re-composed denoising cohort.
+pub struct ContinuousBatcher {
+    engine: Arc<Engine>,
+    slot_budget: usize,
+    ids: Vec<u64>,
+    states: Vec<SampleState>,
+    next_id: u64,
+}
+
+/// What one cohort iteration produced.
+#[derive(Debug)]
+pub struct StepOutcome {
+    /// Samples that completed this iteration, with their outputs, keyed
+    /// by the id [`ContinuousBatcher::try_admit`] handed out.
+    pub retired: Vec<(u64, GenerationOutput)>,
+    /// UNet slots the iteration consumed (always <= the budget).
+    pub slots_used: usize,
+    /// Cohort size during the iteration.
+    pub cohort: usize,
+}
+
+impl ContinuousBatcher {
+    /// `slot_budget` is the UNet capacity packed per iteration; it must
+    /// cover at least one dual-guidance sample (2 slots).
+    pub fn new(engine: Arc<Engine>, slot_budget: usize) -> Result<ContinuousBatcher> {
+        if slot_budget < 2 {
+            return Err(Error::Config(format!(
+                "slot_budget {slot_budget} must be >= 2 (a dual-guidance step costs 2 slots)"
+            )));
+        }
+        Ok(ContinuousBatcher {
+            engine,
+            slot_budget,
+            ids: Vec::new(),
+            states: Vec::new(),
+            next_id: 0,
+        })
+    }
+
+    pub fn slot_budget(&self) -> usize {
+        self.slot_budget
+    }
+
+    /// Samples currently in the cohort.
+    pub fn in_flight(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Slots the cohort can still claim in the worst remaining case.
+    pub fn committed_slots(&self) -> usize {
+        self.states.iter().map(|s| s.peak_remaining_cost()).sum()
+    }
+
+    /// Budget minus committed slots — the admission headroom.
+    pub fn headroom(&self) -> usize {
+        self.slot_budget.saturating_sub(self.committed_slots())
+    }
+
+    /// Peak per-iteration slot cost a request will ever need: what
+    /// admission must reserve. 2 for anything with dual steps remaining
+    /// (including reuse refreshes and the adaptive controller, whose
+    /// decisions can't be peeked), 1 for an all-single-pass trajectory.
+    pub fn admission_cost(req: &GenerationRequest) -> Result<usize> {
+        if req.adaptive.is_some() {
+            return Ok(2);
+        }
+        let policy = req.policy()?;
+        Ok((0..req.steps)
+            .map(|i| policy.decide(i, req.steps).unet_evals())
+            .max()
+            .unwrap_or(0))
+    }
+
+    /// Admit `req` into the cohort if its peak slot cost fits the current
+    /// headroom; returns the sample's id, or `None` when it must wait for
+    /// a later iteration boundary.
+    pub fn try_admit(&mut self, req: &GenerationRequest) -> Result<Option<u64>> {
+        if Self::admission_cost(req)? > self.headroom() {
+            return Ok(None);
+        }
+        let state = self.engine.begin(req)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ids.push(id);
+        self.states.push(state);
+        Ok(Some(id))
+    }
+
+    /// Run one engine iteration over the cohort and retire every sample
+    /// that completed. The per-iteration slot usage is invariantly within
+    /// the budget (admission reserves peak remaining costs).
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let report = self.engine.step_batch(&mut self.states)?;
+        debug_assert!(
+            report.slots_used <= self.slot_budget,
+            "iteration used {} slots over budget {}",
+            report.slots_used,
+            self.slot_budget
+        );
+        let mut retired = Vec::new();
+        let mut i = 0;
+        while i < self.states.len() {
+            if self.states[i].is_done() {
+                let state = self.states.swap_remove(i);
+                let id = self.ids.swap_remove(i);
+                retired.push((id, self.engine.finish(state)?));
+            } else {
+                i += 1;
+            }
+        }
+        Ok(StepOutcome { retired, slots_used: report.slots_used, cohort: report.advanced })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::guidance::{GuidanceStrategy, ReuseKind, WindowSpec};
+    use crate::runtime::ModelStack;
+
+    fn engine() -> Arc<Engine> {
+        Arc::new(Engine::new(Arc::new(ModelStack::synthetic()), EngineConfig::default()))
+    }
+
+    fn req(window: f64) -> GenerationRequest {
+        GenerationRequest::new("probe")
+            .steps(8)
+            .selective(WindowSpec::last(window))
+            .decode(false)
+    }
+
+    #[test]
+    fn budget_must_cover_a_dual_step() {
+        assert!(ContinuousBatcher::new(engine(), 0).is_err());
+        assert!(ContinuousBatcher::new(engine(), 1).is_err());
+        assert!(ContinuousBatcher::new(engine(), 2).is_ok());
+    }
+
+    #[test]
+    fn admission_cost_tracks_the_policy() {
+        // any dual step left -> 2 slots reserved
+        assert_eq!(ContinuousBatcher::admission_cost(&req(0.0)).unwrap(), 2);
+        assert_eq!(ContinuousBatcher::admission_cost(&req(0.5)).unwrap(), 2);
+        // whole-trajectory cond-only window -> single-pass everywhere
+        assert_eq!(ContinuousBatcher::admission_cost(&req(1.0)).unwrap(), 1);
+        // unguided (scale 1) collapses to one pass everywhere
+        let unguided = req(0.0).guidance_scale(1.0);
+        assert_eq!(ContinuousBatcher::admission_cost(&unguided).unwrap(), 1);
+        // a full-window *reuse* trajectory still opens with a cold-cache
+        // dual anchor -> 2
+        let reuse = req(1.0)
+            .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 });
+        assert_eq!(ContinuousBatcher::admission_cost(&reuse).unwrap(), 2);
+    }
+
+    #[test]
+    fn windows_free_headroom_mid_flight() {
+        let mut cb = ContinuousBatcher::new(engine(), 4).unwrap();
+        // two dual-capable samples fill the budget
+        assert!(cb.try_admit(&req(0.5)).unwrap().is_some());
+        assert!(cb.try_admit(&req(0.5)).unwrap().is_some());
+        assert_eq!(cb.headroom(), 0);
+        assert!(cb.try_admit(&req(0.5)).unwrap().is_none(), "over-admission");
+        // after 4 of 8 steps both enter their cond-only window: peak cost
+        // halves and the freed slots become admission headroom
+        for _ in 0..4 {
+            let oc = cb.step().unwrap();
+            assert!(oc.slots_used <= 4);
+        }
+        assert_eq!(cb.committed_slots(), 2);
+        assert_eq!(cb.headroom(), 2);
+        assert!(cb.try_admit(&req(0.5)).unwrap().is_some());
+        // drain everything; ids retire exactly once
+        let mut seen = Vec::new();
+        let mut guard = 0;
+        while cb.in_flight() > 0 {
+            for (id, out) in cb.step().unwrap().retired {
+                assert!(out.latent.iter().all(|v| v.is_finite()));
+                seen.push(id);
+            }
+            guard += 1;
+            assert!(guard < 64);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+}

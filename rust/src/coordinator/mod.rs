@@ -18,6 +18,14 @@
 //! offline registry snapshot — DESIGN.md §5); the structure (admission /
 //! batching / execution decoupled, graceful drain) is the same.
 //!
+//! Two batch-composition modes ([`BatchMode`]): the diagram above shows
+//! the classic **fixed** batcher; in **continuous** mode (DESIGN.md §9)
+//! there is no batcher thread — each worker owns a [`ContinuousBatcher`]
+//! cohort over the engine's step-resumable API and pulls the shared
+//! admission queue at every iteration boundary, packing a UNet slot
+//! budget, so the selective-guidance window's freed slots become
+//! admission headroom instead of idle capacity.
+//!
 //! QoS (DESIGN.md §7) is pluggable: [`Coordinator::start_qos`] installs a
 //! [`QosPolicy`] consulted *before* a request enters the queue — it may
 //! shed (explicit [`Error::Rejected`]) or widen the request's
@@ -26,11 +34,14 @@
 //! [`Error::DeadlineExceeded`] instead of wasting UNet work.
 
 mod batcher;
+mod continuous;
 
 pub use batcher::{compatible, BatchClass};
+pub use continuous::{ContinuousBatcher, StepOutcome};
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -39,26 +50,80 @@ use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
 use crate::qos::{expired, AdmissionDecision, QosMeta, QosPolicy};
 
+/// How the coordinator composes engine work (DESIGN.md §5 / §9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// Classic dynamic batching: group compatible requests, run each
+    /// batch's whole trajectory in lock-step.
+    #[default]
+    Fixed,
+    /// Iteration-level (continuous) batching: admit into the in-flight
+    /// cohort at step boundaries under a UNet slot budget, retire
+    /// finished samples immediately.
+    Continuous,
+}
+
+impl BatchMode {
+    pub fn parse(s: &str) -> Result<BatchMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" | "static" => Ok(BatchMode::Fixed),
+            "continuous" | "iteration" | "iteration-level" => Ok(BatchMode::Continuous),
+            other => Err(Error::Config(format!("unknown batch mode {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchMode::Fixed => "fixed",
+            BatchMode::Continuous => "continuous",
+        }
+    }
+}
+
 /// Coordinator tuning knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Maximum requests fused into one engine batch.
+    /// Batch composition strategy.
+    pub mode: BatchMode,
+    /// Maximum requests fused into one engine batch (fixed mode).
     pub max_batch: usize,
-    /// Worker threads executing batches.
+    /// UNet slots packed per iteration (continuous mode; a dual step
+    /// costs 2 slots, reuse/cond-only steps cost 1). Must be >= 2.
+    pub slot_budget: usize,
+    /// Worker threads executing batches (fixed mode) or cohorts
+    /// (continuous mode).
     pub workers: usize,
-    /// How long the batcher waits to fill a batch before dispatching.
+    /// How long the fixed batcher waits to fill a batch before
+    /// dispatching (unused in continuous mode — admission happens at
+    /// every iteration boundary).
     pub batch_wait: Duration,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { max_batch: 4, workers: 1, batch_wait: Duration::from_millis(2) }
+        CoordinatorConfig {
+            mode: BatchMode::Fixed,
+            max_batch: 4,
+            slot_budget: 8,
+            workers: 1,
+            batch_wait: Duration::from_millis(2),
+        }
     }
 }
 
 /// Aggregate serving stats (snapshot via [`Coordinator::stats`]).
+///
+/// The outstanding-request gauges (`queue_depth`, `queue_depth_max`) are
+/// mode-independent: they track the shared submission counter, so in
+/// continuous mode they cover the admission queue *and* the in-flight
+/// cohorts, not just the fixed batcher's pending vec. `batches` /
+/// `batched_requests` are fixed-mode counters; the `iterations` / `joins`
+/// / `retires` / cohort / slot gauges are their continuous-mode
+/// counterparts (zero in the other mode).
 #[derive(Debug, Clone, Default)]
 pub struct CoordinatorStats {
+    /// Batch composition strategy the coordinator runs.
+    pub mode: BatchMode,
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
@@ -66,8 +131,25 @@ pub struct CoordinatorStats {
     pub rejected: u64,
     /// Expired in the queue past their deadline (never executed).
     pub deadline_missed: u64,
+    /// Fixed mode: engine batches dispatched.
     pub batches: u64,
+    /// Fixed mode: requests carried by those batches.
     pub batched_requests: u64,
+    /// Continuous mode: configured UNet slot budget (0 in fixed mode).
+    pub slot_budget: u64,
+    /// Continuous mode: cohort iterations executed.
+    pub iterations: u64,
+    /// Continuous mode: requests admitted into a cohort.
+    pub joins: u64,
+    /// Continuous mode: samples retired from a cohort.
+    pub retires: u64,
+    /// Continuous mode: largest cohort observed.
+    pub cohort_max: u64,
+    /// Continuous mode: cohort size of the most recent iteration.
+    pub cohort_last: u64,
+    /// Continuous mode: mean fraction of the slot budget used per
+    /// iteration (0 before the first iteration / in fixed mode).
+    pub slot_utilization: f64,
     /// Outstanding requests right now (queued + executing).
     pub queue_depth: u64,
     /// High-water mark of `queue_depth` since start.
@@ -88,6 +170,13 @@ struct StatsInner {
     completed: u64,
     failed: u64,
     deadline_missed: u64,
+    // continuous-mode counters
+    iterations: u64,
+    joins: u64,
+    retires: u64,
+    slots_used_sum: u64,
+    cohort_max: u64,
+    cohort_last: u64,
 }
 
 struct Job {
@@ -141,6 +230,8 @@ pub struct Coordinator {
     queue_depth_max: Arc<AtomicU64>,
     qos: Option<Arc<dyn QosPolicy>>,
     draining: Arc<AtomicBool>,
+    mode: BatchMode,
+    slot_budget: usize,
 }
 
 impl Coordinator {
@@ -165,9 +256,13 @@ impl Coordinator {
         qos: Option<Arc<dyn QosPolicy>>,
     ) -> Arc<Coordinator> {
         assert!(config.max_batch >= 1 && config.workers >= 1);
+        if config.mode == BatchMode::Continuous {
+            assert!(
+                config.slot_budget >= 2,
+                "continuous mode needs slot_budget >= 2 (a dual step costs 2 slots)"
+            );
+        }
         let (submit_tx, submit_rx) = mpsc::channel::<Job>();
-        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let stats = Arc::new(Mutex::new(StatsInner {
             latency: LatencyHistogram::new(),
             batches: 0,
@@ -175,33 +270,76 @@ impl Coordinator {
             completed: 0,
             failed: 0,
             deadline_missed: 0,
+            iterations: 0,
+            joins: 0,
+            retires: 0,
+            slots_used_sum: 0,
+            cohort_max: 0,
+            cohort_last: 0,
         }));
         let pending = Arc::new(AtomicU64::new(0));
         let mut handles = Vec::new();
 
-        // ---- batcher thread ----------------------------------------------
-        {
-            let stats = Arc::clone(&stats);
-            let max_batch = config.max_batch;
-            let wait = config.batch_wait;
-            handles.push(std::thread::spawn(move || {
-                batcher_loop(submit_rx, batch_tx, max_batch, wait, stats);
-            }));
-        }
+        match config.mode {
+            BatchMode::Fixed => {
+                let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+                let batch_rx = Arc::new(Mutex::new(batch_rx));
 
-        // ---- worker threads ----------------------------------------------
-        for worker_id in 0..config.workers {
-            let engine = Arc::clone(&engine);
-            let batch_rx = Arc::clone(&batch_rx);
-            let stats = Arc::clone(&stats);
-            let pending = Arc::clone(&pending);
-            let qos = qos.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("sgd-worker-{worker_id}"))
-                    .spawn(move || worker_loop(engine, batch_rx, stats, pending, qos))
-                    .expect("spawn worker"),
-            );
+                // ---- batcher thread --------------------------------------
+                {
+                    let stats = Arc::clone(&stats);
+                    let max_batch = config.max_batch;
+                    let wait = config.batch_wait;
+                    handles.push(std::thread::spawn(move || {
+                        batcher_loop(submit_rx, batch_tx, max_batch, wait, stats);
+                    }));
+                }
+
+                // ---- worker threads --------------------------------------
+                for worker_id in 0..config.workers {
+                    let engine = Arc::clone(&engine);
+                    let batch_rx = Arc::clone(&batch_rx);
+                    let stats = Arc::clone(&stats);
+                    let pending = Arc::clone(&pending);
+                    let qos = qos.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("sgd-worker-{worker_id}"))
+                            .spawn(move || worker_loop(engine, batch_rx, stats, pending, qos))
+                            .expect("spawn worker"),
+                    );
+                }
+            }
+            BatchMode::Continuous => {
+                // no separate batcher thread: each worker owns a cohort
+                // and pulls the shared admission queue at every iteration
+                // boundary. The shared backlog holds jobs that fit no
+                // cohort *right now* — shared (not per-worker) so a job
+                // popped by a full worker is immediately visible to a
+                // sibling with headroom instead of pinned behind one
+                // cohort's drain.
+                let submit_rx = Arc::new(Mutex::new(submit_rx));
+                let backlog = Arc::new(Mutex::new(std::collections::VecDeque::new()));
+                for worker_id in 0..config.workers {
+                    let engine = Arc::clone(&engine);
+                    let submit_rx = Arc::clone(&submit_rx);
+                    let backlog = Arc::clone(&backlog);
+                    let stats = Arc::clone(&stats);
+                    let pending = Arc::clone(&pending);
+                    let qos = qos.clone();
+                    let budget = config.slot_budget;
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("sgd-cont-{worker_id}"))
+                            .spawn(move || {
+                                continuous_worker_loop(
+                                    engine, submit_rx, backlog, budget, stats, pending, qos,
+                                )
+                            })
+                            .expect("spawn continuous worker"),
+                    );
+                }
+            }
         }
 
         Arc::new(Coordinator {
@@ -214,6 +352,8 @@ impl Coordinator {
             queue_depth_max: Arc::new(AtomicU64::new(0)),
             qos,
             draining: Arc::new(AtomicBool::new(false)),
+            mode: config.mode,
+            slot_budget: config.slot_budget,
         })
     }
 
@@ -284,7 +424,13 @@ impl Coordinator {
             .as_ref()
             .map(|q| q.qos_snapshot().actuator_fraction)
             .unwrap_or(0.0);
+        let slot_utilization = if inner.iterations > 0 && self.slot_budget > 0 {
+            inner.slots_used_sum as f64 / (inner.iterations as f64 * self.slot_budget as f64)
+        } else {
+            0.0
+        };
         CoordinatorStats {
+            mode: self.mode,
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: inner.completed,
             failed: inner.failed,
@@ -292,6 +438,17 @@ impl Coordinator {
             deadline_missed: inner.deadline_missed,
             batches: inner.batches,
             batched_requests: inner.batched_requests,
+            slot_budget: if self.mode == BatchMode::Continuous {
+                self.slot_budget as u64
+            } else {
+                0
+            },
+            iterations: inner.iterations,
+            joins: inner.joins,
+            retires: inner.retires,
+            cohort_max: inner.cohort_max,
+            cohort_last: inner.cohort_last,
+            slot_utilization,
             queue_depth: self.pending.load(Ordering::Relaxed),
             queue_depth_max: self.queue_depth_max.load(Ordering::Relaxed),
             actuator_fraction,
@@ -465,12 +622,172 @@ fn worker_loop(
     }
 }
 
+/// Fail one queued job whose deadline expired before admission (the
+/// continuous-mode mirror of the fixed worker's stale partition).
+fn fail_expired(
+    job: Job,
+    stats: &Arc<Mutex<StatsInner>>,
+    pending: &Arc<AtomicU64>,
+    qos: &Option<Arc<dyn QosPolicy>>,
+) {
+    let waited = job.enqueued.elapsed();
+    stats.lock().unwrap().deadline_missed += 1;
+    if let Some(q) = qos {
+        q.observe_deadline_miss();
+    }
+    pending.fetch_sub(1, Ordering::Relaxed);
+    let msg = format!(
+        "expired in queue after {:.0} ms (deadline {:.0} ms)",
+        waited.as_secs_f64() * 1e3,
+        job.meta.deadline_ms().unwrap_or(0.0)
+    );
+    let _ = job.respond.send((Err(Error::DeadlineExceeded(msg)), waited));
+}
+
+/// Continuous-mode worker: owns one [`ContinuousBatcher`] cohort, admits
+/// from the shared queue at every iteration boundary, retires finished
+/// samples immediately, and feeds the QoS loop both per-sample service
+/// shares and the per-iteration slot occupancy.
+///
+/// `backlog` is shared across workers: a job that fits no cohort right
+/// now goes there (front, preserving FIFO) where any sibling with
+/// headroom can claim it at its next boundary — never pinned behind one
+/// worker's drain. The receiver mutex is only ever held for non-blocking
+/// `try_recv` calls, so an idle worker cannot stall a sibling's
+/// per-iteration admission.
+fn continuous_worker_loop(
+    engine: Arc<Engine>,
+    submit_rx: Arc<Mutex<Receiver<Job>>>,
+    backlog: Arc<Mutex<std::collections::VecDeque<Job>>>,
+    slot_budget: usize,
+    stats: Arc<Mutex<StatsInner>>,
+    pending: Arc<AtomicU64>,
+    qos: Option<Arc<dyn QosPolicy>>,
+) {
+    let mut batcher = ContinuousBatcher::new(Arc::clone(&engine), slot_budget)
+        .expect("slot budget validated at coordinator start");
+    // respond channels of the in-flight samples, keyed by cohort id
+    let mut inflight: BTreeMap<u64, Job> = BTreeMap::new();
+    loop {
+        // ---- admission at the iteration boundary -------------------------
+        loop {
+            let job = if let Some(j) = backlog.lock().unwrap().pop_front() {
+                j
+            } else {
+                match submit_rx.lock().unwrap().try_recv() {
+                    Ok(j) => j,
+                    Err(TryRecvError::Empty) => {
+                        if batcher.in_flight() == 0 {
+                            // idle: nap *outside* the lock, then re-check
+                            // (a sibling may also push work to the backlog)
+                            std::thread::sleep(Duration::from_millis(1));
+                            continue;
+                        }
+                        break; // run the cohort we have
+                    }
+                    Err(TryRecvError::Disconnected) => {
+                        if batcher.in_flight() == 0 {
+                            return; // queue closed and nothing left: drain
+                        }
+                        break;
+                    }
+                }
+            };
+            // deadline expiry before paying for any UNet work
+            if expired(&job.meta, job.enqueued, Instant::now()) {
+                fail_expired(job, &stats, &pending, &qos);
+                continue;
+            }
+            match batcher.try_admit(&job.req) {
+                Ok(Some(id)) => {
+                    stats.lock().unwrap().joins += 1;
+                    inflight.insert(id, job);
+                }
+                Ok(None) => {
+                    // no slot headroom here: park it where any worker
+                    // (including this one, once the window frees slots)
+                    // can admit it at the next boundary
+                    backlog.lock().unwrap().push_front(job);
+                    break;
+                }
+                Err(e) => {
+                    let waited = job.enqueued.elapsed();
+                    stats.lock().unwrap().failed += 1;
+                    pending.fetch_sub(1, Ordering::Relaxed);
+                    let _ = job.respond.send((Err(e), waited));
+                }
+            }
+        }
+        if batcher.in_flight() == 0 {
+            continue; // everything expired/failed; back to waiting
+        }
+
+        // ---- one engine iteration over the cohort ------------------------
+        match batcher.step() {
+            Ok(outcome) => {
+                if let Some(q) = &qos {
+                    q.observe_slots(outcome.slots_used, slot_budget);
+                }
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.iterations += 1;
+                    s.slots_used_sum += outcome.slots_used as u64;
+                    s.cohort_last = outcome.cohort as u64;
+                    s.cohort_max = s.cohort_max.max(outcome.cohort as u64);
+                }
+                for (id, out) in outcome.retired {
+                    let job = inflight.remove(&id).expect("retired id has a job");
+                    let latency = job.enqueued.elapsed();
+                    // feed the estimator this sample's *attributed* service
+                    // share (1/cohort of each iteration it rode) at its
+                    // effective shed fraction — the whole-residency wall
+                    // would bill shared iterations N times over
+                    if let Some(q) = &qos {
+                        let frac = job.req.strategy.effective_fraction(job.req.window.fraction);
+                        let service =
+                            Duration::from_secs_f64(out.breakdown.total_ms().max(0.0) / 1e3);
+                        q.observe_batch(1, service, frac);
+                    }
+                    {
+                        let mut s = stats.lock().unwrap();
+                        s.retires += 1;
+                        s.completed += 1;
+                        s.latency.record(latency);
+                    }
+                    pending.fetch_sub(1, Ordering::Relaxed);
+                    let _ = job.respond.send((Ok(out), latency));
+                }
+            }
+            Err(e) => {
+                // an engine failure poisons the whole cohort: fail every
+                // in-flight job and restart with a fresh batcher (mirrors
+                // the fixed worker's per-batch failure handling)
+                let msg = e.to_string();
+                let mut s = stats.lock().unwrap();
+                for (_, job) in std::mem::take(&mut inflight) {
+                    let latency = job.enqueued.elapsed();
+                    s.failed += 1;
+                    pending.fetch_sub(1, Ordering::Relaxed);
+                    let _ = job
+                        .respond
+                        .send((Err(Error::Coordinator(msg.clone())), latency));
+                }
+                drop(s);
+                batcher = ContinuousBatcher::new(Arc::clone(&engine), slot_budget)
+                    .expect("slot budget validated at coordinator start");
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // Coordinator integration tests (with a real engine + artifacts) live
     // in rust/tests/ (integration_coordinator.rs, integration_qos.rs);
-    // the batching-class logic is tested in batcher.rs and the QoS
-    // control law in qos/ (including the engine-free simulator).
+    // continuous-mode end-to-end coverage (synthetic backend, always runs)
+    // is in tests/continuous_equivalence.rs; the batching-class logic is
+    // tested in batcher.rs and the QoS control law in qos/ (including the
+    // engine-free simulator).
     use super::*;
 
     #[test]
@@ -490,5 +807,26 @@ mod tests {
         assert_eq!(s.deadline_missed, 0);
         assert_eq!(s.queue_depth_max, 0);
         assert_eq!(s.actuator_fraction, 0.0);
+        assert_eq!(s.mode, BatchMode::Fixed);
+        assert_eq!(s.iterations, 0);
+        assert_eq!(s.joins, 0);
+        assert_eq!(s.retires, 0);
+        assert_eq!(s.slot_utilization, 0.0);
+    }
+
+    #[test]
+    fn batch_mode_parse_round_trips() {
+        assert_eq!(BatchMode::parse("fixed").unwrap(), BatchMode::Fixed);
+        assert_eq!(BatchMode::parse("static").unwrap(), BatchMode::Fixed);
+        assert_eq!(BatchMode::parse("continuous").unwrap(), BatchMode::Continuous);
+        assert_eq!(BatchMode::parse("iteration-level").unwrap(), BatchMode::Continuous);
+        assert!(BatchMode::parse("bogus").is_err());
+        assert_eq!(BatchMode::Fixed.name(), "fixed");
+        assert_eq!(BatchMode::Continuous.name(), "continuous");
+        assert_eq!(BatchMode::default(), BatchMode::Fixed);
+        // defaults keep the classic batcher with a sane slot budget ready
+        let c = CoordinatorConfig::default();
+        assert_eq!(c.mode, BatchMode::Fixed);
+        assert!(c.slot_budget >= 2);
     }
 }

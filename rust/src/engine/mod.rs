@@ -14,12 +14,22 @@
 //!               dual iterations — guidance kept at single-pass cost
 //!               (DESIGN.md §8).
 //!
+//! The denoise loop is **step-resumable** (DESIGN.md §9): [`Engine::begin`]
+//! turns a request into a [`SampleState`], [`Engine::step_batch`] advances
+//! any set of in-flight states by one iteration each — bucketizing UNet
+//! calls into the compiled batch sizes — and [`Engine::finish`] packages a
+//! completed state into a [`GenerationOutput`]. Samples inside one
+//! `step_batch` cohort may sit at *different* step indices, step counts
+//! and schedulers; per-sample policies may differ too: at each iteration
+//! the cohort splits into dual / reuse / cond-only sub-sets and only the
+//! dual set pays for the second pass. A sample's output is a pure
+//! function of its own request — cohort composition can never leak into
+//! the result (the continuous batcher and its CI equivalence tests are
+//! built on that invariant).
+//!
 //! [`Engine::generate`] runs one request; [`Engine::generate_batch`] runs
-//! a compatible batch in lock-step, bucketizing UNet calls into the
-//! compiled batch sizes (dynamic batching, DESIGN.md §5). Per-sample
-//! policies may differ inside one batch: at each step the batch splits
-//! into dual / reuse / cond-only sub-sets and only the dual set pays for
-//! the second pass.
+//! a compatible batch in lock-step on top of the same three primitives
+//! (dynamic batching, DESIGN.md §5).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -192,6 +202,104 @@ impl UncondCache {
     }
 }
 
+/// One in-flight sample: everything the denoise loop needs to advance a
+/// request by one iteration, resumable at any step boundary.
+///
+/// Built by [`Engine::begin`], advanced by [`Engine::step_batch`],
+/// consumed by [`Engine::finish`]. The state is fully self-contained —
+/// scheduler history, RNG stream, uncond-eps cache, adaptive controller —
+/// so a sample's trajectory is identical whether it runs solo, in a
+/// lock-step batch, or through a continuously re-composed cohort.
+pub struct SampleState {
+    req: GenerationRequest,
+    policy: SelectiveGuidancePolicy,
+    controller: Option<AdaptiveController>,
+    scheduler: Box<dyn Scheduler>,
+    rng: Rng,
+    latent: Vec<f32>,
+    cond_ctx: Vec<f32>,
+    cache: UncondCache,
+    wants_reuse: bool,
+    /// Next iteration to execute (== completed iterations).
+    step: usize,
+    steps: usize,
+    unet_evals: usize,
+    /// This sample's attributed share of loop costs (1/cohort per step).
+    breakdown: StepBreakdown,
+    started: Instant,
+}
+
+impl SampleState {
+    /// All `steps` iterations executed?
+    pub fn is_done(&self) -> bool {
+        self.step >= self.steps
+    }
+
+    /// Next iteration index (== iterations completed so far).
+    pub fn step_index(&self) -> usize {
+        self.step
+    }
+
+    /// Total iterations this trajectory runs.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// The request this state executes.
+    pub fn request(&self) -> &GenerationRequest {
+        &self.req
+    }
+
+    /// UNet executions performed so far.
+    pub fn unet_evals(&self) -> usize {
+        self.unet_evals
+    }
+
+    /// UNet-slot cost of the *next* iteration: 2 for a dual step, 1 for
+    /// reuse/cond-only/unguided, 0 when done. Conservatively 2 for
+    /// adaptive requests (the controller is stateful; peeking would
+    /// perturb it).
+    pub fn next_cost(&self) -> usize {
+        if self.is_done() {
+            return 0;
+        }
+        if self.controller.is_some() {
+            return 2;
+        }
+        self.policy.decide(self.step, self.steps).unet_evals()
+    }
+
+    /// Largest per-iteration UNet-slot cost any *remaining* step can
+    /// incur. This is the continuous batcher's admission currency: a
+    /// cohort whose peak costs sum within the slot budget can never
+    /// overshoot it, and a sample that has entered its selective-guidance
+    /// window drops to 1 — freeing admission headroom immediately.
+    pub fn peak_remaining_cost(&self) -> usize {
+        if self.is_done() {
+            return 0;
+        }
+        if self.controller.is_some() {
+            return 2;
+        }
+        (self.step..self.steps)
+            .map(|i| self.policy.decide(i, self.steps).unet_evals())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// What one [`Engine::step_batch`] call executed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepReport {
+    /// Samples advanced one iteration (the active cohort size).
+    pub advanced: usize,
+    /// Samples whose trajectory completed during this call.
+    pub finished: usize,
+    /// UNet executions performed — the guidance slot cost of the
+    /// iteration (a dual step costs 2, single-pass modes cost 1).
+    pub slots_used: usize,
+}
+
 /// The serving engine: a [`ModelStack`] plus engine defaults.
 pub struct Engine {
     stack: Arc<ModelStack>,
@@ -237,12 +345,13 @@ impl Engine {
 
     /// Generate a batch in lock-step. All requests must share `steps` and
     /// `scheduler` (the batcher guarantees this); prompts, seeds, windows
-    /// and scales may differ per sample.
+    /// and scales may differ per sample. Built on the step-resumable
+    /// [`Engine::begin`] / [`Engine::step_batch`] / [`Engine::finish`]
+    /// primitives.
     pub fn generate_batch(&self, reqs: &[GenerationRequest]) -> Result<Vec<GenerationOutput>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        let t_start = Instant::now();
         let steps = reqs[0].steps;
         let sched_kind = reqs[0].scheduler;
         for r in reqs {
@@ -253,290 +362,349 @@ impl Engine {
                 ));
             }
         }
-        let n = reqs.len();
+        let mut states: Vec<SampleState> =
+            reqs.iter().map(|r| self.begin(r)).collect::<Result<_>>()?;
+        let mut total_evals = 0usize;
+        for _ in 0..steps {
+            total_evals += self.step_batch(&mut states)?.slots_used;
+        }
+        // consistency: per-sample counts must sum to the executed total.
+        // Hard assert (not debug_assert): the cost model is the contract
+        // QoS feasibility and the benches are built on, so `--release`
+        // tests must check it too (the per-sample analytic-cost assert
+        // lives in `finish`).
+        assert_eq!(total_evals, states.iter().map(|s| s.unet_evals).sum::<usize>());
+        states.into_iter().map(|s| self.finish(s)).collect()
+    }
+
+    /// Validate a request and build its step-resumable [`SampleState`]
+    /// (text encoding, scheduler, seeded noise stream, initial latent).
+    pub fn begin(&self, req: &GenerationRequest) -> Result<SampleState> {
+        req.validate()?;
+        let started = Instant::now();
+        let m = self.stack.model();
+        let policy = req.policy()?;
+        let cond_ctx = self.stack.encode_text(&self.tokenizer.encode(&req.prompt))?;
+        let scheduler = req.scheduler.build(NoiseSchedule::default(), req.steps);
+        let mut rng = Rng::for_stream(req.seed, 0);
+        let mut latent = rng.normal_vec(m.latent_elems());
+        let sigma = scheduler.init_noise_sigma();
+        for v in latent.iter_mut() {
+            *v *= sigma;
+        }
+        // per-sample uncond-eps recording is gated so the default
+        // (drop-guidance) path never clones eps tensors it won't read
+        let wants_reuse = req.adaptive.is_none()
+            && matches!(policy.strategy(), GuidanceStrategy::Reuse { .. });
+        let mut breakdown = StepBreakdown::default();
+        breakdown.overhead_ms += started.elapsed().as_secs_f64() * 1e3;
+        Ok(SampleState {
+            req: req.clone(),
+            policy,
+            controller: req.adaptive.map(|a| a.controller()),
+            scheduler,
+            rng,
+            latent,
+            cond_ctx,
+            cache: UncondCache::new(),
+            wants_reuse,
+            step: 0,
+            steps: req.steps,
+            unet_evals: 0,
+            breakdown,
+            started,
+        })
+    }
+
+    /// Advance every unfinished sample in `states` by exactly one
+    /// iteration, bucketizing the UNet calls across the whole cohort.
+    ///
+    /// Samples may sit at different step indices, step counts and
+    /// schedulers — this is the iteration-level primitive the continuous
+    /// batcher composes. Finished samples are skipped (zero cost), so
+    /// callers may keep a mixed done/unfinished slice. Each active sample
+    /// is charged `1/active` of the iteration's shared loop time.
+    pub fn step_batch(&self, states: &mut [SampleState]) -> Result<StepReport> {
+        let n = states.len();
+        let active: Vec<usize> = (0..n).filter(|&s| !states[s].is_done()).collect();
+        if active.is_empty() {
+            return Ok(StepReport::default());
+        }
         let m = self.stack.model();
         let latent_elems = m.latent_elems();
         let ctx_elems = m.ctx_elems();
+        let mut bd = StepBreakdown::default();
+        let mut slots_used = 0usize;
 
-        let mut breakdown = StepBreakdown::default();
-        let mut unet_evals = 0usize;
-        let mut evals_per_sample = vec![0usize; n];
-        let mut controllers: Vec<Option<AdaptiveController>> =
-            reqs.iter().map(|r| r.adaptive.map(|a| a.controller())).collect();
-
-        // ---- per-request setup ------------------------------------------
-        let t0 = Instant::now();
-        let policies: Vec<SelectiveGuidancePolicy> =
-            reqs.iter().map(|r| r.policy()).collect::<Result<_>>()?;
-        let cond_ctx: Vec<Vec<f32>> = reqs
+        // 1) per-sample guidance decision (decide exactly once per
+        // iteration — the adaptive controller is stateful)
+        let mut modes: Vec<GuidanceMode> = vec![GuidanceMode::Unguided; n];
+        for &s in &active {
+            let st = &mut states[s];
+            modes[s] = match st.controller.as_mut() {
+                Some(ctrl) => match ctrl.decide(st.step, st.steps) {
+                    AdaptiveDecision::Dual => GuidanceMode::Dual { scale: st.req.guidance_scale },
+                    AdaptiveDecision::CondOnly => GuidanceMode::CondOnly,
+                },
+                None => st.policy.decide(st.step, st.steps),
+            };
+        }
+        let dual: Vec<usize> = active
             .iter()
-            .map(|r| self.stack.encode_text(&self.tokenizer.encode(&r.prompt)))
-            .collect::<Result<_>>()?;
-        let uncond_ctx = self.stack.uncond_ctx()?;
-        let mut schedulers: Vec<Box<dyn Scheduler>> = (0..n)
-            .map(|_| sched_kind.build(NoiseSchedule::default(), steps))
+            .copied()
+            .filter(|&s| matches!(modes[s], GuidanceMode::Dual { .. }))
             .collect();
-        let mut rngs: Vec<Rng> =
-            reqs.iter().map(|r| Rng::for_stream(r.seed, 0)).collect();
-        let mut latents: Vec<Vec<f32>> = (0..n)
-            .map(|i| {
-                let mut l = rngs[i].normal_vec(latent_elems);
-                let sigma = schedulers[i].init_noise_sigma();
-                for v in l.iter_mut() {
-                    *v *= sigma;
-                }
-                l
-            })
-            .collect();
-        breakdown.overhead_ms += t0.elapsed().as_secs_f64() * 1e3;
-
-        // scratch buffers reused across steps (no steady-state allocation
-        // beyond the PJRT boundary)
-        let mut in_latents: Vec<f32> = Vec::with_capacity(n * latent_elems);
-        let mut in_ts: Vec<f32> = Vec::with_capacity(n);
-        let mut in_ctx: Vec<f32> = Vec::with_capacity(n * ctx_elems);
-
-        // per-sample uncond-eps history for the Reuse guidance modes;
-        // recording is gated so the default (drop-guidance) path keeps
-        // its no-steady-state-allocation property
-        let mut caches: Vec<UncondCache> = (0..n).map(|_| UncondCache::new()).collect();
-        let wants_reuse: Vec<bool> = (0..n)
-            .map(|s| {
-                reqs[s].adaptive.is_none()
-                    && matches!(policies[s].strategy(), GuidanceStrategy::Reuse { .. })
-            })
+        let reuse: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&s| matches!(modes[s], GuidanceMode::Reuse { .. }))
             .collect();
 
-        // ---- the denoising loop ------------------------------------------
-        let strategy = self.config.dual_strategy;
-        for i in 0..steps {
-            // which samples need the unconditional pass this iteration?
-            let modes: Vec<GuidanceMode> = (0..n)
-                .map(|s| match controllers[s].as_mut() {
-                    Some(ctrl) => match ctrl.decide(i, steps) {
-                        AdaptiveDecision::Dual => {
-                            GuidanceMode::Dual { scale: reqs[s].guidance_scale }
-                        }
-                        AdaptiveDecision::CondOnly => GuidanceMode::CondOnly,
-                    },
-                    None => policies[s].decide(i, steps),
-                })
-                .collect();
-            let dual: Vec<usize> = (0..n)
-                .filter(|&s| matches!(modes[s], GuidanceMode::Dual { .. }))
-                .collect();
-            let reuse: Vec<usize> = (0..n)
-                .filter(|&s| matches!(modes[s], GuidanceMode::Reuse { .. }))
-                .collect();
-            let single: Vec<usize> = (0..n)
-                .filter(|&s| {
-                    matches!(modes[s], GuidanceMode::CondOnly | GuidanceMode::Unguided)
-                })
-                .collect();
+        // 2) scheduler input scaling + per-sample model timesteps
+        let t0 = Instant::now();
+        let mut scaled: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut t_model: Vec<f32> = vec![0.0; n];
+        for &s in &active {
+            let st = &states[s];
+            scaled[s] = st.scheduler.scale_model_input(&st.latent, st.step);
+            t_model[s] = st.scheduler.model_timestep(st.step);
+        }
+        bd.scheduler_ms += t0.elapsed().as_secs_f64() * 1e3;
 
-            let t0 = Instant::now();
-            let scaled: Vec<Vec<f32>> = (0..n)
-                .map(|s| schedulers[s].scale_model_input(&latents[s], i))
-                .collect();
-            breakdown.scheduler_ms += t0.elapsed().as_secs_f64() * 1e3;
+        // per-sample eps_hat for this iteration
+        let mut eps_hat: Vec<Vec<f32>> = vec![Vec::new(); n];
+        // scratch buffers for the bucketized UNet calls, sized once for
+        // the iteration's worst case
+        let mut in_latents: Vec<f32> = Vec::with_capacity(active.len() * latent_elems);
+        let mut in_ts: Vec<f32> = Vec::with_capacity(active.len());
+        let mut in_ctx: Vec<f32> = Vec::with_capacity(active.len() * ctx_elems);
+        // the unconditional context (mutex + clone) is only fetched when
+        // some sample actually runs a true dual step this iteration — the
+        // cond-only window phase pays nothing for it
+        let uncond_ctx: Option<Vec<f32>> =
+            if dual.is_empty() { None } else { Some(self.stack.uncond_ctx()?) };
 
-            // per-sample eps_hat for this iteration
-            let mut eps_hat: Vec<Vec<f32>> = vec![Vec::new(); n];
-
-            match strategy {
-                DualStrategy::TwoB1 => {
-                    // 1) conditional pass for every sample (bucketized)
-                    let t0 = Instant::now();
-                    let all: Vec<usize> = (0..n).collect();
-                    let eps_cond = self.unet_over(
-                        &all,
+        match self.config.dual_strategy {
+            DualStrategy::TwoB1 => {
+                // 1) conditional pass for every active sample (bucketized)
+                let t0 = Instant::now();
+                let eps_cond = {
+                    let view: &[SampleState] = states;
+                    self.unet_over(
+                        &active,
                         &scaled,
                         &mut in_latents,
                         &mut in_ts,
                         &mut in_ctx,
-                        |s| &cond_ctx[s],
-                        |s| schedulers[s].model_timestep(i),
+                        |s| view[s].cond_ctx.as_slice(),
+                        |s| t_model[s],
+                    )?
+                };
+                slots_used += active.len();
+                bd.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+                // 2) unconditional pass only for Dual samples
+                let eps_uncond = if dual.is_empty() {
+                    Vec::new()
+                } else {
+                    let uctx = uncond_ctx.as_deref().expect("uncond ctx fetched for dual steps");
+                    let t0 = Instant::now();
+                    let out = self.unet_over(
+                        &dual,
+                        &scaled,
+                        &mut in_latents,
+                        &mut in_ts,
+                        &mut in_ctx,
+                        |_| uctx,
+                        |s| t_model[s],
                     )?;
-                    unet_evals += n;
-                    for e in evals_per_sample.iter_mut() {
-                        *e += 1;
-                    }
-                    breakdown.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    slots_used += dual.len();
+                    bd.unet_uncond_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    out
+                };
+                // position of each state inside the cond output
+                let mut pos = vec![usize::MAX; n];
+                for (k, &s) in active.iter().enumerate() {
+                    pos[s] = k;
+                }
 
-                    // 2) unconditional pass only for Dual samples
-                    if !dual.is_empty() {
-                        let t0 = Instant::now();
-                        let eps_uncond = self.unet_over(
-                            &dual,
-                            &scaled,
-                            &mut in_latents,
-                            &mut in_ts,
-                            &mut in_ctx,
-                            |_| &uncond_ctx,
-                            |s| schedulers[s].model_timestep(i),
-                        )?;
-                        unet_evals += dual.len();
-                        breakdown.unet_uncond_ms += t0.elapsed().as_secs_f64() * 1e3;
-
-                        // 3) Eq.-1 combine on device
-                        for (di, &s) in dual.iter().enumerate() {
-                            let GuidanceMode::Dual { scale } = modes[s] else { unreachable!() };
-                            evals_per_sample[s] += 1;
-                            let t0 = Instant::now();
-                            let u = &eps_uncond[di * latent_elems..(di + 1) * latent_elems];
-                            let c = &eps_cond[s * latent_elems..(s + 1) * latent_elems];
-                            if let Some(ctrl) = controllers[s].as_mut() {
-                                ctrl.observe_delta(guidance_delta(c, u));
-                            }
-                            if wants_reuse[s] {
-                                caches[s].record(i, u.to_vec());
-                            }
-                            eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
-                            breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
-                        }
+                // 3) Eq.-1 combine on device (+ cache/controller updates)
+                for (di, &s) in dual.iter().enumerate() {
+                    let GuidanceMode::Dual { scale } = modes[s] else { unreachable!() };
+                    let t0 = Instant::now();
+                    let u = &eps_uncond[di * latent_elems..(di + 1) * latent_elems];
+                    let c = &eps_cond[pos[s] * latent_elems..(pos[s] + 1) * latent_elems];
+                    let st = &mut states[s];
+                    if let Some(ctrl) = st.controller.as_mut() {
+                        ctrl.observe_delta(guidance_delta(c, u));
                     }
-                    // reuse samples: Eq.-1 combine against the cached /
-                    // extrapolated uncond eps (no second UNet pass)
-                    for &s in &reuse {
-                        let GuidanceMode::Reuse { scale, kind } = modes[s] else {
-                            unreachable!()
-                        };
-                        let t0 = Instant::now();
-                        let c = &eps_cond[s * latent_elems..(s + 1) * latent_elems];
-                        let u_hat = caches[s]
-                            .estimate(i, kind)
-                            .expect("reuse step with a cold uncond cache");
-                        eps_hat[s] = self.stack.cfg_combine(1, &u_hat, c, scale)?;
-                        breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    if st.wants_reuse {
+                        st.cache.record(st.step, u.to_vec());
                     }
-                    for &s in &single {
+                    eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
+                    bd.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+                }
+                // reuse samples: Eq.-1 combine against the cached /
+                // extrapolated uncond eps (no second UNet pass)
+                for &s in &reuse {
+                    let GuidanceMode::Reuse { scale, kind } = modes[s] else {
+                        unreachable!()
+                    };
+                    let t0 = Instant::now();
+                    let c = &eps_cond[pos[s] * latent_elems..(pos[s] + 1) * latent_elems];
+                    let u_hat = states[s]
+                        .cache
+                        .estimate(states[s].step, kind)
+                        .expect("reuse step with a cold uncond cache");
+                    eps_hat[s] = self.stack.cfg_combine(1, &u_hat, c, scale)?;
+                    bd.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+                }
+                for &s in &active {
+                    if matches!(modes[s], GuidanceMode::CondOnly | GuidanceMode::Unguided) {
                         eps_hat[s] =
-                            eps_cond[s * latent_elems..(s + 1) * latent_elems].to_vec();
+                            eps_cond[pos[s] * latent_elems..(pos[s] + 1) * latent_elems].to_vec();
                     }
                 }
-                DualStrategy::FusedB2 => {
-                    // HF-pipeline style: each dual sample runs one fused
-                    // batch-2 [cond, uncond] execution
-                    for &s in &dual {
-                        let GuidanceMode::Dual { scale } = modes[s] else { unreachable!() };
-                        let t0 = Instant::now();
-                        in_latents.clear();
-                        in_latents.extend_from_slice(&scaled[s]);
-                        in_latents.extend_from_slice(&scaled[s]);
-                        let t_s = schedulers[s].model_timestep(i);
-                        in_ctx.clear();
-                        in_ctx.extend_from_slice(&cond_ctx[s]);
-                        in_ctx.extend_from_slice(&uncond_ctx);
-                        let both =
-                            self.stack.unet_eps(2, &in_latents, &[t_s, t_s], &in_ctx)?;
-                        unet_evals += 2;
-                        evals_per_sample[s] += 2;
-                        breakdown.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3 / 2.0;
-                        breakdown.unet_uncond_ms += t0.elapsed().as_secs_f64() * 1e3 / 2.0;
-                        let t0 = Instant::now();
-                        let (c, u) = both.split_at(latent_elems);
-                        if let Some(ctrl) = controllers[s].as_mut() {
-                            ctrl.observe_delta(guidance_delta(c, u));
-                        }
-                        if wants_reuse[s] {
-                            caches[s].record(i, u.to_vec());
-                        }
-                        eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
-                        breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+            }
+            DualStrategy::FusedB2 => {
+                // HF-pipeline style: each dual sample runs one fused
+                // batch-2 [cond, uncond] execution
+                for &s in &dual {
+                    let GuidanceMode::Dual { scale } = modes[s] else { unreachable!() };
+                    let t0 = Instant::now();
+                    in_latents.clear();
+                    in_latents.extend_from_slice(&scaled[s]);
+                    in_latents.extend_from_slice(&scaled[s]);
+                    let t_s = t_model[s];
+                    in_ctx.clear();
+                    in_ctx.extend_from_slice(&states[s].cond_ctx);
+                    in_ctx.extend_from_slice(
+                        uncond_ctx.as_deref().expect("uncond ctx fetched for dual steps"),
+                    );
+                    let both = self.stack.unet_eps(2, &in_latents, &[t_s, t_s], &in_ctx)?;
+                    slots_used += 2;
+                    bd.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3 / 2.0;
+                    bd.unet_uncond_ms += t0.elapsed().as_secs_f64() * 1e3 / 2.0;
+                    let t0 = Instant::now();
+                    let (c, u) = both.split_at(latent_elems);
+                    let st = &mut states[s];
+                    if let Some(ctrl) = st.controller.as_mut() {
+                        ctrl.observe_delta(guidance_delta(c, u));
                     }
-                    // optimized samples (reuse + cond-only/unguided): one
-                    // bucketized cond pass, then per-mode post-processing
-                    let others: Vec<usize> = (0..n)
-                        .filter(|&s| !matches!(modes[s], GuidanceMode::Dual { .. }))
-                        .collect();
-                    if !others.is_empty() {
-                        let t0 = Instant::now();
-                        let eps_cond = self.unet_over(
+                    if st.wants_reuse {
+                        st.cache.record(st.step, u.to_vec());
+                    }
+                    eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
+                    bd.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+                }
+                // optimized samples (reuse + cond-only/unguided): one
+                // bucketized cond pass, then per-mode post-processing
+                let others: Vec<usize> = active
+                    .iter()
+                    .copied()
+                    .filter(|&s| !matches!(modes[s], GuidanceMode::Dual { .. }))
+                    .collect();
+                if !others.is_empty() {
+                    let t0 = Instant::now();
+                    let eps_cond = {
+                        let view: &[SampleState] = states;
+                        self.unet_over(
                             &others,
                             &scaled,
                             &mut in_latents,
                             &mut in_ts,
                             &mut in_ctx,
-                            |s| &cond_ctx[s],
-                            |s| schedulers[s].model_timestep(i),
-                        )?;
-                        unet_evals += others.len();
-                        breakdown.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3;
-                        for (oi, &s) in others.iter().enumerate() {
-                            evals_per_sample[s] += 1;
-                            let c = &eps_cond[oi * latent_elems..(oi + 1) * latent_elems];
-                            if let GuidanceMode::Reuse { scale, kind } = modes[s] {
-                                let t0 = Instant::now();
-                                let u_hat = caches[s]
-                                    .estimate(i, kind)
-                                    .expect("reuse step with a cold uncond cache");
-                                eps_hat[s] = self.stack.cfg_combine(1, &u_hat, c, scale)?;
-                                breakdown.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
-                            } else {
-                                eps_hat[s] = c.to_vec();
-                            }
+                            |s| view[s].cond_ctx.as_slice(),
+                            |s| t_model[s],
+                        )?
+                    };
+                    slots_used += others.len();
+                    bd.unet_cond_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    for (oi, &s) in others.iter().enumerate() {
+                        let c = &eps_cond[oi * latent_elems..(oi + 1) * latent_elems];
+                        if let GuidanceMode::Reuse { scale, kind } = modes[s] {
+                            let t0 = Instant::now();
+                            let u_hat = states[s]
+                                .cache
+                                .estimate(states[s].step, kind)
+                                .expect("reuse step with a cold uncond cache");
+                            eps_hat[s] = self.stack.cfg_combine(1, &u_hat, c, scale)?;
+                            bd.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
+                        } else {
+                            eps_hat[s] = c.to_vec();
                         }
                     }
                 }
             }
+        }
 
-            // 4) scheduler update per sample
+        // 4) scheduler update + per-sample accounting
+        let t0 = Instant::now();
+        for &s in &active {
+            let st = &mut states[s];
+            st.latent = st.scheduler.step(st.step, &st.latent, &eps_hat[s], &mut st.rng);
+            st.unet_evals += modes[s].unet_evals();
+            st.step += 1;
+        }
+        bd.scheduler_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+        // each active sample carries 1/|active| of the shared loop cost
+        // (cloning whole-cohort totals would over-report N×)
+        let share = bd.scaled(1.0 / active.len() as f64);
+        let mut finished = 0usize;
+        for &s in &active {
+            states[s].breakdown.accumulate(&share);
+            if states[s].is_done() {
+                finished += 1;
+            }
+        }
+        debug_assert_eq!(
+            slots_used,
+            active.iter().map(|&s| modes[s].unet_evals()).sum::<usize>()
+        );
+        Ok(StepReport { advanced: active.len(), finished, slots_used })
+    }
+
+    /// Package a completed [`SampleState`] into a [`GenerationOutput`]
+    /// (decode included when the request asked for it).
+    ///
+    /// Hard-asserts the executed evaluation count against the policy's
+    /// analytic cost model for static-policy samples — the contract QoS
+    /// feasibility and the benches are built on — and that the trajectory
+    /// actually ran to completion.
+    pub fn finish(&self, mut state: SampleState) -> Result<GenerationOutput> {
+        assert!(
+            state.is_done(),
+            "finish() on an unfinished sample (step {}/{})",
+            state.step,
+            state.steps
+        );
+        if state.controller.is_none() {
+            assert_eq!(
+                state.unet_evals,
+                state.policy.total_unet_evals(state.steps),
+                "executed evals diverge from the policy cost model"
+            );
+        }
+        let m = self.stack.model();
+        let image = if state.req.decode {
             let t0 = Instant::now();
-            for s in 0..n {
-                latents[s] = schedulers[s].step(i, &latents[s], &eps_hat[s], &mut rngs[s]);
-            }
-            breakdown.scheduler_ms += t0.elapsed().as_secs_f64() * 1e3;
-        }
-
-        // consistency: per-sample counts must sum to the executed total,
-        // and static-policy samples must match their analytic cost model.
-        // Hard asserts (not debug_assert): the cost model is the contract
-        // QoS feasibility and the benches are built on, so `--release`
-        // tests must check it too.
-        assert_eq!(unet_evals, evals_per_sample.iter().sum::<usize>());
-        for (s, req) in reqs.iter().enumerate() {
-            if req.adaptive.is_none() {
-                assert_eq!(
-                    evals_per_sample[s],
-                    policies[s].total_unet_evals(steps),
-                    "sample {s}: executed evals diverge from the policy cost model"
-                );
-            }
-        }
-
-        // ---- decode + package -------------------------------------------
-        // each output carries its 1/N share of the shared loop costs plus
-        // its own decode time (cloning the whole-batch totals would
-        // over-report N× when aggregating per-request breakdowns)
-        let shared = breakdown.scaled(1.0 / n as f64);
-        let mut outputs = Vec::with_capacity(n);
-        for (s, req) in reqs.iter().enumerate() {
-            let mut per_sample = shared.clone();
-            let image = if req.decode {
-                let t0 = Instant::now();
-                let chw = self.stack.decode(&latents[s])?;
-                let img = RgbImage::from_chw_f32(&chw, m.image_size, m.image_size)?;
-                per_sample.overhead_ms += t0.elapsed().as_secs_f64() * 1e3;
-                Some(img)
-            } else {
-                None
-            };
-            outputs.push(GenerationOutput {
-                latent: std::mem::take(&mut latents[s]),
-                image,
-                wall_ms: 0.0, // patched below with the shared wall time
-                breakdown: per_sample,
-                // per-request count of actually-executed evaluations
-                unet_evals: evals_per_sample[s],
-                steps,
-                strategy: req.strategy,
-            });
-        }
-        let wall = t_start.elapsed().as_secs_f64() * 1e3;
-        for o in outputs.iter_mut() {
-            o.wall_ms = wall;
-        }
-        Ok(outputs)
+            let chw = self.stack.decode(&state.latent)?;
+            let img = RgbImage::from_chw_f32(&chw, m.image_size, m.image_size)?;
+            state.breakdown.overhead_ms += t0.elapsed().as_secs_f64() * 1e3;
+            Some(img)
+        } else {
+            None
+        };
+        Ok(GenerationOutput {
+            latent: state.latent,
+            image,
+            wall_ms: state.started.elapsed().as_secs_f64() * 1e3,
+            breakdown: state.breakdown,
+            unet_evals: state.unet_evals,
+            steps: state.steps,
+            strategy: state.req.strategy,
+        })
     }
 
     /// Run the UNet for the sample subset `subset`, bucketizing into the
@@ -619,6 +787,75 @@ mod tests {
         assert_eq!(r.window, WindowSpec::none());
         // the paper's optimized iteration drops guidance outright
         assert_eq!(r.strategy, GuidanceStrategy::CondOnly);
+    }
+
+    #[test]
+    fn step_resumable_state_matches_generate() {
+        // driving begin/step_batch/finish by hand must reproduce
+        // Engine::generate bit-for-bit — the continuous batcher's
+        // foundational property
+        let e = Engine::new(
+            Arc::new(crate::runtime::ModelStack::synthetic()),
+            EngineConfig::default(),
+        );
+        let req = GenerationRequest::new("a person holding a cat")
+            .steps(8)
+            .scheduler(SchedulerKind::Ddim)
+            .selective(WindowSpec::last(0.5))
+            .seed(7)
+            .decode(false);
+        let reference = e.generate(&req).unwrap();
+
+        let mut states = vec![e.begin(&req).unwrap()];
+        let mut iterations = 0;
+        while !states[0].is_done() {
+            let report = e.step_batch(&mut states).unwrap();
+            assert_eq!(report.advanced, 1);
+            iterations += 1;
+        }
+        assert_eq!(iterations, 8);
+        // stepping a finished cohort is a no-op
+        assert_eq!(e.step_batch(&mut states).unwrap(), StepReport::default());
+        let out = e.finish(states.pop().unwrap()).unwrap();
+        assert_eq!(out.latent, reference.latent);
+        assert_eq!(out.unet_evals, reference.unet_evals);
+    }
+
+    #[test]
+    fn sample_state_slot_costs() {
+        let e = Engine::new(
+            Arc::new(crate::runtime::ModelStack::synthetic()),
+            EngineConfig::default(),
+        );
+        // last-50% cond-only window over 8 steps: duals then singles
+        let req = GenerationRequest::new("p")
+            .steps(8)
+            .selective(WindowSpec::last(0.5))
+            .decode(false);
+        let mut states = vec![e.begin(&req).unwrap()];
+        assert_eq!(states[0].next_cost(), 2);
+        assert_eq!(states[0].peak_remaining_cost(), 2);
+        for _ in 0..4 {
+            e.step_batch(&mut states).unwrap();
+        }
+        // inside the window: both the next step and the whole remaining
+        // trajectory are single-pass — admission headroom appears here
+        assert_eq!(states[0].next_cost(), 1);
+        assert_eq!(states[0].peak_remaining_cost(), 1);
+        for _ in 0..4 {
+            e.step_batch(&mut states).unwrap();
+        }
+        assert!(states[0].is_done());
+        assert_eq!(states[0].next_cost(), 0);
+        assert_eq!(states[0].peak_remaining_cost(), 0);
+        // a reuse window keeps peak cost 2 while refresh steps remain
+        let reuse = GenerationRequest::new("p")
+            .steps(8)
+            .selective(WindowSpec::last(0.5))
+            .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 1 })
+            .decode(false);
+        let st = e.begin(&reuse).unwrap();
+        assert_eq!(st.peak_remaining_cost(), 2);
     }
 
     #[test]

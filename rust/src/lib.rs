@@ -51,8 +51,8 @@ pub use error::{Error, Result};
 /// One-stop imports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::EngineConfig;
-    pub use crate::coordinator::{Coordinator, CoordinatorConfig};
-    pub use crate::engine::{Engine, GenerationOutput, GenerationRequest};
+    pub use crate::coordinator::{BatchMode, ContinuousBatcher, Coordinator, CoordinatorConfig};
+    pub use crate::engine::{Engine, GenerationOutput, GenerationRequest, SampleState};
     pub use crate::error::{Error, Result};
     pub use crate::guidance::{
         GuidanceMode, GuidanceStrategy, ReuseKind, SelectiveGuidancePolicy, WindowPosition,

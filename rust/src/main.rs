@@ -5,24 +5,29 @@
 //!           [--guidance-scale 7.5] [--window 0.2] [--position last]
 //!           [--strategy cond-only|hold|extrapolate] [--refresh-every 0]
 //!           [--scheduler pndm] [--seed 0] [--out out.png]
+//!           [--mode fixed|continuous] [--slot-budget 8]
 //!           [--artifacts artifacts/tiny]
 //! sgd-serve serve    [--bind 127.0.0.1:7878] [--workers 1]
-//!           [--max-batch 4] [--config configs/serve.toml]
+//!           [--mode fixed|continuous] [--max-batch 4] [--slot-budget 8]
+//!           [--config configs/serve.toml]
 //!           [--qos] [--max-queue 64] [--quality-floor 0.5]
 //!           [--deadline-ms 0]
 //! sgd-serve info     [--artifacts artifacts/tiny]
 //! ```
 //!
-//! `--qos` (or `enabled = true` in the config's `[qos]` section) turns on
-//! deadline-aware admission control with the selective-guidance window as
-//! the load-shedding actuator (DESIGN.md §7).
+//! `--mode continuous` (or `mode = "continuous"` in the config's
+//! `[server]` section) switches the coordinator to iteration-level
+//! batching under a UNet slot budget (DESIGN.md §9); `--qos` (or
+//! `enabled = true` in `[qos]`) turns on deadline-aware admission control
+//! with the selective-guidance window as the load-shedding actuator
+//! (DESIGN.md §7).
 
 use std::path::Path;
 use std::sync::Arc;
 
 use selective_guidance::cli::Cli;
 use selective_guidance::config::{EngineConfig, RunConfig};
-use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
+use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
 use selective_guidance::engine::{Engine, GenerationRequest};
 use selective_guidance::error::{Error, Result};
 use selective_guidance::guidance::{GuidanceStrategy, WindowSpec};
@@ -76,7 +81,7 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
     let dir = artifacts_dir(cli);
     eprintln!("loading artifacts from {dir} ...");
     let stack = Arc::new(ModelStack::load(&dir)?);
-    let engine = Engine::new(stack, EngineConfig::default());
+    let engine = Arc::new(Engine::new(stack, EngineConfig::default()));
 
     let prompt = cli
         .opt("prompt")
@@ -93,7 +98,30 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         .scheduler(SchedulerKind::parse(cli.opt("scheduler").unwrap_or("pndm"))?)
         .seed(cli.opt_or("seed", 0)?);
 
-    let out = engine.generate(&req)?;
+    let mode = match cli.opt("mode") {
+        Some(m) => BatchMode::parse(m)?,
+        None => BatchMode::Fixed,
+    };
+    let out = if mode == BatchMode::Continuous {
+        let slot_budget: usize = cli.opt_or("slot-budget", 8)?;
+        if slot_budget < 2 {
+            return Err(Error::Config(format!(
+                "--slot-budget {slot_budget} must be >= 2 (a dual step costs 2 slots)"
+            )));
+        }
+        // route through a continuous-mode coordinator: same output
+        // (cohort composition can't affect a sample), exercised the way
+        // the server runs it
+        let coordinator = Coordinator::start(
+            Arc::clone(&engine),
+            CoordinatorConfig { mode, slot_budget, ..CoordinatorConfig::default() },
+        );
+        let out = coordinator.generate(req)?;
+        coordinator.shutdown();
+        out
+    } else {
+        engine.generate(&req)?
+    };
     println!(
         "generated in {:.1} ms  (unet evals: {}, cond {:.1} ms, uncond {:.1} ms, combine {:.1} ms, scheduler {:.1} ms)",
         out.wall_ms,
@@ -119,8 +147,13 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     if let Some(b) = cli.opt("bind") {
         run_cfg.server.bind = b.to_string();
     }
+    if let Some(m) = cli.opt("mode") {
+        run_cfg.server.mode = BatchMode::parse(m)?;
+    }
     run_cfg.server.workers = cli.opt_or("workers", run_cfg.server.workers)?;
     run_cfg.server.max_batch = cli.opt_or("max-batch", run_cfg.server.max_batch)?;
+    run_cfg.server.slot_budget = cli.opt_or("slot-budget", run_cfg.server.slot_budget)?;
+    run_cfg.server.validate()?;
 
     // QoS overrides: the flag force-enables, the knobs refine the config
     if cli.flag("qos") {
@@ -141,10 +174,22 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let stack = Arc::new(ModelStack::load(&dir)?);
     let engine = Arc::new(Engine::new(stack, run_cfg.engine.clone()));
     let coord_cfg = CoordinatorConfig {
+        mode: run_cfg.server.mode,
         max_batch: run_cfg.server.max_batch,
+        slot_budget: run_cfg.server.slot_budget,
         workers: run_cfg.server.workers,
         batch_wait: std::time::Duration::from_millis(run_cfg.server.batch_wait_ms),
     };
+    match run_cfg.server.mode {
+        BatchMode::Continuous => println!(
+            "batching: continuous (slot budget {} per iteration, {} worker cohort(s))",
+            run_cfg.server.slot_budget, run_cfg.server.workers
+        ),
+        BatchMode::Fixed => println!(
+            "batching: fixed (max batch {}, wait {} ms)",
+            run_cfg.server.max_batch, run_cfg.server.batch_wait_ms
+        ),
+    }
     let coordinator = if run_cfg.qos.enabled {
         println!(
             "qos: enabled (max queue {}, quality floor {:.0}%, default deadline {} ms)",

@@ -27,6 +27,11 @@ use crate::guidance::GuidanceStrategy;
 use super::feedback::LoadSnapshot;
 use super::{QosConfig, QosMeta};
 
+/// Slot occupancy at which the occupancy ramp starts widening (full
+/// widening at saturation). Below this the continuous batcher still has
+/// real admission headroom and quality is left alone.
+pub const SLOT_RAMP_START: f64 = 0.75;
+
 /// Maps load snapshots to window fractions. Pure — all serving state
 /// arrives via [`LoadSnapshot`], which keeps the control law trivially
 /// testable.
@@ -40,20 +45,33 @@ impl WindowActuator {
         WindowActuator { cfg }
     }
 
-    /// Load-driven component: 0 below `ramp_low`, the floor at or above
-    /// `ramp_high`, linear in between.
+    /// Load-driven component: the *wider* of two ramps, clamped to the
+    /// floor.
+    ///
+    /// * **Queue depth** — 0 below `ramp_low`, full at or above
+    ///   `ramp_high`, linear in between.
+    /// * **Slot occupancy** — the continuous batcher's EWMA slot usage;
+    ///   0 at or below [`SLOT_RAMP_START`], full at saturation. A
+    ///   saturated cohort means admission headroom is gone even while the
+    ///   queue is still shallow (retires are absorbed instantly), so
+    ///   waiting for depth alone would actuate a whole queue-build-up
+    ///   late. Fixed-mode deployments report no occupancy and keep the
+    ///   pure depth ramp.
     pub fn fraction_for(&self, load: &LoadSnapshot) -> f64 {
         let d = load.queue_depth;
         let (lo, hi) = (self.cfg.ramp_low, self.cfg.ramp_high);
         // `hi` first so a degenerate ramp (lo == hi) acts as a step up
-        let ramp = if d >= hi {
+        let depth_ramp = if d >= hi {
             1.0
         } else if d <= lo {
             0.0
         } else {
             (d - lo) as f64 / (hi - lo) as f64
         };
-        (ramp * self.cfg.floor_fraction).clamp(0.0, self.cfg.floor_fraction)
+        let occ_ramp = ((load.slot_occupancy - SLOT_RAMP_START) / (1.0 - SLOT_RAMP_START))
+            .clamp(0.0, 1.0);
+        (depth_ramp.max(occ_ramp) * self.cfg.floor_fraction)
+            .clamp(0.0, self.cfg.floor_fraction)
     }
 
     /// Full per-request position: load ramp (priority-biased) combined
@@ -135,7 +153,25 @@ mod tests {
             queue_depth: depth,
             service_ms,
             est_wait_ms: depth as f64 * service_ms,
+            slot_occupancy: 0.0,
         }
+    }
+
+    #[test]
+    fn slot_occupancy_ramp_widens_without_queue_depth() {
+        let a = actuator(0.5, 2, 16);
+        let occupied = |occ: f64| LoadSnapshot { slot_occupancy: occ, ..load(0, 0.0) };
+        // headroom left: no widening
+        assert_eq!(a.fraction_for(&occupied(0.0)), 0.0);
+        assert_eq!(a.fraction_for(&occupied(SLOT_RAMP_START)), 0.0);
+        // halfway up the occupancy ramp: half the floor
+        let mid = SLOT_RAMP_START + (1.0 - SLOT_RAMP_START) / 2.0;
+        assert!((a.fraction_for(&occupied(mid)) - 0.25).abs() < 1e-12);
+        // saturated cohort: full widening at depth 0
+        assert_eq!(a.fraction_for(&occupied(1.0)), 0.5);
+        // the wider of the two ramps wins, still floor-clamped
+        let both = LoadSnapshot { slot_occupancy: 1.0, ..load(9, 0.0) };
+        assert_eq!(a.fraction_for(&both), 0.5);
     }
 
     #[test]

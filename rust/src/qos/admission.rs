@@ -139,6 +139,7 @@ mod tests {
             queue_depth: depth,
             service_ms,
             est_wait_ms: depth as f64 * service_ms,
+            slot_occupancy: 0.0,
         }
     }
 

@@ -25,24 +25,35 @@ pub struct LoadSnapshot {
     pub service_ms: f64,
     /// Estimated queueing delay for a new arrival, ms.
     pub est_wait_ms: f64,
+    /// EWMA UNet slot occupancy of the continuous batcher in [0, 1]
+    /// (0 under fixed batching or before the first iteration). Sustained
+    /// occupancy near 1 means admission headroom is gone even while the
+    /// queue is still shallow — the actuator treats it as a load signal
+    /// alongside queue depth.
+    pub slot_occupancy: f64,
 }
 
 impl LoadSnapshot {
     /// An idle, uncalibrated system.
     pub fn idle() -> LoadSnapshot {
-        LoadSnapshot { queue_depth: 0, service_ms: 0.0, est_wait_ms: 0.0 }
+        LoadSnapshot { queue_depth: 0, service_ms: 0.0, est_wait_ms: 0.0, slot_occupancy: 0.0 }
     }
 }
 
-/// Thread-safe EWMA service-time estimator.
+/// Thread-safe EWMA service-time estimator (plus the continuous
+/// batcher's slot-occupancy EWMA).
 #[derive(Debug)]
 pub struct ServiceEstimator {
     ewma: Mutex<Ewma>,
+    occupancy: Mutex<Ewma>,
 }
 
 impl ServiceEstimator {
     pub fn new(alpha: f64) -> ServiceEstimator {
-        ServiceEstimator { ewma: Mutex::new(Ewma::new(alpha)) }
+        ServiceEstimator {
+            ewma: Mutex::new(Ewma::new(alpha)),
+            occupancy: Mutex::new(Ewma::new(alpha)),
+        }
     }
 
     /// Fold in one finished batch.
@@ -54,9 +65,24 @@ impl ServiceEstimator {
         self.ewma.lock().unwrap().observe(per_request_ms);
     }
 
+    /// Fold in one continuous-batcher iteration: `slots_used` of
+    /// `slot_budget` UNet slots were packed.
+    pub fn observe_slots(&self, slots_used: usize, slot_budget: usize) {
+        if slot_budget == 0 {
+            return;
+        }
+        let occ = (slots_used as f64 / slot_budget as f64).clamp(0.0, 1.0);
+        self.occupancy.lock().unwrap().observe(occ);
+    }
+
     /// Current per-request service estimate, ms (0 before calibration).
     pub fn service_ms(&self) -> f64 {
         self.ewma.lock().unwrap().value_or(0.0)
+    }
+
+    /// Current slot-occupancy estimate in [0, 1] (0 before feedback).
+    pub fn slot_occupancy(&self) -> f64 {
+        self.occupancy.lock().unwrap().value_or(0.0)
     }
 
     /// Snapshot against an instantaneous queue depth. The wait estimate
@@ -68,6 +94,7 @@ impl ServiceEstimator {
             queue_depth,
             service_ms,
             est_wait_ms: queue_depth as f64 * service_ms,
+            slot_occupancy: self.slot_occupancy(),
         }
     }
 }
@@ -120,5 +147,22 @@ mod tests {
         let s = LoadSnapshot::idle();
         assert_eq!(s.queue_depth, 0);
         assert_eq!(s.service_ms, 0.0);
+        assert_eq!(s.slot_occupancy, 0.0);
+    }
+
+    #[test]
+    fn slot_occupancy_tracks_iterations() {
+        let e = ServiceEstimator::new(1.0); // no smoothing: track exactly
+        assert_eq!(e.slot_occupancy(), 0.0);
+        e.observe_slots(8, 8);
+        assert!((e.slot_occupancy() - 1.0).abs() < 1e-12);
+        e.observe_slots(4, 8);
+        assert!((e.slot_occupancy() - 0.5).abs() < 1e-12);
+        assert!((e.snapshot(3).slot_occupancy - 0.5).abs() < 1e-12);
+        // degenerate budgets are ignored; over-reports clamp to 1
+        e.observe_slots(5, 0);
+        assert!((e.slot_occupancy() - 0.5).abs() < 1e-12);
+        e.observe_slots(20, 8);
+        assert!((e.slot_occupancy() - 1.0).abs() < 1e-12);
     }
 }

@@ -42,7 +42,7 @@ pub mod admission;
 pub mod feedback;
 pub mod sim;
 
-pub use actuator::WindowActuator;
+pub use actuator::{WindowActuator, SLOT_RAMP_START};
 pub use admission::{expired, AdmissionController, AdmissionDecision, RejectReason};
 pub use feedback::{LoadSnapshot, ServiceEstimator};
 pub use sim::{simulate, SimReport, SimSpec};
@@ -318,6 +318,12 @@ pub trait QosPolicy: Send + Sync {
     /// deadline (it was never executed).
     fn observe_deadline_miss(&self) {}
 
+    /// Feedback: one continuous-batcher iteration packed `slots_used` of
+    /// `slot_budget` UNet slots. Sustained occupancy near 1 is a load
+    /// signal alongside queue depth (the cohort is saturated even if the
+    /// queue is still shallow). Default: ignored (fixed-mode policies).
+    fn observe_slots(&self, _slots_used: usize, _slot_budget: usize) {}
+
     /// Counters for the stats endpoints.
     fn qos_snapshot(&self) -> QosSnapshot;
 }
@@ -426,6 +432,10 @@ impl QosPolicy for DeadlineQos {
 
     fn observe_deadline_miss(&self) {
         self.counters.inc_deadline_missed();
+    }
+
+    fn observe_slots(&self, slots_used: usize, slot_budget: usize) {
+        self.estimator.observe_slots(slots_used, slot_budget);
     }
 
     fn qos_snapshot(&self) -> QosSnapshot {
@@ -604,6 +614,51 @@ mod tests {
         // full-CFG batches pass through unchanged
         q.observe_batch(1, Duration::from_millis(100), 0.0);
         assert!((q.load(0).service_ms - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slot_occupancy_feeds_the_load_snapshot() {
+        let q = DeadlineQos::new(QosConfig {
+            enabled: true,
+            ewma_alpha: 1.0,
+            ..QosConfig::default()
+        })
+        .unwrap();
+        assert_eq!(q.load(0).slot_occupancy, 0.0);
+        q.observe_slots(8, 8);
+        assert!((q.load(0).slot_occupancy - 1.0).abs() < 1e-12);
+        q.observe_slots(2, 8);
+        assert!((q.load(0).slot_occupancy - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturated_slots_widen_even_at_shallow_depth() {
+        // continuous batching: the cohort can be saturated while the
+        // queue is still short — occupancy must drive the actuator too
+        let q = loaded_policy(QosConfig {
+            enabled: true,
+            ramp_low: 4,
+            ramp_high: 8,
+            floor_fraction: 0.5,
+            max_queue_depth: 64,
+            ..QosConfig::default()
+        });
+        // below the depth ramp and no occupancy signal: full CFG
+        let mut req = GenerationRequest::new("p").decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(q.admit(&mut req, &mut meta, 0), AdmissionDecision::Admit));
+        assert_eq!(req.window.fraction, 0.0);
+        // saturate the slot budget: same depth now widens
+        for _ in 0..50 {
+            q.observe_slots(8, 8);
+        }
+        let mut req = GenerationRequest::new("p").decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(q.admit(&mut req, &mut meta, 0), AdmissionDecision::Admit));
+        assert!(
+            req.window.fraction > 0.0,
+            "saturated slot occupancy must widen the window"
+        );
     }
 
     #[test]

@@ -129,6 +129,7 @@ fn dispatch(line: &str, coordinator: &Arc<Coordinator>, stop: &Arc<AtomicBool>) 
         Some("stats") => {
             let s = coordinator.stats();
             ok_base(id)
+                .with("mode", s.mode.name())
                 .with("submitted", s.submitted as i64)
                 .with("completed", s.completed as i64)
                 .with("failed", s.failed as i64)
@@ -136,6 +137,13 @@ fn dispatch(line: &str, coordinator: &Arc<Coordinator>, stop: &Arc<AtomicBool>) 
                 .with("deadline_missed", s.deadline_missed as i64)
                 .with("batches", s.batches as i64)
                 .with("batched_requests", s.batched_requests as i64)
+                .with("slot_budget", s.slot_budget as i64)
+                .with("iterations", s.iterations as i64)
+                .with("joins", s.joins as i64)
+                .with("retires", s.retires as i64)
+                .with("cohort_max", s.cohort_max as i64)
+                .with("cohort_last", s.cohort_last as i64)
+                .with("slot_utilization", s.slot_utilization)
                 .with("queue_depth", s.queue_depth as i64)
                 .with("queue_depth_max", s.queue_depth_max as i64)
                 .with("actuator_fraction", s.actuator_fraction)

@@ -93,6 +93,12 @@ pub struct WorkloadSpec {
     pub arrivals: ArrivalProcess,
     pub num_requests: usize,
     pub steps: usize,
+    /// Mixed-class traffic: when non-empty, request `i` runs
+    /// `steps_choices[i % len]` steps instead of the uniform `steps`.
+    /// The fixed batcher splits these into separate lock-step classes;
+    /// the continuous batcher cohorts them together (DESIGN.md §9), so
+    /// this is the knob that exercises the difference under replay.
+    pub steps_choices: Vec<usize>,
     pub scheduler: SchedulerKind,
     /// Selective-guidance window applied to all requests.
     pub window: WindowSpec,
@@ -113,6 +119,7 @@ impl Default for WorkloadSpec {
             arrivals: ArrivalProcess::Poisson { rate_per_s: 4.0 },
             num_requests: 32,
             steps: 50,
+            steps_choices: Vec::new(),
             scheduler: SchedulerKind::Pndm,
             window: WindowSpec::none(),
             strategy: GuidanceStrategy::CondOnly,
@@ -143,8 +150,13 @@ impl WorkloadSpec {
             .enumerate()
             .map(|(i, at_ms)| {
                 let prompt = prompts::TABLE2[i % prompts::TABLE2.len()];
+                let steps = if self.steps_choices.is_empty() {
+                    self.steps
+                } else {
+                    self.steps_choices[i % self.steps_choices.len()]
+                };
                 let request = GenerationRequest::new(prompt)
-                    .steps(self.steps)
+                    .steps(steps)
                     .scheduler(self.scheduler)
                     .guidance_scale(self.guidance_scale)
                     .selective(self.window)
@@ -411,6 +423,21 @@ mod tests {
         // default spec keeps the paper's drop-guidance mode
         let plain = WorkloadSpec { num_requests: 2, ..WorkloadSpec::default() }.synthesize();
         assert!(plain.iter().all(|t| t.request.strategy == GuidanceStrategy::CondOnly));
+    }
+
+    #[test]
+    fn trace_mixed_step_classes_cycle() {
+        let spec = WorkloadSpec {
+            num_requests: 7,
+            steps_choices: vec![20, 30, 50],
+            ..WorkloadSpec::default()
+        };
+        let trace = spec.synthesize();
+        let got: Vec<usize> = trace.iter().map(|t| t.request.steps).collect();
+        assert_eq!(got, vec![20, 30, 50, 20, 30, 50, 20]);
+        // empty choices keep the uniform step count
+        let plain = WorkloadSpec { num_requests: 3, ..WorkloadSpec::default() }.synthesize();
+        assert!(plain.iter().all(|t| t.request.steps == 50));
     }
 
     #[test]

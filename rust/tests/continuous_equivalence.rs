@@ -1,0 +1,400 @@
+//! Continuous-batching equivalence properties on the deterministic
+//! synthetic backend (no PJRT artifacts needed — this suite always runs,
+//! and the whole-suite `PROP_MASTER_SEED` CI matrix re-runs it in other
+//! randomness universes).
+//!
+//! The invariant under test is DESIGN.md §9's contract: a sample's
+//! output is a pure function of its own request. Whatever the admission
+//! order, slot budget, cohort mix (step counts, schedulers, windows,
+//! strategies) or admission stagger, every sample must match its solo
+//! [`Engine::generate`] run **bit-for-bit** — and the per-iteration slot
+//! usage must never overshoot the budget.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+use selective_guidance::config::{DualStrategy, EngineConfig};
+use selective_guidance::coordinator::{
+    BatchMode, ContinuousBatcher, Coordinator, CoordinatorConfig,
+};
+use selective_guidance::engine::{Engine, GenerationOutput, GenerationRequest};
+use selective_guidance::error::Error;
+use selective_guidance::guidance::{GuidanceStrategy, ReuseKind, WindowSpec};
+use selective_guidance::qos::{DeadlineQos, QosConfig, QosMeta};
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::testutil::prop::{forall, Gen};
+
+fn engine(dual: DualStrategy) -> Arc<Engine> {
+    let cfg = EngineConfig { dual_strategy: dual, ..EngineConfig::default() };
+    Arc::new(Engine::new(Arc::new(ModelStack::synthetic()), cfg))
+}
+
+fn random_strategy(g: &mut Gen) -> GuidanceStrategy {
+    match g.usize_in(0, 2) {
+        0 => GuidanceStrategy::CondOnly,
+        1 => GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: g.usize_in(0, 5) },
+        _ => GuidanceStrategy::Reuse {
+            kind: ReuseKind::Extrapolate,
+            refresh_every: g.usize_in(0, 5),
+        },
+    }
+}
+
+fn random_window(g: &mut Gen) -> WindowSpec {
+    let f = g.f64_in(0.0, 1.0);
+    match g.usize_in(0, 3) {
+        0 => WindowSpec::last(f),
+        1 => WindowSpec::first(f),
+        2 => WindowSpec::middle(f),
+        _ => WindowSpec::none(),
+    }
+}
+
+/// A fully random request — unlike the lock-step batcher, the continuous
+/// cohort imposes *no* compatibility class, so steps and scheduler
+/// randomize per request too.
+fn random_request(g: &mut Gen) -> GenerationRequest {
+    let kinds = [
+        SchedulerKind::Ddim,
+        SchedulerKind::Ddpm,
+        SchedulerKind::Pndm,
+        SchedulerKind::Euler,
+        SchedulerKind::EulerAncestral,
+        SchedulerKind::DpmSolverPP,
+        SchedulerKind::Heun,
+    ];
+    let scale = if g.bool() { g.f32_in(1.5, 12.0) } else { 1.0 };
+    GenerationRequest::new(format!("{} {}", g.word(8), g.word(8)))
+        .steps(g.usize_in(2, 10))
+        .scheduler(*g.choose(&kinds))
+        .seed(g.u64())
+        .guidance_scale(scale)
+        .selective(random_window(g))
+        .strategy(random_strategy(g))
+        .decode(false)
+}
+
+/// Drive a [`ContinuousBatcher`] to completion over `reqs`, admitting in
+/// `order` with `g`-driven stagger, asserting the slot invariant; returns
+/// the outputs in request order.
+fn run_cohort(
+    e: &Arc<Engine>,
+    reqs: &[GenerationRequest],
+    order: &[usize],
+    budget: usize,
+    g: &mut Gen,
+) -> Vec<GenerationOutput> {
+    let mut cb = ContinuousBatcher::new(Arc::clone(e), budget).expect("batcher");
+    let mut queue: VecDeque<usize> = order.iter().copied().collect();
+    let mut id2idx: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut outs: Vec<Option<GenerationOutput>> = vec![None; reqs.len()];
+    let mut spins = 0usize;
+    while outs.iter().any(|o| o.is_none()) {
+        // staggered arrivals: sometimes an iteration boundary passes with
+        // no admission attempt at all (forced when the cohort is empty so
+        // the loop always progresses)
+        if g.bool() || cb.in_flight() == 0 {
+            while let Some(&i) = queue.front() {
+                match cb.try_admit(&reqs[i]).expect("admit") {
+                    Some(id) => {
+                        queue.pop_front();
+                        id2idx.insert(id, i);
+                    }
+                    None => break,
+                }
+            }
+        }
+        if cb.in_flight() == 0 {
+            spins += 1;
+            assert!(spins < 100_000);
+            continue;
+        }
+        let outcome = cb.step().expect("step");
+        assert!(
+            outcome.slots_used <= budget,
+            "iteration used {} slots over budget {budget}",
+            outcome.slots_used
+        );
+        assert!(outcome.slots_used >= 1, "a non-empty cohort always runs work");
+        for (id, out) in outcome.retired {
+            outs[id2idx[&id]] = Some(out);
+        }
+        spins += 1;
+        assert!(spins < 100_000, "cohort failed to drain");
+    }
+    outs.into_iter().map(Option::unwrap).collect()
+}
+
+fn staggered_admission_matches_solo(dual: DualStrategy) {
+    let e = engine(dual);
+    forall(&format!("continuous == solo ({dual:?})"), 30, |g| {
+        let budget = g.usize_in(2, 10);
+        let k = g.usize_in(1, 6);
+        let reqs: Vec<GenerationRequest> = (0..k).map(|_| random_request(g)).collect();
+        let solo: Vec<GenerationOutput> =
+            reqs.iter().map(|r| e.generate(r).expect("solo")).collect();
+        // random admission order (Fisher-Yates over the index vec)
+        let mut order: Vec<usize> = (0..k).collect();
+        for i in (1..k).rev() {
+            let j = g.usize_in(0, i);
+            order.swap(i, j);
+        }
+        let outs = run_cohort(&e, &reqs, &order, budget, g);
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(
+                solo[i].latent, out.latent,
+                "sample {i} (budget {budget}): cohort composition leaked into the output"
+            );
+            assert_eq!(solo[i].unet_evals, out.unet_evals, "sample {i}: eval count");
+        }
+    });
+}
+
+#[test]
+fn staggered_admission_matches_solo_two_b1() {
+    staggered_admission_matches_solo(DualStrategy::TwoB1);
+}
+
+#[test]
+fn staggered_admission_matches_solo_fused_b2() {
+    staggered_admission_matches_solo(DualStrategy::FusedB2);
+}
+
+#[test]
+fn mixed_classes_cohort_where_fixed_batching_cannot() {
+    // four requests no lock-step batch could ever fuse: different step
+    // counts AND schedulers — plus a reuse strategy and an unguided one
+    let e = engine(DualStrategy::TwoB1);
+    let reqs = vec![
+        GenerationRequest::new("a cat")
+            .steps(6)
+            .scheduler(SchedulerKind::Ddim)
+            .selective(WindowSpec::last(0.5))
+            .seed(1)
+            .decode(false),
+        GenerationRequest::new("a dog")
+            .steps(9)
+            .scheduler(SchedulerKind::Pndm)
+            .seed(2)
+            .decode(false),
+        GenerationRequest::new("a fish")
+            .steps(4)
+            .scheduler(SchedulerKind::Euler)
+            .guidance_scale(1.0)
+            .seed(3)
+            .decode(false),
+        GenerationRequest::new("a bird")
+            .steps(7)
+            .scheduler(SchedulerKind::Heun)
+            .selective(WindowSpec::last(0.6))
+            .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 2 })
+            .seed(4)
+            .decode(false),
+    ];
+    // the fixed batcher refuses this mix outright...
+    assert!(e.generate_batch(&reqs).is_err());
+    // ...the continuous cohort serves it, each sample matching its solo
+    let solo: Vec<GenerationOutput> = reqs.iter().map(|r| e.generate(r).unwrap()).collect();
+    let mut g = Gen::new(0xC0117);
+    let order: Vec<usize> = (0..reqs.len()).collect();
+    let outs = run_cohort(&e, &reqs, &order, 8, &mut g);
+    for (i, out) in outs.iter().enumerate() {
+        assert_eq!(solo[i].latent, out.latent, "sample {i}");
+        assert_eq!(solo[i].unet_evals, out.unet_evals, "sample {i}");
+    }
+}
+
+#[test]
+fn continuous_coordinator_end_to_end_matches_solo() {
+    // the threaded driver: real submission path, worker cohort, stats
+    let e = engine(DualStrategy::TwoB1);
+    let coordinator = Coordinator::start(
+        Arc::clone(&e),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 6,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let reqs: Vec<GenerationRequest> = (0..8)
+        .map(|i| {
+            GenerationRequest::new(format!("prompt {i}"))
+                .steps(6 + (i % 3))
+                .scheduler(SchedulerKind::Ddim)
+                .selective(WindowSpec::last(if i % 2 == 0 { 0.5 } else { 0.0 }))
+                .seed(i as u64)
+                .decode(false)
+        })
+        .collect();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|r| coordinator.submit(r.clone()).expect("submit"))
+        .collect();
+    let outs: Vec<GenerationOutput> =
+        tickets.into_iter().map(|t| t.wait().expect("wait")).collect();
+    for (i, (r, out)) in reqs.iter().zip(&outs).enumerate() {
+        let solo = e.generate(r).unwrap();
+        assert_eq!(solo.latent, out.latent, "sample {i}");
+        assert_eq!(solo.unet_evals, out.unet_evals, "sample {i}");
+    }
+    let stats = coordinator.stats();
+    assert_eq!(stats.mode, BatchMode::Continuous);
+    assert_eq!(stats.slot_budget, 6);
+    assert_eq!(stats.submitted, 8);
+    assert_eq!(stats.completed, 8);
+    assert_eq!(stats.failed, 0);
+    // the continuous counters replace the fixed batcher's batch counters
+    assert_eq!(stats.joins, 8);
+    assert_eq!(stats.retires, 8);
+    assert_eq!(stats.batches, 0);
+    // mixed 6/7/8-step cohort: at least the longest trajectory's worth
+    // of iterations, every one within budget
+    assert!(stats.iterations >= 8, "iterations {}", stats.iterations);
+    assert!(stats.cohort_max >= 1 && stats.cohort_max <= 6);
+    assert!(
+        stats.slot_utilization > 0.0 && stats.slot_utilization <= 1.0,
+        "slot_utilization {}",
+        stats.slot_utilization
+    );
+    // the outstanding gauge tracked the continuous admission queue
+    assert!(stats.queue_depth_max >= 1);
+    assert_eq!(stats.queue_depth, 0, "everything drained");
+    coordinator.shutdown();
+}
+
+#[test]
+fn continuous_coordinator_expires_queued_deadlines() {
+    let e = engine(DualStrategy::TwoB1);
+    let coordinator = Coordinator::start(
+        Arc::clone(&e),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 2,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let req = GenerationRequest::new("long job").steps(10).decode(false);
+    let ok = coordinator.submit(req.clone()).expect("submit");
+    // an already-expired deadline must come back as 504, not burn slots
+    let dead = coordinator
+        .submit_qos(req, QosMeta::with_deadline_ms(0.0))
+        .expect("submit");
+    assert!(matches!(dead.wait(), Err(Error::DeadlineExceeded(_))));
+    assert!(ok.wait().is_ok());
+    let stats = coordinator.stats();
+    assert_eq!(stats.deadline_missed, 1);
+    assert_eq!(stats.completed, 1);
+    coordinator.shutdown();
+}
+
+#[test]
+fn continuous_mode_feeds_qos_slot_occupancy() {
+    // end-to-end wiring of the new load signal: worker iterations must
+    // reach the policy's occupancy EWMA (and service feedback must flow)
+    let e = engine(DualStrategy::TwoB1);
+    let qos = Arc::new(
+        DeadlineQos::new(QosConfig { enabled: true, ..QosConfig::default() }).unwrap(),
+    );
+    let coordinator = Coordinator::start_qos(
+        Arc::clone(&e),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 4,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        },
+        qos.clone(),
+    );
+    let tickets: Vec<_> = (0..4)
+        .map(|i| {
+            let r = GenerationRequest::new(format!("p{i}"))
+                .steps(6)
+                .scheduler(SchedulerKind::Ddim)
+                .seed(i as u64)
+                .decode(false);
+            coordinator.submit(r).expect("submit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("complete");
+    }
+    let load = qos.load(0);
+    assert!(
+        load.slot_occupancy > 0.0 && load.slot_occupancy <= 1.0,
+        "occupancy EWMA not fed: {}",
+        load.slot_occupancy
+    );
+    assert!(load.service_ms > 0.0, "service feedback not fed");
+    coordinator.shutdown();
+}
+
+#[test]
+fn continuous_coordinator_multiple_worker_cohorts() {
+    // two worker cohorts share the admission queue; outputs still match
+    let e = engine(DualStrategy::TwoB1);
+    let coordinator = Coordinator::start(
+        Arc::clone(&e),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 4,
+            workers: 2,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let reqs: Vec<GenerationRequest> = (0..10)
+        .map(|i| {
+            GenerationRequest::new(format!("w{i}"))
+                .steps(5)
+                .scheduler(SchedulerKind::Ddim)
+                .selective(WindowSpec::last(0.4))
+                .seed(100 + i as u64)
+                .decode(false)
+        })
+        .collect();
+    let tickets: Vec<_> =
+        reqs.iter().map(|r| coordinator.submit(r.clone()).expect("submit")).collect();
+    for (r, t) in reqs.iter().zip(tickets) {
+        let out = t.wait().expect("wait");
+        let solo = e.generate(r).unwrap();
+        assert_eq!(solo.latent, out.latent);
+    }
+    assert_eq!(coordinator.stats().completed, 10);
+    coordinator.shutdown();
+}
+
+#[test]
+fn replay_mixed_step_trace_through_continuous_coordinator() {
+    // the workload layer end-to-end: a mixed-class trace (impossible to
+    // fuse in one fixed batch) replays through a continuous coordinator
+    use selective_guidance::workload::{replay, ArrivalProcess, WorkloadSpec};
+    let e = engine(DualStrategy::TwoB1);
+    let coordinator = Coordinator::start(
+        Arc::clone(&e),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 6,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let spec = WorkloadSpec {
+        arrivals: ArrivalProcess::Uniform { rate_per_s: 2000.0 },
+        num_requests: 9,
+        steps_choices: vec![4, 6, 8],
+        scheduler: SchedulerKind::Ddim,
+        window: WindowSpec::last(0.5),
+        decode: false,
+        ..WorkloadSpec::default()
+    };
+    let trace = spec.synthesize();
+    let report = replay(&coordinator, &trace).expect("replay");
+    assert_eq!(report.failures, 0);
+    assert_eq!(report.latencies_ms.len(), 9);
+    let stats = coordinator.stats();
+    assert_eq!(stats.completed, 9);
+    assert_eq!(stats.retires, 9);
+    coordinator.shutdown();
+}

@@ -20,6 +20,7 @@ fn coordinator(max_batch: usize, workers: usize) -> Option<Arc<Coordinator>> {
             max_batch,
             workers,
             batch_wait: Duration::from_millis(20),
+            ..CoordinatorConfig::default()
         },
     ))
 }

@@ -19,7 +19,12 @@ fn qos_coordinator(cfg: QosConfig) -> Option<Arc<Coordinator>> {
     let engine = Arc::new(Engine::new(stack, EngineConfig::default()));
     Some(Coordinator::start_qos(
         engine,
-        CoordinatorConfig { max_batch: 4, workers: 1, batch_wait: Duration::from_millis(2) },
+        CoordinatorConfig {
+            max_batch: 4,
+            workers: 1,
+            batch_wait: Duration::from_millis(2),
+            ..CoordinatorConfig::default()
+        },
         Arc::new(DeadlineQos::new(cfg).expect("valid qos config")),
     ))
 }

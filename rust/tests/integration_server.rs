@@ -16,7 +16,12 @@ fn start_server() -> Option<(Server, String)> {
     let engine = Arc::new(Engine::new(stack, EngineConfig::default()));
     let coordinator = Coordinator::start(
         engine,
-        CoordinatorConfig { max_batch: 4, workers: 1, batch_wait: Duration::from_millis(2) },
+        CoordinatorConfig {
+            max_batch: 4,
+            workers: 1,
+            batch_wait: Duration::from_millis(2),
+            ..CoordinatorConfig::default()
+        },
     );
     let server = Server::start(coordinator, "127.0.0.1:0").expect("bind");
     let addr = server.addr().to_string();

@@ -1,0 +1,130 @@
+//! Bench-regression gate: hold the benches' machine-readable results to
+//! committed baseline bands, so CI fails when a headline serving property
+//! regresses instead of silently drifting.
+//!
+//! Baselines live in `ci/bench_baselines/`, one JSON file per gated
+//! result (same file name the bench dumps into `bench_results/`):
+//!
+//! ```json
+//! {
+//!   "metrics": {
+//!     "throughput_ratio": {"min": 1.1, "max": 1.6},
+//!     "slot_utilization": {"min": 0.85}
+//!   }
+//! }
+//! ```
+//!
+//! Every gated metric must be present in the result and inside its
+//! `[min, max]` band (either bound may be omitted). The gated metrics are
+//! deliberately *virtual-time / ratio* quantities — deterministic across
+//! machines — never wall-clock samples; the bands are the tolerance. To
+//! tighten a band, copy the `bench-results` CI artifact's value in.
+//!
+//! Usage (from `rust/`, after `cargo bench -- --fast`):
+//!
+//! ```text
+//! cargo run --release --bin bench-gate -- \
+//!     --baselines ../ci/bench_baselines --results bench_results
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use selective_guidance::benchutil::Table;
+use selective_guidance::json::{self, Value};
+
+fn main() {
+    match run() {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("bench-gate: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn load(path: &Path) -> Result<Value, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    json::from_str(&text).map_err(|e| format!("parsing {}: {e}", path.display()))
+}
+
+fn run() -> Result<(), String> {
+    let mut baselines = PathBuf::from("../ci/bench_baselines");
+    let mut results = PathBuf::from("bench_results");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--baselines" => {
+                baselines = PathBuf::from(args.next().ok_or("--baselines needs a dir")?)
+            }
+            "--results" => results = PathBuf::from(args.next().ok_or("--results needs a dir")?),
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+    }
+
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&baselines)
+        .map_err(|e| format!("reading {}: {e}", baselines.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no baseline files in {}", baselines.display()));
+    }
+
+    let mut table = Table::new(&["result", "metric", "value", "band", "status"]);
+    let mut failures = 0usize;
+    let mut checked = 0usize;
+    for base_path in &files {
+        let name = base_path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| format!("bad baseline path {}", base_path.display()))?
+            .to_string();
+        let baseline = load(base_path)?;
+        let result = load(&results.join(&name))?;
+        let metrics = match baseline.get("metrics") {
+            Some(Value::Obj(m)) => m,
+            _ => return Err(format!("{name}: baseline has no \"metrics\" object")),
+        };
+        for (metric, band) in metrics {
+            let min = band.get("min").and_then(Value::as_f64);
+            let max = band.get("max").and_then(Value::as_f64);
+            if min.is_none() && max.is_none() {
+                return Err(format!("{name}/{metric}: band needs a min and/or max"));
+            }
+            let band_str = format!(
+                "[{}, {}]",
+                min.map(|v| format!("{v}")).unwrap_or_else(|| "-inf".into()),
+                max.map(|v| format!("{v}")).unwrap_or_else(|| "+inf".into()),
+            );
+            checked += 1;
+            let (value_str, ok) = match result.get(metric).and_then(Value::as_f64) {
+                None => ("missing".to_string(), false),
+                Some(v) => {
+                    let ok = v.is_finite()
+                        && min.map(|lo| v >= lo).unwrap_or(true)
+                        && max.map(|hi| v <= hi).unwrap_or(true);
+                    (format!("{v:.4}"), ok)
+                }
+            };
+            if !ok {
+                failures += 1;
+            }
+            table.row(&[
+                name.clone(),
+                metric.clone(),
+                value_str,
+                band_str,
+                if ok { "ok".into() } else { "REGRESSION".into() },
+            ]);
+        }
+    }
+    println!("\nBench-regression gate ({checked} metrics, {} baselines):\n", files.len());
+    table.print();
+    if failures > 0 {
+        return Err(format!("{failures} metric(s) outside their baseline band"));
+    }
+    println!("\nall gated metrics inside their bands");
+    Ok(())
+}
