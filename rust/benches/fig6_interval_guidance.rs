@@ -1,0 +1,214 @@
+//! Figure 6 (repo extension): generalized guidance schedules at **equal
+//! UNet-eval budgets** — last-window vs limited-interval vs cadence.
+//!
+//! The plan IR (DESIGN.md §10) makes schedules first-class, so the
+//! serving question becomes concrete: *given a fixed eval budget, which
+//! schedule should a request run?* Three candidates, all compiled to the
+//! exact same budget on the deterministic synthetic backend:
+//!
+//! * **last-window** — the paper's `Last(0.5)` drop-guidance window;
+//! * **limited interval** — guidance only inside a centered `[lo, hi)`
+//!   (Kynkäänniemi et al.), with the *reuse* strategy keeping Eq.-1
+//!   guidance alive (cached uncond eps) outside the interval;
+//! * **cadence** — guidance every 2nd step (Dinh et al., "Compress
+//!   Guidance"), reusing the cached uncond eps in between.
+//!
+//! Asserted (hard, per prompt × seed):
+//!
+//! (a) all three plans execute the **same** number of UNet evals — the
+//!     comparison is at equal budget by construction, enforced via
+//!     `plan.total_unet_evals()`;
+//! (b) SSIM(interval, full CFG) >= SSIM(last-window, full CFG) and
+//!     SSIM(cadence, full CFG) >= SSIM(last-window, full CFG): keeping
+//!     guidance alive everywhere at the same cost beats dropping it on
+//!     the tail.
+//!
+//! A drop-guidance (cond-only) middle interval rides along as an
+//! informational row: it *loses* badly — early steps are the most
+//! guidance-sensitive (the paper's Figure-1 insight) — which is exactly
+//! why the winning interval/cadence schedules pair with reuse.
+//!
+//! Run: `cargo bench --bench fig6_interval_guidance [-- --fast]`
+
+use std::sync::Arc;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, Table};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::{GuidanceSchedule, GuidanceStrategy, ReuseKind, WindowSpec};
+use selective_guidance::json::Value;
+use selective_guidance::prompts;
+use selective_guidance::quality::{latent_drift, ssim};
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = if args.fast { 16 } else { 24 };
+    let prompts: &[&str] = if args.fast {
+        &["A person holding a cat"]
+    } else {
+        &[
+            prompts::FIG2_PROMPT,
+            "A watercolor of a silver dragon head with colorful flowers growing out of the top",
+            "A person holding a cat",
+        ]
+    };
+    let seeds: &[u64] = &[11, 12];
+    let hold = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 };
+
+    // ---- the equal-budget trio --------------------------------------
+    // last-window Last(0.5): k = n/2 optimized steps, n/2 dual.
+    let n = steps;
+    let k = n / 2;
+    // interval: g guided steps centered; the leading reuse run opens
+    // with one cold-cache dual anchor, so g + 1 == n - k duals.
+    let g = n - k - 1;
+    let lo = (n - g) / 2;
+    let schedules: Vec<(&str, GuidanceSchedule, GuidanceStrategy)> = vec![
+        (
+            "last-window (cond-only)",
+            GuidanceSchedule::Window(WindowSpec::last(0.5)),
+            GuidanceStrategy::CondOnly,
+        ),
+        (
+            "interval (hold reuse)",
+            GuidanceSchedule::Interval {
+                lo: lo as f64 / n as f64,
+                hi: (lo + g) as f64 / n as f64,
+            },
+            hold,
+        ),
+        ("cadence /2 (hold reuse)", GuidanceSchedule::Cadence { every: 2 }, hold),
+    ];
+    // informational only: the same interval with guidance *dropped*
+    // outside it — the paper's Figure-1 "early steps matter" result
+    let drop_interval = (
+        "interval (cond-only, info)",
+        GuidanceSchedule::Interval {
+            lo: lo as f64 / n as f64,
+            hi: (lo + g) as f64 / n as f64,
+        },
+        GuidanceStrategy::CondOnly,
+    );
+
+    eprintln!("[fig6] synthetic backend, {steps} steps, equal-budget schedules");
+    let engine = Engine::new(Arc::new(ModelStack::synthetic()), EngineConfig::default());
+
+    let mut table = Table::new(&["prompt", "seed", "schedule", "evals", "SSIM", "drift"]);
+    let mut rows_json = Vec::new();
+    let mut interval_gain_min = f64::INFINITY;
+    let mut cadence_gain_min = f64::INFINITY;
+    let mut ssim_last_min = f64::INFINITY;
+    let mut runs = 0usize;
+
+    for (pi, prompt) in prompts.iter().enumerate() {
+        for &seed in seeds {
+            let request = |sched: GuidanceSchedule, strat: GuidanceStrategy| {
+                GenerationRequest::new(*prompt)
+                    .steps(steps)
+                    .scheduler(SchedulerKind::Ddim)
+                    .seed(seed)
+                    .with_schedule(sched)
+                    .strategy(strat)
+                    .decode(true)
+            };
+            let base = engine
+                .generate(&request(GuidanceSchedule::none(), GuidanceStrategy::CondOnly))
+                .expect("baseline");
+            let base_img = base.image.as_ref().unwrap();
+            assert_eq!(base.unet_evals, 2 * steps, "baseline must be dual everywhere");
+
+            let mut ssims = Vec::new();
+            let mut budget = None;
+            for (name, sched, strat) in
+                schedules.iter().chain(std::iter::once(&drop_interval)).cloned()
+            {
+                let info = name.ends_with("info)");
+                let req = request(sched, strat);
+                let planned = req.plan().expect("plan").total_unet_evals();
+                let out = engine.generate(&req).expect("optimized");
+                assert_eq!(out.unet_evals, planned, "{name}: executed != planned");
+                let s = ssim(base_img, out.image.as_ref().unwrap());
+                let d = latent_drift(&base.latent, &out.latent);
+                if !info {
+                    // (a) equal budget, enforced through the plan IR
+                    match budget {
+                        None => budget = Some(planned),
+                        Some(b) => assert_eq!(
+                            planned, b,
+                            "{name}: unequal budget ({planned} vs {b})"
+                        ),
+                    }
+                    ssims.push(s);
+                }
+                let short: String = prompt.chars().take(20).collect();
+                table.row(&[
+                    short,
+                    format!("{seed}"),
+                    name.into(),
+                    format!("{}", out.unet_evals),
+                    format!("{s:.4}"),
+                    format!("{d:.4}"),
+                ]);
+                rows_json.push(
+                    Value::obj()
+                        .with("prompt_index", pi as i64)
+                        .with("seed", seed as i64)
+                        .with("schedule", name)
+                        .with("unet_evals", out.unet_evals as i64)
+                        .with("ssim", s)
+                        .with("latent_drift", d),
+                );
+            }
+            let (s_last, s_interval, s_cadence) = (ssims[0], ssims[1], ssims[2]);
+            // (b) guidance kept via reuse beats guidance dropped on the
+            // tail, at the same eval budget
+            assert!(
+                s_interval >= s_last,
+                "{prompt}/{seed}: interval SSIM {s_interval:.4} below last-window {s_last:.4}"
+            );
+            assert!(
+                s_cadence >= s_last,
+                "{prompt}/{seed}: cadence SSIM {s_cadence:.4} below last-window {s_last:.4}"
+            );
+            interval_gain_min = interval_gain_min.min(s_interval - s_last);
+            cadence_gain_min = cadence_gain_min.min(s_cadence - s_last);
+            ssim_last_min = ssim_last_min.min(s_last);
+            runs += 1;
+        }
+    }
+
+    println!(
+        "\nFigure 6 — equal-budget guidance schedules, {steps} steps \
+         (synthetic backend):\n"
+    );
+    table.print();
+    println!(
+        "\nall {runs} prompt×seed runs: equal UNet-eval budgets; interval/cadence \
+         (guidance kept via cached uncond eps) >= last-window (guidance dropped) \
+         on SSIM vs full CFG\nworst margins: interval {interval_gain_min:+.4}, \
+         cadence {cadence_gain_min:+.4}"
+    );
+
+    write_result_json(
+        "fig6_interval_guidance",
+        &Value::obj()
+            .with("steps", steps as i64)
+            .with("runs", runs as i64)
+            .with("interval_gain_min", interval_gain_min)
+            .with("cadence_gain_min", cadence_gain_min)
+            .with("ssim_last_min", ssim_last_min)
+            .with("rows", Value::Arr(rows_json)),
+    );
+    // the regression-gate view (ci/bench_baselines/BENCH_interval.json,
+    // checked by tools/bench_gate.rs): deterministic SSIM margins only
+    write_result_json(
+        "BENCH_interval",
+        &Value::obj()
+            .with("runs", runs as i64)
+            .with("interval_gain_min", interval_gain_min)
+            .with("cadence_gain_min", cadence_gain_min)
+            .with("ssim_last_min", ssim_last_min),
+    );
+}

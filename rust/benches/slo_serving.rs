@@ -74,7 +74,7 @@ fn main() {
             num_requests,
             steps,
             scheduler: SchedulerKind::Ddim,
-            window,
+            schedule: selective_guidance::guidance::GuidanceSchedule::Window(window),
             decode: false,
             ..WorkloadSpec::default()
         };

@@ -11,7 +11,9 @@ pub use toml::{TomlDoc, TomlValue};
 
 use crate::coordinator::BatchMode;
 use crate::error::{Error, Result};
-use crate::guidance::{GuidanceStrategy, SelectiveGuidancePolicy, WindowSpec};
+use crate::guidance::{
+    AdaptiveConfig, GuidanceSchedule, GuidanceStrategy, SelectiveGuidancePolicy, WindowPosition,
+};
 use crate::qos::QosConfig;
 use crate::scheduler::SchedulerKind;
 
@@ -57,11 +59,17 @@ pub struct EngineConfig {
     pub scheduler: SchedulerKind,
     /// Classifier-free guidance scale (SD default 7.5).
     pub guidance_scale: f32,
-    /// Default selective-guidance window (none = full CFG baseline).
-    pub window: WindowSpec,
-    /// What optimized-window iterations execute (DESIGN.md §8): drop
+    /// Default guidance schedule (none = full CFG baseline). Windows
+    /// come from `[engine] window_fraction`/`window_position`; the
+    /// richer kinds from the `[guidance]` section
+    /// (`segments`/`interval`/`cadence`).
+    pub schedule: GuidanceSchedule,
+    /// What optimized-schedule iterations execute (DESIGN.md §8): drop
     /// guidance (the paper) or reuse a cached/extrapolated uncond eps.
     pub guidance_strategy: GuidanceStrategy,
+    /// Online adaptive skip controller applied by default (`[guidance]
+    /// adaptive = true`); supersedes the static schedule.
+    pub adaptive: Option<AdaptiveConfig>,
     /// Whether to run the VAE decode + return images.
     pub decode_images: bool,
     /// Base seed for latent noise streams.
@@ -76,8 +84,9 @@ impl Default for EngineConfig {
             steps: 50,
             scheduler: SchedulerKind::Pndm,
             guidance_scale: 7.5,
-            window: WindowSpec::none(),
+            schedule: GuidanceSchedule::none(),
             guidance_strategy: GuidanceStrategy::CondOnly,
+            adaptive: None,
             decode_images: true,
             seed: 0,
             dual_strategy: DualStrategy::TwoB1,
@@ -90,16 +99,29 @@ impl EngineConfig {
         if self.steps == 0 || self.steps > 1000 {
             return Err(Error::Config(format!("steps {} outside [1, 1000]", self.steps)));
         }
-        self.window.validate()?;
-        SelectiveGuidancePolicy::with_strategy(
-            self.window,
+        SelectiveGuidancePolicy::with_schedule(
+            self.schedule.clone(),
             self.guidance_scale,
             self.guidance_strategy,
         )?;
+        if let Some(a) = &self.adaptive {
+            a.validate()?;
+            // mirror GenerationRequest::validate: the controller
+            // supersedes the static schedule, so both together is a
+            // config conflict, not a silent precedence rule
+            if self.schedule != GuidanceSchedule::none() {
+                return Err(Error::Config(
+                    "guidance adaptive supersedes the static schedule — configure one, \
+                     not both"
+                        .into(),
+                ));
+            }
+        }
         Ok(())
     }
 
-    /// Build from a `[engine]` TOML section (missing keys keep defaults).
+    /// Build from the `[engine]` + `[guidance]` TOML sections (missing
+    /// keys keep defaults).
     pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
         let mut cfg = EngineConfig::default();
         if let Some(v) = doc.get("engine", "steps") {
@@ -115,23 +137,49 @@ impl EngineConfig {
                 v.as_f64().ok_or_else(|| Error::Config("guidance_scale must be number".into()))?
                     as f32;
         }
-        if let Some(v) = doc.get("engine", "window_fraction") {
-            let f = v
-                .as_f64()
-                .ok_or_else(|| Error::Config("window_fraction must be number".into()))?;
-            let pos = doc
-                .get("engine", "window_position")
-                .and_then(|p| p.as_str().map(String::from))
-                .unwrap_or_else(|| "last".into());
-            cfg.window = match pos.as_str() {
-                "last" => WindowSpec::last(f),
-                "first" => WindowSpec::first(f),
-                "middle" => WindowSpec::middle(f),
-                other => {
-                    return Err(Error::Config(format!("unknown window_position {other:?}")))
-                }
-            };
+        // ---- the schedule surface ([engine] window + [guidance]
+        // segments/interval/cadence): type extraction only — mutual
+        // exclusion and dispatch live in GuidanceSchedule::from_parts,
+        // shared with the CLI and wire surfaces
+        let position = match doc.get("engine", "window_position") {
+            Some(p) => Some(WindowPosition::parse(p.as_str().ok_or_else(|| {
+                Error::Config("window_position must be string".into())
+            })?)?),
+            None => None,
+        };
+        // window_position alone still selects a (zero-width) window so a
+        // typo'd combination is validated instead of silently ignored
+        let window = match doc.get("engine", "window_fraction") {
+            Some(v) => {
+                let f = v
+                    .as_f64()
+                    .ok_or_else(|| Error::Config("window_fraction must be number".into()))?;
+                Some((f, position.unwrap_or(WindowPosition::Last)))
+            }
+            None => position.map(|p| (0.0, p)),
+        };
+        let segments = match doc.get("guidance", "segments") {
+            Some(v) => {
+                Some(v.as_str().ok_or_else(|| Error::Config("segments must be string".into()))?)
+            }
+            None => None,
+        };
+        let interval = match doc.get("guidance", "interval") {
+            Some(v) => {
+                Some(v.as_str().ok_or_else(|| Error::Config("interval must be string".into()))?)
+            }
+            None => None,
+        };
+        let cadence = match doc.get("guidance", "cadence") {
+            Some(v) => Some(
+                v.as_usize().ok_or_else(|| Error::Config("cadence must be int >= 1".into()))?,
+            ),
+            None => None,
+        };
+        if let Some(s) = GuidanceSchedule::from_parts(window, segments, interval, cadence)? {
+            cfg.schedule = s;
         }
+        cfg.adaptive = adaptive_from_toml(doc)?;
         if let Some(v) = doc.get("engine", "guidance_strategy") {
             let name = v
                 .as_str()
@@ -164,6 +212,54 @@ impl EngineConfig {
         cfg.validate()?;
         Ok(cfg)
     }
+}
+
+/// Parse the `[guidance]` adaptive-controller keys: `adaptive = true`
+/// enables the controller, the `adaptive_*` knobs refine it. Knobs
+/// without the switch are an operator error, not a silent no-op
+/// (mirroring the `refresh_every` rule).
+fn adaptive_from_toml(doc: &TomlDoc) -> Result<Option<AdaptiveConfig>> {
+    let enabled = match doc.get("guidance", "adaptive") {
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::Config("guidance adaptive must be bool".into()))?,
+        None => false,
+    };
+    let knobs = [
+        "adaptive_threshold",
+        "adaptive_patience",
+        "adaptive_min_dual_fraction",
+        "adaptive_probe_every",
+    ];
+    if !enabled {
+        if let Some(orphan) = knobs.iter().find(|&&k| doc.get("guidance", k).is_some()) {
+            return Err(Error::Config(format!("{orphan} requires adaptive = true")));
+        }
+        return Ok(None);
+    }
+    let mut a = AdaptiveConfig::default();
+    if let Some(v) = doc.get("guidance", "adaptive_threshold") {
+        a.threshold = v
+            .as_f64()
+            .ok_or_else(|| Error::Config("adaptive_threshold must be number".into()))?;
+    }
+    if let Some(v) = doc.get("guidance", "adaptive_patience") {
+        a.patience = v
+            .as_usize()
+            .ok_or_else(|| Error::Config("adaptive_patience must be int".into()))?;
+    }
+    if let Some(v) = doc.get("guidance", "adaptive_min_dual_fraction") {
+        a.min_dual_fraction = v
+            .as_f64()
+            .ok_or_else(|| Error::Config("adaptive_min_dual_fraction must be number".into()))?;
+    }
+    if let Some(v) = doc.get("guidance", "adaptive_probe_every") {
+        a.probe_every = v
+            .as_usize()
+            .ok_or_else(|| Error::Config("adaptive_probe_every must be int".into()))?;
+    }
+    a.validate()?;
+    Ok(Some(a))
 }
 
 /// Server front-end settings.
@@ -280,6 +376,7 @@ impl RunConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::guidance::WindowSpec;
 
     const SAMPLE: &str = r#"
 # sample deployment config
@@ -317,7 +414,7 @@ ewma_alpha = 0.3
         assert_eq!(cfg.artifacts_dir.as_deref(), Some("artifacts/tiny"));
         assert_eq!(cfg.engine.steps, 50);
         assert_eq!(cfg.engine.scheduler, SchedulerKind::Ddim);
-        assert_eq!(cfg.engine.window, WindowSpec::last(0.2));
+        assert_eq!(cfg.engine.schedule, GuidanceSchedule::Window(WindowSpec::last(0.2)));
         assert_eq!(cfg.engine.seed, 42);
         assert_eq!(cfg.server.bind, "0.0.0.0:9000");
         assert_eq!(cfg.server.workers, 2);
@@ -335,7 +432,8 @@ ewma_alpha = 0.3
         let cfg = RunConfig::from_str("").unwrap();
         assert_eq!(cfg.engine.steps, 50);
         assert_eq!(cfg.engine.scheduler, SchedulerKind::Pndm);
-        assert_eq!(cfg.engine.window, WindowSpec::none());
+        assert_eq!(cfg.engine.schedule, GuidanceSchedule::none());
+        assert_eq!(cfg.engine.adaptive, None);
         assert_eq!(cfg.server.max_batch, 4);
         assert!(!cfg.qos.enabled);
         assert_eq!(cfg.qos, QosConfig::default());
@@ -405,6 +503,109 @@ ewma_alpha = 0.3
         .is_err());
         // a cadence without a strategy is an error, not a silent no-op
         assert!(RunConfig::from_str("[engine]\nrefresh_every = 4\n").is_err());
+    }
+
+    #[test]
+    fn guidance_schedule_section() {
+        use crate::guidance::Segment;
+        let cfg = RunConfig::from_str("[guidance]\ninterval = \"0.25-0.75\"\n").unwrap();
+        assert_eq!(cfg.engine.schedule, GuidanceSchedule::Interval { lo: 0.25, hi: 0.75 });
+        let cfg = RunConfig::from_str("[guidance]\ncadence = 4\n").unwrap();
+        assert_eq!(cfg.engine.schedule, GuidanceSchedule::Cadence { every: 4 });
+        let cfg =
+            RunConfig::from_str("[guidance]\nsegments = \"0.0-0.2,!0.4-0.6,0.8-1.0\"\n").unwrap();
+        assert_eq!(
+            cfg.engine.schedule,
+            GuidanceSchedule::Segments(vec![
+                Segment::optimized(0.0, 0.2),
+                Segment::dual(0.4, 0.6),
+                Segment::optimized(0.8, 1.0),
+            ])
+        );
+        // schedules are mutually exclusive — across sections too
+        assert!(RunConfig::from_str("[guidance]\ninterval = \"0.2-0.8\"\ncadence = 4\n").is_err());
+        assert!(RunConfig::from_str(
+            "[engine]\nwindow_fraction = 0.2\n[guidance]\ncadence = 4\n"
+        )
+        .is_err());
+        // invalid values are structured config errors
+        assert!(RunConfig::from_str("[guidance]\ncadence = 0\n").is_err());
+        assert!(RunConfig::from_str("[guidance]\ninterval = \"0.8-0.2\"\n").is_err());
+        assert!(RunConfig::from_str("[guidance]\nsegments = \"nope\"\n").is_err());
+        // window_position alone is validated, not silently dropped
+        assert!(RunConfig::from_str("[engine]\nwindow_position = \"bogus\"\n").is_err());
+        let cfg = RunConfig::from_str("[engine]\nwindow_position = \"first\"\n").unwrap();
+        assert_eq!(cfg.engine.schedule, GuidanceSchedule::Window(WindowSpec::first(0.0)));
+        assert!(RunConfig::from_str(
+            "[engine]\nwindow_position = \"first\"\n[guidance]\ncadence = 4\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn window_position_offset_round_trips_through_config() {
+        use crate::guidance::WindowPosition;
+        let cfg = RunConfig::from_str(
+            "[engine]\nwindow_fraction = 0.25\nwindow_position = \"offset(0.25)\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.engine.schedule,
+            GuidanceSchedule::Window(WindowSpec::at_offset(0.25, 0.25))
+        );
+        // name() output parses back — the round trip the ISSUE requires
+        let name = WindowPosition::Offset(0.25).name();
+        let toml = format!("[engine]\nwindow_fraction = 0.2\nwindow_position = \"{name}\"\n");
+        let cfg = RunConfig::from_str(&toml).unwrap();
+        assert_eq!(
+            cfg.engine.schedule,
+            GuidanceSchedule::Window(WindowSpec::at_offset(0.25, 0.2))
+        );
+        // out-of-range offsets are rejected with a structured error
+        assert!(RunConfig::from_str(
+            "[engine]\nwindow_fraction = 0.2\nwindow_position = \"offset(1.5)\"\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn adaptive_guidance_section() {
+        let cfg = RunConfig::from_str("[guidance]\nadaptive = true\n").unwrap();
+        assert_eq!(cfg.engine.adaptive, Some(AdaptiveConfig::default()));
+        let cfg = RunConfig::from_str(
+            "[guidance]\nadaptive = true\nadaptive_threshold = 0.1\nadaptive_patience = 3\n\
+             adaptive_min_dual_fraction = 0.4\nadaptive_probe_every = 6\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.engine.adaptive,
+            Some(AdaptiveConfig {
+                threshold: 0.1,
+                patience: 3,
+                min_dual_fraction: 0.4,
+                probe_every: 6
+            })
+        );
+        // explicit off
+        let cfg = RunConfig::from_str("[guidance]\nadaptive = false\n").unwrap();
+        assert_eq!(cfg.engine.adaptive, None);
+        // orphan knobs are an operator error, not a silent no-op
+        assert!(RunConfig::from_str("[guidance]\nadaptive_threshold = 0.1\n").is_err());
+        // adaptive + a static schedule is a conflict, not a precedence rule
+        assert!(RunConfig::from_str("[guidance]\nadaptive = true\ncadence = 4\n").is_err());
+        assert!(RunConfig::from_str(
+            "[engine]\nwindow_fraction = 0.2\n[guidance]\nadaptive = true\n"
+        )
+        .is_err());
+        // invalid knob values are rejected
+        assert!(RunConfig::from_str(
+            "[guidance]\nadaptive = true\nadaptive_min_dual_fraction = 1.5\n"
+        )
+        .is_err());
+        assert!(
+            RunConfig::from_str("[guidance]\nadaptive = true\nadaptive_threshold = -1.0\n")
+                .is_err()
+        );
     }
 
     #[test]

@@ -86,18 +86,12 @@ impl ContinuousBatcher {
     }
 
     /// Peak per-iteration slot cost a request will ever need: what
-    /// admission must reserve. 2 for anything with dual steps remaining
-    /// (including reuse refreshes and the adaptive controller, whose
-    /// decisions can't be peeked), 1 for an all-single-pass trajectory.
+    /// admission must reserve — `plan.peak_remaining_cost(0)`. 2 for
+    /// anything with dual steps in its plan (including reuse refreshes
+    /// and the adaptive controller's conservative overlay), 1 for an
+    /// all-single-pass trajectory.
     pub fn admission_cost(req: &GenerationRequest) -> Result<usize> {
-        if req.adaptive.is_some() {
-            return Ok(2);
-        }
-        let policy = req.policy()?;
-        Ok((0..req.steps)
-            .map(|i| policy.decide(i, req.steps).unet_evals())
-            .max()
-            .unwrap_or(0))
+        Ok(req.plan()?.peak_remaining_cost(0))
     }
 
     /// Admit `req` into the cohort if its peak slot cost fits the current
@@ -181,6 +175,12 @@ mod tests {
         let reuse = req(1.0)
             .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 });
         assert_eq!(ContinuousBatcher::admission_cost(&reuse).unwrap(), 2);
+        // generalized schedules price through the same plan IR: a
+        // cadence keeps dual anchors -> 2
+        let cadence = req(0.0).with_schedule(crate::guidance::GuidanceSchedule::Cadence {
+            every: 4,
+        });
+        assert_eq!(ContinuousBatcher::admission_cost(&cadence).unwrap(), 2);
     }
 
     #[test]

@@ -582,21 +582,22 @@ fn worker_loop(
         let reqs: Vec<GenerationRequest> = live.iter().map(|j| j.req.clone()).collect();
         let t_service = Instant::now();
         let result = engine.generate_batch(&reqs);
-        // feed the QoS loop *before* responding so admission sees fresh
-        // service estimates as early as possible; the mean *effective*
-        // single-pass fraction lets the policy normalize the sample back
-        // to a full-CFG baseline (a reuse window sheds less than its
-        // size, so cost depends on strategy + fraction, not placement)
-        if let Some(q) = &qos {
-            let mean_fraction = reqs
-                .iter()
-                .map(|r| r.strategy.effective_fraction(r.window.fraction))
-                .sum::<f64>()
-                / reqs.len() as f64;
-            q.observe_batch(reqs.len(), t_service.elapsed(), mean_fraction);
-        }
+        let service = t_service.elapsed();
         match result {
             Ok(outputs) => {
+                // feed the QoS loop *before* responding so admission
+                // sees fresh estimates as early as possible; the mean
+                // *executed* single-pass fraction lets the policy
+                // normalize the sample back to a full-CFG baseline
+                // (adaptive samples' plans are only known after
+                // execution, so request-side fractions would lie).
+                // Failed batches feed nothing — their timing is not a
+                // service sample.
+                if let Some(q) = &qos {
+                    let mean_fraction = outputs.iter().map(|o| o.executed_shed()).sum::<f64>()
+                        / outputs.len() as f64;
+                    q.observe_batch(outputs.len(), service, mean_fraction);
+                }
                 let mut s = stats.lock().unwrap();
                 for (job, out) in live.into_iter().zip(outputs) {
                     let latency = job.enqueued.elapsed();
@@ -740,10 +741,11 @@ fn continuous_worker_loop(
                     let latency = job.enqueued.elapsed();
                     // feed the estimator this sample's *attributed* service
                     // share (1/cohort of each iteration it rode) at its
-                    // effective shed fraction — the whole-residency wall
+                    // *executed* shed fraction (known exactly post-run,
+                    // adaptive included) — the whole-residency wall
                     // would bill shared iterations N times over
                     if let Some(q) = &qos {
-                        let frac = job.req.strategy.effective_fraction(job.req.window.fraction);
+                        let frac = out.executed_shed();
                         let service =
                             Duration::from_secs_f64(out.breakdown.total_ms().max(0.0) / 1e3);
                         q.observe_batch(1, service, frac);

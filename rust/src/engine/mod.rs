@@ -1,6 +1,8 @@
 //! The denoising engine: the paper's optimized inference loop.
 //!
-//! Per iteration the engine consults the [`SelectiveGuidancePolicy`]:
+//! Every request's per-step guidance decisions are compiled ahead of
+//! time into a [`GuidancePlan`] (DESIGN.md §10); the loop executes the
+//! plan verbatim, one [`GuidanceMode`] per iteration:
 //!
 //! * `Dual`    — two UNet executions (conditional + unconditional) and an
 //!               on-device Eq.-1 combine — classic classifier-free
@@ -38,7 +40,8 @@ use crate::config::{DualStrategy, EngineConfig};
 use crate::error::{Error, Result};
 use crate::guidance::{
     guidance_delta, AdaptiveConfig, AdaptiveController, AdaptiveDecision, GuidanceMode,
-    GuidanceStrategy, ReuseKind, SelectiveGuidancePolicy, WindowSpec,
+    GuidancePlan, GuidanceSchedule, GuidanceStrategy, ReuseKind, SelectiveGuidancePolicy,
+    WindowSpec,
 };
 use crate::image::RgbImage;
 use crate::metrics::StepBreakdown;
@@ -53,15 +56,17 @@ pub struct GenerationRequest {
     pub prompt: String,
     pub steps: usize,
     pub guidance_scale: f32,
-    pub window: WindowSpec,
-    /// What optimized-window iterations execute: drop guidance (the
+    /// Which steps are guided vs optimized — the generalized window
+    /// (contiguous windows, segments, limited intervals, cadences).
+    pub schedule: GuidanceSchedule,
+    /// What optimized-schedule iterations execute: drop guidance (the
     /// paper's default) or reuse a cached/extrapolated uncond eps.
     pub strategy: GuidanceStrategy,
     pub scheduler: SchedulerKind,
     pub seed: u64,
     pub decode: bool,
     /// Online skip controller (paper's future-work variant); supersedes
-    /// the static `window` when set.
+    /// the static `schedule` when set.
     pub adaptive: Option<AdaptiveConfig>,
 }
 
@@ -72,7 +77,7 @@ impl GenerationRequest {
             prompt: prompt.into(),
             steps: cfg.steps,
             guidance_scale: cfg.guidance_scale,
-            window: cfg.window,
+            schedule: cfg.schedule,
             strategy: cfg.guidance_strategy,
             scheduler: cfg.scheduler,
             seed: cfg.seed,
@@ -94,7 +99,14 @@ impl GenerationRequest {
 
     /// Apply a selective-guidance window (the paper's optimization).
     pub fn selective(mut self, w: WindowSpec) -> Self {
-        self.window = w;
+        self.schedule = GuidanceSchedule::Window(w);
+        self
+    }
+
+    /// Apply a generalized guidance schedule (segments / limited
+    /// interval / cadence).
+    pub fn with_schedule(mut self, s: GuidanceSchedule) -> Self {
+        self.schedule = s;
         self
     }
 
@@ -126,7 +138,34 @@ impl GenerationRequest {
     }
 
     pub fn policy(&self) -> Result<SelectiveGuidancePolicy> {
-        SelectiveGuidancePolicy::with_strategy(self.window, self.guidance_scale, self.strategy)
+        SelectiveGuidancePolicy::with_schedule(
+            self.schedule.clone(),
+            self.guidance_scale,
+            self.strategy,
+        )
+    }
+
+    /// Compile this request's guidance plan: the per-step decisions the
+    /// engine executes and every layer audits against. Adaptive requests
+    /// get the conservative all-dual overlay (the controller's online
+    /// decisions are recorded into it as they execute).
+    pub fn plan(&self) -> Result<GuidancePlan> {
+        if self.adaptive.is_some() {
+            // still validate the static triple the request carries
+            self.policy()?;
+            return Ok(GuidancePlan::conservative_dual(self.guidance_scale, self.steps));
+        }
+        GuidancePlan::compile(&self.schedule, self.guidance_scale, self.strategy, self.steps)
+    }
+
+    /// Plan-derived *effective shed*: the fraction of this request's
+    /// steps that run a single UNet pass. This is the derived view the
+    /// QoS feedback loop and the simulator key on (refresh and
+    /// cold-cache steps pay dual cost, so raw schedule fractions would
+    /// lie). 0 for adaptive requests (unpredictable, priced
+    /// conservatively) and invalid requests.
+    pub fn effective_shed(&self) -> f64 {
+        self.plan().map(|p| p.effective_fraction()).unwrap_or(0.0)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -139,6 +178,16 @@ impl GenerationRequest {
         self.policy()?;
         if let Some(a) = &self.adaptive {
             a.validate()?;
+            // the controller supersedes the static schedule entirely, so
+            // carrying both is a conflict to reject loudly, not a field
+            // to discard silently
+            if self.schedule != GuidanceSchedule::none() {
+                return Err(Error::Request(
+                    "adaptive guidance supersedes the static schedule — configure one, \
+                     not both"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -163,6 +212,24 @@ pub struct GenerationOutput {
     /// *executed* request, so QoS actuation (which may rewrite the
     /// strategy at admission) is reflected honestly.
     pub strategy: GuidanceStrategy,
+    /// Run-length summary of the *executed* guidance plan (e.g.
+    /// `"40D 10C"`), from the same IR the eval-count invariant audits —
+    /// echoed on the wire so clients can see exactly what ran.
+    pub plan_summary: String,
+}
+
+impl GenerationOutput {
+    /// *Executed* effective shed: the fraction of steps that actually
+    /// ran a single UNet pass (`evals == 2·steps − single_pass_steps`).
+    /// This is what QoS service feedback keys on — for adaptive samples
+    /// the plan is only known after execution, so the request-side
+    /// [`GenerationRequest::effective_shed`] would under-report.
+    pub fn executed_shed(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        (2 * self.steps - self.unet_evals) as f64 / self.steps as f64
+    }
 }
 
 /// Per-sample history of true unconditional eps evaluations — the state
@@ -212,7 +279,12 @@ impl UncondCache {
 /// lock-step batch, or through a continuously re-composed cohort.
 pub struct SampleState {
     req: GenerationRequest,
-    policy: SelectiveGuidancePolicy,
+    /// The compiled per-step guidance decisions. For adaptive requests
+    /// this starts as the conservative all-dual overlay and is rewritten
+    /// step by step with what the controller actually ran, so the
+    /// finish-time invariant `unet_evals == plan.total_unet_evals()`
+    /// holds for every sample.
+    plan: GuidancePlan,
     controller: Option<AdaptiveController>,
     scheduler: Box<dyn Scheduler>,
     rng: Rng,
@@ -255,36 +327,34 @@ impl SampleState {
         self.unet_evals
     }
 
+    /// The compiled guidance plan this sample executes (for adaptive
+    /// samples: the conservative overlay, rewritten as steps run).
+    pub fn plan(&self) -> &GuidancePlan {
+        &self.plan
+    }
+
     /// UNet-slot cost of the *next* iteration: 2 for a dual step, 1 for
-    /// reuse/cond-only/unguided, 0 when done. Conservatively 2 for
-    /// adaptive requests (the controller is stateful; peeking would
-    /// perturb it).
+    /// reuse/cond-only/unguided, 0 when done. Adaptive samples read the
+    /// conservative overlay (2 until executed — the controller is
+    /// stateful; peeking would perturb it).
     pub fn next_cost(&self) -> usize {
-        if self.is_done() {
-            return 0;
-        }
-        if self.controller.is_some() {
-            return 2;
-        }
-        self.policy.decide(self.step, self.steps).unet_evals()
+        self.plan.next_cost(self.step)
+    }
+
+    /// Summed UNet-slot cost of the remaining trajectory, straight from
+    /// the plan IR.
+    pub fn remaining_cost(&self) -> usize {
+        self.plan.remaining_cost(self.step)
     }
 
     /// Largest per-iteration UNet-slot cost any *remaining* step can
-    /// incur. This is the continuous batcher's admission currency: a
-    /// cohort whose peak costs sum within the slot budget can never
-    /// overshoot it, and a sample that has entered its selective-guidance
-    /// window drops to 1 — freeing admission headroom immediately.
+    /// incur — `plan.peak_remaining_cost(step)`. This is the continuous
+    /// batcher's admission currency: a cohort whose peak costs sum
+    /// within the slot budget can never overshoot it, and a sample that
+    /// has entered its selective-guidance window drops to 1 — freeing
+    /// admission headroom immediately.
     pub fn peak_remaining_cost(&self) -> usize {
-        if self.is_done() {
-            return 0;
-        }
-        if self.controller.is_some() {
-            return 2;
-        }
-        (self.step..self.steps)
-            .map(|i| self.policy.decide(i, self.steps).unet_evals())
-            .max()
-            .unwrap_or(0)
+        self.plan.peak_remaining_cost(self.step)
     }
 }
 
@@ -328,12 +398,12 @@ impl Engine {
             prompt: prompt.to_string(),
             steps: self.config.steps,
             guidance_scale: self.config.guidance_scale,
-            window: self.config.window,
+            schedule: self.config.schedule.clone(),
             strategy: self.config.guidance_strategy,
             scheduler: self.config.scheduler,
             seed: self.config.seed,
             decode: self.config.decode_images,
-            adaptive: None,
+            adaptive: self.config.adaptive,
         }
     }
 
@@ -383,7 +453,7 @@ impl Engine {
         req.validate()?;
         let started = Instant::now();
         let m = self.stack.model();
-        let policy = req.policy()?;
+        let plan = req.plan()?;
         let cond_ctx = self.stack.encode_text(&self.tokenizer.encode(&req.prompt))?;
         let scheduler = req.scheduler.build(NoiseSchedule::default(), req.steps);
         let mut rng = Rng::for_stream(req.seed, 0);
@@ -392,15 +462,14 @@ impl Engine {
         for v in latent.iter_mut() {
             *v *= sigma;
         }
-        // per-sample uncond-eps recording is gated so the default
-        // (drop-guidance) path never clones eps tensors it won't read
-        let wants_reuse = req.adaptive.is_none()
-            && matches!(policy.strategy(), GuidanceStrategy::Reuse { .. });
+        // per-sample uncond-eps recording is gated so plans without any
+        // reuse step never clone eps tensors they won't read
+        let wants_reuse = plan.has_reuse();
         let mut breakdown = StepBreakdown::default();
         breakdown.overhead_ms += started.elapsed().as_secs_f64() * 1e3;
         Ok(SampleState {
             req: req.clone(),
-            policy,
+            plan,
             controller: req.adaptive.map(|a| a.controller()),
             scheduler,
             rng,
@@ -436,17 +505,25 @@ impl Engine {
         let mut bd = StepBreakdown::default();
         let mut slots_used = 0usize;
 
-        // 1) per-sample guidance decision (decide exactly once per
-        // iteration — the adaptive controller is stateful)
+        // 1) per-sample guidance decision: static samples execute their
+        // compiled plan verbatim; adaptive samples ask the (stateful)
+        // controller exactly once and record the executed mode back into
+        // the plan overlay, keeping the IR the audit trail for both.
         let mut modes: Vec<GuidanceMode> = vec![GuidanceMode::Unguided; n];
         for &s in &active {
             let st = &mut states[s];
             modes[s] = match st.controller.as_mut() {
-                Some(ctrl) => match ctrl.decide(st.step, st.steps) {
-                    AdaptiveDecision::Dual => GuidanceMode::Dual { scale: st.req.guidance_scale },
-                    AdaptiveDecision::CondOnly => GuidanceMode::CondOnly,
-                },
-                None => st.policy.decide(st.step, st.steps),
+                Some(ctrl) => {
+                    let mode = match ctrl.decide(st.step, st.steps) {
+                        AdaptiveDecision::Dual => {
+                            GuidanceMode::Dual { scale: st.req.guidance_scale }
+                        }
+                        AdaptiveDecision::CondOnly => GuidanceMode::CondOnly,
+                    };
+                    st.plan.record_executed(st.step, mode);
+                    mode
+                }
+                None => st.plan.mode(st.step),
             };
         }
         let dual: Vec<usize> = active
@@ -668,10 +745,11 @@ impl Engine {
     /// Package a completed [`SampleState`] into a [`GenerationOutput`]
     /// (decode included when the request asked for it).
     ///
-    /// Hard-asserts the executed evaluation count against the policy's
-    /// analytic cost model for static-policy samples — the contract QoS
-    /// feasibility and the benches are built on — and that the trajectory
-    /// actually ran to completion.
+    /// Hard-asserts the single system-wide cost invariant — executed
+    /// UNet evals == `plan.total_unet_evals()` — for *every* sample
+    /// (static plans are compiled ahead of time; adaptive samples audit
+    /// against their executed overlay), and that the trajectory actually
+    /// ran to completion.
     pub fn finish(&self, mut state: SampleState) -> Result<GenerationOutput> {
         assert!(
             state.is_done(),
@@ -679,13 +757,11 @@ impl Engine {
             state.step,
             state.steps
         );
-        if state.controller.is_none() {
-            assert_eq!(
-                state.unet_evals,
-                state.policy.total_unet_evals(state.steps),
-                "executed evals diverge from the policy cost model"
-            );
-        }
+        assert_eq!(
+            state.unet_evals,
+            state.plan.total_unet_evals(),
+            "executed evals diverge from the guidance plan"
+        );
         let m = self.stack.model();
         let image = if state.req.decode {
             let t0 = Instant::now();
@@ -704,6 +780,7 @@ impl Engine {
             unet_evals: state.unet_evals,
             steps: state.steps,
             strategy: state.req.strategy,
+            plan_summary: state.plan.summary(),
         })
     }
 
@@ -757,7 +834,7 @@ mod tests {
             .decode(false);
         assert_eq!(r.steps, 25);
         assert_eq!(r.guidance_scale, 9.0);
-        assert_eq!(r.window, WindowSpec::last(0.3));
+        assert_eq!(r.schedule, GuidanceSchedule::Window(WindowSpec::last(0.3)));
         assert_eq!(
             r.strategy,
             GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 }
@@ -777,6 +854,17 @@ mod tests {
             .validate()
             .is_err());
         assert!(GenerationRequest::new("x").guidance_scale(-2.0).validate().is_err());
+        // adaptive supersedes the static schedule: both together is a
+        // loud conflict, never a silent precedence rule
+        assert!(GenerationRequest::new("x")
+            .with_schedule(GuidanceSchedule::Cadence { every: 4 })
+            .adaptive(AdaptiveConfig::default())
+            .validate()
+            .is_err());
+        assert!(GenerationRequest::new("x")
+            .adaptive(AdaptiveConfig::default())
+            .validate()
+            .is_ok());
     }
 
     #[test]
@@ -784,9 +872,33 @@ mod tests {
         let r = GenerationRequest::new("prompt");
         assert_eq!(r.steps, 50); // "Denoising iterations were fixed at 50"
         assert_eq!(r.guidance_scale, 7.5);
-        assert_eq!(r.window, WindowSpec::none());
+        assert_eq!(r.schedule, GuidanceSchedule::none());
         // the paper's optimized iteration drops guidance outright
         assert_eq!(r.strategy, GuidanceStrategy::CondOnly);
+    }
+
+    #[test]
+    fn schedule_requests_run_end_to_end() {
+        // a cadence schedule through the real engine: evals must equal
+        // the compiled plan's total (finish hard-asserts the invariant)
+        let e = Engine::new(
+            Arc::new(crate::runtime::ModelStack::synthetic()),
+            EngineConfig::default(),
+        );
+        let req = GenerationRequest::new("a cat")
+            .steps(9)
+            .scheduler(SchedulerKind::Ddim)
+            .with_schedule(GuidanceSchedule::Cadence { every: 3 })
+            .decode(false);
+        let plan = req.plan().unwrap();
+        // dual at steps 0, 3, 6 -> 3 dual + 6 single = 12 evals
+        assert_eq!(plan.total_unet_evals(), 12);
+        let out = e.generate(&req).unwrap();
+        assert_eq!(out.unet_evals, 12);
+        assert_eq!(out.plan_summary, "1D 2C 1D 2C 1D 2C");
+        assert!((req.effective_shed() - 6.0 / 9.0).abs() < 1e-12);
+        // executed shed (what QoS feedback keys on) agrees with the plan
+        assert!((out.executed_shed() - 6.0 / 9.0).abs() < 1e-12);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! benches validate measured savings against this model; EXPERIMENTS.md
 //! reports both.
 
+use super::plan::GuidancePlan;
 use super::policy::SelectiveGuidancePolicy;
 
 /// Per-component cost estimates for one image generation.
@@ -27,10 +28,17 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// Predicted end-to-end seconds for a compiled [`GuidancePlan`] —
+    /// the plan-IR view every other prediction routes through.
+    pub fn predict_plan(&self, plan: &GuidancePlan) -> f64 {
+        plan.total_unet_evals() as f64 * self.unet_eval_s
+            + plan.len() as f64 * self.per_step_overhead_s
+            + self.fixed_s
+    }
+
     /// Predicted end-to-end seconds for an `n`-step trajectory.
     pub fn predict(&self, policy: &SelectiveGuidancePolicy, n: usize) -> f64 {
-        let evals = policy.total_unet_evals(n) as f64;
-        evals * self.unet_eval_s + n as f64 * self.per_step_overhead_s + self.fixed_s
+        self.predict_plan(&policy.plan(n))
     }
 
     /// Predicted fractional saving vs the dual-pass baseline.
@@ -144,6 +152,23 @@ mod tests {
         // differ by at most one refresh step)
         let ideal = CostModel::ideal_saving_for(&hold.strategy(), 0.4);
         assert!((s_hold - ideal).abs() < 0.02, "model {s_hold} vs ideal {ideal}");
+    }
+
+    #[test]
+    fn predict_routes_through_the_plan() {
+        let m = CostModel { unet_eval_s: 0.1, per_step_overhead_s: 0.01, fixed_s: 0.5 };
+        let p = policy(0.4);
+        assert_eq!(m.predict(&p, 50), m.predict_plan(&p.plan(50)));
+        // a richer schedule prices through the same IR
+        let q = SelectiveGuidancePolicy::with_schedule(
+            crate::guidance::GuidanceSchedule::Cadence { every: 2 },
+            7.5,
+            crate::guidance::GuidanceStrategy::CondOnly,
+        )
+        .unwrap();
+        // 50 steps, dual every 2nd: 25 dual + 25 single = 75 evals
+        assert_eq!(q.plan(50).total_unet_evals(), 75);
+        assert!((m.predict_plan(&q.plan(50)) - (75.0 * 0.1 + 50.0 * 0.01 + 0.5)).abs() < 1e-12);
     }
 
     #[test]

@@ -10,8 +10,12 @@
 //!
 //! This module turns that paper-text into types:
 //! * [`WindowSpec`] — which fraction of the loop is optimized, and where;
-//! * [`SelectiveGuidancePolicy`] — the per-iteration decision object the
-//!   engine consults;
+//! * [`GuidanceSchedule`] — the generalized schedule grammar (windows,
+//!   multi-segment schedules, limited-interval guidance, cadence);
+//! * [`GuidancePlan`] — the ahead-of-time compiled per-step plan IR every
+//!   layer executes and audits against (DESIGN.md §10);
+//! * [`SelectiveGuidancePolicy`] — the validated (schedule, scale,
+//!   strategy) triple that compiles into plans;
 //! * [`GuidanceMode`] — what the engine must execute this iteration;
 //! * [`GuidanceStrategy`] — what optimized iterations do instead of the
 //!   second pass: drop guidance (the paper), or keep applying Eq. 1 with
@@ -23,6 +27,7 @@
 mod adaptive;
 mod cost;
 mod gs_tuning;
+mod plan;
 mod policy;
 mod strategy;
 mod window;
@@ -30,6 +35,7 @@ mod window;
 pub use adaptive::{guidance_delta, AdaptiveController, AdaptiveDecision};
 pub use cost::CostModel;
 pub use gs_tuning::{retuned_scale, GsTuner};
+pub use plan::{GuidancePlan, GuidanceSchedule, Segment, SegmentMode, StepPlan};
 pub use policy::{GuidanceMode, SelectiveGuidancePolicy};
 pub use strategy::{GuidanceStrategy, ReuseKind};
 pub use window::{WindowPosition, WindowSpec};

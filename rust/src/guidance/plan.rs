@@ -1,0 +1,884 @@
+//! The guidance-plan IR: every per-step guidance decision of a
+//! trajectory, compiled ahead of time into one first-class object.
+//!
+//! Before this module, "which denoising iterations pay for the
+//! unconditional pass" was re-derived step-by-step in five independent
+//! places (engine, both coordinators, QoS actuator, QoS simulator), and
+//! the window algebra could only express one contiguous window. The plan
+//! IR collapses that:
+//!
+//! * [`GuidanceSchedule`] — the *grammar* of guided/optimized step sets.
+//!   It subsumes the paper's contiguous [`WindowSpec`] and adds
+//!   multi-segment schedules, **limited-interval guidance** (guide only
+//!   inside `[lo, hi]` — Kynkäänniemi et al., "Applying Guidance in a
+//!   Limited Interval") and **cadence/compressed guidance** (guide every
+//!   k-th step, reuse in between — Dinh et al., "Compress Guidance").
+//! * [`GuidancePlan`] — the compiled `Vec<StepPlan>`: one
+//!   [`GuidanceMode`] per step, with cost queries (`total_unet_evals`,
+//!   `remaining_cost`, `peak_remaining_cost`) and derived views
+//!   (`effective_fraction`, `summary`). The engine executes the plan;
+//!   the continuous batcher admits against it; QoS rewrites it; the
+//!   single system-wide invariant is
+//!   `executed UNet evals == plan.total_unet_evals()`.
+//!
+//! Compilation is **pure and deterministic**: the same
+//! `(schedule, scale, strategy, steps)` always yields the same plan, so
+//! a sample's trajectory is a function of its own request regardless of
+//! cohort composition — the invariant the equivalence suites assert.
+
+use super::policy::GuidanceMode;
+use super::strategy::GuidanceStrategy;
+use super::window::{WindowPosition, WindowSpec};
+use crate::error::{Error, Result};
+
+/// What a schedule segment forces its steps to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentMode {
+    /// Full CFG (two UNet passes).
+    Dual,
+    /// Hand the steps to the request's optimized strategy
+    /// (cond-only / reuse).
+    Optimized,
+}
+
+/// One fraction range `[lo, hi)` of the loop with a forced mode.
+/// Later segments override earlier ones where they overlap; steps no
+/// segment covers run Dual.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub lo: f64,
+    pub hi: f64,
+    pub mode: SegmentMode,
+}
+
+impl Segment {
+    /// An optimized segment over `[lo, hi)`.
+    pub fn optimized(lo: f64, hi: f64) -> Segment {
+        Segment { lo, hi, mode: SegmentMode::Optimized }
+    }
+
+    /// A forced-dual segment over `[lo, hi)`.
+    pub fn dual(lo: f64, hi: f64) -> Segment {
+        Segment { lo, hi, mode: SegmentMode::Dual }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !self.lo.is_finite() || !self.hi.is_finite() {
+            return Err(Error::Config("segment bounds must be finite".into()));
+        }
+        if !(0.0..=1.0).contains(&self.lo) || !(0.0..=1.0).contains(&self.hi) || self.lo > self.hi
+        {
+            return Err(Error::Config(format!(
+                "segment [{}, {}) outside 0 <= lo <= hi <= 1",
+                self.lo, self.hi
+            )));
+        }
+        Ok(())
+    }
+
+    /// Half-open step range for an `n`-step loop (round-to-nearest on
+    /// both bounds, so fraction bounds built from integer step indices
+    /// resolve back to exactly those indices).
+    fn idx_range(&self, n: usize) -> (usize, usize) {
+        let lo = ((self.lo * n as f64).round() as usize).min(n);
+        let hi = ((self.hi * n as f64).round() as usize).min(n);
+        (lo, hi.max(lo))
+    }
+}
+
+/// Which steps of the loop are *optimized* (single-pass per the
+/// strategy) vs *guided* (full dual CFG) — the generalized window.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GuidanceSchedule {
+    /// One contiguous optimized window — the paper's schedule.
+    Window(WindowSpec),
+    /// Explicit segment list; uncovered steps run Dual, later segments
+    /// win on overlap.
+    Segments(Vec<Segment>),
+    /// Limited-interval guidance: Dual only inside `[lo, hi)` (fractions
+    /// of the loop), optimized everywhere else.
+    Interval { lo: f64, hi: f64 },
+    /// Compressed guidance: Dual on every `every`-th step (step 0, k,
+    /// 2k, ...), optimized in between. `every == 1` is full CFG.
+    Cadence { every: usize },
+}
+
+impl Default for GuidanceSchedule {
+    fn default() -> Self {
+        GuidanceSchedule::none()
+    }
+}
+
+impl GuidanceSchedule {
+    /// No optimization — the full-CFG baseline.
+    pub fn none() -> GuidanceSchedule {
+        GuidanceSchedule::Window(WindowSpec::none())
+    }
+
+    /// The paper's contiguous window.
+    pub fn window(w: WindowSpec) -> GuidanceSchedule {
+        GuidanceSchedule::Window(w)
+    }
+
+    /// Guide only inside `[lo, hi)` of the loop.
+    pub fn interval(lo: f64, hi: f64) -> GuidanceSchedule {
+        GuidanceSchedule::Interval { lo, hi }
+    }
+
+    /// Guide every `every`-th step.
+    pub fn cadence(every: usize) -> GuidanceSchedule {
+        GuidanceSchedule::Cadence { every }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            GuidanceSchedule::Window(w) => w.validate(),
+            GuidanceSchedule::Segments(segs) => {
+                for s in segs {
+                    s.validate()?;
+                }
+                Ok(())
+            }
+            GuidanceSchedule::Interval { lo, hi } => {
+                Segment { lo: *lo, hi: *hi, mode: SegmentMode::Dual }.validate()
+            }
+            GuidanceSchedule::Cadence { every } => {
+                if *every == 0 {
+                    return Err(Error::Config(
+                        "cadence must be >= 1 (1 = guide every step)".into(),
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Per-step optimized mask for an `n`-step loop: `true` = the step
+    /// belongs to the optimized set (single-pass per the strategy).
+    pub fn optimized_mask(&self, n: usize) -> Vec<bool> {
+        match self {
+            GuidanceSchedule::Window(w) => (0..n).map(|i| w.contains(i, n)).collect(),
+            GuidanceSchedule::Segments(segs) => {
+                let mut mask = vec![false; n];
+                for s in segs {
+                    let (lo, hi) = s.idx_range(n);
+                    for m in mask[lo..hi].iter_mut() {
+                        *m = s.mode == SegmentMode::Optimized;
+                    }
+                }
+                mask
+            }
+            GuidanceSchedule::Interval { lo, hi } => {
+                let seg = Segment { lo: *lo, hi: *hi, mode: SegmentMode::Dual };
+                let (lo, hi) = seg.idx_range(n);
+                (0..n).map(|i| !(lo..hi).contains(&i)).collect()
+            }
+            GuidanceSchedule::Cadence { every } => (0..n).map(|i| i % every != 0).collect(),
+        }
+    }
+
+    /// Optimized steps for an `n`-step loop.
+    pub fn optimized_count(&self, n: usize) -> usize {
+        self.optimized_mask(n).iter().filter(|&&m| m).count()
+    }
+
+    /// May the QoS actuator replace this schedule with a wider
+    /// `Last`-placed window? Only the default (no window) and explicit
+    /// `Last` windows are movable — every other schedule is a deliberate
+    /// experiment the policy must not silently rewrite.
+    pub fn widenable(&self) -> bool {
+        match self {
+            GuidanceSchedule::Window(w) => {
+                w.fraction == 0.0 || matches!(w.position, WindowPosition::Last)
+            }
+            _ => false,
+        }
+    }
+
+    /// The `Last`-window fraction when this schedule is one (for stats).
+    pub fn last_fraction(&self) -> f64 {
+        match self {
+            GuidanceSchedule::Window(w) if matches!(w.position, WindowPosition::Last) => {
+                w.fraction
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Build a schedule from the four optional surface fields — the one
+    /// constructor the TOML, CLI and wire surfaces all share, so the
+    /// mutual-exclusion rule and the per-kind dispatch cannot drift
+    /// between them. `Ok(None)` means no schedule was configured (keep
+    /// the surface's default).
+    pub fn from_parts(
+        window: Option<(f64, WindowPosition)>,
+        segments: Option<&str>,
+        interval: Option<&str>,
+        cadence: Option<usize>,
+    ) -> Result<Option<GuidanceSchedule>> {
+        let picked = [
+            window.is_some(),
+            segments.is_some(),
+            interval.is_some(),
+            cadence.is_some(),
+        ]
+        .iter()
+        .filter(|&&p| p)
+        .count();
+        if picked > 1 {
+            return Err(Error::Config(
+                "window, segments, interval and cadence are mutually exclusive — \
+                 configure exactly one schedule"
+                    .into(),
+            ));
+        }
+        let sched = if let Some((fraction, position)) = window {
+            GuidanceSchedule::Window(WindowSpec { fraction, position })
+        } else if let Some(s) = segments {
+            Self::parse_segments(s)?
+        } else if let Some(s) = interval {
+            Self::parse_interval(s)?
+        } else if let Some(every) = cadence {
+            GuidanceSchedule::Cadence { every }
+        } else {
+            return Ok(None);
+        };
+        sched.validate()?;
+        Ok(Some(sched))
+    }
+
+    /// Parse `"lo-hi"` as a guided interval (e.g. `"0.25-0.75"`).
+    pub fn parse_interval(s: &str) -> Result<GuidanceSchedule> {
+        let (lo, hi) = s
+            .split_once('-')
+            .ok_or_else(|| Error::Config(format!("interval {s:?} must be \"lo-hi\"")))?;
+        let lo: f64 = lo
+            .trim()
+            .parse()
+            .map_err(|_| Error::Config(format!("interval {s:?}: bad lower bound")))?;
+        let hi: f64 = hi
+            .trim()
+            .parse()
+            .map_err(|_| Error::Config(format!("interval {s:?}: bad upper bound")))?;
+        let sched = GuidanceSchedule::Interval { lo, hi };
+        sched.validate()?;
+        Ok(sched)
+    }
+
+    /// Parse a comma-separated segment list: each item is `"lo-hi"`
+    /// (optimized) or `"!lo-hi"` (forced dual), applied in order, e.g.
+    /// `"0.0-0.2,0.8-1.0"` or `"0.0-1.0,!0.4-0.6"`.
+    pub fn parse_segments(s: &str) -> Result<GuidanceSchedule> {
+        let mut segs = Vec::new();
+        for item in s.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                return Err(Error::Config(format!("segments {s:?}: empty item")));
+            }
+            let (mode, body) = match item.strip_prefix('!') {
+                Some(rest) => (SegmentMode::Dual, rest),
+                None => (SegmentMode::Optimized, item),
+            };
+            let GuidanceSchedule::Interval { lo, hi } = Self::parse_interval(body)? else {
+                unreachable!()
+            };
+            segs.push(Segment { lo, hi, mode });
+        }
+        if segs.is_empty() {
+            return Err(Error::Config("segments list is empty".into()));
+        }
+        let sched = GuidanceSchedule::Segments(segs);
+        sched.validate()?;
+        Ok(sched)
+    }
+
+    /// Human-readable label for bench tables and logs.
+    pub fn label(&self) -> String {
+        match self {
+            GuidanceSchedule::Window(w) => w.label(),
+            GuidanceSchedule::Segments(segs) => {
+                let items: Vec<String> = segs
+                    .iter()
+                    .map(|s| {
+                        let bang = if s.mode == SegmentMode::Dual { "!" } else { "" };
+                        format!("{bang}{}-{}", s.lo, s.hi)
+                    })
+                    .collect();
+                format!("segments {}", items.join(","))
+            }
+            GuidanceSchedule::Interval { lo, hi } => format!("interval {lo}-{hi}"),
+            GuidanceSchedule::Cadence { every } => format!("cadence /{every}"),
+        }
+    }
+}
+
+/// One denoising step's compiled decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepPlan {
+    /// What the engine executes at this step (carries scale + reuse
+    /// kind where applicable).
+    pub mode: GuidanceMode,
+}
+
+impl StepPlan {
+    /// UNet-slot cost of this step (2 for dual, 1 otherwise).
+    pub fn cost(&self) -> usize {
+        self.mode.unet_evals()
+    }
+}
+
+/// The compiled per-step guidance decisions of one trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuidancePlan {
+    steps: Vec<StepPlan>,
+}
+
+impl GuidancePlan {
+    /// Compile a schedule into a plan for an `n`-step loop.
+    ///
+    /// The walk owns the reuse semantics previously buried in the
+    /// policy/strategy pair, generalized to arbitrary optimized sets:
+    /// a reuse step with no prior dual anchor is forced Dual (cold
+    /// cache), and after `refresh_every` consecutive reuse steps one
+    /// true dual step re-anchors the cache. Any dual step — scheduled
+    /// or forced — resets the cadence. `scale == 1` collapses Eq. 1 to
+    /// the conditional term, so the whole plan is `Unguided`.
+    pub fn compile(
+        schedule: &GuidanceSchedule,
+        scale: f32,
+        strategy: GuidanceStrategy,
+        n: usize,
+    ) -> Result<GuidancePlan> {
+        schedule.validate()?;
+        if !scale.is_finite() || scale < 0.0 {
+            return Err(Error::Config(format!(
+                "guidance scale {scale} must be finite and >= 0"
+            )));
+        }
+        if (scale - 1.0).abs() < 1e-6 {
+            return Ok(GuidancePlan {
+                steps: vec![StepPlan { mode: GuidanceMode::Unguided }; n],
+            });
+        }
+        let mask = schedule.optimized_mask(n);
+        let mut steps = Vec::with_capacity(n);
+        let mut have_anchor = false;
+        let mut consecutive = 0usize;
+        for &optimized in &mask {
+            let mode = if !optimized {
+                have_anchor = true;
+                consecutive = 0;
+                GuidanceMode::Dual { scale }
+            } else {
+                match strategy {
+                    GuidanceStrategy::CondOnly => GuidanceMode::CondOnly,
+                    GuidanceStrategy::Reuse { kind, refresh_every } => {
+                        if !have_anchor || (refresh_every > 0 && consecutive == refresh_every) {
+                            have_anchor = true;
+                            consecutive = 0;
+                            GuidanceMode::Dual { scale }
+                        } else {
+                            consecutive += 1;
+                            GuidanceMode::Reuse { scale, kind }
+                        }
+                    }
+                }
+            };
+            steps.push(StepPlan { mode });
+        }
+        Ok(GuidancePlan { steps })
+    }
+
+    /// The conservative all-dual plan used as the *online overlay* for
+    /// adaptive requests: the controller's decisions cannot be peeked,
+    /// so admission reserves dual cost for every remaining step, and
+    /// [`GuidancePlan::record_executed`] rewrites each step with what
+    /// actually ran — keeping the executed plan auditable against the
+    /// same `total_unet_evals` invariant as static plans.
+    pub fn conservative_dual(scale: f32, n: usize) -> GuidancePlan {
+        GuidancePlan {
+            steps: vec![StepPlan { mode: GuidanceMode::Dual { scale } }; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// The compiled per-step entries.
+    pub fn steps(&self) -> &[StepPlan] {
+        &self.steps
+    }
+
+    /// Mode of step `i`.
+    pub fn mode(&self, i: usize) -> GuidanceMode {
+        self.steps[i].mode
+    }
+
+    /// Overwrite step `i` with the mode that actually executed (the
+    /// adaptive controller's online overlay).
+    pub fn record_executed(&mut self, i: usize, mode: GuidanceMode) {
+        self.steps[i] = StepPlan { mode };
+    }
+
+    /// Total UNet evaluations of the whole plan — the single invariant
+    /// every layer audits executed work against.
+    pub fn total_unet_evals(&self) -> usize {
+        self.steps.iter().map(|s| s.cost()).sum()
+    }
+
+    /// UNet-slot cost of step `i` (0 past the end).
+    pub fn next_cost(&self, i: usize) -> usize {
+        self.steps.get(i).map(|s| s.cost()).unwrap_or(0)
+    }
+
+    /// Summed UNet-slot cost of steps `from..` — the trajectory's
+    /// remaining work.
+    pub fn remaining_cost(&self, from: usize) -> usize {
+        self.steps.iter().skip(from).map(|s| s.cost()).sum()
+    }
+
+    /// Largest per-step cost any step `from..` can incur — the
+    /// continuous batcher's admission currency: a cohort whose peak
+    /// costs sum within the slot budget can never overshoot it.
+    pub fn peak_remaining_cost(&self, from: usize) -> usize {
+        self.steps.iter().skip(from).map(|s| s.cost()).max().unwrap_or(0)
+    }
+
+    /// Steps that run a single UNet pass.
+    pub fn single_pass_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.cost() == 1).count()
+    }
+
+    /// Fraction of the loop that runs single-pass — the plan-derived
+    /// *effective shed* the QoS feedback loop keys on (refresh and
+    /// cold-cache steps pay dual cost, so this is what the analytic
+    /// `GuidanceStrategy::effective_fraction` only approximates).
+    pub fn effective_fraction(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.single_pass_steps() as f64 / self.steps.len() as f64
+    }
+
+    /// Does any step run guidance reuse (the engine's cue to record the
+    /// uncond-eps cache on dual steps)?
+    pub fn has_reuse(&self) -> bool {
+        self.steps
+            .iter()
+            .any(|s| matches!(s.mode, GuidanceMode::Reuse { .. }))
+    }
+
+    /// Compact run-length summary of the mode sequence, e.g.
+    /// `"12D 4R 1D 7C"` (D dual, C cond-only, R reuse, U unguided) —
+    /// echoed on the wire so clients can audit the executed plan.
+    pub fn summary(&self) -> String {
+        let letter = |m: &GuidanceMode| match m {
+            GuidanceMode::Dual { .. } => 'D',
+            GuidanceMode::CondOnly => 'C',
+            GuidanceMode::Reuse { .. } => 'R',
+            GuidanceMode::Unguided => 'U',
+        };
+        let mut out = String::new();
+        let mut run: Option<(char, usize)> = None;
+        for s in &self.steps {
+            let c = letter(&s.mode);
+            match run {
+                Some((rc, count)) if rc == c => run = Some((rc, count + 1)),
+                Some((rc, count)) => {
+                    out.push_str(&format!("{count}{rc} "));
+                    run = Some((c, 1));
+                }
+                None => run = Some((c, 1)),
+            }
+        }
+        if let Some((rc, count)) = run {
+            out.push_str(&format!("{count}{rc}"));
+        }
+        if out.is_empty() {
+            "empty".into()
+        } else {
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::guidance::ReuseKind;
+    use crate::testutil::prop::forall;
+
+    fn dual(m: GuidanceMode) -> bool {
+        matches!(m, GuidanceMode::Dual { .. })
+    }
+
+    /// The legacy per-step walk (window + strategy.in_window_mode) the
+    /// plan compiler must reproduce exactly for `Window` schedules.
+    fn legacy_decide(
+        w: &WindowSpec,
+        strategy: GuidanceStrategy,
+        scale: f32,
+        i: usize,
+        n: usize,
+    ) -> GuidanceMode {
+        if (scale - 1.0).abs() < 1e-6 {
+            return GuidanceMode::Unguided;
+        }
+        if w.contains(i, n) {
+            let (start, _) = w.range(n);
+            strategy.in_window_mode(i - start, start, scale)
+        } else {
+            GuidanceMode::Dual { scale }
+        }
+    }
+
+    #[test]
+    fn window_plans_match_legacy_walk() {
+        forall("plan == legacy window walk", 300, |g| {
+            let n = g.usize_in(1, 120);
+            let f = g.f64_in(0.0, 1.0);
+            let w = match g.usize_in(0, 3) {
+                0 => WindowSpec::last(f),
+                1 => WindowSpec::first(f),
+                2 => WindowSpec::middle(f),
+                _ => WindowSpec::at_offset(g.f64_in(0.0, 1.0), f),
+            };
+            let strategy = match g.usize_in(0, 2) {
+                0 => GuidanceStrategy::CondOnly,
+                1 => GuidanceStrategy::Reuse {
+                    kind: ReuseKind::Hold,
+                    refresh_every: g.usize_in(0, 6),
+                },
+                _ => GuidanceStrategy::Reuse {
+                    kind: ReuseKind::Extrapolate,
+                    refresh_every: g.usize_in(0, 6),
+                },
+            };
+            let scale = if g.bool() { g.f32_in(1.5, 12.0) } else { 1.0 };
+            let plan =
+                GuidancePlan::compile(&GuidanceSchedule::Window(w), scale, strategy, n).unwrap();
+            assert_eq!(plan.len(), n);
+            for i in 0..n {
+                assert_eq!(
+                    plan.mode(i),
+                    legacy_decide(&w, strategy, scale, i, n),
+                    "step {i}/{n} of {w:?} {strategy:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let sched = GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 };
+        let s = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 3 };
+        let a = GuidancePlan::compile(&sched, 7.5, s, 50).unwrap();
+        let b = GuidancePlan::compile(&sched, 7.5, s, 50).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cadence_guides_every_kth_step() {
+        let plan = GuidancePlan::compile(
+            &GuidanceSchedule::Cadence { every: 4 },
+            7.5,
+            GuidanceStrategy::CondOnly,
+            10,
+        )
+        .unwrap();
+        for i in 0..10 {
+            assert_eq!(dual(plan.mode(i)), i % 4 == 0, "step {i}");
+        }
+        // 3 dual (0, 4, 8) + 7 single
+        assert_eq!(plan.total_unet_evals(), 13);
+        // cadence 1 == full CFG
+        let full = GuidancePlan::compile(
+            &GuidanceSchedule::Cadence { every: 1 },
+            7.5,
+            GuidanceStrategy::CondOnly,
+            10,
+        )
+        .unwrap();
+        assert_eq!(full.total_unet_evals(), 20);
+    }
+
+    #[test]
+    fn interval_guides_only_inside() {
+        // guided [2, 8) of 10 steps, optimized outside
+        let plan = GuidancePlan::compile(
+            &GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 },
+            7.5,
+            GuidanceStrategy::CondOnly,
+            10,
+        )
+        .unwrap();
+        for i in 0..10 {
+            assert_eq!(dual(plan.mode(i)), (2..8).contains(&i), "step {i}");
+        }
+        assert_eq!(plan.total_unet_evals(), 16);
+        // with reuse, the leading optimized run opens with a cold-cache
+        // dual anchor at step 0
+        let reuse = GuidancePlan::compile(
+            &GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 },
+            7.5,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 },
+            10,
+        )
+        .unwrap();
+        assert!(dual(reuse.mode(0)), "cold cache must anchor");
+        assert!(matches!(reuse.mode(1), GuidanceMode::Reuse { .. }));
+        assert_eq!(reuse.total_unet_evals(), 17);
+    }
+
+    #[test]
+    fn segments_apply_in_order() {
+        // optimize everything, then carve a forced-dual middle back out
+        let sched = GuidanceSchedule::Segments(vec![
+            Segment::optimized(0.0, 1.0),
+            Segment::dual(0.4, 0.6),
+        ]);
+        let plan =
+            GuidancePlan::compile(&sched, 7.5, GuidanceStrategy::CondOnly, 10).unwrap();
+        for i in 0..10 {
+            assert_eq!(dual(plan.mode(i)), (4..6).contains(&i), "step {i}");
+        }
+        // disjoint optimized segments leave the gap dual
+        let sched = GuidanceSchedule::Segments(vec![
+            Segment::optimized(0.0, 0.2),
+            Segment::optimized(0.8, 1.0),
+        ]);
+        let plan =
+            GuidancePlan::compile(&sched, 7.5, GuidanceStrategy::CondOnly, 10).unwrap();
+        let optimized: Vec<usize> = (0..10).filter(|&i| !dual(plan.mode(i))).collect();
+        assert_eq!(optimized, vec![0, 1, 8, 9]);
+    }
+
+    #[test]
+    fn reuse_reanchors_after_any_dual() {
+        // optimized [0,4) + [6,10): the dual gap re-anchors the cache,
+        // so the second run needs no cold-start dual
+        let sched = GuidanceSchedule::Segments(vec![
+            Segment::optimized(0.0, 0.4),
+            Segment::optimized(0.6, 1.0),
+        ]);
+        let plan = GuidancePlan::compile(
+            &sched,
+            7.5,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 },
+            10,
+        )
+        .unwrap();
+        assert!(dual(plan.mode(0)), "first run cold-starts");
+        assert!(matches!(plan.mode(1), GuidanceMode::Reuse { .. }));
+        assert!(dual(plan.mode(4)) && dual(plan.mode(5)), "gap is dual");
+        assert!(
+            matches!(plan.mode(6), GuidanceMode::Reuse { .. }),
+            "gap re-anchored the cache"
+        );
+    }
+
+    #[test]
+    fn unguided_scale_collapses_everything() {
+        for sched in [
+            GuidanceSchedule::none(),
+            GuidanceSchedule::Cadence { every: 3 },
+            GuidanceSchedule::Interval { lo: 0.1, hi: 0.9 },
+        ] {
+            let plan =
+                GuidancePlan::compile(&sched, 1.0, GuidanceStrategy::CondOnly, 8).unwrap();
+            assert!(plan.steps().iter().all(|s| s.mode == GuidanceMode::Unguided));
+            assert_eq!(plan.total_unet_evals(), 8);
+        }
+    }
+
+    #[test]
+    fn cost_queries() {
+        // 4 dual + 4 cond-only
+        let plan = GuidancePlan::compile(
+            &GuidanceSchedule::Window(WindowSpec::last(0.5)),
+            7.5,
+            GuidanceStrategy::CondOnly,
+            8,
+        )
+        .unwrap();
+        assert_eq!(plan.total_unet_evals(), 12);
+        assert_eq!(plan.remaining_cost(0), 12);
+        assert_eq!(plan.remaining_cost(4), 4);
+        assert_eq!(plan.peak_remaining_cost(0), 2);
+        assert_eq!(plan.peak_remaining_cost(4), 1);
+        assert_eq!(plan.peak_remaining_cost(8), 0);
+        assert_eq!(plan.next_cost(0), 2);
+        assert_eq!(plan.next_cost(7), 1);
+        assert_eq!(plan.next_cost(8), 0);
+        assert_eq!(plan.single_pass_steps(), 4);
+        assert!((plan.effective_fraction() - 0.5).abs() < 1e-12);
+        assert!(!plan.has_reuse());
+    }
+
+    #[test]
+    fn record_executed_overlays() {
+        let mut plan = GuidancePlan::conservative_dual(7.5, 4);
+        assert_eq!(plan.total_unet_evals(), 8);
+        assert_eq!(plan.peak_remaining_cost(0), 2);
+        plan.record_executed(2, GuidanceMode::CondOnly);
+        plan.record_executed(3, GuidanceMode::CondOnly);
+        assert_eq!(plan.total_unet_evals(), 6);
+        assert_eq!(plan.summary(), "2D 2C");
+    }
+
+    #[test]
+    fn summary_run_lengths() {
+        let plan = GuidancePlan::compile(
+            &GuidanceSchedule::Window(WindowSpec::last(0.5)),
+            7.5,
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 2 },
+            10,
+        )
+        .unwrap();
+        // 5 dual, then R R D R R
+        assert_eq!(plan.summary(), "5D 2R 1D 2R");
+        let empty = GuidancePlan::compile(
+            &GuidanceSchedule::none(),
+            7.5,
+            GuidanceStrategy::CondOnly,
+            0,
+        )
+        .unwrap();
+        assert_eq!(empty.summary(), "empty");
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn schedule_validation() {
+        assert!(GuidanceSchedule::Cadence { every: 0 }.validate().is_err());
+        assert!(GuidanceSchedule::Cadence { every: 1 }.validate().is_ok());
+        assert!(GuidanceSchedule::Interval { lo: 0.5, hi: 0.2 }.validate().is_err());
+        assert!(GuidanceSchedule::Interval { lo: -0.1, hi: 0.5 }.validate().is_err());
+        assert!(GuidanceSchedule::Interval { lo: 0.0, hi: 1.5 }.validate().is_err());
+        assert!(GuidanceSchedule::Interval { lo: f64::NAN, hi: 0.5 }.validate().is_err());
+        assert!(GuidanceSchedule::Segments(vec![Segment::optimized(0.3, 0.1)])
+            .validate()
+            .is_err());
+        assert!(GuidanceSchedule::Window(WindowSpec::last(2.0)).validate().is_err());
+        assert!(GuidancePlan::compile(
+            &GuidanceSchedule::none(),
+            f32::NAN,
+            GuidanceStrategy::CondOnly,
+            10
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parse_interval_and_segments() {
+        assert_eq!(
+            GuidanceSchedule::parse_interval("0.25-0.75").unwrap(),
+            GuidanceSchedule::Interval { lo: 0.25, hi: 0.75 }
+        );
+        assert!(GuidanceSchedule::parse_interval("0.75-0.25").is_err());
+        assert!(GuidanceSchedule::parse_interval("0.25").is_err());
+        assert!(GuidanceSchedule::parse_interval("a-b").is_err());
+        assert_eq!(
+            GuidanceSchedule::parse_segments("0.0-0.2, 0.8-1.0").unwrap(),
+            GuidanceSchedule::Segments(vec![
+                Segment::optimized(0.0, 0.2),
+                Segment::optimized(0.8, 1.0),
+            ])
+        );
+        assert_eq!(
+            GuidanceSchedule::parse_segments("0.0-1.0,!0.4-0.6").unwrap(),
+            GuidanceSchedule::Segments(vec![
+                Segment::optimized(0.0, 1.0),
+                Segment::dual(0.4, 0.6),
+            ])
+        );
+        assert!(GuidanceSchedule::parse_segments("").is_err());
+        assert!(GuidanceSchedule::parse_segments("0.0-0.2,,0.8-1.0").is_err());
+    }
+
+    #[test]
+    fn from_parts_shared_constructor() {
+        // nothing configured -> None (surface keeps its default)
+        assert_eq!(GuidanceSchedule::from_parts(None, None, None, None).unwrap(), None);
+        assert_eq!(
+            GuidanceSchedule::from_parts(Some((0.2, WindowPosition::Last)), None, None, None)
+                .unwrap(),
+            Some(GuidanceSchedule::Window(WindowSpec::last(0.2)))
+        );
+        assert_eq!(
+            GuidanceSchedule::from_parts(None, None, Some("0.25-0.75"), None).unwrap(),
+            Some(GuidanceSchedule::Interval { lo: 0.25, hi: 0.75 })
+        );
+        assert_eq!(
+            GuidanceSchedule::from_parts(None, None, None, Some(4)).unwrap(),
+            Some(GuidanceSchedule::Cadence { every: 4 })
+        );
+        assert_eq!(
+            GuidanceSchedule::from_parts(None, Some("0.0-0.2"), None, None).unwrap(),
+            Some(GuidanceSchedule::Segments(vec![Segment::optimized(0.0, 0.2)]))
+        );
+        // mutual exclusion, validation
+        assert!(GuidanceSchedule::from_parts(None, None, Some("0.2-0.8"), Some(4)).is_err());
+        assert!(GuidanceSchedule::from_parts(
+            Some((0.2, WindowPosition::Last)),
+            None,
+            None,
+            Some(4)
+        )
+        .is_err());
+        assert!(GuidanceSchedule::from_parts(None, None, None, Some(0)).is_err());
+        assert!(GuidanceSchedule::from_parts(Some((1.5, WindowPosition::Last)), None, None, None)
+            .is_err());
+    }
+
+    #[test]
+    fn widenable_and_labels() {
+        assert!(GuidanceSchedule::none().widenable());
+        assert!(GuidanceSchedule::Window(WindowSpec::last(0.3)).widenable());
+        assert!(!GuidanceSchedule::Window(WindowSpec::first(0.3)).widenable());
+        assert!(!GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 }.widenable());
+        assert!(!GuidanceSchedule::Cadence { every: 4 }.widenable());
+        assert_eq!(GuidanceSchedule::none().label(), "no opt.");
+        assert_eq!(GuidanceSchedule::Cadence { every: 4 }.label(), "cadence /4");
+        assert_eq!(
+            GuidanceSchedule::Interval { lo: 0.25, hi: 0.75 }.label(),
+            "interval 0.25-0.75"
+        );
+        assert_eq!(GuidanceSchedule::Window(WindowSpec::last(0.3)).last_fraction(), 0.3);
+        assert_eq!(GuidanceSchedule::Cadence { every: 4 }.last_fraction(), 0.0);
+    }
+
+    #[test]
+    fn mask_counts_consistent() {
+        forall("schedule mask consistency", 200, |g| {
+            let n = g.usize_in(1, 150);
+            let sched = match g.usize_in(0, 3) {
+                0 => GuidanceSchedule::Window(WindowSpec::last(g.f64_in(0.0, 1.0))),
+                1 => {
+                    let lo = g.f64_in(0.0, 1.0);
+                    GuidanceSchedule::Interval { lo, hi: g.f64_in(lo, 1.0) }
+                }
+                2 => GuidanceSchedule::Cadence { every: g.usize_in(1, 10) },
+                _ => {
+                    let lo = g.f64_in(0.0, 1.0);
+                    GuidanceSchedule::Segments(vec![Segment::optimized(lo, g.f64_in(lo, 1.0))])
+                }
+            };
+            sched.validate().unwrap();
+            let mask = sched.optimized_mask(n);
+            assert_eq!(mask.len(), n);
+            assert_eq!(sched.optimized_count(n), mask.iter().filter(|&&m| m).count());
+            // plan cost bracket: n <= evals <= 2n for any strategy
+            let plan =
+                GuidancePlan::compile(&sched, 7.5, GuidanceStrategy::CondOnly, n).unwrap();
+            let evals = plan.total_unet_evals();
+            assert!(evals >= n && evals <= 2 * n, "{evals} outside [{n}, {}]", 2 * n);
+            assert_eq!(evals, 2 * n - sched.optimized_count(n));
+        });
+    }
+}

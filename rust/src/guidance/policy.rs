@@ -1,5 +1,7 @@
-//! The per-iteration guidance decision the engine executes.
+//! The validated guidance policy: a (schedule, scale, strategy) triple
+//! that compiles into the per-step [`GuidancePlan`] the engine executes.
 
+use super::plan::{GuidancePlan, GuidanceSchedule};
 use super::strategy::{GuidanceStrategy, ReuseKind};
 use super::window::WindowSpec;
 use crate::error::Result;
@@ -29,11 +31,14 @@ impl GuidanceMode {
     }
 }
 
-/// The paper's selective-guidance policy: a validated (window, scale,
-/// strategy) triple yielding a [`GuidanceMode`] per iteration.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// The selective-guidance policy: a validated (schedule, scale,
+/// strategy) triple. Since the plan IR landed (DESIGN.md §10) this is a
+/// thin compiler front-end — all per-step decision logic lives in
+/// [`GuidancePlan::compile`]; `decide`/`total_unet_evals` are
+/// conveniences that compile and query a plan.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SelectiveGuidancePolicy {
-    window: WindowSpec,
+    schedule: GuidanceSchedule,
     guidance_scale: f32,
     strategy: GuidanceStrategy,
 }
@@ -44,19 +49,25 @@ impl SelectiveGuidancePolicy {
         Self::with_strategy(window, guidance_scale, GuidanceStrategy::CondOnly)
     }
 
-    /// A policy whose optimized iterations follow `strategy`.
+    /// A windowed policy whose optimized iterations follow `strategy`.
     pub fn with_strategy(
         window: WindowSpec,
         guidance_scale: f32,
         strategy: GuidanceStrategy,
     ) -> Result<Self> {
-        window.validate()?;
-        if !guidance_scale.is_finite() || guidance_scale < 0.0 {
-            return Err(crate::error::Error::Config(format!(
-                "guidance scale {guidance_scale} must be finite and >= 0"
-            )));
-        }
-        Ok(SelectiveGuidancePolicy { window, guidance_scale, strategy })
+        Self::with_schedule(GuidanceSchedule::Window(window), guidance_scale, strategy)
+    }
+
+    /// A policy over any [`GuidanceSchedule`] (windows, segments,
+    /// limited intervals, cadences).
+    pub fn with_schedule(
+        schedule: GuidanceSchedule,
+        guidance_scale: f32,
+        strategy: GuidanceStrategy,
+    ) -> Result<Self> {
+        // compiling a zero-step plan runs every validation path
+        GuidancePlan::compile(&schedule, guidance_scale, strategy, 0)?;
+        Ok(SelectiveGuidancePolicy { schedule, guidance_scale, strategy })
     }
 
     /// Full CFG at the SD default scale of 7.5.
@@ -64,8 +75,17 @@ impl SelectiveGuidancePolicy {
         SelectiveGuidancePolicy::new(WindowSpec::none(), 7.5).unwrap()
     }
 
+    /// The contiguous window for `Window` schedules; `WindowSpec::none()`
+    /// for the richer schedule kinds (use [`Self::schedule`] for those).
     pub fn window(&self) -> WindowSpec {
-        self.window
+        match &self.schedule {
+            GuidanceSchedule::Window(w) => *w,
+            _ => WindowSpec::none(),
+        }
+    }
+
+    pub fn schedule(&self) -> &GuidanceSchedule {
+        &self.schedule
     }
 
     pub fn guidance_scale(&self) -> f32 {
@@ -76,33 +96,28 @@ impl SelectiveGuidancePolicy {
         self.strategy
     }
 
-    /// Decide iteration `i` of an `n`-step loop.
-    ///
-    /// Note the `scale <= 1 + eps` fast path: with s = 1, Eq. 1 reduces to
-    /// `eps_hat = eps_c` *exactly*, so the unconditional pass is dead code
-    /// at every iteration — selective guidance generalizes this identity
-    /// from "everywhere when s=1" to "a chosen window for any s".
+    /// Compile the per-step plan for an `n`-step loop. Infallible for a
+    /// constructed policy (construction validated the triple).
+    pub fn plan(&self, n: usize) -> GuidancePlan {
+        GuidancePlan::compile(&self.schedule, self.guidance_scale, self.strategy, n)
+            .expect("validated policy must compile")
+    }
+
+    /// Decide iteration `i` of an `n`-step loop (compiles a plan; hot
+    /// paths should compile once via [`Self::plan`] instead).
     pub fn decide(&self, i: usize, n: usize) -> GuidanceMode {
         debug_assert!(i < n, "iteration {i} out of range for {n}-step loop");
-        if (self.guidance_scale - 1.0).abs() < 1e-6 {
-            return GuidanceMode::Unguided;
-        }
-        if self.window.contains(i, n) {
-            let (start, _) = self.window.range(n);
-            self.strategy.in_window_mode(i - start, start, self.guidance_scale)
-        } else {
-            GuidanceMode::Dual { scale: self.guidance_scale }
-        }
+        self.plan(n).mode(i)
     }
 
     /// Total UNet evaluations for an `n`-step trajectory.
     pub fn total_unet_evals(&self, n: usize) -> usize {
-        (0..n).map(|i| self.decide(i, n).unet_evals()).sum()
+        self.plan(n).total_unet_evals()
     }
 
     /// Copy with a different guidance scale (the §3.4 retuning path).
     pub fn with_scale(&self, scale: f32) -> Result<Self> {
-        SelectiveGuidancePolicy::with_strategy(self.window, scale, self.strategy)
+        SelectiveGuidancePolicy::with_schedule(self.schedule.clone(), scale, self.strategy)
     }
 }
 
@@ -163,6 +178,12 @@ mod tests {
         assert!(SelectiveGuidancePolicy::new(WindowSpec::last(2.0), 7.5).is_err());
         assert!(SelectiveGuidancePolicy::new(WindowSpec::none(), f32::NAN).is_err());
         assert!(SelectiveGuidancePolicy::new(WindowSpec::none(), -1.0).is_err());
+        assert!(SelectiveGuidancePolicy::with_schedule(
+            GuidanceSchedule::Cadence { every: 0 },
+            7.5,
+            GuidanceStrategy::CondOnly
+        )
+        .is_err());
     }
 
     #[test]
@@ -232,5 +253,20 @@ mod tests {
         for i in 0..10 {
             assert_eq!(p.decide(i, 10), GuidanceMode::Unguided);
         }
+    }
+
+    #[test]
+    fn schedule_policies_compile() {
+        let p = SelectiveGuidancePolicy::with_schedule(
+            GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 },
+            7.5,
+            GuidanceStrategy::CondOnly,
+        )
+        .unwrap();
+        assert_eq!(p.schedule(), &GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 });
+        // non-window schedules report the none window (the schedule is
+        // the source of truth)
+        assert_eq!(p.window(), WindowSpec::none());
+        assert_eq!(p.total_unet_evals(10), 16);
     }
 }

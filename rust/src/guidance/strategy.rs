@@ -105,6 +105,12 @@ impl GuidanceStrategy {
     /// Mode for the `j`-th iteration *inside* the optimization window
     /// (`j` 0-based); `prior_duals` is the number of dual iterations that
     /// run before the window starts.
+    ///
+    /// This closed-form window walk is the *reference* implementation:
+    /// production decisions come from [`crate::guidance::GuidancePlan`]'s
+    /// compile walk (which generalizes these semantics to arbitrary
+    /// optimized sets), and the plan property tests assert the two agree
+    /// exactly on every window schedule.
     pub fn in_window_mode(&self, j: usize, prior_duals: usize, scale: f32) -> GuidanceMode {
         match *self {
             GuidanceStrategy::CondOnly => GuidanceMode::CondOnly,

@@ -22,12 +22,45 @@ pub enum WindowPosition {
 }
 
 impl WindowPosition {
+    /// Canonical name; `parse(name(x)) == x` holds for every valid
+    /// position (the offset prints at full precision for that reason).
     pub fn name(&self) -> String {
         match self {
             WindowPosition::First => "first".into(),
             WindowPosition::Middle => "middle".into(),
             WindowPosition::Last => "last".into(),
-            WindowPosition::Offset(o) => format!("offset({o:.2})"),
+            WindowPosition::Offset(o) => format!("offset({o})"),
+        }
+    }
+
+    /// Parse a position name: `first` / `middle` / `last` / `offset(x)`
+    /// with `x` in `[0, 1]`. The one parser every surface (TOML, CLI,
+    /// wire protocol) shares, so `offset(…)` — which `name()` has always
+    /// printed — round-trips everywhere instead of only three of the
+    /// four variants.
+    pub fn parse(s: &str) -> Result<WindowPosition> {
+        match s.trim() {
+            "first" => Ok(WindowPosition::First),
+            "middle" => Ok(WindowPosition::Middle),
+            "last" => Ok(WindowPosition::Last),
+            other => {
+                let inner = other
+                    .strip_prefix("offset(")
+                    .and_then(|rest| rest.strip_suffix(')'))
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "unknown window position {other:?} (expected first, middle, \
+                             last, or offset(x))"
+                        ))
+                    })?;
+                let o: f64 = inner.trim().parse().map_err(|_| {
+                    Error::Config(format!("window offset {inner:?} is not a number"))
+                })?;
+                if !o.is_finite() || !(0.0..=1.0).contains(&o) {
+                    return Err(Error::Config(format!("window offset {o} outside [0, 1]")));
+                }
+                Ok(WindowPosition::Offset(o))
+            }
         }
     }
 }
@@ -221,5 +254,34 @@ mod tests {
         assert_eq!(WindowSpec::none().label(), "no opt.");
         assert_eq!(WindowSpec::last(0.2).label(), "last 20%");
         assert_eq!(WindowSpec::first(0.25).label(), "first 25%");
+    }
+
+    #[test]
+    fn position_parse_round_trips() {
+        for pos in [
+            WindowPosition::First,
+            WindowPosition::Middle,
+            WindowPosition::Last,
+            WindowPosition::Offset(0.25),
+            WindowPosition::Offset(0.0),
+            WindowPosition::Offset(1.0),
+        ] {
+            assert_eq!(WindowPosition::parse(&pos.name()).unwrap(), pos, "{pos:?}");
+        }
+        forall("offset round trip", 100, |g| {
+            let pos = WindowPosition::Offset(g.f64_in(0.0, 1.0));
+            assert_eq!(WindowPosition::parse(&pos.name()).unwrap(), pos);
+        });
+    }
+
+    #[test]
+    fn position_parse_rejects_bad_input() {
+        assert!(WindowPosition::parse("center").is_err());
+        assert!(WindowPosition::parse("offset(1.5)").is_err());
+        assert!(WindowPosition::parse("offset(-0.1)").is_err());
+        assert!(WindowPosition::parse("offset(nan)").is_err());
+        assert!(WindowPosition::parse("offset(abc)").is_err());
+        assert!(WindowPosition::parse("offset(0.2").is_err());
+        assert!(WindowPosition::parse("").is_err());
     }
 }

@@ -55,8 +55,8 @@ pub mod prelude {
     pub use crate::engine::{Engine, GenerationOutput, GenerationRequest, SampleState};
     pub use crate::error::{Error, Result};
     pub use crate::guidance::{
-        GuidanceMode, GuidanceStrategy, ReuseKind, SelectiveGuidancePolicy, WindowPosition,
-        WindowSpec,
+        GuidanceMode, GuidancePlan, GuidanceSchedule, GuidanceStrategy, ReuseKind, Segment,
+        SegmentMode, SelectiveGuidancePolicy, StepPlan, WindowPosition, WindowSpec,
     };
     pub use crate::qos::{DeadlineQos, Priority, QosConfig, QosMeta, QosPolicy};
     pub use crate::quality::{mse, psnr, ssim};

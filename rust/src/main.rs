@@ -2,18 +2,33 @@
 //!
 //! ```text
 //! sgd-serve generate --prompt "A person holding a cat" [--steps 50]
-//!           [--guidance-scale 7.5] [--window 0.2] [--position last]
+//!           [--guidance-scale 7.5] [--window 0.2]
+//!           [--position last|first|middle|offset(x)]
+//!           [--segments "0.0-0.2,0.8-1.0"] [--interval 0.25-0.75]
+//!           [--cadence 4]
 //!           [--strategy cond-only|hold|extrapolate] [--refresh-every 0]
+//!           [--adaptive] [--adaptive-threshold 0.05]
+//!           [--adaptive-patience 2] [--adaptive-min-dual 0.3]
+//!           [--adaptive-probe-every 8]
 //!           [--scheduler pndm] [--seed 0] [--out out.png]
 //!           [--mode fixed|continuous] [--slot-budget 8]
 //!           [--artifacts artifacts/tiny]
 //! sgd-serve serve    [--bind 127.0.0.1:7878] [--workers 1]
 //!           [--mode fixed|continuous] [--max-batch 4] [--slot-budget 8]
 //!           [--config configs/serve.toml]
+//!           [--window 0.2] [--position ...] [--segments ...]
+//!           [--interval ...] [--cadence ...]
 //!           [--qos] [--max-queue 64] [--quality-floor 0.5]
-//!           [--deadline-ms 0]
+//!           [--deadline-ms 0] [--adaptive] [--adaptive-threshold ...]
 //! sgd-serve info     [--artifacts artifacts/tiny]
 //! ```
+//!
+//! The schedule flags are mutually exclusive: `--window`/`--position`
+//! express the paper's contiguous window, `--segments`/`--interval`/
+//! `--cadence` the generalized schedules (DESIGN.md §10). On `serve`
+//! they (and the `[engine]`/`[guidance]` config sections) set the
+//! serving default applied to requests that carry no guidance fields of
+//! their own.
 //!
 //! `--mode continuous` (or `mode = "continuous"` in the config's
 //! `[server]` section) switches the coordinator to iteration-level
@@ -30,11 +45,13 @@ use selective_guidance::config::{EngineConfig, RunConfig};
 use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
 use selective_guidance::engine::{Engine, GenerationRequest};
 use selective_guidance::error::{Error, Result};
-use selective_guidance::guidance::{GuidanceStrategy, WindowSpec};
+use selective_guidance::guidance::{
+    AdaptiveConfig, GuidanceSchedule, GuidanceStrategy, WindowPosition,
+};
 use selective_guidance::qos::DeadlineQos;
 use selective_guidance::runtime::ModelStack;
 use selective_guidance::scheduler::SchedulerKind;
-use selective_guidance::server::Server;
+use selective_guidance::server::{GuidanceDefaults, Server};
 
 fn main() {
     if let Err(e) = run() {
@@ -64,17 +81,80 @@ fn artifacts_dir(cli: &Cli) -> String {
         .unwrap_or_else(|| "artifacts/tiny".into())
 }
 
-fn window_from(cli: &Cli) -> Result<WindowSpec> {
-    let fraction: f64 = cli.opt_or("window", 0.0)?;
-    let position = cli.opt("position").unwrap_or("last");
-    let w = match position {
-        "last" => WindowSpec::last(fraction),
-        "first" => WindowSpec::first(fraction),
-        "middle" => WindowSpec::middle(fraction),
-        other => return Err(Error::Config(format!("unknown position {other:?}"))),
+/// Build the guidance schedule from the CLI: `--window`/`--position`
+/// (contiguous, incl. `offset(x)` placements) or one of the generalized
+/// schedules (`--segments` / `--interval` / `--cadence`). Mutual
+/// exclusion and dispatch are the shared
+/// [`GuidanceSchedule::from_parts`] rule; `None` = no schedule flag
+/// given (keep the surface's default).
+fn schedule_from(cli: &Cli) -> Result<Option<GuidanceSchedule>> {
+    // a bare `--cadence` (no value) parses as a flag; reject instead of
+    // silently running the full-CFG default
+    for key in ["window", "position", "segments", "interval", "cadence"] {
+        if cli.flag(key) {
+            return Err(Error::Config(format!("--{key} needs a value")));
+        }
+    }
+    let window = match cli.opt("window") {
+        Some(_) => {
+            let fraction: f64 = cli.opt_or("window", 0.0)?;
+            let position = WindowPosition::parse(cli.opt("position").unwrap_or("last"))?;
+            Some((fraction, position))
+        }
+        None => {
+            // --position alone still selects a (zero-width) window so a
+            // typo'd combination errors via validation rather than
+            // silently ignoring the flag
+            match cli.opt("position") {
+                Some(p) => Some((0.0, WindowPosition::parse(p)?)),
+                None => None,
+            }
+        }
     };
-    w.validate()?;
-    Ok(w)
+    let cadence = cli.opt_parse::<usize>("cadence")?;
+    GuidanceSchedule::from_parts(window, cli.opt("segments"), cli.opt("interval"), cadence)
+}
+
+/// Build the adaptive-controller config from the CLI on top of an
+/// optional config-file base: `--adaptive` enables it (keeping any
+/// base knobs), the `--adaptive-*` knobs refine whatever is enabled.
+/// Knobs without the flag *or* an enabled base are an operator error,
+/// not a silent no-op (mirrors the TOML and wire surfaces).
+fn adaptive_from(cli: &Cli, base: Option<AdaptiveConfig>) -> Result<Option<AdaptiveConfig>> {
+    if cli.opt("adaptive").is_some() {
+        return Err(Error::Config(
+            "--adaptive is a flag and takes no value (use --adaptive-* for the knobs)".into(),
+        ));
+    }
+    let knobs = [
+        "adaptive-threshold",
+        "adaptive-patience",
+        "adaptive-min-dual",
+        "adaptive-probe-every",
+    ];
+    // a value-less knob parses as a bare flag; reject instead of
+    // silently running with the default (mirrors schedule_from)
+    for key in knobs {
+        if cli.flag(key) {
+            return Err(Error::Config(format!("--{key} needs a value")));
+        }
+    }
+    let enabled = cli.flag("adaptive") || base.is_some();
+    if !enabled {
+        if let Some(orphan) = knobs.iter().find(|&&k| cli.opt(k).is_some()) {
+            return Err(Error::Config(format!("--{orphan} requires --adaptive")));
+        }
+        return Ok(None);
+    }
+    let d = base.unwrap_or_default();
+    let a = AdaptiveConfig {
+        threshold: cli.opt_or("adaptive-threshold", d.threshold)?,
+        patience: cli.opt_or("adaptive-patience", d.patience)?,
+        min_dual_fraction: cli.opt_or("adaptive-min-dual", d.min_dual_fraction)?,
+        probe_every: cli.opt_or("adaptive-probe-every", d.probe_every)?,
+    };
+    a.validate()?;
+    Ok(Some(a))
 }
 
 fn cmd_generate(cli: &Cli) -> Result<()> {
@@ -90,13 +170,16 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         cli.opt("strategy").unwrap_or("cond-only"),
         cli.opt_or("refresh-every", 0)?,
     )?;
-    let req = GenerationRequest::new(prompt)
+    let mut req = GenerationRequest::new(prompt)
         .steps(cli.opt_or("steps", 50)?)
         .guidance_scale(cli.opt_or("guidance-scale", 7.5)?)
-        .selective(window_from(cli)?)
+        .with_schedule(schedule_from(cli)?.unwrap_or_else(GuidanceSchedule::none))
         .strategy(strategy)
         .scheduler(SchedulerKind::parse(cli.opt("scheduler").unwrap_or("pndm"))?)
         .seed(cli.opt_or("seed", 0)?);
+    if let Some(a) = adaptive_from(cli, None)? {
+        req = req.adaptive(a);
+    }
 
     let mode = match cli.opt("mode") {
         Some(m) => BatchMode::parse(m)?,
@@ -131,6 +214,7 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         out.breakdown.combine_ms,
         out.breakdown.scheduler_ms,
     );
+    println!("executed plan: {}", out.plan_summary);
     if let Some(img) = &out.image {
         let path = cli.opt("out").unwrap_or("out.png");
         img.save_png(Path::new(path))?;
@@ -154,6 +238,17 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     run_cfg.server.max_batch = cli.opt_or("max-batch", run_cfg.server.max_batch)?;
     run_cfg.server.slot_budget = cli.opt_or("slot-budget", run_cfg.server.slot_budget)?;
     run_cfg.server.validate()?;
+
+    // guidance overrides compose with the config file: schedule flags
+    // replace the configured default schedule; `--adaptive`
+    // force-enables (keeping config knobs) and `--adaptive-*` refine
+    // whatever the config enabled. validate() rejects conflicting
+    // combinations (e.g. an adaptive config plus a schedule flag).
+    if let Some(s) = schedule_from(cli)? {
+        run_cfg.engine.schedule = s;
+    }
+    run_cfg.engine.adaptive = adaptive_from(cli, run_cfg.engine.adaptive)?;
+    run_cfg.engine.validate()?;
 
     // QoS overrides: the flag force-enables, the knobs refine the config
     if cli.flag("qos") {
@@ -201,7 +296,28 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     } else {
         Coordinator::start(engine, coord_cfg)
     };
-    let server = Server::start(coordinator, &run_cfg.server.bind)?;
+    if run_cfg.engine.schedule != GuidanceSchedule::none() {
+        println!(
+            "guidance default: {} ({})",
+            run_cfg.engine.schedule.label(),
+            run_cfg.engine.guidance_strategy.label(),
+        );
+    }
+    if let Some(a) = &run_cfg.engine.adaptive {
+        println!(
+            "adaptive: enabled by default (threshold {}, patience {}, min dual {:.0}%, \
+             probe every {})",
+            a.threshold,
+            a.patience,
+            a.min_dual_fraction * 100.0,
+            a.probe_every,
+        );
+    }
+    let server = Server::start_with_defaults(
+        coordinator,
+        &run_cfg.server.bind,
+        GuidanceDefaults::from_engine(&run_cfg.engine),
+    )?;
     println!("sgd-serve listening on {}", server.addr());
     println!("protocol: JSON lines; try: {{\"op\":\"ping\"}}");
     // serve until the listener thread exits (shutdown op or signal)

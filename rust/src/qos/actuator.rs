@@ -22,7 +22,8 @@
 //! heavy load falls back to the paper's drop-guidance mode. De-escalation
 //! is the mirror image, so quality recovers as load drains.
 
-use crate::guidance::GuidanceStrategy;
+use crate::engine::GenerationRequest;
+use crate::guidance::{GuidancePlan, GuidanceSchedule, GuidanceStrategy, WindowSpec};
 
 use super::feedback::LoadSnapshot;
 use super::{QosConfig, QosMeta};
@@ -120,6 +121,51 @@ impl WindowActuator {
             }
         }
         ActuationPlan { fraction: f, strategy: GuidanceStrategy::CondOnly }
+    }
+
+    /// The plan-rewriting entry point admission calls: escalate through
+    /// the lattice for the current load and — when the request's
+    /// schedule is rewritable and the escalated plan sheds strictly more
+    /// than the request already does — edit the request's schedule and
+    /// strategy in place. Returns `(applied_fraction, widened)` for the
+    /// stats counters.
+    ///
+    /// The comparison is in plan-derived *effective shed* terms
+    /// ([`GenerationRequest::effective_shed`]): a client's explicit
+    /// schedule + strategy is a floor on how much it already gives up,
+    /// and the actuator only ever replaces it with a plan that sheds
+    /// strictly more (a reuse plan's window can be larger yet shed less
+    /// — raw fractions would lie here). Non-`Last` placements and the
+    /// richer schedule kinds (segments / interval / cadence) are
+    /// deliberate experiments and are never rewritten.
+    pub fn rewrite(
+        &self,
+        req: &mut GenerationRequest,
+        load: &LoadSnapshot,
+        meta: &QosMeta,
+    ) -> (f64, bool) {
+        let mut widened = false;
+        // adaptive requests run the online controller — the engine
+        // ignores the static schedule, so rewriting it would only make
+        // the stats lie about shed that never happens
+        if req.adaptive.is_none() && req.schedule.widenable() {
+            let plan = self.plan_for_request(load, meta);
+            let candidate = GuidanceSchedule::Window(WindowSpec::last(plan.fraction));
+            // compare executed (plan-derived) shed to executed shed —
+            // both floor-rounded at this request's step count — so a
+            // rewrite to an equal-shed plan never fires and the
+            // "sheds strictly more" contract holds exactly
+            let candidate_shed =
+                GuidancePlan::compile(&candidate, req.guidance_scale, plan.strategy, req.steps)
+                    .map(|p| p.effective_fraction())
+                    .unwrap_or(0.0);
+            if candidate_shed > req.effective_shed() {
+                req.schedule = candidate;
+                req.strategy = plan.strategy;
+                widened = true;
+            }
+        }
+        (req.schedule.last_fraction(), widened)
     }
 }
 
@@ -288,6 +334,69 @@ mod tests {
                 prev = eff;
             }
         });
+    }
+
+    #[test]
+    fn rewrite_edits_widenable_schedules_only() {
+        use crate::engine::GenerationRequest;
+        use crate::guidance::{GuidanceSchedule, WindowSpec};
+        let a = actuator(0.5, 0, 10);
+        let meta = QosMeta::default();
+        let heavy = load(10, 0.0);
+        // default request: rewritten to the floor window
+        let mut req = GenerationRequest::new("p").decode(false);
+        let (applied, widened) = a.rewrite(&mut req, &heavy, &meta);
+        assert!(widened);
+        assert!((applied - 0.5).abs() < 1e-12);
+        assert_eq!(req.schedule, GuidanceSchedule::Window(WindowSpec::last(0.5)));
+        // a cadence schedule is a deliberate experiment: untouched, and
+        // the applied Last fraction reports 0
+        let mut req = GenerationRequest::new("p")
+            .with_schedule(GuidanceSchedule::Cadence { every: 4 })
+            .decode(false);
+        let before = req.schedule.clone();
+        let (applied, widened) = a.rewrite(&mut req, &heavy, &meta);
+        assert!(!widened);
+        assert_eq!(applied, 0.0);
+        assert_eq!(req.schedule, before);
+        // idle load never widens
+        let mut req = GenerationRequest::new("p").decode(false);
+        let (applied, widened) = a.rewrite(&mut req, &load(0, 0.0), &meta);
+        assert!(!widened);
+        assert_eq!(applied, 0.0);
+        assert_eq!(req.schedule, GuidanceSchedule::none());
+        // adaptive requests run the online controller: the engine
+        // ignores the static schedule, so the rewriter must too
+        let mut req = GenerationRequest::new("p")
+            .adaptive(crate::guidance::AdaptiveConfig::default())
+            .decode(false);
+        let (applied, widened) = a.rewrite(&mut req, &heavy, &meta);
+        assert!(!widened, "adaptive request was rewritten");
+        assert_eq!(applied, 0.0);
+        assert_eq!(req.schedule, GuidanceSchedule::none());
+    }
+
+    #[test]
+    fn rewrite_never_fires_on_equal_executed_shed() {
+        use crate::engine::GenerationRequest;
+        use crate::guidance::WindowSpec;
+        let a = actuator(0.5, 0, 10);
+        let meta = QosMeta::default();
+        let heavy = load(10, 0.0);
+        // steps=9, explicit Last(0.5) cond-only: executed shed is
+        // floor(4.5)/9 = 4/9; the floor candidate Last(0.5) executes the
+        // *same* 4/9, so the rewrite must not fire (analytic-vs-floor
+        // comparison would claim 0.5 > 4/9 and rewrite to an identical
+        // schedule, counting it as widened)
+        let mut req = GenerationRequest::new("p")
+            .steps(9)
+            .selective(WindowSpec::last(0.5))
+            .decode(false);
+        let before = req.schedule.clone();
+        let (_, widened) = a.rewrite(&mut req, &heavy, &meta);
+        assert!(!widened, "equal-shed rewrite fired");
+        assert_eq!(req.schedule, before);
+        assert_eq!(req.strategy, GuidanceStrategy::CondOnly);
     }
 
     #[test]

@@ -52,7 +52,7 @@ use std::time::Duration;
 use crate::config::TomlDoc;
 use crate::engine::GenerationRequest;
 use crate::error::{Error, Result};
-use crate::guidance::{WindowPosition, WindowSpec};
+use crate::guidance::{GuidancePlan, GuidanceSchedule, GuidanceStrategy, WindowSpec};
 use crate::metrics::{QosCounters, QosSnapshot};
 
 /// Request priority class. Lower classes are shed first under load:
@@ -375,17 +375,36 @@ impl QosPolicy for DeadlineQos {
             meta.deadline = Some(Duration::from_secs_f64(self.cfg.default_deadline_ms / 1e3));
         }
         let load = self.estimator.snapshot(queue_depth);
-        // Explicit client windows are a floor, and non-`Last` placements
-        // are deliberate experiments we must not silently move (the
-        // paper shows placement matters more than size, Figure 1) — so
-        // the widest window this request can *actually* run at, which
-        // feasibility must be judged against, differs per request.
-        let widenable = req.window.fraction == 0.0
-            || matches!(req.window.position, WindowPosition::Last);
-        let achievable = if widenable {
-            self.cfg.floor_fraction.max(req.window.fraction)
+        // Explicit client schedules are a floor, and non-`Last`
+        // placements / the richer schedule kinds are deliberate
+        // experiments we must not silently move (the paper shows
+        // placement matters more than size, Figure 1) — so the widest
+        // *executed* shed this request can actually run at, which
+        // feasibility must be judged against, differs per request. Like
+        // every other consumer since the plan IR, the bound is
+        // plan-derived (a reuse schedule's raw fraction would promise a
+        // speedup its refresh/cold-cache duals never deliver). Adaptive
+        // requests execute the online controller, not the static
+        // schedule: feasibility prices them at full dual cost
+        // (mirroring the continuous batcher's conservative overlay) and
+        // the actuator never rewrites them.
+        let achievable = if req.adaptive.is_some() {
+            0.0
+        } else if req.schedule.widenable() {
+            // widest rewrite the actuator could apply: the drop-guidance
+            // floor window, compiled at this request's step count
+            let floor = GuidanceSchedule::Window(WindowSpec::last(self.cfg.floor_fraction));
+            let widest = GuidancePlan::compile(
+                &floor,
+                req.guidance_scale,
+                GuidanceStrategy::CondOnly,
+                req.steps,
+            )
+            .map(|p| p.effective_fraction())
+            .unwrap_or(0.0);
+            req.effective_shed().max(widest)
         } else {
-            req.window.fraction
+            req.effective_shed()
         };
         match self.admission.decide(meta, &load, achievable) {
             AdmissionDecision::Reject(reason) => {
@@ -394,28 +413,13 @@ impl QosPolicy for DeadlineQos {
             }
             AdmissionDecision::Admit => {
                 // escalation lattice: Dual (no window) -> Reuse (cached
-                // guidance, near-CFG quality) -> CondOnly (drop), see
-                // WindowActuator::plan_for_request. The comparison is in
-                // *effective shed* terms: a client's explicit window +
-                // strategy is a floor on how much it already gives up,
-                // and the actuator only ever replaces it with a plan
-                // that sheds strictly more (a reuse plan's window can be
-                // larger yet shed less — raw fractions would lie here).
-                let plan = self.actuator.plan_for_request(&load, meta);
-                let widen = widenable
-                    && plan.strategy.effective_fraction(plan.fraction)
-                        > req.strategy.effective_fraction(req.window.fraction);
-                if widen {
-                    req.window = WindowSpec::last(plan.fraction);
-                    req.strategy = plan.strategy;
-                }
-                let applied = if matches!(req.window.position, WindowPosition::Last) {
-                    req.window.fraction
-                } else {
-                    0.0
-                };
+                // guidance, near-CFG quality) -> CondOnly (drop). The
+                // actuator owns the whole rewrite — schedule edit,
+                // effective-shed floor, widenability — see
+                // WindowActuator::rewrite.
+                let (applied, widened) = self.actuator.rewrite(req, &load, meta);
                 self.counters.inc_admitted();
-                self.counters.observe_fraction(applied, widen);
+                self.counters.observe_fraction(applied, widened);
                 AdmissionDecision::Admit
             }
         }
@@ -446,6 +450,7 @@ impl QosPolicy for DeadlineQos {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::guidance::{GuidanceSchedule, WindowSpec};
 
     fn loaded_policy(cfg: QosConfig) -> DeadlineQos {
         let q = DeadlineQos::new(cfg).unwrap();
@@ -530,17 +535,24 @@ mod tests {
         let mut req = GenerationRequest::new("p").decode(false);
         let mut meta = QosMeta::default();
         assert!(matches!(q.admit(&mut req, &mut meta, 4), AdmissionDecision::Admit));
-        assert_eq!(req.window, WindowSpec::last(0.5));
+        assert_eq!(req.schedule, GuidanceSchedule::Window(WindowSpec::last(0.5)));
         // an explicit larger client window is kept
         let mut req = GenerationRequest::new("p").selective(WindowSpec::last(0.8)).decode(false);
         let mut meta = QosMeta::default();
         q.admit(&mut req, &mut meta, 4);
-        assert_eq!(req.window, WindowSpec::last(0.8));
+        assert_eq!(req.schedule, GuidanceSchedule::Window(WindowSpec::last(0.8)));
         // a deliberate non-Last placement is never moved
         let mut req = GenerationRequest::new("p").selective(WindowSpec::first(0.25)).decode(false);
         let mut meta = QosMeta::default();
         q.admit(&mut req, &mut meta, 4);
-        assert_eq!(req.window, WindowSpec::first(0.25));
+        assert_eq!(req.schedule, GuidanceSchedule::Window(WindowSpec::first(0.25)));
+        // the richer schedule kinds are deliberate experiments too
+        let mut req = GenerationRequest::new("p")
+            .with_schedule(GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 })
+            .decode(false);
+        let mut meta = QosMeta::default();
+        q.admit(&mut req, &mut meta, 4);
+        assert_eq!(req.schedule, GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 });
     }
 
     #[test]
@@ -565,13 +577,15 @@ mod tests {
             GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 }
         );
         // window widened by (m+1)/m so the effective shed still lands
-        assert!((req.strategy.effective_fraction(req.window.fraction) - 0.25).abs() < 1e-9);
+        assert!(
+            (req.strategy.effective_fraction(req.schedule.last_fraction()) - 0.25).abs() < 1e-9
+        );
         // heavy depth escalates to the paper's drop-guidance mode
         let mut req = GenerationRequest::new("p").decode(false);
         let mut meta = QosMeta::default();
         assert!(matches!(q.admit(&mut req, &mut meta, 4), AdmissionDecision::Admit));
         assert_eq!(req.strategy, GuidanceStrategy::CondOnly);
-        assert_eq!(req.window, WindowSpec::last(0.5));
+        assert_eq!(req.schedule, GuidanceSchedule::Window(WindowSpec::last(0.5)));
     }
 
     #[test]
@@ -594,8 +608,41 @@ mod tests {
             .decode(false);
         let mut meta = QosMeta::default();
         assert!(matches!(q.admit(&mut req, &mut meta, 2), AdmissionDecision::Admit));
-        assert_eq!(req.window, WindowSpec::last(0.3));
+        assert_eq!(req.schedule, GuidanceSchedule::Window(WindowSpec::last(0.3)));
         assert_eq!(req.strategy, GuidanceStrategy::CondOnly);
+    }
+
+    #[test]
+    fn adaptive_requests_admitted_but_never_rewritten() {
+        use crate::guidance::AdaptiveConfig;
+        let cfg = QosConfig {
+            enabled: true,
+            ramp_low: 0,
+            ramp_high: 4,
+            floor_fraction: 0.5,
+            max_queue_depth: 64,
+            ..QosConfig::default()
+        };
+        let q = loaded_policy(cfg);
+        // heavy load: a static request would be widened to the floor,
+        // but the controller owns adaptive requests end to end
+        let mut req = GenerationRequest::new("p")
+            .adaptive(AdaptiveConfig::default())
+            .decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(q.admit(&mut req, &mut meta, 4), AdmissionDecision::Admit));
+        assert_eq!(req.schedule, GuidanceSchedule::none());
+        assert_eq!(req.strategy, crate::guidance::GuidanceStrategy::CondOnly);
+        // feasibility prices adaptive at full dual cost: a deadline that
+        // only fits with widening is shed instead of falsely admitted
+        let mut req = GenerationRequest::new("p")
+            .adaptive(AdaptiveConfig::default())
+            .decode(false);
+        let mut meta = QosMeta::with_deadline_ms(90.0); // service EWMA is 100 ms
+        match q.admit(&mut req, &mut meta, 0) {
+            AdmissionDecision::Reject(RejectReason::DeadlineInfeasible { .. }) => {}
+            other => panic!("expected infeasible-deadline rejection, got {other:?}"),
+        }
     }
 
     #[test]
@@ -647,7 +694,7 @@ mod tests {
         let mut req = GenerationRequest::new("p").decode(false);
         let mut meta = QosMeta::default();
         assert!(matches!(q.admit(&mut req, &mut meta, 0), AdmissionDecision::Admit));
-        assert_eq!(req.window.fraction, 0.0);
+        assert_eq!(req.schedule.last_fraction(), 0.0);
         // saturate the slot budget: same depth now widens
         for _ in 0..50 {
             q.observe_slots(8, 8);
@@ -656,7 +703,7 @@ mod tests {
         let mut meta = QosMeta::default();
         assert!(matches!(q.admit(&mut req, &mut meta, 0), AdmissionDecision::Admit));
         assert!(
-            req.window.fraction > 0.0,
+            req.schedule.last_fraction() > 0.0,
             "saturated slot occupancy must widen the window"
         );
     }

@@ -22,7 +22,6 @@ use std::collections::{BinaryHeap, VecDeque};
 use std::time::Duration;
 
 use crate::engine::GenerationRequest;
-use crate::guidance::WindowPosition;
 
 use super::{service_ms_at, AdmissionDecision, DeadlineQos, QosMeta, QosPolicy};
 
@@ -232,14 +231,12 @@ pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos
                         rejected += 1;
                     }
                     AdmissionDecision::Admit => {
-                        // the service model keys on the *effective*
-                        // single-pass fraction: a reuse window sheds less
-                        // than its size (refresh steps pay dual cost)
-                        let f = if matches!(req.window.position, WindowPosition::Last) {
-                            req.strategy.effective_fraction(req.window.fraction)
-                        } else {
-                            0.0
-                        };
+                        // the service model keys on the plan-derived
+                        // *effective* single-pass fraction — the same
+                        // view the coordinator feeds back: a reuse
+                        // window sheds less than its size (refresh and
+                        // cold-cache steps pay dual cost)
+                        let f = req.effective_shed();
                         fractions.push(f);
                         st.queue.push_back(Queued {
                             arrive_ms: t,

@@ -27,9 +27,34 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::config::EngineConfig;
 use crate::coordinator::Coordinator;
 use crate::error::{Error, Result};
+use crate::guidance::{AdaptiveConfig, GuidanceSchedule, GuidanceStrategy};
 use crate::json::{self, Value};
+
+/// Server-side guidance defaults (from the `[engine]`/`[guidance]`
+/// config and the `serve` CLI) applied to requests that carry no
+/// guidance fields of their own. The triple is applied wholesale —
+/// schedule, strategy and adaptive interact, so a request that sets
+/// *any* of them keeps exactly what it asked for.
+#[derive(Debug, Clone, Default)]
+pub struct GuidanceDefaults {
+    pub schedule: GuidanceSchedule,
+    pub strategy: GuidanceStrategy,
+    pub adaptive: Option<AdaptiveConfig>,
+}
+
+impl GuidanceDefaults {
+    /// The serving defaults a validated engine config implies.
+    pub fn from_engine(cfg: &EngineConfig) -> GuidanceDefaults {
+        GuidanceDefaults {
+            schedule: cfg.schedule.clone(),
+            strategy: cfg.guidance_strategy,
+            adaptive: cfg.adaptive,
+        }
+    }
+}
 
 /// A running server (listener thread + per-connection threads).
 pub struct Server {
@@ -41,6 +66,19 @@ pub struct Server {
 impl Server {
     /// Bind and serve in background threads.
     pub fn start(coordinator: Arc<Coordinator>, bind: &str) -> Result<Server> {
+        Self::start_with_defaults(coordinator, bind, GuidanceDefaults::default())
+    }
+
+    /// Bind and serve with server-side guidance defaults: requests whose
+    /// payload carries none of the guidance fields (schedule, strategy,
+    /// adaptive) run the configured default triple — the `[engine]` /
+    /// `[guidance]` TOML and `serve --adaptive`/schedule-flag surface.
+    /// A request that sets any of those fields keeps them untouched.
+    pub fn start_with_defaults(
+        coordinator: Arc<Coordinator>,
+        bind: &str,
+        defaults: GuidanceDefaults,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(bind)
             .map_err(|e| Error::io(format!("binding {bind}"), e))?;
         let addr = listener
@@ -48,6 +86,7 @@ impl Server {
             .map_err(|e| Error::io("local_addr", e))?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let defaults = Arc::new(defaults);
         let handle = std::thread::spawn(move || {
             listener.set_nonblocking(false).ok();
             for stream in listener.incoming() {
@@ -58,8 +97,9 @@ impl Server {
                     Ok(s) => {
                         let coord = Arc::clone(&coordinator);
                         let stop3 = Arc::clone(&stop2);
+                        let defaults = Arc::clone(&defaults);
                         std::thread::spawn(move || {
-                            let _ = handle_connection(s, coord, stop3);
+                            let _ = handle_connection(s, coord, stop3, defaults);
                         });
                     }
                     Err(_) => break,
@@ -94,6 +134,7 @@ fn handle_connection(
     stream: TcpStream,
     coordinator: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
+    defaults: Arc<GuidanceDefaults>,
 ) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -107,7 +148,7 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let response = dispatch(&line, &coordinator, &stop);
+        let response = dispatch(&line, &coordinator, &stop, &defaults);
         writer.write_all(response.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -118,7 +159,12 @@ fn handle_connection(
     }
 }
 
-fn dispatch(line: &str, coordinator: &Arc<Coordinator>, stop: &Arc<AtomicBool>) -> Value {
+fn dispatch(
+    line: &str,
+    coordinator: &Arc<Coordinator>,
+    stop: &Arc<AtomicBool>,
+    defaults: &GuidanceDefaults,
+) -> Value {
     let parsed = match json::from_str(line) {
         Ok(v) => v,
         Err(e) => return err_response(None, &format!("bad json: {e}")),
@@ -158,13 +204,24 @@ fn dispatch(line: &str, coordinator: &Arc<Coordinator>, stop: &Arc<AtomicBool>) 
         Some("generate") => match parse_request(&parsed) {
             // submit through the QoS path: a shed request comes back as
             // a structured 429/503 response, a queue-expired one as 504
-            Ok(sr) => match coordinator
-                .submit_qos(sr.request.clone(), sr.meta)
-                .and_then(|ticket| ticket.wait())
-            {
-                Ok(out) => render_output(id, &sr, &out),
-                Err(e) => render_failure(id, &e),
-            },
+            Ok(mut sr) => {
+                // server-side guidance defaults: applied wholesale, and
+                // only when the client set none of the guidance fields —
+                // a request that picked any schedule/strategy/adaptive
+                // field keeps exactly what it asked for
+                if !sr.schedule_set && !sr.strategy_set && !sr.adaptive_set {
+                    sr.request.schedule = defaults.schedule.clone();
+                    sr.request.strategy = defaults.strategy;
+                    sr.request.adaptive = defaults.adaptive;
+                }
+                match coordinator
+                    .submit_qos(sr.request.clone(), sr.meta)
+                    .and_then(|ticket| ticket.wait())
+                {
+                    Ok(out) => render_output(id, &sr, &out),
+                    Err(e) => render_failure(id, &e),
+                }
+            }
             Err(e) => err_response(id, &e.to_string()),
         },
         Some(other) => err_response(id, &format!("unknown op {other:?}")),

@@ -2,7 +2,7 @@
 
 use crate::engine::{GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
-use crate::guidance::{GuidanceStrategy, WindowSpec};
+use crate::guidance::{AdaptiveConfig, GuidanceSchedule, GuidanceStrategy, WindowPosition};
 use crate::image::encode_png;
 use crate::json::Value;
 use crate::qos::{Priority, QosMeta};
@@ -16,6 +16,17 @@ pub struct ServerRequest {
     pub request: GenerationRequest,
     /// Serving metadata: deadline + priority class (QoS admission).
     pub meta: QosMeta,
+    /// Did the payload carry an explicit `adaptive` field? A client's
+    /// explicit `false` must override a server-side adaptive default,
+    /// which an absent field must not.
+    pub adaptive_set: bool,
+    /// Did the payload carry an explicit schedule field
+    /// (`window_fraction` / `window_position` / `segments` / `interval`
+    /// / `cadence`)? Server-side guidance defaults must not override a
+    /// client's deliberate schedule experiment.
+    pub schedule_set: bool,
+    /// Did the payload carry an explicit `strategy` field?
+    pub strategy_set: bool,
     /// Include the PNG (base64) in the response.
     pub return_image: bool,
     /// Include the raw final latent in the response.
@@ -48,28 +59,58 @@ pub fn parse_request(v: &Value) -> Result<ServerRequest> {
             s.as_str().ok_or_else(|| Error::Protocol("scheduler must be a string".into()))?,
         )?;
     }
-    if let Some(f) = v.get("window_fraction") {
-        let fraction = f
-            .as_f64()
-            .ok_or_else(|| Error::Protocol("window_fraction must be a number".into()))?;
-        let position = v
-            .get("window_position")
-            .map(|p| {
-                p.as_str()
-                    .map(String::from)
-                    .ok_or_else(|| Error::Protocol("window_position must be a string".into()))
-            })
-            .transpose()?
-            .unwrap_or_else(|| "last".into());
-        req.window = match position.as_str() {
-            "last" => WindowSpec::last(fraction),
-            "first" => WindowSpec::first(fraction),
-            "middle" => WindowSpec::middle(fraction),
-            other => {
-                return Err(Error::Protocol(format!("unknown window_position {other:?}")))
-            }
-        };
+    // ---- the schedule surface: type extraction only — mutual
+    // exclusion and per-kind dispatch live in
+    // GuidanceSchedule::from_parts, shared with the TOML and CLI
+    // surfaces
+    let position = match v.get("window_position") {
+        Some(p) => Some(
+            WindowPosition::parse(p.as_str().ok_or_else(|| {
+                Error::Protocol("window_position must be a string".into())
+            })?)
+            .map_err(|e| Error::Protocol(e.to_string()))?,
+        ),
+        None => None,
+    };
+    // window_position alone still selects a (zero-width) window so a
+    // typo'd combination is validated instead of silently ignored
+    let window = match v.get("window_fraction") {
+        Some(f) => {
+            let fraction = f
+                .as_f64()
+                .ok_or_else(|| Error::Protocol("window_fraction must be a number".into()))?;
+            Some((fraction, position.unwrap_or(WindowPosition::Last)))
+        }
+        None => position.map(|p| (0.0, p)),
+    };
+    let segments = match v.get("segments") {
+        Some(s) => Some(
+            s.as_str()
+                .ok_or_else(|| Error::Protocol("segments must be a string".into()))?,
+        ),
+        None => None,
+    };
+    let interval = match v.get("interval") {
+        Some(s) => Some(
+            s.as_str()
+                .ok_or_else(|| Error::Protocol("interval must be a string".into()))?,
+        ),
+        None => None,
+    };
+    let cadence = match v.get("cadence") {
+        Some(s) => Some(s.as_usize().ok_or_else(|| {
+            Error::Protocol("cadence must be a positive integer".into())
+        })?),
+        None => None,
+    };
+    let schedule_set =
+        window.is_some() || segments.is_some() || interval.is_some() || cadence.is_some();
+    if let Some(s) = GuidanceSchedule::from_parts(window, segments, interval, cadence)
+        .map_err(|e| Error::Protocol(e.to_string()))?
+    {
+        req.schedule = s;
     }
+    let strategy_set = v.get("strategy").is_some();
     if let Some(s) = v.get("strategy") {
         let name = s
             .as_str()
@@ -83,6 +124,49 @@ pub fn parse_request(v: &Value) -> Result<ServerRequest> {
         req.strategy = GuidanceStrategy::parse(name, refresh)?;
     } else if v.get("refresh_every").is_some() {
         return Err(Error::Protocol("refresh_every requires a strategy field".into()));
+    }
+    // ---- the adaptive (online) skip controller: `"adaptive": true`
+    // enables it with defaults, `adaptive_*` fields refine it; knobs
+    // without the switch are a protocol error (mirrors refresh_every)
+    let adaptive_knobs = [
+        "adaptive_threshold",
+        "adaptive_patience",
+        "adaptive_min_dual_fraction",
+        "adaptive_probe_every",
+    ];
+    let adaptive_set = v.get("adaptive").is_some();
+    let enabled = match v.get("adaptive") {
+        Some(b) => b
+            .as_bool()
+            .ok_or_else(|| Error::Protocol("adaptive must be a boolean".into()))?,
+        None => false,
+    };
+    if enabled {
+        let mut a = AdaptiveConfig::default();
+        if let Some(t) = v.get("adaptive_threshold") {
+            a.threshold = t
+                .as_f64()
+                .ok_or_else(|| Error::Protocol("adaptive_threshold must be a number".into()))?;
+        }
+        if let Some(p) = v.get("adaptive_patience") {
+            a.patience = p
+                .as_usize()
+                .ok_or_else(|| Error::Protocol("adaptive_patience must be an integer".into()))?;
+        }
+        if let Some(f) = v.get("adaptive_min_dual_fraction") {
+            a.min_dual_fraction = f.as_f64().ok_or_else(|| {
+                Error::Protocol("adaptive_min_dual_fraction must be a number".into())
+            })?;
+        }
+        if let Some(p) = v.get("adaptive_probe_every") {
+            a.probe_every = p.as_usize().ok_or_else(|| {
+                Error::Protocol("adaptive_probe_every must be an integer".into())
+            })?;
+        }
+        a.validate().map_err(|e| Error::Protocol(e.to_string()))?;
+        req.adaptive = Some(a);
+    } else if let Some(orphan) = adaptive_knobs.iter().find(|&&k| v.get(k).is_some()) {
+        return Err(Error::Protocol(format!("{orphan} requires \"adaptive\": true")));
     }
     let mut meta = QosMeta::default();
     if let Some(d) = v.get("deadline_ms") {
@@ -108,7 +192,15 @@ pub fn parse_request(v: &Value) -> Result<ServerRequest> {
     let return_latent = v.get("return_latent").and_then(Value::as_bool).unwrap_or(false);
     req.decode = return_image || req.decode;
     req.validate()?;
-    Ok(ServerRequest { request: req, meta, return_image, return_latent })
+    Ok(ServerRequest {
+        request: req,
+        meta,
+        adaptive_set,
+        schedule_set,
+        strategy_set,
+        return_image,
+        return_latent,
+    })
 }
 
 /// Render a generation failure, giving QoS outcomes their structured
@@ -144,8 +236,11 @@ pub fn render_output(id: Option<i64>, sr: &ServerRequest, out: &GenerationOutput
         .with("unet_evals", out.unet_evals as i64)
         .with("steps", out.steps as i64)
         // from the output, not sr: QoS admission may have rewritten the
-        // request's strategy/window after parsing
+        // request's strategy/schedule after parsing
         .with("strategy", out.strategy.name())
+        // the executed plan summary — the same IR the eval-count
+        // invariant audits, so clients can see exactly what ran
+        .with("plan", out.plan_summary.as_str())
         .with("unet_cond_ms", out.breakdown.unet_cond_ms)
         .with("unet_uncond_ms", out.breakdown.unet_uncond_ms)
         .with("combine_ms", out.breakdown.combine_ms)
@@ -173,6 +268,7 @@ pub fn render_output(id: Option<i64>, sr: &ServerRequest, out: &GenerationOutput
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::guidance::WindowSpec;
     use crate::json;
     use crate::metrics::StepBreakdown;
 
@@ -193,7 +289,7 @@ mod tests {
         assert_eq!(sr.request.guidance_scale, 9.6);
         assert_eq!(sr.request.seed, 3);
         assert_eq!(sr.request.scheduler, SchedulerKind::Ddim);
-        assert_eq!(sr.request.window, WindowSpec::last(0.4));
+        assert_eq!(sr.request.schedule, GuidanceSchedule::Window(WindowSpec::last(0.4)));
         assert!(sr.return_image);
         assert!(!sr.return_latent);
     }
@@ -203,7 +299,95 @@ mod tests {
         let sr = parse(r#"{"op":"generate","prompt":"x"}"#).unwrap();
         assert_eq!(sr.request.steps, 50);
         assert_eq!(sr.request.guidance_scale, 7.5);
-        assert_eq!(sr.request.window, WindowSpec::none());
+        assert_eq!(sr.request.schedule, GuidanceSchedule::none());
+        assert_eq!(sr.request.adaptive, None);
+    }
+
+    #[test]
+    fn schedule_fields_parse() {
+        let sr = parse(r#"{"op":"generate","prompt":"x","interval":"0.25-0.75"}"#).unwrap();
+        assert_eq!(sr.request.schedule, GuidanceSchedule::Interval { lo: 0.25, hi: 0.75 });
+        let sr = parse(r#"{"op":"generate","prompt":"x","cadence":4}"#).unwrap();
+        assert_eq!(sr.request.schedule, GuidanceSchedule::Cadence { every: 4 });
+        let sr =
+            parse(r#"{"op":"generate","prompt":"x","segments":"0.0-0.2,0.8-1.0"}"#).unwrap();
+        assert!(matches!(sr.request.schedule, GuidanceSchedule::Segments(ref s) if s.len() == 2));
+        // offset placements round-trip through the shared parser
+        let sr = parse(
+            r#"{"op":"generate","prompt":"x","window_fraction":0.25,
+               "window_position":"offset(0.5)"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            sr.request.schedule,
+            GuidanceSchedule::Window(WindowSpec::at_offset(0.5, 0.25))
+        );
+        // schedule_set records whether any schedule field was explicit
+        assert!(sr.schedule_set);
+        assert!(parse(r#"{"op":"generate","prompt":"x","cadence":4}"#).unwrap().schedule_set);
+        assert!(!parse(r#"{"op":"generate","prompt":"x"}"#).unwrap().schedule_set);
+        // schedule fields are mutually exclusive
+        assert!(parse(r#"{"op":"generate","prompt":"x","cadence":4,"interval":"0.2-0.8"}"#)
+            .is_err());
+        assert!(parse(
+            r#"{"op":"generate","prompt":"x","window_fraction":0.2,"cadence":4}"#
+        )
+        .is_err());
+        // invalid values are protocol errors, not silent defaults
+        assert!(parse(r#"{"op":"generate","prompt":"x","cadence":0}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","interval":"0.8-0.2"}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","segments":7}"#).is_err());
+        assert!(parse(
+            r#"{"op":"generate","prompt":"x","window_fraction":0.2,
+               "window_position":"offset(2.0)"}"#
+        )
+        .is_err());
+        // window_position alone is validated, not silently dropped
+        assert!(parse(r#"{"op":"generate","prompt":"x","window_position":"bogus"}"#).is_err());
+        let sr = parse(r#"{"op":"generate","prompt":"x","window_position":"first"}"#).unwrap();
+        assert_eq!(sr.request.schedule, GuidanceSchedule::Window(WindowSpec::first(0.0)));
+        assert!(sr.schedule_set);
+    }
+
+    #[test]
+    fn adaptive_fields_parse() {
+        let sr = parse(r#"{"op":"generate","prompt":"x","adaptive":true}"#).unwrap();
+        assert_eq!(sr.request.adaptive, Some(AdaptiveConfig::default()));
+        let sr = parse(
+            r#"{"op":"generate","prompt":"x","adaptive":true,"adaptive_threshold":0.1,
+               "adaptive_patience":3,"adaptive_min_dual_fraction":0.4,
+               "adaptive_probe_every":6}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            sr.request.adaptive,
+            Some(AdaptiveConfig {
+                threshold: 0.1,
+                patience: 3,
+                min_dual_fraction: 0.4,
+                probe_every: 6
+            })
+        );
+        // explicit off — adaptive_set records the client's explicit
+        // choice so a server-side adaptive default cannot override it
+        let sr = parse(r#"{"op":"generate","prompt":"x","adaptive":false}"#).unwrap();
+        assert_eq!(sr.request.adaptive, None);
+        assert!(sr.adaptive_set);
+        assert!(!parse(r#"{"op":"generate","prompt":"x"}"#).unwrap().adaptive_set);
+        // adaptive + an explicit schedule is a conflict, not a silent
+        // precedence rule (the engine would ignore the schedule)
+        assert!(parse(r#"{"op":"generate","prompt":"x","adaptive":true,"cadence":4}"#).is_err());
+        // orphan knobs and bad values are protocol errors
+        assert!(parse(r#"{"op":"generate","prompt":"x","adaptive_threshold":0.1}"#).is_err());
+        assert!(parse(r#"{"op":"generate","prompt":"x","adaptive":7}"#).is_err());
+        assert!(parse(
+            r#"{"op":"generate","prompt":"x","adaptive":true,"adaptive_threshold":-1}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"op":"generate","prompt":"x","adaptive":true,"adaptive_min_dual_fraction":2.0}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -306,6 +490,7 @@ mod tests {
             unet_evals: 90,
             steps: 50,
             strategy: GuidanceStrategy::CondOnly,
+            plan_summary: "40D 10C".into(),
         };
         let v = render_output(Some(7), &sr, &out);
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
@@ -314,6 +499,8 @@ mod tests {
         // the echoed strategy comes from the executed output, not the
         // parsed request (QoS admission may rewrite it)
         assert_eq!(v.get("strategy").unwrap().as_str(), Some("cond-only"));
+        // the executed plan is echoed from the same IR the invariant audits
+        assert_eq!(v.get("plan").unwrap().as_str(), Some("40D 10C"));
         assert!(v.get("png_b64").is_none());
         assert!(v.get("latent").is_none());
     }
@@ -330,6 +517,7 @@ mod tests {
             unet_evals: 2,
             steps: 1,
             strategy: GuidanceStrategy::CondOnly,
+            plan_summary: "1D".into(),
         };
         let v = render_output(None, &sr, &out);
         let arr = v.get("latent").unwrap().as_arr().unwrap();

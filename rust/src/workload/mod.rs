@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::Coordinator;
 use crate::engine::GenerationRequest;
 use crate::error::{Error, Result};
-use crate::guidance::{GuidanceStrategy, WindowSpec};
+use crate::guidance::{GuidanceSchedule, GuidanceStrategy};
 use crate::metrics::SampleStats;
 use crate::prompts;
 use crate::qos::{Priority, QosMeta};
@@ -100,9 +100,10 @@ pub struct WorkloadSpec {
     /// this is the knob that exercises the difference under replay.
     pub steps_choices: Vec<usize>,
     pub scheduler: SchedulerKind,
-    /// Selective-guidance window applied to all requests.
-    pub window: WindowSpec,
-    /// Guidance strategy for the optimized window (reuse lattice).
+    /// Guidance schedule applied to all requests (windows, segments,
+    /// limited intervals, cadences).
+    pub schedule: GuidanceSchedule,
+    /// Guidance strategy for the optimized steps (reuse lattice).
     pub strategy: GuidanceStrategy,
     pub guidance_scale: f32,
     pub decode: bool,
@@ -121,7 +122,7 @@ impl Default for WorkloadSpec {
             steps: 50,
             steps_choices: Vec::new(),
             scheduler: SchedulerKind::Pndm,
-            window: WindowSpec::none(),
+            schedule: GuidanceSchedule::none(),
             strategy: GuidanceStrategy::CondOnly,
             guidance_scale: 7.5,
             decode: false,
@@ -159,7 +160,7 @@ impl WorkloadSpec {
                     .steps(steps)
                     .scheduler(self.scheduler)
                     .guidance_scale(self.guidance_scale)
-                    .selective(self.window)
+                    .with_schedule(self.schedule.clone())
                     .strategy(self.strategy)
                     .seed(self.seed.wrapping_add(i as u64))
                     .decode(self.decode);
@@ -391,9 +392,10 @@ mod tests {
 
     #[test]
     fn trace_synthesis_covers_corpus() {
+        use crate::guidance::WindowSpec;
         let spec = WorkloadSpec {
             num_requests: 70,
-            window: WindowSpec::last(0.2),
+            schedule: GuidanceSchedule::Window(WindowSpec::last(0.2)),
             ..WorkloadSpec::default()
         };
         let trace = spec.synthesize();
@@ -402,7 +404,9 @@ mod tests {
         assert_eq!(trace[0].request.prompt, prompts::TABLE2[0]);
         assert_eq!(trace[61].request.prompt, prompts::TABLE2[0]);
         // every request carries the spec's policy and a distinct seed
-        assert!(trace.iter().all(|t| t.request.window == WindowSpec::last(0.2)));
+        assert!(trace
+            .iter()
+            .all(|t| t.request.schedule == GuidanceSchedule::Window(WindowSpec::last(0.2))));
         let mut seeds: Vec<u64> = trace.iter().map(|t| t.request.seed).collect();
         seeds.dedup();
         assert_eq!(seeds.len(), 70);
@@ -414,12 +418,15 @@ mod tests {
         let strategy = GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every: 3 };
         let spec = WorkloadSpec {
             num_requests: 6,
-            window: WindowSpec::last(0.3),
+            schedule: GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 },
             strategy,
             ..WorkloadSpec::default()
         };
         let trace = spec.synthesize();
         assert!(trace.iter().all(|t| t.request.strategy == strategy));
+        assert!(trace
+            .iter()
+            .all(|t| t.request.schedule == GuidanceSchedule::Interval { lo: 0.2, hi: 0.8 }));
         // default spec keeps the paper's drop-guidance mode
         let plain = WorkloadSpec { num_requests: 2, ..WorkloadSpec::default() }.synthesize();
         assert!(plain.iter().all(|t| t.request.strategy == GuidanceStrategy::CondOnly));

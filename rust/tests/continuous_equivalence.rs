@@ -19,7 +19,7 @@ use selective_guidance::coordinator::{
 };
 use selective_guidance::engine::{Engine, GenerationOutput, GenerationRequest};
 use selective_guidance::error::Error;
-use selective_guidance::guidance::{GuidanceStrategy, ReuseKind, WindowSpec};
+use selective_guidance::guidance::{GuidanceSchedule, GuidanceStrategy, ReuseKind, WindowSpec};
 use selective_guidance::qos::{DeadlineQos, QosConfig, QosMeta};
 use selective_guidance::runtime::ModelStack;
 use selective_guidance::scheduler::SchedulerKind;
@@ -385,7 +385,7 @@ fn replay_mixed_step_trace_through_continuous_coordinator() {
         num_requests: 9,
         steps_choices: vec![4, 6, 8],
         scheduler: SchedulerKind::Ddim,
-        window: WindowSpec::last(0.5),
+        schedule: GuidanceSchedule::Window(WindowSpec::last(0.5)),
         decode: false,
         ..WorkloadSpec::default()
     };

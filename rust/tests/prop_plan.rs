@@ -1,0 +1,222 @@
+//! Plan-IR property suite (synthetic backend — always runs).
+//!
+//! Sweeps strategy × schedule (window / segments / interval / cadence) ×
+//! step count and asserts the three ISSUE-4 properties:
+//!
+//! (a) plan compilation is deterministic — same (schedule, scale,
+//!     strategy, steps) always yields the same plan;
+//! (b) the engine's executed UNet evals equal `plan.total_unet_evals()`
+//!     (the engine hard-asserts this in `finish`; here we drive it
+//!     through randomized configurations and check the output too);
+//! (c) plan-equivalent configs — e.g. `Last(f)` vs the equivalent
+//!     `Segments` / `Interval` — produce bit-identical images under both
+//!     fixed (lock-step `generate`) and continuous (slot-budgeted
+//!     cohort) execution.
+
+use std::sync::Arc;
+
+use selective_guidance::config::{DualStrategy, EngineConfig};
+use selective_guidance::coordinator::ContinuousBatcher;
+use selective_guidance::engine::{Engine, GenerationOutput, GenerationRequest};
+use selective_guidance::guidance::{
+    GuidancePlan, GuidanceSchedule, GuidanceStrategy, ReuseKind, Segment, WindowSpec,
+};
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::testutil::prop::{forall, Gen};
+
+fn engine(dual: DualStrategy) -> Arc<Engine> {
+    let cfg = EngineConfig { dual_strategy: dual, ..EngineConfig::default() };
+    Arc::new(Engine::new(Arc::new(ModelStack::synthetic()), cfg))
+}
+
+fn random_strategy(g: &mut Gen) -> GuidanceStrategy {
+    match g.usize_in(0, 2) {
+        0 => GuidanceStrategy::CondOnly,
+        1 => GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: g.usize_in(0, 5) },
+        _ => GuidanceStrategy::Reuse {
+            kind: ReuseKind::Extrapolate,
+            refresh_every: g.usize_in(0, 5),
+        },
+    }
+}
+
+fn random_schedule(g: &mut Gen) -> GuidanceSchedule {
+    match g.usize_in(0, 4) {
+        0 => GuidanceSchedule::Window(WindowSpec::last(g.f64_in(0.0, 1.0))),
+        1 => GuidanceSchedule::Window(WindowSpec::at_offset(
+            g.f64_in(0.0, 1.0),
+            g.f64_in(0.0, 1.0),
+        )),
+        2 => {
+            let lo = g.f64_in(0.0, 1.0);
+            GuidanceSchedule::Interval { lo, hi: g.f64_in(lo, 1.0) }
+        }
+        3 => GuidanceSchedule::Cadence { every: g.usize_in(1, 8) },
+        _ => {
+            let mut segs = Vec::new();
+            for _ in 0..g.usize_in(1, 3) {
+                let lo = g.f64_in(0.0, 1.0);
+                let hi = g.f64_in(lo, 1.0);
+                segs.push(if g.bool() {
+                    Segment::optimized(lo, hi)
+                } else {
+                    Segment::dual(lo, hi)
+                });
+            }
+            GuidanceSchedule::Segments(segs)
+        }
+    }
+}
+
+#[test]
+fn plan_compilation_is_deterministic() {
+    forall("plan determinism", 300, |g| {
+        let n = g.usize_in(0, 150);
+        let schedule = random_schedule(g);
+        let strategy = random_strategy(g);
+        let scale = if g.bool() { g.f32_in(1.5, 12.0) } else { 1.0 };
+        let a = GuidancePlan::compile(&schedule, scale, strategy, n).unwrap();
+        let b = GuidancePlan::compile(&schedule, scale, strategy, n).unwrap();
+        assert_eq!(a, b, "{schedule:?} {strategy:?} n={n}");
+        assert_eq!(a.len(), n);
+        // internal consistency of the cost queries
+        assert_eq!(a.total_unet_evals(), a.remaining_cost(0));
+        assert!(a.total_unet_evals() >= n.min(a.len()));
+        assert!(a.total_unet_evals() <= 2 * n);
+        assert_eq!(
+            a.single_pass_steps() + a.total_unet_evals(),
+            2 * n,
+            "single + total must be 2n (each single-pass step saves one eval)"
+        );
+        for from in [0, n / 2, n] {
+            assert!(a.peak_remaining_cost(from) <= 2);
+            assert!(a.remaining_cost(from) >= a.peak_remaining_cost(from).min(1));
+        }
+    });
+}
+
+#[test]
+fn engine_executed_evals_match_plan() {
+    let engines = [engine(DualStrategy::TwoB1), engine(DualStrategy::FusedB2)];
+    forall("executed evals == plan total", 40, |g| {
+        let steps = g.usize_in(1, 10);
+        let req = GenerationRequest::new(format!("{} {}", g.word(8), g.word(8)))
+            .steps(steps)
+            .scheduler(*g.choose(&[SchedulerKind::Ddim, SchedulerKind::Euler]))
+            .seed(g.u64())
+            .guidance_scale(if g.bool() { g.f32_in(1.5, 12.0) } else { 1.0 })
+            .with_schedule(random_schedule(g))
+            .strategy(random_strategy(g))
+            .decode(false);
+        let plan = req.plan().unwrap();
+        let e = &engines[g.usize_in(0, 1)];
+        // finish() hard-asserts the invariant; the output must agree too
+        let out = e.generate(&req).expect("generate");
+        assert_eq!(
+            out.unet_evals,
+            plan.total_unet_evals(),
+            "{:?} {:?}",
+            req.schedule,
+            req.strategy
+        );
+        assert!((req.effective_shed() - plan.effective_fraction()).abs() < 1e-12);
+    });
+}
+
+/// Build three schedules with *identical* optimized step sets: the
+/// paper's `Last` window over the last `k` of `n` steps, the equivalent
+/// single-segment schedule, and the equivalent guided interval.
+fn equivalent_trio(k: usize, n: usize) -> [GuidanceSchedule; 3] {
+    // fraction with floor(f·n) == k, robust to fp rounding
+    let f = if k == n { 1.0 } else { (k as f64 + 0.5) / n as f64 };
+    let split = (n - k) as f64 / n as f64;
+    [
+        GuidanceSchedule::Window(WindowSpec::last(f)),
+        GuidanceSchedule::Segments(vec![Segment::optimized(split, 1.0)]),
+        GuidanceSchedule::Interval { lo: 0.0, hi: split },
+    ]
+}
+
+#[test]
+fn equivalent_schedules_compile_to_the_same_plan() {
+    forall("schedule equivalence (plans)", 200, |g| {
+        let n = g.usize_in(1, 100);
+        let k = g.usize_in(0, n);
+        let strategy = random_strategy(g);
+        let scale = g.f32_in(1.5, 12.0);
+        let plans: Vec<GuidancePlan> = equivalent_trio(k, n)
+            .iter()
+            .map(|s| GuidancePlan::compile(s, scale, strategy, n).unwrap())
+            .collect();
+        assert_eq!(plans[0], plans[1], "window vs segments, k={k} n={n}");
+        assert_eq!(plans[0], plans[2], "window vs interval, k={k} n={n}");
+    });
+}
+
+#[test]
+fn equivalent_schedules_bit_identical_fixed_and_continuous() {
+    for dual in [DualStrategy::TwoB1, DualStrategy::FusedB2] {
+        let e = engine(dual);
+        forall(&format!("schedule equivalence e2e ({dual:?})"), 12, |g| {
+            let n = g.usize_in(2, 8);
+            let k = g.usize_in(0, n);
+            let strategy = random_strategy(g);
+            let seed = g.u64();
+            let reqs: Vec<GenerationRequest> = equivalent_trio(k, n)
+                .into_iter()
+                .map(|s| {
+                    GenerationRequest::new("equivalence probe")
+                        .steps(n)
+                        .scheduler(SchedulerKind::Ddim)
+                        .seed(seed)
+                        .with_schedule(s)
+                        .strategy(strategy)
+                        .decode(true)
+                })
+                .collect();
+            // fixed (lock-step) execution
+            let fixed: Vec<GenerationOutput> =
+                reqs.iter().map(|r| e.generate(r).expect("generate")).collect();
+            for out in &fixed[1..] {
+                assert_eq!(fixed[0].latent, out.latent, "fixed-mode latents diverged");
+                assert_eq!(fixed[0].unet_evals, out.unet_evals);
+                assert_eq!(
+                    fixed[0].image.as_ref().unwrap().data,
+                    out.image.as_ref().unwrap().data,
+                    "fixed-mode images diverged"
+                );
+                assert_eq!(fixed[0].plan_summary, out.plan_summary);
+            }
+            // continuous (slot-budgeted cohort) execution: all three in
+            // one cohort — composition must not leak into any output
+            let mut cb = ContinuousBatcher::new(Arc::clone(&e), 6).expect("batcher");
+            let mut ids = Vec::new();
+            for r in &reqs {
+                ids.push(cb.try_admit(r).expect("admit").expect("headroom for all three"));
+            }
+            let mut outs: Vec<Option<GenerationOutput>> = vec![None, None, None];
+            let mut guard = 0;
+            while outs.iter().any(|o| o.is_none()) {
+                for (id, out) in cb.step().expect("step").retired {
+                    let idx = ids.iter().position(|&i| i == id).unwrap();
+                    outs[idx] = Some(out);
+                }
+                guard += 1;
+                assert!(guard < 100, "cohort failed to drain");
+            }
+            for out in outs.iter().map(|o| o.as_ref().unwrap()) {
+                assert_eq!(
+                    fixed[0].latent, out.latent,
+                    "continuous-mode latent diverged from fixed"
+                );
+                assert_eq!(fixed[0].unet_evals, out.unet_evals);
+                assert_eq!(
+                    fixed[0].image.as_ref().unwrap().data,
+                    out.image.as_ref().unwrap().data,
+                    "continuous-mode image diverged"
+                );
+            }
+        });
+    }
+}
