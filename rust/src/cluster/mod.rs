@@ -1,0 +1,1102 @@
+//! Replica cluster: plan-cost-aware routing over heterogeneous engine
+//! replicas (DESIGN.md §11).
+//!
+//! One process, N **replicas** — each an independent [`Coordinator`]
+//! (its own batch mode, slot budget and worker pool, modeling mixed
+//! hardware) over a shared [`Engine`]. The cluster owns what used to be
+//! per-coordinator concerns:
+//!
+//! ```text
+//!   clients ─> submit ─> [cluster QoS: aggregate depth] ─> [Router]
+//!                            │ 429/503                       │ plan-cost
+//!                            ▼                               ▼ placement
+//!                          shed                      ┌─ replica 0 (continuous, budget 8)
+//!                                                    ├─ replica 1 (continuous, budget 4)
+//!                                relay threads <──── └─ replica 2 (fixed, batch 4)
+//!                                  │  completions: cluster latency histogram
+//!                                  └─ failures/sheds: requeue onto survivors
+//! ```
+//!
+//! * **Admission** is cluster-level: the [`QosPolicy`] sees the
+//!   *aggregate* outstanding depth across every replica (and, via the
+//!   shared policy installed in each replica coordinator, the merged
+//!   slot-occupancy / service-time feedback from all workers). The
+//!   actuator stays what it has been since DESIGN.md §10 — a per-request
+//!   plan rewriter. Replicas execute pre-admitted work
+//!   ([`Coordinator::submit_preadmitted`]), so nothing is admitted twice.
+//! * **Routing** is plan-cost-aware ([`RoutePolicy::PlanCost`]): each
+//!   admitted request is weighed by its compiled plan's
+//!   `total_unet_evals()` — a 50%-optimized schedule counts as half the
+//!   load of a full-CFG request — and placed by weighted
+//!   least-outstanding-evals with power-of-two-choices. Round-robin is
+//!   kept as the measurable baseline (`--route round-robin`).
+//! * **Lifecycle**: [`ReplicaSet::kill`] ejects a replica — the router
+//!   stops placing on it, its executing cohort drains, and its queued
+//!   jobs come back as explicit 503 sheds which the relay **requeues**
+//!   onto surviving replicas (each job carries an excluded-replica list
+//!   so a poison job cannot ping-pong forever). Graceful
+//!   [`ReplicaSet::shutdown`] resolves every outstanding ticket.
+//!
+//! `tests/cluster_equivalence.rs` holds the core invariants: a 1-replica
+//! cluster is bit-identical to the plain coordinator, placements are
+//! deterministic (same trace + seed + policy), and a mid-trace kill
+//! loses no requests. `benches/cluster_scaling.rs` enforces the headline
+//! scaling and routing wins in virtual time.
+
+mod router;
+
+pub use router::{RoutePolicy, Router};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::{ServerConfig, TomlDoc};
+use crate::coordinator::{
+    BatchMode, Coordinator, CoordinatorConfig, CoordinatorStats, Submit, Ticket,
+};
+use crate::engine::{Engine, GenerationOutput, GenerationRequest};
+use crate::error::{Error, Result};
+use crate::metrics::LatencyHistogram;
+use crate::qos::{AdmissionDecision, QosMeta, QosPolicy};
+
+/// One replica's serving shape — its share of the heterogeneous fleet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    /// Batch composition this replica runs.
+    pub mode: BatchMode,
+    /// Fixed mode: maximum requests fused per engine batch.
+    pub max_batch: usize,
+    /// Continuous mode: UNet slots packed per iteration.
+    pub slot_budget: usize,
+    /// Worker threads (fixed) / cohorts (continuous).
+    pub workers: usize,
+    /// Fixed mode: batch fill window, milliseconds.
+    pub batch_wait_ms: u64,
+}
+
+impl Default for ReplicaSpec {
+    fn default() -> Self {
+        let c = CoordinatorConfig::default();
+        ReplicaSpec {
+            mode: c.mode,
+            max_batch: c.max_batch,
+            slot_budget: c.slot_budget,
+            workers: c.workers,
+            batch_wait_ms: c.batch_wait.as_millis() as u64,
+        }
+    }
+}
+
+impl ReplicaSpec {
+    /// The spec the `[server]` section implies — the homogeneous default
+    /// every `[cluster.replica.N]` override starts from.
+    pub fn from_server(cfg: &ServerConfig) -> ReplicaSpec {
+        ReplicaSpec {
+            mode: cfg.mode,
+            max_batch: cfg.max_batch,
+            slot_budget: cfg.slot_budget,
+            workers: cfg.workers,
+            batch_wait_ms: cfg.batch_wait_ms,
+        }
+    }
+
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            mode: self.mode,
+            max_batch: self.max_batch,
+            slot_budget: self.slot_budget,
+            workers: self.workers,
+            batch_wait: Duration::from_millis(self.batch_wait_ms),
+        }
+    }
+
+    /// Routing weight: UNet slots this replica advances per iteration —
+    /// the denominator that makes outstanding-eval loads comparable
+    /// across heterogeneous replicas. Continuous replicas advance their
+    /// slot budget per cohort iteration; fixed replicas advance up to
+    /// `2 × max_batch` (every sample may run a dual step) per worker.
+    pub fn capacity_weight(&self) -> f64 {
+        match self.mode {
+            BatchMode::Continuous => (self.slot_budget * self.workers) as f64,
+            BatchMode::Fixed => (2 * self.max_batch * self.workers) as f64,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 || self.workers == 0 {
+            return Err(Error::Config("replica max_batch and workers must be >= 1".into()));
+        }
+        if self.mode == BatchMode::Continuous && self.slot_budget < 2 {
+            return Err(Error::Config(format!(
+                "replica slot_budget {} must be >= 2 (a dual step costs 2 slots)",
+                self.slot_budget
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The `[cluster]` configuration: how many replicas, their shapes, and
+/// the routing policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub replicas: Vec<ReplicaSpec>,
+    pub route: RoutePolicy,
+    /// Seed for the router's two-choice sampling: placements are a pure
+    /// function of this seed and the submission sequence.
+    pub route_seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: vec![ReplicaSpec::default()],
+            route: RoutePolicy::PlanCost,
+            route_seed: 0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// A homogeneous fleet of `n` copies of `spec`.
+    pub fn homogeneous(n: usize, spec: ReplicaSpec) -> ClusterConfig {
+        ClusterConfig { replicas: vec![spec; n.max(1)], ..ClusterConfig::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas.is_empty() {
+            return Err(Error::Config("cluster needs at least one replica".into()));
+        }
+        for (i, spec) in self.replicas.iter().enumerate() {
+            spec.validate()
+                .map_err(|e| Error::Config(format!("cluster replica {i}: {e}")))?;
+        }
+        Ok(())
+    }
+
+    /// Build from the `[cluster]` TOML section (plus per-replica
+    /// `[cluster.replica.N]` override sections), defaulting each replica
+    /// to the `[server]` shape. Returns `None` when no `[cluster]`
+    /// section exists — the deployment stays a plain single coordinator.
+    pub fn from_toml(doc: &TomlDoc, base: &ServerConfig) -> Result<Option<ClusterConfig>> {
+        if doc.section("cluster").is_none() {
+            // an override section without the [cluster] switch is an
+            // operator error, not a silent no-op
+            if let Some(orphan) = doc
+                .section_names()
+                .find(|name| name.starts_with("cluster.replica."))
+            {
+                return Err(Error::Config(format!(
+                    "[{orphan}] requires a [cluster] section"
+                )));
+            }
+            return Ok(None);
+        }
+        let n = match doc.get("cluster", "replicas") {
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| Error::Config("cluster replicas must be int >= 1".into()))?,
+            None => 1,
+        };
+        if n == 0 {
+            return Err(Error::Config("cluster replicas must be >= 1".into()));
+        }
+        let route = match doc.get("cluster", "route") {
+            Some(v) => RoutePolicy::parse(
+                v.as_str().ok_or_else(|| Error::Config("cluster route must be string".into()))?,
+            )?,
+            None => RoutePolicy::PlanCost,
+        };
+        let route_seed = match doc.get("cluster", "route_seed") {
+            Some(v) => v
+                .as_i64()
+                .ok_or_else(|| Error::Config("cluster route_seed must be int".into()))?
+                as u64,
+            None => 0,
+        };
+        // per-replica overrides: [cluster.replica.N] with any subset of
+        // the [server] batching keys
+        let mut replicas = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut spec = ReplicaSpec::from_server(base);
+            let sec = format!("cluster.replica.{i}");
+            if let Some(v) = doc.get(&sec, "mode") {
+                spec.mode = BatchMode::parse(
+                    v.as_str()
+                        .ok_or_else(|| Error::Config(format!("{sec} mode must be string")))?,
+                )?;
+            }
+            if let Some(v) = doc.get(&sec, "max_batch") {
+                spec.max_batch = v
+                    .as_usize()
+                    .ok_or_else(|| Error::Config(format!("{sec} max_batch must be int")))?;
+            }
+            if let Some(v) = doc.get(&sec, "slot_budget") {
+                spec.slot_budget = v
+                    .as_usize()
+                    .ok_or_else(|| Error::Config(format!("{sec} slot_budget must be int")))?;
+            }
+            if let Some(v) = doc.get(&sec, "workers") {
+                spec.workers = v
+                    .as_usize()
+                    .ok_or_else(|| Error::Config(format!("{sec} workers must be int")))?;
+            }
+            if let Some(v) = doc.get(&sec, "batch_wait_ms") {
+                spec.batch_wait_ms = v
+                    .as_i64()
+                    .ok_or_else(|| Error::Config(format!("{sec} batch_wait_ms must be int")))?
+                    as u64;
+            }
+            replicas.push(spec);
+        }
+        // overrides addressing replicas that don't exist are operator
+        // errors (a typo'd index must not silently fall back to defaults)
+        for name in doc.section_names() {
+            if let Some(idx) = name.strip_prefix("cluster.replica.") {
+                match idx.parse::<usize>() {
+                    Ok(i) if i < n => {}
+                    _ => {
+                        return Err(Error::Config(format!(
+                            "[{name}] addresses no replica (cluster has {n})"
+                        )))
+                    }
+                }
+            }
+        }
+        let cfg = ClusterConfig { replicas, route, route_seed };
+        cfg.validate()?;
+        Ok(Some(cfg))
+    }
+}
+
+/// Per-request placement trace — which replica(s) served the request, in
+/// order (more than one entry means it was requeued after a failure).
+#[derive(Debug, Clone)]
+pub struct PlacementTrace {
+    placed: Arc<Mutex<Vec<usize>>>,
+}
+
+impl PlacementTrace {
+    pub fn history(&self) -> Vec<usize> {
+        self.placed.lock().unwrap().clone()
+    }
+
+    /// The replica that (last) served the request.
+    pub fn replica(&self) -> Option<usize> {
+        self.placed.lock().unwrap().last().copied()
+    }
+}
+
+struct ClusterJob {
+    req: GenerationRequest,
+    meta: QosMeta,
+    respond: Sender<(Result<GenerationOutput>, Duration)>,
+    /// Replicas this job must not be placed on again (requeue history).
+    excluded: Vec<usize>,
+    /// Plan-compiled total UNet evals — the routing weight.
+    cost: u64,
+    placed: Arc<Mutex<Vec<usize>>>,
+    /// Cluster-level submission instant: the zero point for the
+    /// client-visible latency and the end-to-end deadline budget, which
+    /// must both survive requeues (a failover does not reset the clock).
+    submitted_at: Instant,
+    /// The deadline as admitted (post any QoS default). `meta.deadline`
+    /// is rewritten to the *remaining* budget on every requeue; this is
+    /// the immutable total it is computed from.
+    original_deadline: Option<Duration>,
+}
+
+struct RelayItem {
+    inner: Ticket,
+    job: ClusterJob,
+}
+
+struct Replica {
+    id: usize,
+    spec: ReplicaSpec,
+    coordinator: Arc<Coordinator>,
+    /// Outstanding plan-compiled UNet evals placed here — the router's
+    /// load signal. Reserved at dispatch, released when the relay
+    /// observes the outcome.
+    outstanding_evals: AtomicU64,
+    healthy: AtomicBool,
+    /// Requests this replica was chosen for (incl. requeues onto it).
+    routed: AtomicU64,
+    relay_tx: Mutex<Option<Sender<RelayItem>>>,
+}
+
+struct Core {
+    replicas: Vec<Replica>,
+    router: Mutex<Router>,
+    route: RoutePolicy,
+    qos: Option<Arc<dyn QosPolicy>>,
+    /// Cluster-owned latency histogram: every completion is recorded
+    /// here by the relays, so the aggregate percentiles are exact (they
+    /// cannot be merged from per-replica snapshots).
+    latency: Mutex<LatencyHistogram>,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    deadline_missed: AtomicU64,
+    requeued: AtomicU64,
+    ejected: AtomicU64,
+    /// Outstanding requests across the whole cluster (the aggregate
+    /// depth the QoS policy admits against).
+    pending: AtomicU64,
+    pending_max: AtomicU64,
+    draining: AtomicBool,
+}
+
+impl Core {
+    /// Route + enqueue one admitted job, retrying across replicas until
+    /// one accepts; on total failure the job is handed back with the
+    /// error so the caller decides who answers the client.
+    fn dispatch(&self, mut job: ClusterJob) -> std::result::Result<(), (ClusterJob, Error)> {
+        loop {
+            let target = {
+                let loads: Vec<Option<u64>> = self
+                    .replicas
+                    .iter()
+                    .map(|r| {
+                        if r.healthy.load(Ordering::SeqCst) && !job.excluded.contains(&r.id) {
+                            Some(r.outstanding_evals.load(Ordering::Relaxed))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect();
+                self.router.lock().unwrap().place(&loads)
+            };
+            let Some(id) = target else {
+                return Err((
+                    job,
+                    Error::Coordinator("no healthy replica can take the request".into()),
+                ));
+            };
+            let replica = &self.replicas[id];
+            // reserve the load before enqueueing so concurrent placements
+            // see each other's reservations
+            replica.outstanding_evals.fetch_add(job.cost, Ordering::Relaxed);
+            match replica.coordinator.submit_preadmitted(job.req.clone(), job.meta) {
+                Ok(inner) => {
+                    replica.routed.fetch_add(1, Ordering::Relaxed);
+                    job.placed.lock().unwrap().push(id);
+                    let item = RelayItem { inner, job };
+                    let failed_item = {
+                        let guard = replica.relay_tx.lock().unwrap();
+                        match guard.as_ref() {
+                            Some(tx) => tx.send(item).err().map(|e| e.0),
+                            None => Some(item),
+                        }
+                    };
+                    match failed_item {
+                        None => return Ok(()),
+                        Some(RelayItem { inner, job: mut back }) => {
+                            // relay already closed (shutdown race): undo
+                            // the reservation, drop the inner ticket (the
+                            // replica sheds the job during its drain) and
+                            // try elsewhere
+                            drop(inner);
+                            replica.outstanding_evals.fetch_sub(back.cost, Ordering::Relaxed);
+                            back.placed.lock().unwrap().pop();
+                            back.excluded.push(id);
+                            job = back;
+                        }
+                    }
+                }
+                Err(e) => {
+                    replica.outstanding_evals.fetch_sub(job.cost, Ordering::Relaxed);
+                    // a request-level error would fail identically on
+                    // every replica — surface it; lifecycle errors
+                    // (draining/stopped replica) exclude this replica and
+                    // try the next one
+                    if matches!(e, Error::Request(_) | Error::Config(_)) {
+                        return Err((job, e));
+                    }
+                    job.excluded.push(id);
+                }
+            }
+        }
+    }
+}
+
+/// The running replica set.
+pub struct ReplicaSet {
+    core: Arc<Core>,
+    relays: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ReplicaSet {
+    /// Spawn one coordinator per replica spec (no QoS: every request is
+    /// admitted) plus the relay threads that forward completions and
+    /// requeue failures.
+    pub fn start(engine: Arc<Engine>, config: ClusterConfig) -> Result<Arc<ReplicaSet>> {
+        Self::start_inner(engine, config, None)
+    }
+
+    /// Spawn with a cluster-level [`QosPolicy`]: admission is decided
+    /// here against the *aggregate* outstanding depth, and the same
+    /// policy object is installed in every replica coordinator so worker
+    /// feedback (service times, slot occupancy, deadline misses) merges
+    /// across the fleet.
+    pub fn start_qos(
+        engine: Arc<Engine>,
+        config: ClusterConfig,
+        qos: Arc<dyn QosPolicy>,
+    ) -> Result<Arc<ReplicaSet>> {
+        Self::start_inner(engine, config, Some(qos))
+    }
+
+    fn start_inner(
+        engine: Arc<Engine>,
+        config: ClusterConfig,
+        qos: Option<Arc<dyn QosPolicy>>,
+    ) -> Result<Arc<ReplicaSet>> {
+        config.validate()?;
+        let weights: Vec<f64> = config.replicas.iter().map(|s| s.capacity_weight()).collect();
+        let router = Router::new(config.route, weights, config.route_seed)?;
+        let mut replicas = Vec::with_capacity(config.replicas.len());
+        let mut relay_rxs = Vec::with_capacity(config.replicas.len());
+        for (id, spec) in config.replicas.iter().enumerate() {
+            let coordinator = match &qos {
+                Some(q) => Coordinator::start_qos(
+                    Arc::clone(&engine),
+                    spec.coordinator_config(),
+                    Arc::clone(q),
+                ),
+                None => Coordinator::start(Arc::clone(&engine), spec.coordinator_config()),
+            };
+            let (tx, rx) = mpsc::channel::<RelayItem>();
+            replicas.push(Replica {
+                id,
+                spec: spec.clone(),
+                coordinator,
+                outstanding_evals: AtomicU64::new(0),
+                healthy: AtomicBool::new(true),
+                routed: AtomicU64::new(0),
+                relay_tx: Mutex::new(Some(tx)),
+            });
+            relay_rxs.push(rx);
+        }
+        let core = Arc::new(Core {
+            replicas,
+            router: Mutex::new(router),
+            route: config.route,
+            qos,
+            latency: Mutex::new(LatencyHistogram::new()),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            deadline_missed: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            ejected: AtomicU64::new(0),
+            pending: AtomicU64::new(0),
+            pending_max: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+        });
+        let relays = relay_rxs
+            .into_iter()
+            .enumerate()
+            .map(|(id, rx)| {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("sgd-relay-{id}"))
+                    .spawn(move || relay_loop(core, id, rx))
+                    .expect("spawn relay")
+            })
+            .collect();
+        Ok(Arc::new(ReplicaSet { core, relays: Mutex::new(relays) }))
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.core.replicas.len()
+    }
+
+    pub fn route(&self) -> RoutePolicy {
+        self.core.route
+    }
+
+    /// Enqueue a request; see [`ReplicaSet::submit_traced`].
+    pub fn submit(&self, req: GenerationRequest) -> Result<Ticket> {
+        self.submit_qos(req, QosMeta::default())
+    }
+
+    /// Enqueue with serving metadata. Cluster-level QoS admission (when
+    /// installed) runs against the aggregate outstanding depth; the
+    /// admitted request is routed by its compiled plan cost.
+    pub fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
+        Ok(self.submit_traced(req, meta)?.0)
+    }
+
+    /// [`ReplicaSet::submit_qos`] plus a [`PlacementTrace`] recording
+    /// which replica(s) the request is served on — the observability
+    /// hook the determinism and failure tests key on.
+    pub fn submit_traced(
+        &self,
+        mut req: GenerationRequest,
+        mut meta: QosMeta,
+    ) -> Result<(Ticket, PlacementTrace)> {
+        req.validate()?;
+        let core = &self.core;
+        if core.draining.load(Ordering::SeqCst) {
+            return Err(Error::Coordinator("cluster is draining".into()));
+        }
+        // reserve the aggregate-depth slot before admission (same exact-
+        // bound argument as Coordinator::submit_qos)
+        let depth_before = core.pending.fetch_add(1, Ordering::Relaxed) as usize;
+        if let Some(q) = &core.qos {
+            match q.admit(&mut req, &mut meta, depth_before) {
+                AdmissionDecision::Admit => {}
+                AdmissionDecision::Reject(reason) => {
+                    core.pending.fetch_sub(1, Ordering::Relaxed);
+                    core.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::Rejected {
+                        code: reason.code(),
+                        reason: reason.message(),
+                    });
+                }
+            }
+        }
+        core.pending_max.fetch_max(depth_before as u64 + 1, Ordering::Relaxed);
+        // the routing weight is the *post-rewrite* plan cost: what the
+        // replica will actually execute after any QoS actuation
+        let cost = match req.plan() {
+            Ok(p) => p.total_unet_evals() as u64,
+            Err(e) => {
+                core.pending.fetch_sub(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        let placed = Arc::new(Mutex::new(Vec::new()));
+        let job = ClusterJob {
+            req,
+            respond: tx,
+            excluded: Vec::new(),
+            cost,
+            placed: Arc::clone(&placed),
+            submitted_at: Instant::now(),
+            original_deadline: meta.deadline,
+            meta,
+        };
+        match core.dispatch(job) {
+            Ok(()) => {
+                core.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok((Ticket::from_rx(rx), PlacementTrace { placed }))
+            }
+            Err((job, e)) => {
+                drop(job);
+                core.pending.fetch_sub(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit + wait.
+    pub fn generate(&self, req: GenerationRequest) -> Result<GenerationOutput> {
+        self.submit(req)?.wait()
+    }
+
+    /// Eject replica `id`: the router stops placing on it immediately,
+    /// its executing work drains, and its queued jobs come back as 503
+    /// sheds which the relay requeues onto surviving replicas. Blocks
+    /// until the replica's coordinator has shut down. Idempotent.
+    pub fn kill(&self, id: usize) -> Result<()> {
+        let replica = self
+            .core
+            .replicas
+            .get(id)
+            .ok_or_else(|| Error::Config(format!("no replica {id}")))?;
+        if replica.healthy.swap(false, Ordering::SeqCst) {
+            self.core.ejected.fetch_add(1, Ordering::Relaxed);
+            replica.coordinator.shutdown();
+        }
+        Ok(())
+    }
+
+    /// Snapshot the merged cluster view plus the per-replica breakdown.
+    pub fn stats(&self) -> ClusterStats {
+        let core = &self.core;
+        let replicas: Vec<ReplicaStats> = core
+            .replicas
+            .iter()
+            .map(|r| ReplicaStats {
+                id: r.id,
+                healthy: r.healthy.load(Ordering::SeqCst),
+                routed: r.routed.load(Ordering::Relaxed),
+                outstanding_evals: r.outstanding_evals.load(Ordering::Relaxed),
+                capacity_weight: r.spec.capacity_weight(),
+                coordinator: r.coordinator.stats(),
+            })
+            .collect();
+        let actuator_fraction = core
+            .qos
+            .as_ref()
+            .map(|q| q.qos_snapshot().actuator_fraction)
+            .unwrap_or(0.0);
+        let latency = core.latency.lock().unwrap();
+        ClusterStats {
+            route: core.route,
+            healthy_replicas: replicas.iter().filter(|r| r.healthy).count(),
+            submitted: core.submitted.load(Ordering::Relaxed),
+            completed: core.completed.load(Ordering::Relaxed),
+            failed: core.failed.load(Ordering::Relaxed),
+            rejected: core.rejected.load(Ordering::Relaxed),
+            deadline_missed: core.deadline_missed.load(Ordering::Relaxed),
+            requeued: core.requeued.load(Ordering::Relaxed),
+            ejected: core.ejected.load(Ordering::Relaxed),
+            queue_depth: core.pending.load(Ordering::Relaxed),
+            queue_depth_max: core.pending_max.load(Ordering::Relaxed),
+            outstanding_evals: replicas.iter().map(|r| r.outstanding_evals).sum(),
+            batches: replicas.iter().map(|r| r.coordinator.batches).sum(),
+            iterations: replicas.iter().map(|r| r.coordinator.iterations).sum(),
+            joins: replicas.iter().map(|r| r.coordinator.joins).sum(),
+            retires: replicas.iter().map(|r| r.coordinator.retires).sum(),
+            drain_shed: replicas.iter().map(|r| r.coordinator.drain_shed).sum(),
+            actuator_fraction,
+            latency_ms_mean: latency.mean_ms(),
+            latency_ms_p50: latency.quantile_ms(0.5),
+            latency_ms_p90: latency.quantile_ms(0.9),
+            latency_ms_max: latency.max_ms(),
+            replicas,
+        }
+    }
+
+    /// Graceful drain: stop accepting, finish executing work everywhere,
+    /// shed what never started (503), resolve every ticket, join all
+    /// threads.
+    pub fn shutdown(&self) {
+        self.core.draining.store(true, Ordering::SeqCst);
+        // each coordinator drains (executing work completes, queued jobs
+        // shed); relays forward those final outcomes without requeueing
+        // because the cluster is draining
+        for r in &self.core.replicas {
+            r.coordinator.shutdown();
+        }
+        // closing the relay channels ends the relay threads once they
+        // have drained every buffered item
+        for r in &self.core.replicas {
+            *r.relay_tx.lock().unwrap() = None;
+        }
+        let mut relays = self.relays.lock().unwrap();
+        for h in relays.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ReplicaSet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Submit for ReplicaSet {
+    fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
+        ReplicaSet::submit_qos(self, req, meta)
+    }
+}
+
+/// One relay thread per replica: observes every outcome of work placed
+/// on that replica, releases its routed load, records completions into
+/// the cluster-owned latency histogram, and **requeues** requeueable
+/// failures (drain sheds, replica death) onto surviving replicas.
+///
+/// Outcomes are forwarded in *completion* order, not placement order
+/// (the relay polls its in-flight set instead of blocking on one ticket
+/// at a time): a short request placed after a long one resolves the
+/// moment it retires, and its routed load frees immediately — the
+/// router never steers around load that is already gone.
+fn relay_loop(core: Arc<Core>, id: usize, rx: Receiver<RelayItem>) {
+    let mut pending: Vec<RelayItem> = Vec::new();
+    loop {
+        // pull newly placed work without blocking while jobs are in flight
+        let mut closed = false;
+        loop {
+            match rx.try_recv() {
+                Ok(item) => pending.push(item),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        if pending.is_empty() {
+            if closed {
+                return;
+            }
+            // idle: block until new work arrives (or the cluster closes)
+            match rx.recv() {
+                Ok(item) => pending.push(item),
+                Err(_) => return,
+            }
+            continue;
+        }
+        // forward every resolved ticket, in completion order
+        let mut progressed = false;
+        let mut i = 0;
+        while i < pending.len() {
+            match pending[i].inner.try_wait_timed() {
+                Some((result, _leg_latency)) => {
+                    let item = pending.swap_remove(i);
+                    relay_outcome(&core, id, item.job, result);
+                    progressed = true;
+                }
+                None => i += 1,
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// Handle one resolved inner ticket: release the routed load, then
+/// forward, requeue, or fail. Latency and deadline accounting are
+/// **end-to-end** from the cluster-level submission instant, so a
+/// requeued request's first leg (queue time on the dead replica) stays
+/// visible in the histogram and counts against its deadline budget.
+fn relay_outcome(core: &Arc<Core>, id: usize, job: ClusterJob, result: Result<GenerationOutput>) {
+    core.replicas[id].outstanding_evals.fetch_sub(job.cost, Ordering::Relaxed);
+    let latency = job.submitted_at.elapsed();
+    match result {
+        Ok(out) => {
+            core.latency.lock().unwrap().record(latency);
+            core.completed.fetch_add(1, Ordering::Relaxed);
+            core.pending.fetch_sub(1, Ordering::Relaxed);
+            let _ = job.respond.send((Ok(out), latency));
+        }
+        Err(e) => {
+            // a drain shed (503) or a dead/poisoned worker is the
+            // replica's failure, not the request's — requeue onto the
+            // survivors unless the whole cluster is going down. The
+            // excluded list keeps a poison request from ping-ponging:
+            // after it has failed on every replica once, the error
+            // surfaces to the client.
+            let requeueable =
+                matches!(&e, Error::Rejected { code: 503, .. } | Error::Coordinator(_));
+            if requeueable && !core.draining.load(Ordering::SeqCst) {
+                let mut job = job;
+                if !job.excluded.contains(&id) {
+                    job.excluded.push(id);
+                }
+                // the deadline budget is end-to-end: the next leg only
+                // gets what the failed leg left over (computed from the
+                // immutable original so repeated failovers can't
+                // double-subtract), and an exhausted budget is an honest
+                // 504, not a fresh window
+                if let Some(total) = job.original_deadline {
+                    if total <= latency {
+                        core.deadline_missed.fetch_add(1, Ordering::Relaxed);
+                        core.pending.fetch_sub(1, Ordering::Relaxed);
+                        let msg = format!(
+                            "expired during replica failover after {:.0} ms (deadline {:.0} ms)",
+                            latency.as_secs_f64() * 1e3,
+                            total.as_secs_f64() * 1e3
+                        );
+                        let _ = job.respond.send((Err(Error::DeadlineExceeded(msg)), latency));
+                        return;
+                    }
+                    job.meta.deadline = Some(total - latency);
+                }
+                // count before dispatching: the new home's relay may
+                // resolve the ticket before this thread runs again, and
+                // the requeue ledger must already balance then
+                core.requeued.fetch_add(1, Ordering::Relaxed);
+                match core.dispatch(job) {
+                    Ok(()) => {}
+                    Err((job, err)) => {
+                        core.requeued.fetch_sub(1, Ordering::Relaxed);
+                        core.failed.fetch_add(1, Ordering::Relaxed);
+                        core.pending.fetch_sub(1, Ordering::Relaxed);
+                        let _ = job.respond.send((Err(err), latency));
+                    }
+                }
+            } else {
+                if matches!(e, Error::DeadlineExceeded(_)) {
+                    core.deadline_missed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    core.failed.fetch_add(1, Ordering::Relaxed);
+                }
+                core.pending.fetch_sub(1, Ordering::Relaxed);
+                let _ = job.respond.send((Err(e), latency));
+            }
+        }
+    }
+}
+
+/// Per-replica stats entry: cluster-level routing state plus the
+/// replica coordinator's own [`CoordinatorStats`].
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub id: usize,
+    pub healthy: bool,
+    /// Requests routed here (incl. requeues onto this replica).
+    pub routed: u64,
+    /// Outstanding plan-compiled UNet evals right now.
+    pub outstanding_evals: u64,
+    /// Routing weight (normalizes outstanding evals across mixed shapes).
+    pub capacity_weight: f64,
+    pub coordinator: CoordinatorStats,
+}
+
+/// Merged cluster stats: cluster-owned counters (submission, admission,
+/// completion, requeue/ejection, exact latency percentiles) plus the
+/// summed per-replica execution counters and the full per-replica
+/// breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterStats {
+    pub route: RoutePolicy,
+    pub healthy_replicas: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Shed by cluster-level QoS admission.
+    pub rejected: u64,
+    pub deadline_missed: u64,
+    /// Jobs moved to a surviving replica after a failure/ejection.
+    pub requeued: u64,
+    /// Replicas ejected via [`ReplicaSet::kill`].
+    pub ejected: u64,
+    /// Outstanding requests across the cluster right now.
+    pub queue_depth: u64,
+    pub queue_depth_max: u64,
+    /// Summed outstanding plan-compiled UNet evals across replicas.
+    pub outstanding_evals: u64,
+    /// Summed fixed-mode batches across replicas.
+    pub batches: u64,
+    /// Summed continuous-mode iterations across replicas.
+    pub iterations: u64,
+    pub joins: u64,
+    pub retires: u64,
+    /// Summed per-replica drain sheds (normally requeued, so clients see
+    /// them only when the whole cluster drains).
+    pub drain_shed: u64,
+    pub actuator_fraction: f64,
+    pub latency_ms_mean: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p90: f64,
+    pub latency_ms_max: f64,
+    pub replicas: Vec<ReplicaStats>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::guidance::WindowSpec;
+    use crate::runtime::ModelStack;
+    use crate::scheduler::SchedulerKind;
+
+    fn engine() -> Arc<Engine> {
+        Arc::new(Engine::new(Arc::new(ModelStack::synthetic()), EngineConfig::default()))
+    }
+
+    fn continuous(slot_budget: usize) -> ReplicaSpec {
+        ReplicaSpec { mode: BatchMode::Continuous, slot_budget, ..ReplicaSpec::default() }
+    }
+
+    #[test]
+    fn capacity_weight_models_replica_shape() {
+        assert_eq!(continuous(8).capacity_weight(), 8.0);
+        assert_eq!(
+            ReplicaSpec { workers: 2, ..continuous(4) }.capacity_weight(),
+            8.0
+        );
+        // fixed: every sample may need a dual step
+        let fixed = ReplicaSpec { mode: BatchMode::Fixed, max_batch: 4, ..ReplicaSpec::default() };
+        assert_eq!(fixed.capacity_weight(), 8.0);
+        // validation mirrors the coordinator's bounds
+        assert!(continuous(1).validate().is_err());
+        assert!(ReplicaSpec { workers: 0, ..ReplicaSpec::default() }.validate().is_err());
+        assert!(ClusterConfig::default().validate().is_ok());
+        assert!(ClusterConfig { replicas: vec![], ..ClusterConfig::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn cluster_config_from_toml() {
+        use crate::config::RunConfig;
+        // no [cluster] section -> single-coordinator deployment
+        let doc = TomlDoc::parse("[server]\nworkers = 2\n").unwrap();
+        let base = ServerConfig::from_toml(&doc).unwrap();
+        assert!(ClusterConfig::from_toml(&doc, &base).unwrap().is_none());
+        // homogeneous: every replica inherits the [server] shape
+        let doc = TomlDoc::parse(
+            "[server]\nmode = \"continuous\"\nslot_budget = 6\n[cluster]\nreplicas = 3\n",
+        )
+        .unwrap();
+        let base = ServerConfig::from_toml(&doc).unwrap();
+        let cfg = ClusterConfig::from_toml(&doc, &base).unwrap().unwrap();
+        assert_eq!(cfg.replicas.len(), 3);
+        assert!(cfg.replicas.iter().all(|r| r.slot_budget == 6));
+        assert_eq!(cfg.route, RoutePolicy::PlanCost);
+        // heterogeneous overrides + explicit route
+        let doc = TomlDoc::parse(
+            "[server]\nmode = \"continuous\"\nslot_budget = 8\n\
+             [cluster]\nreplicas = 2\nroute = \"round-robin\"\nroute_seed = 7\n\
+             [cluster.replica.1]\nslot_budget = 2\n",
+        )
+        .unwrap();
+        let base = ServerConfig::from_toml(&doc).unwrap();
+        let cfg = ClusterConfig::from_toml(&doc, &base).unwrap().unwrap();
+        assert_eq!(cfg.route, RoutePolicy::RoundRobin);
+        assert_eq!(cfg.route_seed, 7);
+        assert_eq!(cfg.replicas[0].slot_budget, 8);
+        assert_eq!(cfg.replicas[1].slot_budget, 2);
+        // errors: zero replicas, bad route, orphan/out-of-range overrides
+        let base = ServerConfig::default();
+        let doc = TomlDoc::parse("[cluster]\nreplicas = 0\n").unwrap();
+        assert!(ClusterConfig::from_toml(&doc, &base).is_err());
+        let doc = TomlDoc::parse("[cluster]\nroute = \"bogus\"\n").unwrap();
+        assert!(ClusterConfig::from_toml(&doc, &base).is_err());
+        let doc =
+            TomlDoc::parse("[cluster]\nreplicas = 2\n[cluster.replica.5]\nworkers = 2\n").unwrap();
+        assert!(ClusterConfig::from_toml(&doc, &base).is_err());
+        let doc = TomlDoc::parse("[cluster.replica.0]\nworkers = 2\n").unwrap();
+        assert!(ClusterConfig::from_toml(&doc, &base).is_err());
+        // an invalid per-replica shape is caught at parse time
+        let doc =
+            TomlDoc::parse(
+                "[server]\nmode = \"continuous\"\n[cluster]\nreplicas = 1\n\
+                 [cluster.replica.0]\nslot_budget = 1\n",
+            )
+            .unwrap();
+        let base = ServerConfig::from_toml(&doc).unwrap();
+        assert!(ClusterConfig::from_toml(&doc, &base).is_err());
+        // the full RunConfig surface carries the section too
+        let run = RunConfig::from_str(
+            "[server]\nmode = \"continuous\"\n[cluster]\nreplicas = 2\n",
+        )
+        .unwrap();
+        assert_eq!(run.cluster.as_ref().map(|c| c.replicas.len()), Some(2));
+    }
+
+    #[test]
+    fn two_replica_cluster_serves_and_merges_stats() {
+        let set = ReplicaSet::start(
+            engine(),
+            ClusterConfig::homogeneous(2, continuous(4)),
+        )
+        .unwrap();
+        let reqs: Vec<GenerationRequest> = (0..6)
+            .map(|i| {
+                GenerationRequest::new(format!("p{i}"))
+                    .steps(5)
+                    .scheduler(SchedulerKind::Ddim)
+                    .selective(WindowSpec::last(if i % 2 == 0 { 0.5 } else { 0.0 }))
+                    .seed(i as u64)
+                    .decode(false)
+            })
+            .collect();
+        let tickets: Vec<(Ticket, PlacementTrace)> = reqs
+            .iter()
+            .map(|r| set.submit_traced(r.clone(), QosMeta::default()).expect("submit"))
+            .collect();
+        for (i, (t, trace)) in tickets.into_iter().enumerate() {
+            let out = t.wait().expect("complete");
+            assert!(out.latent.iter().all(|v| v.is_finite()), "sample {i}");
+            assert_eq!(trace.history().len(), 1, "no requeues expected");
+        }
+        let stats = set.stats();
+        assert_eq!(stats.submitted, 6);
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.requeued, 0);
+        assert_eq!(stats.ejected, 0);
+        assert_eq!(stats.queue_depth, 0, "everything drained");
+        assert_eq!(stats.outstanding_evals, 0);
+        assert_eq!(stats.healthy_replicas, 2);
+        assert_eq!(stats.replicas.len(), 2);
+        // the per-replica breakdown sums to the routed total
+        assert_eq!(stats.replicas.iter().map(|r| r.routed).sum::<u64>(), 6);
+        assert_eq!(
+            stats.replicas.iter().map(|r| r.coordinator.completed).sum::<u64>(),
+            6
+        );
+        assert!(stats.latency_ms_mean > 0.0);
+        set.shutdown();
+    }
+
+    #[test]
+    fn plan_cost_routing_balances_by_compiled_cost() {
+        // submit a burst of full-CFG requests to an idle 2-replica
+        // cluster: least-outstanding-evals must use both replicas (a
+        // single replica would accumulate all the load)
+        let set = ReplicaSet::start(
+            engine(),
+            ClusterConfig::homogeneous(2, continuous(2)),
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..8)
+            .map(|i| {
+                let r = GenerationRequest::new(format!("b{i}"))
+                    .steps(8)
+                    .scheduler(SchedulerKind::Ddim)
+                    .seed(i as u64)
+                    .decode(false);
+                set.submit_traced(r, QosMeta::default()).expect("submit")
+            })
+            .collect();
+        let placements: Vec<usize> =
+            tickets.iter().map(|(_, tr)| tr.history()[0]).collect();
+        for (t, _) in tickets {
+            t.wait().expect("complete");
+        }
+        assert!(
+            placements.iter().any(|&p| p == 0) && placements.iter().any(|&p| p == 1),
+            "plan-cost routing left a replica idle: {placements:?}"
+        );
+        set.shutdown();
+    }
+
+    #[test]
+    fn kill_requeues_onto_survivor() {
+        let set = ReplicaSet::start(
+            engine(),
+            ClusterConfig::homogeneous(2, continuous(2)),
+        )
+        .unwrap();
+        // enough work that replica 0 has a queue when it dies
+        let tickets: Vec<_> = (0..10)
+            .map(|i| {
+                let r = GenerationRequest::new(format!("k{i}"))
+                    .steps(10)
+                    .scheduler(SchedulerKind::Ddim)
+                    .seed(i as u64)
+                    .decode(false);
+                set.submit_traced(r, QosMeta::default()).expect("submit")
+            })
+            .collect();
+        set.kill(0).expect("kill");
+        set.kill(0).expect("idempotent");
+        for (i, (t, _)) in tickets.into_iter().enumerate() {
+            let out = t.wait().unwrap_or_else(|e| panic!("request {i} lost: {e}"));
+            assert!(out.latent.iter().all(|v| v.is_finite()));
+        }
+        let stats = set.stats();
+        assert_eq!(stats.completed, 10, "killing a replica must lose no requests");
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.ejected, 1);
+        assert_eq!(stats.healthy_replicas, 1);
+        // anything replica 0 shed on death moved to replica 1
+        let r0 = &stats.replicas[0];
+        assert_eq!(stats.requeued, r0.coordinator.drain_shed);
+        set.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails() {
+        let set = ReplicaSet::start(engine(), ClusterConfig::default()).unwrap();
+        set.shutdown();
+        let r = GenerationRequest::new("late").steps(2).decode(false);
+        assert!(set.submit(r).is_err());
+    }
+}
+

@@ -1,0 +1,216 @@
+//! Request routing across engine replicas.
+//!
+//! The unit of load is **plan-compiled UNet evals** — since the plan IR
+//! (DESIGN.md §10) every request carries `plan.total_unet_evals()`
+//! *before* a single step runs, so the router can weigh a 50%-optimized
+//! schedule as half the load of a full-CFG one instead of counting
+//! requests. Two policies:
+//!
+//! * [`RoutePolicy::PlanCost`] (default) — weighted
+//!   least-outstanding-evals with power-of-two-choices: sample two
+//!   distinct eligible replicas (deterministic in-crate RNG), place on
+//!   the one with the lower `outstanding_evals / capacity_weight`. The
+//!   weight models heterogeneous hardware (a slot-budget-8 replica
+//!   absorbs 4× the evals of a slot-budget-2 one at equal relative
+//!   load); the two-choice sample keeps the policy O(1) per request and
+//!   avoids the thundering-herd on a single least-loaded replica.
+//! * [`RoutePolicy::RoundRobin`] — the replica-blind baseline the bench
+//!   (`benches/cluster_scaling.rs`) measures the win against.
+//!
+//! The router is deliberately a pure, single-threaded object (the
+//! [`crate::cluster::ReplicaSet`] serializes placements behind a mutex):
+//! given the same seed and the same sequence of `(loads, place)` calls it
+//! reproduces the same placements exactly, which is what makes cluster
+//! traces replayable and the routing bench deterministic.
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+
+/// How the cluster places admitted requests onto replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Weighted least-outstanding-evals with power-of-two-choices, the
+    /// plan-cost-aware default.
+    #[default]
+    PlanCost,
+    /// Replica-blind rotation (baseline).
+    RoundRobin,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "plan-cost" | "plan_cost" | "least-evals" | "least_evals" => Ok(RoutePolicy::PlanCost),
+            "round-robin" | "round_robin" | "rr" => Ok(RoutePolicy::RoundRobin),
+            other => Err(Error::Config(format!("unknown route policy {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::PlanCost => "plan-cost",
+            RoutePolicy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// Deterministic replica chooser. `weights[i]` is replica `i`'s capacity
+/// weight (UNet slots it advances per unit time — see
+/// [`crate::cluster::ReplicaSpec::capacity_weight`]); `loads[i]` at
+/// placement time is the replica's outstanding plan-compiled evals, or
+/// `None` when the replica is ineligible (unhealthy, or on the request's
+/// excluded list after a requeue).
+pub struct Router {
+    policy: RoutePolicy,
+    weights: Vec<f64>,
+    rng: Rng,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, weights: Vec<f64>, seed: u64) -> Result<Router> {
+        if weights.is_empty() {
+            return Err(Error::Config("router needs at least one replica".into()));
+        }
+        if weights.iter().any(|w| !w.is_finite() || *w <= 0.0) {
+            return Err(Error::Config("replica capacity weights must be positive".into()));
+        }
+        Ok(Router {
+            policy,
+            weights,
+            rng: Rng::for_stream(seed, 0x524F5554), // "ROUT"
+            rr_next: 0,
+        })
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Pick a replica for one admitted request. Returns `None` when no
+    /// replica is eligible (all unhealthy / excluded).
+    pub fn place(&mut self, loads: &[Option<u64>]) -> Option<usize> {
+        assert_eq!(loads.len(), self.weights.len(), "load vector shape");
+        let eligible: Vec<usize> = (0..loads.len()).filter(|&i| loads[i].is_some()).collect();
+        if eligible.is_empty() {
+            return None;
+        }
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                // rotate over *all* slots so the cadence is stable as
+                // replicas leave/rejoin, skipping ineligible ones
+                for _ in 0..loads.len() {
+                    let i = self.rr_next % loads.len();
+                    self.rr_next = (self.rr_next + 1) % loads.len();
+                    if loads[i].is_some() {
+                        return Some(i);
+                    }
+                }
+                unreachable!("eligible set is non-empty");
+            }
+            RoutePolicy::PlanCost => {
+                let norm = |i: usize| loads[i].unwrap() as f64 / self.weights[i];
+                if eligible.len() <= 2 {
+                    // trivially compare the whole set; ties go to the
+                    // lower index so placement stays deterministic
+                    return eligible.iter().copied().min_by(|&a, &b| {
+                        norm(a).partial_cmp(&norm(b)).expect("finite loads").then(a.cmp(&b))
+                    });
+                }
+                // power of two choices among the eligible replicas
+                let a = eligible[self.rng.next_below(eligible.len() as u64) as usize];
+                let b = loop {
+                    let c = eligible[self.rng.next_below(eligible.len() as u64) as usize];
+                    if c != a {
+                        break c;
+                    }
+                };
+                let (la, lb) = (norm(a), norm(b));
+                if la < lb || (la == lb && a < b) {
+                    Some(a)
+                } else {
+                    Some(b)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_round_trips() {
+        assert_eq!(RoutePolicy::parse("plan-cost").unwrap(), RoutePolicy::PlanCost);
+        assert_eq!(RoutePolicy::parse("least_evals").unwrap(), RoutePolicy::PlanCost);
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("round-robin").unwrap(), RoutePolicy::RoundRobin);
+        assert!(RoutePolicy::parse("bogus").is_err());
+        assert_eq!(RoutePolicy::PlanCost.name(), "plan-cost");
+        assert_eq!(RoutePolicy::RoundRobin.name(), "round-robin");
+        assert_eq!(RoutePolicy::default(), RoutePolicy::PlanCost);
+    }
+
+    #[test]
+    fn router_validates_weights() {
+        assert!(Router::new(RoutePolicy::PlanCost, vec![], 0).is_err());
+        assert!(Router::new(RoutePolicy::PlanCost, vec![1.0, 0.0], 0).is_err());
+        assert!(Router::new(RoutePolicy::PlanCost, vec![1.0, f64::NAN], 0).is_err());
+        assert!(Router::new(RoutePolicy::PlanCost, vec![8.0, 2.0], 0).is_ok());
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_ineligible() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, vec![1.0; 3], 7).unwrap();
+        let all = [Some(0u64), Some(0), Some(0)];
+        assert_eq!(r.place(&all), Some(0));
+        assert_eq!(r.place(&all), Some(1));
+        assert_eq!(r.place(&all), Some(2));
+        assert_eq!(r.place(&all), Some(0));
+        // replica 1 ejected: the rotation skips it without stalling
+        let holed = [Some(0u64), None, Some(0)];
+        assert_eq!(r.place(&holed), Some(2));
+        assert_eq!(r.place(&holed), Some(0));
+        assert_eq!(r.place(&[None, None, None]), None);
+    }
+
+    #[test]
+    fn plan_cost_prefers_lower_normalized_load() {
+        let mut r = Router::new(RoutePolicy::PlanCost, vec![8.0, 2.0], 1).unwrap();
+        // two replicas -> both compared directly. 40/8 = 5 < 30/2 = 15:
+        // absolute evals lie, normalized load doesn't
+        assert_eq!(r.place(&[Some(40), Some(30)]), Some(0));
+        // equal normalized load ties to the lower index
+        assert_eq!(r.place(&[Some(8), Some(2)]), Some(0));
+        // the weak replica wins only when genuinely less loaded
+        assert_eq!(r.place(&[Some(80), Some(2)]), Some(1));
+        // exclusion forces the other
+        assert_eq!(r.place(&[None, Some(999)]), Some(1));
+    }
+
+    #[test]
+    fn plan_cost_two_choices_is_deterministic_and_load_seeking() {
+        // 4 replicas: same seed -> same placement stream
+        let mk = || Router::new(RoutePolicy::PlanCost, vec![1.0; 4], 42).unwrap();
+        let loads = [Some(10u64), Some(0), Some(7), Some(3)];
+        let a: Vec<_> = {
+            let mut r = mk();
+            (0..32).map(|_| r.place(&loads).unwrap()).collect()
+        };
+        let b: Vec<_> = {
+            let mut r = mk();
+            (0..32).map(|_| r.place(&loads).unwrap()).collect()
+        };
+        assert_eq!(a, b);
+        // the most loaded replica is never chosen by a two-choice sample
+        // that includes any alternative, so it appears least often;
+        // replica 1 (idle) wins every sample it appears in
+        let count = |v: &[usize], i: usize| v.iter().filter(|&&x| x == i).count();
+        assert!(count(&a, 1) > count(&a, 0), "idle replica must attract placements: {a:?}");
+    }
+}

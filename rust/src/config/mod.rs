@@ -342,7 +342,8 @@ impl ServerConfig {
     }
 }
 
-/// Complete deployment configuration (engine + server + qos + artifacts).
+/// Complete deployment configuration (engine + server + qos + cluster +
+/// artifacts).
 #[derive(Debug, Clone, Default)]
 pub struct RunConfig {
     pub artifacts_dir: Option<String>,
@@ -350,6 +351,10 @@ pub struct RunConfig {
     pub server: ServerConfig,
     /// `[qos]` section — disabled by default (see `qos::QosConfig`).
     pub qos: QosConfig,
+    /// `[cluster]` section — absent by default (single coordinator); see
+    /// `cluster::ClusterConfig`. Replicas default to the `[server]`
+    /// shape, overridden per replica by `[cluster.replica.N]` sections.
+    pub cluster: Option<crate::cluster::ClusterConfig>,
 }
 
 impl RunConfig {
@@ -364,11 +369,14 @@ impl RunConfig {
         let artifacts_dir = doc
             .get("model", "artifacts")
             .and_then(|v| v.as_str().map(String::from));
+        let server = ServerConfig::from_toml(&doc)?;
+        let cluster = crate::cluster::ClusterConfig::from_toml(&doc, &server)?;
         Ok(RunConfig {
             artifacts_dir,
             engine: EngineConfig::from_toml(&doc)?,
-            server: ServerConfig::from_toml(&doc)?,
+            server,
             qos: QosConfig::from_toml(&doc)?,
+            cluster,
         })
     }
 }
@@ -437,6 +445,7 @@ ewma_alpha = 0.3
         assert_eq!(cfg.server.max_batch, 4);
         assert!(!cfg.qos.enabled);
         assert_eq!(cfg.qos, QosConfig::default());
+        assert!(cfg.cluster.is_none());
     }
 
     #[test]

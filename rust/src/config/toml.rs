@@ -101,6 +101,12 @@ impl TomlDoc {
     pub fn section(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
         self.sections.get(name)
     }
+
+    /// All section names present in the document (sorted) — lets config
+    /// readers reject orphan sections instead of silently ignoring them.
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
 }
 
 fn strip_comment(line: &str) -> &str {

@@ -32,6 +32,15 @@
 //! selective-guidance window — and workers feed per-batch service times
 //! back to it. Jobs whose deadline expires while queued are failed with
 //! [`Error::DeadlineExceeded`] instead of wasting UNet work.
+//!
+//! Since the replica-cluster layer (DESIGN.md §11) the coordinator is
+//! also the **per-replica worker** of a [`crate::cluster::ReplicaSet`]:
+//! admission can be decided upstream (cluster-level QoS over aggregate
+//! load) and handed in via [`Coordinator::submit_preadmitted`], and
+//! [`Coordinator::shutdown`] sheds queued-but-unadmitted jobs with an
+//! explicit 503 ([`Error::Rejected`]) instead of executing them or
+//! dropping their tickets — which is what lets the cluster requeue a
+//! killed replica's backlog onto survivors without losing requests.
 
 mod batcher;
 mod continuous;
@@ -131,6 +140,10 @@ pub struct CoordinatorStats {
     pub rejected: u64,
     /// Expired in the queue past their deadline (never executed).
     pub deadline_missed: u64,
+    /// Shed with an explicit 503 during shutdown drain: admitted into the
+    /// queue but never executed (the cluster layer requeues these onto
+    /// surviving replicas).
+    pub drain_shed: u64,
     /// Fixed mode: engine batches dispatched.
     pub batches: u64,
     /// Fixed mode: requests carried by those batches.
@@ -170,6 +183,7 @@ struct StatsInner {
     completed: u64,
     failed: u64,
     deadline_missed: u64,
+    drain_shed: u64,
     // continuous-mode counters
     iterations: u64,
     joins: u64,
@@ -196,6 +210,13 @@ pub struct Ticket {
 }
 
 impl Ticket {
+    /// Build a ticket over a raw response channel — the cluster layer
+    /// interposes its own channel so it can requeue a failed replica's
+    /// jobs before the client sees anything.
+    pub(crate) fn from_rx(rx: Receiver<(Result<GenerationOutput>, Duration)>) -> Ticket {
+        Ticket { rx }
+    }
+
     /// Block until the result is ready.
     pub fn wait(self) -> Result<GenerationOutput> {
         Ok(self.wait_timed()?.0)
@@ -215,6 +236,21 @@ impl Ticket {
     /// Non-blocking poll.
     pub fn try_wait(&self) -> Option<Result<GenerationOutput>> {
         self.rx.try_recv().ok().map(|(r, _)| r)
+    }
+
+    /// Non-blocking poll that preserves the completion-time latency and
+    /// resolves worker death as an error — the cluster relay's primitive
+    /// (the public [`Ticket::try_wait`] drops both). Returns `Some` at
+    /// most once per ticket outcome; callers must stop polling after.
+    pub(crate) fn try_wait_timed(&self) -> Option<(Result<GenerationOutput>, Duration)> {
+        match self.rx.try_recv() {
+            Ok(v) => Some(v),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some((
+                Err(Error::Coordinator("worker dropped without responding".into())),
+                Duration::ZERO,
+            )),
+        }
     }
 }
 
@@ -270,6 +306,7 @@ impl Coordinator {
             completed: 0,
             failed: 0,
             deadline_missed: 0,
+            drain_shed: 0,
             iterations: 0,
             joins: 0,
             retires: 0,
@@ -278,6 +315,7 @@ impl Coordinator {
             cohort_last: 0,
         }));
         let pending = Arc::new(AtomicU64::new(0));
+        let draining = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::new();
 
         match config.mode {
@@ -288,10 +326,14 @@ impl Coordinator {
                 // ---- batcher thread --------------------------------------
                 {
                     let stats = Arc::clone(&stats);
+                    let pending = Arc::clone(&pending);
+                    let draining = Arc::clone(&draining);
                     let max_batch = config.max_batch;
                     let wait = config.batch_wait;
                     handles.push(std::thread::spawn(move || {
-                        batcher_loop(submit_rx, batch_tx, max_batch, wait, stats);
+                        batcher_loop(
+                            submit_rx, batch_tx, max_batch, wait, stats, pending, draining,
+                        );
                     }));
                 }
 
@@ -301,11 +343,14 @@ impl Coordinator {
                     let batch_rx = Arc::clone(&batch_rx);
                     let stats = Arc::clone(&stats);
                     let pending = Arc::clone(&pending);
+                    let draining = Arc::clone(&draining);
                     let qos = qos.clone();
                     handles.push(
                         std::thread::Builder::new()
                             .name(format!("sgd-worker-{worker_id}"))
-                            .spawn(move || worker_loop(engine, batch_rx, stats, pending, qos))
+                            .spawn(move || {
+                                worker_loop(engine, batch_rx, stats, pending, draining, qos)
+                            })
                             .expect("spawn worker"),
                     );
                 }
@@ -326,6 +371,7 @@ impl Coordinator {
                     let backlog = Arc::clone(&backlog);
                     let stats = Arc::clone(&stats);
                     let pending = Arc::clone(&pending);
+                    let draining = Arc::clone(&draining);
                     let qos = qos.clone();
                     let budget = config.slot_budget;
                     handles.push(
@@ -333,7 +379,8 @@ impl Coordinator {
                             .name(format!("sgd-cont-{worker_id}"))
                             .spawn(move || {
                                 continuous_worker_loop(
-                                    engine, submit_rx, backlog, budget, stats, pending, qos,
+                                    engine, submit_rx, backlog, budget, stats, pending, draining,
+                                    qos,
                                 )
                             })
                             .expect("spawn continuous worker"),
@@ -351,7 +398,7 @@ impl Coordinator {
             pending,
             queue_depth_max: Arc::new(AtomicU64::new(0)),
             qos,
-            draining: Arc::new(AtomicBool::new(false)),
+            draining,
             mode: config.mode,
             slot_budget: config.slot_budget,
         })
@@ -366,7 +413,27 @@ impl Coordinator {
     /// policy is installed it decides admission here — a rejection is
     /// returned synchronously as [`Error::Rejected`] and the request
     /// never occupies queue space.
-    pub fn submit_qos(&self, mut req: GenerationRequest, mut meta: QosMeta) -> Result<Ticket> {
+    pub fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
+        self.submit_inner(req, meta, true)
+    }
+
+    /// Enqueue a request whose admission was already decided upstream —
+    /// the replica-cluster path: the [`crate::cluster::ReplicaSet`] runs
+    /// the (cluster-level) QoS admission against *aggregate* load before
+    /// routing, so the per-replica policy must not be consulted a second
+    /// time. Everything else (drain refusal, depth gauges, queueing) is
+    /// identical to [`Coordinator::submit_qos`]; any installed policy
+    /// still receives worker-side feedback.
+    pub fn submit_preadmitted(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
+        self.submit_inner(req, meta, false)
+    }
+
+    fn submit_inner(
+        &self,
+        mut req: GenerationRequest,
+        mut meta: QosMeta,
+        consult_qos: bool,
+    ) -> Result<Ticket> {
         req.validate()?;
         if self.draining.load(Ordering::SeqCst) {
             return Err(Error::Coordinator("coordinator is draining".into()));
@@ -377,7 +444,7 @@ impl Coordinator {
         // overshot. The reservation also precedes worker visibility, so
         // a fast worker can never decrement `pending` below zero.
         let depth_before = self.pending.fetch_add(1, Ordering::Relaxed) as usize;
-        if let Some(qos) = &self.qos {
+        if let Some(qos) = self.qos.as_ref().filter(|_| consult_qos) {
             match qos.admit(&mut req, &mut meta, depth_before) {
                 AdmissionDecision::Admit => {}
                 AdmissionDecision::Reject(reason) => {
@@ -436,6 +503,7 @@ impl Coordinator {
             failed: inner.failed,
             rejected: self.rejected.load(Ordering::Relaxed),
             deadline_missed: inner.deadline_missed,
+            drain_shed: inner.drain_shed,
             batches: inner.batches,
             batched_requests: inner.batched_requests,
             slot_budget: if self.mode == BatchMode::Continuous {
@@ -459,7 +527,12 @@ impl Coordinator {
         }
     }
 
-    /// Graceful drain: stop accepting, finish in-flight work, join threads.
+    /// Graceful drain: stop accepting, finish *executing* work, join
+    /// threads. Jobs that were admitted into the queue but not yet
+    /// handed to the engine are failed with an explicit 503
+    /// ([`Error::Rejected`]) instead of silently executed or dropped —
+    /// every outstanding [`Ticket`] resolves, and the cluster layer can
+    /// requeue the shed jobs onto surviving replicas.
     pub fn shutdown(&self) {
         self.draining.store(true, Ordering::SeqCst);
         // closing the submit channel ends the batcher, which ends workers
@@ -471,18 +544,64 @@ impl Coordinator {
     }
 }
 
+/// Anything requests can be submitted to — a single [`Coordinator`] or a
+/// [`crate::cluster::ReplicaSet`]. The workload replay drivers and the
+/// server front-end are generic over this, so every serving surface works
+/// unchanged against both topologies.
+pub trait Submit: Send + Sync {
+    /// Enqueue with serving metadata; admission (QoS) semantics are the
+    /// implementation's — see [`Coordinator::submit_qos`] and
+    /// [`crate::cluster::ReplicaSet::submit_qos`].
+    fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket>;
+
+    /// Enqueue without metadata (best-effort, default priority).
+    fn submit(&self, req: GenerationRequest) -> Result<Ticket> {
+        self.submit_qos(req, QosMeta::default())
+    }
+}
+
+impl Submit for Coordinator {
+    fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
+        Coordinator::submit_qos(self, req, meta)
+    }
+}
+
+impl<T: Submit + ?Sized> Submit for Arc<T> {
+    fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
+        (**self).submit_qos(req, meta)
+    }
+}
+
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown();
     }
 }
 
+/// Fail one queued-but-unadmitted job during shutdown drain with an
+/// explicit 503 — never execute it, never drop its ticket unresolved.
+fn shed_draining(job: Job, stats: &Arc<Mutex<StatsInner>>, pending: &Arc<AtomicU64>) {
+    let waited = job.enqueued.elapsed();
+    stats.lock().unwrap().drain_shed += 1;
+    pending.fetch_sub(1, Ordering::Relaxed);
+    let _ = job.respond.send((
+        Err(Error::Rejected {
+            code: 503,
+            reason: "coordinator shutting down — queued request shed before execution".into(),
+        }),
+        waited,
+    ));
+}
+
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
     submit_rx: Receiver<Job>,
     batch_tx: Sender<Batch>,
     max_batch: usize,
     wait: Duration,
     stats: Arc<Mutex<StatsInner>>,
+    pending: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
 ) {
     loop {
         // block for the first job
@@ -490,6 +609,11 @@ fn batcher_loop(
             Ok(j) => j,
             Err(_) => return, // queue closed -> drain done
         };
+        if draining.load(Ordering::SeqCst) {
+            // shutdown: everything still queued is shed, not batched
+            shed_draining(first, &stats, &pending);
+            continue;
+        }
         let class = BatchClass::of(&first.req);
         let mut jobs = vec![first];
         let deadline = Instant::now() + wait;
@@ -542,6 +666,7 @@ fn worker_loop(
     batch_rx: Arc<Mutex<Receiver<Batch>>>,
     stats: Arc<Mutex<StatsInner>>,
     pending: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
     qos: Option<Arc<dyn QosPolicy>>,
 ) {
     loop {
@@ -552,6 +677,15 @@ fn worker_loop(
                 Err(_) => return, // channel closed -> shut down
             }
         };
+        // ---- shutdown drain: a dispatched-but-not-executing batch is
+        // still queued work — shed it explicitly instead of paying for
+        // UNet output nobody is waiting on
+        if draining.load(Ordering::SeqCst) {
+            for job in batch.jobs {
+                shed_draining(job, &stats, &pending);
+            }
+            continue;
+        }
         // ---- deadline expiry: fail stale jobs before paying for UNet
         // work that cannot possibly be useful anymore
         let now = Instant::now();
@@ -656,6 +790,7 @@ fn fail_expired(
 /// worker's drain. The receiver mutex is only ever held for non-blocking
 /// `try_recv` calls, so an idle worker cannot stall a sibling's
 /// per-iteration admission.
+#[allow(clippy::too_many_arguments)]
 fn continuous_worker_loop(
     engine: Arc<Engine>,
     submit_rx: Arc<Mutex<Receiver<Job>>>,
@@ -663,6 +798,7 @@ fn continuous_worker_loop(
     slot_budget: usize,
     stats: Arc<Mutex<StatsInner>>,
     pending: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
     qos: Option<Arc<dyn QosPolicy>>,
 ) {
     let mut batcher = ContinuousBatcher::new(Arc::clone(&engine), slot_budget)
@@ -688,12 +824,27 @@ fn continuous_worker_loop(
                     }
                     Err(TryRecvError::Disconnected) => {
                         if batcher.in_flight() == 0 {
-                            return; // queue closed and nothing left: drain
+                            // queue closed and nothing executing: shed
+                            // whatever the shared backlog still holds
+                            // (each ticket must resolve — a dropped
+                            // backlog would strand its waiters), then
+                            // drain. pop_front keeps this safe when
+                            // several workers sweep concurrently.
+                            while let Some(j) = backlog.lock().unwrap().pop_front() {
+                                shed_draining(j, &stats, &pending);
+                            }
+                            return;
                         }
                         break;
                     }
                 }
             };
+            // shutdown drain: queued-but-unadmitted jobs are shed with an
+            // explicit 503 — the in-flight cohort still runs to completion
+            if draining.load(Ordering::SeqCst) {
+                shed_draining(job, &stats, &pending);
+                continue;
+            }
             // deadline expiry before paying for any UNet work
             if expired(&job.meta, job.enqueued, Instant::now()) {
                 fail_expired(job, &stats, &pending, &qos);
@@ -807,6 +958,7 @@ mod tests {
         let s = CoordinatorStats::default();
         assert_eq!(s.rejected, 0);
         assert_eq!(s.deadline_missed, 0);
+        assert_eq!(s.drain_shed, 0);
         assert_eq!(s.queue_depth_max, 0);
         assert_eq!(s.actuator_fraction, 0.0);
         assert_eq!(s.mode, BatchMode::Fixed);

@@ -16,9 +16,11 @@
 //! * L2 — a JAX latent-diffusion model (UNet + text encoder + VAE),
 //! * L3 — this crate: request routing, dynamic batching, the denoising
 //!   loop with the per-iteration **selective-guidance decision**, PJRT
-//!   execution of the AOT artifacts, metrics, and a QoS layer
+//!   execution of the AOT artifacts, metrics, a QoS layer
 //!   ([`qos`]) that turns the selective-guidance window into a
-//!   deadline-aware load-shedding actuator.
+//!   deadline-aware load-shedding actuator, and a replica-cluster layer
+//!   ([`cluster`]) that routes each request by its compiled plan cost
+//!   across heterogeneous engine replicas.
 //!
 //! Python runs once at build time (`make artifacts`); the request path is
 //! 100% rust. See `DESIGN.md` for the full architecture and the
@@ -26,6 +28,7 @@
 
 pub mod benchutil;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
@@ -50,8 +53,13 @@ pub use error::{Error, Result};
 
 /// One-stop imports for examples and downstream users.
 pub mod prelude {
+    pub use crate::cluster::{
+        ClusterConfig, ClusterStats, ReplicaSet, ReplicaSpec, RoutePolicy, Router,
+    };
     pub use crate::config::EngineConfig;
-    pub use crate::coordinator::{BatchMode, ContinuousBatcher, Coordinator, CoordinatorConfig};
+    pub use crate::coordinator::{
+        BatchMode, ContinuousBatcher, Coordinator, CoordinatorConfig, Submit,
+    };
     pub use crate::engine::{Engine, GenerationOutput, GenerationRequest, SampleState};
     pub use crate::error::{Error, Result};
     pub use crate::guidance::{

@@ -16,6 +16,8 @@
 //! sgd-serve serve    [--bind 127.0.0.1:7878] [--workers 1]
 //!           [--mode fixed|continuous] [--max-batch 4] [--slot-budget 8]
 //!           [--config configs/serve.toml]
+//!           [--replicas 4] [--route plan-cost|round-robin]
+//!           [--replica-budgets 8,4,2]
 //!           [--window 0.2] [--position ...] [--segments ...]
 //!           [--interval ...] [--cadence ...]
 //!           [--qos] [--max-queue 64] [--quality-floor 0.5]
@@ -36,11 +38,21 @@
 //! `enabled = true` in `[qos]`) turns on deadline-aware admission control
 //! with the selective-guidance window as the load-shedding actuator
 //! (DESIGN.md §7).
+//!
+//! `--replicas N` (or a `[cluster]` config section) runs a replica set
+//! instead of a single coordinator (DESIGN.md §11): each replica is its
+//! own coordinator shaped by the `[server]` keys (overridable per
+//! replica via `[cluster.replica.N]` sections, or heterogeneously via
+//! `--replica-budgets 8,4,2` — one continuous replica per listed slot
+//! budget), requests are routed by compiled plan cost (`--route
+//! round-robin` keeps the replica-blind baseline), and QoS admission
+//! moves cluster-level over aggregate load.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use selective_guidance::cli::Cli;
+use selective_guidance::cluster::{ClusterConfig, ReplicaSet, ReplicaSpec, RoutePolicy};
 use selective_guidance::config::{EngineConfig, RunConfig};
 use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
 use selective_guidance::engine::{Engine, GenerationRequest};
@@ -260,6 +272,79 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         cli.opt_or("deadline-ms", run_cfg.qos.default_deadline_ms)?;
     run_cfg.qos.validate()?;
 
+    // ---- cluster surface: the [cluster] section plus --replicas /
+    // --route / --replica-budgets overrides (flags win)
+    for key in ["replicas", "route", "replica-budgets"] {
+        if cli.flag(key) {
+            return Err(Error::Config(format!("--{key} needs a value")));
+        }
+    }
+    let mut cluster_cfg = run_cfg.cluster.clone();
+    if cli.opt("replicas").is_some() && cli.opt("replica-budgets").is_some() {
+        return Err(Error::Config(
+            "--replicas and --replica-budgets are mutually exclusive (the budget list \
+             already fixes the replica count)"
+                .into(),
+        ));
+    }
+    if let Some(list) = cli.opt("replica-budgets") {
+        // heterogeneous continuous fleet: one replica per listed budget
+        let mut specs = Vec::new();
+        for part in list.split(',') {
+            let budget: usize = part.trim().parse().map_err(|_| {
+                Error::Config(format!("--replica-budgets: cannot parse {part:?}"))
+            })?;
+            specs.push(ReplicaSpec {
+                mode: BatchMode::Continuous,
+                slot_budget: budget,
+                ..ReplicaSpec::from_server(&run_cfg.server)
+            });
+        }
+        let mut cfg = cluster_cfg.take().unwrap_or_default();
+        cfg.replicas = specs;
+        cluster_cfg = Some(cfg);
+    }
+    if let Some(n) = cli.opt_parse::<usize>("replicas")? {
+        if n == 0 {
+            return Err(Error::Config("--replicas must be >= 1".into()));
+        }
+        // grow-only: configured per-replica shapes are kept, extras
+        // inherit the [server] shape. Shrinking would silently discard
+        // explicit [cluster.replica.N] overrides — make the operator
+        // edit the config instead.
+        let base = ReplicaSpec::from_server(&run_cfg.server);
+        let mut cfg = cluster_cfg.take().unwrap_or(ClusterConfig {
+            replicas: Vec::new(),
+            route: RoutePolicy::PlanCost,
+            route_seed: 0,
+        });
+        if n < cfg.replicas.len() {
+            return Err(Error::Config(format!(
+                "--replicas {n} would drop {} configured replica(s) — shrink the \
+                 [cluster] section instead",
+                cfg.replicas.len() - n
+            )));
+        }
+        cfg.replicas.resize(n, base);
+        cluster_cfg = Some(cfg);
+    }
+    if let Some(r) = cli.opt("route") {
+        let policy = RoutePolicy::parse(r)?;
+        match cluster_cfg.as_mut() {
+            Some(cfg) => cfg.route = policy,
+            None => {
+                return Err(Error::Config(
+                    "--route requires --replicas, --replica-budgets or a [cluster] \
+                     config section"
+                        .into(),
+                ))
+            }
+        }
+    }
+    if let Some(cfg) = &cluster_cfg {
+        cfg.validate()?;
+    }
+
     let dir = cli
         .opt("artifacts")
         .map(String::from)
@@ -268,34 +353,14 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     eprintln!("loading artifacts from {dir} ...");
     let stack = Arc::new(ModelStack::load(&dir)?);
     let engine = Arc::new(Engine::new(stack, run_cfg.engine.clone()));
-    let coord_cfg = CoordinatorConfig {
-        mode: run_cfg.server.mode,
-        max_batch: run_cfg.server.max_batch,
-        slot_budget: run_cfg.server.slot_budget,
-        workers: run_cfg.server.workers,
-        batch_wait: std::time::Duration::from_millis(run_cfg.server.batch_wait_ms),
-    };
-    match run_cfg.server.mode {
-        BatchMode::Continuous => println!(
-            "batching: continuous (slot budget {} per iteration, {} worker cohort(s))",
-            run_cfg.server.slot_budget, run_cfg.server.workers
-        ),
-        BatchMode::Fixed => println!(
-            "batching: fixed (max batch {}, wait {} ms)",
-            run_cfg.server.max_batch, run_cfg.server.batch_wait_ms
-        ),
-    }
-    let coordinator = if run_cfg.qos.enabled {
+    if run_cfg.qos.enabled {
         println!(
             "qos: enabled (max queue {}, quality floor {:.0}%, default deadline {} ms)",
             run_cfg.qos.max_queue_depth,
             run_cfg.qos.floor_fraction * 100.0,
             run_cfg.qos.default_deadline_ms,
         );
-        Coordinator::start_qos(engine, coord_cfg, Arc::new(DeadlineQos::new(run_cfg.qos.clone())?))
-    } else {
-        Coordinator::start(engine, coord_cfg)
-    };
+    }
     if run_cfg.engine.schedule != GuidanceSchedule::none() {
         println!(
             "guidance default: {} ({})",
@@ -313,11 +378,63 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             a.probe_every,
         );
     }
-    let server = Server::start_with_defaults(
-        coordinator,
-        &run_cfg.server.bind,
-        GuidanceDefaults::from_engine(&run_cfg.engine),
-    )?;
+    let defaults = GuidanceDefaults::from_engine(&run_cfg.engine);
+    let server = match cluster_cfg {
+        Some(cfg) => {
+            println!("cluster: {} replica(s), route {}", cfg.replicas.len(), cfg.route.name());
+            for (i, spec) in cfg.replicas.iter().enumerate() {
+                match spec.mode {
+                    BatchMode::Continuous => println!(
+                        "  replica {i}: continuous (slot budget {}, {} worker cohort(s))",
+                        spec.slot_budget, spec.workers
+                    ),
+                    BatchMode::Fixed => println!(
+                        "  replica {i}: fixed (max batch {}, wait {} ms, {} worker(s))",
+                        spec.max_batch, spec.batch_wait_ms, spec.workers
+                    ),
+                }
+            }
+            let set = if run_cfg.qos.enabled {
+                ReplicaSet::start_qos(
+                    engine,
+                    cfg,
+                    Arc::new(DeadlineQos::new(run_cfg.qos.clone())?),
+                )?
+            } else {
+                ReplicaSet::start(engine, cfg)?
+            };
+            Server::start_cluster(set, &run_cfg.server.bind, defaults)?
+        }
+        None => {
+            let coord_cfg = CoordinatorConfig {
+                mode: run_cfg.server.mode,
+                max_batch: run_cfg.server.max_batch,
+                slot_budget: run_cfg.server.slot_budget,
+                workers: run_cfg.server.workers,
+                batch_wait: std::time::Duration::from_millis(run_cfg.server.batch_wait_ms),
+            };
+            match run_cfg.server.mode {
+                BatchMode::Continuous => println!(
+                    "batching: continuous (slot budget {} per iteration, {} worker cohort(s))",
+                    run_cfg.server.slot_budget, run_cfg.server.workers
+                ),
+                BatchMode::Fixed => println!(
+                    "batching: fixed (max batch {}, wait {} ms)",
+                    run_cfg.server.max_batch, run_cfg.server.batch_wait_ms
+                ),
+            }
+            let coordinator = if run_cfg.qos.enabled {
+                Coordinator::start_qos(
+                    engine,
+                    coord_cfg,
+                    Arc::new(DeadlineQos::new(run_cfg.qos.clone())?),
+                )
+            } else {
+                Coordinator::start(engine, coord_cfg)
+            };
+            Server::start_with_defaults(coordinator, &run_cfg.server.bind, defaults)?
+        }
+    };
     println!("sgd-serve listening on {}", server.addr());
     println!("protocol: JSON lines; try: {{\"op\":\"ping\"}}");
     // serve until the listener thread exits (shutdown op or signal)

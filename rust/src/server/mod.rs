@@ -9,8 +9,12 @@
 //!   `{"ok":false,"rejected":true,"code":429|503,...}` and a
 //!   queue-expired one `{"ok":false,"deadline_exceeded":true,"code":504}`;
 //! * `{"op":"ping"}` → `{"ok":true,"pong":true}`;
-//! * `{"op":"stats"}` → coordinator stats snapshot (incl. `rejected`,
-//!   `deadline_missed`, `queue_depth_max`, `actuator_fraction`);
+//! * `{"op":"stats"}` → serving stats snapshot (incl. `rejected`,
+//!   `deadline_missed`, `queue_depth_max`, `actuator_fraction`). When
+//!   the server fronts a [`crate::cluster::ReplicaSet`] the snapshot is
+//!   the **aggregate** (cluster-owned latency percentiles, merged
+//!   counters, `requeued`/`ejected`) plus a `replicas` array with the
+//!   per-replica breakdown;
 //! * `{"op":"shutdown"}` → acks and stops the listener.
 //!
 //! No HTTP stack exists in the offline registry snapshot; JSON-over-TCP
@@ -27,11 +31,110 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::cluster::ReplicaSet;
 use crate::config::EngineConfig;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, Ticket};
 use crate::error::{Error, Result};
 use crate::guidance::{AdaptiveConfig, GuidanceSchedule, GuidanceStrategy};
 use crate::json::{self, Value};
+use crate::qos::QosMeta;
+
+/// What the server fronts: a single coordinator or a replica cluster.
+/// Every wire operation behaves identically against both — only the
+/// `stats` payload differs (the cluster adds the per-replica breakdown).
+pub enum Backend {
+    Single(Arc<Coordinator>),
+    Cluster(Arc<ReplicaSet>),
+}
+
+impl Backend {
+    fn submit_qos(&self, req: crate::engine::GenerationRequest, meta: QosMeta) -> Result<Ticket> {
+        match self {
+            Backend::Single(c) => c.submit_qos(req, meta),
+            Backend::Cluster(s) => s.submit_qos(req, meta),
+        }
+    }
+
+    fn stats_value(&self, id: Option<i64>) -> Value {
+        match self {
+            Backend::Single(c) => {
+                let s = c.stats();
+                ok_base(id)
+                    .with("cluster", false)
+                    .with("mode", s.mode.name())
+                    .with("submitted", s.submitted as i64)
+                    .with("completed", s.completed as i64)
+                    .with("failed", s.failed as i64)
+                    .with("rejected", s.rejected as i64)
+                    .with("deadline_missed", s.deadline_missed as i64)
+                    .with("drain_shed", s.drain_shed as i64)
+                    .with("batches", s.batches as i64)
+                    .with("batched_requests", s.batched_requests as i64)
+                    .with("slot_budget", s.slot_budget as i64)
+                    .with("iterations", s.iterations as i64)
+                    .with("joins", s.joins as i64)
+                    .with("retires", s.retires as i64)
+                    .with("cohort_max", s.cohort_max as i64)
+                    .with("cohort_last", s.cohort_last as i64)
+                    .with("slot_utilization", s.slot_utilization)
+                    .with("queue_depth", s.queue_depth as i64)
+                    .with("queue_depth_max", s.queue_depth_max as i64)
+                    .with("actuator_fraction", s.actuator_fraction)
+                    .with("latency_ms_mean", s.latency_ms_mean)
+                    .with("latency_ms_p50", s.latency_ms_p50)
+                    .with("latency_ms_p90", s.latency_ms_p90)
+            }
+            Backend::Cluster(set) => {
+                let s = set.stats();
+                let replicas: Vec<Value> = s
+                    .replicas
+                    .iter()
+                    .map(|r| {
+                        Value::obj()
+                            .with("id", r.id as i64)
+                            .with("healthy", r.healthy)
+                            .with("routed", r.routed as i64)
+                            .with("outstanding_evals", r.outstanding_evals as i64)
+                            .with("capacity_weight", r.capacity_weight)
+                            .with("mode", r.coordinator.mode.name())
+                            .with("slot_budget", r.coordinator.slot_budget as i64)
+                            .with("completed", r.coordinator.completed as i64)
+                            .with("failed", r.coordinator.failed as i64)
+                            .with("drain_shed", r.coordinator.drain_shed as i64)
+                            .with("batches", r.coordinator.batches as i64)
+                            .with("iterations", r.coordinator.iterations as i64)
+                            .with("queue_depth", r.coordinator.queue_depth as i64)
+                            .with("slot_utilization", r.coordinator.slot_utilization)
+                    })
+                    .collect();
+                ok_base(id)
+                    .with("cluster", true)
+                    .with("route", s.route.name())
+                    .with("healthy_replicas", s.healthy_replicas as i64)
+                    .with("submitted", s.submitted as i64)
+                    .with("completed", s.completed as i64)
+                    .with("failed", s.failed as i64)
+                    .with("rejected", s.rejected as i64)
+                    .with("deadline_missed", s.deadline_missed as i64)
+                    .with("requeued", s.requeued as i64)
+                    .with("ejected", s.ejected as i64)
+                    .with("drain_shed", s.drain_shed as i64)
+                    .with("batches", s.batches as i64)
+                    .with("iterations", s.iterations as i64)
+                    .with("joins", s.joins as i64)
+                    .with("retires", s.retires as i64)
+                    .with("queue_depth", s.queue_depth as i64)
+                    .with("queue_depth_max", s.queue_depth_max as i64)
+                    .with("outstanding_evals", s.outstanding_evals as i64)
+                    .with("actuator_fraction", s.actuator_fraction)
+                    .with("latency_ms_mean", s.latency_ms_mean)
+                    .with("latency_ms_p50", s.latency_ms_p50)
+                    .with("latency_ms_p90", s.latency_ms_p90)
+                    .with("replicas", Value::Arr(replicas))
+            }
+        }
+    }
+}
 
 /// Server-side guidance defaults (from the `[engine]`/`[guidance]`
 /// config and the `serve` CLI) applied to requests that carry no
@@ -79,6 +182,25 @@ impl Server {
         bind: &str,
         defaults: GuidanceDefaults,
     ) -> Result<Server> {
+        Self::start_backend(Backend::Single(coordinator), bind, defaults)
+    }
+
+    /// Bind and serve in front of a replica cluster (`serve --replicas`).
+    pub fn start_cluster(
+        set: Arc<ReplicaSet>,
+        bind: &str,
+        defaults: GuidanceDefaults,
+    ) -> Result<Server> {
+        Self::start_backend(Backend::Cluster(set), bind, defaults)
+    }
+
+    /// Bind and serve any [`Backend`].
+    pub fn start_backend(
+        backend: Backend,
+        bind: &str,
+        defaults: GuidanceDefaults,
+    ) -> Result<Server> {
+        let backend = Arc::new(backend);
         let listener = TcpListener::bind(bind)
             .map_err(|e| Error::io(format!("binding {bind}"), e))?;
         let addr = listener
@@ -95,11 +217,11 @@ impl Server {
                 }
                 match stream {
                     Ok(s) => {
-                        let coord = Arc::clone(&coordinator);
+                        let backend = Arc::clone(&backend);
                         let stop3 = Arc::clone(&stop2);
                         let defaults = Arc::clone(&defaults);
                         std::thread::spawn(move || {
-                            let _ = handle_connection(s, coord, stop3, defaults);
+                            let _ = handle_connection(s, backend, stop3, defaults);
                         });
                     }
                     Err(_) => break,
@@ -132,7 +254,7 @@ impl Drop for Server {
 
 fn handle_connection(
     stream: TcpStream,
-    coordinator: Arc<Coordinator>,
+    backend: Arc<Backend>,
     stop: Arc<AtomicBool>,
     defaults: Arc<GuidanceDefaults>,
 ) -> std::io::Result<()> {
@@ -148,7 +270,7 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let response = dispatch(&line, &coordinator, &stop, &defaults);
+        let response = dispatch(&line, &backend, &stop, &defaults);
         writer.write_all(response.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -161,7 +283,7 @@ fn handle_connection(
 
 fn dispatch(
     line: &str,
-    coordinator: &Arc<Coordinator>,
+    backend: &Arc<Backend>,
     stop: &Arc<AtomicBool>,
     defaults: &GuidanceDefaults,
 ) -> Value {
@@ -172,31 +294,7 @@ fn dispatch(
     let id = parsed.get("id").and_then(Value::as_i64);
     match parsed.get("op").and_then(Value::as_str) {
         Some("ping") => ok_base(id).with("pong", true),
-        Some("stats") => {
-            let s = coordinator.stats();
-            ok_base(id)
-                .with("mode", s.mode.name())
-                .with("submitted", s.submitted as i64)
-                .with("completed", s.completed as i64)
-                .with("failed", s.failed as i64)
-                .with("rejected", s.rejected as i64)
-                .with("deadline_missed", s.deadline_missed as i64)
-                .with("batches", s.batches as i64)
-                .with("batched_requests", s.batched_requests as i64)
-                .with("slot_budget", s.slot_budget as i64)
-                .with("iterations", s.iterations as i64)
-                .with("joins", s.joins as i64)
-                .with("retires", s.retires as i64)
-                .with("cohort_max", s.cohort_max as i64)
-                .with("cohort_last", s.cohort_last as i64)
-                .with("slot_utilization", s.slot_utilization)
-                .with("queue_depth", s.queue_depth as i64)
-                .with("queue_depth_max", s.queue_depth_max as i64)
-                .with("actuator_fraction", s.actuator_fraction)
-                .with("latency_ms_mean", s.latency_ms_mean)
-                .with("latency_ms_p50", s.latency_ms_p50)
-                .with("latency_ms_p90", s.latency_ms_p90)
-        }
+        Some("stats") => backend.stats_value(id),
         Some("shutdown") => {
             stop.store(true, Ordering::SeqCst);
             ok_base(id).with("stopping", true)
@@ -214,7 +312,7 @@ fn dispatch(
                     sr.request.strategy = defaults.strategy;
                     sr.request.adaptive = defaults.adaptive;
                 }
-                match coordinator
+                match backend
                     .submit_qos(sr.request.clone(), sr.meta)
                     .and_then(|ticket| ticket.wait())
                 {

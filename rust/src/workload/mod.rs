@@ -4,15 +4,18 @@
 //! how the saving translates under load (queueing amplifies per-image
 //! savings into latency/throughput headroom). This module provides
 //! deterministic arrival processes (Poisson / uniform / bursty), trace
-//! synthesis over the Table-2 prompt corpus, and a replay driver that
-//! submits against a [`crate::coordinator::Coordinator`]
-//! with per-request SLO accounting. The `slo_serving` bench builds its
-//! load-vs-latency curves on top.
+//! synthesis over the Table-2 prompt corpus, and replay drivers that
+//! submit against any [`crate::coordinator::Submit`] sink — a single
+//! [`crate::coordinator::Coordinator`] or a [`ReplicaSet`] — with
+//! per-request SLO accounting; [`replay_qos_cluster`] adds replica
+//! failure injection ([`KillSpec`]). The `slo_serving` and
+//! `cluster_scaling` benches build their curves on top.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::Coordinator;
+use crate::cluster::ReplicaSet;
+use crate::coordinator::Submit;
 use crate::engine::GenerationRequest;
 use crate::error::{Error, Result};
 use crate::guidance::{GuidanceSchedule, GuidanceStrategy};
@@ -87,6 +90,16 @@ pub struct TraceEntry {
     pub meta: QosMeta,
 }
 
+/// Failure injection: kill (eject) a cluster replica mid-replay. Only
+/// meaningful for the cluster replay driver ([`replay_qos_cluster`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KillSpec {
+    /// Offset from replay start, milliseconds.
+    pub at_ms: f64,
+    /// Replica id to eject.
+    pub replica: usize,
+}
+
 /// Trace synthesis parameters.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
@@ -112,6 +125,12 @@ pub struct WorkloadSpec {
     pub deadline_ms: Option<f64>,
     /// Priority class attached to every request.
     pub priority: Priority,
+    /// Replica-failure injection: replicas killed mid-replay. Kill
+    /// events are not trace entries (they target the cluster, not a
+    /// request), so [`WorkloadSpec::synthesize`] leaves them out —
+    /// cluster replays pass them to [`replay_qos_cluster`] alongside
+    /// the trace.
+    pub kills: Vec<KillSpec>,
 }
 
 impl Default for WorkloadSpec {
@@ -129,6 +148,7 @@ impl Default for WorkloadSpec {
             seed: 0,
             deadline_ms: None,
             priority: Priority::Standard,
+            kills: Vec::new(),
         }
     }
 }
@@ -199,12 +219,13 @@ impl ReplayReport {
     }
 }
 
-/// Replay a trace against a coordinator, honoring arrival times
-/// (open-loop). Blocks until every request completes. Thin projection of
-/// [`replay_qos`]: the trace's QoS metadata is honored (not dropped),
-/// and rejections/expiries fold into the aggregate `failures` count.
-pub fn replay(coordinator: &Arc<Coordinator>, trace: &[TraceEntry]) -> Result<ReplayReport> {
-    let report = replay_qos(coordinator, trace)?;
+/// Replay a trace against any [`Submit`] sink — a single coordinator or
+/// a [`ReplicaSet`] — honoring arrival times (open-loop). Blocks until
+/// every request completes. Thin projection of [`replay_qos`]: the
+/// trace's QoS metadata is honored (not dropped), and
+/// rejections/expiries fold into the aggregate `failures` count.
+pub fn replay<S: Submit>(sink: &S, trace: &[TraceEntry]) -> Result<ReplayReport> {
+    let report = replay_qos(sink, trace)?;
     let failures = report.outcomes.len() - report.completed();
     Ok(ReplayReport {
         latencies_ms: report.latencies_ms,
@@ -275,44 +296,127 @@ impl QosReplayReport {
     }
 }
 
-/// Replay a trace through the QoS submission path, recording one
-/// [`RequestOutcome`] per entry (open-loop; blocks until every admitted
-/// request resolves). Unlike [`replay`], synchronous admission
-/// rejections are recorded instead of treated as failures.
-pub fn replay_qos(coordinator: &Arc<Coordinator>, trace: &[TraceEntry]) -> Result<QosReplayReport> {
+/// Replay a trace through the QoS submission path of any [`Submit`]
+/// sink, recording one [`RequestOutcome`] per entry (open-loop; blocks
+/// until every admitted request resolves). Unlike [`replay`],
+/// synchronous admission rejections are recorded instead of treated as
+/// failures.
+pub fn replay_qos<S: Submit>(sink: &S, trace: &[TraceEntry]) -> Result<QosReplayReport> {
+    replay_driver(
+        trace,
+        &[],
+        |entry| sink.submit_qos(entry.request.clone(), entry.meta),
+        |_| Ok(()),
+    )
+}
+
+/// Replay a trace against a [`ReplicaSet`] with failure injection: each
+/// [`KillSpec`] ejects its replica at its offset, mid-replay. In-flight
+/// work on the killed replica requeues onto survivors (the cluster's
+/// relay layer), so the report shows where requests actually ended up —
+/// the `/stats` ejection/requeue counters carry the injection's audit
+/// trail.
+pub fn replay_qos_cluster(
+    set: &Arc<ReplicaSet>,
+    trace: &[TraceEntry],
+    kills: &[KillSpec],
+) -> Result<QosReplayReport> {
+    // validate up front: kills fire on detached threads mid-replay, so a
+    // bad replica index must fail loudly here, not be swallowed there
+    for k in kills {
+        if k.replica >= set.replicas() {
+            return Err(Error::Config(format!(
+                "kill at {} ms addresses replica {} but the cluster has {}",
+                k.at_ms,
+                k.replica,
+                set.replicas()
+            )));
+        }
+    }
+    replay_driver(
+        trace,
+        kills,
+        |entry| set.submit_qos(entry.request.clone(), entry.meta),
+        |kill| set.kill(kill.replica),
+    )
+}
+
+/// Sleep (if needed) until `at_ms` past `start` — open-loop pacing.
+fn sleep_until(start: Instant, at_ms: f64) {
+    let target = Duration::from_secs_f64(at_ms.max(0.0) / 1e3);
+    let now = start.elapsed();
+    if target > now {
+        std::thread::sleep(target - now);
+    }
+}
+
+/// Shared open-loop replay engine: merges the arrival stream with the
+/// (sorted-by-offset) kill events, fires both at their offsets, then
+/// collects one outcome per trace entry. Kill events fire on their own
+/// (scope-joined) threads: ejecting a replica blocks until its cohort
+/// drains, which must not stall the arrival schedule.
+fn replay_driver(
+    trace: &[TraceEntry],
+    kills: &[KillSpec],
+    mut submit: impl FnMut(&TraceEntry) -> Result<crate::coordinator::Ticket>,
+    kill: impl Fn(&KillSpec) -> Result<()> + Sync,
+) -> Result<QosReplayReport> {
+    let mut kills: Vec<KillSpec> = kills.to_vec();
+    kills.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
     let start = Instant::now();
-    let mut pending = Vec::with_capacity(trace.len());
-    for entry in trace {
-        let target = Duration::from_secs_f64(entry.at_ms.max(0.0) / 1e3);
-        let now = start.elapsed();
-        if target > now {
-            std::thread::sleep(target - now);
+    std::thread::scope(|scope| {
+        let kill = &kill;
+        let mut fire = |spec: KillSpec| {
+            sleep_until(start, spec.at_ms);
+            scope.spawn(move || {
+                // indices are pre-validated by the callers, so the only
+                // error here is an already-dead replica: a no-op
+                let _ = kill(&spec);
+            });
+        };
+        let mut next_kill = 0usize;
+        let mut pending = Vec::with_capacity(trace.len());
+        for entry in trace {
+            // fire kill events due before this arrival, each at its own
+            // offset so a kill between two arrivals lands on time
+            while next_kill < kills.len() && kills[next_kill].at_ms <= entry.at_ms {
+                fire(kills[next_kill]);
+                next_kill += 1;
+            }
+            sleep_until(start, entry.at_ms);
+            match submit(entry) {
+                Ok(ticket) => pending.push(Some(ticket)),
+                Err(Error::Rejected { .. }) => pending.push(None),
+                Err(e) => return Err(e), // setup errors (validation, drain) abort
+            }
         }
-        match coordinator.submit_qos(entry.request.clone(), entry.meta) {
-            Ok(ticket) => pending.push(Some(ticket)),
-            Err(Error::Rejected { .. }) => pending.push(None),
-            Err(e) => return Err(e), // setup errors (validation, drain) abort
+        // kill events scheduled past the last arrival still fire
+        while next_kill < kills.len() {
+            fire(kills[next_kill]);
+            next_kill += 1;
         }
-    }
-    let mut outcomes = Vec::with_capacity(trace.len());
-    let mut latencies = Vec::new();
-    for slot in pending {
-        match slot {
-            None => outcomes.push(RequestOutcome::Rejected),
-            Some(ticket) => match ticket.wait_timed() {
-                Ok((_, latency)) => {
-                    let ms = latency.as_secs_f64() * 1e3;
-                    latencies.push(ms);
-                    outcomes.push(RequestOutcome::Completed { latency_ms: ms });
-                }
-                Err(Error::DeadlineExceeded(_)) => outcomes.push(RequestOutcome::DeadlineMissed),
-                Err(_) => outcomes.push(RequestOutcome::Failed),
-            },
+        let mut outcomes = Vec::with_capacity(trace.len());
+        let mut latencies = Vec::new();
+        for slot in pending {
+            match slot {
+                None => outcomes.push(RequestOutcome::Rejected),
+                Some(ticket) => match ticket.wait_timed() {
+                    Ok((_, latency)) => {
+                        let ms = latency.as_secs_f64() * 1e3;
+                        latencies.push(ms);
+                        outcomes.push(RequestOutcome::Completed { latency_ms: ms });
+                    }
+                    Err(Error::DeadlineExceeded(_)) => {
+                        outcomes.push(RequestOutcome::DeadlineMissed)
+                    }
+                    Err(_) => outcomes.push(RequestOutcome::Failed),
+                },
+            }
         }
-    }
-    let wall_s = start.elapsed().as_secs_f64();
-    let throughput = latencies.len() as f64 / wall_s;
-    Ok(QosReplayReport { outcomes, latencies_ms: latencies, wall_s, throughput })
+        let wall_s = start.elapsed().as_secs_f64();
+        let throughput = latencies.len() as f64 / wall_s;
+        Ok(QosReplayReport { outcomes, latencies_ms: latencies, wall_s, throughput })
+    })
 }
 
 #[cfg(test)]
@@ -463,6 +567,21 @@ mod tests {
         // default: best-effort standard
         let plain = WorkloadSpec { num_requests: 2, ..WorkloadSpec::default() }.synthesize();
         assert!(plain.iter().all(|t| t.meta == QosMeta::default()));
+    }
+
+    #[test]
+    fn kill_spec_rides_the_workload_spec() {
+        let spec = WorkloadSpec {
+            num_requests: 4,
+            kills: vec![KillSpec { at_ms: 50.0, replica: 1 }],
+            ..WorkloadSpec::default()
+        };
+        assert_eq!(spec.kills, vec![KillSpec { at_ms: 50.0, replica: 1 }]);
+        // kill events are cluster events, not requests: the trace stays
+        // one entry per request
+        assert_eq!(spec.synthesize().len(), 4);
+        // default: no injection
+        assert!(WorkloadSpec::default().kills.is_empty());
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //! machines — never wall-clock samples; the bands are the tolerance. To
 //! tighten a band, copy the `bench-results` CI artifact's value in.
 //!
+//! Gated results as of PR 5: `BENCH_continuous.json` (iteration-level
+//! batching), `BENCH_qos.json` (actuator win at overload),
+//! `BENCH_interval.json` (interval/cadence SSIM gains) and
+//! `BENCH_cluster.json` (replica scaling ≥ 3.4× at 4 replicas,
+//! plan-cost routing p95 ≤ round-robin).
+//!
 //! Usage (from `rust/`, after `cargo bench -- --fast`):
 //!
 //! ```text
