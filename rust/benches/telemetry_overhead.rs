@@ -1,0 +1,241 @@
+//! Telemetry overhead — the DESIGN.md §12 "observation-only" claim,
+//! enforced in virtual time.
+//!
+//! Runs the saturated continuous-batching workload twice on the
+//! deterministic synthetic backend — telemetry disabled, then enabled
+//! with a manual [`Clock`] ticking 1 ms per cohort iteration — and
+//! asserts that observation changes *nothing*:
+//!
+//! 1. **identical virtual-time throughput** — the same tick count to the
+//!    same completion target (`throughput_ratio == 1.0`, gated to the
+//!    acceptance band [0.98, 1.02] by `tools/bench_gate.rs`);
+//! 2. **bit-identical outputs** — latents and eval counts match
+//!    per sample between the two runs;
+//! 3. **an exact ledger** — join/retire/iteration counters equal the
+//!    driver's own counts, every retired sample's span is terminated,
+//!    and span timestamps land exactly on the virtual tick that retired
+//!    them (clock-abstraction, not wall-clock noise).
+//!
+//! Wall-clock overhead is reported for context but never gated — the
+//! virtual-time ratio is the deterministic regression signal.
+//!
+//! Run: `cargo bench --bench telemetry_overhead` (`--fast` for CI smoke)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, Table};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::ContinuousBatcher;
+use selective_guidance::engine::{Engine, GenerationOutput, GenerationRequest};
+use selective_guidance::guidance::WindowSpec;
+use selective_guidance::json::Value;
+use selective_guidance::prompts;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::telemetry::{BatcherMetrics, Clock, Telemetry, TraceEvent, TraceId};
+
+fn request(i: usize, steps: usize) -> GenerationRequest {
+    GenerationRequest::new(prompts::TABLE2[i % prompts::TABLE2.len()])
+        .steps(steps)
+        .scheduler(SchedulerKind::Ddim)
+        .selective(WindowSpec::last(0.5))
+        .seed(i as u64)
+        .decode(false)
+}
+
+struct RunOutcome {
+    ticks: usize,
+    joined: usize,
+    /// (admission index, output), in retire order.
+    retired: Vec<(usize, GenerationOutput)>,
+    /// (trace id, 0-based retire tick) per retired sample, telemetry runs only.
+    retire_ticks: Vec<(TraceId, usize)>,
+    wall_ns: u64,
+}
+
+/// Drive one saturated run: admit whenever headroom exists, step until
+/// `target` samples retired. With telemetry, every admission opens a
+/// span (admitted/queued/cohort_join), every retirement closes it, and
+/// the shared manual clock advances 1 ms per iteration.
+fn run(
+    engine: &Arc<Engine>,
+    offered: usize,
+    target: usize,
+    steps: usize,
+    budget: usize,
+    telemetry: Option<&Arc<Telemetry>>,
+) -> RunOutcome {
+    let reqs: Vec<GenerationRequest> = (0..offered).map(|i| request(i, steps)).collect();
+    let cb = ContinuousBatcher::new(Arc::clone(engine), budget).expect("batcher");
+    let mut cb = match telemetry {
+        Some(t) => cb.with_telemetry(BatcherMetrics::new(t, "bench")),
+        None => cb,
+    };
+    let mut id2idx: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut id2trace: BTreeMap<u64, TraceId> = BTreeMap::new();
+    let mut out = RunOutcome {
+        ticks: 0,
+        joined: 0,
+        retired: Vec::new(),
+        retire_ticks: Vec::new(),
+        wall_ns: 0,
+    };
+    let mut next = 0usize;
+    let t0 = Instant::now();
+    while out.retired.len() < target {
+        while next < offered {
+            match cb.try_admit(&reqs[next]).expect("admit") {
+                Some(id) => {
+                    id2idx.insert(id, next);
+                    out.joined += 1;
+                    if let Some(t) = telemetry {
+                        let trace = t.begin_trace();
+                        t.event(trace, TraceEvent::Admitted { class: "standard" });
+                        t.event(trace, TraceEvent::Queued { depth: id2idx.len() });
+                        t.event(trace, TraceEvent::CohortJoin { cohort: id2idx.len() });
+                        id2trace.insert(id, trace.expect("telemetry enabled"));
+                    }
+                    next += 1;
+                }
+                None => break,
+            }
+        }
+        let outcome = cb.step().expect("step");
+        assert!(outcome.slots_used <= budget, "slot budget violated");
+        for (id, sample) in outcome.retired {
+            if let Some(t) = telemetry {
+                let trace = id2trace[&id];
+                t.event(Some(trace), TraceEvent::Retired);
+                out.retire_ticks.push((trace, out.ticks));
+            }
+            out.retired.push((id2idx[&id], sample));
+        }
+        if let Some(t) = telemetry {
+            t.clock().advance_ms(1.0);
+        }
+        out.ticks += 1;
+        assert!(out.ticks < 100_000, "run failed to reach target");
+    }
+    out.wall_ns = t0.elapsed().as_nanos() as u64;
+    out
+}
+
+fn counter_value(t: &Arc<Telemetry>, name: &str, help: &str) -> u64 {
+    let c = t.registry().counter(name, help, &[("scope", "bench")]);
+    c.value()
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let engine = Arc::new(Engine::new(
+        Arc::new(ModelStack::synthetic()),
+        EngineConfig::default(),
+    ));
+    let steps = if args.fast { 12 } else { 20 };
+    let target = if args.fast { 24 } else { 40 };
+    let offered = target * 2; // stay saturated past the measured window
+    let budget = 8usize;
+
+    let off = run(&engine, offered, target, steps, budget, None);
+    let telemetry = Telemetry::with_clock(4096, Clock::manual());
+    let on = run(&engine, offered, target, steps, budget, Some(&telemetry));
+
+    // ---- claim 1: identical virtual-time throughput ---------------------
+    assert_eq!(
+        on.ticks, off.ticks,
+        "telemetry must not change the virtual-time schedule"
+    );
+    let throughput_ratio = off.ticks as f64 / on.ticks as f64;
+
+    // ---- claim 2: bit-identical outputs ---------------------------------
+    assert_eq!(on.retired.len(), off.retired.len());
+    for ((i_on, s_on), (i_off, s_off)) in on.retired.iter().zip(&off.retired) {
+        assert_eq!(i_on, i_off, "retire order diverged under observation");
+        assert_eq!(s_on.latent, s_off.latent, "sample {i_on}: latent diverged");
+        assert_eq!(s_on.unet_evals, s_off.unet_evals, "sample {i_on}: evals diverged");
+    }
+    let bitexact_samples = on.retired.len();
+
+    // ---- claim 3: exact ledger on the manual clock ----------------------
+    let joins =
+        counter_value(&telemetry, "sg_batcher_joins_total", "Samples admitted into cohorts");
+    let retires =
+        counter_value(&telemetry, "sg_batcher_retires_total", "Samples retired from cohorts");
+    let iterations = counter_value(&telemetry, "sg_batcher_iterations_total", "Cohort iterations");
+    assert_eq!(joins as usize, on.joined, "join counter out of sync with the driver");
+    assert_eq!(retires as usize, on.retired.len(), "retire counter out of sync");
+    assert_eq!(iterations as usize, on.ticks, "iteration counter out of sync");
+    let terminated = telemetry
+        .traces()
+        .spans()
+        .iter()
+        .filter(|s| s.terminal_events() == 1)
+        .count();
+    assert_eq!(terminated, on.retired.len(), "every retired sample closes its span");
+    for &(trace, tick) in &on.retire_ticks {
+        let span = telemetry.traces().span(trace).expect("retired span present");
+        let last = span.events.last().expect("span has events");
+        assert_eq!(last.event.name(), "retired");
+        assert_eq!(
+            last.at_ns, tick as u64 * 1_000_000,
+            "span timestamp must land exactly on its virtual retire tick"
+        );
+    }
+    let render = telemetry.render_prometheus();
+    assert!(render.contains(&format!("sg_batcher_joins_total{{scope=\"bench\"}} {joins}")));
+    let ledger_exact = 1i64; // every assert above passed to get here
+
+    // ---- report ---------------------------------------------------------
+    let wall_ratio = on.wall_ns as f64 / off.wall_ns.max(1) as f64;
+    let mut table = Table::new(&["telemetry", "ticks", "img/tick", "wall ms"]);
+    table.row(&[
+        "off".into(),
+        format!("{}", off.ticks),
+        format!("{:.4}", target as f64 / off.ticks as f64),
+        format!("{:.2}", off.wall_ns as f64 / 1e6),
+    ]);
+    table.row(&[
+        "on".into(),
+        format!("{}", on.ticks),
+        format!("{:.4}", target as f64 / on.ticks as f64),
+        format!("{:.2}", on.wall_ns as f64 / 1e6),
+    ]);
+    println!(
+        "\nTelemetry overhead — virtual time, slot budget {budget}, {steps} steps, \
+         first {target} completions of {offered} offered:\n"
+    );
+    table.print();
+    println!(
+        "\n(identical {} ticks with and without observation — throughput ratio \
+         {throughput_ratio:.3}; wall-clock ratio {wall_ratio:.3}, reported unguarded)",
+        on.ticks
+    );
+
+    write_result_json(
+        "telemetry_overhead",
+        &Value::obj()
+            .with("steps", steps as i64)
+            .with("target", target as i64)
+            .with("offered", offered as i64)
+            .with("slot_budget", budget as i64)
+            .with("ticks_off", off.ticks as i64)
+            .with("ticks_on", on.ticks as i64)
+            .with("throughput_ratio", throughput_ratio)
+            .with("wall_ratio", wall_ratio)
+            .with("joins", joins as i64)
+            .with("retires", retires as i64)
+            .with("bitexact_samples", bitexact_samples as i64),
+    );
+    // the regression-gate view: deterministic virtual-time metrics only
+    // (never wall clock), compared against
+    // ci/bench_baselines/BENCH_telemetry.json by tools/bench_gate.rs
+    write_result_json(
+        "BENCH_telemetry",
+        &Value::obj()
+            .with("throughput_ratio", throughput_ratio)
+            .with("ledger_exact", ledger_exact)
+            .with("bitexact_samples", bitexact_samples as i64),
+    );
+}

@@ -60,6 +60,7 @@ use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
 use crate::qos::{AdmissionDecision, QosMeta, QosPolicy};
+use crate::telemetry::{ClusterMetrics, CoordSink, Telemetry};
 
 /// One replica's serving shape — its share of the heterogeneous fleet.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -348,13 +349,21 @@ struct Core {
     pending: AtomicU64,
     pending_max: AtomicU64,
     draining: AtomicBool,
+    /// Cluster-layer telemetry (DESIGN.md §12). The cluster owns the
+    /// span terminals: replica coordinators run with non-terminal sinks
+    /// so a requeued failover still ends in exactly one terminal event.
+    metrics: Option<ClusterMetrics>,
 }
 
 impl Core {
     /// Route + enqueue one admitted job, retrying across replicas until
     /// one accepts; on total failure the job is handed back with the
     /// error so the caller decides who answers the client.
-    fn dispatch(&self, mut job: ClusterJob) -> std::result::Result<(), (ClusterJob, Error)> {
+    fn dispatch(
+        &self,
+        mut job: ClusterJob,
+        requeued_from: Option<usize>,
+    ) -> std::result::Result<(), (ClusterJob, Error)> {
         loop {
             let target = {
                 let loads: Vec<Option<u64>> = self
@@ -379,10 +388,14 @@ impl Core {
             let replica = &self.replicas[id];
             // reserve the load before enqueueing so concurrent placements
             // see each other's reservations
-            replica.outstanding_evals.fetch_add(job.cost, Ordering::Relaxed);
+            let outstanding =
+                replica.outstanding_evals.fetch_add(job.cost, Ordering::Relaxed) + job.cost;
             match replica.coordinator.submit_preadmitted(job.req.clone(), job.meta) {
                 Ok(inner) => {
                     replica.routed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(m) = &self.metrics {
+                        m.on_placed(job.meta.trace, id, outstanding, requeued_from);
+                    }
                     job.placed.lock().unwrap().push(id);
                     let item = RelayItem { inner, job };
                     let failed_item = {
@@ -400,7 +413,13 @@ impl Core {
                             // replica sheds the job during its drain) and
                             // try elsewhere
                             drop(inner);
-                            replica.outstanding_evals.fetch_sub(back.cost, Ordering::Relaxed);
+                            let left = replica
+                                .outstanding_evals
+                                .fetch_sub(back.cost, Ordering::Relaxed)
+                                - back.cost;
+                            if let Some(m) = &self.metrics {
+                                m.on_outstanding(id, left);
+                            }
                             back.placed.lock().unwrap().pop();
                             back.excluded.push(id);
                             job = back;
@@ -408,7 +427,11 @@ impl Core {
                     }
                 }
                 Err(e) => {
-                    replica.outstanding_evals.fetch_sub(job.cost, Ordering::Relaxed);
+                    let left =
+                        replica.outstanding_evals.fetch_sub(job.cost, Ordering::Relaxed) - job.cost;
+                    if let Some(m) = &self.metrics {
+                        m.on_outstanding(id, left);
+                    }
                     // a request-level error would fail identically on
                     // every replica — surface it; lifecycle errors
                     // (draining/stopped replica) exclude this replica and
@@ -434,7 +457,7 @@ impl ReplicaSet {
     /// admitted) plus the relay threads that forward completions and
     /// requeue failures.
     pub fn start(engine: Arc<Engine>, config: ClusterConfig) -> Result<Arc<ReplicaSet>> {
-        Self::start_inner(engine, config, None)
+        Self::start_inner(engine, config, None, None)
     }
 
     /// Spawn with a cluster-level [`QosPolicy`]: admission is decided
@@ -447,13 +470,28 @@ impl ReplicaSet {
         config: ClusterConfig,
         qos: Arc<dyn QosPolicy>,
     ) -> Result<Arc<ReplicaSet>> {
-        Self::start_inner(engine, config, Some(qos))
+        Self::start_inner(engine, config, Some(qos), None)
+    }
+
+    /// The superset entry point: optional QoS *and* an optional
+    /// [`Telemetry`] hub (DESIGN.md §12). The cluster wires each replica
+    /// coordinator with a non-terminal `replicaN`-scoped sink and keeps
+    /// span-terminal ownership in its relays, so a request requeued
+    /// across replicas still ends in exactly one terminal event.
+    pub fn start_full(
+        engine: Arc<Engine>,
+        config: ClusterConfig,
+        qos: Option<Arc<dyn QosPolicy>>,
+        telemetry: Option<Arc<Telemetry>>,
+    ) -> Result<Arc<ReplicaSet>> {
+        Self::start_inner(engine, config, qos, telemetry)
     }
 
     fn start_inner(
         engine: Arc<Engine>,
         config: ClusterConfig,
         qos: Option<Arc<dyn QosPolicy>>,
+        telemetry: Option<Arc<Telemetry>>,
     ) -> Result<Arc<ReplicaSet>> {
         config.validate()?;
         let weights: Vec<f64> = config.replicas.iter().map(|s| s.capacity_weight()).collect();
@@ -461,14 +499,16 @@ impl ReplicaSet {
         let mut replicas = Vec::with_capacity(config.replicas.len());
         let mut relay_rxs = Vec::with_capacity(config.replicas.len());
         for (id, spec) in config.replicas.iter().enumerate() {
-            let coordinator = match &qos {
-                Some(q) => Coordinator::start_qos(
-                    Arc::clone(&engine),
-                    spec.coordinator_config(),
-                    Arc::clone(q),
-                ),
-                None => Coordinator::start(Arc::clone(&engine), spec.coordinator_config()),
-            };
+            // replica sinks never close spans — the relay owns terminals
+            let sink = telemetry
+                .as_ref()
+                .map(|t| CoordSink::new(t, &format!("replica{id}"), false));
+            let coordinator = Coordinator::start_full(
+                Arc::clone(&engine),
+                spec.coordinator_config(),
+                qos.clone(),
+                sink,
+            );
             let (tx, rx) = mpsc::channel::<RelayItem>();
             replicas.push(Replica {
                 id,
@@ -497,6 +537,9 @@ impl ReplicaSet {
             pending: AtomicU64::new(0),
             pending_max: AtomicU64::new(0),
             draining: AtomicBool::new(false),
+            metrics: telemetry
+                .as_ref()
+                .map(|t| ClusterMetrics::new(t, config.replicas.len())),
         });
         let relays = relay_rxs
             .into_iter()
@@ -514,6 +557,13 @@ impl ReplicaSet {
 
     pub fn replicas(&self) -> usize {
         self.core.replicas.len()
+    }
+
+    /// The telemetry hub this cluster reports into, when observed. The
+    /// server front-end serves `{"op":"metrics"}` / `{"op":"trace"}`
+    /// from here.
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.core.metrics.as_ref().map(|m| m.telemetry())
     }
 
     pub fn route(&self) -> RoutePolicy {
@@ -545,6 +595,13 @@ impl ReplicaSet {
         if core.draining.load(Ordering::SeqCst) {
             return Err(Error::Coordinator("cluster is draining".into()));
         }
+        // the cluster is the front door: it opens the trace span, and
+        // meta carries the id through every replica leg and requeue
+        if meta.trace.is_none() {
+            if let Some(m) = &core.metrics {
+                meta.trace = m.begin_trace();
+            }
+        }
         // reserve the aggregate-depth slot before admission (same exact-
         // bound argument as Coordinator::submit_qos)
         let depth_before = core.pending.fetch_add(1, Ordering::Relaxed) as usize;
@@ -554,6 +611,9 @@ impl ReplicaSet {
                 AdmissionDecision::Reject(reason) => {
                     core.pending.fetch_sub(1, Ordering::Relaxed);
                     core.rejected.fetch_add(1, Ordering::Relaxed);
+                    if let Some(m) = &core.metrics {
+                        m.on_rejected(meta.trace, reason.code(), &reason.message());
+                    }
                     return Err(Error::Rejected {
                         code: reason.code(),
                         reason: reason.message(),
@@ -568,9 +628,15 @@ impl ReplicaSet {
             Ok(p) => p.total_unet_evals() as u64,
             Err(e) => {
                 core.pending.fetch_sub(1, Ordering::Relaxed);
+                if let Some(m) = &core.metrics {
+                    m.on_shed(meta.trace, "invalid");
+                }
                 return Err(e);
             }
         };
+        if let Some(m) = &core.metrics {
+            m.on_admitted(meta.trace, meta.priority.name(), depth_before + 1);
+        }
         let (tx, rx) = mpsc::channel();
         let placed = Arc::new(Mutex::new(Vec::new()));
         let job = ClusterJob {
@@ -583,14 +649,18 @@ impl ReplicaSet {
             original_deadline: meta.deadline,
             meta,
         };
-        match core.dispatch(job) {
+        let trace = meta.trace;
+        match core.dispatch(job, None) {
             Ok(()) => {
                 core.submitted.fetch_add(1, Ordering::Relaxed);
-                Ok((Ticket::from_rx(rx), PlacementTrace { placed }))
+                Ok((Ticket::from_rx(rx, trace), PlacementTrace { placed }))
             }
             Err((job, e)) => {
                 drop(job);
                 core.pending.fetch_sub(1, Ordering::Relaxed);
+                if let Some(m) = &core.metrics {
+                    m.on_shed(trace, "no_replica");
+                }
                 Err(e)
             }
         }
@@ -613,6 +683,9 @@ impl ReplicaSet {
             .ok_or_else(|| Error::Config(format!("no replica {id}")))?;
         if replica.healthy.swap(false, Ordering::SeqCst) {
             self.core.ejected.fetch_add(1, Ordering::Relaxed);
+            if let Some(m) = &self.core.metrics {
+                m.on_ejected(id);
+            }
             replica.coordinator.shutdown();
         }
         Ok(())
@@ -762,13 +835,19 @@ fn relay_loop(core: Arc<Core>, id: usize, rx: Receiver<RelayItem>) {
 /// requeued request's first leg (queue time on the dead replica) stays
 /// visible in the histogram and counts against its deadline budget.
 fn relay_outcome(core: &Arc<Core>, id: usize, job: ClusterJob, result: Result<GenerationOutput>) {
-    core.replicas[id].outstanding_evals.fetch_sub(job.cost, Ordering::Relaxed);
+    let left = core.replicas[id].outstanding_evals.fetch_sub(job.cost, Ordering::Relaxed) - job.cost;
+    if let Some(m) = &core.metrics {
+        m.on_outstanding(id, left);
+    }
     let latency = job.submitted_at.elapsed();
     match result {
         Ok(out) => {
             core.latency.lock().unwrap().record(latency);
             core.completed.fetch_add(1, Ordering::Relaxed);
             core.pending.fetch_sub(1, Ordering::Relaxed);
+            if let Some(m) = &core.metrics {
+                m.on_retired(job.meta.trace, latency.as_secs_f64() * 1e3);
+            }
             let _ = job.respond.send((Ok(out), latency));
         }
         Err(e) => {
@@ -794,6 +873,9 @@ fn relay_outcome(core: &Arc<Core>, id: usize, job: ClusterJob, result: Result<Ge
                     if total <= latency {
                         core.deadline_missed.fetch_add(1, Ordering::Relaxed);
                         core.pending.fetch_sub(1, Ordering::Relaxed);
+                        if let Some(m) = &core.metrics {
+                            m.on_expired(job.meta.trace);
+                        }
                         let msg = format!(
                             "expired during replica failover after {:.0} ms (deadline {:.0} ms)",
                             latency.as_secs_f64() * 1e3,
@@ -806,22 +888,33 @@ fn relay_outcome(core: &Arc<Core>, id: usize, job: ClusterJob, result: Result<Ge
                 }
                 // count before dispatching: the new home's relay may
                 // resolve the ticket before this thread runs again, and
-                // the requeue ledger must already balance then
+                // the requeue ledger must already balance then (the
+                // requeued{from,to} span event is recorded at placement,
+                // inside dispatch)
                 core.requeued.fetch_add(1, Ordering::Relaxed);
-                match core.dispatch(job) {
+                match core.dispatch(job, Some(id)) {
                     Ok(()) => {}
                     Err((job, err)) => {
                         core.requeued.fetch_sub(1, Ordering::Relaxed);
                         core.failed.fetch_add(1, Ordering::Relaxed);
                         core.pending.fetch_sub(1, Ordering::Relaxed);
+                        if let Some(m) = &core.metrics {
+                            m.on_shed(job.meta.trace, "exhausted");
+                        }
                         let _ = job.respond.send((Err(err), latency));
                     }
                 }
             } else {
                 if matches!(e, Error::DeadlineExceeded(_)) {
                     core.deadline_missed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(m) = &core.metrics {
+                        m.on_expired(job.meta.trace);
+                    }
                 } else {
                     core.failed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(m) = &core.metrics {
+                        m.on_shed(job.meta.trace, "failed");
+                    }
                 }
                 core.pending.fetch_sub(1, Ordering::Relaxed);
                 let _ = job.respond.send((Err(e), latency));

@@ -342,8 +342,100 @@ impl ServerConfig {
     }
 }
 
+/// `[telemetry]` section: the metrics registry + trace-span layer
+/// (DESIGN.md §12). Enabled by default — telemetry is observation-only
+/// and near-zero-cost, so opting *out* is the explicit act.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Master switch. When false the serving stack attaches no sinks at
+    /// all and `{"op":"metrics"}`/`{"op":"trace"}` answer an error.
+    pub enabled: bool,
+    /// Trace ring-buffer capacity (spans kept for `{"op":"trace"}`).
+    pub trace_capacity: usize,
+    /// Optional plain-HTTP Prometheus scrape bind (`host:port`) —
+    /// `serve --metrics-addr` overrides it.
+    pub metrics_addr: Option<String>,
+    /// Optional path: retained trace spans are exported as JSONL when
+    /// the server shuts down.
+    pub trace_jsonl: Option<String>,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: true,
+            trace_capacity: crate::telemetry::DEFAULT_TRACE_CAPACITY,
+            metrics_addr: None,
+            trace_jsonl: None,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.enabled && self.trace_capacity == 0 {
+            return Err(Error::Config("telemetry trace_capacity must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Build from the `[telemetry]` TOML section (missing keys keep
+    /// defaults). Knobs under `enabled = false` are an operator error,
+    /// not a silent no-op (mirroring the `[qos]`/`[guidance]` rule).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = TelemetryConfig::default();
+        if let Some(v) = doc.get("telemetry", "enabled") {
+            cfg.enabled = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("telemetry enabled must be bool".into()))?;
+        }
+        let knobs = ["trace_capacity", "metrics_addr", "trace_jsonl"];
+        if !cfg.enabled {
+            if let Some(orphan) = knobs.iter().find(|&&k| doc.get("telemetry", k).is_some()) {
+                return Err(Error::Config(format!(
+                    "telemetry {orphan} requires enabled = true"
+                )));
+            }
+            return Ok(cfg);
+        }
+        if let Some(v) = doc.get("telemetry", "trace_capacity") {
+            cfg.trace_capacity = v
+                .as_usize()
+                .ok_or_else(|| Error::Config("trace_capacity must be int".into()))?;
+        }
+        if let Some(v) = doc.get("telemetry", "metrics_addr") {
+            cfg.metrics_addr = Some(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("metrics_addr must be string".into()))?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = doc.get("telemetry", "trace_jsonl") {
+            cfg.trace_jsonl = Some(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("trace_jsonl must be string".into()))?
+                    .to_string(),
+            );
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The telemetry hub this config describes: `Some(enabled hub)` or
+    /// `None` — layers given no hub attach no sinks and pay nothing.
+    pub fn build(&self) -> Option<std::sync::Arc<crate::telemetry::Telemetry>> {
+        if !self.enabled {
+            return None;
+        }
+        Some(crate::telemetry::Telemetry::with_clock(
+            self.trace_capacity,
+            crate::telemetry::Clock::wall(),
+        ))
+    }
+}
+
 /// Complete deployment configuration (engine + server + qos + cluster +
-/// artifacts).
+/// telemetry + artifacts).
 #[derive(Debug, Clone, Default)]
 pub struct RunConfig {
     pub artifacts_dir: Option<String>,
@@ -355,6 +447,9 @@ pub struct RunConfig {
     /// `cluster::ClusterConfig`. Replicas default to the `[server]`
     /// shape, overridden per replica by `[cluster.replica.N]` sections.
     pub cluster: Option<crate::cluster::ClusterConfig>,
+    /// `[telemetry]` section — enabled by default (see
+    /// [`TelemetryConfig`]).
+    pub telemetry: TelemetryConfig,
 }
 
 impl RunConfig {
@@ -377,6 +472,7 @@ impl RunConfig {
             server,
             qos: QosConfig::from_toml(&doc)?,
             cluster,
+            telemetry: TelemetryConfig::from_toml(&doc)?,
         })
     }
 }
@@ -615,6 +711,41 @@ ewma_alpha = 0.3
             RunConfig::from_str("[guidance]\nadaptive = true\nadaptive_threshold = -1.0\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn telemetry_section() {
+        // default: enabled, default capacity, no scrape endpoint
+        let cfg = RunConfig::from_str("").unwrap();
+        assert!(cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.trace_capacity, crate::telemetry::DEFAULT_TRACE_CAPACITY);
+        assert_eq!(cfg.telemetry.metrics_addr, None);
+        assert!(cfg.telemetry.build().is_some());
+        let cfg = RunConfig::from_str(
+            "[telemetry]\ntrace_capacity = 64\nmetrics_addr = \"127.0.0.1:9090\"\n\
+             trace_jsonl = \"spans.jsonl\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.telemetry.trace_capacity, 64);
+        assert_eq!(cfg.telemetry.metrics_addr.as_deref(), Some("127.0.0.1:9090"));
+        assert_eq!(cfg.telemetry.trace_jsonl.as_deref(), Some("spans.jsonl"));
+        // explicit off builds no hub
+        let cfg = RunConfig::from_str("[telemetry]\nenabled = false\n").unwrap();
+        assert!(!cfg.telemetry.enabled);
+        assert!(cfg.telemetry.build().is_none());
+        // orphan knobs under a disabled switch are an operator error
+        assert!(RunConfig::from_str(
+            "[telemetry]\nenabled = false\ntrace_capacity = 64\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_str(
+            "[telemetry]\nenabled = false\nmetrics_addr = \"127.0.0.1:9090\"\n"
+        )
+        .is_err());
+        // invalid values are structured config errors
+        assert!(RunConfig::from_str("[telemetry]\ntrace_capacity = 0\n").is_err());
+        assert!(RunConfig::from_str("[telemetry]\nenabled = \"yes\"\n").is_err());
+        assert!(RunConfig::from_str("[telemetry]\nmetrics_addr = 9090\n").is_err());
     }
 
     #[test]

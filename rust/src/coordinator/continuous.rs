@@ -26,6 +26,7 @@ use std::sync::Arc;
 
 use crate::engine::{Engine, GenerationOutput, GenerationRequest, SampleState};
 use crate::error::{Error, Result};
+use crate::telemetry::BatcherMetrics;
 
 /// A slot-budgeted, continuously re-composed denoising cohort.
 pub struct ContinuousBatcher {
@@ -34,6 +35,8 @@ pub struct ContinuousBatcher {
     ids: Vec<u64>,
     states: Vec<SampleState>,
     next_id: u64,
+    /// Optional slot-occupancy / join / retire metrics (DESIGN.md §12).
+    telemetry: Option<BatcherMetrics>,
 }
 
 /// What one cohort iteration produced.
@@ -63,7 +66,16 @@ impl ContinuousBatcher {
             ids: Vec::new(),
             states: Vec::new(),
             next_id: 0,
+            telemetry: None,
         })
+    }
+
+    /// Attach batcher-layer metrics (slot occupancy gauge, join/retire
+    /// counters). Builder-style so the coordinator and the benches share
+    /// one construction path.
+    pub fn with_telemetry(mut self, metrics: BatcherMetrics) -> ContinuousBatcher {
+        self.telemetry = Some(metrics);
+        self
     }
 
     pub fn slot_budget(&self) -> usize {
@@ -106,6 +118,9 @@ impl ContinuousBatcher {
         self.next_id += 1;
         self.ids.push(id);
         self.states.push(state);
+        if let Some(tm) = &self.telemetry {
+            tm.on_join(self.committed_slots(), self.states.len());
+        }
         Ok(Some(id))
     }
 
@@ -130,6 +145,14 @@ impl ContinuousBatcher {
             } else {
                 i += 1;
             }
+        }
+        if let Some(tm) = &self.telemetry {
+            tm.on_step(
+                report.slots_used,
+                retired.len(),
+                self.committed_slots(),
+                self.states.len(),
+            );
         }
         Ok(StepOutcome { retired, slots_used: report.slots_used, cohort: report.advanced })
     }

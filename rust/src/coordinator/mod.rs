@@ -58,6 +58,7 @@ use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
 use crate::qos::{expired, AdmissionDecision, QosMeta, QosPolicy};
+use crate::telemetry::{BatcherMetrics, CoordSink, Telemetry};
 
 /// How the coordinator composes engine work (DESIGN.md §5 / §9).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -207,14 +208,25 @@ struct Batch {
 /// Handle to one in-flight request.
 pub struct Ticket {
     rx: Receiver<(Result<GenerationOutput>, Duration)>,
+    trace: Option<u64>,
 }
 
 impl Ticket {
     /// Build a ticket over a raw response channel — the cluster layer
     /// interposes its own channel so it can requeue a failed replica's
     /// jobs before the client sees anything.
-    pub(crate) fn from_rx(rx: Receiver<(Result<GenerationOutput>, Duration)>) -> Ticket {
-        Ticket { rx }
+    pub(crate) fn from_rx(
+        rx: Receiver<(Result<GenerationOutput>, Duration)>,
+        trace: Option<u64>,
+    ) -> Ticket {
+        Ticket { rx, trace }
+    }
+
+    /// Trace span id assigned at admission (None when telemetry is off) —
+    /// the correlation key for `{"op":"trace"}` queries and the replay
+    /// drivers' conservation accounting (DESIGN.md §12).
+    pub fn trace(&self) -> Option<u64> {
+        self.trace
     }
 
     /// Block until the result is ready.
@@ -268,13 +280,15 @@ pub struct Coordinator {
     draining: Arc<AtomicBool>,
     mode: BatchMode,
     slot_budget: usize,
+    /// Telemetry sink (DESIGN.md §12); None when observation is off.
+    sink: Option<Arc<CoordSink>>,
 }
 
 impl Coordinator {
     /// Start the batcher + worker threads over an engine (no QoS policy:
     /// the queue is unbounded and requests are served as submitted).
     pub fn start(engine: Arc<Engine>, config: CoordinatorConfig) -> Arc<Coordinator> {
-        Self::start_inner(engine, config, None)
+        Self::start_inner(engine, config, None, None)
     }
 
     /// Start with a pluggable [`QosPolicy`] ahead of the batcher.
@@ -283,13 +297,28 @@ impl Coordinator {
         config: CoordinatorConfig,
         qos: Arc<dyn QosPolicy>,
     ) -> Arc<Coordinator> {
-        Self::start_inner(engine, config, Some(qos))
+        Self::start_inner(engine, config, Some(qos), None)
+    }
+
+    /// The superset entry point: optional QoS *and* optional telemetry
+    /// sink (DESIGN.md §12). When a sink is given, the engine and the
+    /// policy are wired into the same registry, every request lifecycle
+    /// event lands on the sink, and continuous workers report slot
+    /// occupancy through a [`BatcherMetrics`] sharing the sink's scope.
+    pub fn start_full(
+        engine: Arc<Engine>,
+        config: CoordinatorConfig,
+        qos: Option<Arc<dyn QosPolicy>>,
+        sink: Option<CoordSink>,
+    ) -> Arc<Coordinator> {
+        Self::start_inner(engine, config, qos, sink)
     }
 
     fn start_inner(
         engine: Arc<Engine>,
         config: CoordinatorConfig,
         qos: Option<Arc<dyn QosPolicy>>,
+        sink: Option<CoordSink>,
     ) -> Arc<Coordinator> {
         assert!(config.max_batch >= 1 && config.workers >= 1);
         if config.mode == BatchMode::Continuous {
@@ -297,6 +326,14 @@ impl Coordinator {
                 config.slot_budget >= 2,
                 "continuous mode needs slot_budget >= 2 (a dual step costs 2 slots)"
             );
+        }
+        let sink = sink.map(Arc::new);
+        if let Some(s) = &sink {
+            // one registry for every layer this coordinator drives
+            engine.attach_telemetry(s.telemetry());
+            if let Some(q) = &qos {
+                q.attach_telemetry(s.telemetry());
+            }
         }
         let (submit_tx, submit_rx) = mpsc::channel::<Job>();
         let stats = Arc::new(Mutex::new(StatsInner {
@@ -330,9 +367,10 @@ impl Coordinator {
                     let draining = Arc::clone(&draining);
                     let max_batch = config.max_batch;
                     let wait = config.batch_wait;
+                    let sink = sink.clone();
                     handles.push(std::thread::spawn(move || {
                         batcher_loop(
-                            submit_rx, batch_tx, max_batch, wait, stats, pending, draining,
+                            submit_rx, batch_tx, max_batch, wait, stats, pending, draining, sink,
                         );
                     }));
                 }
@@ -345,11 +383,12 @@ impl Coordinator {
                     let pending = Arc::clone(&pending);
                     let draining = Arc::clone(&draining);
                     let qos = qos.clone();
+                    let sink = sink.clone();
                     handles.push(
                         std::thread::Builder::new()
                             .name(format!("sgd-worker-{worker_id}"))
                             .spawn(move || {
-                                worker_loop(engine, batch_rx, stats, pending, draining, qos)
+                                worker_loop(engine, batch_rx, stats, pending, draining, qos, sink)
                             })
                             .expect("spawn worker"),
                     );
@@ -365,6 +404,9 @@ impl Coordinator {
                 // cohort's drain.
                 let submit_rx = Arc::new(Mutex::new(submit_rx));
                 let backlog = Arc::new(Mutex::new(std::collections::VecDeque::new()));
+                let batcher_tm = sink
+                    .as_ref()
+                    .map(|s| BatcherMetrics::new(s.telemetry(), s.scope()));
                 for worker_id in 0..config.workers {
                     let engine = Arc::clone(&engine);
                     let submit_rx = Arc::clone(&submit_rx);
@@ -373,6 +415,8 @@ impl Coordinator {
                     let pending = Arc::clone(&pending);
                     let draining = Arc::clone(&draining);
                     let qos = qos.clone();
+                    let sink = sink.clone();
+                    let batcher_tm = batcher_tm.clone();
                     let budget = config.slot_budget;
                     handles.push(
                         std::thread::Builder::new()
@@ -380,7 +424,7 @@ impl Coordinator {
                             .spawn(move || {
                                 continuous_worker_loop(
                                     engine, submit_rx, backlog, budget, stats, pending, draining,
-                                    qos,
+                                    qos, sink, batcher_tm, worker_id,
                                 )
                             })
                             .expect("spawn continuous worker"),
@@ -401,7 +445,15 @@ impl Coordinator {
             draining,
             mode: config.mode,
             slot_budget: config.slot_budget,
+            sink,
         })
+    }
+
+    /// The telemetry hub this coordinator reports into, when observed.
+    /// The server front-end serves `{"op":"metrics"}` / `{"op":"trace"}`
+    /// from here.
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.sink.as_ref().map(|s| s.telemetry())
     }
 
     /// Enqueue a request; returns a [`Ticket`] for the result.
@@ -438,6 +490,16 @@ impl Coordinator {
         if self.draining.load(Ordering::SeqCst) {
             return Err(Error::Coordinator("coordinator is draining".into()));
         }
+        // Open the trace span before admission so a rejection is still a
+        // complete (terminated) span. A cluster front door already began
+        // one — meta.trace survives the hop, so the replica appends to
+        // the same span instead of forking a new one.
+        if let Some(sink) = &self.sink {
+            sink.on_submitted();
+            if meta.trace.is_none() {
+                meta.trace = sink.begin_trace();
+            }
+        }
         // Reserve the outstanding slot *before* admission so the depth
         // bound is exact under concurrent submitters: each one sees the
         // others' reservations, so max_queue_depth can never be
@@ -450,6 +512,9 @@ impl Coordinator {
                 AdmissionDecision::Reject(reason) => {
                     self.pending.fetch_sub(1, Ordering::Relaxed);
                     self.rejected.fetch_add(1, Ordering::Relaxed);
+                    if let Some(sink) = &self.sink {
+                        sink.on_rejected(meta.trace, reason.code(), &reason.message());
+                    }
                     return Err(Error::Rejected {
                         code: reason.code(),
                         reason: reason.message(),
@@ -459,7 +524,11 @@ impl Coordinator {
         }
         self.queue_depth_max
             .fetch_max(depth_before as u64 + 1, Ordering::Relaxed);
+        if let Some(sink) = &self.sink {
+            sink.on_admitted(meta.trace, meta.priority.name(), depth_before + 1);
+        }
         let (tx, rx) = mpsc::channel();
+        let trace = meta.trace;
         let job = Job { req, meta, enqueued: Instant::now(), respond: tx };
         let send_result = {
             let guard = self.submit_tx.lock().unwrap();
@@ -472,10 +541,15 @@ impl Coordinator {
         };
         if let Err(e) = send_result {
             self.pending.fetch_sub(1, Ordering::Relaxed);
+            if let Some(sink) = &self.sink {
+                // the span was admitted above — close it so conservation
+                // holds even on the shutdown race
+                sink.on_shed(trace, "queue_closed");
+            }
             return Err(e);
         }
         self.submitted.fetch_add(1, Ordering::Relaxed);
-        Ok(Ticket { rx })
+        Ok(Ticket { rx, trace })
     }
 
     /// Submit + wait.
@@ -580,10 +654,19 @@ impl Drop for Coordinator {
 
 /// Fail one queued-but-unadmitted job during shutdown drain with an
 /// explicit 503 — never execute it, never drop its ticket unresolved.
-fn shed_draining(job: Job, stats: &Arc<Mutex<StatsInner>>, pending: &Arc<AtomicU64>) {
+fn shed_draining(
+    job: Job,
+    stats: &Arc<Mutex<StatsInner>>,
+    pending: &Arc<AtomicU64>,
+    sink: &Option<Arc<CoordSink>>,
+) {
     let waited = job.enqueued.elapsed();
     stats.lock().unwrap().drain_shed += 1;
-    pending.fetch_sub(1, Ordering::Relaxed);
+    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+    if let Some(s) = sink {
+        s.on_shed(job.meta.trace, "drain");
+        s.on_queue_depth(prev.saturating_sub(1) as usize);
+    }
     let _ = job.respond.send((
         Err(Error::Rejected {
             code: 503,
@@ -602,6 +685,7 @@ fn batcher_loop(
     stats: Arc<Mutex<StatsInner>>,
     pending: Arc<AtomicU64>,
     draining: Arc<AtomicBool>,
+    sink: Option<Arc<CoordSink>>,
 ) {
     loop {
         // block for the first job
@@ -611,7 +695,7 @@ fn batcher_loop(
         };
         if draining.load(Ordering::SeqCst) {
             // shutdown: everything still queued is shed, not batched
-            shed_draining(first, &stats, &pending);
+            shed_draining(first, &stats, &pending, &sink);
             continue;
         }
         let class = BatchClass::of(&first.req);
@@ -668,6 +752,7 @@ fn worker_loop(
     pending: Arc<AtomicU64>,
     draining: Arc<AtomicBool>,
     qos: Option<Arc<dyn QosPolicy>>,
+    sink: Option<Arc<CoordSink>>,
 ) {
     loop {
         let batch = {
@@ -682,7 +767,7 @@ fn worker_loop(
         // UNet output nobody is waiting on
         if draining.load(Ordering::SeqCst) {
             for job in batch.jobs {
-                shed_draining(job, &stats, &pending);
+                shed_draining(job, &stats, &pending, &sink);
             }
             continue;
         }
@@ -701,7 +786,11 @@ fn worker_loop(
                 if let Some(q) = &qos {
                     q.observe_deadline_miss();
                 }
-                pending.fetch_sub(1, Ordering::Relaxed);
+                let prev = pending.fetch_sub(1, Ordering::Relaxed);
+                if let Some(sk) = &sink {
+                    sk.on_expired(job.meta.trace);
+                    sk.on_queue_depth(prev.saturating_sub(1) as usize);
+                }
                 let msg = format!(
                     "expired in queue after {:.0} ms (deadline {:.0} ms)",
                     waited.as_secs_f64() * 1e3,
@@ -737,7 +826,15 @@ fn worker_loop(
                     let latency = job.enqueued.elapsed();
                     s.latency.record(latency);
                     s.completed += 1;
-                    pending.fetch_sub(1, Ordering::Relaxed);
+                    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(sk) = &sink {
+                        sk.on_retired(
+                            job.meta.trace,
+                            &out.plan_summary,
+                            latency.as_secs_f64() * 1e3,
+                        );
+                        sk.on_queue_depth(prev.saturating_sub(1) as usize);
+                    }
                     let _ = job.respond.send((Ok(out), latency));
                 }
             }
@@ -747,7 +844,11 @@ fn worker_loop(
                 for job in live {
                     let latency = job.enqueued.elapsed();
                     s.failed += 1;
-                    pending.fetch_sub(1, Ordering::Relaxed);
+                    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(sk) = &sink {
+                        sk.on_shed(job.meta.trace, "engine_failure");
+                        sk.on_queue_depth(prev.saturating_sub(1) as usize);
+                    }
                     let _ = job
                         .respond
                         .send((Err(Error::Coordinator(msg.clone())), latency));
@@ -764,13 +865,18 @@ fn fail_expired(
     stats: &Arc<Mutex<StatsInner>>,
     pending: &Arc<AtomicU64>,
     qos: &Option<Arc<dyn QosPolicy>>,
+    sink: &Option<Arc<CoordSink>>,
 ) {
     let waited = job.enqueued.elapsed();
     stats.lock().unwrap().deadline_missed += 1;
     if let Some(q) = qos {
         q.observe_deadline_miss();
     }
-    pending.fetch_sub(1, Ordering::Relaxed);
+    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+    if let Some(s) = sink {
+        s.on_expired(job.meta.trace);
+        s.on_queue_depth(prev.saturating_sub(1) as usize);
+    }
     let msg = format!(
         "expired in queue after {:.0} ms (deadline {:.0} ms)",
         waited.as_secs_f64() * 1e3,
@@ -800,9 +906,19 @@ fn continuous_worker_loop(
     pending: Arc<AtomicU64>,
     draining: Arc<AtomicBool>,
     qos: Option<Arc<dyn QosPolicy>>,
+    sink: Option<Arc<CoordSink>>,
+    batcher_tm: Option<BatcherMetrics>,
+    worker_id: usize,
 ) {
-    let mut batcher = ContinuousBatcher::new(Arc::clone(&engine), slot_budget)
-        .expect("slot budget validated at coordinator start");
+    let fresh_batcher = |tm: &Option<BatcherMetrics>| {
+        let b = ContinuousBatcher::new(Arc::clone(&engine), slot_budget)
+            .expect("slot budget validated at coordinator start");
+        match tm {
+            Some(tm) => b.with_telemetry(tm.clone()),
+            None => b,
+        }
+    };
+    let mut batcher = fresh_batcher(&batcher_tm);
     // respond channels of the in-flight samples, keyed by cohort id
     let mut inflight: BTreeMap<u64, Job> = BTreeMap::new();
     loop {
@@ -831,7 +947,7 @@ fn continuous_worker_loop(
                             // drain. pop_front keeps this safe when
                             // several workers sweep concurrently.
                             while let Some(j) = backlog.lock().unwrap().pop_front() {
-                                shed_draining(j, &stats, &pending);
+                                shed_draining(j, &stats, &pending, &sink);
                             }
                             return;
                         }
@@ -842,17 +958,20 @@ fn continuous_worker_loop(
             // shutdown drain: queued-but-unadmitted jobs are shed with an
             // explicit 503 — the in-flight cohort still runs to completion
             if draining.load(Ordering::SeqCst) {
-                shed_draining(job, &stats, &pending);
+                shed_draining(job, &stats, &pending, &sink);
                 continue;
             }
             // deadline expiry before paying for any UNet work
             if expired(&job.meta, job.enqueued, Instant::now()) {
-                fail_expired(job, &stats, &pending, &qos);
+                fail_expired(job, &stats, &pending, &qos, &sink);
                 continue;
             }
             match batcher.try_admit(&job.req) {
                 Ok(Some(id)) => {
                     stats.lock().unwrap().joins += 1;
+                    if let Some(sk) = &sink {
+                        sk.on_cohort_join(job.meta.trace, worker_id);
+                    }
                     inflight.insert(id, job);
                 }
                 Ok(None) => {
@@ -865,7 +984,11 @@ fn continuous_worker_loop(
                 Err(e) => {
                     let waited = job.enqueued.elapsed();
                     stats.lock().unwrap().failed += 1;
-                    pending.fetch_sub(1, Ordering::Relaxed);
+                    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(sk) = &sink {
+                        sk.on_shed(job.meta.trace, "invalid");
+                        sk.on_queue_depth(prev.saturating_sub(1) as usize);
+                    }
                     let _ = job.respond.send((Err(e), waited));
                 }
             }
@@ -907,7 +1030,15 @@ fn continuous_worker_loop(
                         s.completed += 1;
                         s.latency.record(latency);
                     }
-                    pending.fetch_sub(1, Ordering::Relaxed);
+                    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(sk) = &sink {
+                        sk.on_retired(
+                            job.meta.trace,
+                            &out.plan_summary,
+                            latency.as_secs_f64() * 1e3,
+                        );
+                        sk.on_queue_depth(prev.saturating_sub(1) as usize);
+                    }
                     let _ = job.respond.send((Ok(out), latency));
                 }
             }
@@ -920,14 +1051,17 @@ fn continuous_worker_loop(
                 for (_, job) in std::mem::take(&mut inflight) {
                     let latency = job.enqueued.elapsed();
                     s.failed += 1;
-                    pending.fetch_sub(1, Ordering::Relaxed);
+                    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(sk) = &sink {
+                        sk.on_shed(job.meta.trace, "engine_failure");
+                        sk.on_queue_depth(prev.saturating_sub(1) as usize);
+                    }
                     let _ = job
                         .respond
                         .send((Err(Error::Coordinator(msg.clone())), latency));
                 }
                 drop(s);
-                batcher = ContinuousBatcher::new(Arc::clone(&engine), slot_budget)
-                    .expect("slot budget validated at coordinator start");
+                batcher = fresh_batcher(&batcher_tm);
             }
         }
     }

@@ -33,7 +33,7 @@
 //! a compatible batch in lock-step on top of the same three primitives
 //! (dynamic batching, DESIGN.md §5).
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::config::{DualStrategy, EngineConfig};
@@ -48,6 +48,7 @@ use crate::metrics::StepBreakdown;
 use crate::rng::Rng;
 use crate::runtime::ModelStack;
 use crate::scheduler::{NoiseSchedule, Scheduler, SchedulerKind};
+use crate::telemetry::{EngineMetrics, Telemetry};
 use crate::tokenizer::Tokenizer;
 
 /// One image-generation request.
@@ -375,13 +376,23 @@ pub struct Engine {
     stack: Arc<ModelStack>,
     config: EngineConfig,
     tokenizer: Tokenizer,
+    /// Optional metric handles (eval counts, per-phase loop time) —
+    /// write-once so an `Arc<Engine>` shared across coordinators and
+    /// replicas reports into one bundle. Absent = zero overhead.
+    telemetry: OnceLock<EngineMetrics>,
 }
 
 impl Engine {
     pub fn new(stack: Arc<ModelStack>, config: EngineConfig) -> Engine {
         let m = stack.model();
         let tokenizer = Tokenizer::new(m.vocab_size, m.seq_len);
-        Engine { stack, config, tokenizer }
+        Engine { stack, config, tokenizer, telemetry: OnceLock::new() }
+    }
+
+    /// Attach engine-layer telemetry (idempotent: the first attachment
+    /// wins, so replicas sharing one engine share one bundle).
+    pub fn attach_telemetry(&self, t: &Arc<Telemetry>) {
+        let _ = self.telemetry.set(EngineMetrics::new(t));
     }
 
     pub fn stack(&self) -> &Arc<ModelStack> {
@@ -467,6 +478,9 @@ impl Engine {
         let wants_reuse = plan.has_reuse();
         let mut breakdown = StepBreakdown::default();
         breakdown.overhead_ms += started.elapsed().as_secs_f64() * 1e3;
+        if let Some(tm) = self.telemetry.get() {
+            tm.on_begin();
+        }
         Ok(SampleState {
             req: req.clone(),
             plan,
@@ -739,6 +753,10 @@ impl Engine {
             slots_used,
             active.iter().map(|&s| modes[s].unet_evals()).sum::<usize>()
         );
+        if let Some(tm) = self.telemetry.get() {
+            // dual samples cost two UNet executions, every other mode one
+            tm.on_step(&bd, slots_used - (active.len() - dual.len()), active.len() - dual.len());
+        }
         Ok(StepReport { advanced: active.len(), finished, slots_used })
     }
 
@@ -762,6 +780,9 @@ impl Engine {
             state.plan.total_unet_evals(),
             "executed evals diverge from the guidance plan"
         );
+        if let Some(tm) = self.telemetry.get() {
+            tm.on_finish();
+        }
         let m = self.stack.model();
         let image = if state.req.decode {
             let t0 = Instant::now();

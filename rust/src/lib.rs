@@ -44,6 +44,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod telemetry;
 pub mod testutil;
 pub mod tokenizer;
 pub mod workload;
@@ -70,4 +71,5 @@ pub mod prelude {
     pub use crate::quality::{mse, psnr, ssim};
     pub use crate::runtime::ModelStack;
     pub use crate::scheduler::{Scheduler, SchedulerKind};
+    pub use crate::telemetry::{Clock, Telemetry, TraceEvent, TraceId};
 }

@@ -22,6 +22,7 @@
 //!           [--interval ...] [--cadence ...]
 //!           [--qos] [--max-queue 64] [--quality-floor 0.5]
 //!           [--deadline-ms 0] [--adaptive] [--adaptive-threshold ...]
+//!           [--metrics-addr 127.0.0.1:9090] [--no-telemetry]
 //! sgd-serve info     [--artifacts artifacts/tiny]
 //! ```
 //!
@@ -38,6 +39,13 @@
 //! `enabled = true` in `[qos]`) turns on deadline-aware admission control
 //! with the selective-guidance window as the load-shedding actuator
 //! (DESIGN.md §7).
+//!
+//! Telemetry (DESIGN.md §12) is on by default: every layer reports into
+//! a process-wide metrics registry + trace store, served via the
+//! `metrics`/`trace` wire ops. `--metrics-addr host:port` (or
+//! `[telemetry] metrics_addr`) additionally opens a plain-HTTP
+//! Prometheus scrape endpoint; `--no-telemetry` (or `[telemetry]
+//! enabled = false`) opts out entirely.
 //!
 //! `--replicas N` (or a `[cluster]` config section) runs a replica set
 //! instead of a single coordinator (DESIGN.md §11): each replica is its
@@ -63,7 +71,8 @@ use selective_guidance::guidance::{
 use selective_guidance::qos::DeadlineQos;
 use selective_guidance::runtime::ModelStack;
 use selective_guidance::scheduler::SchedulerKind;
-use selective_guidance::server::{GuidanceDefaults, Server};
+use selective_guidance::server::{GuidanceDefaults, MetricsScrape, Server};
+use selective_guidance::telemetry::CoordSink;
 
 fn main() {
     if let Err(e) = run() {
@@ -272,6 +281,25 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         cli.opt_or("deadline-ms", run_cfg.qos.default_deadline_ms)?;
     run_cfg.qos.validate()?;
 
+    // telemetry overrides: --no-telemetry opts out, --metrics-addr
+    // opens (or re-binds) the Prometheus scrape endpoint
+    if cli.flag("metrics-addr") {
+        return Err(Error::Config("--metrics-addr needs a value".into()));
+    }
+    if cli.flag("no-telemetry") {
+        run_cfg.telemetry.enabled = false;
+        run_cfg.telemetry.metrics_addr = None;
+        run_cfg.telemetry.trace_jsonl = None;
+    }
+    if let Some(addr) = cli.opt("metrics-addr") {
+        if !run_cfg.telemetry.enabled {
+            return Err(Error::Config("--metrics-addr requires telemetry enabled".into()));
+        }
+        run_cfg.telemetry.metrics_addr = Some(addr.to_string());
+    }
+    run_cfg.telemetry.validate()?;
+    let telemetry = run_cfg.telemetry.build();
+
     // ---- cluster surface: the [cluster] section plus --replicas /
     // --route / --replica-budgets overrides (flags win)
     for key in ["replicas", "route", "replica-budgets"] {
@@ -394,15 +422,13 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                     ),
                 }
             }
-            let set = if run_cfg.qos.enabled {
-                ReplicaSet::start_qos(
-                    engine,
-                    cfg,
-                    Arc::new(DeadlineQos::new(run_cfg.qos.clone())?),
-                )?
+            let qos = if run_cfg.qos.enabled {
+                Some(Arc::new(DeadlineQos::new(run_cfg.qos.clone())?)
+                    as Arc<dyn selective_guidance::qos::QosPolicy>)
             } else {
-                ReplicaSet::start(engine, cfg)?
+                None
             };
+            let set = ReplicaSet::start_full(engine, cfg, qos, telemetry.clone())?;
             Server::start_cluster(set, &run_cfg.server.bind, defaults)?
         }
         None => {
@@ -423,24 +449,40 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                     run_cfg.server.max_batch, run_cfg.server.batch_wait_ms
                 ),
             }
-            let coordinator = if run_cfg.qos.enabled {
-                Coordinator::start_qos(
-                    engine,
-                    coord_cfg,
-                    Arc::new(DeadlineQos::new(run_cfg.qos.clone())?),
-                )
+            let qos = if run_cfg.qos.enabled {
+                Some(Arc::new(DeadlineQos::new(run_cfg.qos.clone())?)
+                    as Arc<dyn selective_guidance::qos::QosPolicy>)
             } else {
-                Coordinator::start(engine, coord_cfg)
+                None
             };
+            let sink = telemetry.as_ref().map(|t| CoordSink::new(t, "single", true));
+            let coordinator = Coordinator::start_full(engine, coord_cfg, qos, sink);
             Server::start_with_defaults(coordinator, &run_cfg.server.bind, defaults)?
         }
     };
+    // the scrape listener lives exactly as long as the server below
+    let scrape = match (&telemetry, run_cfg.telemetry.metrics_addr.as_deref()) {
+        (Some(t), Some(addr)) => {
+            let s = MetricsScrape::start(Arc::clone(t), addr)?;
+            println!("metrics: Prometheus scrape endpoint on http://{}/metrics", s.addr());
+            Some(s)
+        }
+        _ => None,
+    };
     println!("sgd-serve listening on {}", server.addr());
     println!("protocol: JSON lines; try: {{\"op\":\"ping\"}}");
-    // serve until the listener thread exits (shutdown op or signal)
-    loop {
+    // serve until the shutdown op stops the listener (or the process is
+    // signalled)
+    while !server.stopped() {
         std::thread::sleep(std::time::Duration::from_millis(200));
     }
+    drop(scrape);
+    if let (Some(t), Some(path)) = (&telemetry, run_cfg.telemetry.trace_jsonl.as_deref()) {
+        std::fs::write(path, t.traces().export_jsonl())
+            .map_err(|e| Error::io(format!("writing {path}"), e))?;
+        println!("wrote trace spans to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_info(cli: &Cli) -> Result<()> {

@@ -3,25 +3,38 @@
 //! the per-step breakdown used by EXPERIMENTS.md §Perf.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// Simple scoped stopwatch.
-#[derive(Debug, Clone, Copy)]
+use crate::telemetry::Clock;
+
+/// Simple scoped stopwatch on the telemetry [`Clock`] abstraction:
+/// wall time by default, deterministic when handed a manual clock (the
+/// virtual-time benches assert on metrics built from these).
+#[derive(Debug, Clone)]
 pub struct Stopwatch {
-    start: Instant,
+    clock: Clock,
+    start_ns: u64,
 }
 
 impl Stopwatch {
+    /// Wall-clock stopwatch (the serving default).
     pub fn start() -> Self {
-        Stopwatch { start: Instant::now() }
+        Self::with_clock(Clock::wall())
+    }
+
+    /// Stopwatch on an explicit clock (manual clocks make `elapsed`
+    /// deterministic).
+    pub fn with_clock(clock: Clock) -> Self {
+        let start_ns = clock.now_ns();
+        Stopwatch { clock, start_ns }
     }
 
     pub fn elapsed(&self) -> Duration {
-        self.start.elapsed()
+        self.clock.since(self.start_ns)
     }
 
     pub fn elapsed_ms(&self) -> f64 {
-        self.elapsed().as_secs_f64() * 1e3
+        self.clock.since_ns(self.start_ns) as f64 / 1e6
     }
 }
 
@@ -107,7 +120,10 @@ impl LatencyHistogram {
         self.max_ns as f64 / 1e6
     }
 
-    /// Quantile in milliseconds (upper bucket bound — conservative).
+    /// Quantile in milliseconds (upper bucket bound — conservative),
+    /// clamped to the true recorded maximum: a bucket's upper bound can
+    /// exceed every sample that landed in it, and reporting `p99 > max`
+    /// is nonsense no dashboard should ever show.
     pub fn quantile_ms(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -117,10 +133,36 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return Self::bucket_upper_ns(i) / 1e6;
+                return (Self::bucket_upper_ns(i) / 1e6).min(self.max_ms());
             }
         }
         self.max_ms()
+    }
+
+    /// Total recorded time in milliseconds (Prometheus `_sum` series).
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ns as f64 / 1e6
+    }
+
+    /// Cumulative counts for a Prometheus `le` ladder (milliseconds):
+    /// `out[i]` = samples whose *bucket* lies entirely at or below
+    /// `bounds_ms[i]`. Projecting whole log-buckets keeps the result
+    /// cumulative-monotone; a bucket straddling a bound counts toward
+    /// the next one (conservative, like the quantiles). Bounds must be
+    /// ascending.
+    pub fn cumulative_le(&self, bounds_ms: &[f64]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(bounds_ms.len());
+        let mut seen = 0u64;
+        let mut idx = 0usize;
+        for &bound in bounds_ms {
+            let bound_ns = bound * 1e6;
+            while idx < self.buckets.len() && Self::bucket_upper_ns(idx) <= bound_ns {
+                seen += self.buckets[idx];
+                idx += 1;
+            }
+            out.push(seen);
+        }
+        out
     }
 
     pub fn merge(&mut self, other: &LatencyHistogram) {
@@ -146,10 +188,12 @@ impl LatencyHistogram {
     }
 }
 
-/// Throughput counter over a wall-clock window.
+/// Throughput counter over a clock window — wall time by default,
+/// deterministic under a manual [`Clock`] (virtual-time benches).
 #[derive(Debug)]
 pub struct Throughput {
-    start: Instant,
+    clock: Clock,
+    start_ns: u64,
     items: u64,
 }
 
@@ -161,7 +205,12 @@ impl Default for Throughput {
 
 impl Throughput {
     pub fn new() -> Self {
-        Throughput { start: Instant::now(), items: 0 }
+        Self::with_clock(Clock::wall())
+    }
+
+    pub fn with_clock(clock: Clock) -> Self {
+        let start_ns = clock.now_ns();
+        Throughput { clock, start_ns, items: 0 }
     }
 
     pub fn add(&mut self, n: u64) {
@@ -173,7 +222,7 @@ impl Throughput {
     }
 
     pub fn per_second(&self) -> f64 {
-        let secs = self.start.elapsed().as_secs_f64();
+        let secs = self.clock.since_ns(self.start_ns) as f64 / 1e9;
         if secs <= 0.0 {
             0.0
         } else {
@@ -402,6 +451,59 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile_ms(0.5), 0.0);
         assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn quantile_clamped_to_max_at_bucket_boundary() {
+        // 1.0 ms lands in a log bucket whose upper bound is 1.024 ms:
+        // the unclamped quantile would report p99 = 1.024 > max = 1.0.
+        let mut h = LatencyHistogram::new();
+        h.record_ms(1.0);
+        assert!((h.max_ms() - 1.0).abs() < 1e-9);
+        let p99 = h.quantile_ms(0.99);
+        assert!(p99 <= h.max_ms(), "p99 {p99} exceeds max {}", h.max_ms());
+        assert!((p99 - 1.0).abs() < 1e-9);
+        // still conservative for samples strictly inside a bucket
+        let mut h = LatencyHistogram::new();
+        for ms in [0.5, 5.0, 50.0] {
+            h.record_ms(ms);
+        }
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert!(h.quantile_ms(q) <= h.max_ms(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn cumulative_le_is_monotone_and_conservative() {
+        let mut h = LatencyHistogram::new();
+        for ms in [0.3, 0.7, 3.0, 40.0, 40.0, 20_000.0] {
+            h.record_ms(ms);
+        }
+        let bounds = [0.5, 1.0, 5.0, 50.0, 1000.0];
+        let cum = h.cumulative_le(&bounds);
+        assert_eq!(cum.len(), bounds.len());
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "{cum:?}");
+        // every count is a lower bound on the true <=bound count, and
+        // the final +Inf-style total is exact
+        assert!(cum[0] <= 1);
+        assert_eq!(cum[4], 5, "all but the 20s sample sit below 1s");
+        assert!(*cum.last().unwrap() <= h.count());
+    }
+
+    #[test]
+    fn stopwatch_and_throughput_on_manual_clock() {
+        let clock = Clock::manual();
+        let sw = Stopwatch::with_clock(clock.clone());
+        let mut thr = Throughput::with_clock(clock.clone());
+        clock.advance_ms(250.0);
+        thr.add(5);
+        assert_eq!(sw.elapsed_ms(), 250.0);
+        assert_eq!(sw.elapsed(), Duration::from_millis(250));
+        assert_eq!(thr.per_second(), 20.0);
+        clock.advance_ms(750.0);
+        thr.add(15);
+        assert_eq!(thr.items(), 20);
+        assert_eq!(thr.per_second(), 20.0);
     }
 
     #[test]

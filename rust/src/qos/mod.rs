@@ -47,6 +47,7 @@ pub use admission::{expired, AdmissionController, AdmissionDecision, RejectReaso
 pub use feedback::{LoadSnapshot, ServiceEstimator};
 pub use sim::{simulate, SimReport, SimSpec};
 
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 use crate::config::TomlDoc;
@@ -54,6 +55,7 @@ use crate::engine::GenerationRequest;
 use crate::error::{Error, Result};
 use crate::guidance::{GuidancePlan, GuidanceSchedule, GuidanceStrategy, WindowSpec};
 use crate::metrics::{QosCounters, QosSnapshot};
+use crate::telemetry::{QosTelemetry, Telemetry};
 
 /// Request priority class. Lower classes are shed first under load:
 /// each class may only occupy a fraction of the admission queue (see
@@ -120,6 +122,11 @@ pub struct QosMeta {
     /// Completion deadline, measured from submission.
     pub deadline: Option<Duration>,
     pub priority: Priority,
+    /// Trace span this request reports into, when telemetry is on. Set
+    /// by whichever layer first sees the request (the cluster front door
+    /// or the standalone coordinator) and carried through requeues so a
+    /// failover keeps appending to the *same* span (DESIGN.md §12).
+    pub trace: Option<u64>,
 }
 
 impl QosMeta {
@@ -127,7 +134,11 @@ impl QosMeta {
     /// (non-finite collapses to 0 — immediate expiry, never a panic).
     pub fn with_deadline_ms(ms: f64) -> QosMeta {
         let ms = if ms.is_finite() { ms.clamp(0.0, MAX_DEADLINE_MS) } else { 0.0 };
-        QosMeta { deadline: Some(Duration::from_secs_f64(ms / 1e3)), priority: Priority::Standard }
+        QosMeta {
+            deadline: Some(Duration::from_secs_f64(ms / 1e3)),
+            priority: Priority::Standard,
+            trace: None,
+        }
     }
 
     pub fn deadline_ms(&self) -> Option<f64> {
@@ -326,6 +337,11 @@ pub trait QosPolicy: Send + Sync {
 
     /// Counters for the stats endpoints.
     fn qos_snapshot(&self) -> QosSnapshot;
+
+    /// Wire the policy into a telemetry registry (queue-depth gauge,
+    /// per-class admit/reject counters, actuator-position gauge).
+    /// Default: ignored, for policies that predate the telemetry layer.
+    fn attach_telemetry(&self, _telemetry: &Arc<Telemetry>) {}
 }
 
 /// The default policy: deadline-aware admission + load-driven window
@@ -336,6 +352,7 @@ pub struct DeadlineQos {
     actuator: WindowActuator,
     estimator: ServiceEstimator,
     counters: QosCounters,
+    telemetry: OnceLock<QosTelemetry>,
 }
 
 impl DeadlineQos {
@@ -346,6 +363,7 @@ impl DeadlineQos {
             actuator: WindowActuator::new(cfg.clone()),
             estimator: ServiceEstimator::new(cfg.ewma_alpha),
             counters: QosCounters::new(),
+            telemetry: OnceLock::new(),
             cfg,
         })
     }
@@ -409,6 +427,9 @@ impl QosPolicy for DeadlineQos {
         match self.admission.decide(meta, &load, achievable) {
             AdmissionDecision::Reject(reason) => {
                 self.counters.inc_rejected();
+                if let Some(tm) = self.telemetry.get() {
+                    tm.on_rejected(meta.priority.name(), reason.code());
+                }
                 AdmissionDecision::Reject(reason)
             }
             AdmissionDecision::Admit => {
@@ -417,9 +438,14 @@ impl QosPolicy for DeadlineQos {
                 // actuator owns the whole rewrite — schedule edit,
                 // effective-shed floor, widenability — see
                 // WindowActuator::rewrite.
+                let shed_before = req.effective_shed();
                 let (applied, widened) = self.actuator.rewrite(req, &load, meta);
                 self.counters.inc_admitted();
                 self.counters.observe_fraction(applied, widened);
+                if let Some(tm) = self.telemetry.get() {
+                    tm.on_admitted(meta.priority.name(), queue_depth);
+                    tm.on_actuator(meta.trace, shed_before, applied);
+                }
                 AdmissionDecision::Admit
             }
         }
@@ -436,6 +462,9 @@ impl QosPolicy for DeadlineQos {
 
     fn observe_deadline_miss(&self) {
         self.counters.inc_deadline_missed();
+        if let Some(tm) = self.telemetry.get() {
+            tm.on_deadline_miss();
+        }
     }
 
     fn observe_slots(&self, slots_used: usize, slot_budget: usize) {
@@ -444,6 +473,10 @@ impl QosPolicy for DeadlineQos {
 
     fn qos_snapshot(&self) -> QosSnapshot {
         self.counters.snapshot()
+    }
+
+    fn attach_telemetry(&self, telemetry: &Arc<Telemetry>) {
+        let _ = self.telemetry.set(QosTelemetry::new(telemetry));
     }
 }
 

@@ -15,10 +15,22 @@
 //!   the **aggregate** (cluster-owned latency percentiles, merged
 //!   counters, `requeued`/`ejected`) plus a `replicas` array with the
 //!   per-replica breakdown;
+//! * `{"op":"metrics"}` → the Prometheus text exposition (DESIGN.md
+//!   §12) wrapped in JSON: `{"ok":true,"content_type":"text/plain;
+//!   version=0.0.4","body":...}`. Errors when the backend runs with
+//!   telemetry disabled;
+//! * `{"op":"trace"}` → recent trace ids (`recent`, `evicted`);
+//!   `{"op":"trace","trace":N}` → that request's span as structured
+//!   JSON (`span.events[]` with `event`/`at_ms` + event fields). The
+//!   span key is `trace`, never `id` — [`Client`] reserves `id` for
+//!   request/response correlation;
 //! * `{"op":"shutdown"}` → acks and stops the listener.
 //!
 //! No HTTP stack exists in the offline registry snapshot; JSON-over-TCP
-//! keeps the wire format inspectable (`nc localhost 7878`).
+//! keeps the wire format inspectable (`nc localhost 7878`). The one
+//! exception is [`MetricsScrape`] (`serve --metrics-addr`): Prometheus
+//! speaks plain HTTP, so that listener hand-rolls the two lines of
+//! HTTP/1.1 a scraper needs.
 
 mod base64;
 mod protocol;
@@ -38,6 +50,7 @@ use crate::error::{Error, Result};
 use crate::guidance::{AdaptiveConfig, GuidanceSchedule, GuidanceStrategy};
 use crate::json::{self, Value};
 use crate::qos::QosMeta;
+use crate::telemetry::{Telemetry, PROMETHEUS_CONTENT_TYPE};
 
 /// What the server fronts: a single coordinator or a replica cluster.
 /// Every wire operation behaves identically against both — only the
@@ -52,6 +65,14 @@ impl Backend {
         match self {
             Backend::Single(c) => c.submit_qos(req, meta),
             Backend::Cluster(s) => s.submit_qos(req, meta),
+        }
+    }
+
+    /// The telemetry hub the backend was started with, if any.
+    fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        match self {
+            Backend::Single(c) => c.telemetry(),
+            Backend::Cluster(s) => s.telemetry(),
         }
     }
 
@@ -235,6 +256,12 @@ impl Server {
         self.addr
     }
 
+    /// Whether a `shutdown` op (or [`Server::stop`]) has stopped the
+    /// listener — what the `serve` command polls to exit cleanly.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
     /// Request the listener to stop (it wakes on the next connection).
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
@@ -250,6 +277,95 @@ impl Drop for Server {
     fn drop(&mut self) {
         self.stop();
     }
+}
+
+/// Plain-HTTP Prometheus scrape endpoint (`serve --metrics-addr`, or
+/// `[telemetry] metrics_addr` in config).
+///
+/// Prometheus only speaks HTTP, and no HTTP stack exists in the offline
+/// registry snapshot — but a scraper needs exactly one thing: `GET`
+/// anything, get the exposition back. So this listener hand-rolls that
+/// sliver of HTTP/1.1: read the request head, answer `200 OK` with
+/// `Content-Type: text/plain; version=0.0.4` and the current registry
+/// render, close. One connection per scrape, no keep-alive.
+pub struct MetricsScrape {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsScrape {
+    /// Bind `bind` and serve scrapes of `telemetry` until dropped.
+    pub fn start(telemetry: Arc<Telemetry>, bind: &str) -> Result<MetricsScrape> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| Error::io(format!("binding metrics endpoint {bind}"), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::io("local_addr", e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let _ = serve_scrape(s, &telemetry);
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(MetricsScrape { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop the scrape listener (it wakes on the next connection).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsScrape {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_scrape(stream: TcpStream, telemetry: &Arc<Telemetry>) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let head = line.trim().to_string();
+    // drain the request headers; any path scrapes the one registry
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 || line.trim().is_empty() {
+            break;
+        }
+    }
+    let (status, body) = if head.starts_with("GET ") || head.starts_with("HEAD ") {
+        ("200 OK", telemetry.render_prometheus())
+    } else {
+        ("405 Method Not Allowed", String::new())
+    };
+    let payload = if head.starts_with("HEAD ") { "" } else { body.as_str() };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {PROMETHEUS_CONTENT_TYPE}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        body.len()
+    );
+    writer.write_all(response.as_bytes())?;
+    writer.flush()
 }
 
 fn handle_connection(
@@ -299,6 +415,32 @@ fn dispatch(
             stop.store(true, Ordering::SeqCst);
             ok_base(id).with("stopping", true)
         }
+        Some("metrics") => match backend.telemetry() {
+            Some(t) => ok_base(id)
+                .with("content_type", PROMETHEUS_CONTENT_TYPE)
+                .with("body", t.render_prometheus().as_str()),
+            None => err_response(id, "telemetry disabled"),
+        },
+        Some("trace") => match backend.telemetry() {
+            Some(t) => {
+                // `trace` names the span — never `id`, which the
+                // [`Client`] injects on every call for correlation
+                match parsed.get("trace").and_then(Value::as_i64) {
+                    Some(tid) => match t.traces().span(tid as u64) {
+                        Some(span) => ok_base(id).with("span", span.to_json()),
+                        None => err_response(id, &format!("unknown trace id {tid}")),
+                    },
+                    None => {
+                        let recent: Vec<Value> =
+                            t.traces().recent(64).iter().map(|&i| Value::int(i as i64)).collect();
+                        ok_base(id)
+                            .with("recent", Value::Arr(recent))
+                            .with("evicted", t.traces().evicted() as i64)
+                    }
+                }
+            }
+            None => err_response(id, "telemetry disabled"),
+        },
         Some("generate") => match parse_request(&parsed) {
             // submit through the QoS path: a shed request comes back as
             // a structured 429/503 response, a queue-expired one as 504

@@ -1,0 +1,126 @@
+//! Clock abstraction behind every telemetry timestamp.
+//!
+//! Telemetry must be *clock-abstracted* (DESIGN.md §12): the virtual-time
+//! benches and the QoS simulator need deterministic timestamps, while the
+//! serving path wants plain wall time. A [`Clock`] is either:
+//!
+//! * **wall** — monotonic time since the clock was created
+//!   ([`std::time::Instant`] under the hood), or
+//! * **manual** — a shared atomic nanosecond counter advanced explicitly
+//!   by the driver (one cohort iteration == one tick in the benches).
+//!
+//! Clones share the same time source, so a manual clock handed to the
+//! telemetry layer and to the test driver stays in lock-step.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotonic nanosecond clock: wall time or a manually advanced
+/// virtual counter. Cheap to clone; clones share the time source.
+#[derive(Clone, Debug)]
+pub struct Clock {
+    inner: Inner,
+}
+
+#[derive(Clone, Debug)]
+enum Inner {
+    Wall(Instant),
+    Manual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// Wall time, anchored at creation (reads are monotonic deltas).
+    pub fn wall() -> Clock {
+        Clock { inner: Inner::Wall(Instant::now()) }
+    }
+
+    /// A virtual clock starting at 0 ns, advanced only by
+    /// [`Clock::advance_ns`] — the deterministic benches' time source.
+    pub fn manual() -> Clock {
+        Clock { inner: Inner::Manual(Arc::new(AtomicU64::new(0))) }
+    }
+
+    pub fn is_manual(&self) -> bool {
+        matches!(self.inner, Inner::Manual(_))
+    }
+
+    /// Nanoseconds since the clock's origin.
+    pub fn now_ns(&self) -> u64 {
+        match &self.inner {
+            Inner::Wall(t0) => t0.elapsed().as_nanos() as u64,
+            Inner::Manual(ns) => ns.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now_ns() as f64 / 1e6
+    }
+
+    /// Elapsed nanoseconds since an earlier [`Clock::now_ns`] reading.
+    pub fn since_ns(&self, start_ns: u64) -> u64 {
+        self.now_ns().saturating_sub(start_ns)
+    }
+
+    /// Advance a manual clock; a no-op on a wall clock (wall time cannot
+    /// be steered, and benches that accidentally mix the two should not
+    /// crash the serving path).
+    pub fn advance_ns(&self, ns: u64) {
+        if let Inner::Manual(t) = &self.inner {
+            t.fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+
+    pub fn advance_ms(&self, ms: f64) {
+        self.advance_ns((ms * 1e6) as u64);
+    }
+
+    /// Elapsed time since `start_ns` as a [`Duration`].
+    pub fn since(&self, start_ns: u64) -> Duration {
+        Duration::from_nanos(self.since_ns(start_ns))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::wall()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_is_deterministic() {
+        let c = Clock::manual();
+        assert!(c.is_manual());
+        assert_eq!(c.now_ns(), 0);
+        c.advance_ns(1_500);
+        assert_eq!(c.now_ns(), 1_500);
+        c.advance_ms(2.0);
+        assert_eq!(c.now_ns(), 2_001_500);
+        assert!((c.now_ms() - 2.0015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clones_share_the_time_source() {
+        let a = Clock::manual();
+        let b = a.clone();
+        a.advance_ns(42);
+        assert_eq!(b.now_ns(), 42);
+        assert_eq!(b.since_ns(40), 2);
+    }
+
+    #[test]
+    fn wall_clock_marches_forward() {
+        let c = Clock::wall();
+        assert!(!c.is_manual());
+        let t0 = c.now_ns();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.now_ns() > t0);
+        // advancing a wall clock is an explicit no-op
+        c.advance_ns(u64::MAX / 2);
+        assert!(c.now_ms() < 60_000.0);
+    }
+}

@@ -1,0 +1,780 @@
+//! Telemetry: Prometheus metrics + per-request trace spans (DESIGN.md §12).
+//!
+//! One [`Telemetry`] instance per serving process ties together:
+//!
+//! * a metrics [`Registry`] (counters / gauges / histograms with labels)
+//!   rendered in Prometheus text exposition format — served via the
+//!   `{"op":"metrics"}` wire operation and the `serve --metrics-addr`
+//!   plain-HTTP scrape endpoint;
+//! * a bounded [`TraceStore`] of per-request spans — every request gets
+//!   a trace ID at admission and accumulates timestamped events
+//!   (`admitted`, `routed{replica}`, `cohort_join`, `plan_exec`,
+//!   `requeued{from,to}`, terminal `retired`/`shed`/`expired`, …),
+//!   queryable via `{"op":"trace","trace":N}` or exported as JSONL;
+//! * the [`Clock`] every timestamp comes from — wall time in serving,
+//!   manual (virtual) time in the deterministic benches.
+//!
+//! Layers do not talk to the registry on hot paths: each layer builds a
+//! handle bundle once at startup ([`CoordSink`], [`BatcherMetrics`],
+//! [`EngineMetrics`], [`QosTelemetry`], [`ClusterMetrics`]) whose
+//! methods are a few relaxed atomic ops when enabled and an immediate
+//! return when not. A layer without a bundle attached pays nothing —
+//! telemetry is strictly opt-in per coordinator/replica-set.
+//!
+//! **Terminal-event ownership.** In cluster mode a request's span
+//! crosses replicas: the replica coordinator that executes a leg must
+//! *not* close the span (the cluster relay may requeue the leg onto a
+//! survivor after a kill). [`CoordSink`] therefore carries
+//! `owns_terminal`: true for a standalone coordinator, false for
+//! replica coordinators — there the cluster relay emits the single
+//! terminal event. This is what makes the conservation invariant
+//! (exactly one terminal event per admitted span) hold under failover.
+
+pub mod clock;
+pub mod registry;
+pub mod trace;
+
+pub use clock::Clock;
+pub use registry::{Counter, Gauge, Histogram, MetricKind, Registry, LE_BOUNDS_MS};
+pub use trace::{Span, SpanEvent, TraceEvent, TraceId, TraceStore};
+
+use std::sync::Arc;
+
+use crate::metrics::StepBreakdown;
+
+/// Default trace ring capacity (spans kept for `{"op":"trace"}`).
+pub const DEFAULT_TRACE_CAPACITY: usize = 1024;
+
+/// Content-Type of the Prometheus text exposition format.
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// The process-wide telemetry hub: registry + trace store + clock.
+pub struct Telemetry {
+    enabled: bool,
+    clock: Clock,
+    registry: Registry,
+    traces: TraceStore,
+}
+
+impl Telemetry {
+    /// Enabled telemetry on the given clock.
+    pub fn with_clock(trace_capacity: usize, clock: Clock) -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            enabled: true,
+            clock,
+            registry: Registry::new(),
+            traces: TraceStore::new(trace_capacity),
+        })
+    }
+
+    /// Enabled telemetry, wall clock, default trace capacity.
+    pub fn on() -> Arc<Telemetry> {
+        Self::with_clock(DEFAULT_TRACE_CAPACITY, Clock::wall())
+    }
+
+    /// A disabled instance: every sink built from it is a no-op. (Layers
+    /// without any telemetry attached pay even less — nothing at all.)
+    pub fn off() -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            enabled: false,
+            clock: Clock::wall(),
+            registry: Registry::new(),
+            traces: TraceStore::new(1),
+        })
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn traces(&self) -> &TraceStore {
+        &self.traces
+    }
+
+    /// Open a span (None when disabled).
+    pub fn begin_trace(&self) -> Option<TraceId> {
+        if !self.enabled {
+            return None;
+        }
+        Some(self.traces.begin())
+    }
+
+    /// Append an event to a span, stamped with the telemetry clock.
+    pub fn event(&self, trace: Option<TraceId>, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(id) = trace {
+            self.traces.record(id, self.clock.now_ns(), ev);
+        }
+    }
+
+    /// Render every registered metric in Prometheus text format.
+    pub fn render_prometheus(&self) -> String {
+        self.registry.render()
+    }
+}
+
+/// Map a rejection code onto a bounded reason label (label cardinality
+/// must stay fixed no matter what reason strings errors carry).
+pub fn reject_reason_label(code: u16) -> &'static str {
+    match code {
+        429 => "overload",
+        503 => "drain",
+        _ => "other",
+    }
+}
+
+/// Parse a compiled plan's run-length summary (`"40D 10C"`, the
+/// [`crate::guidance::GuidancePlan::summary`] format) into one
+/// `plan_exec{mode,steps,evals}` event per segment. Dual segments cost
+/// 2 UNet evals per step; every other mode costs 1.
+pub fn plan_exec_events(summary: &str) -> Vec<TraceEvent> {
+    let mut out = Vec::new();
+    for token in summary.split_whitespace() {
+        let Some(mode) = token.chars().last() else { continue };
+        let Ok(steps) = token[..token.len() - mode.len_utf8()].parse::<usize>() else {
+            continue;
+        };
+        let per_step = if mode == 'D' { 2 } else { 1 };
+        out.push(TraceEvent::PlanExec { mode, steps, evals: steps * per_step });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer handle bundles
+// ---------------------------------------------------------------------------
+
+/// Engine-layer metrics: eval counts and per-phase time totals from
+/// `begin` / `step_batch` / `finish` (attached via
+/// [`crate::engine::Engine::attach_telemetry`]).
+pub struct EngineMetrics {
+    enabled: bool,
+    begun: Counter,
+    finished: Counter,
+    iterations: Counter,
+    evals_dual: Counter,
+    evals_single: Counter,
+    cond_ns: Counter,
+    uncond_ns: Counter,
+    combine_ns: Counter,
+    scheduler_ns: Counter,
+}
+
+impl EngineMetrics {
+    pub fn new(t: &Arc<Telemetry>) -> EngineMetrics {
+        let r = t.registry();
+        EngineMetrics {
+            enabled: t.is_enabled(),
+            begun: r.counter("sg_engine_samples_begun_total", "Samples begun", &[]),
+            finished: r.counter("sg_engine_samples_finished_total", "Samples finished", &[]),
+            iterations: r.counter(
+                "sg_engine_iterations_total",
+                "step_batch iterations that advanced at least one sample",
+                &[],
+            ),
+            evals_dual: r.counter(
+                "sg_engine_unet_evals_total",
+                "UNet executions by guidance mode",
+                &[("mode", "dual")],
+            ),
+            evals_single: r.counter(
+                "sg_engine_unet_evals_total",
+                "UNet executions by guidance mode",
+                &[("mode", "single")],
+            ),
+            cond_ns: r.counter(
+                "sg_engine_phase_ns_total",
+                "Cumulative loop time by phase (nanoseconds)",
+                &[("phase", "unet_cond")],
+            ),
+            uncond_ns: r.counter(
+                "sg_engine_phase_ns_total",
+                "Cumulative loop time by phase (nanoseconds)",
+                &[("phase", "unet_uncond")],
+            ),
+            combine_ns: r.counter(
+                "sg_engine_phase_ns_total",
+                "Cumulative loop time by phase (nanoseconds)",
+                &[("phase", "combine")],
+            ),
+            scheduler_ns: r.counter(
+                "sg_engine_phase_ns_total",
+                "Cumulative loop time by phase (nanoseconds)",
+                &[("phase", "scheduler")],
+            ),
+        }
+    }
+
+    pub fn on_begin(&self) {
+        if self.enabled {
+            self.begun.inc();
+        }
+    }
+
+    pub fn on_finish(&self) {
+        if self.enabled {
+            self.finished.inc();
+        }
+    }
+
+    /// One `step_batch` iteration: `dual_evals` second-pass executions,
+    /// `single_evals` single-pass executions, plus the iteration's phase
+    /// time breakdown.
+    pub fn on_step(&self, bd: &StepBreakdown, dual_evals: usize, single_evals: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.iterations.inc();
+        self.evals_dual.add(dual_evals as u64);
+        self.evals_single.add(single_evals as u64);
+        self.cond_ns.add((bd.unet_cond_ms * 1e6) as u64);
+        self.uncond_ns.add((bd.unet_uncond_ms * 1e6) as u64);
+        self.combine_ns.add((bd.combine_ms * 1e6) as u64);
+        self.scheduler_ns.add((bd.scheduler_ms * 1e6) as u64);
+    }
+}
+
+/// Continuous-batcher metrics: slot occupancy gauge + join/retire
+/// counters (one bundle per batcher, labeled by scope).
+#[derive(Clone)]
+pub struct BatcherMetrics {
+    enabled: bool,
+    committed: Gauge,
+    in_flight: Gauge,
+    joins: Counter,
+    retires: Counter,
+    iterations: Counter,
+    slots_used: Counter,
+}
+
+impl BatcherMetrics {
+    pub fn new(t: &Arc<Telemetry>, scope: &str) -> BatcherMetrics {
+        let r = t.registry();
+        let l = [("scope", scope)];
+        BatcherMetrics {
+            enabled: t.is_enabled(),
+            committed: r.gauge(
+                "sg_batcher_slots_committed",
+                "Peak-cost slots committed by the in-flight cohort",
+                &l,
+            ),
+            in_flight: r.gauge("sg_batcher_in_flight", "Samples in the cohort", &l),
+            joins: r.counter("sg_batcher_joins_total", "Samples admitted into cohorts", &l),
+            retires: r.counter("sg_batcher_retires_total", "Samples retired from cohorts", &l),
+            iterations: r.counter("sg_batcher_iterations_total", "Cohort iterations", &l),
+            slots_used: r.counter(
+                "sg_batcher_slots_used_total",
+                "UNet slots executed across all iterations",
+                &l,
+            ),
+        }
+    }
+
+    pub fn on_join(&self, committed_slots: usize, in_flight: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.joins.inc();
+        self.committed.set_usize(committed_slots);
+        self.in_flight.set_usize(in_flight);
+    }
+
+    pub fn on_step(&self, slots_used: usize, retired: usize, committed: usize, in_flight: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.iterations.inc();
+        self.slots_used.add(slots_used as u64);
+        self.retires.add(retired as u64);
+        self.committed.set_usize(committed);
+        self.in_flight.set_usize(in_flight);
+    }
+}
+
+/// Coordinator-layer sink: request lifecycle counters, queue depth,
+/// latency histogram, and the trace events the coordinator owns.
+///
+/// `owns_terminal` decides whether this sink may close spans: true for
+/// a standalone coordinator, false for cluster replica coordinators
+/// (the relay owns terminals there — see the module docs).
+pub struct CoordSink {
+    t: Arc<Telemetry>,
+    enabled: bool,
+    owns_terminal: bool,
+    submitted: Counter,
+    admitted: Counter,
+    rejected: Counter,
+    retired: Counter,
+    expired: Counter,
+    queue_depth: Gauge,
+    latency_ms: Histogram,
+    scope: String,
+}
+
+impl CoordSink {
+    pub fn new(t: &Arc<Telemetry>, scope: &str, owns_terminal: bool) -> CoordSink {
+        let r = t.registry();
+        let l = [("scope", scope)];
+        CoordSink {
+            enabled: t.is_enabled(),
+            owns_terminal,
+            submitted: r.counter("sg_coord_submitted_total", "Requests submitted", &l),
+            admitted: r.counter("sg_coord_admitted_total", "Requests admitted", &l),
+            rejected: r.counter("sg_coord_rejected_total", "Requests rejected at admission", &l),
+            retired: r.counter("sg_coord_retired_total", "Requests completed", &l),
+            expired: r.counter("sg_coord_expired_total", "Requests expired past deadline", &l),
+            queue_depth: r.gauge("sg_coord_queue_depth", "Jobs queued or in flight", &l),
+            latency_ms: r.histogram(
+                "sg_request_latency_ms",
+                "End-to-end request latency (milliseconds)",
+                &l,
+            ),
+            scope: scope.to_string(),
+            t: Arc::clone(t),
+        }
+    }
+
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.t
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn owns_terminal(&self) -> bool {
+        self.owns_terminal
+    }
+
+    /// The `scope` label this sink stamps on its metric families.
+    pub fn scope(&self) -> &str {
+        &self.scope
+    }
+
+    pub fn begin_trace(&self) -> Option<TraceId> {
+        if !self.enabled {
+            return None;
+        }
+        self.t.begin_trace()
+    }
+
+    pub fn on_submitted(&self) {
+        if self.enabled {
+            self.submitted.inc();
+        }
+    }
+
+    pub fn on_queue_depth(&self, depth: usize) {
+        if self.enabled {
+            self.queue_depth.set_usize(depth);
+        }
+    }
+
+    /// Admission into this coordinator's queue. The span-level
+    /// `admitted` event belongs to whichever layer decided admission:
+    /// a replica sink (owns_terminal = false) sits behind a cluster
+    /// front door that already recorded it, so it only appends the
+    /// per-leg `queued` event.
+    pub fn on_admitted(&self, trace: Option<TraceId>, class: &'static str, depth: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.admitted.inc();
+        self.queue_depth.set_usize(depth);
+        if self.owns_terminal {
+            self.t.event(trace, TraceEvent::Admitted { class });
+        }
+        self.t.event(trace, TraceEvent::Queued { depth });
+    }
+
+    /// Admission rejection. The trace event is terminal, so replica
+    /// sinks (owns_terminal = false) only count it — the cluster layer
+    /// records the span-closing event.
+    pub fn on_rejected(&self, trace: Option<TraceId>, code: u16, reason: &str) {
+        if !self.enabled {
+            return;
+        }
+        self.rejected.inc();
+        let shed = self.t.registry().counter(
+            "sg_coord_shed_total",
+            "Requests shed, by reason",
+            &[("scope", &self.scope), ("reason", reject_reason_label(code))],
+        );
+        shed.inc();
+        if self.owns_terminal {
+            self.t
+                .event(trace, TraceEvent::Rejected { code, reason: reason.to_string() });
+        }
+    }
+
+    pub fn on_cohort_join(&self, trace: Option<TraceId>, cohort: usize) {
+        if self.enabled {
+            self.t.event(trace, TraceEvent::CohortJoin { cohort });
+        }
+    }
+
+    /// Successful completion: per-segment `plan_exec` events (execution
+    /// happened on this coordinator either way), latency observation,
+    /// and — when this sink owns terminals — the closing `retired`.
+    pub fn on_retired(&self, trace: Option<TraceId>, plan_summary: &str, latency_ms: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.retired.inc();
+        self.latency_ms.observe_ms(latency_ms);
+        if trace.is_some() {
+            for ev in plan_exec_events(plan_summary) {
+                self.t.event(trace, ev);
+            }
+        }
+        if self.owns_terminal {
+            self.t.event(trace, TraceEvent::Retired);
+        }
+    }
+
+    pub fn on_expired(&self, trace: Option<TraceId>) {
+        if !self.enabled {
+            return;
+        }
+        self.expired.inc();
+        if self.owns_terminal {
+            self.t.event(trace, TraceEvent::Expired);
+        }
+    }
+
+    pub fn on_shed(&self, trace: Option<TraceId>, reason: &str) {
+        if !self.enabled {
+            return;
+        }
+        let shed = self.t.registry().counter(
+            "sg_coord_shed_total",
+            "Requests shed, by reason",
+            &[("scope", &self.scope), ("reason", reason)],
+        );
+        shed.inc();
+        if self.owns_terminal {
+            self.t.event(trace, TraceEvent::Shed { reason: reason.to_string() });
+        }
+    }
+}
+
+/// QoS-layer telemetry: admission counters by class, shed reasons,
+/// queue depth + actuator position gauges, and the `actuator_rewrite`
+/// trace event.
+pub struct QosTelemetry {
+    t: Arc<Telemetry>,
+    enabled: bool,
+    queue_depth: Gauge,
+    actuator: Gauge,
+    deadline_missed: Counter,
+}
+
+impl QosTelemetry {
+    pub fn new(t: &Arc<Telemetry>) -> QosTelemetry {
+        let r = t.registry();
+        QosTelemetry {
+            enabled: t.is_enabled(),
+            queue_depth: r.gauge("sg_qos_queue_depth", "Queue depth seen at admission", &[]),
+            actuator: r.gauge(
+                "sg_qos_actuator_fraction",
+                "Last shed fraction applied by the actuator",
+                &[],
+            ),
+            deadline_missed: r.counter(
+                "sg_qos_deadline_missed_total",
+                "Requests that missed their deadline after admission",
+                &[],
+            ),
+            t: Arc::clone(t),
+        }
+    }
+
+    pub fn on_admitted(&self, class: &'static str, depth: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.queue_depth.set_usize(depth);
+        self.t
+            .registry()
+            .counter("sg_qos_admitted_total", "Admissions by class", &[("class", class)])
+            .inc();
+    }
+
+    pub fn on_rejected(&self, class: &'static str, code: u16) {
+        if !self.enabled {
+            return;
+        }
+        self.t
+            .registry()
+            .counter(
+                "sg_qos_rejected_total",
+                "Rejections by class and reason",
+                &[("class", class), ("reason", reject_reason_label(code))],
+            )
+            .inc();
+    }
+
+    /// Actuator applied `to` (possibly == the request's own `from`):
+    /// records the gauge always, the trace event only on a real rewrite.
+    pub fn on_actuator(&self, trace: Option<TraceId>, from: f64, to: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.actuator.set(to);
+        if (from - to).abs() > 1e-12 {
+            self.t.event(trace, TraceEvent::ActuatorRewrite { from, to });
+        }
+    }
+
+    pub fn on_deadline_miss(&self) {
+        if self.enabled {
+            self.deadline_missed.inc();
+        }
+    }
+}
+
+/// Cluster-layer telemetry: per-replica routing/health/outstanding-eval
+/// series, requeue/ejection counters, cluster-level latency, and the
+/// relay-owned terminal trace events.
+pub struct ClusterMetrics {
+    t: Arc<Telemetry>,
+    enabled: bool,
+    routed: Vec<Counter>,
+    outstanding: Vec<Gauge>,
+    healthy: Vec<Gauge>,
+    requeued: Counter,
+    ejected: Counter,
+    latency_ms: Histogram,
+}
+
+impl ClusterMetrics {
+    pub fn new(t: &Arc<Telemetry>, replicas: usize) -> ClusterMetrics {
+        let r = t.registry();
+        let mut routed = Vec::with_capacity(replicas);
+        let mut outstanding = Vec::with_capacity(replicas);
+        let mut healthy = Vec::with_capacity(replicas);
+        for i in 0..replicas {
+            let id = i.to_string();
+            let l = [("replica", id.as_str())];
+            routed.push(r.counter("sg_cluster_routed_total", "Requests routed, by replica", &l));
+            outstanding.push(r.gauge(
+                "sg_cluster_outstanding_evals",
+                "Plan-cost UNet evals outstanding, by replica",
+                &l,
+            ));
+            let h = r.gauge("sg_cluster_healthy", "Replica health (1 healthy, 0 ejected)", &l);
+            h.set(1.0);
+            healthy.push(h);
+        }
+        ClusterMetrics {
+            enabled: t.is_enabled(),
+            routed,
+            outstanding,
+            healthy,
+            requeued: r.counter("sg_cluster_requeued_total", "Failover requeues", &[]),
+            ejected: r.counter("sg_cluster_ejected_total", "Replicas ejected", &[]),
+            latency_ms: r.histogram(
+                "sg_cluster_latency_ms",
+                "Cluster end-to-end latency (milliseconds)",
+                &[],
+            ),
+            t: Arc::clone(t),
+        }
+    }
+
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.t
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn begin_trace(&self) -> Option<TraceId> {
+        if !self.enabled {
+            return None;
+        }
+        self.t.begin_trace()
+    }
+
+    pub fn on_admitted(&self, trace: Option<TraceId>, class: &'static str, depth: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.t.event(trace, TraceEvent::Admitted { class });
+        self.t.event(trace, TraceEvent::Queued { depth });
+    }
+
+    pub fn on_rejected(&self, trace: Option<TraceId>, code: u16, reason: &str) {
+        if self.enabled {
+            self.t
+                .event(trace, TraceEvent::Rejected { code, reason: reason.to_string() });
+        }
+    }
+
+    /// A placement: `requeued_from = Some(f)` marks a failover leg
+    /// (`requeued{from,to}`), None a first placement (`routed{replica}`).
+    pub fn on_placed(
+        &self,
+        trace: Option<TraceId>,
+        replica: usize,
+        outstanding_evals: u64,
+        requeued_from: Option<usize>,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(c) = self.routed.get(replica) {
+            c.inc();
+        }
+        if let Some(g) = self.outstanding.get(replica) {
+            g.set(outstanding_evals as f64);
+        }
+        match requeued_from {
+            Some(from) => {
+                self.requeued.inc();
+                self.t.event(trace, TraceEvent::Requeued { from, to: replica });
+            }
+            None => self.t.event(trace, TraceEvent::Routed { replica }),
+        }
+    }
+
+    pub fn on_outstanding(&self, replica: usize, outstanding_evals: u64) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(g) = self.outstanding.get(replica) {
+            g.set(outstanding_evals as f64);
+        }
+    }
+
+    pub fn on_ejected(&self, replica: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.ejected.inc();
+        if let Some(g) = self.healthy.get(replica) {
+            g.set(0.0);
+        }
+    }
+
+    pub fn on_retired(&self, trace: Option<TraceId>, latency_ms: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.latency_ms.observe_ms(latency_ms);
+        self.t.event(trace, TraceEvent::Retired);
+    }
+
+    pub fn on_expired(&self, trace: Option<TraceId>) {
+        if self.enabled {
+            self.t.event(trace, TraceEvent::Expired);
+        }
+    }
+
+    pub fn on_shed(&self, trace: Option<TraceId>, reason: &str) {
+        if self.enabled {
+            self.t.event(trace, TraceEvent::Shed { reason: reason.to_string() });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_telemetry_is_inert() {
+        let t = Telemetry::off();
+        assert!(!t.is_enabled());
+        assert!(t.begin_trace().is_none());
+        t.event(Some(1), TraceEvent::Retired);
+        assert!(t.traces().is_empty());
+        let sink = CoordSink::new(&t, "single", true);
+        sink.on_submitted();
+        sink.on_admitted(None, "standard", 1);
+        assert_eq!(t.render_prometheus().lines().count(), 0, "no samples when disabled");
+    }
+
+    #[test]
+    fn plan_summary_parses_to_segments() {
+        let evs = plan_exec_events("40D 10C");
+        assert_eq!(
+            evs,
+            vec![
+                TraceEvent::PlanExec { mode: 'D', steps: 40, evals: 80 },
+                TraceEvent::PlanExec { mode: 'C', steps: 10, evals: 10 },
+            ]
+        );
+        let evs = plan_exec_events("1D 2C 3R");
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[2], TraceEvent::PlanExec { mode: 'R', steps: 3, evals: 3 });
+        assert!(plan_exec_events("").is_empty());
+    }
+
+    #[test]
+    fn coord_sink_records_lifecycle() {
+        let t = Telemetry::with_clock(16, Clock::manual());
+        let sink = CoordSink::new(&t, "single", true);
+        let trace = sink.begin_trace();
+        assert!(trace.is_some());
+        sink.on_submitted();
+        sink.on_admitted(trace, "interactive", 2);
+        t.clock().advance_ms(5.0);
+        sink.on_cohort_join(trace, 3);
+        sink.on_retired(trace, "2D 2C", 5.0);
+        let span = t.traces().span(trace.unwrap()).unwrap();
+        assert_eq!(span.terminal_events(), 1);
+        assert!(span.has("cohort_join"));
+        assert!(span.has("plan_exec"));
+        // manual clock: the retire events sit exactly at 5 ms
+        assert_eq!(span.events.last().unwrap().at_ns, 5_000_000);
+        let text = t.render_prometheus();
+        assert!(text.contains("sg_coord_retired_total{scope=\"single\"} 1"));
+        assert!(text.contains("sg_request_latency_ms_bucket{scope=\"single\",le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn replica_sink_never_closes_spans() {
+        let t = Telemetry::with_clock(16, Clock::manual());
+        let sink = CoordSink::new(&t, "replica0", false);
+        let trace = t.begin_trace();
+        sink.on_retired(trace, "4D", 1.0);
+        sink.on_expired(trace);
+        sink.on_shed(trace, "drain");
+        sink.on_rejected(trace, 503, "draining");
+        let span = t.traces().span(trace.unwrap()).unwrap();
+        assert_eq!(span.terminal_events(), 0, "replica sinks must not close spans");
+        assert!(span.has("plan_exec"));
+    }
+
+    #[test]
+    fn cluster_failover_leg_events() {
+        let t = Telemetry::with_clock(16, Clock::manual());
+        let cm = ClusterMetrics::new(&t, 2);
+        let trace = cm.begin_trace();
+        cm.on_admitted(trace, "standard", 1);
+        cm.on_placed(trace, 0, 24, None);
+        cm.on_ejected(0);
+        cm.on_placed(trace, 1, 24, Some(0));
+        cm.on_retired(trace, 12.0);
+        let span = t.traces().span(trace.unwrap()).unwrap();
+        assert!(span.has("routed"));
+        assert!(span.has("requeued"));
+        assert_eq!(span.terminal_events(), 1);
+        let text = t.render_prometheus();
+        assert!(text.contains("sg_cluster_requeued_total 1"));
+        assert!(text.contains("sg_cluster_healthy{replica=\"0\"} 0"));
+        assert!(text.contains("sg_cluster_healthy{replica=\"1\"} 1"));
+    }
+}

@@ -1,0 +1,346 @@
+//! Metrics registry + Prometheus text exposition (format 0.0.4).
+//!
+//! Counters, gauges and histograms with labels, rendered as valid
+//! Prometheus text: one `# HELP` / `# TYPE` pair per family, label
+//! values escaped (`\\`, `\"`, `\n`), histogram buckets cumulative and
+//! terminated by `le="+Inf"`. Histograms reuse the log-bucketed
+//! [`LatencyHistogram`] and project it onto a fixed millisecond `le`
+//! ladder at render time, so recording stays O(1) and the exposition is
+//! still cumulative-monotone.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are pre-resolved
+//! `Arc`s: the registry mutex is taken only at registration and render
+//! time, never on the hot update path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::LatencyHistogram;
+
+/// The `le` ladder (milliseconds) histogram families are projected onto
+/// at exposition time. Spans four orders of magnitude around typical
+/// request latencies; `+Inf` is always appended.
+pub const LE_BOUNDS_MS: [f64; 14] = [
+    0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0, 10000.0,
+];
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    fn type_name(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Monotone counter handle (u64).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge handle (f64 stored as bits; last-write-wins).
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn set_usize(&self, v: usize) {
+        self.set(v as f64);
+    }
+
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram handle: a shared log-bucketed [`LatencyHistogram`].
+#[derive(Clone, Debug, Default)]
+pub struct Histogram(Arc<Mutex<LatencyHistogram>>);
+
+impl Histogram {
+    pub fn observe_ms(&self, ms: f64) {
+        self.0.lock().expect("histogram lock").record_ms(ms);
+    }
+
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.0.lock().expect("histogram lock").clone()
+    }
+}
+
+enum Series {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Family {
+    help: String,
+    kind: MetricKind,
+    /// Label-set → series, keyed by the sorted label pairs so the
+    /// exposition order is deterministic.
+    series: BTreeMap<Vec<(String, String)>, Series>,
+}
+
+/// The process-wide metric registry every layer reports into.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a counter series. Registering an existing name with
+    /// a different kind is a programming error and panics loudly.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.series(name, help, MetricKind::Counter, labels) {
+            Series::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.series(name, help, MetricKind::Gauge, labels) {
+            Series::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Histogram {
+        match self.series(name, help, MetricKind::Histogram, labels) {
+            Series::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    fn series(&self, name: &str, help: &str, kind: MetricKind, labels: &[(&str, &str)]) -> Series {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        for (k, _) in labels {
+            assert!(valid_name(k), "invalid label name {k:?}");
+        }
+        let mut key: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        key.sort();
+        let mut families = self.families.lock().expect("registry lock");
+        let fam = families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        assert_eq!(
+            fam.kind, kind,
+            "metric {name:?} registered as {} and {}",
+            fam.kind.type_name(),
+            kind.type_name()
+        );
+        let entry = fam.series.entry(key).or_insert_with(|| match kind {
+            MetricKind::Counter => Series::Counter(Counter::default()),
+            MetricKind::Gauge => Series::Gauge(Gauge::default()),
+            MetricKind::Histogram => Series::Histogram(Histogram::default()),
+        });
+        match entry {
+            Series::Counter(c) => Series::Counter(c.clone()),
+            Series::Gauge(g) => Series::Gauge(g.clone()),
+            Series::Histogram(h) => Series::Histogram(h.clone()),
+        }
+    }
+
+    /// Render the whole registry in Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let families = self.families.lock().expect("registry lock");
+        let mut out = String::new();
+        for (name, fam) in families.iter() {
+            out.push_str(&format!("# HELP {name} {}\n", escape_help(&fam.help)));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind.type_name()));
+            for (labels, series) in fam.series.iter() {
+                match series {
+                    Series::Counter(c) => {
+                        out.push_str(&format!(
+                            "{name}{} {}\n",
+                            label_block(labels, None),
+                            c.value()
+                        ));
+                    }
+                    Series::Gauge(g) => {
+                        out.push_str(&format!(
+                            "{name}{} {}\n",
+                            label_block(labels, None),
+                            fmt_f64(g.value())
+                        ));
+                    }
+                    Series::Histogram(h) => {
+                        let snap = h.snapshot();
+                        let cum = snap.cumulative_le(&LE_BOUNDS_MS);
+                        for (bound, count) in LE_BOUNDS_MS.iter().zip(cum.iter()) {
+                            out.push_str(&format!(
+                                "{name}_bucket{} {count}\n",
+                                label_block(labels, Some(&fmt_f64(*bound))),
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{name}_bucket{} {}\n",
+                            label_block(labels, Some("+Inf")),
+                            snap.count()
+                        ));
+                        out.push_str(&format!(
+                            "{name}_sum{} {}\n",
+                            label_block(labels, None),
+                            fmt_f64(snap.sum_ms())
+                        ));
+                        out.push_str(&format!(
+                            "{name}_count{} {}\n",
+                            label_block(labels, None),
+                            snap.count()
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `{k="v",...}` with escaped values; `le` (when given) is appended
+/// last, matching Prometheus convention. Empty → empty string.
+fn label_block(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .enumerate()
+            .all(|(i, c)| c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit()))
+}
+
+/// Float formatting for exposition: integral values render without a
+/// trailing `.0` (Prometheus parsers accept both; this keeps diffs and
+/// tests stable).
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_render() {
+        let r = Registry::new();
+        let c = r.counter("sg_test_total", "a counter", &[("scope", "single")]);
+        c.inc();
+        c.add(2);
+        let g = r.gauge("sg_test_depth", "a gauge", &[]);
+        g.set(3.5);
+        let text = r.render();
+        assert!(text.contains("# HELP sg_test_total a counter\n"));
+        assert!(text.contains("# TYPE sg_test_total counter\n"));
+        assert!(text.contains("sg_test_total{scope=\"single\"} 3\n"));
+        assert!(text.contains("# TYPE sg_test_depth gauge\n"));
+        assert!(text.contains("sg_test_depth 3.5\n"));
+    }
+
+    #[test]
+    fn same_series_shares_a_handle() {
+        let r = Registry::new();
+        let a = r.counter("sg_x_total", "x", &[("k", "v")]);
+        // label order must not matter for identity
+        let b = r.counter("sg_x_total", "x", &[("k", "v")]);
+        a.inc();
+        assert_eq!(b.value(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("sg_y", "y", &[]);
+        r.gauge("sg_y", "y", &[]);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_in_inf() {
+        let r = Registry::new();
+        let h = r.histogram("sg_lat_ms", "latency", &[]);
+        for ms in [0.3, 0.7, 3.0, 40.0, 40.0, 20_000.0] {
+            h.observe_ms(ms);
+        }
+        let text = r.render();
+        let counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("sg_lat_ms_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(counts.len(), LE_BOUNDS_MS.len() + 1);
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+        assert_eq!(*counts.last().unwrap(), 6, "+Inf bucket must equal count");
+        // the 20s sample only lands in +Inf
+        assert!(counts[LE_BOUNDS_MS.len() - 1] < 6);
+        assert!(text.contains("sg_lat_ms_bucket{le=\"+Inf\"} 6\n"));
+        assert!(text.contains("sg_lat_ms_count 6\n"));
+    }
+
+    #[test]
+    fn label_escaping() {
+        let r = Registry::new();
+        r.counter("sg_esc_total", "escapes", &[("path", "a\\b\"c\nd")]).inc();
+        let text = r.render();
+        assert!(text.contains("path=\"a\\\\b\\\"c\\nd\""), "{text}");
+    }
+}

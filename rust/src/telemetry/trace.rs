@@ -1,0 +1,305 @@
+//! Structured per-request trace spans.
+//!
+//! Every request gets a trace ID at admission; each layer appends
+//! timestamped [`TraceEvent`]s as the request moves through admission,
+//! routing, cohort execution and retirement. Spans live in a bounded
+//! ring buffer (oldest evicted first) and are queryable over the wire
+//! (`{"op":"trace","trace":N}`) or exportable as JSONL.
+//!
+//! Terminal events — `rejected`, `retired`, `shed`, `expired` — close a
+//! span. The conservation invariant (enforced by
+//! `tests/trace_conservation.rs`): every *admitted* span ends in exactly
+//! one terminal event, including requeued failover legs.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::Value;
+
+pub type TraceId = u64;
+
+/// One structured event on a request's trace span.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Request passed admission (QoS or open-door).
+    Admitted { class: &'static str },
+    /// Request refused at admission (terminal).
+    Rejected { code: u16, reason: String },
+    /// Request entered a queue at the given depth.
+    Queued { depth: usize },
+    /// Cluster router placed the request on a replica.
+    Routed { replica: usize },
+    /// Sample joined a continuous cohort of the given size.
+    CohortJoin { cohort: usize },
+    /// One executed segment of the guidance plan: `mode` is the plan
+    /// run-length code (`D` dual, `C` cond-only, `R` reuse, `U`
+    /// unguided), `evals` the UNet executions the segment cost.
+    PlanExec { mode: char, steps: usize, evals: usize },
+    /// QoS actuator rewrote the request's shed fraction at admission.
+    ActuatorRewrite { from: f64, to: f64 },
+    /// Failover: the request left replica `from` and was re-dispatched
+    /// onto replica `to`.
+    Requeued { from: usize, to: usize },
+    /// Completed successfully (terminal).
+    Retired,
+    /// Dropped by load shedding or failure (terminal).
+    Shed { reason: String },
+    /// Deadline exceeded (terminal).
+    Expired,
+}
+
+impl TraceEvent {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Admitted { .. } => "admitted",
+            TraceEvent::Rejected { .. } => "rejected",
+            TraceEvent::Queued { .. } => "queued",
+            TraceEvent::Routed { .. } => "routed",
+            TraceEvent::CohortJoin { .. } => "cohort_join",
+            TraceEvent::PlanExec { .. } => "plan_exec",
+            TraceEvent::ActuatorRewrite { .. } => "actuator_rewrite",
+            TraceEvent::Requeued { .. } => "requeued",
+            TraceEvent::Retired => "retired",
+            TraceEvent::Shed { .. } => "shed",
+            TraceEvent::Expired => "expired",
+        }
+    }
+
+    /// Terminal events close the span: exactly one per admitted request.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            TraceEvent::Rejected { .. }
+                | TraceEvent::Retired
+                | TraceEvent::Shed { .. }
+                | TraceEvent::Expired
+        )
+    }
+
+    fn fields(&self, v: Value) -> Value {
+        match self {
+            TraceEvent::Admitted { class } => v.with("class", *class),
+            TraceEvent::Rejected { code, reason } => {
+                v.with("code", *code as i64).with("reason", reason.as_str())
+            }
+            TraceEvent::Queued { depth } => v.with("depth", *depth as i64),
+            TraceEvent::Routed { replica } => v.with("replica", *replica as i64),
+            TraceEvent::CohortJoin { cohort } => v.with("cohort", *cohort as i64),
+            TraceEvent::PlanExec { mode, steps, evals } => v
+                .with("mode", mode.to_string())
+                .with("steps", *steps as i64)
+                .with("evals", *evals as i64),
+            TraceEvent::ActuatorRewrite { from, to } => v.with("from", *from).with("to", *to),
+            TraceEvent::Requeued { from, to } => {
+                v.with("from", *from as i64).with("to", *to as i64)
+            }
+            TraceEvent::Retired | TraceEvent::Shed { .. } | TraceEvent::Expired => {
+                if let TraceEvent::Shed { reason } = self {
+                    v.with("reason", reason.as_str())
+                } else {
+                    v
+                }
+            }
+        }
+    }
+}
+
+/// A timestamped event (nanoseconds on the telemetry clock).
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub at_ns: u64,
+    pub event: TraceEvent,
+}
+
+/// One request's event history.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub id: TraceId,
+    pub events: Vec<SpanEvent>,
+}
+
+impl Span {
+    /// Number of terminal events recorded (the conservation invariant
+    /// requires exactly 1 on every admitted span).
+    pub fn terminal_events(&self) -> usize {
+        self.events.iter().filter(|e| e.event.is_terminal()).count()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.events.iter().any(|e| e.event.name() == name)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let events: Vec<Value> = self
+            .events
+            .iter()
+            .map(|e| {
+                e.event.fields(
+                    Value::obj()
+                        .with("t_ms", e.at_ns as f64 / 1e6)
+                        .with("event", e.event.name()),
+                )
+            })
+            .collect();
+        Value::obj()
+            .with("trace_id", self.id as i64)
+            .with("terminated", self.terminal_events() > 0)
+            .with("events", Value::Arr(events))
+    }
+}
+
+struct Ring {
+    order: VecDeque<TraceId>,
+    spans: HashMap<TraceId, Span>,
+}
+
+/// Bounded ring buffer of spans; oldest evicted first.
+pub struct TraceStore {
+    capacity: usize,
+    next: AtomicU64,
+    evicted: AtomicU64,
+    inner: Mutex<Ring>,
+}
+
+impl TraceStore {
+    pub fn new(capacity: usize) -> TraceStore {
+        TraceStore {
+            capacity: capacity.max(1),
+            next: AtomicU64::new(1),
+            evicted: AtomicU64::new(0),
+            inner: Mutex::new(Ring { order: VecDeque::new(), spans: HashMap::new() }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Open a new span and return its trace ID (IDs start at 1 and never
+    /// repeat). Evicts the oldest span when the ring is full.
+    pub fn begin(&self) -> TraceId {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.inner.lock().expect("trace lock");
+        if ring.order.len() >= self.capacity {
+            if let Some(old) = ring.order.pop_front() {
+                ring.spans.remove(&old);
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        ring.order.push_back(id);
+        ring.spans.insert(id, Span { id, events: Vec::new() });
+        id
+    }
+
+    /// Append an event. Unknown IDs (already evicted) are dropped
+    /// silently — the ring is a bounded observability buffer, not an
+    /// accounting ledger.
+    pub fn record(&self, id: TraceId, at_ns: u64, event: TraceEvent) {
+        let mut ring = self.inner.lock().expect("trace lock");
+        if let Some(span) = ring.spans.get_mut(&id) {
+            span.events.push(SpanEvent { at_ns, event });
+        }
+    }
+
+    pub fn span(&self, id: TraceId) -> Option<Span> {
+        self.inner.lock().expect("trace lock").spans.get(&id).cloned()
+    }
+
+    /// The most recent `n` trace IDs, newest last.
+    pub fn recent(&self, n: usize) -> Vec<TraceId> {
+        let ring = self.inner.lock().expect("trace lock");
+        ring.order.iter().rev().take(n).rev().copied().collect()
+    }
+
+    /// Snapshot of every live span (ring order, oldest first).
+    pub fn spans(&self) -> Vec<Span> {
+        let ring = self.inner.lock().expect("trace lock");
+        ring.order.iter().filter_map(|id| ring.spans.get(id).cloned()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("trace lock").order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted by the ring bound so far.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Export every live span as JSON lines (one span object per line).
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for span in self.spans() {
+            out.push_str(&span.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_lifecycle_and_terminal_count() {
+        let store = TraceStore::new(8);
+        let id = store.begin();
+        store.record(id, 10, TraceEvent::Admitted { class: "standard" });
+        store.record(id, 20, TraceEvent::Queued { depth: 3 });
+        store.record(id, 30, TraceEvent::Retired);
+        let span = store.span(id).unwrap();
+        assert_eq!(span.events.len(), 3);
+        assert_eq!(span.terminal_events(), 1);
+        assert!(span.has("queued"));
+        let j = span.to_json();
+        assert_eq!(j.get("terminated").and_then(Value::as_bool), Some(true));
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let store = TraceStore::new(2);
+        let a = store.begin();
+        let b = store.begin();
+        let c = store.begin();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.evicted(), 1);
+        assert!(store.span(a).is_none());
+        assert!(store.span(b).is_some());
+        assert_eq!(store.recent(10), vec![b, c]);
+        // recording onto an evicted span is a silent no-op
+        store.record(a, 5, TraceEvent::Retired);
+        assert!(store.span(a).is_none());
+    }
+
+    #[test]
+    fn jsonl_export_is_one_object_per_line() {
+        let store = TraceStore::new(4);
+        for _ in 0..3 {
+            let id = store.begin();
+            store.record(id, 1, TraceEvent::Admitted { class: "batch" });
+            store.record(id, 2, TraceEvent::Shed { reason: "drain".into() });
+        }
+        let text = store.export_jsonl();
+        assert_eq!(text.lines().count(), 3);
+        for line in text.lines() {
+            let v = crate::json::from_str(line).unwrap();
+            assert!(v.get("trace_id").is_some());
+        }
+    }
+
+    #[test]
+    fn terminal_classification() {
+        assert!(TraceEvent::Retired.is_terminal());
+        assert!(TraceEvent::Expired.is_terminal());
+        assert!(TraceEvent::Shed { reason: "x".into() }.is_terminal());
+        assert!(TraceEvent::Rejected { code: 429, reason: "q".into() }.is_terminal());
+        assert!(!TraceEvent::Admitted { class: "interactive" }.is_terminal());
+        assert!(!TraceEvent::Requeued { from: 0, to: 1 }.is_terminal());
+    }
+}

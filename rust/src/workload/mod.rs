@@ -251,6 +251,10 @@ pub enum RequestOutcome {
 #[derive(Debug, Clone)]
 pub struct QosReplayReport {
     pub outcomes: Vec<RequestOutcome>,
+    /// Telemetry trace id per entry, aligned with `outcomes`. `None`
+    /// when the sink runs without telemetry or the request was shed at
+    /// admission (its span, if any, closed before a ticket existed).
+    pub trace_ids: Vec<Option<u64>>,
     /// Latencies of completed requests only, ms.
     pub latencies_ms: Vec<f64>,
     /// Wall time of the whole replay, seconds.
@@ -396,26 +400,33 @@ fn replay_driver(
             next_kill += 1;
         }
         let mut outcomes = Vec::with_capacity(trace.len());
+        let mut trace_ids = Vec::with_capacity(trace.len());
         let mut latencies = Vec::new();
         for slot in pending {
             match slot {
-                None => outcomes.push(RequestOutcome::Rejected),
-                Some(ticket) => match ticket.wait_timed() {
-                    Ok((_, latency)) => {
-                        let ms = latency.as_secs_f64() * 1e3;
-                        latencies.push(ms);
-                        outcomes.push(RequestOutcome::Completed { latency_ms: ms });
+                None => {
+                    outcomes.push(RequestOutcome::Rejected);
+                    trace_ids.push(None);
+                }
+                Some(ticket) => {
+                    trace_ids.push(ticket.trace());
+                    match ticket.wait_timed() {
+                        Ok((_, latency)) => {
+                            let ms = latency.as_secs_f64() * 1e3;
+                            latencies.push(ms);
+                            outcomes.push(RequestOutcome::Completed { latency_ms: ms });
+                        }
+                        Err(Error::DeadlineExceeded(_)) => {
+                            outcomes.push(RequestOutcome::DeadlineMissed)
+                        }
+                        Err(_) => outcomes.push(RequestOutcome::Failed),
                     }
-                    Err(Error::DeadlineExceeded(_)) => {
-                        outcomes.push(RequestOutcome::DeadlineMissed)
-                    }
-                    Err(_) => outcomes.push(RequestOutcome::Failed),
-                },
+                }
             }
         }
         let wall_s = start.elapsed().as_secs_f64();
         let throughput = latencies.len() as f64 / wall_s;
-        Ok(QosReplayReport { outcomes, latencies_ms: latencies, wall_s, throughput })
+        Ok(QosReplayReport { outcomes, trace_ids, latencies_ms: latencies, wall_s, throughput })
     })
 }
 
@@ -607,6 +618,7 @@ mod tests {
                 RequestOutcome::DeadlineMissed,
                 RequestOutcome::Failed,
             ],
+            trace_ids: vec![Some(0), Some(1), None, Some(3), Some(4)],
             latencies_ms: vec![10.0, 40.0],
             wall_s: 1.0,
             throughput: 2.0,

@@ -1,0 +1,418 @@
+//! Prometheus text-exposition conformance (DESIGN.md §12): the
+//! telemetry registry's render must be parseable by a strict reader of
+//! the 0.0.4 text format. The suite implements that reader from scratch
+//! and checks, against a *served* stack (engine + coordinator + QoS all
+//! reporting into one registry):
+//!
+//! * every family carries exactly one `# HELP` and one `# TYPE` line,
+//!   both preceding the family's samples, with a known metric kind;
+//! * histogram buckets are cumulative over increasing `le` bounds and
+//!   end at `le="+Inf"` equal to the family's `_count`, with `_sum`
+//!   present per series;
+//! * label values round-trip through `\\` / `\"` / `\n` escaping;
+//! * counters are monotone across consecutive scrapes;
+//! * the wire `{"op":"metrics"}` response and the plain-HTTP scrape
+//!   endpoint serve the same conformant text with the right
+//!   content-type (and the endpoint refuses non-GET methods).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::json::Value;
+use selective_guidance::qos::{DeadlineQos, QosConfig, QosPolicy};
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::server::{Client, MetricsScrape, Server};
+use selective_guidance::telemetry::{CoordSink, Telemetry, PROMETHEUS_CONTENT_TYPE};
+
+// ---------------------------------------------------------------------------
+// a strict 0.0.4 text-format reader
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Sample {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+#[derive(Debug, Default)]
+struct Exposition {
+    help: BTreeMap<String, String>,
+    kind: BTreeMap<String, String>,
+    samples: Vec<Sample>,
+}
+
+/// Resolve a sample name to its declaring family: an exact match for
+/// counters/gauges, or a `_bucket`/`_sum`/`_count` suffix of a declared
+/// histogram. A bare histogram name with no suffix is NOT a valid sample.
+fn family_of(sample: &str, kinds: &BTreeMap<String, String>) -> Option<String> {
+    if let Some(kind) = kinds.get(sample) {
+        if kind != "histogram" {
+            return Some(sample.to_string());
+        }
+        return None;
+    }
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = sample.strip_suffix(suffix) {
+            if kinds.get(base).map(String::as_str) == Some("histogram") {
+                return Some(base.to_string());
+            }
+        }
+    }
+    None
+}
+
+fn parse_value(v: &str, lineno: usize) -> f64 {
+    v.parse::<f64>().unwrap_or_else(|_| panic!("line {lineno}: unparseable value {v:?}"))
+}
+
+fn parse_sample(line: &str, lineno: usize) -> Sample {
+    let brace = match line.find('{') {
+        None => {
+            let (name, value) = line
+                .rsplit_once(' ')
+                .unwrap_or_else(|| panic!("line {lineno}: sample without value: {line:?}"));
+            return Sample {
+                name: name.to_string(),
+                labels: Vec::new(),
+                value: parse_value(value, lineno),
+            };
+        }
+        Some(i) => i,
+    };
+    let name = line[..brace].to_string();
+    let chars: Vec<char> = line[brace..].chars().collect();
+    let mut labels = Vec::new();
+    let mut i = 1; // past '{'
+    loop {
+        if chars[i] == '}' {
+            i += 1;
+            break;
+        }
+        let mut key = String::new();
+        while chars[i] != '=' {
+            key.push(chars[i]);
+            i += 1;
+        }
+        i += 1; // '='
+        assert_eq!(chars[i], '"', "line {lineno}: label value must be quoted");
+        i += 1;
+        let mut val = String::new();
+        loop {
+            match chars[i] {
+                '"' => {
+                    i += 1;
+                    break;
+                }
+                '\\' => {
+                    i += 1;
+                    match chars[i] {
+                        'n' => val.push('\n'),
+                        '\\' => val.push('\\'),
+                        '"' => val.push('"'),
+                        bad => panic!("line {lineno}: invalid escape \\{bad}"),
+                    }
+                    i += 1;
+                }
+                c => {
+                    val.push(c);
+                    i += 1;
+                }
+            }
+        }
+        labels.push((key, val));
+        if chars[i] == ',' {
+            i += 1;
+        }
+    }
+    assert_eq!(chars[i], ' ', "line {lineno}: expected a space before the value");
+    let value: String = chars[i + 1..].iter().collect();
+    Sample { name, labels, value: parse_value(&value, lineno) }
+}
+
+/// Parse and structurally validate one exposition. Panics (failing the
+/// test) on any conformance violation.
+fn parse(text: &str) -> Exposition {
+    let mut exp = Exposition::default();
+    for (n, line) in text.lines().enumerate() {
+        let lineno = n + 1;
+        assert!(!line.is_empty(), "line {lineno}: blank line in exposition");
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest
+                .split_once(' ')
+                .unwrap_or_else(|| panic!("line {lineno}: HELP without text: {line:?}"));
+            let dup = exp.help.insert(name.to_string(), help.to_string());
+            assert!(dup.is_none(), "line {lineno}: duplicate # HELP for {name}");
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest
+                .split_once(' ')
+                .unwrap_or_else(|| panic!("line {lineno}: TYPE without kind: {line:?}"));
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "line {lineno}: unknown metric kind {kind:?}"
+            );
+            assert!(
+                exp.help.contains_key(name),
+                "line {lineno}: # TYPE {name} must follow its # HELP line"
+            );
+            let dup = exp.kind.insert(name.to_string(), kind.to_string());
+            assert!(dup.is_none(), "line {lineno}: duplicate # TYPE for {name}");
+        } else if line.starts_with('#') {
+            panic!("line {lineno}: unexpected comment {line:?}");
+        } else {
+            let sample = parse_sample(line, lineno);
+            assert!(
+                family_of(&sample.name, &exp.kind).is_some(),
+                "line {lineno}: sample {} precedes its # TYPE declaration",
+                sample.name
+            );
+            exp.samples.push(sample);
+        }
+    }
+    check_histograms(&exp);
+    exp
+}
+
+fn find_sample(exp: &Exposition, name: &str, labels: &[(String, String)]) -> f64 {
+    let mut want = labels.to_vec();
+    want.sort();
+    exp.samples
+        .iter()
+        .find(|s| {
+            let mut have = s.labels.clone();
+            have.sort();
+            s.name == name && have == want
+        })
+        .unwrap_or_else(|| panic!("missing sample {name}{labels:?}"))
+        .value
+}
+
+fn check_histograms(exp: &Exposition) {
+    for (fam, kind) in &exp.kind {
+        if kind != "histogram" {
+            continue;
+        }
+        let bucket_name = format!("{fam}_bucket");
+        let mut groups: BTreeMap<Vec<(String, String)>, Vec<(f64, f64)>> = BTreeMap::new();
+        for s in exp.samples.iter().filter(|s| s.name == bucket_name) {
+            let mut base: Vec<(String, String)> =
+                s.labels.iter().filter(|(k, _)| k != "le").cloned().collect();
+            base.sort();
+            let le = s
+                .labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .map(|(_, v)| v.as_str())
+                .unwrap_or_else(|| panic!("{fam}: bucket sample without an le label"));
+            let le = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse().unwrap_or_else(|_| panic!("{fam}: unparseable le bound {le:?}"))
+            };
+            groups.entry(base).or_default().push((le, s.value));
+        }
+        assert!(!groups.is_empty(), "{fam}: histogram family with no bucket samples");
+        for (base, buckets) in groups {
+            for w in buckets.windows(2) {
+                assert!(w[0].0 < w[1].0, "{fam}{base:?}: le bounds not increasing");
+                assert!(w[0].1 <= w[1].1, "{fam}{base:?}: bucket counts not cumulative");
+            }
+            let &(last_le, inf_count) = buckets.last().unwrap();
+            assert!(last_le.is_infinite(), "{fam}{base:?}: buckets must end at le=\"+Inf\"");
+            let count = find_sample(exp, &format!("{fam}_count"), &base);
+            assert_eq!(inf_count, count, "{fam}{base:?}: +Inf bucket must equal _count");
+            // _sum must exist for the same series (value itself is free)
+            find_sample(exp, &format!("{fam}_sum"), &base);
+        }
+    }
+}
+
+/// Every counter series, keyed by (name, sorted labels).
+fn counters(exp: &Exposition) -> BTreeMap<(String, Vec<(String, String)>), f64> {
+    let mut out = BTreeMap::new();
+    for s in &exp.samples {
+        if exp.kind.get(&s.name).map(String::as_str) == Some("counter") {
+            let mut labels = s.labels.clone();
+            labels.sort();
+            out.insert((s.name.clone(), labels), s.value);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// the stack under observation
+// ---------------------------------------------------------------------------
+
+fn telemetry_coordinator(mode: BatchMode) -> (Arc<Telemetry>, Arc<Coordinator>) {
+    let telemetry = Telemetry::on();
+    let engine = Arc::new(Engine::new(
+        Arc::new(ModelStack::synthetic()),
+        EngineConfig::default(),
+    ));
+    let qos = DeadlineQos::new(QosConfig { enabled: true, ..QosConfig::default() })
+        .expect("valid qos config");
+    let coordinator = Coordinator::start_full(
+        engine,
+        CoordinatorConfig { mode, slot_budget: 4, workers: 1, ..CoordinatorConfig::default() },
+        Some(Arc::new(qos) as Arc<dyn QosPolicy>),
+        Some(CoordSink::new(&telemetry, "single", true)),
+    );
+    (telemetry, coordinator)
+}
+
+fn run_work(coordinator: &Arc<Coordinator>, n: u64) {
+    let tickets: Vec<_> = (0..n)
+        .map(|seed| {
+            let req = GenerationRequest::new("conformance probe")
+                .steps(6)
+                .scheduler(SchedulerKind::Ddim)
+                .seed(seed)
+                .decode(false);
+            coordinator.submit(req).expect("submit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("wait");
+    }
+}
+
+#[test]
+fn exposition_is_conformant_and_counters_monotone() {
+    let (telemetry, coordinator) = telemetry_coordinator(BatchMode::Continuous);
+    // a hostile label value: the render must escape it, the reader must
+    // recover it verbatim
+    let hostile = "a\\b \"quoted\"\nnewline";
+    telemetry
+        .registry()
+        .counter("sg_test_escape_total", "escaping probe", &[("note", hostile)])
+        .inc();
+    run_work(&coordinator, 3);
+
+    let text1 = telemetry.render_prometheus();
+    let exp1 = parse(&text1);
+    // the whole stack reports into one registry
+    for family in
+        ["sg_engine_unet_evals_total", "sg_coord_retired_total", "sg_qos_admitted_total"]
+    {
+        assert_eq!(exp1.kind.get(family).map(String::as_str), Some("counter"), "{family}");
+    }
+    assert_eq!(exp1.kind.get("sg_request_latency_ms").map(String::as_str), Some("histogram"));
+    assert_eq!(
+        find_sample(&exp1, "sg_coord_retired_total", &[("scope".into(), "single".into())]),
+        3.0
+    );
+    // escaping round-trip: raw escapes on the wire, original through the reader
+    assert!(
+        text1.contains(r#"note="a\\b \"quoted\"\nnewline""#),
+        "hostile label not escaped: {text1}"
+    );
+    assert_eq!(
+        find_sample(&exp1, "sg_test_escape_total", &[("note".into(), hostile.into())]),
+        1.0
+    );
+
+    run_work(&coordinator, 2);
+    let exp2 = parse(&telemetry.render_prometheus());
+    let (c1, c2) = (counters(&exp1), counters(&exp2));
+    assert!(!c1.is_empty(), "first scrape exposed no counters");
+    for (key, v1) in &c1 {
+        let v2 = c2
+            .get(key)
+            .unwrap_or_else(|| panic!("counter series {key:?} disappeared between scrapes"));
+        assert!(v2 >= v1, "counter {key:?} went backwards: {v1} -> {v2}");
+    }
+    assert!(
+        find_sample(&exp2, "sg_coord_retired_total", &[("scope".into(), "single".into())]) >= 5.0
+    );
+    coordinator.shutdown();
+}
+
+#[test]
+fn wire_metrics_op_and_http_scrape_agree() {
+    let (telemetry, coordinator) = telemetry_coordinator(BatchMode::Fixed);
+    let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0").expect("bind");
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+    let resp = client
+        .call(
+            Value::obj()
+                .with("op", "generate")
+                .with("prompt", "over the wire")
+                .with("steps", 4i64)
+                .with("scheduler", "ddim")
+                .with("seed", 1i64),
+        )
+        .expect("generate");
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp}");
+
+    // the JSON-wrapped scrape
+    let resp = client.call(Value::obj().with("op", "metrics")).expect("metrics op");
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp}");
+    assert_eq!(
+        resp.get("content_type").and_then(Value::as_str),
+        Some(PROMETHEUS_CONTENT_TYPE)
+    );
+    let body = resp.get("body").and_then(Value::as_str).expect("body");
+    let exp = parse(body);
+    assert!(exp.kind.contains_key("sg_request_latency_ms"));
+    assert!(
+        find_sample(&exp, "sg_coord_retired_total", &[("scope".into(), "single".into())]) >= 1.0
+    );
+
+    // the plain-HTTP scrape serves the same registry
+    let mut scrape =
+        MetricsScrape::start(Arc::clone(&telemetry), "127.0.0.1:0").expect("scrape bind");
+    let (head, http_body) = http_get(&scrape.addr().to_string(), "GET /metrics HTTP/1.1");
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+    assert!(
+        head.contains(&format!("Content-Type: {PROMETHEUS_CONTENT_TYPE}")),
+        "missing content type: {head}"
+    );
+    assert!(
+        head.contains(&format!("Content-Length: {}", http_body.len())),
+        "content length mismatch: {head}"
+    );
+    let exp = parse(&http_body);
+    assert!(exp.kind.contains_key("sg_coord_retired_total"));
+    // non-GET methods are refused, not served
+    let (head, _) = http_get(&scrape.addr().to_string(), "POST /metrics HTTP/1.1");
+    assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+    scrape.stop();
+
+    // the trace op rides the same backend: recent ids, then one span
+    let resp = client.call(Value::obj().with("op", "trace")).expect("trace op");
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp}");
+    let recent = match resp.get("recent") {
+        Some(Value::Arr(ids)) => ids.clone(),
+        other => panic!("expected recent id list, got {other:?}"),
+    };
+    assert!(!recent.is_empty(), "served work must leave a span behind");
+    let id = recent[0].as_i64().expect("trace id");
+    let resp =
+        client.call(Value::obj().with("op", "trace").with("trace", id)).expect("span fetch");
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp}");
+    let span = resp.get("span").expect("span object");
+    assert_eq!(span.get("terminated").and_then(Value::as_bool), Some(true), "{span}");
+    coordinator.shutdown();
+}
+
+/// Minimal HTTP/1.1 exchange: send one request line (plus Host and
+/// Connection: close), return (header block, body).
+fn http_get(addr: &str, request_line: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect scrape");
+    stream
+        .write_all(format!("{request_line}\r\nHost: test\r\nConnection: close\r\n\r\n").as_bytes())
+        .expect("send request");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8(raw).expect("utf8 response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    (head.to_string(), body.to_string())
+}

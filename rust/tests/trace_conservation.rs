@@ -1,0 +1,265 @@
+//! Trace-span conservation (DESIGN.md §12): every request the system
+//! admits must close its span with **exactly one** terminal event —
+//! `retired`, `shed`, `expired`, or `rejected` — no double closes, no
+//! spans left dangling. The suite drives the full serving stack on the
+//! deterministic synthetic backend (always runs, no artifacts):
+//!
+//! * a mixed-QoS replay against a 3-replica continuous cluster with a
+//!   mid-replay replica kill — requeued failover legs must keep
+//!   appending to the *same* span and still close it exactly once;
+//! * the same replay against a standalone QoS coordinator;
+//! * deterministic single-request paths for the synchronous-reject and
+//!   queue-expiry terminals.
+//!
+//! The assertions need no sleeps: the replay drivers resolve every
+//! ticket before returning, and every layer records the terminal span
+//! event *before* resolving the ticket, so the ledger must already
+//! balance when a replay returns.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use selective_guidance::cluster::{ClusterConfig, ReplicaSet, ReplicaSpec};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::error::Error;
+use selective_guidance::qos::{DeadlineQos, Priority, QosConfig, QosMeta, QosPolicy};
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::telemetry::{CoordSink, Span, Telemetry};
+use selective_guidance::workload::{
+    replay_qos, replay_qos_cluster, ArrivalProcess, KillSpec, QosReplayReport, RequestOutcome,
+    TraceEntry, WorkloadSpec,
+};
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::new(
+        Arc::new(ModelStack::synthetic()),
+        EngineConfig::default(),
+    ))
+}
+
+fn qos_policy(max_queue_depth: usize) -> Option<Arc<dyn QosPolicy>> {
+    let cfg = QosConfig { enabled: true, max_queue_depth, ..QosConfig::default() };
+    let policy = DeadlineQos::new(cfg).expect("valid qos config");
+    Some(Arc::new(policy))
+}
+
+/// A bursty open-loop trace with per-entry QoS diversity: priorities
+/// cycle through all three classes and every fourth request carries a
+/// deadline far below the backlog's drain time, so replays exercise the
+/// retired/expired/rejected terminals side by side.
+fn mixed_trace(num_requests: usize, seed: u64) -> Vec<TraceEntry> {
+    let spec = WorkloadSpec {
+        arrivals: ArrivalProcess::Uniform { rate_per_s: 8000.0 },
+        num_requests,
+        steps: 20,
+        scheduler: SchedulerKind::Ddim,
+        decode: false,
+        seed,
+        ..WorkloadSpec::default()
+    };
+    let mut trace = spec.synthesize();
+    let classes = [Priority::Interactive, Priority::Standard, Priority::Batch];
+    for (i, entry) in trace.iter_mut().enumerate() {
+        let deadline = if i % 4 == 3 { QosMeta::with_deadline_ms(1.5).deadline } else { None };
+        entry.meta = QosMeta { deadline, priority: classes[i % classes.len()], ..entry.meta };
+    }
+    trace
+}
+
+/// The conservation invariant itself, checked two ways: globally (every
+/// span in the store closed exactly once) and per replay entry (each
+/// outcome's span carries the matching terminal).
+fn assert_conserved(t: &Telemetry, report: &QosReplayReport) {
+    let spans = t.traces().spans();
+    assert!(!spans.is_empty(), "replay produced no spans");
+    assert_eq!(t.traces().evicted(), 0, "ring eviction would hide spans");
+    for span in &spans {
+        assert_eq!(span.terminal_events(), 1, "span {} must close exactly once", span.id);
+        if span.has("admitted") {
+            assert!(!span.has("rejected"), "span {} admitted and rejected", span.id);
+        }
+    }
+    assert_eq!(report.trace_ids.len(), report.outcomes.len());
+    for (i, (outcome, tid)) in report.outcomes.iter().zip(&report.trace_ids).enumerate() {
+        match outcome {
+            // a synchronous admission rejection never yields a ticket;
+            // its span closed before submit returned and is covered by
+            // the global sweep above
+            RequestOutcome::Rejected => {
+                assert!(tid.is_none(), "request {i}: rejected entries carry no ticket")
+            }
+            RequestOutcome::Completed { .. } => {
+                let span = span_of(t, *tid, i);
+                assert!(span.has("retired"), "request {i}: completed without a retired event");
+            }
+            RequestOutcome::DeadlineMissed => {
+                let span = span_of(t, *tid, i);
+                assert!(span.has("expired"), "request {i}: missed deadline, no expired event");
+            }
+            RequestOutcome::Failed => {
+                let span = span_of(t, *tid, i);
+                assert!(span.has("shed"), "request {i}: failed without a shed event");
+            }
+        }
+    }
+    let rejected_spans = spans.iter().filter(|s| s.has("rejected")).count();
+    assert_eq!(rejected_spans, report.rejected(), "rejected spans != replay report");
+}
+
+fn span_of(t: &Telemetry, tid: Option<u64>, i: usize) -> Span {
+    let id = tid.unwrap_or_else(|| panic!("request {i}: ticketed request has no trace id"));
+    let span = t.traces().span(id);
+    span.unwrap_or_else(|| panic!("request {i}: span {id} missing"))
+}
+
+/// Mixed QoS + mid-replay replica kill on a 3-replica continuous
+/// cluster: failover legs append to the original span (`requeued` is a
+/// hop, not a terminal) and the requeue ledger matches the span record.
+#[test]
+fn cluster_replay_with_kill_conserves_spans() {
+    let telemetry = Telemetry::on();
+    let spec = ReplicaSpec {
+        mode: BatchMode::Continuous,
+        slot_budget: 4,
+        ..ReplicaSpec::default()
+    };
+    let set = ReplicaSet::start_full(
+        engine(),
+        ClusterConfig {
+            replicas: vec![spec.clone(), spec.clone(), spec],
+            ..ClusterConfig::default()
+        },
+        qos_policy(24),
+        Some(Arc::clone(&telemetry)),
+    )
+    .expect("cluster");
+    let trace = mixed_trace(30, 7);
+    let kills = vec![KillSpec { at_ms: 2.0, replica: 0 }];
+    let report = replay_qos_cluster(&set, &trace, &kills).expect("replay");
+    let stats = set.stats();
+    set.shutdown();
+
+    assert_eq!(report.outcomes.len(), trace.len());
+    assert!(report.completed() >= 1, "replay must complete some work");
+    assert_eq!(stats.ejected, 1);
+    assert_conserved(&telemetry, &report);
+
+    let spans = telemetry.traces().spans();
+    // every admission in the report maps onto exactly one span (requeues
+    // reuse the original — they never fork a second one)
+    assert_eq!(spans.len(), trace.len());
+    let requeue_events: usize = spans
+        .iter()
+        .map(|s| s.events.iter().filter(|e| e.event.name() == "requeued").count())
+        .sum();
+    assert_eq!(requeue_events as u64, stats.requeued, "requeue ledger out of sync");
+    for span in &spans {
+        if span.has("admitted") {
+            assert!(span.has("routed"), "span {} admitted but never placed", span.id);
+        }
+    }
+}
+
+/// Same mixed replay against the standalone QoS coordinator: the
+/// single-node sink owns every terminal, including synchronous 429s.
+#[test]
+fn coordinator_replay_conserves_spans() {
+    let telemetry = Telemetry::on();
+    let coordinator = Coordinator::start_full(
+        engine(),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 4,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        },
+        qos_policy(6),
+        Some(CoordSink::new(&telemetry, "single", true)),
+    );
+    let trace = mixed_trace(24, 11);
+    let report = replay_qos(&coordinator, &trace).expect("replay");
+    coordinator.shutdown();
+
+    assert_eq!(report.outcomes.len(), trace.len());
+    assert!(report.completed() >= 1, "replay must complete some work");
+    assert_conserved(&telemetry, &report);
+    // every valid submission opened a span, admitted or not
+    assert_eq!(telemetry.traces().spans().len(), trace.len());
+}
+
+/// Deterministic synchronous-reject terminal: with a queue bound of 1,
+/// a request submitted behind an 800-step occupant must be refused with
+/// a 429 — and its span still closes (rejection is a complete span, not
+/// a missing one).
+#[test]
+fn synchronous_rejection_closes_span() {
+    let telemetry = Telemetry::on();
+    let coordinator = Coordinator::start_full(
+        engine(),
+        CoordinatorConfig { max_batch: 1, workers: 1, ..CoordinatorConfig::default() },
+        qos_policy(1),
+        Some(CoordSink::new(&telemetry, "single", true)),
+    );
+    let long = GenerationRequest::new("occupant")
+        .steps(800)
+        .scheduler(SchedulerKind::Ddim)
+        .decode(false);
+    let ticket = coordinator.submit_qos(long, QosMeta::default()).expect("admitted");
+    let quick = GenerationRequest::new("refused").steps(2).decode(false);
+    match coordinator.submit_qos(quick, QosMeta::default()) {
+        Err(Error::Rejected { code, .. }) => assert_eq!(code, 429),
+        other => panic!("expected a 429 behind a full queue, got {other:?}"),
+    }
+    ticket.wait().expect("occupant completes");
+    coordinator.shutdown();
+
+    let spans = telemetry.traces().spans();
+    assert_eq!(spans.len(), 2);
+    assert!(spans.iter().all(|s| s.terminal_events() == 1));
+    assert_eq!(spans.iter().filter(|s| s.has("retired")).count(), 1);
+    assert_eq!(spans.iter().filter(|s| s.has("rejected")).count(), 1);
+}
+
+/// Deterministic queue-expiry terminal: a zero-deadline request queued
+/// behind real work always expires before execution (no QoS policy —
+/// deadline enforcement is the worker's, so the expired terminal must
+/// appear even on a bare coordinator).
+#[test]
+fn queue_expiry_closes_span() {
+    let telemetry = Telemetry::on();
+    let coordinator = Coordinator::start_full(
+        engine(),
+        CoordinatorConfig {
+            max_batch: 2,
+            workers: 1,
+            batch_wait: Duration::from_millis(1),
+            ..CoordinatorConfig::default()
+        },
+        None,
+        Some(CoordSink::new(&telemetry, "single", true)),
+    );
+    let long = GenerationRequest::new("occupant")
+        .steps(400)
+        .scheduler(SchedulerKind::Ddim)
+        .decode(false);
+    let t1 = coordinator.submit_qos(long, QosMeta::default()).expect("occupant");
+    let stale = GenerationRequest::new("stale").steps(2).decode(false);
+    let t2 = coordinator
+        .submit_qos(stale, QosMeta::with_deadline_ms(0.0))
+        .expect("zero-deadline request is admitted, then expires");
+    t1.wait().expect("occupant completes");
+    match t2.wait() {
+        Err(Error::DeadlineExceeded(_)) => {}
+        other => panic!("expected queue expiry, got {other:?}"),
+    }
+    coordinator.shutdown();
+
+    let spans = telemetry.traces().spans();
+    assert_eq!(spans.len(), 2);
+    assert!(spans.iter().all(|s| s.terminal_events() == 1));
+    assert_eq!(spans.iter().filter(|s| s.has("retired")).count(), 1);
+    assert_eq!(spans.iter().filter(|s| s.has("expired")).count(), 1);
+}
