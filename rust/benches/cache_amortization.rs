@@ -1,0 +1,204 @@
+//! Fleet-wide guidance amortization (DESIGN.md §13) under a skewed
+//! ("trending prompt") workload.
+//!
+//! A Zipf-distributed request mix — the standard model for prompt
+//! popularity — is replayed twice per skew on the deterministic
+//! synthetic backend: once against a cache-disabled coordinator and
+//! once with the exact-match request cache + in-flight dedup on. The
+//! gated claims, all counter-based and therefore deterministic (no
+//! wall-clock in any gated metric):
+//!
+//! 1. **UNet-evals-per-request falls monotonically with skew** when the
+//!    amortization tiers are on — the hotter the head of the prompt
+//!    distribution, the less physical work per logical request;
+//! 2. **≥ 25% eval reduction at skew 1.1** (the acceptance bar) versus
+//!    the cache-off baseline on the identical request sequence;
+//! 3. **bit-exactness** — every amortized delivery (hit, dedup join,
+//!    or plain miss) is bitwise identical to the cache-off run's output
+//!    for the same request index.
+//!
+//! Wall time is reported for context but never gated.
+//!
+//! Run: `cargo bench --bench cache_amortization` (`--fast` for CI smoke)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, Table};
+use selective_guidance::cache::{CacheConfig, CacheOutcome};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
+use selective_guidance::engine::{Engine, GenerationOutput, GenerationRequest};
+use selective_guidance::json::Value;
+use selective_guidance::prompts;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::workload::ZipfPrompts;
+
+const SKEWS: [f64; 4] = [0.4, 0.8, 1.1, 1.5];
+const CATALOG: usize = 240;
+const STEPS: usize = 8;
+const RANK_SEED: u64 = 0xA3027;
+
+/// The skew-`s` request sequence: prompt, seed and steps all derive
+/// from the sampled popularity rank, so two draws of the same rank are
+/// exact-key duplicates and distinct ranks never collide.
+fn requests(skew: f64, n: usize) -> Vec<GenerationRequest> {
+    let zipf = ZipfPrompts { skew, catalog: CATALOG };
+    zipf.ranks(n, RANK_SEED)
+        .into_iter()
+        .map(|rank| {
+            GenerationRequest::new(prompts::TABLE2[rank % prompts::TABLE2.len()])
+                .steps(STEPS)
+                .scheduler(SchedulerKind::Ddim)
+                .seed(rank as u64)
+                .decode(false)
+        })
+        .collect()
+}
+
+struct RunOutcome {
+    /// Outputs in submission order (delivery per logical request).
+    outputs: Vec<GenerationOutput>,
+    /// UNet evals actually executed (hits and joins cost zero).
+    physical_evals: u64,
+    /// Requests served without physical work (hits + dedup joins).
+    amortized: u64,
+    wall_ns: u64,
+}
+
+/// Submit the whole sequence, then wait for every delivery — the
+/// open-loop burst shape that gives in-flight dedup something to do.
+/// One worker, singleton batches: physical work is strictly serialized,
+/// so eval counts are a pure function of the key sequence.
+fn run(engine: &Arc<Engine>, reqs: &[GenerationRequest], cache: CacheConfig) -> RunOutcome {
+    let c = Coordinator::start(
+        Arc::clone(engine),
+        CoordinatorConfig { max_batch: 1, workers: 1, cache, ..CoordinatorConfig::default() },
+    );
+    let t0 = Instant::now();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|r| c.submit(r.clone()).expect("submit"))
+        .collect();
+    let mut outcome = RunOutcome {
+        outputs: Vec::with_capacity(tickets.len()),
+        physical_evals: 0,
+        amortized: 0,
+        wall_ns: 0,
+    };
+    for t in tickets {
+        let physical = matches!(t.cache_outcome(), None | Some(CacheOutcome::Miss));
+        let out = t.wait().expect("delivery");
+        if physical {
+            outcome.physical_evals += out.unet_evals as u64;
+        } else {
+            outcome.amortized += 1;
+        }
+        outcome.outputs.push(out);
+    }
+    outcome.wall_ns = t0.elapsed().as_nanos() as u64;
+    let stats = c.stats();
+    assert_eq!(stats.failed, 0, "amortized replay must not fail requests");
+    assert_eq!(stats.completed as usize, reqs.len(), "every logical request delivers");
+    c.shutdown();
+    outcome
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let n = if args.fast { 60 } else { 120 };
+    let engine = Arc::new(Engine::new(
+        Arc::new(ModelStack::synthetic()),
+        EngineConfig::default(),
+    ));
+    let amortized_cfg =
+        CacheConfig { request_cache: true, dedup: true, ..CacheConfig::default() };
+
+    let mut table = Table::new(&[
+        "skew",
+        "evals/req off",
+        "evals/req on",
+        "reduction",
+        "hit rate",
+        "wall ms on",
+    ]);
+    let mut evals_on = Vec::new();
+    let mut reduction_at_s11 = 0.0;
+    let mut hit_rate_s11 = 0.0;
+    let mut bitexact = true;
+    for &skew in &SKEWS {
+        let reqs = requests(skew, n);
+        let off = run(&engine, &reqs, CacheConfig::default());
+        let on = run(&engine, &reqs, amortized_cfg.clone());
+        assert_eq!(off.amortized, 0, "cache-off run cannot amortize");
+        // bit-exactness: every delivery — replayed, coalesced, or
+        // generated — matches the cache-off output for the same index
+        for (i, (a, b)) in off.outputs.iter().zip(&on.outputs).enumerate() {
+            let same = a.latent.len() == b.latent.len()
+                && a.latent.iter().zip(&b.latent).all(|(x, y)| x.to_bits() == y.to_bits())
+                && a.unet_evals == b.unet_evals
+                && a.plan_summary == b.plan_summary;
+            assert!(same, "skew {skew}: delivery {i} diverged from the cache-off run");
+            bitexact &= same;
+        }
+        let per_req_off = off.physical_evals as f64 / n as f64;
+        let per_req_on = on.physical_evals as f64 / n as f64;
+        let reduction = 1.0 - per_req_on / per_req_off;
+        let hit_rate = on.amortized as f64 / n as f64;
+        if skew == 1.1 {
+            reduction_at_s11 = reduction;
+            hit_rate_s11 = hit_rate;
+        }
+        evals_on.push(per_req_on);
+        table.row(&[
+            format!("{skew:.1}"),
+            format!("{per_req_off:.2}"),
+            format!("{per_req_on:.2}"),
+            format!("{:.1}%", reduction * 100.0),
+            format!("{:.1}%", hit_rate * 100.0),
+            format!("{:.2}", on.wall_ns as f64 / 1e6),
+        ]);
+    }
+    let monotone = evals_on.windows(2).all(|w| w[1] <= w[0] + 1e-9);
+
+    println!(
+        "\nGuidance amortization — Zipf prompt mix, catalog {CATALOG}, {n} requests, \
+         {STEPS} steps, request-cache + dedup vs cache-off:\n"
+    );
+    table.print();
+    println!(
+        "\n(skew 1.1: {:.1}% fewer UNet evals/request, {:.1}% of requests amortized; \
+         evals/request monotone falling: {monotone})",
+        reduction_at_s11 * 100.0,
+        hit_rate_s11 * 100.0,
+    );
+    assert!(monotone, "evals/request must fall as the prompt mix concentrates");
+    assert!(
+        reduction_at_s11 >= 0.25,
+        "skew 1.1 must amortize >= 25% of UNet work, got {:.1}%",
+        reduction_at_s11 * 100.0
+    );
+
+    write_result_json(
+        "cache_amortization",
+        &Value::obj()
+            .with("n", n as i64)
+            .with("catalog", CATALOG as i64)
+            .with("steps", STEPS as i64)
+            .with("skews", SKEWS.to_vec())
+            .with("evals_per_request", evals_on.clone())
+            .with("reduction_at_s11", reduction_at_s11)
+            .with("hit_rate_s11", hit_rate_s11),
+    );
+    // the regression-gate view: deterministic counter ratios only,
+    // compared against ci/bench_baselines/BENCH_cache.json
+    write_result_json(
+        "BENCH_cache",
+        &Value::obj()
+            .with("reduction_at_s11", reduction_at_s11)
+            .with("hit_rate_s11", hit_rate_s11)
+            .with("monotone_evals", if monotone { 1i64 } else { 0i64 })
+            .with("bitexact", if bitexact { 1i64 } else { 0i64 }),
+    );
+}

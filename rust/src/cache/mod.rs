@@ -1,0 +1,570 @@
+//! Fleet-wide guidance amortization (DESIGN.md §13).
+//!
+//! The paper's saving is per-request: optimized steps skip that
+//! request's own uncond UNet pass. For a fixed negative prompt the
+//! uncond eps depends only on (scheduler, step, latent-trajectory
+//! statistics) — not on the conditional prompt — so concurrent
+//! requests can amortize each other's dual passes. Three tiers, each
+//! independently switchable and all off by default:
+//!
+//! - [`SharedUncondCache`] — cohort/replica-scoped uncond-eps sharing:
+//!   a Reuse-strategy sample consumes an eps recorded by a *different*
+//!   in-flight sample, guarded by a trajectory-divergence bound that
+//!   falls back to a local dual pass.
+//! - [`RequestCache`] — exact-match output replay: a bounded LRU keyed
+//!   on the full canonical request identity replays stored outputs
+//!   bit-exactly.
+//! - in-flight dedup (coordinator admission, keyed by
+//!   [`canonical_key`]) — identical concurrent requests coalesce into
+//!   one physical generation with fan-out delivery.
+//!
+//! House invariant: cache misses and cache-disabled runs stay
+//! bit-exact with the unshared engine (`tests/prop_cache.rs`).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::TomlDoc;
+use crate::engine::{GenerationOutput, GenerationRequest};
+use crate::error::{Error, Result};
+
+/// `[cache]` section: the three sharing tiers. Everything defaults to
+/// off — sharing changes failure and freshness semantics, so opting
+/// *in* is the explicit act (unlike `[telemetry]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    /// Exact-match request cache (bit-exact output replay).
+    pub request_cache: bool,
+    /// Request-cache LRU capacity (entries).
+    pub request_capacity: usize,
+    /// In-flight dedup: coalesce identical concurrent requests.
+    pub dedup: bool,
+    /// Cross-request uncond-eps sharing (continuous cohorts only).
+    pub shared_uncond: bool,
+    /// Divergence tolerance for the shared tier: a consumer whose
+    /// latent statistics drift further than this (relative to the
+    /// publisher's) falls back to its own dual pass.
+    pub shared_tolerance: f64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            request_cache: false,
+            request_capacity: 256,
+            dedup: false,
+            shared_uncond: false,
+            shared_tolerance: 0.25,
+        }
+    }
+}
+
+impl CacheConfig {
+    /// Any tier on?
+    pub fn enabled(&self) -> bool {
+        self.request_cache || self.dedup || self.shared_uncond
+    }
+
+    /// Do admissions need a canonical key (request cache or dedup)?
+    pub fn keyed(&self) -> bool {
+        self.request_cache || self.dedup
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.request_cache && self.request_capacity == 0 {
+            return Err(Error::Config("cache request_capacity must be >= 1".into()));
+        }
+        if self.shared_uncond
+            && !(self.shared_tolerance.is_finite() && self.shared_tolerance > 0.0)
+        {
+            return Err(Error::Config(format!(
+                "cache shared_tolerance {} must be finite and > 0",
+                self.shared_tolerance
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build from the `[cache]` TOML section (missing keys keep
+    /// defaults). Knobs without their enabling switch are an operator
+    /// error, not a silent no-op (mirroring `[telemetry]`/`[guidance]`).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = CacheConfig::default();
+        if let Some(v) = doc.get("cache", "request_cache") {
+            cfg.request_cache = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("cache request_cache must be bool".into()))?;
+        }
+        if let Some(v) = doc.get("cache", "dedup") {
+            cfg.dedup =
+                v.as_bool().ok_or_else(|| Error::Config("cache dedup must be bool".into()))?;
+        }
+        if let Some(v) = doc.get("cache", "shared_uncond") {
+            cfg.shared_uncond = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("cache shared_uncond must be bool".into()))?;
+        }
+        match doc.get("cache", "request_capacity") {
+            Some(v) if cfg.request_cache => {
+                cfg.request_capacity = v
+                    .as_usize()
+                    .ok_or_else(|| Error::Config("cache request_capacity must be int".into()))?;
+            }
+            Some(_) => {
+                return Err(Error::Config(
+                    "cache request_capacity requires request_cache = true".into(),
+                ));
+            }
+            None => {}
+        }
+        match doc.get("cache", "shared_tolerance") {
+            Some(v) if cfg.shared_uncond => {
+                cfg.shared_tolerance = v
+                    .as_f64()
+                    .ok_or_else(|| Error::Config("cache shared_tolerance must be number".into()))?;
+            }
+            Some(_) => {
+                return Err(Error::Config(
+                    "cache shared_tolerance requires shared_uncond = true".into(),
+                ));
+            }
+            None => {}
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// How an admission was served by the cache layer — echoed on the wire
+/// as `"cache":"hit|dedup|miss"`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// No reusable state: a physical generation ran (or will run).
+    Miss,
+    /// Served bit-exactly from the request cache.
+    Hit,
+    /// Coalesced onto an identical in-flight generation.
+    Dedup,
+}
+
+impl CacheOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CacheOutcome::Miss => "miss",
+            CacheOutcome::Hit => "hit",
+            CacheOutcome::Dedup => "dedup",
+        }
+    }
+}
+
+/// Canonical request-cache / dedup key: the full generation identity.
+///
+/// The issue's minimum is prompt × seed × plan digest × scheduler ×
+/// steps × size — but the plan *summary* alone is ambiguous (`Hold`
+/// and `Extrapolate` both print `R`; every adaptive request summarizes
+/// all-dual; the guidance scale is absent), so the key also folds in
+/// the raw strategy/schedule/adaptive triple and the exact scale bits.
+/// Two requests share a key only if the engine would produce
+/// bit-identical outputs for them.
+pub fn canonical_key(req: &GenerationRequest) -> Result<String> {
+    let plan = req.plan()?;
+    Ok(format!(
+        "prompt={:?} seed={} steps={} sched={} scale={:08x} plan={} strategy={:?} \
+         schedule={:?} adaptive={:?} decode={}",
+        req.prompt,
+        req.seed,
+        req.steps,
+        req.scheduler.name(),
+        req.guidance_scale.to_bits(),
+        plan.summary(),
+        req.strategy,
+        req.schedule,
+        req.adaptive,
+        req.decode,
+    ))
+}
+
+/// Counters snapshot for the exact-match request cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    /// Approximate resident payload bytes (latent f32s + RGB pixels).
+    pub bytes: u64,
+}
+
+struct RequestLru {
+    map: HashMap<String, GenerationOutput>,
+    /// LRU order, least-recent first.
+    order: VecDeque<String>,
+}
+
+/// Exact-match output cache: bounded LRU of completed
+/// [`GenerationOutput`]s keyed by [`canonical_key`]. Replays are
+/// clones of the stored output — bit-exact by construction.
+pub struct RequestCache {
+    capacity: usize,
+    inner: Mutex<RequestLru>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// Approximate payload size of one cached output.
+fn entry_bytes(out: &GenerationOutput) -> u64 {
+    let latent = (out.latent.len() * 4) as u64;
+    let image = out.image.as_ref().map_or(0, |i| (i.width * i.height * 3) as u64);
+    latent + image
+}
+
+impl RequestCache {
+    pub fn new(capacity: usize) -> RequestCache {
+        RequestCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(RequestLru { map: HashMap::new(), order: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up a completed output; a hit refreshes LRU recency.
+    pub fn get(&self, key: &str) -> Option<GenerationOutput> {
+        let mut lru = self.inner.lock().expect("request cache lock");
+        match lru.map.get(key).cloned() {
+            Some(out) => {
+                if let Some(pos) = lru.order.iter().position(|k| k == key) {
+                    let k = lru.order.remove(pos).expect("lru position valid");
+                    lru.order.push_back(k);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(out)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a completed output, evicting least-recent entries past
+    /// capacity.
+    pub fn insert(&self, key: String, out: GenerationOutput) {
+        let mut lru = self.inner.lock().expect("request cache lock");
+        let added = entry_bytes(&out);
+        if let Some(prev) = lru.map.insert(key.clone(), out) {
+            // replacing an identical key: refresh recency, swap bytes
+            self.bytes.fetch_sub(entry_bytes(&prev), Ordering::Relaxed);
+            if let Some(pos) = lru.order.iter().position(|k| *k == key) {
+                lru.order.remove(pos);
+            }
+        }
+        lru.order.push_back(key);
+        self.bytes.fetch_add(added, Ordering::Relaxed);
+        while lru.map.len() > self.capacity {
+            let oldest = lru.order.pop_front().expect("over-capacity lru has entries");
+            if let Some(evicted) = lru.map.remove(&oldest) {
+                self.bytes.fetch_sub(entry_bytes(&evicted), Ordering::Relaxed);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> RequestCacheStats {
+        let entries = self.inner.lock().expect("request cache lock").map.len();
+        RequestCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Key for one shared uncond-eps entry. The uncond pass conditions on
+/// the *negative* prompt only, so the conditional prompt is absent by
+/// design; what remains is the denoising position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SharedKey {
+    /// Scheduler family — different schedulers visit different sigma
+    /// trajectories for the same step index.
+    pub scheduler: &'static str,
+    /// Step index within the trajectory.
+    pub step: usize,
+    /// Model timestep quantized to 1/16 units (the sigma bucket): two
+    /// requests with different step counts share entries only when
+    /// they land in the same bucket.
+    pub sigma_mq: i64,
+    /// Hash of the negative prompt. The stack serves a single fixed
+    /// (empty) negative prompt today, so this is constant — the key
+    /// dimension exists so per-request negatives can never alias.
+    pub neg_hash: u64,
+}
+
+impl SharedKey {
+    pub fn new(scheduler: &'static str, step: usize, model_timestep: f32) -> SharedKey {
+        SharedKey {
+            scheduler,
+            step,
+            sigma_mq: (model_timestep as f64 * 16.0).round() as i64,
+            neg_hash: 0,
+        }
+    }
+}
+
+/// Counters snapshot for the shared uncond tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SharedCacheStats {
+    pub published: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Lookups that found an entry but failed the divergence bound.
+    pub rejected: u64,
+    pub entries: usize,
+}
+
+struct SharedEntry {
+    eps: Vec<f32>,
+    /// Publisher latent statistics at record time — the staleness bound
+    /// compares the consumer's trajectory against these.
+    mean: f32,
+    std: f32,
+}
+
+struct SharedInner {
+    map: HashMap<SharedKey, SharedEntry>,
+    order: VecDeque<SharedKey>,
+}
+
+/// Cross-request uncond-eps cache. Publishers are dual-guidance steps
+/// (any strategy); consumers are Reuse-strategy samples whose latent
+/// statistics stay within `tolerance` of the publisher's — beyond it
+/// the lookup is rejected and the consumer pays its own dual pass.
+pub struct SharedUncondCache {
+    tolerance: f64,
+    capacity: usize,
+    inner: Mutex<SharedInner>,
+    published: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// Mean / standard deviation of a latent tensor — the trajectory
+/// statistic the divergence bound is expressed over.
+fn latent_stats(x: &[f32]) -> (f32, f32) {
+    if x.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = x.len() as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    (mean as f32, var.sqrt() as f32)
+}
+
+impl SharedUncondCache {
+    pub fn new(tolerance: f64) -> SharedUncondCache {
+        SharedUncondCache {
+            tolerance,
+            capacity: 4096,
+            inner: Mutex::new(SharedInner { map: HashMap::new(), order: VecDeque::new() }),
+            published: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn tolerance(&self) -> f64 {
+        self.tolerance
+    }
+
+    /// Record the uncond eps a dual step just computed, tagged with the
+    /// publisher's latent statistics. Later publishes overwrite —
+    /// fresher trajectories serve consumers better.
+    pub fn publish(&self, key: SharedKey, latent: &[f32], eps: &[f32]) {
+        let (mean, std) = latent_stats(latent);
+        let mut inner = self.inner.lock().expect("shared cache lock");
+        if inner.map.insert(key, SharedEntry { eps: eps.to_vec(), mean, std }).is_none() {
+            inner.order.push_back(key);
+            while inner.map.len() > self.capacity {
+                let oldest = inner.order.pop_front().expect("over-capacity cache has entries");
+                inner.map.remove(&oldest);
+            }
+        }
+        self.published.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fetch a shared eps for a consumer at `latent`, applying the
+    /// divergence bound: relative distance of (mean, std) from the
+    /// publisher's statistics must stay within the tolerance.
+    pub fn consume(&self, key: &SharedKey, latent: &[f32]) -> Option<Vec<f32>> {
+        let inner = self.inner.lock().expect("shared cache lock");
+        let Some(entry) = inner.map.get(key) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        if entry.eps.len() != latent.len() {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let (mean, std) = latent_stats(latent);
+        let scale = (entry.std.abs() as f64).max(1e-3);
+        let divergence =
+            ((mean - entry.mean).abs() as f64 + (std - entry.std).abs() as f64) / scale;
+        if divergence > self.tolerance {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(entry.eps.clone())
+    }
+
+    pub fn stats(&self) -> SharedCacheStats {
+        let entries = self.inner.lock().expect("shared cache lock").map.len();
+        SharedCacheStats {
+            published: self.published.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::guidance::{GuidanceStrategy, ReuseKind};
+
+    fn out(latent: Vec<f32>) -> GenerationOutput {
+        GenerationOutput {
+            latent,
+            image: None,
+            wall_ms: 0.0,
+            breakdown: Default::default(),
+            unet_evals: 0,
+            steps: 1,
+            strategy: GuidanceStrategy::CondOnly,
+            plan_summary: "1D".into(),
+        }
+    }
+
+    #[test]
+    fn config_defaults_off_and_validates() {
+        let cfg = CacheConfig::default();
+        assert!(!cfg.enabled());
+        assert!(!cfg.keyed());
+        cfg.validate().unwrap();
+        let mut bad = CacheConfig { request_cache: true, request_capacity: 0, ..cfg.clone() };
+        assert!(bad.validate().is_err());
+        bad = CacheConfig { shared_uncond: true, shared_tolerance: 0.0, ..cfg };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn config_from_toml_and_orphan_knobs() {
+        let doc = TomlDoc::parse(
+            "[cache]\nrequest_cache = true\nrequest_capacity = 16\ndedup = true\n\
+             shared_uncond = true\nshared_tolerance = 0.5\n",
+        )
+        .unwrap();
+        let cfg = CacheConfig::from_toml(&doc).unwrap();
+        assert!(cfg.request_cache && cfg.dedup && cfg.shared_uncond);
+        assert_eq!(cfg.request_capacity, 16);
+        assert!((cfg.shared_tolerance - 0.5).abs() < 1e-12);
+        // knobs without their switch are operator errors
+        let doc = TomlDoc::parse("[cache]\nrequest_capacity = 16\n").unwrap();
+        assert!(CacheConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[cache]\nshared_tolerance = 0.5\n").unwrap();
+        assert!(CacheConfig::from_toml(&doc).is_err());
+        // missing section keeps the all-off default
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(CacheConfig::from_toml(&doc).unwrap(), CacheConfig::default());
+    }
+
+    #[test]
+    fn canonical_key_separates_lookalike_requests() {
+        use crate::guidance::WindowSpec;
+        let base = || {
+            GenerationRequest::new("a castle at dusk")
+                .steps(8)
+                .decode(false)
+                .selective(WindowSpec::last(0.5))
+                .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 })
+        };
+        let a = canonical_key(&base()).unwrap();
+        // identical requests agree
+        assert_eq!(a, canonical_key(&base()).unwrap());
+        // the plan summary alone would NOT separate these: same R-window
+        let b = canonical_key(&base().strategy(GuidanceStrategy::Reuse {
+            kind: ReuseKind::Extrapolate,
+            refresh_every: 0,
+        }))
+        .unwrap();
+        assert_ne!(a, b);
+        assert_ne!(a, canonical_key(&base().seed(7)).unwrap());
+        assert_ne!(a, canonical_key(&base().guidance_scale(7.0)).unwrap());
+        assert_ne!(a, canonical_key(&base().decode(true)).unwrap());
+    }
+
+    #[test]
+    fn request_cache_lru_and_counters() {
+        let cache = RequestCache::new(2);
+        cache.insert("a".into(), out(vec![0.0; 4]));
+        cache.insert("b".into(), out(vec![0.0; 8]));
+        assert_eq!(cache.stats().bytes, 48);
+        assert!(cache.get("a").is_some()); // refreshes "a"
+        cache.insert("c".into(), out(vec![0.0; 2])); // evicts "b" (least recent)
+        assert!(cache.get("b").is_none());
+        assert!(cache.get("a").is_some());
+        assert!(cache.get("c").is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (3, 1, 1, 2));
+        assert_eq!(s.bytes, 16 + 8);
+    }
+
+    #[test]
+    fn shared_cache_divergence_bound() {
+        let cache = SharedUncondCache::new(0.25);
+        let key = SharedKey::new("ddim", 3, 961.0);
+        let publisher: Vec<f32> = (0..32).map(|i| (i as f32 / 31.0) * 2.0 - 1.0).collect();
+        assert!(cache.consume(&key, &publisher).is_none()); // cold
+        cache.publish(key, &publisher, &[0.5; 32]);
+        // same trajectory: within tolerance
+        assert_eq!(cache.consume(&key, &publisher), Some(vec![0.5; 32]));
+        // wildly divergent consumer: rejected, falls back to dual
+        let divergent = vec![100.0; 32];
+        assert!(cache.consume(&key, &divergent).is_none());
+        // different sigma bucket is a distinct key
+        let other = SharedKey::new("ddim", 3, 900.0);
+        assert!(cache.consume(&other, &publisher).is_none());
+        let s = cache.stats();
+        assert_eq!((s.published, s.hits, s.misses, s.rejected, s.entries), (1, 1, 2, 1, 1));
+    }
+
+    #[test]
+    fn shared_key_quantizes_sigma() {
+        assert_eq!(SharedKey::new("pndm", 0, 1.0).sigma_mq, 16);
+        // buckets are 1/16 of a model timestep wide
+        assert_eq!(SharedKey::new("pndm", 0, 1.03).sigma_mq, 16);
+        assert_ne!(SharedKey::new("pndm", 0, 1.10).sigma_mq, 16);
+    }
+
+    #[test]
+    fn outcome_labels() {
+        assert_eq!(CacheOutcome::Miss.label(), "miss");
+        assert_eq!(CacheOutcome::Hit.label(), "hit");
+        assert_eq!(CacheOutcome::Dedup.label(), "dedup");
+    }
+}

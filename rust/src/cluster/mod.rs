@@ -47,11 +47,13 @@ mod router;
 
 pub use router::{RoutePolicy, Router};
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cache::{canonical_key, CacheConfig};
 use crate::config::{ServerConfig, TomlDoc};
 use crate::coordinator::{
     BatchMode, Coordinator, CoordinatorConfig, CoordinatorStats, Submit, Ticket,
@@ -110,6 +112,9 @@ impl ReplicaSpec {
             slot_budget: self.slot_budget,
             workers: self.workers,
             batch_wait: Duration::from_millis(self.batch_wait_ms),
+            // the cache tiers are cluster-scoped, not a replica-shape
+            // concern: ReplicaSet::start_inner injects ClusterConfig.cache
+            cache: CacheConfig::default(),
         }
     }
 
@@ -148,6 +153,10 @@ pub struct ClusterConfig {
     /// Seed for the router's two-choice sampling: placements are a pure
     /// function of this seed and the submission sequence.
     pub route_seed: u64,
+    /// Amortization tiers (DESIGN.md §13), instantiated **per replica**
+    /// (request cache + shared uncond cache are replica-scoped; the
+    /// router keeps identical keys together via cache affinity).
+    pub cache: CacheConfig,
 }
 
 impl Default for ClusterConfig {
@@ -156,6 +165,7 @@ impl Default for ClusterConfig {
             replicas: vec![ReplicaSpec::default()],
             route: RoutePolicy::PlanCost,
             route_seed: 0,
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -266,7 +276,12 @@ impl ClusterConfig {
                 }
             }
         }
-        let cfg = ClusterConfig { replicas, route, route_seed };
+        let cfg = ClusterConfig {
+            replicas,
+            route,
+            route_seed,
+            cache: CacheConfig::from_toml(doc)?,
+        };
         cfg.validate()?;
         Ok(Some(cfg))
     }
@@ -307,6 +322,40 @@ struct ClusterJob {
     /// is rewritten to the *remaining* budget on every requeue; this is
     /// the immutable total it is computed from.
     original_deadline: Option<Duration>,
+    /// Canonical cache key (Some when a keyed cache tier is on): the
+    /// router's affinity signal — identical keys prefer the replica
+    /// whose cache already holds (or is computing) the entry.
+    key: Option<String>,
+}
+
+/// Bounded key→replica affinity (insertion-order eviction): routing
+/// identical keys to the same replica is what makes per-replica request
+/// caches and in-flight dedup effective without a global shared cache.
+struct Affinity {
+    cap: usize,
+    map: HashMap<String, usize>,
+    order: VecDeque<String>,
+}
+
+impl Affinity {
+    fn new(cap: usize) -> Affinity {
+        Affinity { cap: cap.max(1), map: HashMap::new(), order: VecDeque::new() }
+    }
+
+    fn get(&self, key: &str) -> Option<usize> {
+        self.map.get(key).copied()
+    }
+
+    fn note(&mut self, key: &str, replica: usize) {
+        if self.map.insert(key.to_string(), replica).is_none() {
+            self.order.push_back(key.to_string());
+            while self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
 }
 
 struct RelayItem {
@@ -353,19 +402,35 @@ struct Core {
     /// span terminals: replica coordinators run with non-terminal sinks
     /// so a requeued failover still ends in exactly one terminal event.
     metrics: Option<ClusterMetrics>,
+    /// Cache-key → replica affinity; Some only when a keyed cache tier
+    /// is configured.
+    affinity: Option<Mutex<Affinity>>,
 }
 
 impl Core {
     /// Route + enqueue one admitted job, retrying across replicas until
     /// one accepts; on total failure the job is handed back with the
-    /// error so the caller decides who answers the client.
+    /// error so the caller decides who answers the client. Returns the
+    /// replica-side cache outcome (hit/dedup/miss), known synchronously
+    /// at enqueue time.
     fn dispatch(
         &self,
         mut job: ClusterJob,
         requeued_from: Option<usize>,
-    ) -> std::result::Result<(), (ClusterJob, Error)> {
+    ) -> std::result::Result<Option<crate::cache::CacheOutcome>, (ClusterJob, Error)> {
         loop {
-            let target = {
+            // cache affinity first: an identical key prefers the replica
+            // whose request cache / in-flight dedup already knows it —
+            // the router only decides when affinity can't (cold key, or
+            // the preferred replica is unhealthy/excluded)
+            let affine = match (&self.affinity, &job.key) {
+                (Some(aff), Some(k)) => aff.lock().unwrap().get(k).filter(|&rid| {
+                    self.replicas[rid].healthy.load(Ordering::SeqCst)
+                        && !job.excluded.contains(&rid)
+                }),
+                _ => None,
+            };
+            let target = affine.or_else(|| {
                 let loads: Vec<Option<u64>> = self
                     .replicas
                     .iter()
@@ -378,7 +443,7 @@ impl Core {
                     })
                     .collect();
                 self.router.lock().unwrap().place(&loads)
-            };
+            });
             let Some(id) = target else {
                 return Err((
                     job,
@@ -396,6 +461,10 @@ impl Core {
                     if let Some(m) = &self.metrics {
                         m.on_placed(job.meta.trace, id, outstanding, requeued_from);
                     }
+                    if let (Some(aff), Some(k)) = (&self.affinity, &job.key) {
+                        aff.lock().unwrap().note(k, id);
+                    }
+                    let outcome = inner.cache_outcome();
                     job.placed.lock().unwrap().push(id);
                     let item = RelayItem { inner, job };
                     let failed_item = {
@@ -406,7 +475,7 @@ impl Core {
                         }
                     };
                     match failed_item {
-                        None => return Ok(()),
+                        None => return Ok(outcome),
                         Some(RelayItem { inner, job: mut back }) => {
                             // relay already closed (shutdown race): undo
                             // the reservation, drop the inner ticket (the
@@ -503,12 +572,13 @@ impl ReplicaSet {
             let sink = telemetry
                 .as_ref()
                 .map(|t| CoordSink::new(t, &format!("replica{id}"), false));
-            let coordinator = Coordinator::start_full(
-                Arc::clone(&engine),
-                spec.coordinator_config(),
-                qos.clone(),
-                sink,
-            );
+            // every replica gets its own instance of the cluster's cache
+            // tiers (replica-scoped caches + affinity routing, not one
+            // global cache with cross-replica contention)
+            let mut coord_cfg = spec.coordinator_config();
+            coord_cfg.cache = config.cache.clone();
+            let coordinator =
+                Coordinator::start_full(Arc::clone(&engine), coord_cfg, qos.clone(), sink);
             let (tx, rx) = mpsc::channel::<RelayItem>();
             replicas.push(Replica {
                 id,
@@ -540,6 +610,10 @@ impl ReplicaSet {
             metrics: telemetry
                 .as_ref()
                 .map(|t| ClusterMetrics::new(t, config.replicas.len())),
+            affinity: config
+                .cache
+                .keyed()
+                .then(|| Mutex::new(Affinity::new(1024))),
         });
         let relays = relay_rxs
             .into_iter()
@@ -639,6 +713,13 @@ impl ReplicaSet {
         }
         let (tx, rx) = mpsc::channel();
         let placed = Arc::new(Mutex::new(Vec::new()));
+        // the canonical key doubles as the affinity signal; plan() just
+        // succeeded above, so key derivation cannot fail here
+        let key = core
+            .affinity
+            .is_some()
+            .then(|| canonical_key(&req).ok())
+            .flatten();
         let job = ClusterJob {
             req,
             respond: tx,
@@ -647,13 +728,18 @@ impl ReplicaSet {
             placed: Arc::clone(&placed),
             submitted_at: Instant::now(),
             original_deadline: meta.deadline,
+            key,
             meta,
         };
         let trace = meta.trace;
         match core.dispatch(job, None) {
-            Ok(()) => {
+            Ok(outcome) => {
                 core.submitted.fetch_add(1, Ordering::Relaxed);
-                Ok((Ticket::from_rx(rx, trace), PlacementTrace { placed }))
+                let ticket = Ticket::from_rx(rx, trace);
+                if let Some(o) = outcome {
+                    let _ = ticket.outcome_cell().set(o);
+                }
+                Ok((ticket, PlacementTrace { placed }))
             }
             Err((job, e)) => {
                 drop(job);
@@ -725,6 +811,8 @@ impl ReplicaSet {
             queue_depth: core.pending.load(Ordering::Relaxed),
             queue_depth_max: core.pending_max.load(Ordering::Relaxed),
             outstanding_evals: replicas.iter().map(|r| r.outstanding_evals).sum(),
+            cache_hits: replicas.iter().map(|r| r.coordinator.cache_hits).sum(),
+            dedup_coalesced: replicas.iter().map(|r| r.coordinator.dedup_coalesced).sum(),
             batches: replicas.iter().map(|r| r.coordinator.batches).sum(),
             iterations: replicas.iter().map(|r| r.coordinator.iterations).sum(),
             joins: replicas.iter().map(|r| r.coordinator.joins).sum(),
@@ -856,7 +944,9 @@ fn relay_outcome(core: &Arc<Core>, id: usize, job: ClusterJob, result: Result<Ge
             // survivors unless the whole cluster is going down. The
             // excluded list keeps a poison request from ping-ponging:
             // after it has failed on every replica once, the error
-            // surfaces to the client.
+            // surfaces to the client. `Error::Engine` (typed per-sample
+            // failure, e.g. cold shared-reuse cache) is deliberately
+            // NOT requeueable: it would fail identically anywhere.
             let requeueable =
                 matches!(&e, Error::Rejected { code: 503, .. } | Error::Coordinator(_));
             if requeueable && !core.draining.load(Ordering::SeqCst) {
@@ -893,7 +983,7 @@ fn relay_outcome(core: &Arc<Core>, id: usize, job: ClusterJob, result: Result<Ge
                 // inside dispatch)
                 core.requeued.fetch_add(1, Ordering::Relaxed);
                 match core.dispatch(job, Some(id)) {
-                    Ok(()) => {}
+                    Ok(_) => {}
                     Err((job, err)) => {
                         core.requeued.fetch_sub(1, Ordering::Relaxed);
                         core.failed.fetch_add(1, Ordering::Relaxed);
@@ -961,6 +1051,10 @@ pub struct ClusterStats {
     pub queue_depth_max: u64,
     /// Summed outstanding plan-compiled UNet evals across replicas.
     pub outstanding_evals: u64,
+    /// Summed replica request-cache hits (served without UNet work).
+    pub cache_hits: u64,
+    /// Summed replica dedup joins (coalesced onto in-flight identicals).
+    pub dedup_coalesced: u64,
     /// Summed fixed-mode batches across replicas.
     pub batches: u64,
     /// Summed continuous-mode iterations across replicas.

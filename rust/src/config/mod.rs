@@ -50,6 +50,18 @@ impl DualStrategy {
     }
 }
 
+/// Validate a signed seed value from any config surface (TOML, wire,
+/// CLI, workload spec). Seeds are unsigned on the engine side; a
+/// negative literal used to wrap silently through `as u64`, turning a
+/// typo into a valid-looking 18-quintillion seed. Every surface now
+/// routes through this one check so the rejection text matches.
+pub fn seed_from_i64(v: i64) -> std::result::Result<u64, String> {
+    if v < 0 {
+        return Err(format!("seed must be >= 0, got {v}"));
+    }
+    Ok(v as u64)
+}
+
 /// Engine-level defaults applied to requests that don't override them.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -201,8 +213,8 @@ impl EngineConfig {
                 v.as_bool().ok_or_else(|| Error::Config("decode_images must be bool".into()))?;
         }
         if let Some(v) = doc.get("engine", "seed") {
-            cfg.seed =
-                v.as_i64().ok_or_else(|| Error::Config("seed must be int".into()))? as u64;
+            let raw = v.as_i64().ok_or_else(|| Error::Config("seed must be int".into()))?;
+            cfg.seed = seed_from_i64(raw).map_err(Error::Config)?;
         }
         if let Some(v) = doc.get("engine", "dual_strategy") {
             cfg.dual_strategy = DualStrategy::parse(
@@ -450,6 +462,10 @@ pub struct RunConfig {
     /// `[telemetry]` section — enabled by default (see
     /// [`TelemetryConfig`]).
     pub telemetry: TelemetryConfig,
+    /// `[cache]` section — all tiers off by default (see
+    /// `cache::CacheConfig`): exact-match request cache, in-flight
+    /// dedup, and the cross-request shared uncond tier.
+    pub cache: crate::cache::CacheConfig,
 }
 
 impl RunConfig {
@@ -473,6 +489,7 @@ impl RunConfig {
             qos: QosConfig::from_toml(&doc)?,
             cluster,
             telemetry: TelemetryConfig::from_toml(&doc)?,
+            cache: crate::cache::CacheConfig::from_toml(&doc)?,
         })
     }
 }
@@ -746,6 +763,42 @@ ewma_alpha = 0.3
         assert!(RunConfig::from_str("[telemetry]\ntrace_capacity = 0\n").is_err());
         assert!(RunConfig::from_str("[telemetry]\nenabled = \"yes\"\n").is_err());
         assert!(RunConfig::from_str("[telemetry]\nmetrics_addr = 9090\n").is_err());
+    }
+
+    #[test]
+    fn cache_section() {
+        // default: every tier off, nothing keyed
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.cache, crate::cache::CacheConfig::default());
+        assert!(!cfg.cache.enabled());
+        let cfg = RunConfig::from_str(
+            "[cache]\nrequest_cache = true\nrequest_capacity = 64\ndedup = true\n",
+        )
+        .unwrap();
+        assert!(cfg.cache.request_cache && cfg.cache.dedup && !cfg.cache.shared_uncond);
+        assert_eq!(cfg.cache.request_capacity, 64);
+        assert!(cfg.cache.keyed());
+        // orphan knobs under a disabled switch are operator errors
+        assert!(RunConfig::from_str("[cache]\nrequest_capacity = 64\n").is_err());
+        assert!(RunConfig::from_str("[cache]\nshared_tolerance = 0.5\n").is_err());
+        // invalid values are structured config errors
+        assert!(RunConfig::from_str(
+            "[cache]\nrequest_cache = true\nrequest_capacity = 0\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_str("[cache]\ndedup = \"yes\"\n").is_err());
+    }
+
+    #[test]
+    fn seed_validation_rejects_negatives() {
+        assert_eq!(seed_from_i64(0), Ok(0));
+        assert_eq!(seed_from_i64(i64::MAX), Ok(i64::MAX as u64));
+        assert!(seed_from_i64(-1).unwrap_err().contains("-1"));
+        // the TOML surface routes through the same check: a negative
+        // seed is a structured error, not a silent two's-complement wrap
+        assert!(RunConfig::from_str("[engine]\nseed = -42\n").is_err());
+        let cfg = RunConfig::from_str("[engine]\nseed = 42\n").unwrap();
+        assert_eq!(cfg.engine.seed, 42);
     }
 
     #[test]

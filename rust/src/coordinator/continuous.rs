@@ -24,6 +24,7 @@
 
 use std::sync::Arc;
 
+use crate::cache::SharedUncondCache;
 use crate::engine::{Engine, GenerationOutput, GenerationRequest, SampleState};
 use crate::error::{Error, Result};
 use crate::telemetry::BatcherMetrics;
@@ -37,6 +38,11 @@ pub struct ContinuousBatcher {
     next_id: u64,
     /// Optional slot-occupancy / join / retire metrics (DESIGN.md §12).
     telemetry: Option<BatcherMetrics>,
+    /// Optional cross-request uncond-eps tier (DESIGN.md §13): samples
+    /// are begun with the shared plan rule and stepped against the
+    /// cache. `None` keeps the batcher bit-exact with the unshared
+    /// engine.
+    shared: Option<Arc<SharedUncondCache>>,
 }
 
 /// What one cohort iteration produced.
@@ -45,6 +51,10 @@ pub struct StepOutcome {
     /// Samples that completed this iteration, with their outputs, keyed
     /// by the id [`ContinuousBatcher::try_admit`] handed out.
     pub retired: Vec<(u64, GenerationOutput)>,
+    /// Samples that hit a typed per-sample engine failure (cold reuse
+    /// cache under the shared tier) — removed from the cohort without
+    /// outputs; the cohort itself keeps running.
+    pub failed: Vec<(u64, Error)>,
     /// UNet slots the iteration consumed (always <= the budget).
     pub slots_used: usize,
     /// Cohort size during the iteration.
@@ -67,6 +77,7 @@ impl ContinuousBatcher {
             states: Vec::new(),
             next_id: 0,
             telemetry: None,
+            shared: None,
         })
     }
 
@@ -75,6 +86,14 @@ impl ContinuousBatcher {
     /// one construction path.
     pub fn with_telemetry(mut self, metrics: BatcherMetrics) -> ContinuousBatcher {
         self.telemetry = Some(metrics);
+        self
+    }
+
+    /// Attach the cross-request uncond-eps tier: admissions switch to
+    /// [`Engine::begin_shared`] and iterations to
+    /// [`Engine::step_batch_shared`].
+    pub fn with_shared_cache(mut self, cache: Arc<SharedUncondCache>) -> ContinuousBatcher {
+        self.shared = Some(cache);
         self
     }
 
@@ -110,10 +129,19 @@ impl ContinuousBatcher {
     /// headroom; returns the sample's id, or `None` when it must wait for
     /// a later iteration boundary.
     pub fn try_admit(&mut self, req: &GenerationRequest) -> Result<Option<u64>> {
-        if Self::admission_cost(req)? > self.headroom() {
+        // shared-tier plans can have a lower peak (no forced cold-cache
+        // dual), so admission prices the plan that will actually run
+        let cost = match &self.shared {
+            Some(_) => req.plan_shared()?.peak_remaining_cost(0),
+            None => Self::admission_cost(req)?,
+        };
+        if cost > self.headroom() {
             return Ok(None);
         }
-        let state = self.engine.begin(req)?;
+        let state = match &self.shared {
+            Some(_) => self.engine.begin_shared(req)?,
+            None => self.engine.begin(req)?,
+        };
         let id = self.next_id;
         self.next_id += 1;
         self.ids.push(id);
@@ -128,7 +156,7 @@ impl ContinuousBatcher {
     /// that completed. The per-iteration slot usage is invariantly within
     /// the budget (admission reserves peak remaining costs).
     pub fn step(&mut self) -> Result<StepOutcome> {
-        let report = self.engine.step_batch(&mut self.states)?;
+        let report = self.engine.step_batch_shared(&mut self.states, self.shared.as_deref())?;
         debug_assert!(
             report.slots_used <= self.slot_budget,
             "iteration used {} slots over budget {}",
@@ -136,9 +164,17 @@ impl ContinuousBatcher {
             self.slot_budget
         );
         let mut retired = Vec::new();
+        let mut failed = Vec::new();
         let mut i = 0;
         while i < self.states.len() {
-            if self.states[i].is_done() {
+            if let Some(reason) = self.states[i].failed_reason() {
+                // typed per-sample failure: drain without finish() — the
+                // sample never completed, only it fails, the cohort lives
+                let err = Error::Engine(reason.to_string());
+                self.states.swap_remove(i);
+                let id = self.ids.swap_remove(i);
+                failed.push((id, err));
+            } else if self.states[i].is_done() {
                 let state = self.states.swap_remove(i);
                 let id = self.ids.swap_remove(i);
                 retired.push((id, self.engine.finish(state)?));
@@ -154,7 +190,7 @@ impl ContinuousBatcher {
                 self.states.len(),
             );
         }
-        Ok(StepOutcome { retired, slots_used: report.slots_used, cohort: report.advanced })
+        Ok(StepOutcome { retired, failed, slots_used: report.slots_used, cohort: report.advanced })
     }
 }
 
@@ -204,6 +240,32 @@ mod tests {
             every: 4,
         });
         assert_eq!(ContinuousBatcher::admission_cost(&cadence).unwrap(), 2);
+    }
+
+    #[test]
+    fn shared_cache_failures_drain_without_poisoning() {
+        let mut cb = ContinuousBatcher::new(engine(), 4)
+            .unwrap()
+            .with_shared_cache(Arc::new(crate::cache::SharedUncondCache::new(0.25)));
+        // full-window reuse against an empty shared cache: typed failure
+        let cold = req(1.0)
+            .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 });
+        let cold_id = cb.try_admit(&cold).unwrap().unwrap();
+        let good_id = cb.try_admit(&req(0.0)).unwrap().unwrap();
+        let oc = cb.step().unwrap();
+        assert_eq!(oc.failed.len(), 1);
+        assert_eq!(oc.failed[0].0, cold_id);
+        assert!(matches!(oc.failed[0].1, Error::Engine(_)));
+        assert_eq!(cb.in_flight(), 1);
+        // the surviving cohort-mate runs to completion
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while cb.in_flight() > 0 {
+            done.extend(cb.step().unwrap().retired.into_iter().map(|(id, _)| id));
+            guard += 1;
+            assert!(guard < 32);
+        }
+        assert_eq!(done, vec![good_id]);
     }
 
     #[test]

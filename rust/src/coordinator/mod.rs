@@ -48,12 +48,13 @@ mod continuous;
 pub use batcher::{compatible, BatchClass};
 pub use continuous::{ContinuousBatcher, StepOutcome};
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::cache::{canonical_key, CacheConfig, CacheOutcome, RequestCache, SharedUncondCache};
 use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
@@ -107,6 +108,11 @@ pub struct CoordinatorConfig {
     /// dispatching (unused in continuous mode — admission happens at
     /// every iteration boundary).
     pub batch_wait: Duration,
+    /// Fleet-wide amortization tiers (DESIGN.md §13): exact-match
+    /// request cache, in-flight dedup, shared uncond-eps cache. All off
+    /// by default — misses and disabled runs are bit-exact with an
+    /// uncached coordinator.
+    pub cache: CacheConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -117,6 +123,7 @@ impl Default for CoordinatorConfig {
             slot_budget: 8,
             workers: 1,
             batch_wait: Duration::from_millis(2),
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -145,6 +152,12 @@ pub struct CoordinatorStats {
     /// queue but never executed (the cluster layer requeues these onto
     /// surviving replicas).
     pub drain_shed: u64,
+    /// Served straight from the exact-match request cache at admission
+    /// (no queue residency, no UNet work; counted in `completed` too).
+    pub cache_hits: u64,
+    /// Logical requests coalesced onto another in-flight identical
+    /// request (each still delivers — and is counted — individually).
+    pub dedup_coalesced: u64,
     /// Fixed mode: engine batches dispatched.
     pub batches: u64,
     /// Fixed mode: requests carried by those batches.
@@ -199,16 +212,156 @@ struct Job {
     meta: QosMeta,
     enqueued: Instant,
     respond: Sender<(Result<GenerationOutput>, Duration)>,
+    /// Canonical cache key (Some only when the cache layer is on and
+    /// this job is the *primary* of its key): the terminal site that
+    /// resolves this job must settle the key — store the output, drop
+    /// the in-flight marker, fan out to coalesced waiters.
+    key: Option<String>,
 }
 
 struct Batch {
     jobs: Vec<Job>,
 }
 
+/// One logical request coalesced onto an identical in-flight primary.
+/// Carries its own deadline accounting and trace span: delivery charges
+/// each waiter individually and closes each span exactly once.
+struct Waiter {
+    trace: Option<u64>,
+    meta: QosMeta,
+    enqueued: Instant,
+    respond: Sender<(Result<GenerationOutput>, Duration)>,
+}
+
+/// The coordinator's amortization tiers (DESIGN.md §13), interposed at
+/// admission — *after* QoS (every logical request is charged) and
+/// *before* queueing (hits and joins never occupy queue space).
+struct CacheLayer {
+    /// Exact-match replay of finished outputs (bit-exact, bounded LRU).
+    request: Option<RequestCache>,
+    /// Cross-request uncond-eps tier threaded into continuous cohorts.
+    shared: Option<Arc<SharedUncondCache>>,
+    /// Coalesce identical concurrent requests into one generation.
+    dedup: bool,
+    /// Keys with a primary generation in flight → their coalesced
+    /// waiters. Present-but-empty means "primary running, no joiners".
+    inflight: Mutex<HashMap<String, Vec<Waiter>>>,
+    hits: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+impl CacheLayer {
+    fn new(cfg: &CacheConfig) -> CacheLayer {
+        CacheLayer {
+            request: cfg
+                .request_cache
+                .then(|| RequestCache::new(cfg.request_capacity)),
+            shared: cfg
+                .shared_uncond
+                .then(|| Arc::new(SharedUncondCache::new(cfg.shared_tolerance))),
+            dedup: cfg.dedup,
+            inflight: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether admission needs a canonical key at all.
+    fn keyed(&self) -> bool {
+        self.request.is_some() || self.dedup
+    }
+}
+
+/// Settle a resolved primary's cache key: store an `Ok` output into the
+/// request cache **before** removing the in-flight marker (so a
+/// concurrent identical submit always finds one of the two — no
+/// miss-hole), then fan the result out to every coalesced waiter with
+/// per-waiter deadline accounting. Every terminal site for a [`Job`]
+/// with `key: Some(_)` must come through here exactly once.
+#[allow(clippy::too_many_arguments)]
+fn settle_key(
+    cache: &Option<Arc<CacheLayer>>,
+    key: &Option<String>,
+    outcome: std::result::Result<&GenerationOutput, &Error>,
+    stats: &Arc<Mutex<StatsInner>>,
+    pending: &Arc<AtomicU64>,
+    qos: &Option<Arc<dyn QosPolicy>>,
+    sink: &Option<Arc<CoordSink>>,
+) {
+    let (Some(cache), Some(key)) = (cache, key) else {
+        return;
+    };
+    if let (Ok(out), Some(rc)) = (outcome, &cache.request) {
+        rc.insert(key, out);
+    }
+    let waiters = cache
+        .inflight
+        .lock()
+        .unwrap()
+        .remove(key)
+        .unwrap_or_default();
+    let now = Instant::now();
+    for w in waiters {
+        let waited = now.saturating_duration_since(w.enqueued);
+        let prev = pending.fetch_sub(1, Ordering::Relaxed);
+        if expired(&w.meta, w.enqueued, now) {
+            // the generation outlived this waiter's deadline: its result
+            // is useless to *this* client even though the physical work
+            // completed — charge the miss to the waiter, not the primary
+            stats.lock().unwrap().deadline_missed += 1;
+            if let Some(q) = qos {
+                q.observe_deadline_miss();
+            }
+            if let Some(s) = sink {
+                s.on_expired(w.trace);
+                s.on_queue_depth(prev.saturating_sub(1) as usize);
+            }
+            let msg = format!(
+                "coalesced generation finished after this waiter's deadline \
+                 ({:.0} ms waited, deadline {:.0} ms)",
+                waited.as_secs_f64() * 1e3,
+                w.meta.deadline_ms().unwrap_or(0.0)
+            );
+            let _ = w.respond.send((Err(Error::DeadlineExceeded(msg)), waited));
+            continue;
+        }
+        match outcome {
+            Ok(out) => {
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.completed += 1;
+                    s.latency.record(waited);
+                }
+                if let Some(s) = sink {
+                    s.on_retired(w.trace, &out.plan_summary, waited.as_secs_f64() * 1e3);
+                    s.on_queue_depth(prev.saturating_sub(1) as usize);
+                }
+                let _ = w.respond.send((Ok(out.clone()), waited));
+            }
+            Err(e) => {
+                stats.lock().unwrap().failed += 1;
+                if let Some(s) = sink {
+                    s.on_shed(w.trace, "coalesced_failure");
+                    s.on_queue_depth(prev.saturating_sub(1) as usize);
+                }
+                let _ = w.respond.send((
+                    Err(Error::Coordinator(format!("coalesced generation failed: {e}"))),
+                    waited,
+                ));
+            }
+        }
+    }
+}
+
 /// Handle to one in-flight request.
 pub struct Ticket {
     rx: Receiver<(Result<GenerationOutput>, Duration)>,
     trace: Option<u64>,
+    /// How the cache layer disposed of this request (`None` until known
+    /// — and forever, when the cache layer is off). A shared write-once
+    /// cell because the cluster path only learns the outcome when the
+    /// dispatch thread reaches a replica, after the ticket was returned.
+    outcome: Arc<OnceLock<CacheOutcome>>,
 }
 
 impl Ticket {
@@ -219,7 +372,22 @@ impl Ticket {
         rx: Receiver<(Result<GenerationOutput>, Duration)>,
         trace: Option<u64>,
     ) -> Ticket {
-        Ticket { rx, trace }
+        Ticket { rx, trace, outcome: Arc::new(OnceLock::new()) }
+    }
+
+    /// The write-once cache-outcome slot — cloned by the server (to read
+    /// after `wait` consumes the ticket) and by the cluster dispatcher
+    /// (to copy the replica-side outcome across the relay).
+    pub(crate) fn outcome_cell(&self) -> Arc<OnceLock<CacheOutcome>> {
+        Arc::clone(&self.outcome)
+    }
+
+    /// How the cache layer disposed of this request: `Hit` (replayed
+    /// from the exact-match cache), `Dedup` (coalesced onto an identical
+    /// in-flight generation), `Miss` (generated, cache layer on), or
+    /// `None` (cache layer off, or — cluster path — not yet dispatched).
+    pub fn cache_outcome(&self) -> Option<CacheOutcome> {
+        self.outcome.get().copied()
     }
 
     /// Trace span id assigned at admission (None when telemetry is off) —
@@ -282,6 +450,8 @@ pub struct Coordinator {
     slot_budget: usize,
     /// Telemetry sink (DESIGN.md §12); None when observation is off.
     sink: Option<Arc<CoordSink>>,
+    /// Amortization tiers (DESIGN.md §13); None when every tier is off.
+    cache: Option<Arc<CacheLayer>>,
 }
 
 impl Coordinator {
@@ -327,6 +497,11 @@ impl Coordinator {
                 "continuous mode needs slot_budget >= 2 (a dual step costs 2 slots)"
             );
         }
+        config
+            .cache
+            .validate()
+            .expect("cache config validated at coordinator start");
+        let cache = config.cache.enabled().then(|| Arc::new(CacheLayer::new(&config.cache)));
         let sink = sink.map(Arc::new);
         if let Some(s) = &sink {
             // one registry for every layer this coordinator drives
@@ -367,10 +542,13 @@ impl Coordinator {
                     let draining = Arc::clone(&draining);
                     let max_batch = config.max_batch;
                     let wait = config.batch_wait;
+                    let qos = qos.clone();
                     let sink = sink.clone();
+                    let cache = cache.clone();
                     handles.push(std::thread::spawn(move || {
                         batcher_loop(
-                            submit_rx, batch_tx, max_batch, wait, stats, pending, draining, sink,
+                            submit_rx, batch_tx, max_batch, wait, stats, pending, draining, qos,
+                            sink, cache,
                         );
                     }));
                 }
@@ -384,11 +562,14 @@ impl Coordinator {
                     let draining = Arc::clone(&draining);
                     let qos = qos.clone();
                     let sink = sink.clone();
+                    let cache = cache.clone();
                     handles.push(
                         std::thread::Builder::new()
                             .name(format!("sgd-worker-{worker_id}"))
                             .spawn(move || {
-                                worker_loop(engine, batch_rx, stats, pending, draining, qos, sink)
+                                worker_loop(
+                                    engine, batch_rx, stats, pending, draining, qos, sink, cache,
+                                )
                             })
                             .expect("spawn worker"),
                     );
@@ -416,6 +597,7 @@ impl Coordinator {
                     let draining = Arc::clone(&draining);
                     let qos = qos.clone();
                     let sink = sink.clone();
+                    let cache = cache.clone();
                     let batcher_tm = batcher_tm.clone();
                     let budget = config.slot_budget;
                     handles.push(
@@ -424,7 +606,7 @@ impl Coordinator {
                             .spawn(move || {
                                 continuous_worker_loop(
                                     engine, submit_rx, backlog, budget, stats, pending, draining,
-                                    qos, sink, batcher_tm, worker_id,
+                                    qos, sink, cache, batcher_tm, worker_id,
                                 )
                             })
                             .expect("spawn continuous worker"),
@@ -446,7 +628,24 @@ impl Coordinator {
             mode: config.mode,
             slot_budget: config.slot_budget,
             sink,
+            cache,
         })
+    }
+
+    /// The shared uncond-eps cache this coordinator's cohorts publish
+    /// into, when the tier is on — the cluster layer reads it for
+    /// replica-affinity bookkeeping and tests for its hit counters.
+    pub fn shared_cache(&self) -> Option<&Arc<SharedUncondCache>> {
+        self.cache.as_ref().and_then(|c| c.shared.as_ref())
+    }
+
+    /// Exact-match request-cache counters (zeros when the tier is off).
+    pub fn request_cache_stats(&self) -> crate::cache::RequestCacheStats {
+        self.cache
+            .as_ref()
+            .and_then(|c| c.request.as_ref())
+            .map(|rc| rc.stats())
+            .unwrap_or_default()
     }
 
     /// The telemetry hub this coordinator reports into, when observed.
@@ -529,7 +728,70 @@ impl Coordinator {
         }
         let (tx, rx) = mpsc::channel();
         let trace = meta.trace;
-        let job = Job { req, meta, enqueued: Instant::now(), respond: tx };
+        // ---- amortization tiers (DESIGN.md §13), after QoS so every
+        // logical request is charged, before queueing so hits and joins
+        // never occupy queue space -----------------------------------
+        let mut key = None;
+        let outcome_cell = Arc::new(OnceLock::new());
+        if let Some(cache) = self.cache.as_ref().filter(|c| c.keyed()) {
+            let admitted_at = Instant::now();
+            let k = match canonical_key(&req) {
+                Ok(k) => k,
+                Err(e) => {
+                    self.pending.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(sink) = &self.sink {
+                        sink.on_shed(trace, "invalid");
+                    }
+                    return Err(e);
+                }
+            };
+            // exact-match replay: bit-exact output, span closes here
+            if let Some(out) = cache.request.as_ref().and_then(|rc| rc.get(&k)) {
+                cache.hits.fetch_add(1, Ordering::Relaxed);
+                self.submitted.fetch_add(1, Ordering::Relaxed);
+                let latency = admitted_at.elapsed();
+                {
+                    let mut s = self.stats.lock().unwrap();
+                    s.completed += 1;
+                    s.latency.record(latency);
+                }
+                let prev = self.pending.fetch_sub(1, Ordering::Relaxed);
+                if let Some(sink) = &self.sink {
+                    sink.on_cache_hit(trace);
+                    sink.on_retired(trace, &out.plan_summary, latency.as_secs_f64() * 1e3);
+                    sink.on_queue_depth(prev.saturating_sub(1) as usize);
+                }
+                let _ = outcome_cell.set(CacheOutcome::Hit);
+                let _ = tx.send((Ok(out), latency));
+                return Ok(Ticket { rx, trace, outcome: outcome_cell });
+            }
+            if cache.dedup {
+                let mut inflight = cache.inflight.lock().unwrap();
+                if let Some(waiters) = inflight.get_mut(&k) {
+                    // identical generation already in flight: coalesce.
+                    // The span stays open (DedupJoin is non-terminal)
+                    // until the primary's terminal site fans out.
+                    waiters.push(Waiter {
+                        trace,
+                        meta,
+                        enqueued: admitted_at,
+                        respond: tx,
+                    });
+                    drop(inflight);
+                    cache.coalesced.fetch_add(1, Ordering::Relaxed);
+                    self.submitted.fetch_add(1, Ordering::Relaxed);
+                    if let Some(sink) = &self.sink {
+                        sink.on_dedup_join(trace);
+                    }
+                    let _ = outcome_cell.set(CacheOutcome::Dedup);
+                    return Ok(Ticket { rx, trace, outcome: outcome_cell });
+                }
+                inflight.insert(k.clone(), Vec::new());
+            }
+            key = Some(k);
+            let _ = outcome_cell.set(CacheOutcome::Miss);
+        }
+        let job = Job { req, meta, enqueued: Instant::now(), respond: tx, key: key.clone() };
         let send_result = {
             let guard = self.submit_tx.lock().unwrap();
             match guard.as_ref() {
@@ -546,10 +808,15 @@ impl Coordinator {
                 // holds even on the shutdown race
                 sink.on_shed(trace, "queue_closed");
             }
+            // drop the just-inserted in-flight marker (a racing joiner
+            // may already be parked on it)
+            settle_key(
+                &self.cache, &key, Err(&e), &self.stats, &self.pending, &self.qos, &self.sink,
+            );
             return Err(e);
         }
         self.submitted.fetch_add(1, Ordering::Relaxed);
-        Ok(Ticket { rx, trace })
+        Ok(Ticket { rx, trace, outcome: outcome_cell })
     }
 
     /// Submit + wait.
@@ -578,6 +845,16 @@ impl Coordinator {
             rejected: self.rejected.load(Ordering::Relaxed),
             deadline_missed: inner.deadline_missed,
             drain_shed: inner.drain_shed,
+            cache_hits: self
+                .cache
+                .as_ref()
+                .map(|c| c.hits.load(Ordering::Relaxed))
+                .unwrap_or(0),
+            dedup_coalesced: self
+                .cache
+                .as_ref()
+                .map(|c| c.coalesced.load(Ordering::Relaxed))
+                .unwrap_or(0),
             batches: inner.batches,
             batched_requests: inner.batched_requests,
             slot_budget: if self.mode == BatchMode::Continuous {
@@ -654,11 +931,16 @@ impl Drop for Coordinator {
 
 /// Fail one queued-but-unadmitted job during shutdown drain with an
 /// explicit 503 — never execute it, never drop its ticket unresolved.
+/// A shed primary settles its cache key too: coalesced waiters resolve
+/// (as coalesced failures) instead of stranding on a dead marker.
+#[allow(clippy::too_many_arguments)]
 fn shed_draining(
     job: Job,
     stats: &Arc<Mutex<StatsInner>>,
     pending: &Arc<AtomicU64>,
+    qos: &Option<Arc<dyn QosPolicy>>,
     sink: &Option<Arc<CoordSink>>,
+    cache: &Option<Arc<CacheLayer>>,
 ) {
     let waited = job.enqueued.elapsed();
     stats.lock().unwrap().drain_shed += 1;
@@ -667,13 +949,12 @@ fn shed_draining(
         s.on_shed(job.meta.trace, "drain");
         s.on_queue_depth(prev.saturating_sub(1) as usize);
     }
-    let _ = job.respond.send((
-        Err(Error::Rejected {
-            code: 503,
-            reason: "coordinator shutting down — queued request shed before execution".into(),
-        }),
-        waited,
-    ));
+    let err = Error::Rejected {
+        code: 503,
+        reason: "coordinator shutting down — queued request shed before execution".into(),
+    };
+    settle_key(cache, &job.key, Err(&err), stats, pending, qos, sink);
+    let _ = job.respond.send((Err(err), waited));
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -685,7 +966,9 @@ fn batcher_loop(
     stats: Arc<Mutex<StatsInner>>,
     pending: Arc<AtomicU64>,
     draining: Arc<AtomicBool>,
+    qos: Option<Arc<dyn QosPolicy>>,
     sink: Option<Arc<CoordSink>>,
+    cache: Option<Arc<CacheLayer>>,
 ) {
     loop {
         // block for the first job
@@ -695,7 +978,7 @@ fn batcher_loop(
         };
         if draining.load(Ordering::SeqCst) {
             // shutdown: everything still queued is shed, not batched
-            shed_draining(first, &stats, &pending, &sink);
+            shed_draining(first, &stats, &pending, &qos, &sink, &cache);
             continue;
         }
         let class = BatchClass::of(&first.req);
@@ -745,6 +1028,7 @@ fn batcher_loop(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     engine: Arc<Engine>,
     batch_rx: Arc<Mutex<Receiver<Batch>>>,
@@ -753,6 +1037,7 @@ fn worker_loop(
     draining: Arc<AtomicBool>,
     qos: Option<Arc<dyn QosPolicy>>,
     sink: Option<Arc<CoordSink>>,
+    cache: Option<Arc<CacheLayer>>,
 ) {
     loop {
         let batch = {
@@ -767,7 +1052,7 @@ fn worker_loop(
         // UNet output nobody is waiting on
         if draining.load(Ordering::SeqCst) {
             for job in batch.jobs {
-                shed_draining(job, &stats, &pending, &sink);
+                shed_draining(job, &stats, &pending, &qos, &sink, &cache);
             }
             continue;
         }
@@ -778,26 +1063,8 @@ fn worker_loop(
             .jobs
             .into_iter()
             .partition(|j| !expired(&j.meta, j.enqueued, now));
-        if !stale.is_empty() {
-            let mut s = stats.lock().unwrap();
-            for job in stale {
-                let waited = job.enqueued.elapsed();
-                s.deadline_missed += 1;
-                if let Some(q) = &qos {
-                    q.observe_deadline_miss();
-                }
-                let prev = pending.fetch_sub(1, Ordering::Relaxed);
-                if let Some(sk) = &sink {
-                    sk.on_expired(job.meta.trace);
-                    sk.on_queue_depth(prev.saturating_sub(1) as usize);
-                }
-                let msg = format!(
-                    "expired in queue after {:.0} ms (deadline {:.0} ms)",
-                    waited.as_secs_f64() * 1e3,
-                    job.meta.deadline_ms().unwrap_or(0.0)
-                );
-                let _ = job.respond.send((Err(Error::DeadlineExceeded(msg)), waited));
-            }
+        for job in stale {
+            fail_expired(job, &stats, &pending, &qos, &sink, &cache);
         }
         if live.is_empty() {
             continue;
@@ -821,11 +1088,13 @@ fn worker_loop(
                         / outputs.len() as f64;
                     q.observe_batch(outputs.len(), service, mean_fraction);
                 }
-                let mut s = stats.lock().unwrap();
                 for (job, out) in live.into_iter().zip(outputs) {
                     let latency = job.enqueued.elapsed();
-                    s.latency.record(latency);
-                    s.completed += 1;
+                    {
+                        let mut s = stats.lock().unwrap();
+                        s.latency.record(latency);
+                        s.completed += 1;
+                    }
                     let prev = pending.fetch_sub(1, Ordering::Relaxed);
                     if let Some(sk) = &sink {
                         sk.on_retired(
@@ -835,23 +1104,23 @@ fn worker_loop(
                         );
                         sk.on_queue_depth(prev.saturating_sub(1) as usize);
                     }
+                    settle_key(&cache, &job.key, Ok(&out), &stats, &pending, &qos, &sink);
                     let _ = job.respond.send((Ok(out), latency));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
-                let mut s = stats.lock().unwrap();
                 for job in live {
                     let latency = job.enqueued.elapsed();
-                    s.failed += 1;
+                    stats.lock().unwrap().failed += 1;
                     let prev = pending.fetch_sub(1, Ordering::Relaxed);
                     if let Some(sk) = &sink {
                         sk.on_shed(job.meta.trace, "engine_failure");
                         sk.on_queue_depth(prev.saturating_sub(1) as usize);
                     }
-                    let _ = job
-                        .respond
-                        .send((Err(Error::Coordinator(msg.clone())), latency));
+                    let err = Error::Coordinator(msg.clone());
+                    settle_key(&cache, &job.key, Err(&err), &stats, &pending, &qos, &sink);
+                    let _ = job.respond.send((Err(err), latency));
                 }
             }
         }
@@ -859,13 +1128,16 @@ fn worker_loop(
 }
 
 /// Fail one queued job whose deadline expired before admission (the
-/// continuous-mode mirror of the fixed worker's stale partition).
+/// continuous-mode mirror of the fixed worker's stale partition). An
+/// expired *primary* settles its cache key so coalesced waiters resolve
+/// instead of stranding — their generation is never going to run.
 fn fail_expired(
     job: Job,
     stats: &Arc<Mutex<StatsInner>>,
     pending: &Arc<AtomicU64>,
     qos: &Option<Arc<dyn QosPolicy>>,
     sink: &Option<Arc<CoordSink>>,
+    cache: &Option<Arc<CacheLayer>>,
 ) {
     let waited = job.enqueued.elapsed();
     stats.lock().unwrap().deadline_missed += 1;
@@ -882,7 +1154,9 @@ fn fail_expired(
         waited.as_secs_f64() * 1e3,
         job.meta.deadline_ms().unwrap_or(0.0)
     );
-    let _ = job.respond.send((Err(Error::DeadlineExceeded(msg)), waited));
+    let err = Error::DeadlineExceeded(msg);
+    settle_key(cache, &job.key, Err(&err), stats, pending, qos, sink);
+    let _ = job.respond.send((Err(err), waited));
 }
 
 /// Continuous-mode worker: owns one [`ContinuousBatcher`] cohort, admits
@@ -907,16 +1181,23 @@ fn continuous_worker_loop(
     draining: Arc<AtomicBool>,
     qos: Option<Arc<dyn QosPolicy>>,
     sink: Option<Arc<CoordSink>>,
+    cache: Option<Arc<CacheLayer>>,
     batcher_tm: Option<BatcherMetrics>,
     worker_id: usize,
 ) {
+    // the shared uncond tier rides the continuous cohort: every worker's
+    // batcher publishes into / consumes from the same replica-scoped cache
+    let shared = cache.as_ref().and_then(|c| c.shared.clone());
     let fresh_batcher = |tm: &Option<BatcherMetrics>| {
-        let b = ContinuousBatcher::new(Arc::clone(&engine), slot_budget)
+        let mut b = ContinuousBatcher::new(Arc::clone(&engine), slot_budget)
             .expect("slot budget validated at coordinator start");
-        match tm {
-            Some(tm) => b.with_telemetry(tm.clone()),
-            None => b,
+        if let Some(tm) = tm {
+            b = b.with_telemetry(tm.clone());
         }
+        if let Some(sc) = &shared {
+            b = b.with_shared_cache(Arc::clone(sc));
+        }
+        b
     };
     let mut batcher = fresh_batcher(&batcher_tm);
     // respond channels of the in-flight samples, keyed by cohort id
@@ -947,7 +1228,7 @@ fn continuous_worker_loop(
                             // drain. pop_front keeps this safe when
                             // several workers sweep concurrently.
                             while let Some(j) = backlog.lock().unwrap().pop_front() {
-                                shed_draining(j, &stats, &pending, &sink);
+                                shed_draining(j, &stats, &pending, &qos, &sink, &cache);
                             }
                             return;
                         }
@@ -958,12 +1239,12 @@ fn continuous_worker_loop(
             // shutdown drain: queued-but-unadmitted jobs are shed with an
             // explicit 503 — the in-flight cohort still runs to completion
             if draining.load(Ordering::SeqCst) {
-                shed_draining(job, &stats, &pending, &sink);
+                shed_draining(job, &stats, &pending, &qos, &sink, &cache);
                 continue;
             }
             // deadline expiry before paying for any UNet work
             if expired(&job.meta, job.enqueued, Instant::now()) {
-                fail_expired(job, &stats, &pending, &qos, &sink);
+                fail_expired(job, &stats, &pending, &qos, &sink, &cache);
                 continue;
             }
             match batcher.try_admit(&job.req) {
@@ -989,6 +1270,7 @@ fn continuous_worker_loop(
                         sk.on_shed(job.meta.trace, "invalid");
                         sk.on_queue_depth(prev.saturating_sub(1) as usize);
                     }
+                    settle_key(&cache, &job.key, Err(&e), &stats, &pending, &qos, &sink);
                     let _ = job.respond.send((Err(e), waited));
                 }
             }
@@ -1009,6 +1291,21 @@ fn continuous_worker_loop(
                     s.slots_used_sum += outcome.slots_used as u64;
                     s.cohort_last = outcome.cohort as u64;
                     s.cohort_max = s.cohort_max.max(outcome.cohort as u64);
+                }
+                // typed per-sample engine failures (cold shared-reuse
+                // cache): only the offending sample fails — the cohort,
+                // the batcher, and every other in-flight job live on
+                for (id, err) in outcome.failed {
+                    let job = inflight.remove(&id).expect("failed id has a job");
+                    let latency = job.enqueued.elapsed();
+                    stats.lock().unwrap().failed += 1;
+                    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(sk) = &sink {
+                        sk.on_shed(job.meta.trace, "engine_failure");
+                        sk.on_queue_depth(prev.saturating_sub(1) as usize);
+                    }
+                    settle_key(&cache, &job.key, Err(&err), &stats, &pending, &qos, &sink);
+                    let _ = job.respond.send((Err(err), latency));
                 }
                 for (id, out) in outcome.retired {
                     let job = inflight.remove(&id).expect("retired id has a job");
@@ -1039,6 +1336,7 @@ fn continuous_worker_loop(
                         );
                         sk.on_queue_depth(prev.saturating_sub(1) as usize);
                     }
+                    settle_key(&cache, &job.key, Ok(&out), &stats, &pending, &qos, &sink);
                     let _ = job.respond.send((Ok(out), latency));
                 }
             }
@@ -1047,20 +1345,18 @@ fn continuous_worker_loop(
                 // in-flight job and restart with a fresh batcher (mirrors
                 // the fixed worker's per-batch failure handling)
                 let msg = e.to_string();
-                let mut s = stats.lock().unwrap();
                 for (_, job) in std::mem::take(&mut inflight) {
                     let latency = job.enqueued.elapsed();
-                    s.failed += 1;
+                    stats.lock().unwrap().failed += 1;
                     let prev = pending.fetch_sub(1, Ordering::Relaxed);
                     if let Some(sk) = &sink {
                         sk.on_shed(job.meta.trace, "engine_failure");
                         sk.on_queue_depth(prev.saturating_sub(1) as usize);
                     }
-                    let _ = job
-                        .respond
-                        .send((Err(Error::Coordinator(msg.clone())), latency));
+                    let err = Error::Coordinator(msg.clone());
+                    settle_key(&cache, &job.key, Err(&err), &stats, &pending, &qos, &sink);
+                    let _ = job.respond.send((Err(err), latency));
                 }
-                drop(s);
                 batcher = fresh_batcher(&batcher_tm);
             }
         }

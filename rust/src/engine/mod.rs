@@ -36,6 +36,7 @@
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
+use crate::cache::{SharedKey, SharedUncondCache};
 use crate::config::{DualStrategy, EngineConfig};
 use crate::error::{Error, Result};
 use crate::guidance::{
@@ -159,6 +160,18 @@ impl GenerationRequest {
         GuidancePlan::compile(&self.schedule, self.guidance_scale, self.strategy, self.steps)
     }
 
+    /// The plan [`Engine::begin_shared`] executes: compiled with the
+    /// cross-request anchor rule (DESIGN.md §13) — reuse steps are not
+    /// forced Dual by a cold *local* cache, because the anchor may come
+    /// from the shared uncond tier. Identical to
+    /// [`GenerationRequest::plan`] for adaptive and non-reuse requests.
+    pub fn plan_shared(&self) -> Result<GuidancePlan> {
+        if self.adaptive.is_some() {
+            return self.plan();
+        }
+        GuidancePlan::compile_shared(&self.schedule, self.guidance_scale, self.strategy, self.steps)
+    }
+
     /// Plan-derived *effective shed*: the fraction of this request's
     /// steps that run a single UNet pass. This is the derived view the
     /// QoS feedback loop and the simulator key on (refresh and
@@ -254,6 +267,12 @@ impl UncondCache {
         self.last = Some((i, eps));
     }
 
+    /// Any anchor recorded yet? Cheap cold-cache probe — `estimate`
+    /// clones the eps tensor.
+    fn warm(&self) -> bool {
+        self.last.is_some()
+    }
+
     /// Estimated uncond eps for iteration `i`; None while cold (the
     /// policy's cold-start rule keeps that unreachable in practice).
     fn estimate(&self, i: usize, kind: ReuseKind) -> Option<Vec<f32>> {
@@ -293,6 +312,14 @@ pub struct SampleState {
     cond_ctx: Vec<f32>,
     cache: UncondCache,
     wants_reuse: bool,
+    /// Shared-tier uncond eps staged by phase 1 of
+    /// [`Engine::step_batch_shared`] for this iteration's combine
+    /// (consumed exactly once).
+    shared_eps: Option<Vec<f32>>,
+    /// Typed per-sample failure (cold reuse cache under the shared
+    /// tier): the sample stops advancing and the serving layer drains
+    /// it with `Error::Engine` — the cohort keeps running.
+    failed: Option<String>,
     /// Next iteration to execute (== completed iterations).
     step: usize,
     steps: usize,
@@ -326,6 +353,30 @@ impl SampleState {
     /// UNet executions performed so far.
     pub fn unet_evals(&self) -> usize {
         self.unet_evals
+    }
+
+    /// The typed per-sample failure, if any. Failed samples never
+    /// advance again and must not be `finish`ed.
+    pub fn failed_reason(&self) -> Option<&str> {
+        self.failed.as_deref()
+    }
+
+    /// The uncond eps a Reuse step combines against: the staged
+    /// shared-tier consumption, else the local estimate. A cold cache
+    /// marks the sample failed (typed, per-sample) instead of
+    /// panicking the worker thread.
+    fn reuse_uncond(&mut self, kind: ReuseKind) -> Option<Vec<f32>> {
+        if let Some(u) = self.shared_eps.take() {
+            return Some(u);
+        }
+        match self.cache.estimate(self.step, kind) {
+            Some(u) => Some(u),
+            None => {
+                self.failed =
+                    Some(format!("reuse step {} with a cold uncond cache", self.step));
+                None
+            }
+        }
     }
 
     /// The compiled guidance plan this sample executes (for adaptive
@@ -462,9 +513,26 @@ impl Engine {
     /// (text encoding, scheduler, seeded noise stream, initial latent).
     pub fn begin(&self, req: &GenerationRequest) -> Result<SampleState> {
         req.validate()?;
+        let plan = req.plan()?;
+        self.begin_with_plan(req, plan)
+    }
+
+    /// [`Engine::begin`] for a cohort with a shared uncond cache
+    /// attached (DESIGN.md §13): the plan is compiled with the
+    /// cross-request anchor rule, so reuse steps may precede any local
+    /// dual pass. Only meaningful when the state is then driven by
+    /// [`Engine::step_batch_shared`] with a cache — a reuse step that
+    /// finds neither a shared entry nor a local anchor fails that
+    /// sample with a typed `Error::Engine`.
+    pub fn begin_shared(&self, req: &GenerationRequest) -> Result<SampleState> {
+        req.validate()?;
+        let plan = req.plan_shared()?;
+        self.begin_with_plan(req, plan)
+    }
+
+    fn begin_with_plan(&self, req: &GenerationRequest, plan: GuidancePlan) -> Result<SampleState> {
         let started = Instant::now();
         let m = self.stack.model();
-        let plan = req.plan()?;
         let cond_ctx = self.stack.encode_text(&self.tokenizer.encode(&req.prompt))?;
         let scheduler = req.scheduler.build(NoiseSchedule::default(), req.steps);
         let mut rng = Rng::for_stream(req.seed, 0);
@@ -491,6 +559,8 @@ impl Engine {
             cond_ctx,
             cache: UncondCache::new(),
             wants_reuse,
+            shared_eps: None,
+            failed: None,
             step: 0,
             steps: req.steps,
             unet_evals: 0,
@@ -508,8 +578,33 @@ impl Engine {
     /// callers may keep a mixed done/unfinished slice. Each active sample
     /// is charged `1/active` of the iteration's shared loop time.
     pub fn step_batch(&self, states: &mut [SampleState]) -> Result<StepReport> {
+        self.step_batch_shared(states, None)
+    }
+
+    /// [`Engine::step_batch`] with an optional cross-request
+    /// [`SharedUncondCache`] attached (DESIGN.md §13). With `None` the
+    /// loop is bit-exact with the unshared engine (it *is* the unshared
+    /// engine — `step_batch` delegates here). With a cache:
+    ///
+    /// * every dual step publishes its uncond eps under the sample's
+    ///   (scheduler, step, sigma-bucket, negative-hash) key;
+    /// * a Reuse-strategy sample's planned-Reuse step consumes a shared
+    ///   entry when one exists within the divergence tolerance
+    ///   (preferring it over local extrapolation);
+    /// * a Reuse-strategy sample's planned-Dual step past step 0 may
+    ///   *downgrade* to shared reuse on a tolerable entry — the
+    ///   executed plan is rewritten so the eval-count invariant holds;
+    /// * a reuse step with neither a shared entry nor a local anchor
+    ///   fails that sample only (typed `Error::Engine`, drained by the
+    ///   caller via [`SampleState::failed_reason`]) — never the cohort.
+    pub fn step_batch_shared(
+        &self,
+        states: &mut [SampleState],
+        shared: Option<&SharedUncondCache>,
+    ) -> Result<StepReport> {
         let n = states.len();
-        let active: Vec<usize> = (0..n).filter(|&s| !states[s].is_done()).collect();
+        let active: Vec<usize> =
+            (0..n).filter(|&s| !states[s].is_done() && states[s].failed.is_none()).collect();
         if active.is_empty() {
             return Ok(StepReport::default());
         }
@@ -526,7 +621,7 @@ impl Engine {
         let mut modes: Vec<GuidanceMode> = vec![GuidanceMode::Unguided; n];
         for &s in &active {
             let st = &mut states[s];
-            modes[s] = match st.controller.as_mut() {
+            let mut mode = match st.controller.as_mut() {
                 Some(ctrl) => {
                     let mode = match ctrl.decide(st.step, st.steps) {
                         AdaptiveDecision::Dual => {
@@ -539,6 +634,57 @@ impl Engine {
                 }
                 None => st.plan.mode(st.step),
             };
+            // shared-uncond tier: only static Reuse-strategy samples
+            // participate as consumers (adaptive controllers never emit
+            // Reuse, and CondOnly samples have nothing to combine —
+            // eligibility is `GuidanceStrategy::shared_consumer_kind`)
+            if let (Some(cache), Some(kind)) = (shared, st.req.strategy.shared_consumer_kind()) {
+                if st.controller.is_none() && st.wants_reuse {
+                    let key = SharedKey::new(
+                        st.req.scheduler.name(),
+                        st.step,
+                        st.scheduler.model_timestep(st.step),
+                    );
+                    match mode {
+                        // a planned dual step past the first iteration
+                        // downgrades to shared reuse when a tolerable
+                        // entry exists; the executed plan is rewritten
+                        // so the eval-count invariant keeps holding
+                        GuidanceMode::Dual { scale } if st.step > 0 => {
+                            if let Some(eps) = cache.consume(&key, &st.latent) {
+                                st.cache.record(st.step, eps.clone());
+                                st.shared_eps = Some(eps);
+                                mode = GuidanceMode::Reuse { scale, kind };
+                                st.plan.record_executed(st.step, mode);
+                            }
+                        }
+                        // a planned reuse step prefers the shared entry
+                        // (fresher than local hold/extrapolation); a
+                        // miss over a cold local cache fails this
+                        // sample only — before any UNet work
+                        GuidanceMode::Reuse { .. } => {
+                            if let Some(eps) = cache.consume(&key, &st.latent) {
+                                st.cache.record(st.step, eps.clone());
+                                st.shared_eps = Some(eps);
+                            } else if !st.cache.warm() {
+                                st.failed = Some(format!(
+                                    "reuse step {} with a cold uncond cache",
+                                    st.step
+                                ));
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            modes[s] = mode;
+        }
+        // samples that failed the cold-cache probe are excluded before
+        // any UNet work; the caller drains them as `Error::Engine`
+        let active: Vec<usize> =
+            active.into_iter().filter(|&s| states[s].failed.is_none()).collect();
+        if active.is_empty() {
+            return Ok(StepReport::default());
         }
         let dual: Vec<usize> = active
             .iter()
@@ -632,21 +778,27 @@ impl Engine {
                     if st.wants_reuse {
                         st.cache.record(st.step, u.to_vec());
                     }
+                    if let Some(cache) = shared {
+                        cache.publish(
+                            SharedKey::new(st.req.scheduler.name(), st.step, t_model[s]),
+                            &st.latent,
+                            u,
+                        );
+                    }
                     eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
                     bd.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
                 }
-                // reuse samples: Eq.-1 combine against the cached /
-                // extrapolated uncond eps (no second UNet pass)
+                // reuse samples: Eq.-1 combine against the shared /
+                // cached / extrapolated uncond eps (no second UNet pass)
                 for &s in &reuse {
                     let GuidanceMode::Reuse { scale, kind } = modes[s] else {
                         unreachable!()
                     };
                     let t0 = Instant::now();
                     let c = &eps_cond[pos[s] * latent_elems..(pos[s] + 1) * latent_elems];
-                    let u_hat = states[s]
-                        .cache
-                        .estimate(states[s].step, kind)
-                        .expect("reuse step with a cold uncond cache");
+                    let Some(u_hat) = states[s].reuse_uncond(kind) else {
+                        continue;
+                    };
                     eps_hat[s] = self.stack.cfg_combine(1, &u_hat, c, scale)?;
                     bd.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
                 }
@@ -685,6 +837,13 @@ impl Engine {
                     if st.wants_reuse {
                         st.cache.record(st.step, u.to_vec());
                     }
+                    if let Some(cache) = shared {
+                        cache.publish(
+                            SharedKey::new(st.req.scheduler.name(), st.step, t_model[s]),
+                            &st.latent,
+                            u,
+                        );
+                    }
                     eps_hat[s] = self.stack.cfg_combine(1, u, c, scale)?;
                     bd.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
                 }
@@ -715,10 +874,9 @@ impl Engine {
                         let c = &eps_cond[oi * latent_elems..(oi + 1) * latent_elems];
                         if let GuidanceMode::Reuse { scale, kind } = modes[s] {
                             let t0 = Instant::now();
-                            let u_hat = states[s]
-                                .cache
-                                .estimate(states[s].step, kind)
-                                .expect("reuse step with a cold uncond cache");
+                            let Some(u_hat) = states[s].reuse_uncond(kind) else {
+                                continue;
+                            };
                             eps_hat[s] = self.stack.cfg_combine(1, &u_hat, c, scale)?;
                             bd.combine_ms += t0.elapsed().as_secs_f64() * 1e3;
                         } else {
@@ -729,10 +887,15 @@ impl Engine {
             }
         }
 
-        // 4) scheduler update + per-sample accounting
+        // 4) scheduler update + per-sample accounting. Samples that
+        // failed mid-combine (cold cache reached past the phase-1
+        // probe) are frozen: no scheduler step, no eval charge.
         let t0 = Instant::now();
         for &s in &active {
             let st = &mut states[s];
+            if st.failed.is_some() {
+                continue;
+            }
             st.latent = st.scheduler.step(st.step, &st.latent, &eps_hat[s], &mut st.rng);
             st.unet_evals += modes[s].unet_evals();
             st.step += 1;
@@ -742,8 +905,13 @@ impl Engine {
         // each active sample carries 1/|active| of the shared loop cost
         // (cloning whole-cohort totals would over-report N×)
         let share = bd.scaled(1.0 / active.len() as f64);
+        let mut advanced = 0usize;
         let mut finished = 0usize;
         for &s in &active {
+            if states[s].failed.is_some() {
+                continue;
+            }
+            advanced += 1;
             states[s].breakdown.accumulate(&share);
             if states[s].is_done() {
                 finished += 1;
@@ -757,7 +925,7 @@ impl Engine {
             // dual samples cost two UNet executions, every other mode one
             tm.on_step(&bd, slots_used - (active.len() - dual.len()), active.len() - dual.len());
         }
-        Ok(StepReport { advanced: active.len(), finished, slots_used })
+        Ok(StepReport { advanced, finished, slots_used })
     }
 
     /// Package a completed [`SampleState`] into a [`GenerationOutput`]
@@ -989,6 +1157,75 @@ mod tests {
             .decode(false);
         let st = e.begin(&reuse).unwrap();
         assert_eq!(st.peak_remaining_cost(), 2);
+    }
+
+    #[test]
+    fn cold_reuse_cache_fails_sample_not_cohort() {
+        // a full-window shared-reuse plan against an empty shared cache
+        // must fail typed — one sample, not the worker/cohort
+        let e = Engine::new(
+            Arc::new(crate::runtime::ModelStack::synthetic()),
+            EngineConfig::default(),
+        );
+        let shared = crate::cache::SharedUncondCache::new(0.25);
+        let bad = GenerationRequest::new("cold consumer")
+            .steps(4)
+            .selective(WindowSpec::last(1.0))
+            .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 })
+            .decode(false);
+        // begin (local rule) forces step 0 Dual; begin_shared plans it Reuse
+        assert_eq!(e.begin(&bad).unwrap().next_cost(), 2);
+        let good = GenerationRequest::new("healthy cohort mate").steps(4).decode(false);
+        let mut states = vec![e.begin_shared(&bad).unwrap(), e.begin_shared(&good).unwrap()];
+        let report = e.step_batch_shared(&mut states, Some(&shared)).unwrap();
+        assert_eq!(
+            states[0].failed_reason(),
+            Some("reuse step 0 with a cold uncond cache")
+        );
+        assert_eq!(report.advanced, 1);
+        // the failed sample is frozen; its cohort-mate runs to completion
+        for _ in 0..3 {
+            e.step_batch_shared(&mut states, Some(&shared)).unwrap();
+        }
+        assert!(states[1].is_done());
+        assert_eq!(states[0].step_index(), 0);
+        let good_state = states.pop().unwrap();
+        e.finish(good_state).unwrap();
+    }
+
+    #[test]
+    fn shared_tier_serves_trailing_consumer() {
+        // publisher A runs full CFG a few steps ahead; consumer B's
+        // full-window reuse plan consumes A's published uncond eps at
+        // every step — full guidance at single-pass cost
+        let e = Engine::new(
+            Arc::new(crate::runtime::ModelStack::synthetic()),
+            EngineConfig::default(),
+        );
+        let shared = crate::cache::SharedUncondCache::new(0.5);
+        let a = GenerationRequest::new("trending prompt").steps(6).seed(11).decode(false);
+        let b = GenerationRequest::new("trending prompt")
+            .steps(6)
+            .seed(11)
+            .selective(WindowSpec::last(1.0))
+            .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 })
+            .decode(false);
+        let mut states = vec![e.begin_shared(&a).unwrap()];
+        // A steps ahead alone, publishing steps 0..3
+        for _ in 0..3 {
+            e.step_batch_shared(&mut states, Some(&shared)).unwrap();
+        }
+        states.push(e.begin_shared(&b).unwrap());
+        while states.iter().any(|s| !s.is_done()) {
+            let r = e.step_batch_shared(&mut states, Some(&shared)).unwrap();
+            assert!(r.advanced > 0, "no sample failed");
+        }
+        let b_state = states.pop().unwrap();
+        assert!(b_state.failed_reason().is_none());
+        let out = e.finish(b_state).unwrap();
+        // every one of B's steps ran single-pass off the shared tier
+        assert_eq!(out.unet_evals, 6);
+        assert!(shared.stats().hits >= 6);
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub enum Error {
     /// Wire-protocol violations on the TCP front-end.
     Protocol(String),
 
+    /// A per-sample engine execution failure (e.g. a reuse step reaching
+    /// a cold uncond cache). Fails only the offending sample — the
+    /// serving layers must never treat it as a cohort-wide poison, and
+    /// the cluster relay must not requeue it (it would fail identically
+    /// on every replica).
+    Engine(String),
+
     /// QoS admission rejection — the explicit load-shedding path. `code`
     /// follows HTTP semantics (429 queue full, 503 infeasible) so the
     /// server front-end can surface it without string matching.
@@ -57,6 +64,7 @@ impl fmt::Display for Error {
             Error::Request(m) => write!(f, "request: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Engine(m) => write!(f, "engine: {m}"),
             Error::Rejected { code, reason } => write!(f, "rejected ({code}): {reason}"),
             Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
             Error::Io { context, source } => write!(f, "io: {context}: {source}"),
@@ -136,6 +144,14 @@ mod tests {
         let src = std::error::Error::source(&e).expect("io carries a source");
         assert_eq!(src.to_string(), "inner");
         assert!(std::error::Error::source(&Error::Config("x".into())).is_none());
+    }
+
+    #[test]
+    fn engine_error_display() {
+        let e = Error::Engine("reuse step 3 with a cold uncond cache".into());
+        assert_eq!(e.to_string(), "engine: reuse step 3 with a cold uncond cache");
+        // a per-sample engine failure carries no QoS status code
+        assert_eq!(e.qos_code(), None);
     }
 
     #[test]

@@ -349,6 +349,33 @@ impl GuidancePlan {
         strategy: GuidanceStrategy,
         n: usize,
     ) -> Result<GuidancePlan> {
+        Self::compile_walk(schedule, scale, strategy, n, false)
+    }
+
+    /// Compile for an engine with a *shared* uncond cache attached
+    /// (DESIGN.md §13): the anchor can come from a different in-flight
+    /// sample, so a reuse step before any local dual pass is planned
+    /// as `Reuse` instead of being forced Dual. The refresh cadence is
+    /// kept — it bounds staleness regardless of where anchors come
+    /// from. The engine fails the sample with a typed `Error::Engine`
+    /// if, at execution time, neither the shared tier nor the local
+    /// cache can supply the anchor.
+    pub fn compile_shared(
+        schedule: &GuidanceSchedule,
+        scale: f32,
+        strategy: GuidanceStrategy,
+        n: usize,
+    ) -> Result<GuidancePlan> {
+        Self::compile_walk(schedule, scale, strategy, n, true)
+    }
+
+    fn compile_walk(
+        schedule: &GuidanceSchedule,
+        scale: f32,
+        strategy: GuidanceStrategy,
+        n: usize,
+        anchor_free: bool,
+    ) -> Result<GuidancePlan> {
         schedule.validate()?;
         if !scale.is_finite() || scale < 0.0 {
             return Err(Error::Config(format!(
@@ -362,7 +389,7 @@ impl GuidancePlan {
         }
         let mask = schedule.optimized_mask(n);
         let mut steps = Vec::with_capacity(n);
-        let mut have_anchor = false;
+        let mut have_anchor = anchor_free;
         let mut consecutive = 0usize;
         for &optimized in &mask {
             let mode = if !optimized {
@@ -571,6 +598,30 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn compile_shared_lifts_cold_cache_anchor() {
+        // a full-window reuse plan: local compile must force step 0
+        // Dual (cold cache); the shared compile may plan it Reuse
+        // because the anchor can come from another in-flight sample
+        let schedule = GuidanceSchedule::Window(WindowSpec::last(1.0));
+        let strategy = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 };
+        let local = GuidancePlan::compile(&schedule, 7.5, strategy, 8).unwrap();
+        assert!(dual(local.mode(0)));
+        let shared = GuidancePlan::compile_shared(&schedule, 7.5, strategy, 8).unwrap();
+        for i in 0..8 {
+            assert!(matches!(shared.mode(i), GuidanceMode::Reuse { .. }), "step {i}");
+        }
+        // the refresh cadence still bounds staleness under sharing
+        let strategy = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 2 };
+        let shared = GuidancePlan::compile_shared(&schedule, 7.5, strategy, 8).unwrap();
+        assert!(dual(shared.mode(2)), "{}", shared.summary());
+        // non-reuse strategies compile identically either way
+        let a = GuidancePlan::compile(&schedule, 7.5, GuidanceStrategy::CondOnly, 8).unwrap();
+        let b =
+            GuidancePlan::compile_shared(&schedule, 7.5, GuidanceStrategy::CondOnly, 8).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -93,6 +93,24 @@ impl GuidanceStrategy {
         }
     }
 
+    /// The reuse kind this strategy combines with when it consumes the
+    /// *cross-request* shared uncond tier (DESIGN.md §13), or `None`
+    /// when the strategy can never consume it.
+    ///
+    /// Only `Reuse` qualifies: it is the lattice point that substitutes
+    /// a cached eps_u into the Eq.-1 combine, so a shared entry slots in
+    /// exactly where the local cache would. `CondOnly` drops the
+    /// combine entirely — handing it a shared eps would *change* its
+    /// output and break the miss-path bit-exactness invariant. (Adaptive
+    /// overlays are excluded at the engine seam, where controller state
+    /// lives: their replanning never emits Reuse steps.)
+    pub fn shared_consumer_kind(&self) -> Option<ReuseKind> {
+        match *self {
+            GuidanceStrategy::CondOnly => None,
+            GuidanceStrategy::Reuse { kind, .. } => Some(kind),
+        }
+    }
+
     /// Initial window steps forced Dual because the uncond cache has no
     /// anchor: one when no dual iteration precedes the window.
     fn cold_steps(&self, prior_duals: usize) -> usize {
@@ -188,6 +206,19 @@ mod tests {
         let s = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 4 };
         assert_eq!(s.label(), "hold/4");
         assert_eq!(s.name(), "hold");
+    }
+
+    #[test]
+    fn shared_consumer_kinds() {
+        // CondOnly has no combine to feed a shared eps into
+        assert_eq!(GuidanceStrategy::CondOnly.shared_consumer_kind(), None);
+        // Reuse consumes with its own combine kind, cadence-independent
+        for m in [0, 1, 4] {
+            let s = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: m };
+            assert_eq!(s.shared_consumer_kind(), Some(ReuseKind::Hold));
+        }
+        let e = GuidanceStrategy::Reuse { kind: ReuseKind::Extrapolate, refresh_every: 0 };
+        assert_eq!(e.shared_consumer_kind(), Some(ReuseKind::Extrapolate));
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //! experiment index mapping every paper table/figure to a bench target.
 
 pub mod benchutil;
+pub mod cache;
 pub mod cli;
 pub mod cluster;
 pub mod config;
@@ -54,6 +55,7 @@ pub use error::{Error, Result};
 
 /// One-stop imports for examples and downstream users.
 pub mod prelude {
+    pub use crate::cache::{CacheConfig, CacheOutcome, RequestCache, SharedUncondCache};
     pub use crate::cluster::{
         ClusterConfig, ClusterStats, ReplicaSet, ReplicaSpec, RoutePolicy, Router,
     };

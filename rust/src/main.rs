@@ -22,6 +22,7 @@
 //!           [--interval ...] [--cadence ...]
 //!           [--qos] [--max-queue 64] [--quality-floor 0.5]
 //!           [--deadline-ms 0] [--adaptive] [--adaptive-threshold ...]
+//!           [--request-cache] [--dedup]
 //!           [--metrics-addr 127.0.0.1:9090] [--no-telemetry]
 //! sgd-serve info     [--artifacts artifacts/tiny]
 //! ```
@@ -197,7 +198,12 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         .with_schedule(schedule_from(cli)?.unwrap_or_else(GuidanceSchedule::none))
         .strategy(strategy)
         .scheduler(SchedulerKind::parse(cli.opt("scheduler").unwrap_or("pndm"))?)
-        .seed(cli.opt_or("seed", 0)?);
+        // parse as i64 then validate: shared with TOML/wire/workload, so
+        // `--seed -1` is a config error, not a silent u64 wrap
+        .seed(
+            selective_guidance::config::seed_from_i64(cli.opt_or("seed", 0i64)?)
+                .map_err(Error::Config)?,
+        );
     if let Some(a) = adaptive_from(cli, None)? {
         req = req.adaptive(a);
     }
@@ -281,6 +287,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         cli.opt_or("deadline-ms", run_cfg.qos.default_deadline_ms)?;
     run_cfg.qos.validate()?;
 
+    // cache overrides: the flags force-enable tiers on top of [cache]
+    if cli.flag("request-cache") {
+        run_cfg.cache.request_cache = true;
+    }
+    if cli.flag("dedup") {
+        run_cfg.cache.dedup = true;
+    }
+    run_cfg.cache.validate()?;
+
     // telemetry overrides: --no-telemetry opts out, --metrics-addr
     // opens (or re-binds) the Prometheus scrape endpoint
     if cli.flag("metrics-addr") {
@@ -341,11 +356,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         // explicit [cluster.replica.N] overrides — make the operator
         // edit the config instead.
         let base = ReplicaSpec::from_server(&run_cfg.server);
-        let mut cfg = cluster_cfg.take().unwrap_or(ClusterConfig {
-            replicas: Vec::new(),
-            route: RoutePolicy::PlanCost,
-            route_seed: 0,
-        });
+        let mut cfg = cluster_cfg
+            .take()
+            .unwrap_or(ClusterConfig { replicas: Vec::new(), ..ClusterConfig::default() });
         if n < cfg.replicas.len() {
             return Err(Error::Config(format!(
                 "--replicas {n} would drop {} configured replica(s) — shrink the \
@@ -369,8 +382,23 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             }
         }
     }
+    // the cache tiers follow the merged [cache] + flag view everywhere:
+    // the cluster parses the same [cache] section itself, so this only
+    // layers the flag overrides on top
+    if let Some(cfg) = cluster_cfg.as_mut() {
+        cfg.cache = run_cfg.cache.clone();
+    }
     if let Some(cfg) = &cluster_cfg {
         cfg.validate()?;
+    }
+    if run_cfg.cache.enabled() {
+        println!(
+            "cache: request_cache={} (capacity {}), dedup={}, shared_uncond={}",
+            run_cfg.cache.request_cache,
+            run_cfg.cache.request_capacity,
+            run_cfg.cache.dedup,
+            run_cfg.cache.shared_uncond,
+        );
     }
 
     let dir = cli
@@ -438,6 +466,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 slot_budget: run_cfg.server.slot_budget,
                 workers: run_cfg.server.workers,
                 batch_wait: std::time::Duration::from_millis(run_cfg.server.batch_wait_ms),
+                cache: run_cfg.cache.clone(),
             };
             match run_cfg.server.mode {
                 BatchMode::Continuous => println!(

@@ -80,6 +80,7 @@ impl Backend {
         match self {
             Backend::Single(c) => {
                 let s = c.stats();
+                let rc = c.request_cache_stats();
                 ok_base(id)
                     .with("cluster", false)
                     .with("mode", s.mode.name())
@@ -89,6 +90,11 @@ impl Backend {
                     .with("rejected", s.rejected as i64)
                     .with("deadline_missed", s.deadline_missed as i64)
                     .with("drain_shed", s.drain_shed as i64)
+                    .with("cache_hits", s.cache_hits as i64)
+                    .with("dedup_coalesced", s.dedup_coalesced as i64)
+                    .with("cache_entries", rc.entries as i64)
+                    .with("cache_evictions", rc.evictions as i64)
+                    .with("cache_bytes", rc.bytes as i64)
                     .with("batches", s.batches as i64)
                     .with("batched_requests", s.batched_requests as i64)
                     .with("slot_budget", s.slot_budget as i64)
@@ -140,6 +146,8 @@ impl Backend {
                     .with("requeued", s.requeued as i64)
                     .with("ejected", s.ejected as i64)
                     .with("drain_shed", s.drain_shed as i64)
+                    .with("cache_hits", s.cache_hits as i64)
+                    .with("dedup_coalesced", s.dedup_coalesced as i64)
                     .with("batches", s.batches as i64)
                     .with("iterations", s.iterations as i64)
                     .with("joins", s.joins as i64)
@@ -454,11 +462,26 @@ fn dispatch(
                     sr.request.strategy = defaults.strategy;
                     sr.request.adaptive = defaults.adaptive;
                 }
-                match backend
-                    .submit_qos(sr.request.clone(), sr.meta)
-                    .and_then(|ticket| ticket.wait())
-                {
-                    Ok(out) => render_output(id, &sr, &out),
+                match backend.submit_qos(sr.request.clone(), sr.meta) {
+                    Ok(ticket) => {
+                        // read the admission's cache outcome after the
+                        // wait: hit/dedup are decided synchronously at
+                        // submit, so the cell is already settled
+                        let outcome = ticket.outcome_cell();
+                        match ticket.wait() {
+                            Ok(out) => {
+                                let mut v = render_output(id, &sr, &out);
+                                // echoed only when a cache layer keyed
+                                // the admission — absent field == caches
+                                // off, exactly today's wire shape
+                                if let Some(o) = outcome.get() {
+                                    v = v.with("cache", o.label());
+                                }
+                                v
+                            }
+                            Err(e) => render_failure(id, &e),
+                        }
+                    }
                     Err(e) => render_failure(id, &e),
                 }
             }

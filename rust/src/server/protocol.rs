@@ -51,8 +51,11 @@ pub fn parse_request(v: &Value) -> Result<ServerRequest> {
                 as f32;
     }
     if let Some(seed) = v.get("seed") {
-        req.seed =
-            seed.as_i64().ok_or_else(|| Error::Protocol("seed must be an integer".into()))? as u64;
+        let raw =
+            seed.as_i64().ok_or_else(|| Error::Protocol("seed must be an integer".into()))?;
+        // shared validation with TOML/CLI/workload: a negative seed is
+        // a protocol error, not a silent two's-complement wrap
+        req.seed = crate::config::seed_from_i64(raw).map_err(Error::Protocol)?;
     }
     if let Some(s) = v.get("scheduler") {
         req.scheduler = SchedulerKind::parse(
@@ -388,6 +391,22 @@ mod tests {
             r#"{"op":"generate","prompt":"x","adaptive":true,"adaptive_min_dual_fraction":2.0}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn seed_round_trips_and_negatives_rejected() {
+        // valid seeds round-trip exactly, including large ones
+        let sr = parse(r#"{"op":"generate","prompt":"x","seed":0}"#).unwrap();
+        assert_eq!(sr.request.seed, 0);
+        let sr =
+            parse(r#"{"op":"generate","prompt":"x","seed":9007199254740991}"#).unwrap();
+        assert_eq!(sr.request.seed, 9007199254740991);
+        // a negative seed used to wrap through `as u64` into a
+        // valid-looking 18-quintillion seed; now it's a typed rejection
+        let err = parse(r#"{"op":"generate","prompt":"x","seed":-1}"#).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err:?}");
+        assert!(err.to_string().contains("seed must be >= 0"));
+        assert!(parse(r#"{"op":"generate","prompt":"x","seed":"lucky"}"#).is_err());
     }
 
     #[test]

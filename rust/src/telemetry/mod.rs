@@ -316,6 +316,8 @@ pub struct CoordSink {
     rejected: Counter,
     retired: Counter,
     expired: Counter,
+    cache_hits: Counter,
+    dedup_joins: Counter,
     queue_depth: Gauge,
     latency_ms: Histogram,
     scope: String,
@@ -333,6 +335,16 @@ impl CoordSink {
             rejected: r.counter("sg_coord_rejected_total", "Requests rejected at admission", &l),
             retired: r.counter("sg_coord_retired_total", "Requests completed", &l),
             expired: r.counter("sg_coord_expired_total", "Requests expired past deadline", &l),
+            cache_hits: r.counter(
+                "sg_cache_hits_total",
+                "Requests served bit-exactly from the request cache",
+                &l,
+            ),
+            dedup_joins: r.counter(
+                "sg_cache_dedup_joins_total",
+                "Requests coalesced onto an identical in-flight generation",
+                &l,
+            ),
             queue_depth: r.gauge("sg_coord_queue_depth", "Jobs queued or in flight", &l),
             latency_ms: r.histogram(
                 "sg_request_latency_ms",
@@ -420,6 +432,24 @@ impl CoordSink {
     pub fn on_cohort_join(&self, trace: Option<TraceId>, cohort: usize) {
         if self.enabled {
             self.t.event(trace, TraceEvent::CohortJoin { cohort });
+        }
+    }
+
+    /// Exact-match request-cache hit (non-terminal: the hit path still
+    /// records `on_retired`, which closes the span).
+    pub fn on_cache_hit(&self, trace: Option<TraceId>) {
+        if self.enabled {
+            self.cache_hits.inc();
+            self.t.event(trace, TraceEvent::CacheHit);
+        }
+    }
+
+    /// Dedup coalescing (non-terminal: the span closes when the primary
+    /// generation's fan-out delivers to this waiter).
+    pub fn on_dedup_join(&self, trace: Option<TraceId>) {
+        if self.enabled {
+            self.dedup_joins.inc();
+            self.t.event(trace, TraceEvent::DedupJoin);
         }
     }
 

@@ -41,6 +41,13 @@ pub enum TraceEvent {
     /// Failover: the request left replica `from` and was re-dispatched
     /// onto replica `to`.
     Requeued { from: usize, to: usize },
+    /// Served bit-exactly from the exact-match request cache
+    /// (non-terminal — the span still closes with `Retired`).
+    CacheHit,
+    /// Coalesced onto an identical in-flight generation (non-terminal —
+    /// the span stays open until the fan-out delivers, then closes with
+    /// its own terminal event).
+    DedupJoin,
     /// Completed successfully (terminal).
     Retired,
     /// Dropped by load shedding or failure (terminal).
@@ -60,6 +67,8 @@ impl TraceEvent {
             TraceEvent::PlanExec { .. } => "plan_exec",
             TraceEvent::ActuatorRewrite { .. } => "actuator_rewrite",
             TraceEvent::Requeued { .. } => "requeued",
+            TraceEvent::CacheHit => "cache_hit",
+            TraceEvent::DedupJoin => "dedup_join",
             TraceEvent::Retired => "retired",
             TraceEvent::Shed { .. } => "shed",
             TraceEvent::Expired => "expired",
@@ -94,6 +103,7 @@ impl TraceEvent {
             TraceEvent::Requeued { from, to } => {
                 v.with("from", *from as i64).with("to", *to as i64)
             }
+            TraceEvent::CacheHit | TraceEvent::DedupJoin => v,
             TraceEvent::Retired | TraceEvent::Shed { .. } | TraceEvent::Expired => {
                 if let TraceEvent::Shed { reason } = self {
                     v.with("reason", reason.as_str())
@@ -301,5 +311,11 @@ mod tests {
         assert!(TraceEvent::Rejected { code: 429, reason: "q".into() }.is_terminal());
         assert!(!TraceEvent::Admitted { class: "interactive" }.is_terminal());
         assert!(!TraceEvent::Requeued { from: 0, to: 1 }.is_terminal());
+        // cache events never close a span: a hit still retires, a dedup
+        // join terminates only at fan-out delivery
+        assert!(!TraceEvent::CacheHit.is_terminal());
+        assert!(!TraceEvent::DedupJoin.is_terminal());
+        assert_eq!(TraceEvent::CacheHit.name(), "cache_hit");
+        assert_eq!(TraceEvent::DedupJoin.name(), "dedup_join");
     }
 }

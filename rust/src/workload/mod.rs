@@ -100,6 +100,56 @@ pub struct KillSpec {
     pub replica: usize,
 }
 
+/// Zipf-skewed request popularity (cache/dedup evaluation): request
+/// ranks are drawn with P(rank k) ∝ 1/k^s over a fixed catalog, and
+/// **both** the prompt and the per-request seed derive from the sampled
+/// rank — so two draws of the same rank are exact-key duplicates (the
+/// request cache / dedup tier can serve one from the other), while
+/// distinct ranks never collide (their seeds differ even when the
+/// prompt corpus wraps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ZipfPrompts {
+    /// Skew exponent `s` (0 = uniform over the catalog; web-like
+    /// popularity is typically 0.7–1.2).
+    pub skew: f64,
+    /// Catalog size: ranks `0..catalog`.
+    pub catalog: usize,
+}
+
+impl ZipfPrompts {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.skew.is_finite() && self.skew >= 0.0) {
+            return Err(Error::Config(format!(
+                "zipf skew {} must be finite and >= 0",
+                self.skew
+            )));
+        }
+        if self.catalog == 0 {
+            return Err(Error::Config("zipf catalog must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Draw `n` ranks by inverse CDF over the truncated Zipf weights —
+    /// deterministic in `seed`, independent of the arrival stream.
+    pub fn ranks(&self, n: usize, seed: u64) -> Vec<usize> {
+        let catalog = self.catalog.max(1);
+        let mut rng = Rng::for_stream(seed, 0x5A495046); // "ZIPF"
+        let mut cum = Vec::with_capacity(catalog);
+        let mut total = 0.0f64;
+        for k in 0..catalog {
+            total += 1.0 / ((k + 1) as f64).powf(self.skew);
+            cum.push(total);
+        }
+        (0..n)
+            .map(|_| {
+                let u = rng.next_f64() * total;
+                cum.partition_point(|&c| c < u).min(catalog - 1)
+            })
+            .collect()
+    }
+}
+
 /// Trace synthesis parameters.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
@@ -131,6 +181,11 @@ pub struct WorkloadSpec {
     /// cluster replays pass them to [`replay_qos_cluster`] alongside
     /// the trace.
     pub kills: Vec<KillSpec>,
+    /// Zipf-skewed popularity: when set, prompt *and* per-request seed
+    /// derive from a sampled rank (repeats become exact-key duplicates
+    /// — the workload the amortization tiers are measured on). `None`
+    /// keeps the classic round-robin corpus walk.
+    pub zipf: Option<ZipfPrompts>,
 }
 
 impl Default for WorkloadSpec {
@@ -149,14 +204,27 @@ impl Default for WorkloadSpec {
             deadline_ms: None,
             priority: Priority::Standard,
             kills: Vec::new(),
+            zipf: None,
         }
     }
 }
 
 impl WorkloadSpec {
+    /// Set the base seed from a signed value — the same negative-seed
+    /// validation as the TOML/wire/CLI surfaces, so a workload script
+    /// can't wrap a typo'd `-1` into a valid-looking u64 seed.
+    pub fn with_seed_i64(mut self, seed: i64) -> Result<WorkloadSpec> {
+        self.seed = crate::config::seed_from_i64(seed).map_err(Error::Config)?;
+        Ok(self)
+    }
+
     /// Synthesize a deterministic trace over the Table-2 corpus.
     pub fn synthesize(&self) -> Vec<TraceEntry> {
         let arrivals = self.arrivals.arrivals(self.num_requests, self.seed);
+        // popularity stream: request i carries identity rank(i) — with
+        // Zipf popularity repeats are *exact* duplicates (same prompt,
+        // seed and steps), without it identity is just the index
+        let ranks = self.zipf.map(|z| z.ranks(self.num_requests, self.seed));
         // with_deadline_ms owns the clamp (MAX_DEADLINE_MS, non-finite)
         // so a hostile spec can't panic Duration construction
         let meta = QosMeta {
@@ -170,11 +238,12 @@ impl WorkloadSpec {
             .into_iter()
             .enumerate()
             .map(|(i, at_ms)| {
-                let prompt = prompts::TABLE2[i % prompts::TABLE2.len()];
+                let rank = ranks.as_ref().map_or(i, |r| r[i]);
+                let prompt = prompts::TABLE2[rank % prompts::TABLE2.len()];
                 let steps = if self.steps_choices.is_empty() {
                     self.steps
                 } else {
-                    self.steps_choices[i % self.steps_choices.len()]
+                    self.steps_choices[rank % self.steps_choices.len()]
                 };
                 let request = GenerationRequest::new(prompt)
                     .steps(steps)
@@ -182,7 +251,7 @@ impl WorkloadSpec {
                     .guidance_scale(self.guidance_scale)
                     .with_schedule(self.schedule.clone())
                     .strategy(self.strategy)
-                    .seed(self.seed.wrapping_add(i as u64))
+                    .seed(self.seed.wrapping_add(rank as u64))
                     .decode(self.decode);
                 TraceEntry { at_ms, request, meta }
             })
@@ -593,6 +662,74 @@ mod tests {
         assert_eq!(spec.synthesize().len(), 4);
         // default: no injection
         assert!(WorkloadSpec::default().kills.is_empty());
+    }
+
+    #[test]
+    fn zipf_ranks_deterministic_and_skew_concentrates() {
+        let z = ZipfPrompts { skew: 1.1, catalog: 50 };
+        z.validate().unwrap();
+        let a = z.ranks(500, 7);
+        assert_eq!(a, z.ranks(500, 7));
+        assert_ne!(a, z.ranks(500, 8));
+        assert!(a.iter().all(|&r| r < 50));
+        // higher skew puts more mass on the head of the catalog
+        let head = |skew: f64| {
+            ZipfPrompts { skew, catalog: 50 }
+                .ranks(2000, 7)
+                .iter()
+                .filter(|&&r| r < 5)
+                .count()
+        };
+        assert!(head(1.5) > head(0.4), "skew 1.5 head {} <= skew 0.4 head {}", head(1.5), head(0.4));
+        // invalid shapes are config errors
+        assert!(ZipfPrompts { skew: -0.1, catalog: 50 }.validate().is_err());
+        assert!(ZipfPrompts { skew: f64::NAN, catalog: 50 }.validate().is_err());
+        assert!(ZipfPrompts { skew: 1.0, catalog: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn zipf_repeats_are_exact_duplicates() {
+        let spec = WorkloadSpec {
+            num_requests: 200,
+            steps: 8,
+            steps_choices: vec![8, 12],
+            zipf: Some(ZipfPrompts { skew: 1.2, catalog: 10 }),
+            ..WorkloadSpec::default()
+        };
+        let ranks = spec.zipf.unwrap().ranks(spec.num_requests, spec.seed);
+        let trace = spec.synthesize();
+        assert_eq!(trace.len(), 200);
+        // same rank -> identical request identity (prompt, seed, steps);
+        // distinct ranks -> distinct seeds even when prompts alias
+        for (i, e) in trace.iter().enumerate() {
+            for (j, f) in trace.iter().enumerate().skip(i + 1) {
+                if ranks[i] == ranks[j] {
+                    assert_eq!(e.request.prompt, f.request.prompt);
+                    assert_eq!(e.request.seed, f.request.seed);
+                    assert_eq!(e.request.steps, f.request.steps);
+                } else {
+                    assert_ne!(e.request.seed, f.request.seed);
+                }
+            }
+        }
+        // at skew 1.2 over a 10-prompt catalog, duplicates dominate
+        let mut distinct = ranks.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() < 20);
+        // no zipf: the classic walk keeps one distinct seed per entry
+        let plain = WorkloadSpec { num_requests: 5, ..WorkloadSpec::default() }.synthesize();
+        let mut seeds: Vec<u64> = plain.iter().map(|t| t.request.seed).collect();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 5);
+    }
+
+    #[test]
+    fn seed_setter_shares_validation() {
+        let spec = WorkloadSpec::default().with_seed_i64(42).unwrap();
+        assert_eq!(spec.seed, 42);
+        let err = WorkloadSpec::default().with_seed_i64(-3).unwrap_err();
+        assert!(err.to_string().contains("seed must be >= 0"));
     }
 
     #[test]

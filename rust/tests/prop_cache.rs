@@ -1,0 +1,317 @@
+//! Fleet-wide amortization properties (DESIGN.md §13): the cache layer
+//! must be *invisible* except when it saves work. Four invariants, all
+//! on the deterministic synthetic backend (always runs, no artifacts):
+//!
+//! * **miss transparency** — a request that misses every tier produces
+//!   output bit-exact with a cache-disabled coordinator;
+//! * **hit fidelity** — an exact-match replay is byte-identical to the
+//!   generation that populated the entry, and the hit/miss counters
+//!   account for every lookup;
+//! * **shared-tier quality** — a full-window reuse consumer fed by the
+//!   shared uncond cache lands at least as close (SSIM) to the full-CFG
+//!   reference as the cond-only floor it would otherwise degrade to;
+//! * **dedup conservation** — N identical concurrent requests run ONE
+//!   physical generation, deliver N bit-equal results, and close N
+//!   trace spans exactly once each (stats: retired per logical request,
+//!   batches/UNet work per physical generation).
+//!
+//! Cases run under the seeded prop harness; override `PROP_MASTER_SEED`
+//! to explore other universes.
+
+use std::sync::Arc;
+
+use selective_guidance::cache::{CacheConfig, CacheOutcome, SharedUncondCache};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
+use selective_guidance::engine::{Engine, GenerationOutput, GenerationRequest};
+use selective_guidance::error::Error;
+use selective_guidance::guidance::{GuidanceStrategy, ReuseKind, WindowSpec};
+use selective_guidance::qos::QosMeta;
+use selective_guidance::quality::ssim;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::telemetry::{CoordSink, Telemetry};
+use selective_guidance::testutil::prop::{forall, Gen};
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::new(
+        Arc::new(ModelStack::synthetic()),
+        EngineConfig::default(),
+    ))
+}
+
+fn coordinator(cache: CacheConfig) -> Arc<Coordinator> {
+    Coordinator::start(
+        engine(),
+        CoordinatorConfig { cache, ..CoordinatorConfig::default() },
+    )
+}
+
+/// A small random request: enough surface diversity (prompt, steps,
+/// seed, scale) that canonical keys genuinely differ across cases.
+fn random_request(g: &mut Gen) -> GenerationRequest {
+    GenerationRequest::new(format!("prop {}", g.word(8)))
+        .steps(g.usize_in(2, 6))
+        .seed(g.u64())
+        .guidance_scale(g.f32_in(1.0, 9.0))
+        .scheduler(SchedulerKind::Ddim)
+        .decode(false)
+}
+
+fn assert_bit_equal(a: &GenerationOutput, b: &GenerationOutput, what: &str) {
+    assert_eq!(a.latent.len(), b.latent.len(), "{what}: latent length");
+    for (i, (x, y)) in a.latent.iter().zip(&b.latent).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: latent[{i}] differs ({x} vs {y})"
+        );
+    }
+    assert_eq!(a.unet_evals, b.unet_evals, "{what}: unet_evals");
+    assert_eq!(a.steps, b.steps, "{what}: steps");
+    assert_eq!(a.plan_summary, b.plan_summary, "{what}: plan_summary");
+    match (&a.image, &b.image) {
+        (None, None) => {}
+        (Some(x), Some(y)) => assert_eq!(x.data, y.data, "{what}: image bytes"),
+        _ => panic!("{what}: one output decoded, the other did not"),
+    }
+}
+
+/// Miss transparency: a cache-on coordinator serving a cold key is
+/// bit-exact with a cache-disabled one — the amortization layer buys
+/// nothing on a miss, and costs nothing either.
+#[test]
+fn prop_cache_miss_is_bit_exact() {
+    forall("cache miss bit-exact", 6, |g| {
+        let req = random_request(g);
+        let off = coordinator(CacheConfig::default());
+        let on = coordinator(CacheConfig {
+            request_cache: true,
+            dedup: true,
+            ..CacheConfig::default()
+        });
+        let t_off = off.submit(req.clone()).expect("submit off");
+        let t_on = on.submit(req).expect("submit on");
+        assert_eq!(t_off.cache_outcome(), None, "cache layer off: no outcome");
+        assert_eq!(t_on.cache_outcome(), Some(CacheOutcome::Miss));
+        let out_off = t_off.wait().expect("off completes");
+        let out_on = t_on.wait().expect("on completes");
+        assert_bit_equal(&out_off, &out_on, "miss vs disabled");
+        assert_eq!(on.stats().cache_hits, 0);
+        off.shutdown();
+        on.shutdown();
+    });
+}
+
+/// Hit fidelity: resubmitting an identical request replays the stored
+/// output byte-for-byte, and every counter accounts for it — one miss
+/// to populate, one hit to replay, a different key misses again.
+#[test]
+fn prop_cache_hit_is_byte_identical() {
+    forall("cache hit byte-identical", 6, |g| {
+        let seed = g.u64();
+        let req = random_request(g).seed(seed);
+        let c = coordinator(CacheConfig { request_cache: true, ..CacheConfig::default() });
+
+        let t1 = c.submit(req.clone()).expect("first submit");
+        assert_eq!(t1.cache_outcome(), Some(CacheOutcome::Miss));
+        let first = t1.wait().expect("first completes");
+
+        let t2 = c.submit(req.clone()).expect("second submit");
+        assert_eq!(t2.cache_outcome(), Some(CacheOutcome::Hit));
+        let second = t2.wait().expect("hit resolves");
+        assert_bit_equal(&first, &second, "hit vs generation");
+
+        // a perturbed key must not false-hit
+        let t3 = c.submit(req.seed(seed.wrapping_add(1))).expect("third submit");
+        assert_eq!(t3.cache_outcome(), Some(CacheOutcome::Miss));
+        t3.wait().expect("third completes");
+
+        let stats = c.stats();
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.completed, 3);
+        let rc = c.request_cache_stats();
+        assert_eq!(rc.hits, 1, "request-cache hit counter");
+        assert_eq!(rc.misses, 2, "request-cache miss counter");
+        assert_eq!(rc.entries, 2, "both generations stored");
+        assert!(rc.bytes > 0, "size accounting tracks payloads");
+        c.shutdown();
+    });
+}
+
+/// Shared-tier quality: a full-window reuse consumer riding a
+/// publisher's uncond eps must land at least as close to the full-CFG
+/// reference (SSIM on decoded images) as the cond-only floor — the
+/// shared tier restores guidance, it never costs quality.
+#[test]
+fn prop_shared_uncond_ssim_dominates_cond_only() {
+    forall("shared uncond SSIM >= cond-only", 4, |g| {
+        let e = engine();
+        let seed = g.u64();
+        let prompt = format!("shared {}", g.word(6));
+        let steps = 8;
+        let full = GenerationRequest::new(prompt.clone())
+            .steps(steps)
+            .seed(seed)
+            .scheduler(SchedulerKind::Ddim)
+            .decode(true);
+        let cond_only = full
+            .clone()
+            .selective(WindowSpec::last(1.0))
+            .strategy(GuidanceStrategy::CondOnly);
+        let consumer = full
+            .clone()
+            .selective(WindowSpec::last(1.0))
+            .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 });
+
+        let full_out = e.generate(&full).expect("full CFG");
+        let cond_out = e.generate(&cond_only).expect("cond-only");
+
+        // publisher (full CFG, same trajectory) steps ahead; the
+        // consumer's anchor-free shared plan eats its published eps
+        let shared = SharedUncondCache::new(0.5);
+        let mut states = vec![e.begin_shared(&full).expect("publisher")];
+        for _ in 0..3 {
+            e.step_batch_shared(&mut states, Some(&shared)).expect("publisher steps");
+        }
+        states.push(e.begin_shared(&consumer).expect("consumer"));
+        while states.iter().any(|s| !s.is_done()) {
+            e.step_batch_shared(&mut states, Some(&shared)).expect("cohort steps");
+        }
+        let consumer_state = states.pop().expect("consumer state");
+        assert!(consumer_state.failed_reason().is_none(), "warm cache never cold-fails");
+        let shared_out = e.finish(consumer_state).expect("consumer finishes");
+        assert!(shared.stats().hits >= steps as u64, "every consumer step hit the tier");
+
+        let reference = full_out.image.as_ref().expect("decoded");
+        let ssim_shared = ssim(shared_out.image.as_ref().expect("decoded"), reference);
+        let ssim_cond = ssim(cond_out.image.as_ref().expect("decoded"), reference);
+        assert!(
+            ssim_shared >= ssim_cond - 1e-9,
+            "shared reuse ({ssim_shared:.4}) must not trail cond-only ({ssim_cond:.4})"
+        );
+    });
+}
+
+/// Dedup conservation: N identical requests behind a busy worker
+/// coalesce into ONE physical generation with N deliveries — every
+/// logical request is retired (stats + its own span, closed exactly
+/// once), while batch/UNet work is charged once.
+#[test]
+fn prop_dedup_coalesces_to_one_generation() {
+    forall("dedup: 1 generation, N deliveries", 3, |g| {
+        let waiters = g.usize_in(2, 4);
+        let telemetry = Telemetry::on();
+        let c = Coordinator::start_full(
+            engine(),
+            CoordinatorConfig {
+                max_batch: 1,
+                workers: 1,
+                cache: CacheConfig {
+                    request_cache: true,
+                    dedup: true,
+                    ..CacheConfig::default()
+                },
+                ..CoordinatorConfig::default()
+            },
+            None,
+            Some(CoordSink::new(&telemetry, "single", true)),
+        );
+        // hold the only worker so the identical burst queues behind it
+        let occupant = GenerationRequest::new("occupant")
+            .steps(800)
+            .scheduler(SchedulerKind::Ddim)
+            .decode(false);
+        let t_occ = c.submit_qos(occupant, QosMeta::default()).expect("occupant");
+
+        let req = random_request(g);
+        let primary = c.submit_qos(req.clone(), QosMeta::default()).expect("primary");
+        assert_eq!(primary.cache_outcome(), Some(CacheOutcome::Miss));
+        let joined: Vec<_> = (0..waiters)
+            .map(|i| {
+                let t = c
+                    .submit_qos(req.clone(), QosMeta::default())
+                    .unwrap_or_else(|e| panic!("waiter {i}: {e}"));
+                assert_eq!(t.cache_outcome(), Some(CacheOutcome::Dedup), "waiter {i}");
+                t
+            })
+            .collect();
+
+        t_occ.wait().expect("occupant completes");
+        let first = primary.wait().expect("primary completes");
+        for (i, t) in joined.into_iter().enumerate() {
+            let out = t.wait().unwrap_or_else(|e| panic!("waiter {i} delivery: {e}"));
+            assert_bit_equal(&first, &out, "coalesced delivery");
+        }
+
+        let stats = c.stats();
+        let logical = 2 + waiters as u64; // occupant + primary + joiners
+        assert_eq!(stats.dedup_coalesced, waiters as u64);
+        assert_eq!(stats.completed, logical, "every logical request retired");
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.cache_hits, 0, "joins are not replays");
+        // physical work: occupant's batch + ONE coalesced generation
+        assert_eq!(stats.batches, 2, "one physical generation for the burst");
+        assert_eq!(stats.batched_requests, 2);
+
+        // a late identical submit replays from the request cache instead
+        let late = c.submit_qos(req, QosMeta::default()).expect("late");
+        assert_eq!(late.cache_outcome(), Some(CacheOutcome::Hit));
+        assert_bit_equal(&first, &late.wait().expect("hit resolves"), "late hit");
+        c.shutdown();
+
+        let spans = telemetry.traces().spans();
+        assert_eq!(spans.len(), logical as usize + 1, "one span per logical request");
+        for span in &spans {
+            assert_eq!(span.terminal_events(), 1, "span {} closes exactly once", span.id);
+            assert!(span.has("retired"), "span {} retired", span.id);
+        }
+        let joins: usize = spans
+            .iter()
+            .map(|s| s.events.iter().filter(|e| e.event.name() == "dedup_join").count())
+            .sum();
+        assert_eq!(joins, waiters, "every coalesced waiter logged its join");
+        let hits: usize = spans
+            .iter()
+            .map(|s| s.events.iter().filter(|e| e.event.name() == "cache_hit").count())
+            .sum();
+        assert_eq!(hits, 1, "the late replay logged its hit");
+    });
+}
+
+/// Cold-shared-reuse regression at the serving layer: a planned-reuse
+/// sample whose shared tier has nothing to offer fails alone, with a
+/// typed engine error — the coordinator (and any cohort mates) survive.
+#[test]
+fn cold_shared_reuse_fails_one_sample_not_the_coordinator() {
+    let c = Coordinator::start(
+        engine(),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 4,
+            workers: 1,
+            cache: CacheConfig { shared_uncond: true, ..CacheConfig::default() },
+            ..CoordinatorConfig::default()
+        },
+    );
+    let doomed = GenerationRequest::new("cold consumer")
+        .steps(4)
+        .selective(WindowSpec::last(1.0))
+        .strategy(GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 })
+        .decode(false);
+    match c.generate(doomed) {
+        Err(Error::Engine(msg)) => {
+            assert!(msg.contains("cold"), "typed cold-cache error, got {msg:?}")
+        }
+        other => panic!("expected Error::Engine on a cold shared tier, got {other:?}"),
+    }
+    // the coordinator is not poisoned: ordinary work still completes
+    let out = c
+        .generate(GenerationRequest::new("survivor").steps(3).decode(false))
+        .expect("coordinator survives a failed sample");
+    assert_eq!(out.steps, 3);
+    let stats = c.stats();
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.completed, 1);
+    c.shutdown();
+}
