@@ -1,10 +1,12 @@
 //! End-to-end serving validation (the DESIGN.md §6 driver).
 //!
 //! Boots the full stack — ModelStack → Engine → Coordinator → TCP server
-//! — then plays a mixed client workload over the JSON-lines protocol:
-//! baseline CFG requests interleaved with selective-guidance requests at
-//! the paper's operating points. Reports per-config latency and aggregate
-//! throughput. Recorded in EXPERIMENTS.md §End-to-end.
+//! — then plays a mixed client workload over the wire-protocol v2
+//! envelope (DESIGN.md §14): baseline CFG requests interleaved with
+//! selective-guidance requests at the paper's operating points, followed
+//! by a streamed variations fan-out with progressive previews. Reports
+//! per-config latency and aggregate throughput. Recorded in
+//! EXPERIMENTS.md §End-to-end.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_batch
@@ -14,7 +16,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use selective_guidance::config::EngineConfig;
-use selective_guidance::coordinator::{Coordinator, CoordinatorConfig};
+use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
 use selective_guidance::engine::Engine;
 use selective_guidance::json::Value;
 use selective_guidance::metrics::SampleStats;
@@ -61,6 +63,7 @@ fn main() -> selective_guidance::Result<()> {
             for i in 0..per_config {
                 let prompt = prompts::TABLE2[(ci * per_config + i) % prompts::TABLE2.len()];
                 let mut req = Value::obj()
+                    .with("v", 2i64)
                     .with("op", "generate")
                     .with("prompt", prompt)
                     .with("steps", steps)
@@ -106,6 +109,58 @@ fn main() -> selective_guidance::Result<()> {
     );
     assert_eq!(stats.completed as usize, total_reqs);
     assert_eq!(stats.failed, 0);
+
+    // ---- streaming plane (DESIGN.md §14): v2 event frames -------------
+    // A continuous-mode coordinator serves a variations fan-out (two
+    // seeds sharing one compiled plan) with progressive previews, all
+    // multiplexed over a single connection as id-stamped event frames.
+    let streamer = Coordinator::start(
+        Arc::clone(&engine),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 8,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let stream_server = Server::start(Arc::clone(&streamer), "127.0.0.1:0")?;
+    let mut sc = Client::connect(&stream_server.addr().to_string())?;
+    let sid = sc.send(
+        Value::obj()
+            .with("v", 2i64)
+            .with("op", "generate")
+            .with("prompt", prompts::TABLE2[0])
+            .with("steps", steps)
+            .with("scheduler", "pndm")
+            .with("seed", 7i64)
+            .with("window_fraction", 0.5)
+            .with("window_position", "last")
+            .with("stream", true)
+            .with("preview_every", (steps / 4).max(1))
+            .with("variations", 2i64),
+    )?;
+    let (mut done, mut progress, mut previews) = (0usize, 0usize, 0usize);
+    while done < 2 {
+        let frame = sc.read_frame()?;
+        assert_eq!(frame.get("id").and_then(Value::as_i64), Some(sid), "{frame}");
+        match frame.get("event").and_then(Value::as_str) {
+            Some("queued") => {}
+            Some("progress") => progress += 1,
+            Some("preview") => previews += 1,
+            Some("done") => {
+                assert_eq!(frame.get("ok").and_then(Value::as_bool), Some(true), "{frame}");
+                done += 1;
+            }
+            other => panic!("unexpected stream frame {other:?}: {frame}"),
+        }
+    }
+    println!(
+        "\nstreamed 2 variations over one connection: {progress} progress frames, {previews} previews"
+    );
+    assert!(previews >= 1, "preview cadence produced no frames");
+    let sstats = streamer.stats();
+    assert_eq!(sstats.completed, 2);
+    assert_eq!(sstats.failed, 0);
     println!("serve_batch OK");
     Ok(())
 }

@@ -1,0 +1,252 @@
+//! Streaming serving-plane soak — the DESIGN.md §14 headline claims,
+//! enforced in virtual time on the deterministic synthetic backend.
+//!
+//! Two experiments, both driven through the continuous batcher (the
+//! exact component the streaming multiplexer submits into, so the
+//! cancel path measured here is the wire `cancel` op's path):
+//!
+//! 1. **Mixed-trace soak, no class starves** — a 6-scenario round-robin
+//!    trace (text2img × {dual, interval, cadence}, img2img, variations,
+//!    streamed-with-30%-cancel-at-half) runs under FIFO admission until
+//!    a completion target. Every scenario class must retire a fair
+//!    share of samples: the admission order the QoS layer feeds must
+//!    not structurally favor cheap plans.
+//! 2. **Cancel reclaims capacity** — cancel-heavy traffic (half the
+//!    requests abandoned at half their trajectory) measured twice: once
+//!    honoring cancels (slots return to admission headroom mid-cohort)
+//!    and once ignoring them (abandoned samples run to completion, the
+//!    pre-cancel-op behavior). Honoring cancels must lift useful
+//!    completed-requests/tick by >= 1.15x.
+//!
+//! All quantities are virtual-time ratios (one cohort iteration == one
+//! tick), reproducible bit-for-bit; `tools/bench_gate.rs` holds the
+//! gated ones to `ci/bench_baselines/BENCH_stream.json`.
+//!
+//! Run: `cargo bench --bench stream_serving` (`--fast` for CI smoke)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use selective_guidance::benchutil::{write_result_json, BenchArgs, Table};
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::ContinuousBatcher;
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::guidance::{GuidanceSchedule, GuidanceStrategy, ReuseKind, WindowSpec};
+use selective_guidance::json::Value;
+use selective_guidance::prompts;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+
+const CLASSES: [&str; 6] =
+    ["dual", "interval", "cadence", "img2img", "variations", "stream-cancel"];
+
+fn base(i: usize, steps: usize) -> GenerationRequest {
+    GenerationRequest::new(prompts::TABLE2[i % prompts::TABLE2.len()])
+        .steps(steps)
+        .scheduler(SchedulerKind::Ddim)
+        .seed(i as u64)
+        .decode(false)
+}
+
+/// One trace entry: a request, its scenario class, and whether the
+/// client abandons it at half its trajectory.
+struct Entry {
+    req: GenerationRequest,
+    class: usize,
+    cancel_at_half: bool,
+}
+
+/// The 6-scenario round: five singles plus one variations group of 4,
+/// the group sharing one compiled plan. Seeds/prompts stay distinct
+/// across rounds.
+fn mixed_round(round: usize, steps: usize) -> Vec<Entry> {
+    let hold = GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: 0 };
+    let i = round * CLASSES.len();
+    let mut out = vec![
+        Entry { req: base(i, steps), class: 0, cancel_at_half: false },
+        Entry {
+            req: base(i + 1, steps)
+                .with_schedule(GuidanceSchedule::interval(0.25, 0.75))
+                .strategy(hold),
+            class: 1,
+            cancel_at_half: false,
+        },
+        Entry {
+            req: base(i + 2, steps)
+                .with_schedule(GuidanceSchedule::cadence(2))
+                .strategy(hold),
+            class: 2,
+            cancel_at_half: false,
+        },
+        Entry {
+            req: base(i + 3, steps).selective(WindowSpec::last(0.5)).img2img(0.5),
+            class: 3,
+            cancel_at_half: false,
+        },
+    ];
+    let vars = base(i + 4, steps)
+        .selective(WindowSpec::last(0.5))
+        .variations(4)
+        .expect("variations fan-out");
+    out.extend(vars.into_iter().map(|req| Entry { req, class: 4, cancel_at_half: false }));
+    // the streamed class: 3 of every 10 rounds abandon mid-flight
+    out.push(Entry { req: base(i + 5, steps), class: 5, cancel_at_half: round % 10 < 3 });
+    out
+}
+
+/// Drive a trace through the batcher in virtual time until `target`
+/// useful samples complete. Useful = never-abandoned: with cancels
+/// honored an abandoned sample can never retire; with cancels ignored
+/// it retires but its output is waste either way, so it never counts.
+/// Returns (ticks, useful-completions-per-class, cancelled, waste).
+fn soak(
+    engine: &Arc<Engine>,
+    trace: &[Entry],
+    budget: usize,
+    target: usize,
+    honor_cancel: bool,
+) -> (usize, Vec<usize>, usize, usize) {
+    let mut cb = ContinuousBatcher::new(Arc::clone(engine), budget).expect("batcher");
+    let mut next = 0usize;
+    let mut meta: BTreeMap<u64, usize> = BTreeMap::new(); // id -> trace index
+    let mut done_per_class = vec![0usize; CLASSES.len()];
+    let mut done = 0usize;
+    let mut cancelled = 0usize;
+    let mut waste = 0usize;
+    let mut ticks = 0usize;
+    while done < target {
+        while next < trace.len() {
+            match cb.try_admit(&trace[next].req).expect("admit") {
+                Some(id) => {
+                    meta.insert(id, next);
+                    next += 1;
+                }
+                None => break,
+            }
+        }
+        assert!(cb.in_flight() > 0, "trace exhausted before reaching target");
+        let outcome = cb.step().expect("step");
+        assert!(outcome.slots_used <= budget, "slot budget violated");
+        ticks += 1;
+        for (id, _) in outcome.retired {
+            let e = &trace[meta[&id]];
+            if e.cancel_at_half {
+                assert!(!honor_cancel, "a cancelled sample must never retire");
+                waste += 1;
+            } else {
+                done_per_class[e.class] += 1;
+                done += 1;
+            }
+        }
+        if honor_cancel {
+            // the wire cancel lands at an iteration boundary: abandon
+            // any in-flight sample past half its trajectory, returning
+            // its reserved slots to admission headroom immediately
+            for (id, step, steps) in cb.progress() {
+                if trace[meta[&id]].cancel_at_half && step >= steps / 2 && cb.cancel(id) {
+                    cancelled += 1;
+                }
+            }
+        }
+        assert!(ticks < 100_000, "soak failed to reach target");
+    }
+    (ticks, done_per_class, cancelled, waste)
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let engine = Arc::new(Engine::new(
+        Arc::new(ModelStack::synthetic()),
+        EngineConfig::default(),
+    ));
+    let steps = if args.fast { 12 } else { 20 };
+    let budget = 8usize;
+
+    // ---- experiment 1: mixed-trace soak, no class starves ---------------
+    let target = if args.fast { 60 } else { 120 };
+    let rounds = 4 * target / 9; // ~4x the measured window stays offered
+    let trace: Vec<Entry> = (0..rounds).flat_map(|r| mixed_round(r, steps)).collect();
+    let (ticks_mix, per_class, cancelled_mix, _) = soak(&engine, &trace, budget, target, true);
+    let fair = target as f64 / CLASSES.len() as f64;
+    let min_share = per_class
+        .iter()
+        .map(|&c| c as f64 / fair)
+        .fold(f64::INFINITY, f64::min);
+
+    let mut table = Table::new(&["class", "completed", "share of fair"]);
+    for (name, &c) in CLASSES.iter().zip(&per_class) {
+        table.row(&[(*name).into(), format!("{c}"), format!("{:.2}", c as f64 / fair)]);
+    }
+    println!(
+        "\nStreaming soak — virtual time, slot budget {budget}, {steps} steps, \
+         first {target} completions ({cancelled_mix} cancelled mid-flight, {ticks_mix} ticks):\n"
+    );
+    table.print();
+    assert!(
+        per_class.iter().all(|&c| c > 0) && min_share >= 0.3,
+        "a scenario class starved: {per_class:?} (min share {min_share:.2})"
+    );
+
+    // ---- experiment 2: cancel-heavy traffic, honored vs ignored ---------
+    // all-dual streamed traffic, every second request abandoned at half
+    // its steps — half the offered slot-work is reclaimable
+    let useful = if args.fast { 35 } else { 70 };
+    let heavy: Vec<Entry> = (0..useful * 4)
+        .map(|i| Entry { req: base(i, steps), class: 0, cancel_at_half: i % 2 == 0 })
+        .collect();
+    let (ticks_honored, _, n_cancelled, _) = soak(&engine, &heavy, budget, useful, true);
+    assert!(n_cancelled > 0, "cancel-heavy trace produced no cancels");
+    let (ticks_ignored, _, _, waste) = soak(&engine, &heavy, budget, useful, false);
+    assert!(waste > 0, "cancel-ignored run must burn slots on abandoned samples");
+    let thr_honored = useful as f64 / ticks_honored as f64;
+    let thr_ignored = useful as f64 / ticks_ignored as f64;
+    let cancel_speedup = thr_honored / thr_ignored;
+
+    let mut table = Table::new(&["policy", "ticks", "useful/tick", "speedup"]);
+    table.row(&[
+        "cancel ignored".into(),
+        format!("{ticks_ignored}"),
+        format!("{thr_ignored:.4}"),
+        "1.00x".into(),
+    ]);
+    table.row(&[
+        "cancel honored".into(),
+        format!("{ticks_honored}"),
+        format!("{thr_honored:.4}"),
+        format!("{cancel_speedup:.2}x"),
+    ]);
+    println!(
+        "\nCancel-heavy traffic — 50% of requests abandoned at half their steps, \
+         first {useful} useful completions ({n_cancelled} cancels honored; \
+         {waste} abandoned samples ran to completion when ignored):\n"
+    );
+    table.print();
+    assert!(
+        cancel_speedup >= 1.15,
+        "honoring cancel must reclaim >= 1.15x useful throughput, got {cancel_speedup:.3}x"
+    );
+
+    write_result_json(
+        "stream_serving",
+        &Value::obj()
+            .with("steps", steps as i64)
+            .with("slot_budget", budget as i64)
+            .with("soak_target", target as i64)
+            .with("soak_ticks", ticks_mix as i64)
+            .with("soak_cancelled", cancelled_mix as i64)
+            .with("starvation_min_share", min_share)
+            .with("useful_target", useful as i64)
+            .with("ticks_cancel_honored", ticks_honored as i64)
+            .with("ticks_cancel_ignored", ticks_ignored as i64)
+            .with("cancel_speedup", cancel_speedup),
+    );
+    // the regression-gate view (virtual-time ratios only), compared
+    // against ci/bench_baselines/BENCH_stream.json by tools/bench_gate.rs
+    write_result_json(
+        "BENCH_stream",
+        &Value::obj()
+            .with("cancel_speedup", cancel_speedup)
+            .with("starvation_min_share", min_share)
+            .with("classes_served", per_class.iter().filter(|&&c| c > 0).count() as i64),
+    );
+}

@@ -169,7 +169,7 @@ impl CacheOutcome {
 /// bit-identical outputs for them.
 pub fn canonical_key(req: &GenerationRequest) -> Result<String> {
     let plan = req.plan()?;
-    Ok(format!(
+    let mut key = format!(
         "prompt={:?} seed={} steps={} sched={} scale={:08x} plan={} strategy={:?} \
          schedule={:?} adaptive={:?} decode={}",
         req.prompt,
@@ -182,7 +182,34 @@ pub fn canonical_key(req: &GenerationRequest) -> Result<String> {
         req.schedule,
         req.adaptive,
         req.decode,
-    ))
+    );
+    // img2img identity: two requests whose plans agree can still start
+    // from different latents. Strength enters as exact bits (it picks
+    // the scheduler offset AND scales the init noise), the latent as a
+    // content hash — "synthetic" marks the seed-derived init, already
+    // covered by the seed field. text2img keys are unchanged.
+    if let Some(init) = &req.init {
+        key.push_str(&format!(" strength={:016x} init=", init.strength.to_bits()));
+        match &init.latent {
+            Some(lat) => key.push_str(&format!("{:016x}", fnv1a_f32(lat))),
+            None => key.push_str("synthetic"),
+        }
+    }
+    Ok(key)
+}
+
+/// FNV-1a over the raw f32 bits — a cheap content digest for explicit
+/// init latents (collision-resistant enough for a cache key that also
+/// carries the full request identity).
+fn fnv1a_f32(data: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &f in data {
+        for b in f.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
 }
 
 /// Counters snapshot for the exact-match request cache.
@@ -516,6 +543,28 @@ mod tests {
         assert_ne!(a, canonical_key(&base().seed(7)).unwrap());
         assert_ne!(a, canonical_key(&base().guidance_scale(7.0)).unwrap());
         assert_ne!(a, canonical_key(&base().decode(true)).unwrap());
+    }
+
+    #[test]
+    fn canonical_key_folds_img2img_identity() {
+        use std::sync::Arc;
+        let base = || GenerationRequest::new("a castle at dusk").steps(8).decode(false);
+        let text = canonical_key(&base()).unwrap();
+        // text2img keys are untouched by the img2img extension
+        assert!(!text.contains("strength="));
+        let syn = canonical_key(&base().img2img(0.5)).unwrap();
+        assert_ne!(text, syn);
+        assert!(syn.ends_with("init=synthetic"));
+        // strength enters as exact bits even when executed_steps agree
+        let syn51 = canonical_key(&base().img2img(0.51)).unwrap();
+        assert_eq!(base().img2img(0.5).executed_steps(), base().img2img(0.51).executed_steps());
+        assert_ne!(syn, syn51);
+        // an explicit latent is content-hashed, not position-blind
+        let lat = |v: Vec<f32>| canonical_key(&base().init_latent(Arc::new(v), 0.5)).unwrap();
+        let a = lat(vec![1.0, 2.0]);
+        assert_ne!(a, syn);
+        assert_ne!(a, lat(vec![2.0, 1.0]));
+        assert_eq!(a, lat(vec![1.0, 2.0]));
     }
 
     #[test]

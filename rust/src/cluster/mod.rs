@@ -56,7 +56,8 @@ use std::time::{Duration, Instant};
 use crate::cache::{canonical_key, CacheConfig};
 use crate::config::{ServerConfig, TomlDoc};
 use crate::coordinator::{
-    BatchMode, Coordinator, CoordinatorConfig, CoordinatorStats, Submit, Ticket,
+    BatchMode, CancelHandle, Coordinator, CoordinatorConfig, CoordinatorStats, Submit, Ticket,
+    WatchOptions, WatchSink, Watched,
 };
 use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
@@ -326,6 +327,12 @@ struct ClusterJob {
     /// router's affinity signal — identical keys prefer the replica
     /// whose cache already holds (or is computing) the entry.
     key: Option<String>,
+    /// Watched submissions: the client-facing progress sender, cloned
+    /// into every replica leg so events keep flowing across a requeue.
+    watch: Option<WatchSink>,
+    /// Watched submissions: the one cancel flag shared by the client
+    /// handle and every replica leg (a failover must stay cancellable).
+    cancel: Option<Arc<AtomicBool>>,
 }
 
 /// Bounded key→replica affinity (insertion-order eviction): routing
@@ -391,6 +398,7 @@ struct Core {
     completed: AtomicU64,
     failed: AtomicU64,
     deadline_missed: AtomicU64,
+    cancelled: AtomicU64,
     requeued: AtomicU64,
     ejected: AtomicU64,
     /// Outstanding requests across the whole cluster (the aggregate
@@ -455,7 +463,14 @@ impl Core {
             // see each other's reservations
             let outstanding =
                 replica.outstanding_evals.fetch_add(job.cost, Ordering::Relaxed) + job.cost;
-            match replica.coordinator.submit_preadmitted(job.req.clone(), job.meta) {
+            let watch = match (&job.watch, &job.cancel) {
+                (Some(w), Some(c)) => Some((w.clone(), Arc::clone(c))),
+                _ => None,
+            };
+            match replica
+                .coordinator
+                .submit_preadmitted_watched(job.req.clone(), job.meta, watch)
+            {
                 Ok(inner) => {
                     replica.routed.fetch_add(1, Ordering::Relaxed);
                     if let Some(m) = &self.metrics {
@@ -602,6 +617,7 @@ impl ReplicaSet {
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             deadline_missed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
             requeued: AtomicU64::new(0),
             ejected: AtomicU64::new(0),
             pending: AtomicU64::new(0),
@@ -656,13 +672,39 @@ impl ReplicaSet {
         Ok(self.submit_traced(req, meta)?.0)
     }
 
+    /// Watched submission through the cluster: the progress stream and
+    /// cancel handle span replica legs — a request requeued after a
+    /// replica death keeps streaming to (and stays cancellable by) the
+    /// same client-side handles.
+    pub fn submit_watched(
+        &self,
+        req: GenerationRequest,
+        meta: QosMeta,
+        watch: WatchOptions,
+    ) -> Result<Watched> {
+        let (ptx, progress) = mpsc::channel();
+        let cancel = CancelHandle::new();
+        let sink = WatchSink { tx: ptx, preview_every: watch.preview_every };
+        let (ticket, _) = self.submit_traced_inner(req, meta, Some((sink, cancel.flag())))?;
+        Ok(Watched { ticket, progress, cancel })
+    }
+
     /// [`ReplicaSet::submit_qos`] plus a [`PlacementTrace`] recording
     /// which replica(s) the request is served on — the observability
     /// hook the determinism and failure tests key on.
     pub fn submit_traced(
         &self,
+        req: GenerationRequest,
+        meta: QosMeta,
+    ) -> Result<(Ticket, PlacementTrace)> {
+        self.submit_traced_inner(req, meta, None)
+    }
+
+    fn submit_traced_inner(
+        &self,
         mut req: GenerationRequest,
         mut meta: QosMeta,
+        watch: Option<(WatchSink, Arc<AtomicBool>)>,
     ) -> Result<(Ticket, PlacementTrace)> {
         req.validate()?;
         let core = &self.core;
@@ -714,12 +756,19 @@ impl ReplicaSet {
         let (tx, rx) = mpsc::channel();
         let placed = Arc::new(Mutex::new(Vec::new()));
         // the canonical key doubles as the affinity signal; plan() just
-        // succeeded above, so key derivation cannot fail here
+        // succeeded above, so key derivation cannot fail here. Watched
+        // jobs stay keyless — they bypass the replica cache tiers, so
+        // pinning them to a cache-affine replica buys nothing
         let key = core
             .affinity
             .is_some()
-            .then(|| canonical_key(&req).ok())
+            .then(|| watch.is_none().then(|| canonical_key(&req).ok()))
+            .flatten()
             .flatten();
+        let (watch_sink, cancel_flag) = match watch {
+            Some((w, c)) => (Some(w), Some(c)),
+            None => (None, None),
+        };
         let job = ClusterJob {
             req,
             respond: tx,
@@ -729,6 +778,8 @@ impl ReplicaSet {
             submitted_at: Instant::now(),
             original_deadline: meta.deadline,
             key,
+            watch: watch_sink,
+            cancel: cancel_flag,
             meta,
         };
         let trace = meta.trace;
@@ -806,6 +857,7 @@ impl ReplicaSet {
             failed: core.failed.load(Ordering::Relaxed),
             rejected: core.rejected.load(Ordering::Relaxed),
             deadline_missed: core.deadline_missed.load(Ordering::Relaxed),
+            cancelled: core.cancelled.load(Ordering::Relaxed),
             requeued: core.requeued.load(Ordering::Relaxed),
             ejected: core.ejected.load(Ordering::Relaxed),
             queue_depth: core.pending.load(Ordering::Relaxed),
@@ -857,6 +909,17 @@ impl Drop for ReplicaSet {
 }
 
 impl Submit for ReplicaSet {
+    fn submit_watched(
+        &self,
+        req: GenerationRequest,
+        meta: QosMeta,
+        watch: WatchOptions,
+    ) -> Result<Watched> {
+        ReplicaSet::submit_watched(self, req, meta, watch)
+    }
+
+    // the unwatched path keeps cluster cache affinity + replica cache
+    // tiers (the default adapter would bypass them)
     fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
         ReplicaSet::submit_qos(self, req, meta)
     }
@@ -947,6 +1010,9 @@ fn relay_outcome(core: &Arc<Core>, id: usize, job: ClusterJob, result: Result<Ge
             // surfaces to the client. `Error::Engine` (typed per-sample
             // failure, e.g. cold shared-reuse cache) is deliberately
             // NOT requeueable: it would fail identically anywhere.
+            // `Error::Cancelled` is NOT requeueable either — the client
+            // abandoned the request; re-running it elsewhere would undo
+            // the cancel.
             let requeueable =
                 matches!(&e, Error::Rejected { code: 503, .. } | Error::Coordinator(_));
             if requeueable && !core.draining.load(Ordering::SeqCst) {
@@ -1000,6 +1066,13 @@ fn relay_outcome(core: &Arc<Core>, id: usize, job: ClusterJob, result: Result<Ge
                     if let Some(m) = &core.metrics {
                         m.on_expired(job.meta.trace);
                     }
+                } else if matches!(e, Error::Cancelled(_)) {
+                    // the replica sink already counted it (non-terminal);
+                    // the cluster owns the span terminal
+                    core.cancelled.fetch_add(1, Ordering::Relaxed);
+                    if let Some(m) = &core.metrics {
+                        m.on_cancelled(job.meta.trace);
+                    }
                 } else {
                     core.failed.fetch_add(1, Ordering::Relaxed);
                     if let Some(m) = &core.metrics {
@@ -1042,6 +1115,9 @@ pub struct ClusterStats {
     /// Shed by cluster-level QoS admission.
     pub rejected: u64,
     pub deadline_missed: u64,
+    /// Cancelled mid-flight by clients (never requeued — the client
+    /// abandoned the request).
+    pub cancelled: u64,
     /// Jobs moved to a surviving replica after a failure/ejection.
     pub requeued: u64,
     /// Replicas ejected via [`ReplicaSet::kill`].

@@ -288,6 +288,11 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Batching window: how long the fixed batcher waits to fill a batch.
     pub batch_wait_ms: u64,
+    /// Default preview cadence for streamed (`"stream": true`) requests
+    /// that don't set their own `preview_every`: decode + push an
+    /// intermediate preview frame every N denoising steps. 0 disables
+    /// previews (progress events still flow).
+    pub preview_every: usize,
 }
 
 impl Default for ServerConfig {
@@ -299,6 +304,7 @@ impl Default for ServerConfig {
             slot_budget: 8,
             workers: 1,
             batch_wait_ms: 2,
+            preview_every: 0,
         }
     }
 }
@@ -348,6 +354,11 @@ impl ServerConfig {
             cfg.batch_wait_ms =
                 v.as_i64().ok_or_else(|| Error::Config("batch_wait_ms must be int".into()))?
                     as u64;
+        }
+        if let Some(v) = doc.get("server", "preview_every") {
+            cfg.preview_every = v
+                .as_usize()
+                .ok_or_else(|| Error::Config("preview_every must be int >= 0".into()))?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -466,6 +477,11 @@ pub struct RunConfig {
     /// `cache::CacheConfig`): exact-match request cache, in-flight
     /// dedup, and the cross-request shared uncond tier.
     pub cache: crate::cache::CacheConfig,
+    /// `[workload]` section — absent by default. A deployment file can
+    /// carry its evaluation traffic shape (arrival process, img2img
+    /// strength, variation fan-out, popularity skew) next to the
+    /// serving config; see [`crate::workload::WorkloadSpec::from_toml`].
+    pub workload: Option<crate::workload::WorkloadSpec>,
 }
 
 impl RunConfig {
@@ -482,14 +498,17 @@ impl RunConfig {
             .and_then(|v| v.as_str().map(String::from));
         let server = ServerConfig::from_toml(&doc)?;
         let cluster = crate::cluster::ClusterConfig::from_toml(&doc, &server)?;
+        let engine = EngineConfig::from_toml(&doc)?;
+        let workload = crate::workload::WorkloadSpec::from_toml(&doc, &engine)?;
         Ok(RunConfig {
             artifacts_dir,
-            engine: EngineConfig::from_toml(&doc)?,
+            engine,
             server,
             qos: QosConfig::from_toml(&doc)?,
             cluster,
             telemetry: TelemetryConfig::from_toml(&doc)?,
             cache: crate::cache::CacheConfig::from_toml(&doc)?,
+            workload,
         })
     }
 }
@@ -787,6 +806,42 @@ ewma_alpha = 0.3
         )
         .is_err());
         assert!(RunConfig::from_str("[cache]\ndedup = \"yes\"\n").is_err());
+    }
+
+    #[test]
+    fn server_preview_cadence() {
+        // default: progress events only, no preview decodes
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.server.preview_every, 0);
+        let cfg = RunConfig::from_str("[server]\npreview_every = 5\n").unwrap();
+        assert_eq!(cfg.server.preview_every, 5);
+        assert!(RunConfig::from_str("[server]\npreview_every = -1\n").is_err());
+        assert!(RunConfig::from_str("[server]\npreview_every = \"often\"\n").is_err());
+    }
+
+    #[test]
+    fn workload_section_rides_run_config() {
+        use crate::workload::ArrivalProcess;
+        // absent by default
+        let cfg = RunConfig::from_str(SAMPLE).unwrap();
+        assert!(cfg.workload.is_none());
+        // present: traffic shape parsed, guidance policy inherited from
+        // the resolved [engine] section of the same file
+        let cfg = RunConfig::from_str(
+            "[engine]\nsteps = 24\n[workload]\narrival = \"uniform\"\nrate_per_s = 8.0\n\
+             requests = 6\nstrength = 0.5\nvariations = 2\n",
+        )
+        .unwrap();
+        let spec = cfg.workload.expect("workload section");
+        assert_eq!(spec.arrivals, ArrivalProcess::Uniform { rate_per_s: 8.0 });
+        assert_eq!(spec.steps, 24);
+        assert_eq!(spec.strength, Some(0.5));
+        assert_eq!(spec.variations, 2);
+        let trace = spec.synthesize();
+        assert_eq!(trace.len(), 12); // 6 arrivals x 2 variations
+        assert!(trace.iter().all(|e| e.request.executed_steps() == 12));
+        // a bad workload section fails the whole config load
+        assert!(RunConfig::from_str("[workload]\nvariations = 0\n").is_err());
     }
 
     #[test]

@@ -152,6 +152,42 @@ impl ContinuousBatcher {
         Ok(Some(id))
     }
 
+    /// Drop an in-flight sample without finishing it, mirroring the
+    /// per-sample failure drain: its reserved slots return to admission
+    /// headroom at the next boundary and the rest of the cohort is
+    /// untouched. Returns `false` when `id` is not (or no longer) in the
+    /// cohort — cancel racing retirement is a benign no-op.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self.ids.iter().position(|&x| x == id) {
+            Some(i) => {
+                self.ids.swap_remove(i);
+                self.states.swap_remove(i);
+                if let Some(tm) = &self.telemetry {
+                    tm.on_step(0, 0, self.committed_slots(), self.states.len());
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Per-sample progress snapshot: `(id, next_step_index, total_steps)`
+    /// for every in-flight sample.
+    pub fn progress(&self) -> Vec<(u64, usize, usize)> {
+        self.ids
+            .iter()
+            .zip(&self.states)
+            .map(|(&id, st)| (id, st.step_index(), st.steps()))
+            .collect()
+    }
+
+    /// Decode the intermediate latent of an in-flight sample into a
+    /// preview image. `None` when `id` already retired or was cancelled.
+    pub fn preview(&self, id: u64) -> Option<Result<crate::image::RgbImage>> {
+        let i = self.ids.iter().position(|&x| x == id)?;
+        Some(self.engine.preview(&self.states[i]))
+    }
+
     /// Run one engine iteration over the cohort and retire every sample
     /// that completed. The per-iteration slot usage is invariantly within
     /// the budget (admission reserves peak remaining costs).
@@ -298,5 +334,34 @@ mod tests {
         }
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn cancel_frees_headroom_and_never_retires() {
+        let mut cb = ContinuousBatcher::new(engine(), 4).unwrap();
+        let a = cb.try_admit(&req(0.0)).unwrap().unwrap();
+        let b = cb.try_admit(&req(0.0)).unwrap().unwrap();
+        assert_eq!(cb.headroom(), 0);
+        cb.step().unwrap();
+        // previews and progress cover exactly the in-flight set
+        assert_eq!(cb.progress().len(), 2);
+        assert!(cb.preview(a).is_some());
+        // cancel mid-flight: slots come back immediately, sample is gone
+        assert!(cb.cancel(a));
+        assert!(!cb.cancel(a), "double-cancel must be a no-op");
+        assert_eq!(cb.in_flight(), 1);
+        assert_eq!(cb.headroom(), 2);
+        assert!(cb.preview(a).is_none());
+        assert!(cb.try_admit(&req(0.0)).unwrap().is_some(), "freed slots admit");
+        // the cancelled id never shows up in retired
+        let mut seen = Vec::new();
+        let mut guard = 0;
+        while cb.in_flight() > 0 {
+            seen.extend(cb.step().unwrap().retired.into_iter().map(|(id, _)| id));
+            guard += 1;
+            assert!(guard < 32);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![b, 2]);
     }
 }

@@ -152,6 +152,10 @@ pub struct CoordinatorStats {
     /// queue but never executed (the cluster layer requeues these onto
     /// surviving replicas).
     pub drain_shed: u64,
+    /// Cancelled by the client — queued or mid-flight — via a
+    /// [`CancelHandle`]; mid-flight cancels return their reserved slots
+    /// to admission headroom at the next iteration boundary.
+    pub cancelled: u64,
     /// Served straight from the exact-match request cache at admission
     /// (no queue residency, no UNet work; counted in `completed` too).
     pub cache_hits: u64,
@@ -198,6 +202,7 @@ struct StatsInner {
     failed: u64,
     deadline_missed: u64,
     drain_shed: u64,
+    cancelled: u64,
     // continuous-mode counters
     iterations: u64,
     joins: u64,
@@ -205,6 +210,86 @@ struct StatsInner {
     slots_used_sum: u64,
     cohort_max: u64,
     cohort_last: u64,
+}
+
+/// Streaming options for [`Submit::submit_watched`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WatchOptions {
+    /// Decode a preview image into every `preview_every`-th progress
+    /// event (0 = progress events only, no intermediate decodes).
+    pub preview_every: usize,
+}
+
+impl WatchOptions {
+    /// Progress events only — no preview decodes.
+    pub fn off() -> WatchOptions {
+        WatchOptions { preview_every: 0 }
+    }
+}
+
+/// Client-side cancel switch for one watched submission. Cheap to clone;
+/// flipping it aborts the sample at the next iteration boundary (queued:
+/// before any UNet work; mid-flight: the cohort drops it and its
+/// reserved slots return to admission headroom). The ticket then
+/// resolves with [`Error::Cancelled`].
+#[derive(Debug, Clone, Default)]
+pub struct CancelHandle(Arc<AtomicBool>);
+
+impl CancelHandle {
+    pub fn new() -> CancelHandle {
+        CancelHandle(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// The raw flag the worker loops poll — also what the cluster relay
+    /// threads across replica requeues so one handle survives failover.
+    pub(crate) fn flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.0)
+    }
+
+    /// Rebuild a handle around an existing flag (cluster requeue path).
+    pub(crate) fn from_flag(flag: Arc<AtomicBool>) -> CancelHandle {
+        CancelHandle(flag)
+    }
+}
+
+/// One streamed lifecycle event of a watched sample, emitted at the
+/// iteration boundary after each engine step the sample rode.
+#[derive(Debug, Clone)]
+pub struct ProgressEvent {
+    /// Iterations completed so far (strictly increasing per sample).
+    pub step: usize,
+    /// Total iterations this sample executes
+    /// ([`GenerationRequest::executed_steps`]).
+    pub steps: usize,
+    /// Decoded intermediate image — present on every `preview_every`-th
+    /// event when previews were requested.
+    pub preview: Option<crate::image::RgbImage>,
+}
+
+/// A watched submission: the result ticket plus the progress
+/// side-channel and the cancel switch.
+pub struct Watched {
+    pub ticket: Ticket,
+    /// Progress/preview events; closes when the sample resolves. Safe to
+    /// drop — events are fire-and-forget on the worker side.
+    pub progress: Receiver<ProgressEvent>,
+    pub cancel: CancelHandle,
+}
+
+/// Worker-side half of the progress channel, carried by the job.
+#[derive(Clone)]
+pub(crate) struct WatchSink {
+    pub(crate) tx: Sender<ProgressEvent>,
+    pub(crate) preview_every: usize,
 }
 
 struct Job {
@@ -217,6 +302,21 @@ struct Job {
     /// resolves this job must settle the key — store the output, drop
     /// the in-flight marker, fan out to coalesced waiters.
     key: Option<String>,
+    /// Progress event sink for watched submissions (continuous mode
+    /// emits per-iteration events; fixed mode runs trajectories
+    /// atomically and emits none).
+    watch: Option<WatchSink>,
+    /// Cancel flag for watched submissions, polled at every admission
+    /// and iteration boundary.
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+impl Job {
+    fn cancel_requested(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .is_some_and(|c| c.load(Ordering::SeqCst))
+    }
 }
 
 struct Batch {
@@ -519,6 +619,7 @@ impl Coordinator {
             failed: 0,
             deadline_missed: 0,
             drain_shed: 0,
+            cancelled: 0,
             iterations: 0,
             joins: 0,
             retires: 0,
@@ -665,7 +766,28 @@ impl Coordinator {
     /// returned synchronously as [`Error::Rejected`] and the request
     /// never occupies queue space.
     pub fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
-        self.submit_inner(req, meta, true)
+        self.submit_inner(req, meta, true, None)
+    }
+
+    /// Enqueue a *watched* request: alongside the ticket the caller gets
+    /// a per-iteration progress stream (with optional decoded previews
+    /// every `watch.preview_every` steps, continuous mode) and a
+    /// [`CancelHandle`] that aborts the sample at the next boundary.
+    /// Watched submissions bypass the request-cache / dedup tiers — a
+    /// cancellable primary must never carry coalesced waiters, and a
+    /// replayed hit has no steps to stream.
+    pub fn submit_watched(
+        &self,
+        req: GenerationRequest,
+        meta: QosMeta,
+        watch: WatchOptions,
+    ) -> Result<Watched> {
+        let (ptx, progress) = mpsc::channel();
+        let cancel = CancelHandle::new();
+        let sink = WatchSink { tx: ptx, preview_every: watch.preview_every };
+        let ticket =
+            self.submit_inner(req, meta, true, Some((sink, cancel.flag())))?;
+        Ok(Watched { ticket, progress, cancel })
     }
 
     /// Enqueue a request whose admission was already decided upstream —
@@ -676,7 +798,20 @@ impl Coordinator {
     /// identical to [`Coordinator::submit_qos`]; any installed policy
     /// still receives worker-side feedback.
     pub fn submit_preadmitted(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
-        self.submit_inner(req, meta, false)
+        self.submit_inner(req, meta, false, None)
+    }
+
+    /// The watched preadmitted path: the cluster relay owns the progress
+    /// sender and cancel flag (they must survive a replica failover and
+    /// requeue — one client-facing handle, N replica attempts), so it
+    /// hands both in rather than receiving fresh ones.
+    pub(crate) fn submit_preadmitted_watched(
+        &self,
+        req: GenerationRequest,
+        meta: QosMeta,
+        watch: Option<(WatchSink, Arc<AtomicBool>)>,
+    ) -> Result<Ticket> {
+        self.submit_inner(req, meta, false, watch)
     }
 
     fn submit_inner(
@@ -684,6 +819,7 @@ impl Coordinator {
         mut req: GenerationRequest,
         mut meta: QosMeta,
         consult_qos: bool,
+        watch: Option<(WatchSink, Arc<AtomicBool>)>,
     ) -> Result<Ticket> {
         req.validate()?;
         if self.draining.load(Ordering::SeqCst) {
@@ -730,10 +866,16 @@ impl Coordinator {
         let trace = meta.trace;
         // ---- amortization tiers (DESIGN.md §13), after QoS so every
         // logical request is charged, before queueing so hits and joins
-        // never occupy queue space -----------------------------------
+        // never occupy queue space. Watched jobs skip them: a replayed
+        // hit has nothing to stream, and a cancellable primary would
+        // poison its coalesced waiters -------------------------------
         let mut key = None;
         let outcome_cell = Arc::new(OnceLock::new());
-        if let Some(cache) = self.cache.as_ref().filter(|c| c.keyed()) {
+        if let Some(cache) = self
+            .cache
+            .as_ref()
+            .filter(|c| c.keyed() && watch.is_none())
+        {
             let admitted_at = Instant::now();
             let k = match canonical_key(&req) {
                 Ok(k) => k,
@@ -791,7 +933,19 @@ impl Coordinator {
             key = Some(k);
             let _ = outcome_cell.set(CacheOutcome::Miss);
         }
-        let job = Job { req, meta, enqueued: Instant::now(), respond: tx, key: key.clone() };
+        let (watch_sink, cancel_flag) = match watch {
+            Some((w, c)) => (Some(w), Some(c)),
+            None => (None, None),
+        };
+        let job = Job {
+            req,
+            meta,
+            enqueued: Instant::now(),
+            respond: tx,
+            key: key.clone(),
+            watch: watch_sink,
+            cancel: cancel_flag,
+        };
         let send_result = {
             let guard = self.submit_tx.lock().unwrap();
             match guard.as_ref() {
@@ -845,6 +999,7 @@ impl Coordinator {
             rejected: self.rejected.load(Ordering::Relaxed),
             deadline_missed: inner.deadline_missed,
             drain_shed: inner.drain_shed,
+            cancelled: inner.cancelled,
             cache_hits: self
                 .cache
                 .as_ref()
@@ -896,14 +1051,32 @@ impl Coordinator {
 }
 
 /// Anything requests can be submitted to — a single [`Coordinator`] or a
-/// [`crate::cluster::ReplicaSet`]. The workload replay drivers and the
-/// server front-end are generic over this, so every serving surface works
-/// unchanged against both topologies.
+/// [`crate::cluster::ReplicaSet`]. The workload replay drivers, the
+/// server front-end, and the cluster relay are generic over this, so
+/// every serving surface works unchanged against both topologies.
+///
+/// The *core* operation is [`Submit::submit_watched`] — a submission
+/// with a progress/preview side-channel and a cancel switch. The bare
+/// [`Submit::submit_qos`] / [`Submit::submit`] forms are blocking-style
+/// adapters that drop the side-channel; implementations with a cheaper
+/// unwatched path (cache tiers, dedup) override them.
 pub trait Submit: Send + Sync {
-    /// Enqueue with serving metadata; admission (QoS) semantics are the
-    /// implementation's — see [`Coordinator::submit_qos`] and
-    /// [`crate::cluster::ReplicaSet::submit_qos`].
-    fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket>;
+    /// Enqueue with serving metadata plus a streaming side-channel;
+    /// admission (QoS) semantics are the implementation's — see
+    /// [`Coordinator::submit_watched`] and
+    /// [`crate::cluster::ReplicaSet::submit_watched`].
+    fn submit_watched(
+        &self,
+        req: GenerationRequest,
+        meta: QosMeta,
+        watch: WatchOptions,
+    ) -> Result<Watched>;
+
+    /// Enqueue with serving metadata, no side-channel. The default
+    /// adapter discards the progress stream and cancel handle.
+    fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
+        Ok(self.submit_watched(req, meta, WatchOptions::off())?.ticket)
+    }
 
     /// Enqueue without metadata (best-effort, default priority).
     fn submit(&self, req: GenerationRequest) -> Result<Ticket> {
@@ -912,12 +1085,32 @@ pub trait Submit: Send + Sync {
 }
 
 impl Submit for Coordinator {
+    fn submit_watched(
+        &self,
+        req: GenerationRequest,
+        meta: QosMeta,
+        watch: WatchOptions,
+    ) -> Result<Watched> {
+        Coordinator::submit_watched(self, req, meta, watch)
+    }
+
+    // the unwatched path keeps the request-cache / dedup tiers (the
+    // default adapter would bypass them)
     fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
         Coordinator::submit_qos(self, req, meta)
     }
 }
 
 impl<T: Submit + ?Sized> Submit for Arc<T> {
+    fn submit_watched(
+        &self,
+        req: GenerationRequest,
+        meta: QosMeta,
+        watch: WatchOptions,
+    ) -> Result<Watched> {
+        (**self).submit_watched(req, meta, watch)
+    }
+
     fn submit_qos(&self, req: GenerationRequest, meta: QosMeta) -> Result<Ticket> {
         (**self).submit_qos(req, meta)
     }
@@ -1066,6 +1259,14 @@ fn worker_loop(
         for job in stale {
             fail_expired(job, &stats, &pending, &qos, &sink, &cache);
         }
+        // client-side cancellation before dispatch: fixed-mode
+        // trajectories are atomic, so pre-dispatch is the last boundary
+        // where a cancel can still save the UNet work
+        let (live, cancelled): (Vec<Job>, Vec<Job>) =
+            live.into_iter().partition(|j| !j.cancel_requested());
+        for job in cancelled {
+            fail_cancelled(job, &stats, &pending, &qos, &sink, &cache);
+        }
         if live.is_empty() {
             continue;
         }
@@ -1125,6 +1326,33 @@ fn worker_loop(
             }
         }
     }
+}
+
+/// Resolve one cancelled job: the client abandoned it, so it never runs
+/// (queued) or stops riding the cohort (mid-flight — the caller already
+/// dropped it from the batcher, returning its reserved slots to
+/// admission headroom). The ticket resolves with [`Error::Cancelled`]
+/// and the trace span closes with the `cancelled` terminal exactly once.
+fn fail_cancelled(
+    job: Job,
+    stats: &Arc<Mutex<StatsInner>>,
+    pending: &Arc<AtomicU64>,
+    qos: &Option<Arc<dyn QosPolicy>>,
+    sink: &Option<Arc<CoordSink>>,
+    cache: &Option<Arc<CacheLayer>>,
+) {
+    let waited = job.enqueued.elapsed();
+    stats.lock().unwrap().cancelled += 1;
+    let prev = pending.fetch_sub(1, Ordering::Relaxed);
+    if let Some(s) = sink {
+        s.on_cancelled(job.meta.trace);
+        s.on_queue_depth(prev.saturating_sub(1) as usize);
+    }
+    let err = Error::Cancelled("cancelled by client".into());
+    // watched jobs carry no cache key, but settle defensively anyway —
+    // the invariant is "every terminal site settles"
+    settle_key(cache, &job.key, Err(&err), stats, pending, qos, sink);
+    let _ = job.respond.send((Err(err), waited));
 }
 
 /// Fail one queued job whose deadline expired before admission (the
@@ -1247,6 +1475,11 @@ fn continuous_worker_loop(
                 fail_expired(job, &stats, &pending, &qos, &sink, &cache);
                 continue;
             }
+            // cancelled while queued: resolve without any UNet work
+            if job.cancel_requested() {
+                fail_cancelled(job, &stats, &pending, &qos, &sink, &cache);
+                continue;
+            }
             match batcher.try_admit(&job.req) {
                 Ok(Some(id)) => {
                     stats.lock().unwrap().joins += 1;
@@ -1275,8 +1508,23 @@ fn continuous_worker_loop(
                 }
             }
         }
+        // ---- mid-flight cancellation at the iteration boundary -----------
+        // mirror of the per-sample failure drain: the sample leaves the
+        // cohort without finish(), its reserved slots return to admission
+        // headroom immediately, and the rest of the cohort is untouched
+        let cancel_ids: Vec<u64> = inflight
+            .iter()
+            .filter(|(_, j)| j.cancel_requested())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in cancel_ids {
+            if batcher.cancel(id) {
+                let job = inflight.remove(&id).expect("cancelled id has a job");
+                fail_cancelled(job, &stats, &pending, &qos, &sink, &cache);
+            }
+        }
         if batcher.in_flight() == 0 {
-            continue; // everything expired/failed; back to waiting
+            continue; // everything expired/failed/cancelled; back to waiting
         }
 
         // ---- one engine iteration over the cohort ------------------------
@@ -1339,6 +1587,23 @@ fn continuous_worker_loop(
                     settle_key(&cache, &job.key, Ok(&out), &stats, &pending, &qos, &sink);
                     let _ = job.respond.send((Ok(out), latency));
                 }
+                // ---- progress / preview events for watched samples -------
+                // one event per iteration per watched in-flight sample;
+                // send failures (dropped receiver) are benign — watching
+                // is advisory, never load-bearing for the result path
+                for (id, step, steps) in batcher.progress() {
+                    let Some(job) = inflight.get(&id) else { continue };
+                    let Some(w) = &job.watch else { continue };
+                    let preview = if w.preview_every > 0
+                        && step > 0
+                        && step % w.preview_every == 0
+                    {
+                        batcher.preview(id).and_then(|r| r.ok())
+                    } else {
+                        None
+                    };
+                    let _ = w.tx.send(ProgressEvent { step, steps, preview });
+                }
             }
             Err(e) => {
                 // an engine failure poisons the whole cohort: fail every
@@ -1389,6 +1654,7 @@ mod tests {
         assert_eq!(s.rejected, 0);
         assert_eq!(s.deadline_missed, 0);
         assert_eq!(s.drain_shed, 0);
+        assert_eq!(s.cancelled, 0);
         assert_eq!(s.queue_depth_max, 0);
         assert_eq!(s.actuator_fraction, 0.0);
         assert_eq!(s.mode, BatchMode::Fixed);

@@ -52,6 +52,25 @@ use crate::scheduler::{NoiseSchedule, Scheduler, SchedulerKind};
 use crate::telemetry::{EngineMetrics, Telemetry};
 use crate::tokenizer::Tokenizer;
 
+/// img2img entry point: a clean init latent plus a `strength` mapping
+/// onto a truncated scheduler range. The request's scheduler is still
+/// built for the *full* step count; only the last
+/// `round(steps * strength)` steps execute, entered by forward-noising
+/// the init latent to that trajectory position
+/// ([`crate::scheduler::Scheduler::add_noise`]).
+#[derive(Debug, Clone)]
+pub struct InitImage {
+    /// Explicit init latent (C*H*W, model latent space). `None` derives
+    /// a deterministic synthetic init from the request seed (RNG stream
+    /// 1 — stream 0 drives the denoise noise draws), so every surface
+    /// can exercise img2img without shipping a latent.
+    pub latent: Option<Arc<Vec<f32>>>,
+    /// Fraction of the trajectory re-run, in (0, 1]: executed steps =
+    /// `round(steps * strength)` clamped to `[1, steps]`. 1.0 runs the
+    /// full range (a noised init instead of pure noise).
+    pub strength: f64,
+}
+
 /// One image-generation request.
 #[derive(Debug, Clone)]
 pub struct GenerationRequest {
@@ -70,6 +89,14 @@ pub struct GenerationRequest {
     /// Online skip controller (paper's future-work variant); supersedes
     /// the static `schedule` when set.
     pub adaptive: Option<AdaptiveConfig>,
+    /// img2img: init latent + strength-truncated scheduler range.
+    /// `None` is the classic text2img full trajectory.
+    pub init: Option<InitImage>,
+    /// Pre-compiled guidance plan shared across a variations fan-out
+    /// ([`GenerationRequest::variations`]): N seeds differ only in
+    /// their noise stream, so the plan IR is compiled once and cloned
+    /// per sample instead of recompiled N times.
+    pub shared_plan: Option<Arc<GuidancePlan>>,
 }
 
 impl GenerationRequest {
@@ -85,6 +112,8 @@ impl GenerationRequest {
             seed: cfg.seed,
             decode: cfg.decode_images,
             adaptive: None,
+            init: None,
+            shared_plan: None,
         }
     }
 
@@ -139,6 +168,50 @@ impl GenerationRequest {
         self
     }
 
+    /// img2img from a seed-derived synthetic init latent.
+    pub fn img2img(mut self, strength: f64) -> Self {
+        self.init = Some(InitImage { latent: None, strength });
+        self
+    }
+
+    /// img2img from an explicit init latent.
+    pub fn init_latent(mut self, latent: Arc<Vec<f32>>, strength: f64) -> Self {
+        self.init = Some(InitImage { latent: Some(latent), strength });
+        self
+    }
+
+    /// Denoising iterations this request actually executes: `steps` for
+    /// text2img, the strength-truncated suffix for img2img. Plans are
+    /// compiled — and costs priced — over this count.
+    pub fn executed_steps(&self) -> usize {
+        match &self.init {
+            Some(init) => {
+                (((self.steps as f64) * init.strength).round() as usize).clamp(1, self.steps)
+            }
+            None => self.steps,
+        }
+    }
+
+    /// Expand this request into `n` seed variations sharing ONE
+    /// compiled [`GuidancePlan`]: schedule, scale, strategy and step
+    /// count are identical across the fan-out, so the IR is compiled
+    /// once and cloned per sample instead of recompiled N times.
+    pub fn variations(&self, n: usize) -> Result<Vec<GenerationRequest>> {
+        if n == 0 {
+            return Err(Error::Request("variations must be >= 1".into()));
+        }
+        self.validate()?;
+        let plan = Arc::new(self.plan()?);
+        Ok((0..n)
+            .map(|i| {
+                let mut r = self.clone();
+                r.seed = self.seed.wrapping_add(i as u64);
+                r.shared_plan = Some(Arc::clone(&plan));
+                r
+            })
+            .collect())
+    }
+
     pub fn policy(&self) -> Result<SelectiveGuidancePolicy> {
         SelectiveGuidancePolicy::with_schedule(
             self.schedule.clone(),
@@ -152,12 +225,20 @@ impl GenerationRequest {
     /// get the conservative all-dual overlay (the controller's online
     /// decisions are recorded into it as they execute).
     pub fn plan(&self) -> Result<GuidancePlan> {
+        if let Some(p) = &self.shared_plan {
+            return Ok((**p).clone());
+        }
         if self.adaptive.is_some() {
             // still validate the static triple the request carries
             self.policy()?;
-            return Ok(GuidancePlan::conservative_dual(self.guidance_scale, self.steps));
+            return Ok(GuidancePlan::conservative_dual(self.guidance_scale, self.executed_steps()));
         }
-        GuidancePlan::compile(&self.schedule, self.guidance_scale, self.strategy, self.steps)
+        GuidancePlan::compile(
+            &self.schedule,
+            self.guidance_scale,
+            self.strategy,
+            self.executed_steps(),
+        )
     }
 
     /// The plan [`Engine::begin_shared`] executes: compiled with the
@@ -169,7 +250,20 @@ impl GenerationRequest {
         if self.adaptive.is_some() {
             return self.plan();
         }
-        GuidancePlan::compile_shared(&self.schedule, self.guidance_scale, self.strategy, self.steps)
+        // a variations fan-out's shared plan is reusable here unless the
+        // strategy has reuse steps (only those differ between the local
+        // and cross-request anchor rules)
+        if let Some(p) = &self.shared_plan {
+            if self.strategy.shared_consumer_kind().is_none() {
+                return Ok((**p).clone());
+            }
+        }
+        GuidancePlan::compile_shared(
+            &self.schedule,
+            self.guidance_scale,
+            self.strategy,
+            self.executed_steps(),
+        )
     }
 
     /// Plan-derived *effective shed*: the fraction of this request's
@@ -190,6 +284,19 @@ impl GenerationRequest {
             return Err(Error::Request(format!("steps {} outside [1, 1000]", self.steps)));
         }
         self.policy()?;
+        if let Some(init) = &self.init {
+            if !init.strength.is_finite() || init.strength <= 0.0 || init.strength > 1.0 {
+                return Err(Error::Request(format!(
+                    "img2img strength {} outside (0, 1]",
+                    init.strength
+                )));
+            }
+            if let Some(l) = &init.latent {
+                if l.is_empty() {
+                    return Err(Error::Request("img2img init latent is empty".into()));
+                }
+            }
+        }
         if let Some(a) = &self.adaptive {
             a.validate()?;
             // the controller supersedes the static schedule entirely, so
@@ -220,7 +327,8 @@ pub struct GenerationOutput {
     pub breakdown: StepBreakdown,
     /// UNet executions actually performed.
     pub unet_evals: usize,
-    /// Steps run (== request.steps).
+    /// Steps run (== the request's *executed* step count: `steps` for
+    /// text2img, the strength-truncated suffix for img2img).
     pub steps: usize,
     /// Guidance strategy the request ran with — reported from the
     /// *executed* request, so QoS actuation (which may rewrite the
@@ -244,6 +352,14 @@ impl GenerationOutput {
         }
         (2 * self.steps - self.unet_evals) as f64 / self.steps as f64
     }
+}
+
+/// The deterministic synthetic init latent used when an img2img request
+/// carries a strength but no explicit latent: RNG stream 1 of the
+/// request seed (stream 0 drives the denoise noise draws), so the init
+/// is reproducible from the request alone on every surface.
+pub fn synthetic_init_latent(seed: u64, elems: usize) -> Vec<f32> {
+    Rng::for_stream(seed, 1).normal_vec(elems)
 }
 
 /// Per-sample history of true unconditional eps evaluations — the state
@@ -322,7 +438,12 @@ pub struct SampleState {
     failed: Option<String>,
     /// Next iteration to execute (== completed iterations).
     step: usize,
+    /// Iterations this trajectory runs ([`GenerationRequest::executed_steps`]).
     steps: usize,
+    /// Scheduler-index offset of iteration 0: `0` for text2img, the
+    /// skipped prefix for img2img (the scheduler is built for the full
+    /// request step count; the plan covers only the executed suffix).
+    offset: usize,
     unet_evals: usize,
     /// This sample's attributed share of loop costs (1/cohort per step).
     breakdown: StepBreakdown,
@@ -343,6 +464,12 @@ impl SampleState {
     /// Total iterations this trajectory runs.
     pub fn steps(&self) -> usize {
         self.steps
+    }
+
+    /// Absolute scheduler index of the next iteration (== `step_index`
+    /// for text2img; shifted by the skipped prefix for img2img).
+    fn sched_index(&self) -> usize {
+        self.offset + self.step
     }
 
     /// The request this state executes.
@@ -466,6 +593,8 @@ impl Engine {
             seed: self.config.seed,
             decode: self.config.decode_images,
             adaptive: self.config.adaptive,
+            init: None,
+            shared_plan: None,
         }
     }
 
@@ -534,13 +663,38 @@ impl Engine {
         let started = Instant::now();
         let m = self.stack.model();
         let cond_ctx = self.stack.encode_text(&self.tokenizer.encode(&req.prompt))?;
+        // the scheduler always spans the FULL request step count; img2img
+        // enters the trajectory at `offset` and runs only the suffix
         let scheduler = req.scheduler.build(NoiseSchedule::default(), req.steps);
+        let steps = req.executed_steps();
+        let offset = req.steps - steps;
         let mut rng = Rng::for_stream(req.seed, 0);
-        let mut latent = rng.normal_vec(m.latent_elems());
-        let sigma = scheduler.init_noise_sigma();
-        for v in latent.iter_mut() {
-            *v *= sigma;
-        }
+        let latent = if let Some(init) = &req.init {
+            let x0: Vec<f32> = match &init.latent {
+                Some(l) => {
+                    if l.len() != m.latent_elems() {
+                        return Err(Error::Request(format!(
+                            "init latent has {} elems, model expects {}",
+                            l.len(),
+                            m.latent_elems()
+                        )));
+                    }
+                    l.as_ref().clone()
+                }
+                None => synthetic_init_latent(req.seed, m.latent_elems()),
+            };
+            // same stream position as text2img's init draw, so the two
+            // workloads stay on identical per-step noise streams
+            let noise = rng.normal_vec(m.latent_elems());
+            scheduler.add_noise(offset, &x0, &noise)
+        } else {
+            let mut latent = rng.normal_vec(m.latent_elems());
+            let sigma = scheduler.init_noise_sigma();
+            for v in latent.iter_mut() {
+                *v *= sigma;
+            }
+            latent
+        };
         // per-sample uncond-eps recording is gated so plans without any
         // reuse step never clone eps tensors they won't read
         let wants_reuse = plan.has_reuse();
@@ -562,7 +716,8 @@ impl Engine {
             shared_eps: None,
             failed: None,
             step: 0,
-            steps: req.steps,
+            steps,
+            offset,
             unet_evals: 0,
             breakdown,
             started,
@@ -640,10 +795,11 @@ impl Engine {
             // eligibility is `GuidanceStrategy::shared_consumer_kind`)
             if let (Some(cache), Some(kind)) = (shared, st.req.strategy.shared_consumer_kind()) {
                 if st.controller.is_none() && st.wants_reuse {
+                    let gi = st.sched_index();
                     let key = SharedKey::new(
                         st.req.scheduler.name(),
-                        st.step,
-                        st.scheduler.model_timestep(st.step),
+                        gi,
+                        st.scheduler.model_timestep(gi),
                     );
                     match mode {
                         // a planned dual step past the first iteration
@@ -703,8 +859,8 @@ impl Engine {
         let mut t_model: Vec<f32> = vec![0.0; n];
         for &s in &active {
             let st = &states[s];
-            scaled[s] = st.scheduler.scale_model_input(&st.latent, st.step);
-            t_model[s] = st.scheduler.model_timestep(st.step);
+            scaled[s] = st.scheduler.scale_model_input(&st.latent, st.sched_index());
+            t_model[s] = st.scheduler.model_timestep(st.sched_index());
         }
         bd.scheduler_ms += t0.elapsed().as_secs_f64() * 1e3;
 
@@ -780,7 +936,7 @@ impl Engine {
                     }
                     if let Some(cache) = shared {
                         cache.publish(
-                            SharedKey::new(st.req.scheduler.name(), st.step, t_model[s]),
+                            SharedKey::new(st.req.scheduler.name(), st.sched_index(), t_model[s]),
                             &st.latent,
                             u,
                         );
@@ -839,7 +995,7 @@ impl Engine {
                     }
                     if let Some(cache) = shared {
                         cache.publish(
-                            SharedKey::new(st.req.scheduler.name(), st.step, t_model[s]),
+                            SharedKey::new(st.req.scheduler.name(), st.sched_index(), t_model[s]),
                             &st.latent,
                             u,
                         );
@@ -896,7 +1052,8 @@ impl Engine {
             if st.failed.is_some() {
                 continue;
             }
-            st.latent = st.scheduler.step(st.step, &st.latent, &eps_hat[s], &mut st.rng);
+            let gi = st.sched_index();
+            st.latent = st.scheduler.step(gi, &st.latent, &eps_hat[s], &mut st.rng);
             st.unet_evals += modes[s].unet_evals();
             st.step += 1;
         }
@@ -971,6 +1128,17 @@ impl Engine {
             strategy: state.req.strategy,
             plan_summary: state.plan.summary(),
         })
+    }
+
+    /// Decode the *current* latent of an in-flight sample — the
+    /// progressive-preview primitive behind the streaming server's
+    /// `preview` event frames. Pure read: the sample's trajectory, RNG
+    /// stream and caches are untouched, so previewing cannot perturb
+    /// the bit-exactness invariant.
+    pub fn preview(&self, state: &SampleState) -> Result<RgbImage> {
+        let m = self.stack.model();
+        let chw = self.stack.decode(&state.latent)?;
+        RgbImage::from_chw_f32(&chw, m.image_size, m.image_size)
     }
 
     /// Run the UNet for the sample subset `subset`, bucketizing into the
@@ -1243,5 +1411,75 @@ mod tests {
         // slope (3-1)/2 = 1 per iteration on the first element
         assert_eq!(c.estimate(5, ReuseKind::Extrapolate).unwrap(), vec![4.0, 2.0]);
         assert_eq!(c.estimate(6, ReuseKind::Extrapolate).unwrap(), vec![5.0, 2.0]);
+    }
+
+    #[test]
+    fn img2img_truncates_the_trajectory() {
+        let e = Engine::new(
+            Arc::new(crate::runtime::ModelStack::synthetic()),
+            EngineConfig::default(),
+        );
+        let req = GenerationRequest::new("a cat")
+            .steps(10)
+            .scheduler(SchedulerKind::Ddim)
+            .img2img(0.4)
+            .decode(false);
+        assert_eq!(req.executed_steps(), 4);
+        // the plan covers only the executed suffix, so pricing shrinks too
+        assert_eq!(req.plan().unwrap().total_unet_evals(), 8);
+        let out = e.generate(&req).unwrap();
+        assert_eq!(out.steps, 4);
+        assert_eq!(out.unet_evals, 8);
+        // bad strengths are rejected; wrong-size explicit latents fail at begin
+        assert!(GenerationRequest::new("x").img2img(0.0).validate().is_err());
+        assert!(GenerationRequest::new("x").img2img(1.5).validate().is_err());
+        let wrong = GenerationRequest::new("x")
+            .steps(4)
+            .init_latent(Arc::new(vec![0.0; 3]), 0.5)
+            .decode(false);
+        assert!(e.begin(&wrong).is_err());
+    }
+
+    #[test]
+    fn img2img_synthetic_init_is_the_seeded_latent() {
+        // strength-only img2img == the same request with its synthetic
+        // init passed explicitly (every surface derives the same init)
+        let e = Engine::new(
+            Arc::new(crate::runtime::ModelStack::synthetic()),
+            EngineConfig::default(),
+        );
+        let elems = e.stack().model().latent_elems();
+        let init = Arc::new(synthetic_init_latent(9, elems));
+        let a = GenerationRequest::new("p").steps(8).seed(9).img2img(0.5).decode(false);
+        let b = GenerationRequest::new("p")
+            .steps(8)
+            .seed(9)
+            .init_latent(init, 0.5)
+            .decode(false);
+        assert_eq!(e.generate(&a).unwrap().latent, e.generate(&b).unwrap().latent);
+    }
+
+    #[test]
+    fn variations_share_one_plan_and_match_standalone_requests() {
+        let e = Engine::new(
+            Arc::new(crate::runtime::ModelStack::synthetic()),
+            EngineConfig::default(),
+        );
+        let base = GenerationRequest::new("v")
+            .steps(6)
+            .selective(WindowSpec::last(0.5))
+            .decode(false);
+        let vars = base.variations(3).unwrap();
+        assert_eq!(vars.len(), 3);
+        let p0 = vars[0].shared_plan.as_ref().unwrap();
+        assert!(vars.iter().all(|r| Arc::ptr_eq(r.shared_plan.as_ref().unwrap(), p0)));
+        assert_eq!(vars[1].seed, base.seed.wrapping_add(1));
+        // a variation's output is bit-exact with the standalone request
+        // at the same seed — the shared plan is an amortization, never a
+        // semantic change
+        let mut solo = base.clone();
+        solo.seed = base.seed.wrapping_add(1);
+        assert_eq!(e.generate(&vars[1]).unwrap().latent, e.generate(&solo).unwrap().latent);
+        assert!(base.variations(0).is_err());
     }
 }

@@ -47,6 +47,12 @@ pub enum Error {
     /// A request's deadline expired before (or while) it was served.
     DeadlineExceeded(String),
 
+    /// The client cancelled the request mid-flight. Not a failure: the
+    /// sample is dropped without `finish()`, its slots return to the
+    /// continuous-batch headroom, and the cluster relay must never
+    /// requeue it (the client already walked away).
+    Cancelled(String),
+
     /// I/O, with context.
     Io {
         context: String,
@@ -67,6 +73,7 @@ impl fmt::Display for Error {
             Error::Engine(m) => write!(f, "engine: {m}"),
             Error::Rejected { code, reason } => write!(f, "rejected ({code}): {reason}"),
             Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
             Error::Io { context, source } => write!(f, "io: {context}: {source}"),
         }
     }
@@ -91,6 +98,8 @@ impl Error {
         match self {
             Error::Rejected { code, .. } => Some(*code),
             Error::DeadlineExceeded(_) => Some(504),
+            // 499: client closed the request (nginx convention).
+            Error::Cancelled(_) => Some(499),
             _ => None,
         }
     }
@@ -161,5 +170,12 @@ mod tests {
         assert!(r.to_string().contains("429"), "{r}");
         assert_eq!(Error::DeadlineExceeded("late".into()).qos_code(), Some(504));
         assert_eq!(Error::Config("x".into()).qos_code(), None);
+    }
+
+    #[test]
+    fn cancelled_is_a_qos_outcome() {
+        let c = Error::Cancelled("client closed stream".into());
+        assert_eq!(c.to_string(), "cancelled: client closed stream");
+        assert_eq!(c.qos_code(), Some(499));
     }
 }

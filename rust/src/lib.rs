@@ -61,9 +61,12 @@ pub mod prelude {
     };
     pub use crate::config::EngineConfig;
     pub use crate::coordinator::{
-        BatchMode, ContinuousBatcher, Coordinator, CoordinatorConfig, Submit,
+        BatchMode, CancelHandle, ContinuousBatcher, Coordinator, CoordinatorConfig,
+        ProgressEvent, Submit, WatchOptions, Watched,
     };
-    pub use crate::engine::{Engine, GenerationOutput, GenerationRequest, SampleState};
+    pub use crate::engine::{
+        Engine, GenerationOutput, GenerationRequest, InitImage, SampleState,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::guidance::{
         GuidanceMode, GuidancePlan, GuidanceSchedule, GuidanceStrategy, ReuseKind, Segment,

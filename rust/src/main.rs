@@ -11,6 +11,8 @@
 //!           [--adaptive-patience 2] [--adaptive-min-dual 0.3]
 //!           [--adaptive-probe-every 8]
 //!           [--scheduler pndm] [--seed 0] [--out out.png]
+//!           [--strength 0.6] [--init-latent latent.f32]
+//!           [--variations 4]
 //!           [--mode fixed|continuous] [--slot-budget 8]
 //!           [--artifacts artifacts/tiny]
 //! sgd-serve serve    [--bind 127.0.0.1:7878] [--workers 1]
@@ -22,10 +24,18 @@
 //!           [--interval ...] [--cadence ...]
 //!           [--qos] [--max-queue 64] [--quality-floor 0.5]
 //!           [--deadline-ms 0] [--adaptive] [--adaptive-threshold ...]
-//!           [--request-cache] [--dedup]
+//!           [--request-cache] [--dedup] [--preview-every 0]
 //!           [--metrics-addr 127.0.0.1:9090] [--no-telemetry]
 //! sgd-serve info     [--artifacts artifacts/tiny]
 //! ```
+//!
+//! `--strength s` truncates the denoising loop to `round(steps * s)`
+//! iterations from a synthetic init latent (img2img); `--init-latent
+//! path` reads an explicit init latent (raw little-endian f32s) and
+//! requires `--strength`. `--variations n` fans one prompt into n seed
+//! variations sharing one compiled guidance plan; outputs are written
+//! as `out-0.png`, `out-1.png`, ... `serve --preview-every k` sets the
+//! default preview cadence pushed to v2 streaming clients.
 //!
 //! The schedule flags are mutually exclusive: `--window`/`--position`
 //! express the paper's contiguous window, `--segments`/`--interval`/
@@ -208,46 +218,110 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         req = req.adaptive(a);
     }
 
+    // img2img: --strength alone denoises a synthetic init latent;
+    // --init-latent reads an explicit one (raw little-endian f32s) and
+    // requires --strength to say how far back to noise it
+    for key in ["strength", "init-latent", "variations"] {
+        if cli.flag(key) {
+            return Err(Error::Config(format!("--{key} needs a value")));
+        }
+    }
+    let strength = cli.opt_parse::<f64>("strength")?;
+    match (cli.opt("init-latent"), strength) {
+        (Some(path), Some(s)) => {
+            let latent = read_latent_f32(Path::new(path))?;
+            req = req.init_latent(Arc::new(latent), s);
+        }
+        (Some(_), None) => {
+            return Err(Error::Config("--init-latent requires --strength".into()));
+        }
+        (None, Some(s)) => req = req.img2img(s),
+        (None, None) => {}
+    }
+
+    // variations fan one prompt into n seed variations sharing one
+    // compiled guidance plan (seeds --seed .. --seed+n-1)
+    let n: usize = cli.opt_or("variations", 1)?;
+    if n == 0 {
+        return Err(Error::Config("--variations must be >= 1".into()));
+    }
+    let reqs = if n > 1 { req.variations(n)? } else { vec![req] };
+
     let mode = match cli.opt("mode") {
         Some(m) => BatchMode::parse(m)?,
         None => BatchMode::Fixed,
     };
-    let out = if mode == BatchMode::Continuous {
+    // route through a continuous-mode coordinator when asked: same
+    // output (cohort composition can't affect a sample), exercised the
+    // way the server runs it — and a variations fan-out cohorts together
+    let coordinator = if mode == BatchMode::Continuous {
         let slot_budget: usize = cli.opt_or("slot-budget", 8)?;
         if slot_budget < 2 {
             return Err(Error::Config(format!(
                 "--slot-budget {slot_budget} must be >= 2 (a dual step costs 2 slots)"
             )));
         }
-        // route through a continuous-mode coordinator: same output
-        // (cohort composition can't affect a sample), exercised the way
-        // the server runs it
-        let coordinator = Coordinator::start(
+        Some(Coordinator::start(
             Arc::clone(&engine),
             CoordinatorConfig { mode, slot_budget, ..CoordinatorConfig::default() },
-        );
-        let out = coordinator.generate(req)?;
-        coordinator.shutdown();
-        out
+        ))
     } else {
-        engine.generate(&req)?
+        None
     };
-    println!(
-        "generated in {:.1} ms  (unet evals: {}, cond {:.1} ms, uncond {:.1} ms, combine {:.1} ms, scheduler {:.1} ms)",
-        out.wall_ms,
-        out.unet_evals,
-        out.breakdown.unet_cond_ms,
-        out.breakdown.unet_uncond_ms,
-        out.breakdown.combine_ms,
-        out.breakdown.scheduler_ms,
-    );
-    println!("executed plan: {}", out.plan_summary);
-    if let Some(img) = &out.image {
-        let path = cli.opt("out").unwrap_or("out.png");
-        img.save_png(Path::new(path))?;
-        println!("wrote {path} ({}x{})", img.width, img.height);
+    let many = reqs.len() > 1;
+    for (i, req) in reqs.into_iter().enumerate() {
+        let out = match &coordinator {
+            Some(c) => c.generate(req)?,
+            None => engine.generate(&req)?,
+        };
+        let label = if many { format!("variation {i} ") } else { String::new() };
+        println!(
+            "{label}generated in {:.1} ms  (unet evals: {}, cond {:.1} ms, uncond {:.1} ms, combine {:.1} ms, scheduler {:.1} ms)",
+            out.wall_ms,
+            out.unet_evals,
+            out.breakdown.unet_cond_ms,
+            out.breakdown.unet_uncond_ms,
+            out.breakdown.combine_ms,
+            out.breakdown.scheduler_ms,
+        );
+        println!("executed plan: {}", out.plan_summary);
+        if let Some(img) = &out.image {
+            let base = cli.opt("out").unwrap_or("out.png");
+            let path = if many { indexed_path(base, i) } else { base.to_string() };
+            img.save_png(Path::new(&path))?;
+            println!("wrote {path} ({}x{})", img.width, img.height);
+        }
+    }
+    if let Some(c) = coordinator {
+        c.shutdown();
     }
     Ok(())
+}
+
+/// Read a raw init latent: the file is little-endian f32s, C*H*W in the
+/// model's latent space (what `SampleState::latent` holds).
+fn read_latent_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::io(format!("reading init latent {}", path.display()), e))?;
+    if bytes.is_empty() || bytes.len() % 4 != 0 {
+        return Err(Error::Config(format!(
+            "init latent {}: {} bytes is not a whole number of f32s",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// `out.png` -> `out-3.png` for variation fan-out outputs.
+fn indexed_path(base: &str, i: usize) -> String {
+    match base.rsplit_once('.') {
+        Some((stem, ext)) => format!("{stem}-{i}.{ext}"),
+        None => format!("{base}-{i}"),
+    }
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
@@ -264,6 +338,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     run_cfg.server.workers = cli.opt_or("workers", run_cfg.server.workers)?;
     run_cfg.server.max_batch = cli.opt_or("max-batch", run_cfg.server.max_batch)?;
     run_cfg.server.slot_budget = cli.opt_or("slot-budget", run_cfg.server.slot_budget)?;
+    if cli.flag("preview-every") {
+        return Err(Error::Config("--preview-every needs a value".into()));
+    }
+    run_cfg.server.preview_every =
+        cli.opt_or("preview-every", run_cfg.server.preview_every)?;
     run_cfg.server.validate()?;
 
     // guidance overrides compose with the config file: schedule flags
@@ -434,7 +513,14 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             a.probe_every,
         );
     }
-    let defaults = GuidanceDefaults::from_engine(&run_cfg.engine);
+    let defaults = GuidanceDefaults::from_engine(&run_cfg.engine)
+        .with_preview_every(run_cfg.server.preview_every);
+    if run_cfg.server.preview_every > 0 {
+        println!(
+            "streaming: default preview every {} steps (v2 \"stream\": true)",
+            run_cfg.server.preview_every
+        );
+    }
     let server = match cluster_cfg {
         Some(cfg) => {
             println!("cluster: {} replica(s), route {}", cfg.replicas.len(), cfg.route.name());

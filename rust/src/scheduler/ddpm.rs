@@ -23,6 +23,14 @@ impl Scheduler for Ddpm {
         &self.timesteps
     }
 
+    fn add_noise(&self, i: usize, x0: &[f32], noise: &[f32]) -> Vec<f32> {
+        assert_eq!(x0.len(), noise.len());
+        let ab = self.schedule.alpha_bar(self.timesteps[i]);
+        let sqrt_ab = ab.sqrt() as f32;
+        let sqrt_1mab = (1.0 - ab).sqrt() as f32;
+        x0.iter().zip(noise).map(|(&x, &e)| sqrt_ab * x + sqrt_1mab * e).collect()
+    }
+
     fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], rng: &mut Rng) -> Vec<f32> {
         assert_eq!(sample.len(), eps.len());
         let t = self.timesteps[i];

@@ -62,6 +62,13 @@ impl Scheduler for DpmSolverPP {
         &self.timesteps
     }
 
+    fn add_noise(&self, i: usize, x0: &[f32], noise: &[f32]) -> Vec<f32> {
+        assert_eq!(x0.len(), noise.len());
+        let a = self.alphas[i] as f32;
+        let s = self.sigmas[i] as f32;
+        x0.iter().zip(noise).map(|(&x, &e)| a * x + s * e).collect()
+    }
+
     fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], _rng: &mut Rng) -> Vec<f32> {
         assert_eq!(sample.len(), eps.len());
         let x0 = self.predict_x0(i, sample, eps);

@@ -49,6 +49,12 @@ impl Scheduler for Euler {
         sample.iter().map(|&x| x * scale).collect()
     }
 
+    fn add_noise(&self, i: usize, x0: &[f32], noise: &[f32]) -> Vec<f32> {
+        assert_eq!(x0.len(), noise.len());
+        let s = self.sigmas[i] as f32;
+        x0.iter().zip(noise).map(|(&x, &e)| x + s * e).collect()
+    }
+
     fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], _rng: &mut Rng) -> Vec<f32> {
         assert_eq!(sample.len(), eps.len());
         euler_step(sample, eps, self.sigmas[i], self.sigmas[i + 1])
@@ -87,6 +93,12 @@ impl Scheduler for EulerAncestral {
         let s = self.sigmas[i];
         let scale = (1.0 / (s * s + 1.0).sqrt()) as f32;
         sample.iter().map(|&x| x * scale).collect()
+    }
+
+    fn add_noise(&self, i: usize, x0: &[f32], noise: &[f32]) -> Vec<f32> {
+        assert_eq!(x0.len(), noise.len());
+        let s = self.sigmas[i] as f32;
+        x0.iter().zip(noise).map(|(&x, &e)| x + s * e).collect()
     }
 
     fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], rng: &mut Rng) -> Vec<f32> {

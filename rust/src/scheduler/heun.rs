@@ -72,6 +72,12 @@ impl Scheduler for Heun {
         sample.iter().map(|&x| x * scale).collect()
     }
 
+    fn add_noise(&self, i: usize, x0: &[f32], noise: &[f32]) -> Vec<f32> {
+        assert_eq!(x0.len(), noise.len());
+        let s = self.sigmas[i] as f32;
+        x0.iter().zip(noise).map(|(&x, &e)| x + s * e).collect()
+    }
+
     fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], _rng: &mut Rng) -> Vec<f32> {
         // one-eval contract: both slopes equal -> Euler step
         assert_eq!(sample.len(), eps.len());

@@ -119,6 +119,14 @@ pub trait Scheduler: Send {
         sample.to_vec()
     }
 
+    /// Forward-diffuse a clean latent to the noise level *entering* step
+    /// `i` (`i == 0` is the fully-noised trajectory start; valid for
+    /// `i < timesteps().len()`). This is the img2img entry point: an
+    /// init latent re-noised to step `i` continues the reverse
+    /// trajectory from there, in whatever latent space (ᾱ or rescaled
+    /// sigma) this scheduler steps in.
+    fn add_noise(&self, i: usize, x0: &[f32], noise: &[f32]) -> Vec<f32>;
+
     /// Advance one step: latent(t_i) + eps -> latent(t_{i+1}).
     fn step(&mut self, i: usize, sample: &[f32], eps: &[f32], rng: &mut Rng) -> Vec<f32>;
 
@@ -214,6 +222,54 @@ mod tests {
                 let eps = rng.normal_vec(dim);
                 x = sched.step(i, &x, &eps, &mut rng);
                 assert!(x.iter().all(|v| v.is_finite()), "{kind:?} step {i} produced non-finite");
+            }
+        });
+    }
+
+    #[test]
+    fn add_noise_finite_for_all_kinds_and_offsets() {
+        forall("add_noise finite", 30, |g| {
+            let n = g.usize_in(1, 50);
+            let kind = *g.choose(&[
+                SchedulerKind::Ddim,
+                SchedulerKind::Ddpm,
+                SchedulerKind::Pndm,
+                SchedulerKind::Euler,
+                SchedulerKind::EulerAncestral,
+                SchedulerKind::DpmSolverPP,
+                SchedulerKind::Heun,
+            ]);
+            let sched = kind.build(NoiseSchedule::default(), n);
+            let i = g.usize_in(0, n - 1);
+            let dim = 8;
+            let x0: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let eps: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let x = sched.add_noise(i, &x0, &eps);
+            assert_eq!(x.len(), dim);
+            assert!(x.iter().all(|v| v.is_finite()), "{kind:?} add_noise({i}) non-finite");
+        });
+    }
+
+    #[test]
+    fn add_noise_oracle_recovery_for_memoryless_deterministic_kinds() {
+        // DDIM and Euler invert their own forward map along a fixed
+        // noise ray from ANY entry offset — the property img2img's
+        // truncated trajectory relies on.
+        forall("add_noise oracle", 20, |g| {
+            let n = g.usize_in(2, 40);
+            let kind = *g.choose(&[SchedulerKind::Ddim, SchedulerKind::Euler]);
+            let mut sched = kind.build(NoiseSchedule::default(), n);
+            let offset = g.usize_in(0, n - 1);
+            let dim = 10;
+            let x0: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let eps: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let mut x = sched.add_noise(offset, &x0, &eps);
+            let mut rng = Rng::new(0);
+            for i in offset..n {
+                x = sched.step(i, &x, &eps, &mut rng);
+            }
+            for (a, b) in x.iter().zip(&x0) {
+                assert!((a - b).abs() < 2e-3, "{kind:?} offset {offset}: {a} vs {b}");
             }
         });
     }

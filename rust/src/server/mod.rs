@@ -1,6 +1,24 @@
 //! TCP front-end: JSON-lines protocol + blocking client library.
 //!
-//! One JSON object per line in each direction. Operations:
+//! One JSON object per line in each direction, served by a **single
+//! nonblocking multiplexer thread** — no thread per client. The loop
+//! polls the listener and every connection's socket, buffers partial
+//! frames until their newline arrives, and drains in-flight generation
+//! tickets between socket polls, so hundreds of concurrent (and
+//! streaming) connections cost one thread.
+//!
+//! Two wire versions share the parser ([`parse_frame`], DESIGN.md §14):
+//!
+//! * **v1** (no `"v"` field — every legacy client): one request line,
+//!   one response line, byte-identical to the historical shapes;
+//! * **v2** (`{"v":2,"op":...}`): adds `cancel` and the streaming
+//!   generate (`stream`, `preview_every`, `strength`/`init_latent`,
+//!   `variations`). A streamed generate answers with typed event
+//!   frames — `queued`/`progress`/`preview`/`done`/`error` — pushed as
+//!   the sample denoises; `cancel` aborts it mid-cohort and frees its
+//!   reserved slots as admission headroom.
+//!
+//! Operations:
 //!
 //! * `{"op":"generate", "prompt":..., ...}` → generation result (metrics
 //!   and, when `return_image` is true, the PNG as base64). Optional QoS
@@ -24,6 +42,8 @@
 //!   JSON (`span.events[]` with `event`/`at_ms` + event fields). The
 //!   span key is `trace`, never `id` — [`Client`] reserves `id` for
 //!   request/response correlation;
+//! * `{"v":2,"op":"cancel","target":N}` → abort the streamed generates
+//!   whose frame `id` was `N` on this connection;
 //! * `{"op":"shutdown"}` → acks and stops the listener.
 //!
 //! No HTTP stack exists in the offline registry snapshot; JSON-over-TCP
@@ -36,21 +56,27 @@ mod base64;
 mod protocol;
 
 pub use base64::{b64decode, b64encode};
-pub use protocol::{parse_request, render_failure, render_output, ServerRequest};
+pub use protocol::{
+    event_done, event_error, event_preview, event_progress, event_queued, parse_frame,
+    parse_request, parse_request_versioned, render_failure, render_output, Frame, ServerOp,
+    ServerRequest,
+};
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
+use crate::cache::CacheOutcome;
 use crate::cluster::ReplicaSet;
 use crate::config::EngineConfig;
-use crate::coordinator::{Coordinator, Ticket};
+use crate::coordinator::{Coordinator, Ticket, WatchOptions, Watched};
 use crate::error::{Error, Result};
 use crate::guidance::{AdaptiveConfig, GuidanceSchedule, GuidanceStrategy};
 use crate::json::{self, Value};
 use crate::qos::QosMeta;
-use crate::telemetry::{Telemetry, PROMETHEUS_CONTENT_TYPE};
+use crate::telemetry::{Counter, Telemetry, PROMETHEUS_CONTENT_TYPE};
 
 /// What the server fronts: a single coordinator or a replica cluster.
 /// Every wire operation behaves identically against both — only the
@@ -65,6 +91,18 @@ impl Backend {
         match self {
             Backend::Single(c) => c.submit_qos(req, meta),
             Backend::Cluster(s) => s.submit_qos(req, meta),
+        }
+    }
+
+    fn submit_watched(
+        &self,
+        req: crate::engine::GenerationRequest,
+        meta: QosMeta,
+        watch: WatchOptions,
+    ) -> Result<Watched> {
+        match self {
+            Backend::Single(c) => c.submit_watched(req, meta, watch),
+            Backend::Cluster(s) => s.submit_watched(req, meta, watch),
         }
     }
 
@@ -89,6 +127,7 @@ impl Backend {
                     .with("failed", s.failed as i64)
                     .with("rejected", s.rejected as i64)
                     .with("deadline_missed", s.deadline_missed as i64)
+                    .with("cancelled", s.cancelled as i64)
                     .with("drain_shed", s.drain_shed as i64)
                     .with("cache_hits", s.cache_hits as i64)
                     .with("dedup_coalesced", s.dedup_coalesced as i64)
@@ -143,6 +182,7 @@ impl Backend {
                     .with("failed", s.failed as i64)
                     .with("rejected", s.rejected as i64)
                     .with("deadline_missed", s.deadline_missed as i64)
+                    .with("cancelled", s.cancelled as i64)
                     .with("requeued", s.requeued as i64)
                     .with("ejected", s.ejected as i64)
                     .with("drain_shed", s.drain_shed as i64)
@@ -175,6 +215,10 @@ pub struct GuidanceDefaults {
     pub schedule: GuidanceSchedule,
     pub strategy: GuidanceStrategy,
     pub adaptive: Option<AdaptiveConfig>,
+    /// Preview cadence applied to streamed requests that don't set
+    /// their own `preview_every` (`[server] preview_every` /
+    /// `serve --preview-every`). 0 = progress events only.
+    pub preview_every: usize,
 }
 
 impl GuidanceDefaults {
@@ -184,11 +228,18 @@ impl GuidanceDefaults {
             schedule: cfg.schedule.clone(),
             strategy: cfg.guidance_strategy,
             adaptive: cfg.adaptive,
+            preview_every: 0,
         }
+    }
+
+    /// Set the default preview cadence for streamed requests.
+    pub fn with_preview_every(mut self, every: usize) -> GuidanceDefaults {
+        self.preview_every = every;
+        self
     }
 }
 
-/// A running server (listener thread + per-connection threads).
+/// A running server: one multiplexer thread serving every connection.
 pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -196,7 +247,7 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and serve in background threads.
+    /// Bind and serve in a background multiplexer thread.
     pub fn start(coordinator: Arc<Coordinator>, bind: &str) -> Result<Server> {
         Self::start_with_defaults(coordinator, bind, GuidanceDefaults::default())
     }
@@ -239,23 +290,7 @@ impl Server {
         let stop2 = Arc::clone(&stop);
         let defaults = Arc::new(defaults);
         let handle = std::thread::spawn(move || {
-            listener.set_nonblocking(false).ok();
-            for stream in listener.incoming() {
-                if stop2.load(Ordering::SeqCst) {
-                    break;
-                }
-                match stream {
-                    Ok(s) => {
-                        let backend = Arc::clone(&backend);
-                        let stop3 = Arc::clone(&stop2);
-                        let defaults = Arc::clone(&defaults);
-                        std::thread::spawn(move || {
-                            let _ = handle_connection(s, backend, stop3, defaults);
-                        });
-                    }
-                    Err(_) => break,
-                }
-            }
+            multiplex_loop(listener, backend, stop2, defaults);
         });
         Ok(Server { addr, stop, handle: Some(handle) })
     }
@@ -265,16 +300,14 @@ impl Server {
     }
 
     /// Whether a `shutdown` op (or [`Server::stop`]) has stopped the
-    /// listener — what the `serve` command polls to exit cleanly.
+    /// multiplexer — what the `serve` command polls to exit cleanly.
     pub fn stopped(&self) -> bool {
         self.stop.load(Ordering::SeqCst)
     }
 
-    /// Request the listener to stop (it wakes on the next connection).
+    /// Request the multiplexer to stop (it notices within one poll tick).
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // poke the listener so `incoming()` yields once more
-        let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -284,6 +317,446 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop();
+    }
+}
+
+// ---------------------------------------------------------------------
+// The multiplexer: one thread, every connection, nonblocking sockets.
+// ---------------------------------------------------------------------
+
+/// One client connection's poll-loop state: the nonblocking socket plus
+/// a read buffer (bytes up to the next newline — a frame split across
+/// TCP segments stays here until complete) and a write buffer (frames
+/// not yet accepted by the socket — a partial write keeps the rest).
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    closed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn { stream, rbuf: Vec::new(), wbuf: Vec::new(), closed: false }
+    }
+
+    /// Nonblocking read: drain the socket into `rbuf`. Returns whether
+    /// any bytes arrived.
+    fn fill(&mut self) -> bool {
+        let mut any = false;
+        let mut tmp = [0u8; 8192];
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    any = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        any
+    }
+
+    /// Every complete newline-terminated frame buffered so far. A
+    /// partial trailing frame (no newline yet) stays in `rbuf` — the
+    /// fix for the historical partial-read hazard where a frame split
+    /// across reads would be parsed as two broken ones.
+    fn take_lines(&mut self) -> Vec<String> {
+        let mut out = Vec::new();
+        while let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.rbuf.drain(..=pos).collect();
+            let s = String::from_utf8_lossy(&line);
+            let s = s.trim();
+            if !s.is_empty() {
+                out.push(s.to_string());
+            }
+        }
+        out
+    }
+
+    /// Queue one frame for writing.
+    fn push(&mut self, v: Value) {
+        self.wbuf.extend_from_slice(v.to_string().as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Nonblocking flush: write as much of `wbuf` as the socket takes.
+    /// Returns whether any bytes moved.
+    fn flush_some(&mut self) -> bool {
+        let mut any = false;
+        while !self.wbuf.is_empty() {
+            match self.stream.write(&self.wbuf) {
+                Ok(0) => {
+                    self.closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                    any = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        any
+    }
+}
+
+/// A non-streamed generate in flight: respond with one line when the
+/// ticket resolves. `variation` is the fan-out index when the frame
+/// asked for `variations > 1` (one response line per variation).
+struct PlainJob {
+    conn: u64,
+    frame_id: Option<i64>,
+    variation: Option<usize>,
+    sr: ServerRequest,
+    ticket: Ticket,
+    outcome: Arc<OnceLock<CacheOutcome>>,
+}
+
+/// A streamed (v2) generate in flight: progress/preview events are
+/// relayed as they arrive; `done`/`error` closes the stream. The cancel
+/// handle is flipped by a `cancel` op targeting this frame id (or by
+/// the connection disappearing), which aborts the sample mid-cohort
+/// and returns its slots to admission headroom.
+struct StreamJob {
+    conn: u64,
+    frame_id: Option<i64>,
+    variation: Option<usize>,
+    sr: ServerRequest,
+    watched: Watched,
+}
+
+/// Per-version wire-frame counters (`sg_protocol_requests_total`).
+struct ProtoCounters {
+    v1: Counter,
+    v2: Counter,
+}
+
+fn multiplex_loop(
+    listener: TcpListener,
+    backend: Arc<Backend>,
+    stop: Arc<AtomicBool>,
+    defaults: Arc<GuidanceDefaults>,
+) {
+    let _ = listener.set_nonblocking(true);
+    let proto = backend.telemetry().map(|t| {
+        let help = "Wire frames received by protocol version";
+        ProtoCounters {
+            v1: t.registry().counter("sg_protocol_requests_total", help, &[("version", "1")]),
+            v2: t.registry().counter("sg_protocol_requests_total", help, &[("version", "2")]),
+        }
+    });
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn: u64 = 0;
+    let mut plain: Vec<PlainJob> = Vec::new();
+    let mut streams: Vec<StreamJob> = Vec::new();
+
+    while !stop.load(Ordering::SeqCst) {
+        let mut activity = false;
+
+        // 1. accept — every waiting connection, no thread spawned
+        loop {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    if s.set_nonblocking(true).is_ok() {
+                        conns.insert(next_conn, Conn::new(s));
+                        next_conn += 1;
+                    }
+                    activity = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+
+        // 2. read + parse + dispatch per connection
+        let ids: Vec<u64> = conns.keys().copied().collect();
+        for cid in ids {
+            let Some(conn) = conns.get_mut(&cid) else { continue };
+            activity |= conn.fill();
+            for line in conn.take_lines() {
+                handle_line(
+                    &line, cid, conn, &backend, &stop, &defaults, &mut plain, &mut streams,
+                    proto.as_ref(),
+                );
+                activity = true;
+            }
+        }
+
+        // 3. relay progress/preview events and resolved tickets
+        streams.retain_mut(|j| {
+            let Some(conn) = conns.get_mut(&j.conn) else {
+                // subscriber gone: abort the sample so its slots return
+                // to admission headroom instead of denoising for nobody
+                j.watched.cancel.cancel();
+                return false;
+            };
+            activity |= drain_progress(&j.watched, j.frame_id, j.variation, conn);
+            match j.watched.ticket.try_wait_timed() {
+                None => true,
+                Some((res, _)) => {
+                    // events the worker sent before resolving
+                    drain_progress(&j.watched, j.frame_id, j.variation, conn);
+                    let frame = match res {
+                        Ok(out) => tag_var(event_done(j.frame_id, &j.sr, &out), j.variation),
+                        Err(e) => tag_var(event_error(j.frame_id, &e), j.variation),
+                    };
+                    conn.push(frame);
+                    activity = true;
+                    false
+                }
+            }
+        });
+        plain.retain_mut(|j| {
+            if !conns.contains_key(&j.conn) {
+                return false; // response has no reader; drop the ticket
+            }
+            match j.ticket.try_wait_timed() {
+                None => true,
+                Some((res, _)) => {
+                    let conn = conns.get_mut(&j.conn).expect("checked above");
+                    let frame = match res {
+                        Ok(out) => {
+                            let mut v = render_output(j.frame_id, &j.sr, &out);
+                            // echoed only when a cache layer keyed the
+                            // admission — absent field == caches off,
+                            // exactly the v1 wire shape
+                            if let Some(o) = j.outcome.get() {
+                                v = v.with("cache", o.label());
+                            }
+                            tag_var(v, j.variation)
+                        }
+                        Err(e) => tag_var(render_failure(j.frame_id, &e), j.variation),
+                    };
+                    conn.push(frame);
+                    activity = true;
+                    false
+                }
+            }
+        });
+
+        // 4. flush write buffers (partial writes keep their remainder)
+        for conn in conns.values_mut() {
+            activity |= conn.flush_some();
+        }
+
+        // 5. sweep closed connections
+        conns.retain(|_, c| !c.closed);
+
+        if !activity {
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        }
+    }
+
+    // best-effort final flush so a `shutdown` ack reaches its client
+    for (_, mut c) in conns {
+        let _ = c.stream.set_nonblocking(false);
+        let _ = c.stream.write_all(&c.wbuf);
+    }
+}
+
+/// Relay every queued progress/preview event of one watched job to its
+/// connection. Returns whether any event moved.
+fn drain_progress(
+    watched: &Watched,
+    frame_id: Option<i64>,
+    variation: Option<usize>,
+    conn: &mut Conn,
+) -> bool {
+    let mut any = false;
+    while let Ok(ev) = watched.progress.try_recv() {
+        conn.push(tag_var(event_progress(frame_id, ev.step, ev.steps), variation));
+        if let Some(img) = &ev.preview {
+            if let Ok(f) = event_preview(frame_id, ev.step, img) {
+                conn.push(tag_var(f, variation));
+            }
+        }
+        any = true;
+    }
+    any
+}
+
+/// Tag a frame with its variations fan-out index (absent for plain,
+/// single-sample generates — exactly the pre-fan-out wire shape).
+fn tag_var(v: Value, variation: Option<usize>) -> Value {
+    match variation {
+        Some(i) => v.with("variation", i as i64),
+        None => v,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_line(
+    line: &str,
+    cid: u64,
+    conn: &mut Conn,
+    backend: &Backend,
+    stop: &AtomicBool,
+    defaults: &GuidanceDefaults,
+    plain: &mut Vec<PlainJob>,
+    streams: &mut Vec<StreamJob>,
+    proto: Option<&ProtoCounters>,
+) {
+    let parsed = match json::from_str(line) {
+        Ok(v) => v,
+        Err(e) => return conn.push(err_response(None, &format!("bad json: {e}"))),
+    };
+    let id = parsed.get("id").and_then(Value::as_i64);
+    let frame = match parse_frame(&parsed) {
+        Ok(f) => f,
+        Err(e) => return conn.push(err_response(id, &e.to_string())),
+    };
+    if let Some(p) = proto {
+        match frame.version {
+            2 => p.v2.inc(),
+            _ => p.v1.inc(),
+        }
+    }
+    match frame.op {
+        ServerOp::Ping => conn.push(ok_base(id).with("pong", true)),
+        ServerOp::Stats => conn.push(backend.stats_value(id)),
+        ServerOp::Shutdown => {
+            stop.store(true, Ordering::SeqCst);
+            conn.push(ok_base(id).with("stopping", true));
+        }
+        ServerOp::Metrics => match backend.telemetry() {
+            Some(t) => conn.push(
+                ok_base(id)
+                    .with("content_type", PROMETHEUS_CONTENT_TYPE)
+                    .with("body", t.render_prometheus().as_str()),
+            ),
+            None => conn.push(err_response(id, "telemetry disabled")),
+        },
+        ServerOp::Trace { trace } => match backend.telemetry() {
+            Some(t) => match trace {
+                Some(tid) => match t.traces().span(tid as u64) {
+                    Some(span) => conn.push(ok_base(id).with("span", span.to_json())),
+                    None => conn.push(err_response(id, &format!("unknown trace id {tid}"))),
+                },
+                None => {
+                    let recent: Vec<Value> =
+                        t.traces().recent(64).iter().map(|&i| Value::int(i as i64)).collect();
+                    conn.push(
+                        ok_base(id)
+                            .with("recent", Value::Arr(recent))
+                            .with("evicted", t.traces().evicted() as i64),
+                    );
+                }
+            },
+            None => conn.push(err_response(id, "telemetry disabled")),
+        },
+        ServerOp::Cancel { target } => {
+            // scoped to this connection: one client cannot cancel
+            // another's streams by guessing frame ids
+            let mut n = 0i64;
+            for j in streams.iter().filter(|j| j.conn == cid && j.frame_id == Some(target)) {
+                j.watched.cancel.cancel();
+                n += 1;
+            }
+            if n > 0 {
+                conn.push(ok_base(id).with("cancelled", n));
+            } else {
+                conn.push(err_response(id, &format!("cancel: unknown target {target}")));
+            }
+        }
+        ServerOp::Generate(sr) => {
+            handle_generate(*sr, id, cid, conn, backend, defaults, plain, streams)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_generate(
+    mut sr: ServerRequest,
+    id: Option<i64>,
+    cid: u64,
+    conn: &mut Conn,
+    backend: &Backend,
+    defaults: &GuidanceDefaults,
+    plain: &mut Vec<PlainJob>,
+    streams: &mut Vec<StreamJob>,
+) {
+    // server-side guidance defaults: applied wholesale, and only when
+    // the client set none of the guidance fields — a request that
+    // picked any schedule/strategy/adaptive field keeps exactly what
+    // it asked for
+    if !sr.schedule_set && !sr.strategy_set && !sr.adaptive_set {
+        sr.request.schedule = defaults.schedule.clone();
+        sr.request.strategy = defaults.strategy;
+        sr.request.adaptive = defaults.adaptive;
+    }
+    // variations fan-out: N seeds share ONE compiled guidance plan;
+    // each variation is its own sample (own ticket, own event frames,
+    // `variation` tag for correlation)
+    let reqs: Vec<(Option<usize>, crate::engine::GenerationRequest)> = if sr.variations > 1 {
+        match sr.request.variations(sr.variations) {
+            Ok(rs) => rs.into_iter().enumerate().map(|(i, r)| (Some(i), r)).collect(),
+            Err(e) => {
+                let f = if sr.stream { event_error(id, &e) } else { render_failure(id, &e) };
+                return conn.push(f);
+            }
+        }
+    } else {
+        vec![(None, sr.request.clone())]
+    };
+    for (variation, req) in reqs {
+        if sr.stream {
+            // the server default cadence fills in only when the request
+            // didn't pick one (per-request knob wins)
+            let preview_every = if sr.preview_every > 0 {
+                sr.preview_every
+            } else {
+                defaults.preview_every
+            };
+            let watch = WatchOptions { preview_every };
+            match backend.submit_watched(req, sr.meta, watch) {
+                Ok(watched) => {
+                    conn.push(tag_var(event_queued(id), variation));
+                    streams.push(StreamJob {
+                        conn: cid,
+                        frame_id: id,
+                        variation,
+                        sr: sr.clone(),
+                        watched,
+                    });
+                }
+                Err(e) => conn.push(tag_var(event_error(id, &e), variation)),
+            }
+        } else {
+            // submit through the QoS path: a shed request comes back as
+            // a structured 429/503 response, a queue-expired one as 504
+            match backend.submit_qos(req, sr.meta) {
+                Ok(ticket) => {
+                    // the admission's cache outcome: hit/dedup are
+                    // decided synchronously at submit, so the cell is
+                    // settled by the time the ticket resolves
+                    let outcome = ticket.outcome_cell();
+                    plain.push(PlainJob {
+                        conn: cid,
+                        frame_id: id,
+                        variation,
+                        sr: sr.clone(),
+                        ticket,
+                        outcome,
+                    });
+                }
+                Err(e) => conn.push(tag_var(render_failure(id, &e), variation)),
+            }
+        }
     }
 }
 
@@ -376,122 +849,6 @@ fn serve_scrape(stream: TcpStream, telemetry: &Arc<Telemetry>) -> std::io::Resul
     writer.flush()
 }
 
-fn handle_connection(
-    stream: TcpStream,
-    backend: Arc<Backend>,
-    stop: Arc<AtomicBool>,
-    defaults: Arc<GuidanceDefaults>,
-) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let response = dispatch(&line, &backend, &stop, &defaults);
-        writer.write_all(response.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        if stop.load(Ordering::SeqCst) {
-            let _ = peer;
-            return Ok(());
-        }
-    }
-}
-
-fn dispatch(
-    line: &str,
-    backend: &Arc<Backend>,
-    stop: &Arc<AtomicBool>,
-    defaults: &GuidanceDefaults,
-) -> Value {
-    let parsed = match json::from_str(line) {
-        Ok(v) => v,
-        Err(e) => return err_response(None, &format!("bad json: {e}")),
-    };
-    let id = parsed.get("id").and_then(Value::as_i64);
-    match parsed.get("op").and_then(Value::as_str) {
-        Some("ping") => ok_base(id).with("pong", true),
-        Some("stats") => backend.stats_value(id),
-        Some("shutdown") => {
-            stop.store(true, Ordering::SeqCst);
-            ok_base(id).with("stopping", true)
-        }
-        Some("metrics") => match backend.telemetry() {
-            Some(t) => ok_base(id)
-                .with("content_type", PROMETHEUS_CONTENT_TYPE)
-                .with("body", t.render_prometheus().as_str()),
-            None => err_response(id, "telemetry disabled"),
-        },
-        Some("trace") => match backend.telemetry() {
-            Some(t) => {
-                // `trace` names the span — never `id`, which the
-                // [`Client`] injects on every call for correlation
-                match parsed.get("trace").and_then(Value::as_i64) {
-                    Some(tid) => match t.traces().span(tid as u64) {
-                        Some(span) => ok_base(id).with("span", span.to_json()),
-                        None => err_response(id, &format!("unknown trace id {tid}")),
-                    },
-                    None => {
-                        let recent: Vec<Value> =
-                            t.traces().recent(64).iter().map(|&i| Value::int(i as i64)).collect();
-                        ok_base(id)
-                            .with("recent", Value::Arr(recent))
-                            .with("evicted", t.traces().evicted() as i64)
-                    }
-                }
-            }
-            None => err_response(id, "telemetry disabled"),
-        },
-        Some("generate") => match parse_request(&parsed) {
-            // submit through the QoS path: a shed request comes back as
-            // a structured 429/503 response, a queue-expired one as 504
-            Ok(mut sr) => {
-                // server-side guidance defaults: applied wholesale, and
-                // only when the client set none of the guidance fields —
-                // a request that picked any schedule/strategy/adaptive
-                // field keeps exactly what it asked for
-                if !sr.schedule_set && !sr.strategy_set && !sr.adaptive_set {
-                    sr.request.schedule = defaults.schedule.clone();
-                    sr.request.strategy = defaults.strategy;
-                    sr.request.adaptive = defaults.adaptive;
-                }
-                match backend.submit_qos(sr.request.clone(), sr.meta) {
-                    Ok(ticket) => {
-                        // read the admission's cache outcome after the
-                        // wait: hit/dedup are decided synchronously at
-                        // submit, so the cell is already settled
-                        let outcome = ticket.outcome_cell();
-                        match ticket.wait() {
-                            Ok(out) => {
-                                let mut v = render_output(id, &sr, &out);
-                                // echoed only when a cache layer keyed
-                                // the admission — absent field == caches
-                                // off, exactly today's wire shape
-                                if let Some(o) = outcome.get() {
-                                    v = v.with("cache", o.label());
-                                }
-                                v
-                            }
-                            Err(e) => render_failure(id, &e),
-                        }
-                    }
-                    Err(e) => render_failure(id, &e),
-                }
-            }
-            Err(e) => err_response(id, &e.to_string()),
-        },
-        Some(other) => err_response(id, &format!("unknown op {other:?}")),
-        None => err_response(id, "missing op"),
-    }
-}
-
 fn ok_base(id: Option<i64>) -> Value {
     let v = Value::obj().with("ok", true);
     match id {
@@ -508,7 +865,7 @@ fn err_response(id: Option<i64>, msg: &str) -> Value {
     }
 }
 
-/// Blocking client for the JSON-lines protocol.
+/// Blocking client for the JSON-lines protocol (v1 and v2).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -525,7 +882,21 @@ impl Client {
 
     /// Send one op object (the `id` field is added automatically) and
     /// block for its response.
-    pub fn call(&mut self, mut payload: Value) -> Result<Value> {
+    pub fn call(&mut self, payload: Value) -> Result<Value> {
+        let id = self.send(payload)?;
+        let v = self.read_frame()?;
+        match v.get("id").and_then(Value::as_i64) {
+            Some(rid) if rid == id => Ok(v),
+            Some(rid) => Err(Error::Protocol(format!("response id {rid} != request id {id}"))),
+            None => Ok(v), // error responses may lack an id
+        }
+    }
+
+    /// Send one op object without waiting for its response (the `id`
+    /// field is added automatically; returned for correlation) — the
+    /// v2 streaming primitive: follow with [`Client::read_frame`] until
+    /// the `done`/`error` event arrives.
+    pub fn send(&mut self, mut payload: Value) -> Result<i64> {
         let id = self.next_id;
         self.next_id += 1;
         if let Value::Obj(m) = &mut payload {
@@ -537,6 +908,12 @@ impl Client {
             .and_then(|_| self.writer.write_all(b"\n"))
             .and_then(|_| self.writer.flush())
             .map_err(|e| Error::io("sending request", e))?;
+        Ok(id)
+    }
+
+    /// Block for the next frame from the server — a response line or,
+    /// on a streamed generate, the next event frame.
+    pub fn read_frame(&mut self) -> Result<Value> {
         let mut resp = String::new();
         self.reader
             .read_line(&mut resp)
@@ -544,12 +921,7 @@ impl Client {
         if resp.is_empty() {
             return Err(Error::Protocol("server closed connection".into()));
         }
-        let v = json::from_str(&resp)?;
-        match v.get("id").and_then(Value::as_i64) {
-            Some(rid) if rid == id => Ok(v),
-            Some(rid) => Err(Error::Protocol(format!("response id {rid} != request id {id}"))),
-            None => Ok(v), // error responses may lack an id
-        }
+        json::from_str(&resp)
     }
 
     pub fn ping(&mut self) -> Result<bool> {
@@ -579,5 +951,36 @@ mod tests {
         let err = err_response(None, "boom");
         assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(err.get("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn variation_tag_only_on_fanout() {
+        let v = tag_var(ok_base(Some(1)), None);
+        assert!(v.get("variation").is_none());
+        let v = tag_var(ok_base(Some(1)), Some(2));
+        assert_eq!(v.get("variation").unwrap().as_i64(), Some(2));
+    }
+
+    // `take_lines` is the partial-frame fix: frames split across TCP
+    // segments must buffer until their newline, and multiple frames in
+    // one segment must all come out.
+    #[test]
+    fn take_lines_buffers_partial_frames() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let peer = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (sock, _) = listener.accept().unwrap();
+        drop(peer);
+        let mut c = Conn::new(sock);
+
+        c.rbuf.extend_from_slice(b"{\"op\":");
+        assert!(c.take_lines().is_empty(), "partial frame must stay buffered");
+        c.rbuf.extend_from_slice(b"\"ping\"}\n{\"op\":\"stats\"}\n{\"op\":");
+        let lines = c.take_lines();
+        assert_eq!(lines, vec![r#"{"op":"ping"}"#, r#"{"op":"stats"}"#]);
+        assert_eq!(c.rbuf, b"{\"op\":");
+        c.rbuf.extend_from_slice(b"\"x\"}\r\n\n");
+        // CRLF endings and blank lines are tolerated, not frames
+        assert_eq!(c.take_lines(), vec![r#"{"op":"x"}"#]);
+        assert!(c.take_lines().is_empty());
     }
 }

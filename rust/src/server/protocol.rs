@@ -1,14 +1,40 @@
 //! Wire-format mapping: JSON objects <-> engine request/output types.
+//!
+//! Two protocol versions share one parser and one encoder:
+//!
+//! * **v1** (legacy, no `"v"` field): one request line, one response
+//!   line. Still the shape every pre-existing client speaks.
+//! * **v2** (`{"v":2,"op":...}`): the same ops plus `cancel`, and the
+//!   streaming extensions on `generate` (`stream`, `preview_every`,
+//!   `strength`/`init_latent`, `variations`). A streamed generate
+//!   answers with typed *event frames* — `{"v":2,"event":"queued"|
+//!   "progress"|"preview"|"done"|"error","id":...}` — instead of a
+//!   single response. The `done`/`error` events are exactly
+//!   [`render_output`]/[`render_failure`] plus the envelope tag, so the
+//!   non-streamed v2 response stays byte-identical to v1.
+//!
+//! [`parse_frame`] is the single entry point: it sniffs the version
+//! (absent `"v"` means v1) and routes both through the same
+//! [`ServerOp`] enum; v2-only fields on a v1 frame are protocol errors,
+//! not silent drops.
 
-use crate::engine::{GenerationOutput, GenerationRequest};
+use std::sync::Arc;
+
+use crate::engine::{GenerationOutput, GenerationRequest, InitImage};
 use crate::error::{Error, Result};
 use crate::guidance::{AdaptiveConfig, GuidanceSchedule, GuidanceStrategy, WindowPosition};
-use crate::image::encode_png;
+use crate::image::{encode_png, RgbImage};
 use crate::json::Value;
 use crate::qos::{Priority, QosMeta};
 use crate::scheduler::SchedulerKind;
 
 use super::base64::b64encode;
+
+/// Fields a v1 frame must not carry — the streaming surface is v2-only
+/// so a legacy client gets a typed rejection instead of a silently
+/// ignored knob.
+const V2_ONLY_FIELDS: [&str; 5] =
+    ["stream", "preview_every", "strength", "init_latent", "variations"];
 
 /// A parsed `generate` operation.
 #[derive(Debug, Clone)]
@@ -31,10 +57,26 @@ pub struct ServerRequest {
     pub return_image: bool,
     /// Include the raw final latent in the response.
     pub return_latent: bool,
+    /// v2: stream typed event frames (`queued`/`progress`/`preview`/
+    /// `done`) instead of a single response line.
+    pub stream: bool,
+    /// v2: push a `preview` event (intermediate latent decoded to PNG)
+    /// every K denoising steps. 0 = progress events only. Requires
+    /// `stream`.
+    pub preview_every: usize,
+    /// v2: fan this request out into N seed variations sharing one
+    /// compiled guidance plan. 1 = no fan-out.
+    pub variations: usize,
 }
 
-/// Parse a `{"op":"generate", ...}` JSON object.
+/// Parse a v1 `{"op":"generate", ...}` JSON object (legacy adapter —
+/// rejects the v2-only streaming fields).
 pub fn parse_request(v: &Value) -> Result<ServerRequest> {
+    parse_request_versioned(v, 1)
+}
+
+/// Parse a `generate` payload under the given protocol version.
+pub fn parse_request_versioned(v: &Value, version: u8) -> Result<ServerRequest> {
     let prompt = v
         .get("prompt")
         .and_then(Value::as_str)
@@ -194,6 +236,70 @@ pub fn parse_request(v: &Value) -> Result<ServerRequest> {
     let return_image = v.get("return_image").and_then(Value::as_bool).unwrap_or(false);
     let return_latent = v.get("return_latent").and_then(Value::as_bool).unwrap_or(false);
     req.decode = return_image || req.decode;
+    // ---- the v2 streaming surface. A v1 frame carrying any of these
+    // is a protocol error: silently ignoring `stream` would leave the
+    // client waiting on event frames that never come.
+    if version < 2 {
+        if let Some(f) = V2_ONLY_FIELDS.iter().find(|&&k| v.get(k).is_some()) {
+            return Err(Error::Protocol(format!("{f} requires protocol v2 ({{\"v\":2}})")));
+        }
+    }
+    let stream = match v.get("stream") {
+        Some(b) => b
+            .as_bool()
+            .ok_or_else(|| Error::Protocol("stream must be a boolean".into()))?,
+        None => false,
+    };
+    let preview_every = match v.get("preview_every") {
+        Some(p) => {
+            let every = p.as_usize().ok_or_else(|| {
+                Error::Protocol("preview_every must be a non-negative integer".into())
+            })?;
+            // orphan knob without the switch, mirrors refresh_every
+            if !stream {
+                return Err(Error::Protocol(
+                    "preview_every requires \"stream\": true".into(),
+                ));
+            }
+            every
+        }
+        None => 0,
+    };
+    if let Some(s) = v.get("strength") {
+        let strength = s
+            .as_f64()
+            .ok_or_else(|| Error::Protocol("strength must be a number".into()))?;
+        let latent = match v.get("init_latent") {
+            Some(arr) => {
+                let items = arr.as_arr().ok_or_else(|| {
+                    Error::Protocol("init_latent must be an array of numbers".into())
+                })?;
+                let mut lat = Vec::with_capacity(items.len());
+                for it in items {
+                    lat.push(it.as_f64().ok_or_else(|| {
+                        Error::Protocol("init_latent must be an array of numbers".into())
+                    })? as f32);
+                }
+                Some(Arc::new(lat))
+            }
+            None => None, // seed-derived synthetic init latent
+        };
+        req.init = Some(InitImage { latent, strength });
+    } else if v.get("init_latent").is_some() {
+        return Err(Error::Protocol("init_latent requires a strength field".into()));
+    }
+    let variations = match v.get("variations") {
+        Some(n) => {
+            let n = n.as_usize().ok_or_else(|| {
+                Error::Protocol("variations must be a positive integer".into())
+            })?;
+            if n == 0 {
+                return Err(Error::Protocol("variations must be >= 1".into()));
+            }
+            n
+        }
+        None => 1,
+    };
     req.validate()?;
     Ok(ServerRequest {
         request: req,
@@ -203,7 +309,78 @@ pub fn parse_request(v: &Value) -> Result<ServerRequest> {
         strategy_set,
         return_image,
         return_latent,
+        stream,
+        preview_every,
+        variations,
     })
+}
+
+/// One parsed wire frame: the sniffed protocol version, the client's
+/// correlation id, and the operation — v1 and v2 both land here.
+#[derive(Debug)]
+pub struct Frame {
+    pub version: u8,
+    pub id: Option<i64>,
+    pub op: ServerOp,
+}
+
+/// Every operation either protocol version can carry. `Cancel` is
+/// v2-only; `Generate` carries the version-gated streaming fields.
+#[derive(Debug)]
+pub enum ServerOp {
+    Ping,
+    Stats,
+    Metrics,
+    /// `trace: None` lists recent span ids; `Some(id)` fetches one span.
+    Trace { trace: Option<i64> },
+    Shutdown,
+    Generate(Box<ServerRequest>),
+    /// v2: abort the in-flight `generate` whose frame `id` was `target`,
+    /// freeing its continuous-batch slots as admission headroom.
+    Cancel { target: i64 },
+}
+
+/// Parse one wire frame. An absent `"v"` field means v1 (every legacy
+/// client); `"v":1` and `"v":2` are explicit; anything else is a
+/// protocol error so version skew fails loudly.
+pub fn parse_frame(v: &Value) -> Result<Frame> {
+    let version = match v.get("v") {
+        None => 1,
+        Some(val) => match val.as_i64() {
+            Some(1) => 1,
+            Some(2) => 2,
+            Some(n) => {
+                return Err(Error::Protocol(format!("unsupported protocol version {n}")))
+            }
+            None => return Err(Error::Protocol("v must be an integer".into())),
+        },
+    };
+    let id = v.get("id").and_then(Value::as_i64);
+    let op = match v.get("op").and_then(Value::as_str) {
+        Some("ping") => ServerOp::Ping,
+        Some("stats") => ServerOp::Stats,
+        Some("metrics") => ServerOp::Metrics,
+        Some("shutdown") => ServerOp::Shutdown,
+        // `trace` names the span — never `id`, which clients use for
+        // request/response correlation
+        Some("trace") => ServerOp::Trace { trace: v.get("trace").and_then(Value::as_i64) },
+        Some("generate") => {
+            ServerOp::Generate(Box::new(parse_request_versioned(v, version)?))
+        }
+        Some("cancel") if version >= 2 => {
+            let target = v
+                .get("target")
+                .and_then(Value::as_i64)
+                .ok_or_else(|| Error::Protocol("cancel: missing target".into()))?;
+            ServerOp::Cancel { target }
+        }
+        Some("cancel") => {
+            return Err(Error::Protocol("cancel requires protocol v2 ({\"v\":2})".into()))
+        }
+        Some(other) => return Err(Error::Protocol(format!("unknown op {other:?}"))),
+        None => return Err(Error::Protocol("missing op".into())),
+    };
+    Ok(Frame { version, id, op })
 }
 
 /// Render a generation failure, giving QoS outcomes their structured
@@ -268,6 +445,61 @@ pub fn render_output(id: Option<i64>, sr: &ServerRequest, out: &GenerationOutput
     v
 }
 
+// ---- v2 event frames. A streamed generate answers with a sequence of
+// these instead of one response line; `done`/`error` are the v1
+// encoders plus the envelope tag, so the payload a v2 client unwraps is
+// byte-identical to what a v1 client would have received.
+
+/// Stamp the v2 event envelope onto an encoded payload object.
+fn tag_event(mut v: Value, event: &str) -> Value {
+    if let Value::Obj(m) = &mut v {
+        m.insert("v".into(), Value::int(2));
+        m.insert("event".into(), Value::str(event));
+    }
+    v
+}
+
+/// `queued`: the streamed generate was admitted; event frames follow.
+pub fn event_queued(id: Option<i64>) -> Value {
+    tag_event(ok_event(id), "queued")
+}
+
+/// `progress`: the sample finished denoising step `step` of `steps`.
+pub fn event_progress(id: Option<i64>, step: usize, steps: usize) -> Value {
+    tag_event(ok_event(id), "progress")
+        .with("step", step as i64)
+        .with("steps", steps as i64)
+}
+
+/// `preview`: an intermediate latent decoded to PNG at step `step`.
+pub fn event_preview(id: Option<i64>, step: usize, img: &RgbImage) -> Result<Value> {
+    let png = encode_png(img)?;
+    Ok(tag_event(ok_event(id), "preview")
+        .with("step", step as i64)
+        .with("png_b64", b64encode(&png))
+        .with("width", img.width as i64)
+        .with("height", img.height as i64))
+}
+
+/// `done`: the full [`render_output`] payload under the event envelope.
+pub fn event_done(id: Option<i64>, sr: &ServerRequest, out: &GenerationOutput) -> Value {
+    tag_event(render_output(id, sr, out), "done")
+}
+
+/// `error`: the full [`render_failure`] payload under the event
+/// envelope — cancellation surfaces here as its structured 499 shape.
+pub fn event_error(id: Option<i64>, e: &Error) -> Value {
+    tag_event(render_failure(id, e), "error")
+}
+
+fn ok_event(id: Option<i64>) -> Value {
+    let v = Value::obj().with("ok", true);
+    match id {
+        Some(id) => v.with("id", id),
+        None => v,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +509,14 @@ mod tests {
 
     fn parse(s: &str) -> Result<ServerRequest> {
         parse_request(&json::from_str(s).unwrap())
+    }
+
+    fn parse2(s: &str) -> Result<ServerRequest> {
+        parse_request_versioned(&json::from_str(s).unwrap(), 2)
+    }
+
+    fn frame(s: &str) -> Result<Frame> {
+        parse_frame(&json::from_str(s).unwrap())
     }
 
     #[test]
@@ -522,6 +762,160 @@ mod tests {
         assert_eq!(v.get("plan").unwrap().as_str(), Some("40D 10C"));
         assert!(v.get("png_b64").is_none());
         assert!(v.get("latent").is_none());
+    }
+
+    #[test]
+    fn v1_rejects_v2_only_fields() {
+        // the whole streaming surface is gated: a legacy client must
+        // get a typed rejection, not a silently dropped knob
+        for payload in [
+            r#"{"op":"generate","prompt":"x","stream":true}"#,
+            r#"{"op":"generate","prompt":"x","stream":true,"preview_every":5}"#,
+            r#"{"op":"generate","prompt":"x","strength":0.5}"#,
+            r#"{"op":"generate","prompt":"x","init_latent":[0.0]}"#,
+            r#"{"op":"generate","prompt":"x","variations":4}"#,
+        ] {
+            let err = parse(payload).unwrap_err();
+            assert!(err.to_string().contains("protocol v2"), "{payload}: {err}");
+        }
+        // and via the frame parser, an absent "v" means v1
+        assert!(frame(r#"{"op":"generate","prompt":"x","stream":true}"#).is_err());
+        assert!(frame(r#"{"v":2,"op":"generate","prompt":"x","stream":true}"#).is_ok());
+    }
+
+    #[test]
+    fn v2_streaming_fields_parse() {
+        let sr = parse2(
+            r#"{"v":2,"op":"generate","prompt":"x","stream":true,"preview_every":5}"#,
+        )
+        .unwrap();
+        assert!(sr.stream);
+        assert_eq!(sr.preview_every, 5);
+        assert_eq!(sr.variations, 1);
+        // defaults: not streamed
+        let sr = parse2(r#"{"v":2,"op":"generate","prompt":"x"}"#).unwrap();
+        assert!(!sr.stream);
+        assert_eq!(sr.preview_every, 0);
+        // orphan knob: preview cadence without the stream switch
+        let err =
+            parse2(r#"{"v":2,"op":"generate","prompt":"x","preview_every":5}"#).unwrap_err();
+        assert!(err.to_string().contains("stream"), "{err}");
+        assert!(parse2(r#"{"v":2,"op":"generate","prompt":"x","stream":7}"#).is_err());
+        assert!(parse2(
+            r#"{"v":2,"op":"generate","prompt":"x","stream":true,"preview_every":-1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn v2_img2img_fields_parse() {
+        // strength alone: synthetic seed-derived init latent
+        let sr = parse2(r#"{"v":2,"op":"generate","prompt":"x","strength":0.4}"#).unwrap();
+        let init = sr.request.init.as_ref().unwrap();
+        assert_eq!(init.strength, 0.4);
+        assert!(init.latent.is_none());
+        assert_eq!(sr.request.executed_steps(), 20); // 50 * 0.4
+        // explicit init latent rides along
+        let sr = parse2(
+            r#"{"v":2,"op":"generate","prompt":"x","strength":0.5,"init_latent":[0.5,-0.5]}"#,
+        )
+        .unwrap();
+        let lat = sr.request.init.as_ref().unwrap().latent.as_ref().unwrap();
+        assert_eq!(lat.as_slice(), &[0.5, -0.5]);
+        // orphan: a latent without a strength is meaningless
+        let err = parse2(r#"{"v":2,"op":"generate","prompt":"x","init_latent":[0.0]}"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("strength"), "{err}");
+        // engine validation still runs: strength outside (0, 1] rejected
+        assert!(parse2(r#"{"v":2,"op":"generate","prompt":"x","strength":0.0}"#).is_err());
+        assert!(parse2(r#"{"v":2,"op":"generate","prompt":"x","strength":1.5}"#).is_err());
+        assert!(parse2(
+            r#"{"v":2,"op":"generate","prompt":"x","strength":0.5,"init_latent":"big"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn v2_variations_parse() {
+        let sr = parse2(r#"{"v":2,"op":"generate","prompt":"x","variations":4}"#).unwrap();
+        assert_eq!(sr.variations, 4);
+        assert!(parse2(r#"{"v":2,"op":"generate","prompt":"x","variations":0}"#).is_err());
+        assert!(parse2(r#"{"v":2,"op":"generate","prompt":"x","variations":-2}"#).is_err());
+        assert!(parse2(r#"{"v":2,"op":"generate","prompt":"x","variations":"n"}"#).is_err());
+    }
+
+    #[test]
+    fn frame_parser_sniffs_versions() {
+        let f = frame(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(f.version, 1);
+        assert!(matches!(f.op, ServerOp::Ping));
+        let f = frame(r#"{"v":2,"op":"stats","id":7}"#).unwrap();
+        assert_eq!(f.version, 2);
+        assert_eq!(f.id, Some(7));
+        assert!(matches!(f.op, ServerOp::Stats));
+        // explicit v1 is legal; unknown versions fail loudly
+        assert_eq!(frame(r#"{"v":1,"op":"ping"}"#).unwrap().version, 1);
+        assert!(frame(r#"{"v":3,"op":"ping"}"#).is_err());
+        assert!(frame(r#"{"v":"two","op":"ping"}"#).is_err());
+        // the trace op keeps its span-vs-correlation-id split
+        let f = frame(r#"{"v":2,"op":"trace","trace":9,"id":1}"#).unwrap();
+        assert!(matches!(f.op, ServerOp::Trace { trace: Some(9) }));
+        let f = frame(r#"{"op":"trace"}"#).unwrap();
+        assert!(matches!(f.op, ServerOp::Trace { trace: None }));
+        // op errors match the legacy dispatch messages
+        assert!(frame(r#"{"op":"warp"}"#).unwrap_err().to_string().contains("unknown op"));
+        assert!(frame(r#"{"x":1}"#).unwrap_err().to_string().contains("missing op"));
+    }
+
+    #[test]
+    fn cancel_is_v2_only() {
+        let f = frame(r#"{"v":2,"op":"cancel","target":12,"id":3}"#).unwrap();
+        assert!(matches!(f.op, ServerOp::Cancel { target: 12 }));
+        let err = frame(r#"{"op":"cancel","target":12}"#).unwrap_err();
+        assert!(err.to_string().contains("protocol v2"), "{err}");
+        assert!(frame(r#"{"v":2,"op":"cancel"}"#)
+            .unwrap_err()
+            .to_string()
+            .contains("missing target"));
+    }
+
+    #[test]
+    fn event_frames_wrap_the_v1_encoders() {
+        let sr = parse2(r#"{"v":2,"op":"generate","prompt":"x","stream":true}"#).unwrap();
+        let out = GenerationOutput {
+            latent: vec![0.0],
+            image: None,
+            wall_ms: 5.0,
+            breakdown: StepBreakdown::default(),
+            unet_evals: 4,
+            steps: 2,
+            strategy: GuidanceStrategy::CondOnly,
+            plan_summary: "2D".into(),
+        };
+        // done == render_output + the envelope tag, nothing else: a v2
+        // client stripping {v, event} sees the exact v1 payload bytes
+        let done = event_done(Some(3), &sr, &out);
+        assert_eq!(done.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(done.get("v").unwrap().as_i64(), Some(2));
+        let mut stripped = done.clone();
+        if let Value::Obj(m) = &mut stripped {
+            m.remove("v");
+            m.remove("event");
+        }
+        assert_eq!(stripped.to_string(), render_output(Some(3), &sr, &out).to_string());
+        // error == render_failure + tag, keeping the structured shape
+        let e = Error::Cancelled("cancelled by client".into());
+        let ev = event_error(Some(3), &e);
+        assert_eq!(ev.get("event").unwrap().as_str(), Some("error"));
+        assert_eq!(ev.get("code").unwrap().as_i64(), Some(499));
+        // progress / queued shapes
+        let p = event_progress(Some(1), 5, 50);
+        assert_eq!(p.get("event").unwrap().as_str(), Some("progress"));
+        assert_eq!(p.get("step").unwrap().as_i64(), Some(5));
+        assert_eq!(p.get("steps").unwrap().as_i64(), Some(50));
+        let q = event_queued(None);
+        assert_eq!(q.get("event").unwrap().as_str(), Some("queued"));
+        assert!(q.get("id").is_none());
     }
 
     #[test]

@@ -316,6 +316,7 @@ pub struct CoordSink {
     rejected: Counter,
     retired: Counter,
     expired: Counter,
+    cancelled: Counter,
     cache_hits: Counter,
     dedup_joins: Counter,
     queue_depth: Gauge,
@@ -335,6 +336,11 @@ impl CoordSink {
             rejected: r.counter("sg_coord_rejected_total", "Requests rejected at admission", &l),
             retired: r.counter("sg_coord_retired_total", "Requests completed", &l),
             expired: r.counter("sg_coord_expired_total", "Requests expired past deadline", &l),
+            cancelled: r.counter(
+                "sg_coord_cancelled_total",
+                "Requests cancelled mid-flight by the client",
+                &l,
+            ),
             cache_hits: r.counter(
                 "sg_cache_hits_total",
                 "Requests served bit-exactly from the request cache",
@@ -494,6 +500,19 @@ impl CoordSink {
         shed.inc();
         if self.owns_terminal {
             self.t.event(trace, TraceEvent::Shed { reason: reason.to_string() });
+        }
+    }
+
+    /// Client-initiated mid-flight cancel: counted on every sink, but —
+    /// like the other terminals — the span-closing `cancelled` event
+    /// belongs to the terminal owner only.
+    pub fn on_cancelled(&self, trace: Option<TraceId>) {
+        if !self.enabled {
+            return;
+        }
+        self.cancelled.inc();
+        if self.owns_terminal {
+            self.t.event(trace, TraceEvent::Cancelled);
         }
     }
 }
@@ -717,6 +736,18 @@ impl ClusterMetrics {
             self.t.event(trace, TraceEvent::Shed { reason: reason.to_string() });
         }
     }
+
+    /// Relay-owned terminal for a client-cancelled request.
+    pub fn on_cancelled(&self, trace: Option<TraceId>) {
+        if !self.enabled {
+            return;
+        }
+        self.t
+            .registry()
+            .counter("sg_cluster_cancelled_total", "Requests cancelled mid-flight", &[])
+            .inc();
+        self.t.event(trace, TraceEvent::Cancelled);
+    }
 }
 
 #[cfg(test)]
@@ -782,6 +813,7 @@ mod tests {
         sink.on_retired(trace, "4D", 1.0);
         sink.on_expired(trace);
         sink.on_shed(trace, "drain");
+        sink.on_cancelled(trace);
         sink.on_rejected(trace, 503, "draining");
         let span = t.traces().span(trace.unwrap()).unwrap();
         assert_eq!(span.terminal_events(), 0, "replica sinks must not close spans");

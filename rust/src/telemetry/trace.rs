@@ -6,8 +6,8 @@
 //! ring buffer (oldest evicted first) and are queryable over the wire
 //! (`{"op":"trace","trace":N}`) or exportable as JSONL.
 //!
-//! Terminal events — `rejected`, `retired`, `shed`, `expired` — close a
-//! span. The conservation invariant (enforced by
+//! Terminal events — `rejected`, `retired`, `shed`, `expired`,
+//! `cancelled` — close a span. The conservation invariant (enforced by
 //! `tests/trace_conservation.rs`): every *admitted* span ends in exactly
 //! one terminal event, including requeued failover legs.
 
@@ -54,6 +54,9 @@ pub enum TraceEvent {
     Shed { reason: String },
     /// Deadline exceeded (terminal).
     Expired,
+    /// Client-initiated mid-flight cancel (terminal) — the sample was
+    /// aborted without `finish()` and its slots returned to headroom.
+    Cancelled,
 }
 
 impl TraceEvent {
@@ -72,6 +75,7 @@ impl TraceEvent {
             TraceEvent::Retired => "retired",
             TraceEvent::Shed { .. } => "shed",
             TraceEvent::Expired => "expired",
+            TraceEvent::Cancelled => "cancelled",
         }
     }
 
@@ -83,6 +87,7 @@ impl TraceEvent {
                 | TraceEvent::Retired
                 | TraceEvent::Shed { .. }
                 | TraceEvent::Expired
+                | TraceEvent::Cancelled
         )
     }
 
@@ -104,7 +109,10 @@ impl TraceEvent {
                 v.with("from", *from as i64).with("to", *to as i64)
             }
             TraceEvent::CacheHit | TraceEvent::DedupJoin => v,
-            TraceEvent::Retired | TraceEvent::Shed { .. } | TraceEvent::Expired => {
+            TraceEvent::Retired
+            | TraceEvent::Shed { .. }
+            | TraceEvent::Expired
+            | TraceEvent::Cancelled => {
                 if let TraceEvent::Shed { reason } = self {
                     v.with("reason", reason.as_str())
                 } else {
@@ -307,6 +315,8 @@ mod tests {
     fn terminal_classification() {
         assert!(TraceEvent::Retired.is_terminal());
         assert!(TraceEvent::Expired.is_terminal());
+        assert!(TraceEvent::Cancelled.is_terminal());
+        assert_eq!(TraceEvent::Cancelled.name(), "cancelled");
         assert!(TraceEvent::Shed { reason: "x".into() }.is_terminal());
         assert!(TraceEvent::Rejected { code: 429, reason: "q".into() }.is_terminal());
         assert!(!TraceEvent::Admitted { class: "interactive" }.is_terminal());

@@ -186,6 +186,17 @@ pub struct WorkloadSpec {
     /// — the workload the amortization tiers are measured on). `None`
     /// keeps the classic round-robin corpus walk.
     pub zipf: Option<ZipfPrompts>,
+    /// img2img traffic: when set, every request carries a synthetic
+    /// init latent at this strength, truncating the denoising loop to
+    /// `round(steps * strength)` executed iterations (DESIGN.md §14).
+    /// `(0, 1]`; `None` keeps pure text2img.
+    pub strength: Option<f64>,
+    /// Variation fan-out: each trace arrival expands into this many
+    /// requests differing only by seed and sharing ONE compiled
+    /// guidance plan ([`GenerationRequest::variations`]). The trace
+    /// grows to `num_requests * variations` entries, all variations of
+    /// an arrival landing at the same offset. 1 = no fan-out.
+    pub variations: usize,
 }
 
 impl Default for WorkloadSpec {
@@ -205,6 +216,8 @@ impl Default for WorkloadSpec {
             priority: Priority::Standard,
             kills: Vec::new(),
             zipf: None,
+            strength: None,
+            variations: 1,
         }
     }
 }
@@ -237,7 +250,7 @@ impl WorkloadSpec {
         arrivals
             .into_iter()
             .enumerate()
-            .map(|(i, at_ms)| {
+            .flat_map(|(i, at_ms)| {
                 let rank = ranks.as_ref().map_or(i, |r| r[i]);
                 let prompt = prompts::TABLE2[rank % prompts::TABLE2.len()];
                 let steps = if self.steps_choices.is_empty() {
@@ -245,17 +258,182 @@ impl WorkloadSpec {
                 } else {
                     self.steps_choices[rank % self.steps_choices.len()]
                 };
-                let request = GenerationRequest::new(prompt)
+                // variations fan out the *rank-spaced* base seed so two
+                // arrivals' variation sets never interleave collisions
+                let base_seed = self.seed.wrapping_add((rank as u64) * self.variations.max(1) as u64);
+                let mut request = GenerationRequest::new(prompt)
                     .steps(steps)
                     .scheduler(self.scheduler)
                     .guidance_scale(self.guidance_scale)
                     .with_schedule(self.schedule.clone())
                     .strategy(self.strategy)
-                    .seed(self.seed.wrapping_add(rank as u64))
+                    .seed(base_seed)
                     .decode(self.decode);
-                TraceEntry { at_ms, request, meta }
+                if let Some(strength) = self.strength {
+                    request = request.img2img(strength);
+                }
+                let group = if self.variations > 1 {
+                    // errors only on n == 0 or an invalid request; an
+                    // unplannable spec degrades to the unshared clone
+                    // path and fails at submit with the real error
+                    request
+                        .variations(self.variations)
+                        .unwrap_or_else(|_| vec![request; self.variations])
+                } else {
+                    vec![request]
+                };
+                group
+                    .into_iter()
+                    .map(move |request| TraceEntry { at_ms, request, meta })
             })
             .collect()
+    }
+
+    /// Build from the `[workload]` TOML section. Returns `Ok(None)` when
+    /// the section is absent. Guidance policy (schedule / strategy /
+    /// scheduler / steps / scale / seed) seeds from the resolved
+    /// `[engine]`+`[guidance]` config so a deployment file describes it
+    /// once; `[workload]` keys override the traffic shape on top.
+    pub fn from_toml(
+        doc: &crate::config::TomlDoc,
+        engine: &crate::config::EngineConfig,
+    ) -> Result<Option<WorkloadSpec>> {
+        const S: &str = "workload";
+        if doc.section(S).is_none() {
+            return Ok(None);
+        }
+        let mut spec = WorkloadSpec {
+            steps: engine.steps,
+            scheduler: engine.scheduler,
+            schedule: engine.schedule.clone(),
+            strategy: engine.guidance_strategy,
+            guidance_scale: engine.guidance_scale,
+            seed: engine.seed,
+            ..WorkloadSpec::default()
+        };
+        let bad = |m: &str| Error::Config(format!("workload {m}"));
+        // ---- arrival process: kind + rate, burst knobs gated on kind
+        let rate = match doc.get(S, "rate_per_s") {
+            Some(v) => {
+                let r = v.as_f64().ok_or_else(|| bad("rate_per_s must be number"))?;
+                if !(r.is_finite() && r > 0.0) {
+                    return Err(bad("rate_per_s must be > 0"));
+                }
+                Some(r)
+            }
+            None => None,
+        };
+        let on_ms = match doc.get(S, "on_ms") {
+            Some(v) => Some(v.as_usize().ok_or_else(|| bad("on_ms must be int >= 0"))? as u64),
+            None => None,
+        };
+        let off_ms = match doc.get(S, "off_ms") {
+            Some(v) => Some(v.as_usize().ok_or_else(|| bad("off_ms must be int >= 0"))? as u64),
+            None => None,
+        };
+        let kind = match doc.get(S, "arrival") {
+            Some(v) => v.as_str().ok_or_else(|| bad("arrival must be string"))?,
+            None => "poisson",
+        };
+        spec.arrivals = match kind.to_ascii_lowercase().as_str() {
+            "poisson" | "uniform" => {
+                // burst knobs without the bursty process are an operator
+                // error, not a silent no-op (the orphan-knob rule)
+                if on_ms.is_some() || off_ms.is_some() {
+                    return Err(bad("on_ms/off_ms require arrival = \"bursty\""));
+                }
+                let rate_per_s = rate.unwrap_or(4.0);
+                if kind.eq_ignore_ascii_case("poisson") {
+                    ArrivalProcess::Poisson { rate_per_s }
+                } else {
+                    ArrivalProcess::Uniform { rate_per_s }
+                }
+            }
+            "bursty" => {
+                let on = on_ms.unwrap_or(100);
+                if on == 0 {
+                    return Err(bad("on_ms must be >= 1"));
+                }
+                ArrivalProcess::Bursty {
+                    burst_rate_per_s: rate.unwrap_or(4.0),
+                    on_ms: on,
+                    off_ms: off_ms.unwrap_or(400),
+                }
+            }
+            other => return Err(bad(&format!("unknown arrival process {other:?}"))),
+        };
+        // ---- trace shape
+        if let Some(v) = doc.get(S, "requests") {
+            spec.num_requests = v.as_usize().ok_or_else(|| bad("requests must be int"))?;
+            if spec.num_requests == 0 {
+                return Err(bad("requests must be >= 1"));
+            }
+        }
+        if let Some(v) = doc.get(S, "steps") {
+            spec.steps = v.as_usize().ok_or_else(|| bad("steps must be int"))?;
+        }
+        if let Some(v) = doc.get(S, "scheduler") {
+            spec.scheduler = SchedulerKind::parse(
+                v.as_str().ok_or_else(|| bad("scheduler must be string"))?,
+            )?;
+        }
+        if let Some(v) = doc.get(S, "guidance_scale") {
+            spec.guidance_scale =
+                v.as_f64().ok_or_else(|| bad("guidance_scale must be number"))? as f32;
+        }
+        if let Some(v) = doc.get(S, "decode") {
+            spec.decode = v.as_bool().ok_or_else(|| bad("decode must be bool"))?;
+        }
+        if let Some(v) = doc.get(S, "seed") {
+            let raw = v.as_i64().ok_or_else(|| bad("seed must be int"))?;
+            spec.seed = crate::config::seed_from_i64(raw).map_err(Error::Config)?;
+        }
+        // ---- QoS metadata
+        if let Some(v) = doc.get(S, "deadline_ms") {
+            let d = v.as_f64().ok_or_else(|| bad("deadline_ms must be number"))?;
+            if !(d.is_finite() && d > 0.0) {
+                return Err(bad("deadline_ms must be > 0"));
+            }
+            spec.deadline_ms = Some(d);
+        }
+        if let Some(v) = doc.get(S, "priority") {
+            spec.priority =
+                Priority::parse(v.as_str().ok_or_else(|| bad("priority must be string"))?)?;
+        }
+        // ---- the streaming-plane workloads: img2img + variations
+        if let Some(v) = doc.get(S, "strength") {
+            let s = v.as_f64().ok_or_else(|| bad("strength must be number"))?;
+            if !(s.is_finite() && s > 0.0 && s <= 1.0) {
+                return Err(bad(&format!("strength {s} outside (0, 1]")));
+            }
+            spec.strength = Some(s);
+        }
+        if let Some(v) = doc.get(S, "variations") {
+            spec.variations =
+                v.as_usize().ok_or_else(|| bad("variations must be a positive integer"))?;
+            if spec.variations == 0 {
+                return Err(bad("variations must be >= 1"));
+            }
+        }
+        // ---- popularity skew (both-or-neither, like window knobs)
+        let zipf_skew = match doc.get(S, "zipf_skew") {
+            Some(v) => Some(v.as_f64().ok_or_else(|| bad("zipf_skew must be number"))?),
+            None => None,
+        };
+        let zipf_catalog = match doc.get(S, "zipf_catalog") {
+            Some(v) => Some(v.as_usize().ok_or_else(|| bad("zipf_catalog must be int"))?),
+            None => None,
+        };
+        spec.zipf = match (zipf_skew, zipf_catalog) {
+            (Some(skew), Some(catalog)) => {
+                let z = ZipfPrompts { skew, catalog };
+                z.validate()?;
+                Some(z)
+            }
+            (None, None) => None,
+            _ => return Err(bad("zipf_skew and zipf_catalog must be set together")),
+        };
+        Ok(Some(spec))
     }
 }
 
@@ -722,6 +900,133 @@ mod tests {
         let mut seeds: Vec<u64> = plain.iter().map(|t| t.request.seed).collect();
         seeds.dedup();
         assert_eq!(seeds.len(), 5);
+    }
+
+    #[test]
+    fn strength_makes_every_entry_img2img() {
+        let spec = WorkloadSpec {
+            num_requests: 6,
+            steps: 40,
+            strength: Some(0.3),
+            ..WorkloadSpec::default()
+        };
+        let trace = spec.synthesize();
+        assert_eq!(trace.len(), 6);
+        for e in &trace {
+            let init = e.request.init.as_ref().expect("img2img init");
+            assert!((init.strength - 0.3).abs() < 1e-12);
+            assert!(init.latent.is_none(), "workload img2img is synthetic");
+            // the truncation the plan is priced over: round(40 * 0.3)
+            assert_eq!(e.request.executed_steps(), 12);
+        }
+        // default stays pure text2img
+        let plain = WorkloadSpec { num_requests: 2, ..WorkloadSpec::default() }.synthesize();
+        assert!(plain.iter().all(|t| t.request.init.is_none()));
+    }
+
+    #[test]
+    fn variations_fan_out_shares_one_plan() {
+        let spec = WorkloadSpec {
+            num_requests: 3,
+            variations: 4,
+            ..WorkloadSpec::default()
+        };
+        let trace = spec.synthesize();
+        assert_eq!(trace.len(), 12);
+        for group in trace.chunks(4) {
+            // one arrival: same offset, same prompt, one shared plan
+            assert!(group.iter().all(|e| e.at_ms == group[0].at_ms));
+            assert!(group.iter().all(|e| e.request.prompt == group[0].request.prompt));
+            let plan = group[0].request.shared_plan.as_ref().expect("shared plan");
+            for e in &group[1..] {
+                assert!(Arc::ptr_eq(plan, e.request.shared_plan.as_ref().unwrap()));
+            }
+            // seeds walk base..base+4 within the group
+            let seeds: Vec<u64> = group.iter().map(|e| e.request.seed).collect();
+            assert_eq!(seeds, (seeds[0]..seeds[0] + 4).collect::<Vec<_>>());
+        }
+        // rank spacing keeps seeds globally distinct across arrivals
+        let mut all: Vec<u64> = trace.iter().map(|e| e.request.seed).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 12);
+        // plans are NOT shared across arrivals (each group compiles once)
+        assert!(!Arc::ptr_eq(
+            trace[0].request.shared_plan.as_ref().unwrap(),
+            trace[4].request.shared_plan.as_ref().unwrap()
+        ));
+    }
+
+    #[test]
+    fn workload_toml_section() {
+        use crate::config::{EngineConfig, TomlDoc};
+        let engine = EngineConfig { steps: 30, ..EngineConfig::default() };
+        // absent section -> no spec
+        let doc = TomlDoc::parse("[server]\nmax_batch = 2\n").unwrap();
+        assert!(WorkloadSpec::from_toml(&doc, &engine).unwrap().is_none());
+        // present section inherits the engine policy, overrides traffic
+        let doc = TomlDoc::parse(
+            "[workload]\narrival = \"uniform\"\nrate_per_s = 20.0\nrequests = 12\n\
+             strength = 0.4\nvariations = 3\ndeadline_ms = 800.0\npriority = \"interactive\"\n",
+        )
+        .unwrap();
+        let spec = WorkloadSpec::from_toml(&doc, &engine).unwrap().unwrap();
+        assert_eq!(spec.arrivals, ArrivalProcess::Uniform { rate_per_s: 20.0 });
+        assert_eq!(spec.num_requests, 12);
+        assert_eq!(spec.steps, 30, "inherits [engine] steps");
+        assert_eq!(spec.strength, Some(0.4));
+        assert_eq!(spec.variations, 3);
+        assert_eq!(spec.deadline_ms, Some(800.0));
+        assert_eq!(spec.priority, Priority::Interactive);
+        // bursty + zipf forms
+        let doc = TomlDoc::parse(
+            "[workload]\narrival = \"bursty\"\nrate_per_s = 50.0\non_ms = 80\noff_ms = 320\n\
+             zipf_skew = 1.1\nzipf_catalog = 16\n",
+        )
+        .unwrap();
+        let spec = WorkloadSpec::from_toml(&doc, &engine).unwrap().unwrap();
+        assert_eq!(
+            spec.arrivals,
+            ArrivalProcess::Bursty { burst_rate_per_s: 50.0, on_ms: 80, off_ms: 320 }
+        );
+        assert_eq!(spec.zipf, Some(ZipfPrompts { skew: 1.1, catalog: 16 }));
+        // empty section = all defaults, engine-seeded
+        let doc = TomlDoc::parse("[workload]\n").unwrap();
+        let spec = WorkloadSpec::from_toml(&doc, &engine).unwrap().unwrap();
+        assert_eq!(spec.steps, 30);
+        assert_eq!(spec.variations, 1);
+        assert_eq!(spec.strength, None);
+    }
+
+    #[test]
+    fn workload_toml_rejects_bad_shapes() {
+        use crate::config::{EngineConfig, TomlDoc};
+        let engine = EngineConfig::default();
+        let parse = |s: &str| {
+            WorkloadSpec::from_toml(&TomlDoc::parse(s).unwrap(), &engine).map(|_| ())
+        };
+        assert!(parse("[workload]\narrival = \"bogus\"\n").is_err());
+        assert!(parse("[workload]\nrate_per_s = 0.0\n").is_err());
+        assert!(parse("[workload]\nrate_per_s = -2.0\n").is_err());
+        assert!(parse("[workload]\nrequests = 0\n").is_err());
+        // burst knobs require the bursty process (orphan-knob rule)
+        assert!(parse("[workload]\non_ms = 50\n").is_err());
+        assert!(parse("[workload]\narrival = \"uniform\"\noff_ms = 50\n").is_err());
+        assert!(parse("[workload]\narrival = \"bursty\"\non_ms = 0\n").is_err());
+        // streaming-plane knobs validate at parse, not at submit
+        assert!(parse("[workload]\nstrength = 0.0\n").is_err());
+        assert!(parse("[workload]\nstrength = 1.5\n").is_err());
+        assert!(parse("[workload]\nvariations = 0\n").is_err());
+        assert!(parse("[workload]\nvariations = \"many\"\n").is_err());
+        // zipf knobs come as a pair
+        assert!(parse("[workload]\nzipf_skew = 1.0\n").is_err());
+        assert!(parse("[workload]\nzipf_catalog = 8\n").is_err());
+        assert!(parse("[workload]\nzipf_skew = -1.0\nzipf_catalog = 8\n").is_err());
+        // shared validations
+        assert!(parse("[workload]\nseed = -4\n").is_err());
+        assert!(parse("[workload]\npriority = \"vip\"\n").is_err());
+        assert!(parse("[workload]\ndeadline_ms = -5.0\n").is_err());
+        assert!(parse("[workload]\nscheduler = \"bogus\"\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Streaming-plane equivalence properties on the deterministic
+//! synthetic backend (no PJRT artifacts needed — this suite always
+//! runs, and the whole-suite `PROP_MASTER_SEED` CI matrix re-runs it in
+//! other randomness universes).
+//!
+//! The invariants under test are DESIGN.md §14's contract:
+//!
+//! * watching is observation-only — a streamed sample's final output is
+//!   **bit-exact** with its solo [`Engine::generate`] run, whatever the
+//!   preview cadence, cohort mix or workload kind (text2img, img2img,
+//!   variations);
+//! * progress events are strictly monotone in step index and previews
+//!   land exactly on the requested cadence;
+//! * a mid-flight cancel frees the sample's continuous-batch slots as
+//!   admission headroom, resolves the ticket with [`Error::Cancelled`],
+//!   and closes the telemetry span with exactly one `cancelled`
+//!   terminal;
+//! * the v1 and v2 wire surfaces answer a non-streamed `generate` with
+//!   the same payload, and one multiplexer thread serves hundreds of
+//!   concurrent streaming connections (frames split at arbitrary byte
+//!   boundaries included).
+
+use std::io::{BufRead, BufReader, Write as IoWrite};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::{
+    BatchMode, Coordinator, CoordinatorConfig, ProgressEvent, WatchOptions, Watched,
+};
+use selective_guidance::engine::{Engine, GenerationOutput, GenerationRequest};
+use selective_guidance::error::{Error, Result};
+use selective_guidance::guidance::{GuidanceStrategy, ReuseKind, WindowSpec};
+use selective_guidance::json::{self, Value};
+use selective_guidance::qos::QosMeta;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::server::{Client, Server};
+use selective_guidance::telemetry::{Clock, CoordSink, Telemetry};
+use selective_guidance::testutil::prop::{forall, Gen};
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::new(Arc::new(ModelStack::synthetic()), EngineConfig::default()))
+}
+
+fn continuous(e: &Arc<Engine>, slot_budget: usize) -> Arc<Coordinator> {
+    Coordinator::start(
+        Arc::clone(e),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+fn random_request(g: &mut Gen) -> GenerationRequest {
+    let kinds = [
+        SchedulerKind::Ddim,
+        SchedulerKind::Ddpm,
+        SchedulerKind::Pndm,
+        SchedulerKind::Euler,
+        SchedulerKind::Heun,
+    ];
+    let strategy = match g.usize_in(0, 2) {
+        0 => GuidanceStrategy::CondOnly,
+        1 => GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: g.usize_in(0, 4) },
+        _ => GuidanceStrategy::Reuse {
+            kind: ReuseKind::Extrapolate,
+            refresh_every: g.usize_in(0, 4),
+        },
+    };
+    let mut req = GenerationRequest::new(format!("{} {}", g.word(8), g.word(8)))
+        .steps(g.usize_in(3, 10))
+        .scheduler(*g.choose(&kinds))
+        .seed(g.u64())
+        .guidance_scale(if g.bool() { g.f32_in(1.5, 12.0) } else { 1.0 })
+        .selective(if g.bool() { WindowSpec::last(g.f64_in(0.0, 1.0)) } else { WindowSpec::none() })
+        .strategy(strategy)
+        .decode(false);
+    if g.bool() {
+        // img2img: the streamed trajectory is the strength-truncated
+        // suffix; equivalence must hold over it too
+        req = req.img2img(g.f64_in(0.15, 1.0));
+    }
+    req
+}
+
+/// Drain a watched submission: final result plus every buffered
+/// progress event (the channel is unbounded, so nothing is lost).
+fn drain(w: Watched) -> (Vec<ProgressEvent>, Result<GenerationOutput>) {
+    let out = w.ticket.wait();
+    let mut events = Vec::new();
+    while let Ok(ev) = w.progress.try_recv() {
+        events.push(ev);
+    }
+    (events, out)
+}
+
+#[test]
+fn streamed_output_matches_solo_matrix() {
+    let e = engine();
+    forall("streamed == solo", 25, |g| {
+        let coordinator = continuous(&e, g.usize_in(2, 8));
+        let k = g.usize_in(1, 4);
+        let reqs: Vec<GenerationRequest> = (0..k).map(|_| random_request(g)).collect();
+        let cadences: Vec<usize> = (0..k).map(|_| g.usize_in(0, 4)).collect();
+        let watched: Vec<Watched> = reqs
+            .iter()
+            .zip(&cadences)
+            .map(|(r, &every)| {
+                coordinator
+                    .submit_watched(
+                        r.clone(),
+                        QosMeta::default(),
+                        WatchOptions { preview_every: every },
+                    )
+                    .expect("submit_watched")
+            })
+            .collect();
+        for (r, w) in reqs.iter().zip(watched) {
+            let (events, out) = drain(w);
+            let out = out.expect("streamed run");
+            let solo = e.generate(r).expect("solo run");
+            assert_eq!(solo.latent, out.latent, "watching leaked into the output");
+            assert_eq!(solo.unet_evals, out.unet_evals, "eval count");
+            // strictly monotone step stream, bounded by the executed
+            // trajectory (img2img truncates it)
+            let steps = r.executed_steps();
+            for pair in events.windows(2) {
+                assert!(pair[1].step > pair[0].step, "progress went backwards");
+            }
+            assert!(events.iter().all(|ev| ev.step <= steps && ev.steps == steps));
+        }
+        coordinator.shutdown();
+    });
+}
+
+#[test]
+fn variations_stream_bit_exact_with_shared_plan() {
+    let e = engine();
+    let coordinator = continuous(&e, 6);
+    let base = GenerationRequest::new("a shared plan")
+        .steps(7)
+        .scheduler(SchedulerKind::Ddim)
+        .selective(WindowSpec::last(0.5))
+        .seed(40)
+        .decode(false);
+    let vars = base.variations(3).expect("fan-out");
+    for (i, vr) in vars.iter().enumerate() {
+        assert!(vr.shared_plan.is_some(), "variation {i} lost the shared plan");
+        let w = coordinator
+            .submit_watched(vr.clone(), QosMeta::default(), WatchOptions::off())
+            .expect("submit");
+        let (_, out) = drain(w);
+        let out = out.expect("variation run");
+        // the shared plan must not change the sample: rebuild the same
+        // request without it and compare bit-for-bit
+        let unshared = base.clone().seed(40 + i as u64);
+        let solo = e.generate(&unshared).expect("solo");
+        assert_eq!(solo.latent, out.latent, "variation {i}");
+        assert_eq!(solo.unet_evals, out.unet_evals, "variation {i}");
+    }
+    coordinator.shutdown();
+}
+
+#[test]
+fn preview_cadence_exact() {
+    let e = engine();
+    let coordinator = continuous(&e, 4);
+    let req = GenerationRequest::new("previews")
+        .steps(12)
+        .scheduler(SchedulerKind::Ddim)
+        .seed(9)
+        .decode(false);
+    let w = coordinator
+        .submit_watched(req, QosMeta::default(), WatchOptions { preview_every: 3 })
+        .expect("submit");
+    let (events, out) = drain(w);
+    out.expect("run");
+    assert!(!events.is_empty(), "no progress events for a 12-step sample");
+    for ev in &events {
+        if ev.step % 3 == 0 {
+            let img = ev.preview.as_ref().expect("preview on cadence step");
+            assert!(img.width > 0 && img.height > 0);
+        } else {
+            assert!(ev.preview.is_none(), "preview off cadence at step {}", ev.step);
+        }
+    }
+    assert!(events.iter().any(|ev| ev.preview.is_some()), "cadence 3 of 12 steps: previews due");
+    coordinator.shutdown();
+}
+
+/// A request slow enough that a cancel issued after its first progress
+/// event always lands while it is still mid-flight: Heun (2 evals per
+/// iteration) × dual guidance (2 passes) at the step ceiling, with a
+/// preview decode every iteration.
+fn hog() -> GenerationRequest {
+    GenerationRequest::new("hog")
+        .steps(1000)
+        .scheduler(SchedulerKind::Heun)
+        .seed(1)
+        .decode(false)
+}
+
+#[test]
+fn cancel_mid_flight_frees_slots_and_closes_span_once() {
+    let e = engine();
+    let telemetry = Telemetry::with_clock(64, Clock::wall());
+    let coordinator = Coordinator::start_full(
+        Arc::clone(&e),
+        CoordinatorConfig {
+            mode: BatchMode::Continuous,
+            slot_budget: 2,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        },
+        None,
+        Some(CoordSink::new(&telemetry, "single", true)),
+    );
+    // the dual hog costs 2 slots, saturating the budget: nothing else
+    // can even join the cohort until it leaves
+    let w = coordinator
+        .submit_watched(hog(), QosMeta::default(), WatchOptions { preview_every: 1 })
+        .expect("submit");
+    let tid = w.ticket.trace().expect("traced submission");
+    // wait until it is genuinely mid-flight (first iteration done)
+    let first = w.progress.recv_timeout(Duration::from_secs(30)).expect("first progress event");
+    assert!(first.step >= 1);
+    w.cancel.cancel();
+    assert!(w.cancel.is_cancelled());
+    match w.ticket.wait() {
+        Err(Error::Cancelled(_)) => {}
+        Ok(_) => panic!("hog completed before the cancel landed"),
+        Err(other) => panic!("expected Cancelled, got {other}"),
+    }
+    // the freed slots are real headroom: a follow-up dual sample (also
+    // 2 slots) completes — it could never have joined alongside the hog
+    let after = GenerationRequest::new("after")
+        .steps(3)
+        .scheduler(SchedulerKind::Ddim)
+        .seed(2)
+        .decode(false);
+    let solo = e.generate(&after).expect("solo");
+    let w2 = coordinator
+        .submit_watched(after, QosMeta::default(), WatchOptions::off())
+        .expect("submit");
+    let out = w2.ticket.wait().expect("post-cancel sample");
+    assert_eq!(solo.latent, out.latent);
+    let stats = coordinator.stats();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.failed, 0, "a cancel is not a failure");
+    // the span closed exactly once, with the cancelled terminal
+    let span = telemetry.traces().span(tid).expect("span retained");
+    assert_eq!(span.terminal_events(), 1, "span must close exactly once");
+    assert!(span.has("cancelled"), "terminal must be `cancelled`");
+    assert!(!span.has("retired") && !span.has("shed"));
+    coordinator.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Wire-level properties (multiplexer + protocol v2)
+// ---------------------------------------------------------------------
+
+fn start_server(slot_budget: usize) -> (Server, String, Arc<Coordinator>) {
+    let coordinator = continuous(&engine(), slot_budget);
+    let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0").expect("bind");
+    let addr = server.addr().to_string();
+    (server, addr, coordinator)
+}
+
+/// Zero the measured wall-clock fields: everything else in a generate
+/// response is deterministic on the synthetic backend.
+fn zero_timings(v: &Value) -> Value {
+    v.clone()
+        .with("wall_ms", 0.0)
+        .with("unet_cond_ms", 0.0)
+        .with("unet_uncond_ms", 0.0)
+        .with("combine_ms", 0.0)
+        .with("scheduler_ms", 0.0)
+}
+
+#[test]
+fn v1_and_v2_generate_answers_are_payload_identical() {
+    let (_server, addr, _c) = start_server(4);
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let body = "\"op\":\"generate\",\"id\":7,\"prompt\":\"wire\",\"steps\":4,\
+                \"scheduler\":\"ddim\",\"seed\":3,\"window_fraction\":0.5";
+    let mut read_one = |line: String| -> Value {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        json::from_str(&resp).unwrap()
+    };
+    let v1 = read_one(format!("{{{body}}}\n"));
+    let v2 = read_one(format!("{{\"v\":2,{body}}}\n"));
+    assert_eq!(v1.get("ok").and_then(Value::as_bool), Some(true), "{v1}");
+    assert_eq!(v2.get("ok").and_then(Value::as_bool), Some(true), "{v2}");
+    // identical key sets and identical canonical serialization once the
+    // measured timings are zeroed — the v2 envelope adds nothing to a
+    // non-streamed generate response
+    let (Value::Obj(m1), Value::Obj(m2)) = (&v1, &v2) else { panic!("objects") };
+    let k1: Vec<&String> = m1.keys().collect();
+    let k2: Vec<&String> = m2.keys().collect();
+    assert_eq!(k1, k2, "v1/v2 response key sets diverged");
+    assert_eq!(zero_timings(&v1).to_string(), zero_timings(&v2).to_string());
+}
+
+#[test]
+fn byte_at_a_time_client_still_parses() {
+    // satellite regression: a frame trickling in one byte per write must
+    // buffer until its newline, not be parsed as broken fragments
+    let (_server, addr, _c) = start_server(4);
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let frame = b"{\"op\":\"ping\",\"id\":1}\n";
+    for &b in frame.iter() {
+        stream.write_all(&[b]).unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let v = json::from_str(&resp).unwrap();
+    assert_eq!(v.get("pong").and_then(Value::as_bool), Some(true), "{v}");
+    // and a second frame split mid-key across two writes
+    stream.write_all(b"{\"op\":\"st").unwrap();
+    stream.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    stream.write_all(b"ats\",\"id\":2}\n").unwrap();
+    stream.flush().unwrap();
+    resp.clear();
+    reader.read_line(&mut resp).unwrap();
+    let v = json::from_str(&resp).unwrap();
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v}");
+    assert_eq!(v.get("id").and_then(Value::as_i64), Some(2));
+}
+
+#[test]
+fn streamed_generate_over_wire_matches_solo() {
+    let (_server, addr, _c) = start_server(4);
+    let e = engine();
+    let mut client = Client::connect(&addr).unwrap();
+    let id = client
+        .send(
+            Value::obj()
+                .with("v", 2i64)
+                .with("op", "generate")
+                .with("prompt", "a person holding a cat")
+                .with("steps", 8i64)
+                .with("scheduler", "ddim")
+                .with("seed", 5i64)
+                .with("stream", true)
+                .with("preview_every", 4i64)
+                .with("return_latent", true),
+        )
+        .unwrap();
+    let mut steps_seen = Vec::new();
+    let mut previews = 0usize;
+    let done = loop {
+        let v = client.read_frame().unwrap();
+        assert_eq!(v.get("id").and_then(Value::as_i64), Some(id));
+        assert_eq!(v.get("v").and_then(Value::as_i64), Some(2));
+        match v.get("event").and_then(Value::as_str) {
+            Some("queued") => {}
+            Some("progress") => {
+                steps_seen.push(v.get("step").and_then(Value::as_i64).unwrap());
+            }
+            Some("preview") => {
+                previews += 1;
+                assert!(v.get("png_b64").and_then(Value::as_str).is_some());
+            }
+            Some("done") => break v,
+            other => panic!("unexpected event {other:?}: {v}"),
+        }
+    };
+    assert!(steps_seen.windows(2).all(|w| w[1] > w[0]), "monotone: {steps_seen:?}");
+    assert!(previews >= 1, "preview_every=4 over 8 steps: at least one preview");
+    // the streamed final latent is bit-exact with the solo run
+    let solo = e
+        .generate(
+            &GenerationRequest::new("a person holding a cat")
+                .steps(8)
+                .scheduler(SchedulerKind::Ddim)
+                .seed(5)
+                .decode(false),
+        )
+        .unwrap();
+    let wire: Vec<f32> = match done.get("latent") {
+        Some(Value::Arr(a)) => a.iter().map(|x| x.as_f64().unwrap() as f32).collect(),
+        other => panic!("latent missing: {other:?}"),
+    };
+    // f32 -> json f64 -> f32 round-trips exactly
+    assert_eq!(solo.latent, wire, "wire latent differs from solo");
+}
+
+#[test]
+fn wire_cancel_aborts_stream_and_frees_admission() {
+    let (_server, addr, coordinator) = start_server(2);
+    let mut client = Client::connect(&addr).unwrap();
+    let stream_id = client
+        .send(
+            Value::obj()
+                .with("v", 2i64)
+                .with("op", "generate")
+                .with("prompt", "hog")
+                .with("steps", 1000i64)
+                .with("scheduler", "heun")
+                .with("seed", 1i64)
+                .with("stream", true)
+                .with("preview_every", 1i64),
+        )
+        .unwrap();
+    // wait until mid-flight: queued, then at least one progress event
+    loop {
+        let v = client.read_frame().unwrap();
+        if v.get("event").and_then(Value::as_str) == Some("progress") {
+            break;
+        }
+    }
+    // the cancel ack interleaves with still-buffered event frames, so
+    // match frames by id instead of assuming the next one is the ack
+    let cancel_id = client
+        .send(Value::obj().with("v", 2i64).with("op", "cancel").with("target", stream_id))
+        .unwrap();
+    let mut ack = None;
+    let mut terminal = None;
+    while ack.is_none() || terminal.is_none() {
+        let v = client.read_frame().unwrap();
+        match v.get("id").and_then(Value::as_i64) {
+            Some(i) if i == cancel_id => ack = Some(v),
+            Some(i) if i == stream_id => {
+                if v.get("event").and_then(Value::as_str) == Some("error") {
+                    terminal = Some(v);
+                }
+            }
+            other => panic!("frame for unknown id {other:?}: {v}"),
+        }
+    }
+    let ack = ack.unwrap();
+    assert_eq!(ack.get("ok").and_then(Value::as_bool), Some(true), "{ack}");
+    assert_eq!(ack.get("cancelled").and_then(Value::as_i64), Some(1));
+    let err = terminal.unwrap();
+    assert_eq!(err.get("code").and_then(Value::as_i64), Some(499), "{err}");
+    // the freed slots admit new work: a plain generate completes
+    let resp = client
+        .call(
+            Value::obj()
+                .with("op", "generate")
+                .with("prompt", "after")
+                .with("steps", 3i64)
+                .with("scheduler", "ddim")
+                .with("seed", 2i64),
+        )
+        .unwrap();
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp}");
+    assert_eq!(coordinator.stats().cancelled, 1);
+    // cancelling a target with no live stream is a structured error
+    let nak = client
+        .call(Value::obj().with("v", 2i64).with("op", "cancel").with("target", 9999i64))
+        .unwrap();
+    assert_eq!(nak.get("ok").and_then(Value::as_bool), Some(false), "{nak}");
+}
+
+#[test]
+fn one_multiplexer_thread_serves_256_streaming_connections() {
+    let (_server, addr, coordinator) = start_server(16);
+    let n = 256usize;
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let id = client
+                .send(
+                    Value::obj()
+                        .with("v", 2i64)
+                        .with("op", "generate")
+                        .with("prompt", format!("conn {i}"))
+                        .with("steps", 2i64)
+                        .with("scheduler", "ddim")
+                        .with("seed", i as i64)
+                        .with("stream", true),
+                )
+                .expect("send");
+            loop {
+                let v = client.read_frame().expect("frame");
+                assert_eq!(v.get("id").and_then(Value::as_i64), Some(id));
+                match v.get("event").and_then(Value::as_str) {
+                    Some("done") => break,
+                    Some("error") => panic!("stream errored: {v}"),
+                    _ => {}
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("streaming client");
+    }
+    let stats = coordinator.stats();
+    assert_eq!(stats.completed as usize, n);
+    assert_eq!(stats.failed, 0);
+}

@@ -20,11 +20,13 @@
 //! machines — never wall-clock samples; the bands are the tolerance. To
 //! tighten a band, copy the `bench-results` CI artifact's value in.
 //!
-//! Gated results as of PR 5: `BENCH_continuous.json` (iteration-level
-//! batching), `BENCH_qos.json` (actuator win at overload),
-//! `BENCH_interval.json` (interval/cadence SSIM gains) and
-//! `BENCH_cluster.json` (replica scaling ≥ 3.4× at 4 replicas,
-//! plan-cost routing p95 ≤ round-robin).
+//! Gated results: `BENCH_continuous.json` (iteration-level batching),
+//! `BENCH_qos.json` (actuator win at overload), `BENCH_interval.json`
+//! (interval/cadence SSIM gains), `BENCH_cluster.json` (replica scaling
+//! ≥ 3.4× at 4 replicas, plan-cost routing p95 ≤ round-robin),
+//! `BENCH_telemetry.json` (observation overhead), `BENCH_cache.json`
+//! (amortization tiers) and `BENCH_stream.json` (mid-flight cancel
+//! reclaiming ≥ 1.15× useful throughput, no scenario class starving).
 //!
 //! Usage (from `rust/`, after `cargo bench -- --fast`):
 //!
