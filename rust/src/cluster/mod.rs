@@ -29,7 +29,16 @@
 //!   `total_unet_evals()` — a 50%-optimized schedule counts as half the
 //!   load of a full-CFG request — and placed by weighted
 //!   least-outstanding-evals with power-of-two-choices. Round-robin is
-//!   kept as the measurable baseline (`--route round-robin`).
+//!   kept as the measurable baseline (`--route round-robin`). With
+//!   calibrated [`CostTable`]s installed ([`ClusterConfig::cost_tables`],
+//!   DESIGN.md §15) the same router runs in **measured milliseconds**:
+//!   jobs are priced by [`GuidancePlan::cost_ms`](crate::guidance::GuidancePlan::cost_ms)
+//!   against the fleet-reference table (stored as integer microseconds)
+//!   and each replica's weight is scaled by its measured per-slot speed,
+//!   so a replica whose dual step is twice as fast absorbs twice the
+//!   outstanding milliseconds. A single shared table scales every weight
+//!   and every job by the same constants — placements are preserved
+//!   bit-exactly versus unit-slot routing.
 //! * **Lifecycle**: [`ReplicaSet::kill`] ejects a replica — the router
 //!   stops placing on it, its executing cohort drains, and its queued
 //!   jobs come back as explicit 503 sheds which the relay **requeues**
@@ -61,6 +70,7 @@ use crate::coordinator::{
 };
 use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
+use crate::guidance::{CostTable, StepMode};
 use crate::metrics::LatencyHistogram;
 use crate::qos::{AdmissionDecision, QosMeta, QosPolicy};
 use crate::telemetry::{ClusterMetrics, CoordSink, Telemetry};
@@ -145,6 +155,21 @@ impl ReplicaSpec {
     }
 }
 
+/// The effective routing weight of one replica: its shape-derived
+/// capacity, scaled — when the fleet is priced — by the replica's
+/// measured per-slot speed (`2 / dual_step_ms`, the analytic slot rate a
+/// 1-ms-per-eval replica would have). Loads are outstanding
+/// *fleet-reference* microseconds, so dividing by a weight that carries
+/// the replica's own speed steers proportionally more work to faster
+/// hardware. With one shared table the scale factor is the same constant
+/// everywhere and placements match unit-slot routing bit-exactly.
+fn route_weight(spec: &ReplicaSpec, table: Option<&CostTable>) -> f64 {
+    match table {
+        Some(t) => spec.capacity_weight() * 2.0 / t.sample_step_ms(StepMode::Dual),
+        None => spec.capacity_weight(),
+    }
+}
+
 /// The `[cluster]` configuration: how many replicas, their shapes, and
 /// the routing policy.
 #[derive(Debug, Clone, PartialEq)]
@@ -158,6 +183,19 @@ pub struct ClusterConfig {
     /// (request cache + shared uncond cache are replica-scoped; the
     /// router keeps identical keys together via cache affinity).
     pub cache: CacheConfig,
+    /// Measured cost tables (DESIGN.md §15). Empty: routing stays in
+    /// analytic UNet-eval units. One table: the whole fleet shares it
+    /// (pricing is a pure relabeling — placements are preserved
+    /// bit-exactly). `n` tables: replica `i` uses table `i % n`, so a
+    /// heterogeneous fleet routes by each replica's *measured* speed.
+    /// Table 0 is always the fleet reference that prices job costs.
+    /// Injected programmatically (from the `[cost]` section by the
+    /// server wiring), like `cache` — not a `[cluster]` TOML key.
+    pub cost_tables: Vec<Arc<CostTable>>,
+    /// Per-replica continuous-batcher millisecond budget
+    /// ([`crate::coordinator::ContinuousBatcher::with_ms_budget`]);
+    /// `0.0` disables the ms admission tier. Requires `cost_tables`.
+    pub cost_budget_ms: f64,
 }
 
 impl Default for ClusterConfig {
@@ -167,6 +205,8 @@ impl Default for ClusterConfig {
             route: RoutePolicy::PlanCost,
             route_seed: 0,
             cache: CacheConfig::default(),
+            cost_tables: Vec::new(),
+            cost_budget_ms: 0.0,
         }
     }
 }
@@ -185,7 +225,60 @@ impl ClusterConfig {
             spec.validate()
                 .map_err(|e| Error::Config(format!("cluster replica {i}: {e}")))?;
         }
+        // every installed table must price a single sample (batch 1,
+        // both step modes) — that price is the routing weight scale and
+        // the per-sample scheduling currency, so a table that cannot
+        // resolve it would silently fall back on every placement
+        for (k, t) in self.cost_tables.iter().enumerate() {
+            for mode in [StepMode::Dual, StepMode::Single] {
+                if !t.covers(1, mode) {
+                    return Err(Error::Config(format!(
+                        "cluster cost table {k} cannot price a batch-1 {} step \
+                         (calibrated buckets: {:?})",
+                        mode.name(),
+                        t.batches()
+                    )));
+                }
+            }
+        }
+        if self.cost_budget_ms != 0.0 {
+            if !self.cost_budget_ms.is_finite() || self.cost_budget_ms < 0.0 {
+                return Err(Error::Config(format!(
+                    "cluster cost_budget_ms {} must be finite and >= 0",
+                    self.cost_budget_ms
+                )));
+            }
+            if self.cost_tables.is_empty() {
+                return Err(Error::Config(
+                    "cluster cost_budget_ms requires cost tables (nothing prices the budget)"
+                        .into(),
+                ));
+            }
+            for i in 0..self.replicas.len() {
+                let dual = self
+                    .cost_table_for(i)
+                    .expect("tables non-empty")
+                    .sample_step_ms(StepMode::Dual);
+                if self.cost_budget_ms < dual {
+                    return Err(Error::Config(format!(
+                        "cluster cost_budget_ms {} cannot admit even one dual-guidance \
+                         sample on replica {i} (a dual step measures {dual} ms)",
+                        self.cost_budget_ms
+                    )));
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// The cost table replica `i` runs against: `None` while the fleet
+    /// is unpriced, table `i % n` otherwise.
+    pub fn cost_table_for(&self, i: usize) -> Option<&Arc<CostTable>> {
+        if self.cost_tables.is_empty() {
+            None
+        } else {
+            Some(&self.cost_tables[i % self.cost_tables.len()])
+        }
     }
 
     /// Build from the `[cluster]` TOML section (plus per-replica
@@ -282,6 +375,11 @@ impl ClusterConfig {
             route,
             route_seed,
             cache: CacheConfig::from_toml(doc)?,
+            // priced routing needs a loaded manifest, so the tables (and
+            // the ms budget they denominate) are injected by the server
+            // wiring from the [cost] section, not parsed here
+            cost_tables: Vec::new(),
+            cost_budget_ms: 0.0,
         };
         cfg.validate()?;
         Ok(Some(cfg))
@@ -312,7 +410,9 @@ struct ClusterJob {
     respond: Sender<(Result<GenerationOutput>, Duration)>,
     /// Replicas this job must not be placed on again (requeue history).
     excluded: Vec<usize>,
-    /// Plan-compiled total UNet evals — the routing weight.
+    /// The routing weight: plan-compiled total UNet evals, or — when the
+    /// fleet carries cost tables — the plan's measured cost against the
+    /// fleet-reference table, in integer microseconds.
     cost: u64,
     placed: Arc<Mutex<Vec<usize>>>,
     /// Cluster-level submission instant: the zero point for the
@@ -388,6 +488,9 @@ struct Core {
     replicas: Vec<Replica>,
     router: Mutex<Router>,
     route: RoutePolicy,
+    /// Measured cost tables (empty = analytic unit routing). Table 0 is
+    /// the fleet reference every job is priced against.
+    cost_tables: Vec<Arc<CostTable>>,
     qos: Option<Arc<dyn QosPolicy>>,
     /// Cluster-owned latency histogram: every completion is recorded
     /// here by the relays, so the aggregate percentiles are exact (they
@@ -416,6 +519,15 @@ struct Core {
 }
 
 impl Core {
+    /// [`ClusterConfig::cost_table_for`] over the installed tables.
+    fn cost_table_for(&self, i: usize) -> Option<&CostTable> {
+        if self.cost_tables.is_empty() {
+            None
+        } else {
+            Some(&self.cost_tables[i % self.cost_tables.len()])
+        }
+    }
+
     /// Route + enqueue one admitted job, retrying across replicas until
     /// one accepts; on total failure the job is handed back with the
     /// error so the caller decides who answers the client. Returns the
@@ -578,7 +690,12 @@ impl ReplicaSet {
         telemetry: Option<Arc<Telemetry>>,
     ) -> Result<Arc<ReplicaSet>> {
         config.validate()?;
-        let weights: Vec<f64> = config.replicas.iter().map(|s| s.capacity_weight()).collect();
+        let weights: Vec<f64> = config
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, s)| route_weight(s, config.cost_table_for(i).map(Arc::as_ref)))
+            .collect();
         let router = Router::new(config.route, weights, config.route_seed)?;
         let mut replicas = Vec::with_capacity(config.replicas.len());
         let mut relay_rxs = Vec::with_capacity(config.replicas.len());
@@ -592,6 +709,12 @@ impl ReplicaSet {
             // global cache with cross-replica contention)
             let mut coord_cfg = spec.coordinator_config();
             coord_cfg.cache = config.cache.clone();
+            // each replica coordinator carries its own table: its stats
+            // report the measured model ratio, its QoS view (the shared
+            // policy) learns the measured shed ratio, and a nonzero
+            // budget prices its continuous batcher in milliseconds
+            coord_cfg.cost_table = config.cost_table_for(id).cloned();
+            coord_cfg.cost_budget_ms = config.cost_budget_ms;
             let coordinator =
                 Coordinator::start_full(Arc::clone(&engine), coord_cfg, qos.clone(), sink);
             let (tx, rx) = mpsc::channel::<RelayItem>();
@@ -610,6 +733,7 @@ impl ReplicaSet {
             replicas,
             router: Mutex::new(router),
             route: config.route,
+            cost_tables: config.cost_tables.clone(),
             qos,
             latency: Mutex::new(LatencyHistogram::new()),
             submitted: AtomicU64::new(0),
@@ -739,9 +863,14 @@ impl ReplicaSet {
         }
         core.pending_max.fetch_max(depth_before as u64 + 1, Ordering::Relaxed);
         // the routing weight is the *post-rewrite* plan cost: what the
-        // replica will actually execute after any QoS actuation
+        // replica will actually execute after any QoS actuation. Priced
+        // fleets route in measured microseconds of the reference table
+        // (integer, so reserve/release arithmetic stays exact)
         let cost = match req.plan() {
-            Ok(p) => p.total_unet_evals() as u64,
+            Ok(p) => match core.cost_tables.first() {
+                Some(t) => (p.cost_ms(t) * 1000.0).round() as u64,
+                None => p.total_unet_evals() as u64,
+            },
             Err(e) => {
                 core.pending.fetch_sub(1, Ordering::Relaxed);
                 if let Some(m) = &core.metrics {
@@ -834,15 +963,29 @@ impl ReplicaSet {
         let replicas: Vec<ReplicaStats> = core
             .replicas
             .iter()
-            .map(|r| ReplicaStats {
+            .enumerate()
+            .map(|(i, r)| ReplicaStats {
                 id: r.id,
                 healthy: r.healthy.load(Ordering::SeqCst),
                 routed: r.routed.load(Ordering::Relaxed),
                 outstanding_evals: r.outstanding_evals.load(Ordering::Relaxed),
                 capacity_weight: r.spec.capacity_weight(),
+                route_weight: route_weight(&r.spec, core.cost_table_for(i)),
                 coordinator: r.coordinator.stats(),
             })
             .collect();
+        // distinct tables only: a fleet-wide shared table (the common
+        // case) must not have its fallback counter summed once per
+        // replica referencing it
+        let mut seen: Vec<*const CostTable> = Vec::new();
+        let mut cost_fallbacks = 0u64;
+        for t in &core.cost_tables {
+            let p = Arc::as_ptr(t);
+            if !seen.contains(&p) {
+                seen.push(p);
+                cost_fallbacks += t.fallback_count();
+            }
+        }
         let actuator_fraction = core
             .qos
             .as_ref()
@@ -863,6 +1006,8 @@ impl ReplicaSet {
             queue_depth: core.pending.load(Ordering::Relaxed),
             queue_depth_max: core.pending_max.load(Ordering::Relaxed),
             outstanding_evals: replicas.iter().map(|r| r.outstanding_evals).sum(),
+            cost_priced: !core.cost_tables.is_empty(),
+            cost_fallbacks,
             cache_hits: replicas.iter().map(|r| r.coordinator.cache_hits).sum(),
             dedup_coalesced: replicas.iter().map(|r| r.coordinator.dedup_coalesced).sum(),
             batches: replicas.iter().map(|r| r.coordinator.batches).sum(),
@@ -1094,10 +1239,15 @@ pub struct ReplicaStats {
     pub healthy: bool,
     /// Requests routed here (incl. requeues onto this replica).
     pub routed: u64,
-    /// Outstanding plan-compiled UNet evals right now.
+    /// Outstanding routed load right now: plan-compiled UNet evals, or
+    /// fleet-reference microseconds when the cluster is priced.
     pub outstanding_evals: u64,
-    /// Routing weight (normalizes outstanding evals across mixed shapes).
+    /// Shape-derived routing weight (normalizes outstanding load across
+    /// mixed replica shapes).
     pub capacity_weight: f64,
+    /// The weight the router actually divides by: `capacity_weight`,
+    /// scaled by this replica's measured speed when the fleet is priced.
+    pub route_weight: f64,
     pub coordinator: CoordinatorStats,
 }
 
@@ -1125,8 +1275,15 @@ pub struct ClusterStats {
     /// Outstanding requests across the cluster right now.
     pub queue_depth: u64,
     pub queue_depth_max: u64,
-    /// Summed outstanding plan-compiled UNet evals across replicas.
+    /// Summed outstanding routed load across replicas (plan-compiled
+    /// UNet evals, or fleet-reference microseconds when priced).
     pub outstanding_evals: u64,
+    /// True when routing runs in measured milliseconds (cost tables are
+    /// installed; DESIGN.md §15).
+    pub cost_priced: bool,
+    /// Summed fallback-pricing events across the fleet's distinct cost
+    /// tables — nonzero means a plan shape escaped the calibrated grid.
+    pub cost_fallbacks: u64,
     /// Summed replica request-cache hits (served without UNet work).
     pub cache_hits: u64,
     /// Summed replica dedup joins (coalesced onto in-flight identicals).
@@ -1181,6 +1338,127 @@ mod tests {
         assert!(ClusterConfig { replicas: vec![], ..ClusterConfig::default() }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn route_weight_scales_capacity_by_measured_speed() {
+        // unpriced: the shape-derived capacity, unchanged
+        assert_eq!(route_weight(&continuous(8), None), 8.0);
+        // 0.5 ms/eval -> dual = 1.0 ms -> 2x the analytic 1-ms-unit rate
+        let fast = CostTable::proportional(0.5, &[1]);
+        assert_eq!(route_weight(&continuous(8), Some(&fast)), 16.0);
+        // 1.0 ms/eval is exactly the analytic reference rate
+        let reference = CostTable::proportional(1.0, &[1]);
+        assert_eq!(route_weight(&continuous(8), Some(&reference)), 8.0);
+        // a replica measured 4x slower carries a quarter of the weight
+        let slow = CostTable::proportional(4.0, &[1]);
+        assert_eq!(route_weight(&continuous(8), Some(&slow)), 2.0);
+    }
+
+    #[test]
+    fn cost_config_validation_guards_pricing() {
+        // a table that cannot price a batch-1 sample is an up-front error
+        let sparse = Arc::new(CostTable::proportional(1.0, &[2, 4]));
+        let cfg = ClusterConfig { cost_tables: vec![sparse], ..ClusterConfig::default() };
+        assert!(cfg.validate().is_err());
+        // a ms budget with nothing to price it is an error
+        let cfg = ClusterConfig { cost_budget_ms: 10.0, ..ClusterConfig::default() };
+        assert!(cfg.validate().is_err());
+        // the budget must admit at least one dual sample on every replica
+        let table = Arc::new(CostTable::proportional(10.0, &[1])); // dual = 20 ms
+        let cfg = ClusterConfig {
+            cost_tables: vec![Arc::clone(&table)],
+            cost_budget_ms: 10.0,
+            ..ClusterConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = ClusterConfig {
+            cost_tables: vec![Arc::clone(&table)],
+            cost_budget_ms: 20.0,
+            ..ClusterConfig::default()
+        };
+        assert!(cfg.validate().is_ok());
+        // tables cycle across replicas: i % n
+        let other = Arc::new(CostTable::proportional(2.0, &[1]));
+        let cfg = ClusterConfig {
+            replicas: vec![ReplicaSpec::default(); 3],
+            cost_tables: vec![Arc::clone(&table), Arc::clone(&other)],
+            ..ClusterConfig::default()
+        };
+        assert!(Arc::ptr_eq(cfg.cost_table_for(0).unwrap(), &table));
+        assert!(Arc::ptr_eq(cfg.cost_table_for(1).unwrap(), &other));
+        assert!(Arc::ptr_eq(cfg.cost_table_for(2).unwrap(), &table));
+        assert!(ClusterConfig::default().cost_table_for(0).is_none());
+    }
+
+    #[test]
+    fn shared_proportional_table_preserves_placements() {
+        // the bit-exactness claim of DESIGN.md §15 at the routing layer:
+        // one shared proportional table scales every job cost and every
+        // replica weight by the same constants, so the priced router's
+        // normalized-load comparisons are the unit router's, rescaled —
+        // identical placements on an identical submission trace
+        let specs = [
+            continuous(8),
+            continuous(4),
+            ReplicaSpec { workers: 2, ..continuous(2) },
+        ];
+        let table = CostTable::proportional(0.5, &[1]);
+        let unit_w: Vec<f64> = specs.iter().map(|s| route_weight(s, None)).collect();
+        let priced_w: Vec<f64> =
+            specs.iter().map(|s| route_weight(s, Some(&table))).collect();
+        let mut unit_router = Router::new(RoutePolicy::PlanCost, unit_w, 42).unwrap();
+        let mut priced_router = Router::new(RoutePolicy::PlanCost, priced_w, 42).unwrap();
+        let evals: [u64; 12] = [80, 40, 60, 20, 100, 80, 10, 50, 70, 30, 90, 40];
+        let mut unit_load = vec![0u64; specs.len()];
+        let mut priced_load = vec![0u64; specs.len()];
+        for &e in &evals {
+            let u = unit_router
+                .place(&unit_load.iter().map(|&l| Some(l)).collect::<Vec<_>>())
+                .unwrap();
+            let p = priced_router
+                .place(&priced_load.iter().map(|&l| Some(l)).collect::<Vec<_>>())
+                .unwrap();
+            assert_eq!(u, p, "pricing changed a placement");
+            // 0.5 ms/eval -> a job of e evals costs exactly 500e us
+            unit_load[u] += e;
+            priced_load[p] += 500 * e;
+        }
+        assert!(unit_load.iter().all(|&l| l > 0), "trace must exercise every replica");
+    }
+
+    #[test]
+    fn priced_cluster_routes_in_measured_microseconds() {
+        let table = Arc::new(CostTable::proportional(0.5, &[1]));
+        let cfg = ClusterConfig {
+            cost_tables: vec![Arc::clone(&table)],
+            ..ClusterConfig::homogeneous(2, continuous(4))
+        };
+        let set = ReplicaSet::start(engine(), cfg).unwrap();
+        let tickets: Vec<_> = (0..6)
+            .map(|i| {
+                let r = GenerationRequest::new(format!("c{i}"))
+                    .steps(8)
+                    .scheduler(SchedulerKind::Ddim)
+                    .selective(WindowSpec::last(0.5))
+                    .seed(i as u64)
+                    .decode(false);
+                set.submit_traced(r, QosMeta::default()).expect("submit")
+            })
+            .collect();
+        for (t, _) in tickets {
+            t.wait().expect("complete");
+        }
+        let stats = set.stats();
+        assert_eq!(stats.completed, 6);
+        assert!(stats.cost_priced);
+        assert_eq!(stats.cost_fallbacks, 0, "batch-1 pricing must stay on the table");
+        assert_eq!(stats.outstanding_evals, 0, "priced reservations release exactly");
+        for r in &stats.replicas {
+            // 0.5 ms/eval: dual = 1.0 ms -> every weight doubles
+            assert_eq!(r.route_weight, r.capacity_weight * 2.0);
+        }
+        set.shutdown();
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //! (DESIGN.md §10) every request carries `plan.total_unet_evals()`
 //! *before* a single step runs, so the router can weigh a 50%-optimized
 //! schedule as half the load of a full-CFG one instead of counting
-//! requests. Two policies:
+//! requests. The router itself is unit-agnostic: when the fleet carries
+//! calibrated cost tables (DESIGN.md §15) the cluster hands it job loads
+//! in measured *microseconds* and weights scaled by each replica's
+//! measured speed — same comparisons, a truer denominator. Two policies:
 //!
 //! * [`RoutePolicy::PlanCost`] (default) — weighted
 //!   least-outstanding-evals with power-of-two-choices: sample two

@@ -12,7 +12,8 @@ pub use toml::{TomlDoc, TomlValue};
 use crate::coordinator::BatchMode;
 use crate::error::{Error, Result};
 use crate::guidance::{
-    AdaptiveConfig, GuidanceSchedule, GuidanceStrategy, SelectiveGuidancePolicy, WindowPosition,
+    AdaptiveConfig, FallbackPolicy, GuidanceSchedule, GuidanceStrategy, SelectiveGuidancePolicy,
+    WindowPosition,
 };
 use crate::qos::QosConfig;
 use crate::scheduler::SchedulerKind;
@@ -457,6 +458,108 @@ impl TelemetryConfig {
     }
 }
 
+/// `[cost]` section: the measured-cost plan model (DESIGN.md §15).
+/// Off by default — without a cost source every layer keeps pricing in
+/// analytic UNet-eval units.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostConfig {
+    /// Path to a sealed cost manifest (`sgd-serve calibrate --out …`).
+    /// Validated against the loaded runtime at startup: backend, preset,
+    /// model fingerprint and resolution must all match.
+    pub table_path: Option<String>,
+    /// Calibrate the loaded runtime at startup instead of loading a
+    /// manifest (the fast grid; mutually exclusive with `table_path`).
+    pub calibrate_on_start: bool,
+    /// Continuous-batcher admission budget in measured milliseconds per
+    /// iteration. 0 keeps the `slot_budget` unit currency.
+    pub budget_ms: f64,
+    /// What an uncovered (batch, mode) lookup does: price analytically
+    /// and count, or refuse the table at startup.
+    pub fallback: FallbackPolicy,
+}
+
+impl Default for CostConfig {
+    fn default() -> Self {
+        CostConfig {
+            table_path: None,
+            calibrate_on_start: false,
+            budget_ms: 0.0,
+            fallback: FallbackPolicy::Analytic,
+        }
+    }
+}
+
+impl CostConfig {
+    /// Is any cost source configured?
+    pub fn enabled(&self) -> bool {
+        self.table_path.is_some() || self.calibrate_on_start
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.table_path.is_some() && self.calibrate_on_start {
+            return Err(Error::Config(
+                "cost table_path and calibrate_on_start are mutually exclusive — \
+                 configure exactly one table source"
+                    .into(),
+            ));
+        }
+        if !self.budget_ms.is_finite() || self.budget_ms < 0.0 {
+            return Err(Error::Config(format!(
+                "cost budget_ms {} must be finite and >= 0",
+                self.budget_ms
+            )));
+        }
+        if self.budget_ms > 0.0 && !self.enabled() {
+            return Err(Error::Config(
+                "cost budget_ms requires a table source (table_path or calibrate_on_start)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build from the `[cost]` TOML section. Knobs without a table
+    /// source are an operator error, not a silent no-op (mirroring the
+    /// `[qos]`/`[telemetry]` rule).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = CostConfig::default();
+        if let Some(v) = doc.get("cost", "table_path") {
+            cfg.table_path = Some(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("cost table_path must be string".into()))?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = doc.get("cost", "calibrate_on_start") {
+            cfg.calibrate_on_start = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("cost calibrate_on_start must be bool".into()))?;
+        }
+        let knobs = ["budget_ms", "fallback"];
+        if !cfg.enabled() {
+            if let Some(orphan) = knobs.iter().find(|&&k| doc.get("cost", k).is_some()) {
+                return Err(Error::Config(format!(
+                    "cost {orphan} requires a table source (table_path or calibrate_on_start)"
+                )));
+            }
+            return Ok(cfg);
+        }
+        if let Some(v) = doc.get("cost", "budget_ms") {
+            cfg.budget_ms = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("cost budget_ms must be a number".into()))?;
+        }
+        if let Some(v) = doc.get("cost", "fallback") {
+            cfg.fallback = FallbackPolicy::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("cost fallback must be string".into()))?,
+            )?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Complete deployment configuration (engine + server + qos + cluster +
 /// telemetry + artifacts).
 #[derive(Debug, Clone, Default)]
@@ -477,6 +580,10 @@ pub struct RunConfig {
     /// `cache::CacheConfig`): exact-match request cache, in-flight
     /// dedup, and the cross-request shared uncond tier.
     pub cache: crate::cache::CacheConfig,
+    /// `[cost]` section — off by default (see [`CostConfig`]): the
+    /// measured-cost table source, ms admission budget and fallback
+    /// policy.
+    pub cost: CostConfig,
     /// `[workload]` section — absent by default. A deployment file can
     /// carry its evaluation traffic shape (arrival process, img2img
     /// strength, variation fan-out, popularity skew) next to the
@@ -508,6 +615,7 @@ impl RunConfig {
             cluster,
             telemetry: TelemetryConfig::from_toml(&doc)?,
             cache: crate::cache::CacheConfig::from_toml(&doc)?,
+            cost: CostConfig::from_toml(&doc)?,
             workload,
         })
     }
@@ -782,6 +890,42 @@ ewma_alpha = 0.3
         assert!(RunConfig::from_str("[telemetry]\ntrace_capacity = 0\n").is_err());
         assert!(RunConfig::from_str("[telemetry]\nenabled = \"yes\"\n").is_err());
         assert!(RunConfig::from_str("[telemetry]\nmetrics_addr = 9090\n").is_err());
+    }
+
+    #[test]
+    fn cost_section() {
+        // default: no source, unit currency everywhere
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.cost, CostConfig::default());
+        assert!(!cfg.cost.enabled());
+        let cfg = RunConfig::from_str(
+            "[cost]\ntable_path = \"cost.json\"\nbudget_ms = 12.5\nfallback = \"reject\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.cost.table_path.as_deref(), Some("cost.json"));
+        assert_eq!(cfg.cost.budget_ms, 12.5);
+        assert_eq!(cfg.cost.fallback, FallbackPolicy::Reject);
+        assert!(cfg.cost.enabled());
+        let cfg = RunConfig::from_str("[cost]\ncalibrate_on_start = true\n").unwrap();
+        assert!(cfg.cost.calibrate_on_start && cfg.cost.enabled());
+        // orphan knobs without a table source are an operator error
+        assert!(RunConfig::from_str("[cost]\nbudget_ms = 10.0\n").is_err());
+        assert!(RunConfig::from_str("[cost]\nfallback = \"analytic\"\n").is_err());
+        // exactly one source
+        assert!(RunConfig::from_str(
+            "[cost]\ntable_path = \"cost.json\"\ncalibrate_on_start = true\n"
+        )
+        .is_err());
+        // invalid values are structured config errors
+        assert!(RunConfig::from_str(
+            "[cost]\ntable_path = \"cost.json\"\nbudget_ms = -1.0\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_str(
+            "[cost]\ntable_path = \"cost.json\"\nfallback = \"panic\"\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_str("[cost]\ntable_path = 3\n").is_err());
     }
 
     #[test]

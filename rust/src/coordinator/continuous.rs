@@ -17,6 +17,13 @@
 //! it enters its window, which is precisely when its headroom becomes
 //! admissible capacity.
 //!
+//! With a calibrated [`CostTable`] attached
+//! ([`ContinuousBatcher::with_ms_budget`],
+//! DESIGN.md §15), admission additionally reserves each sample's peak
+//! remaining cost in *measured milliseconds* against `budget_ms` — the
+//! iteration-latency analogue of the slot budget, for backends where a
+//! dual step does not cost exactly two singles.
+//!
 //! The core is single-threaded and deterministic (the threaded driver
 //! lives in the coordinator's continuous worker loop), which is what lets
 //! `tests/continuous_equivalence.rs` and `benches/continuous_batching.rs`
@@ -27,6 +34,7 @@ use std::sync::Arc;
 use crate::cache::SharedUncondCache;
 use crate::engine::{Engine, GenerationOutput, GenerationRequest, SampleState};
 use crate::error::{Error, Result};
+use crate::guidance::{CostTable, StepMode};
 use crate::telemetry::BatcherMetrics;
 
 /// A slot-budgeted, continuously re-composed denoising cohort.
@@ -43,6 +51,13 @@ pub struct ContinuousBatcher {
     /// cache. `None` keeps the batcher bit-exact with the unshared
     /// engine.
     shared: Option<Arc<SharedUncondCache>>,
+    /// Optional measured-cost admission tier (DESIGN.md §15): a
+    /// millisecond budget and the calibrated table that prices peak
+    /// remaining step costs in it. Runs *alongside* the slot budget —
+    /// slots guard the compiled batch shapes, milliseconds guard the
+    /// iteration latency target. `None` keeps admission purely
+    /// slot-priced.
+    ms: Option<(f64, Arc<CostTable>)>,
 }
 
 /// What one cohort iteration produced.
@@ -78,6 +93,7 @@ impl ContinuousBatcher {
             next_id: 0,
             telemetry: None,
             shared: None,
+            ms: None,
         })
     }
 
@@ -95,6 +111,32 @@ impl ContinuousBatcher {
     pub fn with_shared_cache(mut self, cache: Arc<SharedUncondCache>) -> ContinuousBatcher {
         self.shared = Some(cache);
         self
+    }
+
+    /// Attach the measured-cost admission tier: admission additionally
+    /// reserves each sample's peak remaining *millisecond* cost
+    /// ([`SampleState::peak_remaining_cost_ms`]) against `budget_ms`.
+    /// The budget must at least cover one dual-guidance sample, the same
+    /// floor the slot budget enforces.
+    pub fn with_ms_budget(
+        mut self,
+        budget_ms: f64,
+        table: Arc<CostTable>,
+    ) -> Result<ContinuousBatcher> {
+        if !budget_ms.is_finite() || budget_ms <= 0.0 {
+            return Err(Error::Config(format!(
+                "budget_ms {budget_ms} must be finite and > 0"
+            )));
+        }
+        let dual = table.sample_step_ms(StepMode::Dual);
+        if budget_ms < dual {
+            return Err(Error::Config(format!(
+                "budget_ms {budget_ms} cannot admit even one dual-guidance sample \
+                 (a dual step measures {dual} ms on this table)"
+            )));
+        }
+        self.ms = Some((budget_ms, table));
+        Ok(self)
     }
 
     pub fn slot_budget(&self) -> usize {
@@ -116,6 +158,34 @@ impl ContinuousBatcher {
         self.slot_budget.saturating_sub(self.committed_slots())
     }
 
+    /// Milliseconds the cohort can still claim in the worst remaining
+    /// iteration, priced by the attached table. `0.0` when no
+    /// millisecond budget is attached.
+    pub fn committed_ms(&self) -> f64 {
+        match &self.ms {
+            Some((_, table)) => {
+                self.states.iter().map(|s| s.peak_remaining_cost_ms(table)).sum()
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Millisecond budget minus committed milliseconds — the measured
+    /// admission headroom. `None` when admission is purely slot-priced.
+    pub fn headroom_ms(&self) -> Option<f64> {
+        self.ms.as_ref().map(|(budget, _)| (budget - self.committed_ms()).max(0.0))
+    }
+
+    /// The attached millisecond budget, if any.
+    pub fn ms_budget(&self) -> Option<f64> {
+        self.ms.as_ref().map(|(budget, _)| *budget)
+    }
+
+    /// The attached cost table, if any.
+    pub fn cost_table(&self) -> Option<&Arc<CostTable>> {
+        self.ms.as_ref().map(|(_, table)| table)
+    }
+
     /// Peak per-iteration slot cost a request will ever need: what
     /// admission must reserve — `plan.peak_remaining_cost(0)`. 2 for
     /// anything with dual steps in its plan (including reuse refreshes
@@ -131,12 +201,21 @@ impl ContinuousBatcher {
     pub fn try_admit(&mut self, req: &GenerationRequest) -> Result<Option<u64>> {
         // shared-tier plans can have a lower peak (no forced cold-cache
         // dual), so admission prices the plan that will actually run
-        let cost = match &self.shared {
-            Some(_) => req.plan_shared()?.peak_remaining_cost(0),
-            None => Self::admission_cost(req)?,
+        let plan = match &self.shared {
+            Some(_) => req.plan_shared()?,
+            None => req.plan()?,
         };
-        if cost > self.headroom() {
+        if plan.peak_remaining_cost(0) > self.headroom() {
             return Ok(None);
+        }
+        if let Some((budget, table)) = &self.ms {
+            // the measured tier prices the same peak in milliseconds;
+            // with a proportional table this is exactly the slot check
+            // relabeled, so it can never flip a decision the slot budget
+            // already made (the bit-exactness invariant)
+            if self.committed_ms() + plan.peak_remaining_cost_ms(0, table) > *budget {
+                return Ok(None);
+            }
         }
         let state = match &self.shared {
             Some(_) => self.engine.begin_shared(req)?,
@@ -334,6 +413,85 @@ mod tests {
         }
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ms_budget_gates_admission_in_measured_milliseconds() {
+        use crate::guidance::{CostTable, FallbackPolicy, StepMode};
+        // a skewed table: the dual step costs 3x the single, not the
+        // analytic 2x — slot headroom alone would over-admit
+        let mut t = CostTable::new("synthetic", "synthetic", 8, 10.0, FallbackPolicy::Analytic)
+            .unwrap();
+        t.insert(1, StepMode::Dual, 30.0).unwrap();
+        t.insert(1, StepMode::Single, 10.0).unwrap();
+        let table = Arc::new(t);
+        // slots would admit three duals (budget 8 >= 3x2); 70 ms admits
+        // only two (2 x 30 = 60, a third needs 90)
+        let mut cb = ContinuousBatcher::new(engine(), 8)
+            .unwrap()
+            .with_ms_budget(70.0, Arc::clone(&table))
+            .unwrap();
+        assert_eq!(cb.ms_budget(), Some(70.0));
+        assert!(cb.try_admit(&req(0.5)).unwrap().is_some());
+        assert!(cb.try_admit(&req(0.5)).unwrap().is_some());
+        assert_eq!(cb.committed_ms(), 60.0);
+        assert_eq!(cb.headroom_ms(), Some(10.0));
+        assert!(cb.try_admit(&req(0.5)).unwrap().is_none(), "ms budget must gate");
+        // a single-pass trajectory still fits the 10 ms left
+        assert!(cb.try_admit(&req(1.0)).unwrap().is_some());
+        assert_eq!(cb.headroom_ms(), Some(0.0));
+        // once the duals enter their cond-only window their peak drops
+        // to the single price and milliseconds come back (3 in flight,
+        // all single-pass from here: 3 x 10 ms)
+        for _ in 0..4 {
+            cb.step().unwrap();
+        }
+        assert_eq!(cb.in_flight(), 3);
+        assert_eq!(cb.committed_ms(), 30.0);
+        assert!(cb.try_admit(&req(1.0)).unwrap().is_some());
+        assert_eq!(table.fallback_count(), 0, "batch-1 pricing is calibrated");
+    }
+
+    #[test]
+    fn ms_budget_must_cover_a_dual_sample() {
+        use crate::guidance::CostTable;
+        let table = Arc::new(CostTable::proportional(10.0, &[1]));
+        let cb = ContinuousBatcher::new(engine(), 4).unwrap();
+        assert!(cb.with_ms_budget(15.0, Arc::clone(&table)).is_err());
+        let cb = ContinuousBatcher::new(engine(), 4).unwrap();
+        assert!(cb.with_ms_budget(f64::NAN, Arc::clone(&table)).is_err());
+        let cb = ContinuousBatcher::new(engine(), 4).unwrap();
+        assert!(cb.with_ms_budget(20.0, table).is_ok());
+    }
+
+    #[test]
+    fn proportional_ms_budget_is_the_slot_budget_relabeled() {
+        use crate::guidance::CostTable;
+        // budget_ms = slot_budget x unit_ms: every admission decision
+        // must match the pure slot batcher exactly
+        let unit = 2.5;
+        let slot_budget = 4;
+        let table = Arc::new(CostTable::proportional(unit, &[1, 2, 4]));
+        let mut slots = ContinuousBatcher::new(engine(), slot_budget).unwrap();
+        let mut priced = ContinuousBatcher::new(engine(), slot_budget)
+            .unwrap()
+            .with_ms_budget(slot_budget as f64 * unit, table)
+            .unwrap();
+        let reqs = [req(0.5), req(1.0), req(0.0), req(1.0), req(0.5)];
+        for r in &reqs {
+            let a = slots.try_admit(r).unwrap().is_some();
+            let b = priced.try_admit(r).unwrap().is_some();
+            assert_eq!(a, b, "ms pricing flipped an admission decision");
+        }
+        let mut guard = 0;
+        while slots.in_flight() > 0 || priced.in_flight() > 0 {
+            let oa = slots.step().unwrap();
+            let ob = priced.step().unwrap();
+            assert_eq!(oa.slots_used, ob.slots_used);
+            assert_eq!(oa.retired.len(), ob.retired.len());
+            guard += 1;
+            assert!(guard < 32);
+        }
     }
 
     #[test]

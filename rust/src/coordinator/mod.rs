@@ -57,6 +57,7 @@ use std::time::{Duration, Instant};
 use crate::cache::{canonical_key, CacheConfig, CacheOutcome, RequestCache, SharedUncondCache};
 use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
+use crate::guidance::{CostTable, StepMode};
 use crate::metrics::LatencyHistogram;
 use crate::qos::{expired, AdmissionDecision, QosMeta, QosPolicy};
 use crate::telemetry::{BatcherMetrics, CoordSink, Telemetry};
@@ -113,6 +114,15 @@ pub struct CoordinatorConfig {
     /// by default — misses and disabled runs are bit-exact with an
     /// uncached coordinator.
     pub cache: CacheConfig,
+    /// Measured cost table (DESIGN.md §15): when set, continuous-mode
+    /// admission can additionally be priced in calibrated milliseconds
+    /// (`cost_budget_ms`), an installed QoS policy reads its measured
+    /// shed ratio, and [`CoordinatorStats`] exposes the cost block.
+    /// `None` keeps every decision in analytic units.
+    pub cost_table: Option<Arc<CostTable>>,
+    /// Millisecond admission budget per cohort iteration (continuous
+    /// mode, requires `cost_table`; 0 = slots only).
+    pub cost_budget_ms: f64,
 }
 
 impl Default for CoordinatorConfig {
@@ -124,6 +134,8 @@ impl Default for CoordinatorConfig {
             workers: 1,
             batch_wait: Duration::from_millis(2),
             cache: CacheConfig::default(),
+            cost_table: None,
+            cost_budget_ms: 0.0,
         }
     }
 }
@@ -188,6 +200,20 @@ pub struct CoordinatorStats {
     /// Last selective-guidance window fraction applied by the actuator
     /// (0 when no QoS policy is installed).
     pub actuator_fraction: f64,
+    /// Millisecond admission budget per cohort iteration (0 when the
+    /// measured-cost tier is off or admission is slots-only).
+    pub cost_budget_ms: f64,
+    /// Uncovered cost-table lookups priced by the analytic fallback
+    /// since start (0 when no table is attached). Nonzero on a
+    /// calibrated grid means the table and the runtime disagree.
+    pub cost_fallbacks: u64,
+    /// Measured-over-analytic price ratio of a batch-1 dual step
+    /// ([`CostTable::model_ratio`]; 0 when no table is attached).
+    pub cost_model_ratio: f64,
+    /// Measured shed ratio of the attached table
+    /// ([`CostTable::shed_ratio`]; 0 when no table is attached — the
+    /// analytic value is 0.5).
+    pub cost_shed_ratio: f64,
     pub latency_ms_mean: f64,
     pub latency_ms_p50: f64,
     pub latency_ms_p90: f64,
@@ -552,6 +578,9 @@ pub struct Coordinator {
     sink: Option<Arc<CoordSink>>,
     /// Amortization tiers (DESIGN.md §13); None when every tier is off.
     cache: Option<Arc<CacheLayer>>,
+    /// Measured cost table (DESIGN.md §15); None prices in analytic units.
+    cost_table: Option<Arc<CostTable>>,
+    cost_budget_ms: f64,
 }
 
 impl Coordinator {
@@ -588,7 +617,7 @@ impl Coordinator {
         engine: Arc<Engine>,
         config: CoordinatorConfig,
         qos: Option<Arc<dyn QosPolicy>>,
-        sink: Option<CoordSink>,
+        mut sink: Option<CoordSink>,
     ) -> Arc<Coordinator> {
         assert!(config.max_batch >= 1 && config.workers >= 1);
         if config.mode == BatchMode::Continuous {
@@ -601,7 +630,29 @@ impl Coordinator {
             .cache
             .validate()
             .expect("cache config validated at coordinator start");
+        if config.cost_budget_ms > 0.0 {
+            let table = config
+                .cost_table
+                .as_ref()
+                .expect("cost_budget_ms requires a cost table (validated at the config layer)");
+            assert!(
+                config.cost_budget_ms.is_finite()
+                    && config.cost_budget_ms >= table.sample_step_ms(StepMode::Dual),
+                "cost_budget_ms must be finite and cover one dual-guidance sample \
+                 (validated at the config layer)"
+            );
+        }
+        if let (Some(q), Some(t)) = (&qos, &config.cost_table) {
+            // the QoS deadline math prices its shed estimate with the
+            // measured ratio instead of the analytic 0.5
+            q.attach_cost_table(Arc::clone(t));
+        }
         let cache = config.cache.enabled().then(|| Arc::new(CacheLayer::new(&config.cache)));
+        if let (Some(s), Some(t)) = (&mut sink, &config.cost_table) {
+            // retired plans price their steps into sg_step_cost_ms, and
+            // the table's fallback counter reaches /metrics
+            s.attach_cost(Arc::clone(t));
+        }
         let sink = sink.map(Arc::new);
         if let Some(s) = &sink {
             // one registry for every layer this coordinator drives
@@ -701,13 +752,17 @@ impl Coordinator {
                     let cache = cache.clone();
                     let batcher_tm = batcher_tm.clone();
                     let budget = config.slot_budget;
+                    let cost = (config.cost_budget_ms > 0.0)
+                        .then(|| config.cost_table.clone())
+                        .flatten()
+                        .map(|t| (config.cost_budget_ms, t));
                     handles.push(
                         std::thread::Builder::new()
                             .name(format!("sgd-cont-{worker_id}"))
                             .spawn(move || {
                                 continuous_worker_loop(
-                                    engine, submit_rx, backlog, budget, stats, pending, draining,
-                                    qos, sink, cache, batcher_tm, worker_id,
+                                    engine, submit_rx, backlog, budget, cost, stats, pending,
+                                    draining, qos, sink, cache, batcher_tm, worker_id,
                                 )
                             })
                             .expect("spawn continuous worker"),
@@ -730,7 +785,14 @@ impl Coordinator {
             slot_budget: config.slot_budget,
             sink,
             cache,
+            cost_table: config.cost_table,
+            cost_budget_ms: config.cost_budget_ms,
         })
+    }
+
+    /// The measured cost table this coordinator prices with, if any.
+    pub fn cost_table(&self) -> Option<&Arc<CostTable>> {
+        self.cost_table.as_ref()
     }
 
     /// The shared uncond-eps cache this coordinator's cohorts publish
@@ -1026,6 +1088,22 @@ impl Coordinator {
             queue_depth: self.pending.load(Ordering::Relaxed),
             queue_depth_max: self.queue_depth_max.load(Ordering::Relaxed),
             actuator_fraction,
+            cost_budget_ms: self.cost_budget_ms,
+            cost_fallbacks: self
+                .cost_table
+                .as_ref()
+                .map(|t| t.fallback_count())
+                .unwrap_or(0),
+            cost_model_ratio: self
+                .cost_table
+                .as_ref()
+                .map(|t| t.model_ratio())
+                .unwrap_or(0.0),
+            cost_shed_ratio: self
+                .cost_table
+                .as_ref()
+                .map(|t| t.shed_ratio())
+                .unwrap_or(0.0),
             latency_ms_mean: inner.latency.mean_ms(),
             latency_ms_p50: inner.latency.quantile_ms(0.5),
             latency_ms_p90: inner.latency.quantile_ms(0.9),
@@ -1404,6 +1482,7 @@ fn continuous_worker_loop(
     submit_rx: Arc<Mutex<Receiver<Job>>>,
     backlog: Arc<Mutex<std::collections::VecDeque<Job>>>,
     slot_budget: usize,
+    cost: Option<(f64, Arc<CostTable>)>,
     stats: Arc<Mutex<StatsInner>>,
     pending: Arc<AtomicU64>,
     draining: Arc<AtomicBool>,
@@ -1424,6 +1503,11 @@ fn continuous_worker_loop(
         }
         if let Some(sc) = &shared {
             b = b.with_shared_cache(Arc::clone(sc));
+        }
+        if let Some((budget_ms, table)) = &cost {
+            b = b
+                .with_ms_budget(*budget_ms, Arc::clone(table))
+                .expect("cost budget validated at coordinator start");
         }
         b
     };

@@ -535,6 +535,13 @@ impl SampleState {
     pub fn peak_remaining_cost(&self) -> usize {
         self.plan.peak_remaining_cost(self.step)
     }
+
+    /// [`Self::peak_remaining_cost`] priced through a measured
+    /// [`crate::guidance::CostTable`] — the continuous batcher's
+    /// admission currency under a millisecond budget (DESIGN.md §15).
+    pub fn peak_remaining_cost_ms(&self, table: &crate::guidance::CostTable) -> f64 {
+        self.plan.peak_remaining_cost_ms(self.step, table)
+    }
 }
 
 /// What one [`Engine::step_batch`] call executed.

@@ -1,0 +1,682 @@
+//! Measured-cost plan model: the [`CostTable`] and its checksummed
+//! manifest (DESIGN.md §15).
+//!
+//! Every scheduling layer priced a step in analytic *units* (dual = 2
+//! UNet evals, single = 1) — only proportional to wall-clock when all
+//! batch shapes and backends cost the same. They don't. The cost table
+//! stores **measured per-step milliseconds** keyed by (batch bucket,
+//! step mode), calibrated against the loaded runtime
+//! ([`crate::runtime::calibrate`]), so slot budgets, QoS deadlines and
+//! cluster routing can make millisecond decisions in milliseconds.
+//!
+//! Lookup is deterministic: an exact calibrated bucket wins, a batch
+//! between two calibrated buckets is linearly interpolated, and anything
+//! outside the calibrated range falls back to the analytic price
+//! (`unit_evals × analytic_unit_ms`) **and increments a counter** — the
+//! fallback is never silent ([`CostTable::fallback_count`], the
+//! `sg_cost_fallback_total` metric, the `/stats` cost block).
+//!
+//! The calibration output travels as a [`CostManifest`]: versioned,
+//! carrying the calibrator version, backend, model fingerprint and grid,
+//! and sealed with an FNV-1a checksum over its canonical JSON so a
+//! tampered or hand-edited table is refused at load with a typed error,
+//! and `runtime/artifacts.rs` can refuse a mismatched model/cost-table
+//! pair.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::policy::GuidanceMode;
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+
+/// Cost-manifest format version (bump on any shape change).
+pub const COST_MANIFEST_VERSION: i64 = 1;
+
+/// FNV-1a 64-bit over raw bytes — the crate's standard content hash
+/// (same construction as the cache and tokenizer hashes), rendered as
+/// 16 hex digits for JSON transport.
+pub(crate) fn fnv1a_hex(bytes: &[u8]) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+/// The cost-relevant shape of a denoising step: every
+/// [`GuidanceMode`] is either a *dual* step (two UNet passes) or a
+/// *single* step (one pass — cond-only, reuse, unguided). The table is
+/// keyed on this, not the full mode, because the combine's cost is noise
+/// next to a UNet pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StepMode {
+    Dual,
+    Single,
+}
+
+impl StepMode {
+    /// Collapse a full [`GuidanceMode`] to its cost shape.
+    pub fn of(mode: &GuidanceMode) -> StepMode {
+        match mode {
+            GuidanceMode::Dual { .. } => StepMode::Dual,
+            _ => StepMode::Single,
+        }
+    }
+
+    /// Analytic unit cost (UNet evaluations) — the pre-table currency.
+    pub fn unit_evals(self) -> usize {
+        match self {
+            StepMode::Dual => 2,
+            StepMode::Single => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StepMode::Dual => "dual",
+            StepMode::Single => "single",
+        }
+    }
+}
+
+/// What an uncovered (batch, mode) key does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FallbackPolicy {
+    /// Price it at `unit_evals × analytic_unit_ms` and count the
+    /// fallback (the conservative default — degraded, never wrong-shaped).
+    Analytic,
+    /// Refuse to *attach* a table that cannot cover the model's batch
+    /// buckets. Coverage is validated up front
+    /// ([`CostTable::validate_covers`]) so the hot-path lookup stays
+    /// infallible.
+    Reject,
+}
+
+impl FallbackPolicy {
+    pub fn parse(s: &str) -> Result<FallbackPolicy> {
+        match s {
+            "analytic" => Ok(FallbackPolicy::Analytic),
+            "reject" => Ok(FallbackPolicy::Reject),
+            other => Err(Error::Config(format!(
+                "cost fallback {other:?} must be \"analytic\" or \"reject\""
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FallbackPolicy::Analytic => "analytic",
+            FallbackPolicy::Reject => "reject",
+        }
+    }
+}
+
+/// Measured per-step milliseconds for one (backend, preset, resolution),
+/// keyed by (batch bucket, [`StepMode`]).
+///
+/// Clones share the fallback counter (it is the table's observability,
+/// not its identity); equality ignores it for the same reason.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    backend: String,
+    preset: String,
+    /// Latent resolution the measurements bind to.
+    resolution: usize,
+    entries: BTreeMap<(usize, StepMode), f64>,
+    /// Price of one analytic UNet-eval unit — the fallback currency.
+    analytic_unit_ms: f64,
+    fallback: FallbackPolicy,
+    /// Uncovered-key lookups priced analytically. Never silent.
+    fallbacks: Arc<AtomicU64>,
+}
+
+impl PartialEq for CostTable {
+    fn eq(&self, other: &Self) -> bool {
+        self.backend == other.backend
+            && self.preset == other.preset
+            && self.resolution == other.resolution
+            && self.entries == other.entries
+            && self.analytic_unit_ms == other.analytic_unit_ms
+            && self.fallback == other.fallback
+    }
+}
+
+impl CostTable {
+    pub fn new(
+        backend: impl Into<String>,
+        preset: impl Into<String>,
+        resolution: usize,
+        analytic_unit_ms: f64,
+        fallback: FallbackPolicy,
+    ) -> Result<CostTable> {
+        if !analytic_unit_ms.is_finite() || analytic_unit_ms <= 0.0 {
+            return Err(Error::Config(format!(
+                "analytic_unit_ms {analytic_unit_ms} must be finite and > 0"
+            )));
+        }
+        Ok(CostTable {
+            backend: backend.into(),
+            preset: preset.into(),
+            resolution,
+            entries: BTreeMap::new(),
+            analytic_unit_ms,
+            fallback,
+            fallbacks: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// A table whose prices are *exactly* proportional to analytic units
+    /// (`dual = 2 × unit_ms`, `single = 1 × unit_ms` at every bucket) —
+    /// pricing with it is a pure relabeling of unit cost, which is what
+    /// the equivalence suites attach to prove ms-pricing preserves every
+    /// scheduling decision bit-exactly.
+    pub fn proportional(unit_ms: f64, batches: &[usize]) -> CostTable {
+        let mut t = CostTable::new("analytic", "analytic", 0, unit_ms, FallbackPolicy::Analytic)
+            .expect("proportional unit_ms must be finite and > 0");
+        for &b in batches {
+            t.insert(b, StepMode::Dual, 2.0 * unit_ms).unwrap();
+            t.insert(b, StepMode::Single, unit_ms).unwrap();
+        }
+        t
+    }
+
+    pub fn insert(&mut self, batch: usize, mode: StepMode, ms: f64) -> Result<()> {
+        if batch == 0 {
+            return Err(Error::Config("cost table batch bucket must be >= 1".into()));
+        }
+        if !ms.is_finite() || ms <= 0.0 {
+            return Err(Error::Config(format!(
+                "cost table entry (batch {batch}, {}) = {ms} must be finite and > 0",
+                mode.name()
+            )));
+        }
+        self.entries.insert((batch, mode), ms);
+        Ok(())
+    }
+
+    pub fn backend(&self) -> &str {
+        &self.backend
+    }
+
+    pub fn preset(&self) -> &str {
+        &self.preset
+    }
+
+    pub fn resolution(&self) -> usize {
+        self.resolution
+    }
+
+    pub fn analytic_unit_ms(&self) -> f64 {
+        self.analytic_unit_ms
+    }
+
+    pub fn fallback(&self) -> FallbackPolicy {
+        self.fallback
+    }
+
+    /// Distinct calibrated batch buckets, ascending.
+    pub fn batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.entries.keys().map(|&(b, _)| b).collect();
+        v.dedup();
+        v
+    }
+
+    /// Uncovered-key lookups so far (shared across clones).
+    pub fn fallback_count(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Resolve the measured value for (batch, mode) without touching the
+    /// fallback counter: exact bucket, else linear interpolation between
+    /// the bracketing calibrated buckets, else `None`.
+    fn resolve(&self, batch: usize, mode: StepMode) -> Option<f64> {
+        if let Some(&ms) = self.entries.get(&(batch, mode)) {
+            return Some(ms);
+        }
+        let mut lower: Option<(usize, f64)> = None;
+        let mut upper: Option<(usize, f64)> = None;
+        for (&(b, m), &ms) in &self.entries {
+            if m != mode {
+                continue;
+            }
+            if b < batch {
+                lower = Some((b, ms));
+            } else if upper.is_none() {
+                upper = Some((b, ms));
+            }
+        }
+        let ((b0, m0), (b1, m1)) = (lower?, upper?);
+        // deterministic linear interpolation between the bracketing
+        // buckets — bounded by them, monotone when the table is
+        let t = (batch - b0) as f64 / (b1 - b0) as f64;
+        Some(m0 + (m1 - m0) * t)
+    }
+
+    /// Is (batch, mode) covered without analytic fallback?
+    pub fn covers(&self, batch: usize, mode: StepMode) -> bool {
+        self.resolve(batch, mode).is_some()
+    }
+
+    /// `FallbackPolicy::Reject` tables must prove coverage of every
+    /// bucket the runtime can ask for **before** they are attached, so
+    /// the hot-path lookup never needs to fail.
+    pub fn validate_covers(&self, batches: &[usize]) -> Result<()> {
+        if self.fallback != FallbackPolicy::Reject {
+            return Ok(());
+        }
+        for &b in batches {
+            for mode in [StepMode::Dual, StepMode::Single] {
+                if !self.covers(b, mode) {
+                    return Err(Error::Config(format!(
+                        "cost table ({}/{}) does not cover batch {b} {} and \
+                         fallback = reject — recalibrate with a wider grid or \
+                         use fallback = analytic",
+                        self.backend,
+                        self.preset,
+                        mode.name()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Measured milliseconds of one denoising step of a batch-`batch`
+    /// cohort in `mode`. Uncovered keys price analytically and count
+    /// ([`Self::fallback_count`]).
+    pub fn step_ms(&self, batch: usize, mode: StepMode) -> f64 {
+        match self.resolve(batch, mode) {
+            Some(ms) => ms,
+            None => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                mode.unit_evals() as f64 * self.analytic_unit_ms
+            }
+        }
+    }
+
+    /// Per-sample price of one step in `mode` — the scheduling currency
+    /// ([`crate::guidance::GuidancePlan::cost_ms`] sums it, the
+    /// continuous batcher admits against it).
+    pub fn sample_step_ms(&self, mode: StepMode) -> f64 {
+        self.step_ms(1, mode)
+    }
+
+    /// The measured shed ratio: the fraction of a dual step's time a
+    /// single step saves, `1 − single_ms/dual_ms`. The analytic model
+    /// fixes this at exactly 0.5 (one of two equal UNet passes); the QoS
+    /// deadline math takes it as a parameter so measured pricing is a
+    /// drop-in relabeling.
+    pub fn shed_ratio(&self) -> f64 {
+        let dual = self.sample_step_ms(StepMode::Dual);
+        let single = self.sample_step_ms(StepMode::Single);
+        if dual <= 0.0 {
+            return 0.5;
+        }
+        (1.0 - single / dual).clamp(0.0, 1.0)
+    }
+
+    /// Measured-over-analytic price ratio of a batch-1 dual step — the
+    /// `sg_cost_model_ratio` gauge, i.e. how far reality has drifted
+    /// from the unit model (1.0 = the unit model was right).
+    pub fn model_ratio(&self) -> f64 {
+        self.sample_step_ms(StepMode::Dual) / (2.0 * self.analytic_unit_ms)
+    }
+}
+
+/// One calibrated grid row of a [`CostManifest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostRow {
+    pub batch: usize,
+    pub dual_ms: f64,
+    pub single_ms: f64,
+}
+
+/// The checksummed calibration artifact: everything needed to rebuild a
+/// [`CostTable`] plus the provenance (`tool_version`, backend, model
+/// fingerprint, grid shape) a replica validates before trusting it.
+///
+/// Sealed with FNV-1a over the canonical JSON serialization minus the
+/// `checksum` field; [`CostManifest::from_json`] recomputes and compares,
+/// so a one-byte tamper fails with a typed [`Error::Artifact`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostManifest {
+    pub version: i64,
+    /// Crate version of the calibrator that produced the table.
+    pub tool_version: String,
+    pub backend: String,
+    pub preset: String,
+    /// FNV-1a fingerprint of the model shape (16 hex digits) — see
+    /// `runtime::Manifest::model_fingerprint`.
+    pub model_fingerprint: String,
+    pub resolution: usize,
+    /// Calibrated batch buckets, ascending.
+    pub grid: Vec<usize>,
+    /// Timing samples per grid point (median-of-N after outlier
+    /// rejection).
+    pub samples: usize,
+    /// Leading evaluations discarded per grid point.
+    pub warmup: usize,
+    pub analytic_unit_ms: f64,
+    pub rows: Vec<CostRow>,
+    /// FNV-1a (16 hex digits) over the canonical JSON minus this field.
+    pub checksum: String,
+}
+
+impl CostManifest {
+    /// Build and seal a manifest (computes the checksum).
+    #[allow(clippy::too_many_arguments)]
+    pub fn seal(
+        tool_version: impl Into<String>,
+        backend: impl Into<String>,
+        preset: impl Into<String>,
+        model_fingerprint: impl Into<String>,
+        resolution: usize,
+        samples: usize,
+        warmup: usize,
+        analytic_unit_ms: f64,
+        rows: Vec<CostRow>,
+    ) -> CostManifest {
+        let mut m = CostManifest {
+            version: COST_MANIFEST_VERSION,
+            tool_version: tool_version.into(),
+            backend: backend.into(),
+            preset: preset.into(),
+            model_fingerprint: model_fingerprint.into(),
+            resolution,
+            grid: rows.iter().map(|r| r.batch).collect(),
+            samples,
+            warmup,
+            analytic_unit_ms,
+            rows,
+            checksum: String::new(),
+        };
+        m.checksum = m.compute_checksum();
+        m
+    }
+
+    /// The canonical payload — everything but the seal.
+    fn payload_json(&self) -> Value {
+        Value::obj()
+            .with("cost_manifest_version", self.version)
+            .with("tool_version", self.tool_version.as_str())
+            .with("backend", self.backend.as_str())
+            .with("preset", self.preset.as_str())
+            .with("model_fingerprint", self.model_fingerprint.as_str())
+            .with("resolution", self.resolution)
+            .with("grid", self.grid.clone())
+            .with("samples", self.samples)
+            .with("warmup", self.warmup)
+            .with("analytic_unit_ms", self.analytic_unit_ms)
+            .with(
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Value::obj()
+                                .with("batch", r.batch)
+                                .with("dual_ms", r.dual_ms)
+                                .with("single_ms", r.single_ms)
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    fn compute_checksum(&self) -> String {
+        fnv1a_hex(self.payload_json().to_string().as_bytes())
+    }
+
+    pub fn to_json(&self) -> Value {
+        self.payload_json().with("checksum", self.checksum.as_str())
+    }
+
+    /// Parse + verify. Version gates first (an unknown shape cannot be
+    /// checksummed meaningfully), then the seal, then field validity.
+    pub fn from_json(v: &Value) -> Result<CostManifest> {
+        let version = v.get("cost_manifest_version").and_then(Value::as_i64).unwrap_or(0);
+        if version != COST_MANIFEST_VERSION {
+            return Err(Error::Artifact(format!(
+                "cost manifest version {version} unsupported (want {COST_MANIFEST_VERSION})"
+            )));
+        }
+        let req_str = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(String::from)
+                .ok_or_else(|| Error::Artifact(format!("cost manifest missing {key}")))
+        };
+        let req_usize = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| Error::Artifact(format!("cost manifest missing {key}")))
+        };
+        let rows_json = v
+            .get("rows")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Artifact("cost manifest missing rows".into()))?;
+        let mut rows = Vec::with_capacity(rows_json.len());
+        for r in rows_json {
+            let ms = |key: &str| -> Result<f64> {
+                r.get(key)
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| Error::Artifact(format!("cost manifest row missing {key}")))
+            };
+            rows.push(CostRow {
+                batch: r
+                    .get("batch")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| Error::Artifact("cost manifest row missing batch".into()))?,
+                dual_ms: ms("dual_ms")?,
+                single_ms: ms("single_ms")?,
+            });
+        }
+        let grid = v
+            .get("grid")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Artifact("cost manifest missing grid".into()))?
+            .iter()
+            .map(|b| {
+                b.as_usize().ok_or_else(|| Error::Artifact("cost manifest bad grid entry".into()))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let m = CostManifest {
+            version,
+            tool_version: req_str("tool_version")?,
+            backend: req_str("backend")?,
+            preset: req_str("preset")?,
+            model_fingerprint: req_str("model_fingerprint")?,
+            resolution: req_usize("resolution")?,
+            grid,
+            samples: req_usize("samples")?,
+            warmup: req_usize("warmup")?,
+            analytic_unit_ms: v
+                .get("analytic_unit_ms")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| Error::Artifact("cost manifest missing analytic_unit_ms".into()))?,
+            rows,
+            checksum: req_str("checksum")?,
+        };
+        let computed = m.compute_checksum();
+        if computed != m.checksum {
+            return Err(Error::Artifact(format!(
+                "cost manifest checksum mismatch: file says {}, content hashes to {computed} \
+                 — the table was tampered with or hand-edited; recalibrate instead",
+                m.checksum
+            )));
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<CostManifest> {
+        Self::from_json(&json::from_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| Error::io(format!("writing {}", path.display()), e))
+    }
+
+    /// Rebuild the runtime [`CostTable`] this manifest carries.
+    pub fn table(&self, fallback: FallbackPolicy) -> Result<CostTable> {
+        let mut t = CostTable::new(
+            self.backend.clone(),
+            self.preset.clone(),
+            self.resolution,
+            self.analytic_unit_ms,
+            fallback,
+        )?;
+        for r in &self.rows {
+            t.insert(r.batch, StepMode::Dual, r.dual_ms)?;
+            t.insert(r.batch, StepMode::Single, r.single_ms)?;
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> CostTable {
+        let mut t =
+            CostTable::new("synthetic", "t", 8, 0.5, FallbackPolicy::Analytic).unwrap();
+        t.insert(1, StepMode::Dual, 1.0).unwrap();
+        t.insert(1, StepMode::Single, 0.6).unwrap();
+        t.insert(4, StepMode::Dual, 2.2).unwrap();
+        t.insert(4, StepMode::Single, 1.2).unwrap();
+        t
+    }
+
+    #[test]
+    fn exact_buckets_win() {
+        let t = table();
+        assert_eq!(t.step_ms(1, StepMode::Dual), 1.0);
+        assert_eq!(t.step_ms(4, StepMode::Single), 1.2);
+        assert_eq!(t.fallback_count(), 0);
+    }
+
+    #[test]
+    fn interpolation_between_brackets() {
+        let t = table();
+        // batch 2 sits 1/3 of the way from bucket 1 to bucket 4
+        let d = t.step_ms(2, StepMode::Dual);
+        assert!((d - (1.0 + (2.2 - 1.0) / 3.0)).abs() < 1e-12, "{d}");
+        assert!(d > 1.0 && d < 2.2, "bounded by brackets: {d}");
+        assert_eq!(t.fallback_count(), 0);
+    }
+
+    #[test]
+    fn out_of_range_falls_back_and_counts() {
+        let t = table();
+        // batch 8 is past the calibrated range: analytic price, counted
+        assert_eq!(t.step_ms(8, StepMode::Dual), 2.0 * 0.5);
+        assert_eq!(t.step_ms(8, StepMode::Single), 0.5);
+        assert_eq!(t.fallback_count(), 2);
+        // clones share the counter — observability, not identity
+        let clone = t.clone();
+        clone.step_ms(16, StepMode::Dual);
+        assert_eq!(t.fallback_count(), 3);
+        assert_eq!(t, clone);
+    }
+
+    #[test]
+    fn reject_policy_demands_coverage_up_front() {
+        let mut t = CostTable::new("synthetic", "t", 8, 0.5, FallbackPolicy::Reject).unwrap();
+        t.insert(1, StepMode::Dual, 1.0).unwrap();
+        t.insert(1, StepMode::Single, 0.6).unwrap();
+        assert!(t.validate_covers(&[1]).is_ok());
+        let err = t.validate_covers(&[1, 2]).unwrap_err();
+        assert!(err.to_string().contains("fallback = reject"), "{err}");
+        // analytic tables never refuse
+        let a = table();
+        assert!(a.validate_covers(&[1, 2, 4, 999]).is_ok());
+    }
+
+    #[test]
+    fn proportional_table_is_a_pure_relabeling() {
+        let t = CostTable::proportional(0.7, &[1, 2, 4]);
+        for b in [1, 2, 3, 4] {
+            assert_eq!(t.step_ms(b, StepMode::Dual), 1.4);
+            assert_eq!(t.step_ms(b, StepMode::Single), 0.7);
+        }
+        assert_eq!(t.fallback_count(), 0);
+        assert_eq!(t.shed_ratio(), 0.5);
+        assert_eq!(t.model_ratio(), 1.0);
+    }
+
+    #[test]
+    fn manifest_round_trips_bit_exact() {
+        let m = CostManifest::seal(
+            "0.2.0",
+            "synthetic",
+            "t",
+            "00000000deadbeef",
+            8,
+            9,
+            3,
+            0.123456789012345,
+            vec![
+                CostRow { batch: 1, dual_ms: 1.0000000001, single_ms: 0.6 },
+                CostRow { batch: 4, dual_ms: 2.2, single_ms: 1.2 },
+            ],
+        );
+        let text = m.to_json().to_string();
+        let back = CostManifest::from_json(&json::from_str(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.to_json().to_string(), text, "canonical serialization");
+        let t = back.table(FallbackPolicy::Analytic).unwrap();
+        assert_eq!(t.step_ms(1, StepMode::Dual), 1.0000000001);
+    }
+
+    #[test]
+    fn tampered_manifest_rejected_with_typed_error() {
+        let m = CostManifest::seal(
+            "0.2.0",
+            "synthetic",
+            "t",
+            "00000000deadbeef",
+            8,
+            9,
+            3,
+            0.5,
+            vec![CostRow { batch: 1, dual_ms: 1.5, single_ms: 0.75 }],
+        );
+        let text = m.to_json().to_string();
+        // one-byte tamper: make the dual step look cheaper
+        let tampered = text.replace("\"dual_ms\":1.5", "\"dual_ms\":1.4");
+        assert_ne!(text, tampered);
+        let err = CostManifest::from_json(&json::from_str(&tampered).unwrap()).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err:?}");
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn version_gate_before_checksum() {
+        let m = CostManifest::seal("0.2.0", "s", "t", "0", 8, 9, 3, 0.5, vec![]);
+        let text = m.to_json().to_string().replace(
+            "\"cost_manifest_version\":1",
+            "\"cost_manifest_version\":9",
+        );
+        let err = CostManifest::from_json(&json::from_str(&text).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("version 9 unsupported"), "{err}");
+    }
+
+    #[test]
+    fn step_mode_collapse() {
+        use crate::guidance::ReuseKind;
+        assert_eq!(StepMode::of(&GuidanceMode::Dual { scale: 7.5 }), StepMode::Dual);
+        assert_eq!(StepMode::of(&GuidanceMode::CondOnly), StepMode::Single);
+        assert_eq!(
+            StepMode::of(&GuidanceMode::Reuse { scale: 7.5, kind: ReuseKind::Hold }),
+            StepMode::Single
+        );
+        assert_eq!(StepMode::of(&GuidanceMode::Unguided), StepMode::Single);
+        assert_eq!(StepMode::Dual.unit_evals(), 2);
+        assert_eq!(StepMode::Single.unit_evals(), 1);
+    }
+}

@@ -22,10 +22,14 @@
 //!   a cached / extrapolated unconditional eps (guidance reuse);
 //! * [`CostModel`] — the analytic saving model the benches validate
 //!   against (saving ≈ f/2 of UNet time, §3.3);
+//! * [`CostTable`] / [`CostManifest`] — the *measured* cost model:
+//!   calibrated per-step milliseconds every scheduling layer prices
+//!   plans in, sealed in a checksummed manifest (DESIGN.md §15);
 //! * [`retuned_scale`] / [`GsTuner`] — the §3.4 guidance-scale retuning.
 
 mod adaptive;
 mod cost;
+mod cost_table;
 mod gs_tuning;
 mod plan;
 mod policy;
@@ -34,6 +38,10 @@ mod window;
 
 pub use adaptive::{guidance_delta, AdaptiveController, AdaptiveDecision};
 pub use cost::CostModel;
+pub use cost_table::{
+    CostManifest, CostRow, CostTable, FallbackPolicy, StepMode, COST_MANIFEST_VERSION,
+};
+pub(crate) use cost_table::fnv1a_hex as cost_table_fingerprint;
 pub use gs_tuning::{retuned_scale, GsTuner};
 pub use plan::{GuidancePlan, GuidanceSchedule, Segment, SegmentMode, StepPlan};
 pub use policy::{GuidanceMode, SelectiveGuidancePolicy};

@@ -476,6 +476,43 @@ impl GuidancePlan {
         self.steps.iter().skip(from).map(|s| s.cost()).max().unwrap_or(0)
     }
 
+    /// Measured milliseconds of step `i` under a calibrated table
+    /// (0.0 past the end) — the priced sibling of [`Self::next_cost`].
+    pub fn next_cost_ms(&self, i: usize, table: &super::CostTable) -> f64 {
+        self.steps
+            .get(i)
+            .map(|s| table.sample_step_ms(super::StepMode::of(&s.mode)))
+            .unwrap_or(0.0)
+    }
+
+    /// Measured milliseconds of the whole plan — the priced sibling of
+    /// [`Self::total_unet_evals`]. Under a proportional table this is
+    /// exactly `total_unet_evals × unit_ms` (pricing is a relabeling).
+    pub fn cost_ms(&self, table: &super::CostTable) -> f64 {
+        self.remaining_cost_ms(0, table)
+    }
+
+    /// Measured milliseconds of steps `from..` — the priced sibling of
+    /// [`Self::remaining_cost`].
+    pub fn remaining_cost_ms(&self, from: usize, table: &super::CostTable) -> f64 {
+        self.steps
+            .iter()
+            .skip(from)
+            .map(|s| table.sample_step_ms(super::StepMode::of(&s.mode)))
+            .sum()
+    }
+
+    /// Largest per-step milliseconds any step `from..` can incur — the
+    /// priced admission currency of the continuous batcher's `budget_ms`
+    /// mode (sibling of [`Self::peak_remaining_cost`]).
+    pub fn peak_remaining_cost_ms(&self, from: usize, table: &super::CostTable) -> f64 {
+        self.steps
+            .iter()
+            .skip(from)
+            .map(|s| table.sample_step_ms(super::StepMode::of(&s.mode)))
+            .fold(0.0, f64::max)
+    }
+
     /// Steps that run a single UNet pass.
     pub fn single_pass_steps(&self) -> usize {
         self.steps.iter().filter(|s| s.cost() == 1).count()
@@ -531,6 +568,13 @@ impl GuidancePlan {
         } else {
             out
         }
+    }
+
+    /// [`Self::summary`] plus the plan's measured price, e.g.
+    /// `"40D 10C ≈ 812ms"` — what operator surfaces print once a cost
+    /// table is attached.
+    pub fn priced_summary(&self, table: &super::CostTable) -> String {
+        format!("{} ≈ {:.0}ms", self.summary(), self.cost_ms(table))
     }
 }
 
@@ -931,5 +975,41 @@ mod tests {
             assert!(evals >= n && evals <= 2 * n, "{evals} outside [{n}, {}]", 2 * n);
             assert_eq!(evals, 2 * n - sched.optimized_count(n));
         });
+    }
+
+    #[test]
+    fn priced_views_relabel_unit_costs_under_proportional_table() {
+        use crate::guidance::CostTable;
+        forall("priced plan == unit plan × unit_ms", 100, |g| {
+            let n = g.usize_in(1, 120);
+            // dyadic units keep every partial sum exact in f64, so the
+            // relabeling claim can be asserted with == rather than ≈
+            let unit_ms = [0.25, 0.5, 1.0, 2.0, 4.0][g.usize_in(0, 4)];
+            let table = CostTable::proportional(unit_ms, &[1, 2, 4]);
+            let sched = GuidanceSchedule::Window(WindowSpec::last(g.f64_in(0.0, 1.0)));
+            let plan =
+                GuidancePlan::compile(&sched, 7.5, GuidanceStrategy::CondOnly, n).unwrap();
+            assert_eq!(plan.cost_ms(&table), plan.total_unet_evals() as f64 * unit_ms);
+            let from = g.usize_in(0, n);
+            assert_eq!(
+                plan.remaining_cost_ms(from, &table),
+                plan.remaining_cost(from) as f64 * unit_ms
+            );
+            assert_eq!(
+                plan.peak_remaining_cost_ms(from, &table),
+                plan.peak_remaining_cost(from) as f64 * unit_ms
+            );
+            assert_eq!(plan.next_cost_ms(from, &table), plan.next_cost(from) as f64 * unit_ms);
+            assert_eq!(table.fallback_count(), 0, "proportional grid fully covers");
+        });
+    }
+
+    #[test]
+    fn priced_summary_appends_the_price() {
+        let table = crate::guidance::CostTable::proportional(10.0, &[1]);
+        let sched = GuidanceSchedule::Window(WindowSpec::last(0.2));
+        let plan = GuidancePlan::compile(&sched, 7.5, GuidanceStrategy::CondOnly, 50).unwrap();
+        // 40 dual (800ms) + 10 cond-only (100ms)
+        assert_eq!(plan.priced_summary(&table), "40D 10C ≈ 900ms");
     }
 }

@@ -26,6 +26,10 @@
 //!           [--deadline-ms 0] [--adaptive] [--adaptive-threshold ...]
 //!           [--request-cache] [--dedup] [--preview-every 0]
 //!           [--metrics-addr 127.0.0.1:9090] [--no-telemetry]
+//!           [--cost-table cost_table.json]
+//! sgd-serve calibrate [--artifacts artifacts/tiny] [--synthetic]
+//!           [--grid 1,2,4] [--samples 9] [--warmup 3] [--fast]
+//!           [--out cost_table.json]
 //! sgd-serve info     [--artifacts artifacts/tiny]
 //! ```
 //!
@@ -58,6 +62,16 @@
 //! Prometheus scrape endpoint; `--no-telemetry` (or `[telemetry]
 //! enabled = false`) opts out entirely.
 //!
+//! `calibrate` microbenchmarks the loaded runtime over its compiled
+//! batch buckets (warmup discard, outlier-rejected median-of-N) and
+//! writes a sealed, checksummed cost manifest (DESIGN.md §15);
+//! `--synthetic` measures the in-crate synthetic backend (the CI shape),
+//! `--fast` uses the cheap smoke grid. `serve --cost-table path` (or a
+//! `[cost]` config section) loads such a manifest — validated against
+//! the running backend + model fingerprint — and every scheduling layer
+//! (continuous admission, QoS deadlines, cluster routing) prices steps
+//! in measured milliseconds instead of analytic UNet-eval units.
+//!
 //! `--replicas N` (or a `[cluster]` config section) runs a replica set
 //! instead of a single coordinator (DESIGN.md §11): each replica is its
 //! own coordinator shaped by the `[server]` keys (overridable per
@@ -72,15 +86,16 @@ use std::sync::Arc;
 
 use selective_guidance::cli::Cli;
 use selective_guidance::cluster::{ClusterConfig, ReplicaSet, ReplicaSpec, RoutePolicy};
-use selective_guidance::config::{EngineConfig, RunConfig};
+use selective_guidance::config::{CostConfig, EngineConfig, RunConfig};
 use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
 use selective_guidance::engine::{Engine, GenerationRequest};
 use selective_guidance::error::{Error, Result};
 use selective_guidance::guidance::{
-    AdaptiveConfig, GuidanceSchedule, GuidanceStrategy, WindowPosition,
+    AdaptiveConfig, CostManifest, CostTable, GuidanceSchedule, GuidanceStrategy, StepMode,
+    WindowPosition,
 };
 use selective_guidance::qos::DeadlineQos;
-use selective_guidance::runtime::ModelStack;
+use selective_guidance::runtime::{calibrate, CalibrationConfig, ModelStack};
 use selective_guidance::scheduler::SchedulerKind;
 use selective_guidance::server::{GuidanceDefaults, MetricsScrape, Server};
 use selective_guidance::telemetry::CoordSink;
@@ -97,10 +112,11 @@ fn run() -> Result<()> {
     match cli.command.as_deref() {
         Some("generate") => cmd_generate(&cli),
         Some("serve") => cmd_serve(&cli),
+        Some("calibrate") => cmd_calibrate(&cli),
         Some("info") => cmd_info(&cli),
         Some(other) => Err(Error::Config(format!("unknown command {other:?}"))),
         None => {
-            eprintln!("usage: sgd-serve <generate|serve|info> [options]");
+            eprintln!("usage: sgd-serve <generate|serve|calibrate|info> [options]");
             Ok(())
         }
     }
@@ -375,6 +391,23 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     }
     run_cfg.cache.validate()?;
 
+    // cost overrides: --cost-table points the [cost] section at a sealed
+    // manifest (flags win over the config file's table_path)
+    if cli.flag("cost-table") {
+        return Err(Error::Config("--cost-table needs a value".into()));
+    }
+    if let Some(path) = cli.opt("cost-table") {
+        if run_cfg.cost.calibrate_on_start {
+            return Err(Error::Config(
+                "--cost-table conflicts with [cost] calibrate_on_start — \
+                 configure exactly one table source"
+                    .into(),
+            ));
+        }
+        run_cfg.cost.table_path = Some(path.to_string());
+    }
+    run_cfg.cost.validate()?;
+
     // telemetry overrides: --no-telemetry opts out, --metrics-addr
     // opens (or re-binds) the Prometheus scrape endpoint
     if cli.flag("metrics-addr") {
@@ -467,9 +500,6 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     if let Some(cfg) = cluster_cfg.as_mut() {
         cfg.cache = run_cfg.cache.clone();
     }
-    if let Some(cfg) = &cluster_cfg {
-        cfg.validate()?;
-    }
     if run_cfg.cache.enabled() {
         println!(
             "cache: request_cache={} (capacity {}), dedup={}, shared_uncond={}",
@@ -487,7 +517,53 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         .unwrap_or_else(|| artifacts_dir(cli));
     eprintln!("loading artifacts from {dir} ...");
     let stack = Arc::new(ModelStack::load(&dir)?);
-    let engine = Arc::new(Engine::new(stack, run_cfg.engine.clone()));
+
+    // measured-cost plan model (DESIGN.md §15): resolve the [cost]
+    // section against the loaded runtime (the manifest binds to backend
+    // + model fingerprint), then inject the table into whichever
+    // scheduling plane this deployment runs
+    let cost_table = cost_table_from(&run_cfg.cost, &stack)?;
+    if let Some(t) = &cost_table {
+        if run_cfg.cost.budget_ms > 0.0 {
+            let dual = t.sample_step_ms(StepMode::Dual);
+            if run_cfg.cost.budget_ms < dual {
+                return Err(Error::Config(format!(
+                    "cost budget_ms {} cannot admit even one dual-guidance sample \
+                     (measured {dual:.3} ms) — raise the budget or recalibrate",
+                    run_cfg.cost.budget_ms
+                )));
+            }
+        }
+        println!(
+            "cost: measured table ({} / {}, buckets {:?}, fallback {}), model ratio \
+             {:.2}, shed ratio {:.2}",
+            t.backend(),
+            t.preset(),
+            t.batches(),
+            t.fallback().name(),
+            t.model_ratio(),
+            t.shed_ratio(),
+        );
+        if run_cfg.cost.budget_ms > 0.0 {
+            println!(
+                "cost: continuous admission budget {} ms per iteration",
+                run_cfg.cost.budget_ms
+            );
+        }
+    }
+    if let Some(cfg) = cluster_cfg.as_mut() {
+        if let Some(t) = &cost_table {
+            // one fleet-shared table: replica weights, job pricing and
+            // the ms admission tier all read the same measurements
+            cfg.cost_tables = vec![Arc::clone(t)];
+            cfg.cost_budget_ms = run_cfg.cost.budget_ms;
+        }
+    }
+    if let Some(cfg) = &cluster_cfg {
+        cfg.validate()?;
+    }
+
+    let engine = Arc::new(Engine::new(Arc::clone(&stack), run_cfg.engine.clone()));
     if run_cfg.qos.enabled {
         println!(
             "qos: enabled (max queue {}, quality floor {:.0}%, default deadline {} ms)",
@@ -553,6 +629,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 workers: run_cfg.server.workers,
                 batch_wait: std::time::Duration::from_millis(run_cfg.server.batch_wait_ms),
                 cache: run_cfg.cache.clone(),
+                cost_table: cost_table.clone(),
+                cost_budget_ms: run_cfg.cost.budget_ms,
             };
             match run_cfg.server.mode {
                 BatchMode::Continuous => println!(
@@ -597,6 +675,101 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             .map_err(|e| Error::io(format!("writing {path}"), e))?;
         println!("wrote trace spans to {path}");
     }
+    Ok(())
+}
+
+/// Resolve the `[cost]` section against the loaded runtime: load (or
+/// calibrate) the sealed manifest, refuse a backend / model-fingerprint
+/// mismatch, build the table and prove it covers the scheduling
+/// currency. `None` = no cost source configured, every layer keeps
+/// pricing in analytic units.
+fn cost_table_from(cost: &CostConfig, stack: &ModelStack) -> Result<Option<Arc<CostTable>>> {
+    if !cost.enabled() {
+        return Ok(None);
+    }
+    let manifest = match &cost.table_path {
+        Some(path) => {
+            let m = CostManifest::load(Path::new(path))?;
+            stack.validate_cost_manifest(&m)?;
+            println!("cost: loaded sealed manifest {path} (checksum {})", m.checksum);
+            m
+        }
+        None => {
+            eprintln!("cost: calibrating loaded runtime (fast grid) ...");
+            calibrate(stack, &CalibrationConfig::fast())?
+        }
+    };
+    let table = manifest.table(cost.fallback)?;
+    // reject-policy tables must cover every compiled bucket up front
+    table.validate_covers(&stack.model().batch_sizes)?;
+    // regardless of policy, the per-sample scheduling currency (batch-1
+    // dual/single) must be measured — a table that can only price it
+    // analytically would fall back on every admission decision
+    for mode in [StepMode::Dual, StepMode::Single] {
+        if !table.covers(1, mode) {
+            return Err(Error::Config(format!(
+                "cost table does not cover batch 1 {} — the per-sample scheduling \
+                 currency must be measured; recalibrate with 1 in the grid",
+                mode.name()
+            )));
+        }
+    }
+    Ok(Some(Arc::new(table)))
+}
+
+/// `sgd-serve calibrate`: microbench the loaded runtime into a sealed
+/// cost manifest (DESIGN.md §15). `--synthetic` measures the in-crate
+/// synthetic backend (the CI smoke shape); `--fast` is the cheap
+/// median-of-3 grid; `--grid 1,2,4` restricts the batch buckets.
+fn cmd_calibrate(cli: &Cli) -> Result<()> {
+    for key in ["grid", "samples", "warmup", "out"] {
+        if cli.flag(key) {
+            return Err(Error::Config(format!("--{key} needs a value")));
+        }
+    }
+    let mut cfg =
+        if cli.flag("fast") { CalibrationConfig::fast() } else { CalibrationConfig::default() };
+    if let Some(list) = cli.opt("grid") {
+        let mut grid = Vec::new();
+        for part in list.split(',') {
+            grid.push(
+                part.trim()
+                    .parse()
+                    .map_err(|_| Error::Config(format!("--grid: cannot parse {part:?}")))?,
+            );
+        }
+        cfg.grid = grid;
+    }
+    cfg.samples = cli.opt_or("samples", cfg.samples)?;
+    cfg.warmup = cli.opt_or("warmup", cfg.warmup)?;
+
+    let stack = if cli.flag("synthetic") {
+        ModelStack::synthetic()
+    } else {
+        let dir = artifacts_dir(cli);
+        eprintln!("loading artifacts from {dir} ...");
+        ModelStack::load(&dir)?
+    };
+    let manifest = calibrate(&stack, &cfg)?;
+    println!(
+        "calibrated {} / {} (resolution {}, {} samples, {} warmup per point):",
+        manifest.backend, manifest.preset, manifest.resolution, manifest.samples, manifest.warmup,
+    );
+    for r in &manifest.rows {
+        println!(
+            "  batch {:>3}: dual {:.4} ms, single {:.4} ms  (ratio {:.2})",
+            r.batch,
+            r.dual_ms,
+            r.single_ms,
+            r.dual_ms / r.single_ms,
+        );
+    }
+    let out = cli.opt("out").unwrap_or("cost_table.json");
+    manifest.save(Path::new(out))?;
+    println!(
+        "wrote sealed cost manifest to {out} (model fingerprint {}, checksum {})",
+        manifest.model_fingerprint, manifest.checksum,
+    );
     Ok(())
 }
 

@@ -10,7 +10,7 @@
 use std::time::{Duration, Instant};
 
 use super::feedback::LoadSnapshot;
-use super::{service_ms_at, QosConfig, QosMeta};
+use super::{service_ms_at_shed, QosConfig, QosMeta};
 
 /// Why a request was shed at admission.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -74,12 +74,16 @@ impl AdmissionController {
     /// is the widest selective-guidance window this request can actually
     /// run at — the quality floor for widenable requests, the request's
     /// own fixed fraction for explicit non-`Last` placements the policy
-    /// refuses to move.
+    /// refuses to move. `shed_ratio` is the fraction of a dual step's
+    /// time a single step saves: the analytic 0.5, or a calibrated
+    /// table's measured value ([`crate::guidance::CostTable::shed_ratio`],
+    /// DESIGN.md §15).
     pub fn decide(
         &self,
         meta: &QosMeta,
         load: &LoadSnapshot,
         achievable_fraction: f64,
+        shed_ratio: f64,
     ) -> AdmissionDecision {
         let limit = self.class_limit(meta);
         if load.queue_depth >= limit {
@@ -96,7 +100,12 @@ impl AdmissionController {
             // estimator.
             if load.service_ms > 0.0 {
                 let best_ms = load.est_wait_ms
-                    + service_ms_at(load.service_ms, self.cfg.unet_share, achievable_fraction);
+                    + service_ms_at_shed(
+                        load.service_ms,
+                        self.cfg.unet_share,
+                        achievable_fraction,
+                        shed_ratio,
+                    );
                 let deadline_ms = deadline.as_secs_f64() * 1e3;
                 if best_ms > deadline_ms {
                     return AdmissionDecision::Reject(RejectReason::DeadlineInfeasible {
@@ -151,8 +160,8 @@ mod tests {
     fn accepts_when_idle() {
         let a = AdmissionController::new(cfg());
         let meta = QosMeta::default();
-        assert_eq!(a.decide(&meta, &load(0, 0.0), FLOOR), AdmissionDecision::Admit);
-        assert_eq!(a.decide(&meta, &load(0, 100.0), FLOOR), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&meta, &load(0, 0.0), FLOOR, 0.5), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&meta, &load(0, 100.0), FLOOR, 0.5), AdmissionDecision::Admit);
     }
 
     #[test]
@@ -161,9 +170,9 @@ mod tests {
         // standard: 75% of 8 -> limit 6
         let meta = QosMeta::default();
         assert_eq!(a.class_limit(&meta), 6);
-        assert_eq!(a.decide(&meta, &load(5, 100.0), FLOOR), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&meta, &load(5, 100.0), FLOOR, 0.5), AdmissionDecision::Admit);
         assert!(matches!(
-            a.decide(&meta, &load(6, 100.0), FLOOR),
+            a.decide(&meta, &load(6, 100.0), FLOOR, 0.5),
             AdmissionDecision::Reject(RejectReason::QueueFull { depth: 6, limit: 6 })
         ));
     }
@@ -178,9 +187,9 @@ mod tests {
         assert_eq!(a.class_limit(&standard), 6);
         assert_eq!(a.class_limit(&interactive), 8);
         // at depth 5, batch bounces but standard and interactive enter
-        assert!(matches!(a.decide(&batch, &load(5, 100.0), FLOOR), AdmissionDecision::Reject(_)));
-        assert_eq!(a.decide(&standard, &load(5, 100.0), FLOOR), AdmissionDecision::Admit);
-        assert_eq!(a.decide(&interactive, &load(5, 100.0), FLOOR), AdmissionDecision::Admit);
+        assert!(matches!(a.decide(&batch, &load(5, 100.0), FLOOR, 0.5), AdmissionDecision::Reject(_)));
+        assert_eq!(a.decide(&standard, &load(5, 100.0), FLOOR, 0.5), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&interactive, &load(5, 100.0), FLOOR, 0.5), AdmissionDecision::Admit);
     }
 
     #[test]
@@ -188,7 +197,7 @@ mod tests {
         let tiny = AdmissionController::new(QosConfig { max_queue_depth: 1, ..cfg() });
         let batch = QosMeta { priority: Priority::Batch, ..QosMeta::default() };
         assert_eq!(tiny.class_limit(&batch), 1);
-        assert_eq!(tiny.decide(&batch, &load(0, 0.0), FLOOR), AdmissionDecision::Admit);
+        assert_eq!(tiny.decide(&batch, &load(0, 0.0), FLOOR, 0.5), AdmissionDecision::Admit);
     }
 
     #[test]
@@ -197,15 +206,15 @@ mod tests {
         // 3 queued x 100 ms wait + >=76 ms best-case service > 200 ms deadline
         let meta = QosMeta::with_deadline_ms(200.0);
         assert!(matches!(
-            a.decide(&meta, &load(3, 100.0), FLOOR),
+            a.decide(&meta, &load(3, 100.0), FLOOR, 0.5),
             AdmissionDecision::Reject(RejectReason::DeadlineInfeasible { .. })
         ));
         // generous deadline admits
         let meta = QosMeta::with_deadline_ms(5000.0);
-        assert_eq!(a.decide(&meta, &load(3, 100.0), FLOOR), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&meta, &load(3, 100.0), FLOOR, 0.5), AdmissionDecision::Admit);
         // cold start (no estimate) admits: nothing to extrapolate from
         let meta = QosMeta::with_deadline_ms(1.0);
-        assert_eq!(a.decide(&meta, &load(3, 0.0), FLOOR), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&meta, &load(3, 0.0), FLOOR, 0.5), AdmissionDecision::Admit);
     }
 
     #[test]
@@ -215,12 +224,31 @@ mod tests {
         let a = AdmissionController::new(cfg());
         let meta = QosMeta::with_deadline_ms(80.0);
         // widenable at the floor: ~76 ms best case fits the 80 ms budget
-        assert_eq!(a.decide(&meta, &load(0, 100.0), FLOOR), AdmissionDecision::Admit);
+        assert_eq!(a.decide(&meta, &load(0, 100.0), FLOOR, 0.5), AdmissionDecision::Admit);
         // pinned at 10%: ~95 ms best case cannot fit -> shed early
         assert!(matches!(
-            a.decide(&meta, &load(0, 100.0), 0.1),
+            a.decide(&meta, &load(0, 100.0), 0.1, 0.5),
             AdmissionDecision::Reject(RejectReason::DeadlineInfeasible { .. })
         ));
+    }
+
+    #[test]
+    fn measured_shed_ratio_changes_feasibility() {
+        let a = AdmissionController::new(cfg());
+        // 100 ms base at the 0.5 floor, share 0.95: analytic (ratio 0.5)
+        // best case ≈ 76.25 ms — fits an 80 ms deadline
+        let meta = QosMeta::with_deadline_ms(80.0);
+        assert_eq!(a.decide(&meta, &load(0, 100.0), FLOOR, 0.5), AdmissionDecision::Admit);
+        // a backend whose single step saves almost nothing (measured
+        // ratio 0.1): best ≈ 95.25 ms — the same deadline is infeasible
+        assert!(matches!(
+            a.decide(&meta, &load(0, 100.0), FLOOR, 0.1),
+            AdmissionDecision::Reject(RejectReason::DeadlineInfeasible { .. })
+        ));
+        // a backend where the uncond pass dominates (ratio 0.7): best
+        // ≈ 66.75 ms — even a 70 ms deadline fits
+        let meta = QosMeta::with_deadline_ms(70.0);
+        assert_eq!(a.decide(&meta, &load(0, 100.0), FLOOR, 0.7), AdmissionDecision::Admit);
     }
 
     #[test]

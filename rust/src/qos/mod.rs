@@ -298,7 +298,18 @@ impl QosConfig {
 /// Predicted service time at a widened window, relative to the full-CFG
 /// time `base_ms`: the paper's §3.3 model, saving ≈ fraction·share/2.
 pub fn service_ms_at(base_ms: f64, unet_share: f64, fraction: f64) -> f64 {
-    base_ms * (1.0 - unet_share * fraction.clamp(0.0, 1.0) / 2.0)
+    service_ms_at_shed(base_ms, unet_share, fraction, 0.5)
+}
+
+/// [`service_ms_at`] with the shed ratio as a parameter: the analytic
+/// model prices a single step at exactly half a dual (ratio 0.5); a
+/// calibrated [`crate::guidance::CostTable`] supplies the *measured*
+/// ratio ([`crate::guidance::CostTable::shed_ratio`]) so deadline
+/// feasibility predicts in real milliseconds (DESIGN.md §15). A
+/// proportional table measures exactly 0.5, making measured pricing a
+/// bit-exact relabeling of the analytic path.
+pub fn service_ms_at_shed(base_ms: f64, unet_share: f64, fraction: f64, shed_ratio: f64) -> f64 {
+    base_ms * (1.0 - unet_share * fraction.clamp(0.0, 1.0) * shed_ratio.clamp(0.0, 1.0))
 }
 
 /// The pluggable QoS hook the coordinator consults ahead of the batcher.
@@ -342,6 +353,12 @@ pub trait QosPolicy: Send + Sync {
     /// per-class admit/reject counters, actuator-position gauge).
     /// Default: ignored, for policies that predate the telemetry layer.
     fn attach_telemetry(&self, _telemetry: &Arc<Telemetry>) {}
+
+    /// Wire a measured [`crate::guidance::CostTable`] into the policy
+    /// (DESIGN.md §15): deadline feasibility and feedback normalization
+    /// switch from the analytic shed ratio (0.5) to the table's measured
+    /// one. Default: ignored, for policies that price analytically.
+    fn attach_cost_table(&self, _table: Arc<crate::guidance::CostTable>) {}
 }
 
 /// The default policy: deadline-aware admission + load-driven window
@@ -353,6 +370,8 @@ pub struct DeadlineQos {
     estimator: ServiceEstimator,
     counters: QosCounters,
     telemetry: OnceLock<QosTelemetry>,
+    /// Measured cost table (DESIGN.md §15); absent = analytic pricing.
+    cost: OnceLock<Arc<crate::guidance::CostTable>>,
 }
 
 impl DeadlineQos {
@@ -364,6 +383,7 @@ impl DeadlineQos {
             estimator: ServiceEstimator::new(cfg.ewma_alpha),
             counters: QosCounters::new(),
             telemetry: OnceLock::new(),
+            cost: OnceLock::new(),
             cfg,
         })
     }
@@ -374,6 +394,14 @@ impl DeadlineQos {
 
     pub fn counters(&self) -> &QosCounters {
         &self.counters
+    }
+
+    /// The shed ratio every ms prediction uses: the attached table's
+    /// measured value, else the analytic 0.5 (one of two equal UNet
+    /// passes). A proportional table measures exactly 0.5, so attaching
+    /// one is a bit-exact relabeling of the analytic path.
+    pub fn shed_ratio(&self) -> f64 {
+        self.cost.get().map(|t| t.shed_ratio()).unwrap_or(0.5)
     }
 
     /// Current load view (exposed for tests and the simulator).
@@ -424,7 +452,7 @@ impl QosPolicy for DeadlineQos {
         } else {
             req.effective_shed()
         };
-        match self.admission.decide(meta, &load, achievable) {
+        match self.admission.decide(meta, &load, achievable, self.shed_ratio()) {
             AdmissionDecision::Reject(reason) => {
                 self.counters.inc_rejected();
                 if let Some(tm) = self.telemetry.get() {
@@ -452,11 +480,13 @@ impl QosPolicy for DeadlineQos {
     }
 
     fn observe_batch(&self, batch_size: usize, service: Duration, mean_fraction: f64) {
-        // normalize to the full-CFG baseline (inverse of service_ms_at):
-        // the EWMA must estimate un-widened service time, or feasibility
-        // would double-count the widening speedup
-        let denom = 1.0 - self.cfg.unet_share * mean_fraction.clamp(0.0, 1.0) / 2.0;
-        let baseline = Duration::from_secs_f64(service.as_secs_f64() / denom.max(0.5));
+        // normalize to the full-CFG baseline (inverse of service_ms_at,
+        // at the same shed ratio feasibility predicts with): the EWMA
+        // must estimate un-widened service time, or feasibility would
+        // double-count the widening speedup
+        let denom = 1.0
+            - self.cfg.unet_share * mean_fraction.clamp(0.0, 1.0) * self.shed_ratio();
+        let baseline = Duration::from_secs_f64(service.as_secs_f64() / denom.max(0.05));
         self.estimator.observe_batch(batch_size, baseline);
     }
 
@@ -477,6 +507,10 @@ impl QosPolicy for DeadlineQos {
 
     fn attach_telemetry(&self, telemetry: &Arc<Telemetry>) {
         let _ = self.telemetry.set(QosTelemetry::new(telemetry));
+    }
+
+    fn attach_cost_table(&self, table: Arc<crate::guidance::CostTable>) {
+        let _ = self.cost.set(table);
     }
 }
 
@@ -531,6 +565,35 @@ mod tests {
         assert_eq!(service_ms_at(100.0, 0.95, 0.0), 100.0);
         // clamped fraction
         assert!((service_ms_at(100.0, 1.0, 2.0) - 50.0).abs() < 1e-9);
+        // the parameterized form at the analytic ratio is the same model
+        assert_eq!(
+            service_ms_at_shed(100.0, 0.95, 0.3, 0.5),
+            service_ms_at(100.0, 0.95, 0.3)
+        );
+        // a measured ratio scales the saving linearly
+        assert!((service_ms_at_shed(100.0, 1.0, 0.5, 0.8) - 60.0).abs() < 1e-9);
+        assert!((service_ms_at_shed(100.0, 1.0, 0.5, 0.2) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_table_supplies_the_measured_shed_ratio() {
+        use crate::guidance::{CostTable, FallbackPolicy, StepMode};
+        let q = DeadlineQos::new(QosConfig { enabled: true, ..QosConfig::default() }).unwrap();
+        assert_eq!(q.shed_ratio(), 0.5, "analytic default");
+        // a proportional table measures exactly 0.5: attaching it is a
+        // bit-exact relabeling
+        q.attach_cost_table(Arc::new(CostTable::proportional(1.0, &[1])));
+        assert_eq!(q.shed_ratio(), 0.5);
+        // a skewed table reprices feasibility with its measured ratio
+        let q = DeadlineQos::new(QosConfig { enabled: true, ..QosConfig::default() }).unwrap();
+        let mut t = CostTable::new("s", "t", 8, 1.0, FallbackPolicy::Analytic).unwrap();
+        t.insert(1, StepMode::Dual, 30.0).unwrap();
+        t.insert(1, StepMode::Single, 10.0).unwrap();
+        q.attach_cost_table(Arc::new(t));
+        assert!((q.shed_ratio() - (1.0 - 10.0 / 30.0)).abs() < 1e-12);
+        // attach is write-once, mirroring attach_telemetry
+        q.attach_cost_table(Arc::new(CostTable::proportional(1.0, &[1])));
+        assert!((q.shed_ratio() - (1.0 - 10.0 / 30.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -226,6 +226,52 @@ impl Manifest {
             .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))
     }
 
+    /// FNV-1a fingerprint of the model *shape* (16 hex digits) — what a
+    /// calibrated [`crate::guidance::CostManifest`] binds to, so a
+    /// replica refuses a cost table measured against a different model
+    /// even when the preset name collides.
+    pub fn model_fingerprint(&self) -> String {
+        let m = &self.model;
+        let canonical = format!(
+            "{}|{}|{}|{}|{}|{}|{}|{:?}",
+            m.preset,
+            m.latent_channels,
+            m.latent_size,
+            m.image_size,
+            m.seq_len,
+            m.text_dim,
+            m.vocab_size,
+            m.batch_sizes
+        );
+        crate::guidance::cost_table_fingerprint(canonical.as_bytes())
+    }
+
+    /// Refuse a mismatched model/cost-table pair: the cost manifest must
+    /// have been calibrated against *this* model shape.
+    pub fn validate_cost_manifest(&self, cm: &crate::guidance::CostManifest) -> Result<()> {
+        if cm.preset != self.model.preset {
+            return Err(Error::Artifact(format!(
+                "cost manifest was calibrated for preset {:?} but the loaded model is {:?}",
+                cm.preset, self.model.preset
+            )));
+        }
+        let want = self.model_fingerprint();
+        if cm.model_fingerprint != want {
+            return Err(Error::Artifact(format!(
+                "cost manifest model fingerprint {} does not match the loaded model ({want}) \
+                 — the model shape changed since calibration; run `sgd-serve calibrate` again",
+                cm.model_fingerprint
+            )));
+        }
+        if cm.resolution != self.model.latent_size {
+            return Err(Error::Artifact(format!(
+                "cost manifest resolution {} does not match the model latent size {}",
+                cm.resolution, self.model.latent_size
+            )));
+        }
+        Ok(())
+    }
+
     /// Load a params blob (raw little-endian f32) for an artifact.
     pub fn load_params(&self, meta: &ArtifactMeta) -> Result<Option<Vec<f32>>> {
         let Some(file) = &meta.params_file else {
@@ -334,6 +380,49 @@ mod tests {
         // wrong size
         std::fs::write(dir.join("te.bin"), [0u8; 12]).unwrap();
         assert!(m.load_params(&te).is_err());
+    }
+
+    #[test]
+    fn cost_manifest_must_match_the_loaded_model() {
+        use crate::guidance::{CostManifest, CostRow};
+        let v = crate::json::from_str(&minimal_manifest_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &v).unwrap();
+        let fp = m.model_fingerprint();
+        assert_eq!(fp.len(), 16, "16 hex digits: {fp}");
+        let rows = vec![CostRow { batch: 1, dual_ms: 1.0, single_ms: 0.5 }];
+        let good =
+            CostManifest::seal("0.2.0", "synthetic", "t", fp.clone(), 8, 3, 1, 0.5, rows.clone());
+        m.validate_cost_manifest(&good).unwrap();
+        let wrong_preset =
+            CostManifest::seal("0.2.0", "synthetic", "u", fp.clone(), 8, 3, 1, 0.5, rows.clone());
+        let err = m.validate_cost_manifest(&wrong_preset).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)) && err.to_string().contains("preset"), "{err}");
+        let wrong_model = CostManifest::seal(
+            "0.2.0",
+            "synthetic",
+            "t",
+            "0000000000000000",
+            8,
+            3,
+            1,
+            0.5,
+            rows.clone(),
+        );
+        let err = m.validate_cost_manifest(&wrong_model).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        let wrong_res = CostManifest::seal("0.2.0", "synthetic", "t", fp, 16, 3, 1, 0.5, rows);
+        let err = m.validate_cost_manifest(&wrong_res).unwrap_err();
+        assert!(err.to_string().contains("resolution"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_the_model_shape() {
+        let v = crate::json::from_str(&minimal_manifest_json()).unwrap();
+        let a = Manifest::from_json(Path::new("/tmp/x"), &v).unwrap();
+        let changed = minimal_manifest_json().replace("\"latent_size\": 8", "\"latent_size\": 16");
+        let v = crate::json::from_str(&changed).unwrap();
+        let b = Manifest::from_json(Path::new("/tmp/x"), &v).unwrap();
+        assert_ne!(a.model_fingerprint(), b.model_fingerprint());
     }
 
     #[test]

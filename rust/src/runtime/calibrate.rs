@@ -1,0 +1,233 @@
+//! Runtime calibration: microbench the loaded [`ModelStack`] into a
+//! sealed [`CostManifest`] (DESIGN.md §15).
+//!
+//! The analytic cost model prices a dual step at exactly two singles.
+//! Reality disagrees per backend, per batch bucket and per resolution —
+//! so the calibrator *measures* the loaded runtime: for each batch
+//! bucket on the grid it times the dual-step shape (two UNet passes +
+//! the CFG combine) and the single-step shape (one UNet pass), with
+//! warmup discard, median-of-N and outlier rejection, and seals the
+//! result in a checksummed manifest bound to the backend + model
+//! fingerprint. CI calibrates the synthetic stack (`calibrate --fast`);
+//! a machine with the PJRT artifacts calibrates the real thing.
+//!
+//! Wall-clock enters the repo *only here*: the manifest is the boundary.
+//! Everything downstream (scheduling, routing, benches) consumes the
+//! table deterministically.
+
+use std::time::Instant;
+
+use super::ModelStack;
+use crate::error::{Error, Result};
+use crate::guidance::{CostManifest, CostRow};
+
+/// Grid + sampling knobs for one calibration pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationConfig {
+    /// Batch buckets to measure. Empty = every compiled batch size.
+    /// Buckets the runtime has no compiled executable for are rejected
+    /// (a table must never claim coverage it cannot serve).
+    pub grid: Vec<usize>,
+    /// Timed samples per (batch, mode) grid point; the reported value is
+    /// the outlier-rejected median. Must be odd so the median is a real
+    /// sample (keeps the manifest reproducible from its inputs).
+    pub samples: usize,
+    /// Leading evaluations discarded per grid point (cache warmup,
+    /// first-touch page faults).
+    pub warmup: usize,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig { grid: Vec::new(), samples: 9, warmup: 3 }
+    }
+}
+
+impl CalibrationConfig {
+    /// The CI smoke shape: still statistically honest (median of 3, one
+    /// warmup) but cheap enough to run on every push.
+    pub fn fast() -> Self {
+        CalibrationConfig { grid: Vec::new(), samples: 3, warmup: 1 }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.samples == 0 || self.samples % 2 == 0 {
+            return Err(Error::Config(format!(
+                "calibration samples {} must be odd and >= 1 (the median must be a \
+                 real sample)",
+                self.samples
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Median of a non-empty, sorted slice (odd lengths index the middle
+/// sample; even lengths — possible after outlier rejection — average
+/// the two middle samples).
+fn median(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+    }
+}
+
+/// Outlier-rejected median: sort, take the median, drop samples outside
+/// ±50% of it (scheduler preemptions, thermal events), re-median what
+/// survives. The median itself always survives its own band, so the
+/// result is well-defined.
+fn robust_median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let m = median(&xs);
+    let kept: Vec<f64> = xs.into_iter().filter(|x| *x >= m * 0.5 && *x <= m * 1.5).collect();
+    median(&kept)
+}
+
+/// Time one invocation of `f` in milliseconds.
+fn time_ms(f: &mut dyn FnMut() -> Result<()>) -> Result<f64> {
+    let t0 = Instant::now();
+    f()?;
+    Ok(t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Measure the loaded runtime over the grid and seal the result.
+///
+/// Per (batch, mode) grid point: `warmup` discarded invocations, then
+/// `samples` timed ones, reduced by [`robust_median`]. The dual shape is
+/// two UNet passes + the CFG combine (what a guided step executes); the
+/// single shape is one UNet pass (cond-only — reuse adds a combine, but
+/// that is noise next to a UNet pass and the table keys on the
+/// UNet-count shape). `analytic_unit_ms` — the fallback price of one
+/// eval unit — is the measured batch-1 single.
+pub fn calibrate(stack: &ModelStack, cfg: &CalibrationConfig) -> Result<CostManifest> {
+    cfg.validate()?;
+    let model = stack.model();
+    let compiled = &model.batch_sizes;
+    let mut grid: Vec<usize> = if cfg.grid.is_empty() { compiled.clone() } else { cfg.grid.clone() };
+    grid.sort_unstable();
+    grid.dedup();
+    for &b in &grid {
+        if !compiled.contains(&b) {
+            return Err(Error::Config(format!(
+                "calibration grid batch {b} has no compiled executable \
+                 (available: {compiled:?})"
+            )));
+        }
+    }
+
+    let ctx1 = stack.uncond_ctx()?;
+    let mut rows = Vec::with_capacity(grid.len());
+    for &b in &grid {
+        let latents = vec![0.1f32; b * model.latent_elems()];
+        let ts = vec![500.0f32; b];
+        let ctx: Vec<f32> = ctx1.iter().copied().cycle().take(b * model.ctx_elems()).collect();
+
+        let mut dual = || -> Result<()> {
+            let eps_u = stack.unet_eps(b, &latents, &ts, &ctx)?;
+            let eps_c = stack.unet_eps(b, &latents, &ts, &ctx)?;
+            stack.cfg_combine(b, &eps_u, &eps_c, 7.5)?;
+            Ok(())
+        };
+        let mut single = || -> Result<()> {
+            stack.unet_eps(b, &latents, &ts, &ctx)?;
+            Ok(())
+        };
+
+        let measure = |f: &mut dyn FnMut() -> Result<()>| -> Result<f64> {
+            for _ in 0..cfg.warmup {
+                f()?;
+            }
+            let mut samples = Vec::with_capacity(cfg.samples);
+            for _ in 0..cfg.samples {
+                samples.push(time_ms(f)?);
+            }
+            // floor: the synthetic stack can run a step in < 1 µs; a
+            // zero-priced entry would be rejected by the table builder
+            Ok(robust_median(samples).max(1e-6))
+        };
+        rows.push(CostRow {
+            batch: b,
+            dual_ms: measure(&mut dual)?,
+            single_ms: measure(&mut single)?,
+        });
+    }
+
+    let unit_ms = rows
+        .iter()
+        .find(|r| r.batch == 1)
+        .map(|r| r.single_ms)
+        // grids without batch 1 still need a fallback unit: pro-rate the
+        // smallest measured bucket
+        .unwrap_or_else(|| rows[0].single_ms / rows[0].batch as f64);
+    Ok(CostManifest::seal(
+        env!("CARGO_PKG_VERSION"),
+        stack.backend_name(),
+        model.preset.clone(),
+        stack.manifest().model_fingerprint(),
+        model.latent_size,
+        cfg.samples,
+        cfg.warmup,
+        unit_ms,
+        rows,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::guidance::{FallbackPolicy, StepMode};
+
+    #[test]
+    fn robust_median_rejects_outliers() {
+        // a 100x scheduler hiccup must not drag the median band
+        let m = robust_median(vec![1.0, 1.1, 0.9, 1.05, 100.0]);
+        assert!((0.9..=1.1).contains(&m), "{m}");
+        // symmetric small set
+        assert_eq!(robust_median(vec![2.0]), 2.0);
+        assert_eq!(robust_median(vec![1.0, 1.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn calibrate_synthetic_stack_covers_its_buckets() {
+        let stack = ModelStack::synthetic();
+        let m = calibrate(&stack, &CalibrationConfig::fast()).unwrap();
+        assert_eq!(m.backend, "synthetic");
+        assert_eq!(m.preset, "synthetic");
+        assert_eq!(m.grid, vec![1, 2, 4]);
+        assert_eq!(m.model_fingerprint, stack.manifest().model_fingerprint());
+        for r in &m.rows {
+            assert!(r.dual_ms > 0.0 && r.single_ms > 0.0, "{r:?}");
+        }
+        // the sealed manifest validates against the stack it measured
+        stack.validate_cost_manifest(&m).unwrap();
+        // a reject-policy table built from it covers every compiled bucket
+        let t = m.table(FallbackPolicy::Reject).unwrap();
+        t.validate_covers(&stack.model().batch_sizes).unwrap();
+        for &b in &stack.model().batch_sizes {
+            assert!(t.step_ms(b, StepMode::Dual) > 0.0);
+        }
+        assert_eq!(t.fallback_count(), 0);
+    }
+
+    #[test]
+    fn grid_outside_compiled_buckets_rejected() {
+        let stack = ModelStack::synthetic();
+        let cfg = CalibrationConfig { grid: vec![1, 8], ..CalibrationConfig::default() };
+        let err = calibrate(&stack, &cfg).unwrap_err();
+        assert!(err.to_string().contains("no compiled executable"), "{err}");
+        // even samples are a config error, not a skewed median
+        let cfg = CalibrationConfig { samples: 4, ..CalibrationConfig::default() };
+        assert!(calibrate(&stack, &cfg).is_err());
+    }
+
+    #[test]
+    fn backend_mismatch_refused() {
+        let stack = ModelStack::synthetic();
+        let mut m = calibrate(&stack, &CalibrationConfig::fast()).unwrap();
+        m.backend = "pjrt".into();
+        let err = stack.validate_cost_manifest(&m).unwrap_err();
+        assert!(err.to_string().contains("backend"), "{err}");
+    }
+}

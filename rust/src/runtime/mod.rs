@@ -13,9 +13,11 @@
 //! use when the artifacts (and the native toolchain) are absent.
 
 mod artifacts;
+mod calibrate;
 mod synthetic;
 
 pub use artifacts::{ArtifactMeta, DType, Manifest, ModelMeta, TensorSpec};
+pub use calibrate::{calibrate, CalibrationConfig};
 pub use synthetic::SyntheticModel;
 
 use std::collections::BTreeMap;
@@ -179,6 +181,31 @@ impl ModelStack {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Which execution backend serves this stack (a calibrated cost
+    /// table binds to it: synthetic milliseconds say nothing about PJRT).
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Pjrt { .. } => "pjrt",
+            Backend::Synthetic(_) => "synthetic",
+        }
+    }
+
+    /// Refuse a mismatched model/cost-table pair: backend first (the
+    /// cheap check with the clearest message), then the model binding
+    /// (preset, shape fingerprint, resolution — see
+    /// [`Manifest::validate_cost_manifest`]).
+    pub fn validate_cost_manifest(&self, cm: &crate::guidance::CostManifest) -> Result<()> {
+        if cm.backend != self.backend_name() {
+            return Err(Error::Artifact(format!(
+                "cost manifest was calibrated on the {:?} backend but this replica runs {:?} \
+                 — run `sgd-serve calibrate` against this runtime",
+                cm.backend,
+                self.backend_name()
+            )));
+        }
+        self.manifest.validate_cost_manifest(cm)
     }
 
     /// Batch sizes with compiled UNet executables, descending.

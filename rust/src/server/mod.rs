@@ -149,6 +149,15 @@ impl Backend {
                     .with("latency_ms_mean", s.latency_ms_mean)
                     .with("latency_ms_p50", s.latency_ms_p50)
                     .with("latency_ms_p90", s.latency_ms_p90)
+                    .with(
+                        "cost",
+                        Value::obj()
+                            .with("priced", s.cost_model_ratio > 0.0)
+                            .with("budget_ms", s.cost_budget_ms)
+                            .with("fallbacks", s.cost_fallbacks as i64)
+                            .with("model_ratio", s.cost_model_ratio)
+                            .with("shed_ratio", s.cost_shed_ratio),
+                    )
             }
             Backend::Cluster(set) => {
                 let s = set.stats();
@@ -162,6 +171,7 @@ impl Backend {
                             .with("routed", r.routed as i64)
                             .with("outstanding_evals", r.outstanding_evals as i64)
                             .with("capacity_weight", r.capacity_weight)
+                            .with("route_weight", r.route_weight)
                             .with("mode", r.coordinator.mode.name())
                             .with("slot_budget", r.coordinator.slot_budget as i64)
                             .with("completed", r.coordinator.completed as i64)
@@ -199,6 +209,12 @@ impl Backend {
                     .with("latency_ms_mean", s.latency_ms_mean)
                     .with("latency_ms_p50", s.latency_ms_p50)
                     .with("latency_ms_p90", s.latency_ms_p90)
+                    .with(
+                        "cost",
+                        Value::obj()
+                            .with("priced", s.cost_priced)
+                            .with("fallbacks", s.cost_fallbacks as i64),
+                    )
                     .with("replicas", Value::Arr(replicas))
             }
         }

@@ -38,8 +38,10 @@ pub use clock::Clock;
 pub use registry::{Counter, Gauge, Histogram, MetricKind, Registry, LE_BOUNDS_MS};
 pub use trace::{Span, SpanEvent, TraceEvent, TraceId, TraceStore};
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::guidance::{CostTable, StepMode};
 use crate::metrics::StepBreakdown;
 
 /// Default trace ring capacity (spans kept for `{"op":"trace"}`).
@@ -321,6 +323,9 @@ pub struct CoordSink {
     dedup_joins: Counter,
     queue_depth: Gauge,
     latency_ms: Histogram,
+    /// Measured-cost bundle, attached when the coordinator runs with a
+    /// calibrated table (DESIGN.md §15).
+    cost: Option<CostMetrics>,
     scope: String,
 }
 
@@ -357,9 +362,16 @@ impl CoordSink {
                 "End-to-end request latency (milliseconds)",
                 &l,
             ),
+            cost: None,
             scope: scope.to_string(),
             t: Arc::clone(t),
         }
+    }
+
+    /// Install the measured-cost bundle: retired plans are priced into
+    /// the `sg_step_cost_ms` histograms against this table.
+    pub fn attach_cost(&mut self, table: Arc<CostTable>) {
+        self.cost = Some(CostMetrics::new(&self.t, table));
     }
 
     pub fn telemetry(&self) -> &Arc<Telemetry> {
@@ -468,6 +480,9 @@ impl CoordSink {
         }
         self.retired.inc();
         self.latency_ms.observe_ms(latency_ms);
+        if let Some(c) = &self.cost {
+            c.on_plan(plan_summary);
+        }
         if trace.is_some() {
             for ev in plan_exec_events(plan_summary) {
                 self.t.event(trace, ev);
@@ -514,6 +529,95 @@ impl CoordSink {
         if self.owns_terminal {
             self.t.event(trace, TraceEvent::Cancelled);
         }
+    }
+}
+
+/// Measured-cost telemetry (DESIGN.md §15): per-step measured price by
+/// (mode, resolution), fallback-pricing events, and the measured-vs-
+/// analytic model ratio. Attached to a [`CoordSink`] when the
+/// coordinator runs with a calibrated [`CostTable`]: every retired
+/// plan's segments are priced into `sg_step_cost_ms` (one observation
+/// per step, at the table's batch-1 price), and the table's internal
+/// fallback counter is mirrored as the monotone Prometheus counter
+/// `sg_cost_fallback_total`.
+pub struct CostMetrics {
+    enabled: bool,
+    table: Arc<CostTable>,
+    dual_ms: Histogram,
+    single_ms: Histogram,
+    fallbacks: Counter,
+    model_ratio: Gauge,
+    /// Last table fallback count mirrored into the registry (the
+    /// registry counter is add-only, so we track the delta source).
+    seen_fallbacks: AtomicU64,
+}
+
+impl CostMetrics {
+    pub fn new(t: &Arc<Telemetry>, table: Arc<CostTable>) -> CostMetrics {
+        let r = t.registry();
+        let res = table.resolution().to_string();
+        let m = CostMetrics {
+            enabled: t.is_enabled(),
+            dual_ms: r.histogram(
+                "sg_step_cost_ms",
+                "Measured per-step cost (milliseconds)",
+                &[("mode", "dual"), ("resolution", res.as_str())],
+            ),
+            single_ms: r.histogram(
+                "sg_step_cost_ms",
+                "Measured per-step cost (milliseconds)",
+                &[("mode", "single"), ("resolution", res.as_str())],
+            ),
+            fallbacks: r.counter(
+                "sg_cost_fallback_total",
+                "Step pricings that fell back to the analytic unit",
+                &[],
+            ),
+            model_ratio: r.gauge(
+                "sg_cost_model_ratio",
+                "Measured batch-1 dual-step cost over the analytic 2-unit price",
+                &[],
+            ),
+            table,
+            seen_fallbacks: AtomicU64::new(0),
+        };
+        m.refresh();
+        m
+    }
+
+    /// Price a retired plan's segments into the step-cost histograms.
+    /// `plan_summary` is the [`crate::guidance::GuidancePlan::summary`]
+    /// run-length format; `D` segments price at the dual rate, every
+    /// other mode runs a single UNet pass.
+    pub fn on_plan(&self, plan_summary: &str) {
+        if !self.enabled {
+            return;
+        }
+        for ev in plan_exec_events(plan_summary) {
+            if let TraceEvent::PlanExec { mode, steps, .. } = ev {
+                let (h, price) = if mode == 'D' {
+                    (&self.dual_ms, self.table.sample_step_ms(StepMode::Dual))
+                } else {
+                    (&self.single_ms, self.table.sample_step_ms(StepMode::Single))
+                };
+                for _ in 0..steps {
+                    h.observe_ms(price);
+                }
+            }
+        }
+        self.refresh();
+    }
+
+    /// Mirror the table's fallback counter (as a monotone delta) and the
+    /// model-ratio gauge into the registry.
+    pub fn refresh(&self) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.table.fallback_count();
+        let prev = self.seen_fallbacks.swap(now, Ordering::Relaxed);
+        self.fallbacks.add(now.saturating_sub(prev));
+        self.model_ratio.set(self.table.model_ratio());
     }
 }
 
@@ -818,6 +922,30 @@ mod tests {
         let span = t.traces().span(trace.unwrap()).unwrap();
         assert_eq!(span.terminal_events(), 0, "replica sinks must not close spans");
         assert!(span.has("plan_exec"));
+    }
+
+    #[test]
+    fn cost_metrics_price_retired_plans() {
+        let t = Telemetry::with_clock(16, Clock::manual());
+        let mut sink = CoordSink::new(&t, "single", true);
+        let table = Arc::new(CostTable::proportional(2.5, &[1]));
+        sink.attach_cost(Arc::clone(&table));
+        sink.on_retired(None, "4D 6C", 20.0);
+        let text = t.render_prometheus();
+        // 4 dual steps at 5 ms, 6 single steps at 2.5 ms
+        assert!(
+            text.contains("sg_step_cost_ms_count{mode=\"dual\",resolution=\"0\"} 4"),
+            "{text}"
+        );
+        assert!(text.contains("sg_step_cost_ms_count{mode=\"single\",resolution=\"0\"} 6"));
+        assert!(text.contains("sg_cost_fallback_total 0"));
+        // a proportional table measures exactly the analytic model
+        assert!(text.contains("sg_cost_model_ratio 1"));
+        // a pricing miss on the table surfaces at the next refresh
+        let _ = table.step_ms(64, StepMode::Dual);
+        sink.on_retired(None, "1D", 1.0);
+        let text = t.render_prometheus();
+        assert!(text.contains("sg_cost_fallback_total 1"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Measured-cost plan-model property suite (synthetic backend — always
+//! runs; seeded by `PROP_MASTER_SEED` like every prop suite).
+//!
+//! The ISSUE-9 properties:
+//!
+//! (a) [`CostTable`] interpolation is bounded by its bracketing
+//!     calibrated buckets and monotone in batch size when the table is;
+//! (b) a sealed [`CostManifest`] serialize→load round-trips bit-exact,
+//!     and any post-seal tamper — one byte in a string field, one
+//!     nudged price — fails the checksum with a typed
+//!     [`Error::Artifact`];
+//! (c) uncovered (batch, mode) lookups price analytically and are
+//!     *counted*, never silent; `fallback = reject` refuses the gap up
+//!     front;
+//! (d) pricing with a proportional table is a pure relabeling of unit
+//!     cost: every priced plan view equals its unit counterpart × the
+//!     unit price, and a continuous batcher with the equivalent
+//!     millisecond budget makes bit-identical admission/retire/output
+//!     decisions to the slot-budget batcher on the same stream.
+
+use std::sync::Arc;
+
+use selective_guidance::config::EngineConfig;
+use selective_guidance::coordinator::ContinuousBatcher;
+use selective_guidance::engine::{Engine, GenerationRequest};
+use selective_guidance::error::Error;
+use selective_guidance::guidance::{
+    CostManifest, CostRow, CostTable, FallbackPolicy, GuidancePlan, GuidanceSchedule,
+    GuidanceStrategy, ReuseKind, Segment, StepMode, WindowSpec,
+};
+use selective_guidance::json;
+use selective_guidance::runtime::ModelStack;
+use selective_guidance::scheduler::SchedulerKind;
+use selective_guidance::testutil::prop::{forall, Gen};
+
+fn random_strategy(g: &mut Gen) -> GuidanceStrategy {
+    match g.usize_in(0, 2) {
+        0 => GuidanceStrategy::CondOnly,
+        1 => GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: g.usize_in(0, 5) },
+        _ => GuidanceStrategy::Reuse {
+            kind: ReuseKind::Extrapolate,
+            refresh_every: g.usize_in(0, 5),
+        },
+    }
+}
+
+fn random_schedule(g: &mut Gen) -> GuidanceSchedule {
+    match g.usize_in(0, 3) {
+        0 => GuidanceSchedule::Window(WindowSpec::last(g.f64_in(0.0, 1.0))),
+        1 => {
+            let lo = g.f64_in(0.0, 1.0);
+            GuidanceSchedule::Interval { lo, hi: g.f64_in(lo, 1.0) }
+        }
+        2 => GuidanceSchedule::Cadence { every: g.usize_in(1, 8) },
+        _ => {
+            let lo = g.f64_in(0.0, 1.0);
+            let hi = g.f64_in(lo, 1.0);
+            GuidanceSchedule::Segments(vec![if g.bool() {
+                Segment::optimized(lo, hi)
+            } else {
+                Segment::dual(lo, hi)
+            }])
+        }
+    }
+}
+
+/// A table whose per-mode prices strictly increase with the batch
+/// bucket (how real calibrations come out), plus its bucket list.
+fn random_monotone_table(g: &mut Gen) -> (CostTable, Vec<usize>) {
+    let mut buckets = Vec::new();
+    let mut b = g.usize_in(1, 4);
+    for _ in 0..g.usize_in(2, 5) {
+        buckets.push(b);
+        b += g.usize_in(1, 8);
+    }
+    let mut t = CostTable::new(
+        "synthetic",
+        "prop",
+        8,
+        g.f64_in(0.1, 2.0),
+        FallbackPolicy::Analytic,
+    )
+    .unwrap();
+    let mut dual = g.f64_in(0.5, 2.0);
+    let mut single = dual * g.f64_in(0.4, 0.9);
+    for &bk in &buckets {
+        t.insert(bk, StepMode::Dual, dual).unwrap();
+        t.insert(bk, StepMode::Single, single).unwrap();
+        dual += g.f64_in(0.01, 3.0);
+        single += g.f64_in(0.01, 3.0);
+    }
+    (t, buckets)
+}
+
+fn random_manifest(g: &mut Gen) -> CostManifest {
+    let mut rows = Vec::new();
+    let mut b = g.usize_in(1, 3);
+    for _ in 0..g.usize_in(1, 4) {
+        rows.push(CostRow {
+            batch: b,
+            dual_ms: g.f64_in(0.05, 40.0),
+            single_ms: g.f64_in(0.05, 40.0),
+        });
+        b += g.usize_in(1, 6);
+    }
+    CostManifest::seal(
+        g.word(6),
+        g.word(6),
+        g.word(6),
+        g.word(16),
+        g.usize_in(1, 128),
+        g.usize_in(1, 9),
+        g.usize_in(0, 4),
+        g.f64_in(0.05, 5.0),
+        rows,
+    )
+}
+
+#[test]
+fn interpolation_bounded_by_brackets_and_monotone() {
+    forall("interpolation bounds", 300, |g| {
+        let (t, buckets) = random_monotone_table(g);
+        for mode in [StepMode::Dual, StepMode::Single] {
+            // bounded: a batch between two calibrated buckets prices
+            // inside [lower bucket, upper bucket]
+            for w in buckets.windows(2) {
+                let (lo_b, hi_b) = (w[0], w[1]);
+                let (lo_ms, hi_ms) = (t.step_ms(lo_b, mode), t.step_ms(hi_b, mode));
+                let probe = g.usize_in(lo_b, hi_b);
+                let v = t.step_ms(probe, mode);
+                assert!(
+                    v >= lo_ms - 1e-12 && v <= hi_ms + 1e-12,
+                    "{mode:?} batch {probe} priced {v} outside [{lo_ms}, {hi_ms}]"
+                );
+            }
+            // monotone in batch across the whole calibrated range
+            let (first, last) = (buckets[0], *buckets.last().unwrap());
+            let mut prev = t.step_ms(first, mode);
+            for b in first..=last {
+                let v = t.step_ms(b, mode);
+                assert!(v + 1e-12 >= prev, "{mode:?} not monotone at batch {b}: {v} < {prev}");
+                prev = v;
+            }
+        }
+        assert_eq!(t.fallback_count(), 0, "in-range lookups must never fall back");
+    });
+}
+
+#[test]
+fn manifest_round_trips_bit_exact() {
+    forall("manifest round trip", 200, |g| {
+        let m = random_manifest(g);
+        let text = m.to_json().to_string();
+        let back = CostManifest::from_json(&json::from_str(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.to_json().to_string(), text, "canonical serialization");
+        // the rebuilt table reproduces every sealed price exactly
+        let t = back.table(FallbackPolicy::Analytic).unwrap();
+        for r in &m.rows {
+            assert_eq!(t.step_ms(r.batch, StepMode::Dual), r.dual_ms);
+            assert_eq!(t.step_ms(r.batch, StepMode::Single), r.single_ms);
+        }
+        assert_eq!(t.fallback_count(), 0);
+    });
+}
+
+#[test]
+fn any_post_seal_tamper_fails_the_checksum() {
+    forall("manifest tamper", 200, |g| {
+        let m = random_manifest(g);
+        let mut bad = m.clone();
+        match g.usize_in(0, 4) {
+            0 => bad.backend.push('x'), // one extra byte in a string field
+            1 => bad.preset.push('y'),
+            2 => bad.resolution += 1,
+            3 => bad.analytic_unit_ms += 0.5,
+            _ => {
+                let i = g.usize_in(0, bad.rows.len() - 1);
+                bad.rows[i].dual_ms += 0.25; // make a dual step look cheaper/dearer
+            }
+        }
+        let text = bad.to_json().to_string();
+        assert_ne!(text, m.to_json().to_string(), "the tamper must change the payload");
+        let err = CostManifest::from_json(&json::from_str(&text).unwrap()).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err:?}");
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    });
+}
+
+#[test]
+fn uncovered_keys_fall_back_analytically_and_count() {
+    forall("fallback counting", 200, |g| {
+        let unit = g.f64_in(0.1, 2.0);
+        let lo = g.usize_in(3, 6);
+        let hi = lo + g.usize_in(1, 6);
+        let mut t = CostTable::new("synthetic", "prop", 8, unit, FallbackPolicy::Analytic).unwrap();
+        for &b in &[lo, hi] {
+            t.insert(b, StepMode::Dual, g.f64_in(0.5, 5.0)).unwrap();
+            t.insert(b, StepMode::Single, g.f64_in(0.5, 5.0)).unwrap();
+        }
+        // below the calibrated range: analytic price, counted, per lookup
+        let below = g.usize_in(1, lo - 1);
+        assert!(!t.covers(below, StepMode::Dual));
+        assert_eq!(t.step_ms(below, StepMode::Dual), 2.0 * unit);
+        assert_eq!(t.step_ms(below, StepMode::Single), unit);
+        assert_eq!(t.fallback_count(), 2);
+        // above it too
+        let above = hi + g.usize_in(1, 10);
+        assert!(!t.covers(above, StepMode::Single));
+        assert_eq!(t.step_ms(above, StepMode::Single), unit);
+        assert_eq!(t.fallback_count(), 3);
+        // inside, nothing counts
+        t.step_ms(lo, StepMode::Dual);
+        t.step_ms(g.usize_in(lo, hi), StepMode::Single);
+        assert_eq!(t.fallback_count(), 3);
+        // a reject-policy table refuses the same gap before attach
+        let mut r = CostTable::new("synthetic", "prop", 8, unit, FallbackPolicy::Reject).unwrap();
+        r.insert(lo, StepMode::Dual, 1.0).unwrap();
+        r.insert(lo, StepMode::Single, 0.5).unwrap();
+        assert!(r.validate_covers(&[below]).is_err());
+        assert!(r.validate_covers(&[lo]).is_ok());
+    });
+}
+
+#[test]
+fn proportional_pricing_relabels_every_plan_view() {
+    forall("priced views relabel unit cost", 300, |g| {
+        // dyadic unit prices make every f64 sum exact, so the equalities
+        // below are bit-exact, not approximate
+        let unit = *g.choose(&[0.25, 0.5, 1.0, 2.0]);
+        let table = CostTable::proportional(unit, &[1, 2, 4]);
+        let n = g.usize_in(0, 60);
+        let scale = if g.bool() { g.f32_in(1.5, 12.0) } else { 1.0 };
+        let plan =
+            GuidancePlan::compile(&random_schedule(g), scale, random_strategy(g), n).unwrap();
+        assert_eq!(plan.cost_ms(&table), plan.total_unet_evals() as f64 * unit);
+        for from in [0, n / 3, n] {
+            assert_eq!(
+                plan.remaining_cost_ms(from, &table),
+                plan.remaining_cost(from) as f64 * unit
+            );
+            assert_eq!(
+                plan.peak_remaining_cost_ms(from, &table),
+                plan.peak_remaining_cost(from) as f64 * unit
+            );
+        }
+        let per_step: f64 = (0..n).map(|i| plan.next_cost_ms(i, &table)).sum();
+        assert_eq!(per_step, plan.cost_ms(&table), "per-step prices must sum to the whole");
+        assert_eq!(table.fallback_count(), 0);
+    });
+}
+
+#[test]
+fn ms_budget_preserves_batcher_decisions_bit_exact() {
+    let engine = Arc::new(Engine::new(
+        Arc::new(ModelStack::synthetic()),
+        EngineConfig::default(),
+    ));
+    forall("ms admission == slot admission", 12, |g| {
+        let budget = g.usize_in(2, 6);
+        let unit = *g.choose(&[0.25, 0.5, 1.0, 2.0]);
+        let table = Arc::new(CostTable::proportional(unit, &[1, 2, 4]));
+        let mut slots = ContinuousBatcher::new(Arc::clone(&engine), budget).unwrap();
+        let mut priced = ContinuousBatcher::new(Arc::clone(&engine), budget)
+            .unwrap()
+            .with_ms_budget(budget as f64 * unit, Arc::clone(&table))
+            .unwrap();
+        let reqs: Vec<GenerationRequest> = (0..g.usize_in(3, 8))
+            .map(|i| {
+                GenerationRequest::new(format!("cost probe {i} {}", g.word(6)))
+                    .steps(g.usize_in(2, 6))
+                    .scheduler(SchedulerKind::Ddim)
+                    .seed(g.u64())
+                    .with_schedule(random_schedule(g))
+                    .strategy(random_strategy(g))
+                    .decode(false)
+            })
+            .collect();
+
+        // drive both batchers in lockstep over the identical stream: the
+        // ms tier must never flip an admission the slot budget made
+        let (mut next_a, mut next_b) = (0usize, 0usize);
+        let mut retired_a = Vec::new();
+        let mut retired_b = Vec::new();
+        let mut guard = 0;
+        while retired_a.len() < reqs.len() {
+            while next_a < reqs.len() {
+                match slots.try_admit(&reqs[next_a]).unwrap() {
+                    Some(_) => next_a += 1,
+                    None => break,
+                }
+            }
+            while next_b < reqs.len() {
+                match priced.try_admit(&reqs[next_b]).unwrap() {
+                    Some(_) => next_b += 1,
+                    None => break,
+                }
+            }
+            assert_eq!(next_a, next_b, "admission decisions diverged");
+            // the measured headroom is the slot headroom relabeled
+            assert_eq!(
+                priced.headroom_ms(),
+                Some(priced.headroom() as f64 * unit),
+                "headroom_ms must relabel headroom exactly"
+            );
+            let oa = slots.step().unwrap();
+            let ob = priced.step().unwrap();
+            assert_eq!(oa.slots_used, ob.slots_used);
+            assert_eq!(oa.cohort, ob.cohort);
+            retired_a.extend(oa.retired);
+            retired_b.extend(ob.retired);
+            guard += 1;
+            assert!(guard < 500, "lockstep run failed to drain");
+        }
+        assert_eq!(retired_a.len(), retired_b.len());
+        for ((ia, oa), (ib, ob)) in retired_a.iter().zip(&retired_b) {
+            assert_eq!(ia, ib, "retire order diverged");
+            assert_eq!(oa.latent, ob.latent, "ms-priced run not bit-exact");
+            assert_eq!(oa.unet_evals, ob.unet_evals);
+            assert_eq!(oa.plan_summary, ob.plan_summary);
+        }
+        assert_eq!(table.fallback_count(), 0, "proportional grid must cover every lookup");
+    });
+}

@@ -25,8 +25,11 @@
 //! (interval/cadence SSIM gains), `BENCH_cluster.json` (replica scaling
 //! ≥ 3.4× at 4 replicas, plan-cost routing p95 ≤ round-robin),
 //! `BENCH_telemetry.json` (observation overhead), `BENCH_cache.json`
-//! (amortization tiers) and `BENCH_stream.json` (mid-flight cancel
-//! reclaiming ≥ 1.15× useful throughput, no scenario class starving).
+//! (amortization tiers), `BENCH_stream.json` (mid-flight cancel
+//! reclaiming ≥ 1.15× useful throughput, no scenario class starving) and
+//! `BENCH_cost.json` (ms-priced routing p95 ≤ unit-slot p95 on the
+//! speed-heterogeneous fleet, zero analytic fallbacks on the calibrated
+//! grid).
 //!
 //! Usage (from `rust/`, after `cargo bench -- --fast`):
 //!
