@@ -70,7 +70,7 @@ use crate::coordinator::{
 };
 use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
-use crate::guidance::{CostTable, StepMode};
+use crate::guidance::{CostTable, PlanSearch, StepMode};
 use crate::metrics::LatencyHistogram;
 use crate::qos::{AdmissionDecision, QosMeta, QosPolicy};
 use crate::telemetry::{ClusterMetrics, CoordSink, Telemetry};
@@ -196,6 +196,13 @@ pub struct ClusterConfig {
     /// ([`crate::coordinator::ContinuousBatcher::with_ms_budget`]);
     /// `0.0` disables the ms admission tier. Requires `cost_tables`.
     pub cost_budget_ms: f64,
+    /// Compiled Pareto frontiers (DESIGN.md §16). Empty: QoS admission
+    /// keeps the legacy analytic widening. One frontier: the fleet
+    /// shares it. `n` frontiers: replica `i` searches frontier `i % n`
+    /// (a heterogeneous fleet tuned per backend). Injected
+    /// programmatically (from the `[planner]` section by the server
+    /// wiring), like `cost_tables` — not a `[cluster]` TOML key.
+    pub planners: Vec<Arc<PlanSearch>>,
 }
 
 impl Default for ClusterConfig {
@@ -207,6 +214,7 @@ impl Default for ClusterConfig {
             cache: CacheConfig::default(),
             cost_tables: Vec::new(),
             cost_budget_ms: 0.0,
+            planners: Vec::new(),
         }
     }
 }
@@ -278,6 +286,16 @@ impl ClusterConfig {
             None
         } else {
             Some(&self.cost_tables[i % self.cost_tables.len()])
+        }
+    }
+
+    /// The frontier replica `i` searches at admission: `None` while the
+    /// fleet runs the legacy actuator, frontier `i % n` otherwise.
+    pub fn planner_for(&self, i: usize) -> Option<&Arc<PlanSearch>> {
+        if self.planners.is_empty() {
+            None
+        } else {
+            Some(&self.planners[i % self.planners.len()])
         }
     }
 
@@ -377,9 +395,11 @@ impl ClusterConfig {
             cache: CacheConfig::from_toml(doc)?,
             // priced routing needs a loaded manifest, so the tables (and
             // the ms budget they denominate) are injected by the server
-            // wiring from the [cost] section, not parsed here
+            // wiring from the [cost] section, not parsed here — the
+            // frontiers likewise from the [planner] section
             cost_tables: Vec::new(),
             cost_budget_ms: 0.0,
+            planners: Vec::new(),
         };
         cfg.validate()?;
         Ok(Some(cfg))
@@ -491,6 +511,10 @@ struct Core {
     /// Measured cost tables (empty = analytic unit routing). Table 0 is
     /// the fleet reference every job is priced against.
     cost_tables: Vec<Arc<CostTable>>,
+    /// Compiled frontiers (empty = legacy actuator; DESIGN.md §16). Kept
+    /// for the stats dedup — a fleet-shared frontier's counters must not
+    /// be summed once per replica referencing it.
+    planners: Vec<Arc<PlanSearch>>,
     qos: Option<Arc<dyn QosPolicy>>,
     /// Cluster-owned latency histogram: every completion is recorded
     /// here by the relays, so the aggregate percentiles are exact (they
@@ -715,6 +739,10 @@ impl ReplicaSet {
             // budget prices its continuous batcher in milliseconds
             coord_cfg.cost_table = config.cost_table_for(id).cloned();
             coord_cfg.cost_budget_ms = config.cost_budget_ms;
+            // each replica coordinator attaches its frontier to the
+            // shared QoS policy (write-once: the first replica wins,
+            // which for the common one-frontier fleet is the frontier)
+            coord_cfg.planner = config.planner_for(id).cloned();
             let coordinator =
                 Coordinator::start_full(Arc::clone(&engine), coord_cfg, qos.clone(), sink);
             let (tx, rx) = mpsc::channel::<RelayItem>();
@@ -734,6 +762,7 @@ impl ReplicaSet {
             router: Mutex::new(router),
             route: config.route,
             cost_tables: config.cost_tables.clone(),
+            planners: config.planners.clone(),
             qos,
             latency: Mutex::new(LatencyHistogram::new()),
             submitted: AtomicU64::new(0),
@@ -986,6 +1015,21 @@ impl ReplicaSet {
                 cost_fallbacks += t.fallback_count();
             }
         }
+        // same discipline for the frontiers: a fleet-shared PlanSearch
+        // carries one set of global counters
+        let mut seen_planners: Vec<*const PlanSearch> = Vec::new();
+        let mut planner = crate::guidance::PlannerSnapshot::default();
+        for s in &core.planners {
+            let p = Arc::as_ptr(s);
+            if !seen_planners.contains(&p) {
+                seen_planners.push(p);
+                let snap = s.snapshot();
+                planner.searches += snap.searches;
+                planner.frontier_hits += snap.frontier_hits;
+                planner.fallbacks += snap.fallbacks;
+                planner.floor_clamps += snap.floor_clamps;
+            }
+        }
         let actuator_fraction = core
             .qos
             .as_ref()
@@ -1008,6 +1052,11 @@ impl ReplicaSet {
             outstanding_evals: replicas.iter().map(|r| r.outstanding_evals).sum(),
             cost_priced: !core.cost_tables.is_empty(),
             cost_fallbacks,
+            planner_attached: !core.planners.is_empty(),
+            planner_searches: planner.searches,
+            planner_frontier_hits: planner.frontier_hits,
+            planner_fallbacks: planner.fallbacks,
+            planner_floor_clamps: planner.floor_clamps,
             cache_hits: replicas.iter().map(|r| r.coordinator.cache_hits).sum(),
             dedup_coalesced: replicas.iter().map(|r| r.coordinator.dedup_coalesced).sum(),
             batches: replicas.iter().map(|r| r.coordinator.batches).sum(),
@@ -1284,6 +1333,17 @@ pub struct ClusterStats {
     /// Summed fallback-pricing events across the fleet's distinct cost
     /// tables — nonzero means a plan shape escaped the calibrated grid.
     pub cost_fallbacks: u64,
+    /// True when QoS admission degrades along compiled frontiers
+    /// (DESIGN.md §16).
+    pub planner_attached: bool,
+    /// Summed frontier lookups across the fleet's *distinct* frontiers
+    /// (a shared frontier's counters are global, counted once).
+    pub planner_searches: u64,
+    pub planner_frontier_hits: u64,
+    /// Lookups that missed every bucket (the legacy actuator answered).
+    pub planner_fallbacks: u64,
+    /// Demanded savings clamped at the quality floor's frontier point.
+    pub planner_floor_clamps: u64,
     /// Summed replica request-cache hits (served without UNet work).
     pub cache_hits: u64,
     /// Summed replica dedup joins (coalesced onto in-flight identicals).
@@ -1458,6 +1518,60 @@ mod tests {
             // 0.5 ms/eval: dual = 1.0 ms -> every weight doubles
             assert_eq!(r.route_weight, r.capacity_weight * 2.0);
         }
+        set.shutdown();
+    }
+
+    #[test]
+    fn planner_counters_dedup_across_replicas() {
+        use crate::guidance::{
+            FrontierBucket, FrontierManifest, FrontierPoint, GuidanceSchedule, GuidanceStrategy,
+            PlanSearch,
+        };
+        let bucket = FrontierBucket {
+            steps: 50,
+            full_cost_ms: 100.0,
+            points: vec![
+                FrontierPoint {
+                    label: "last(0.8) × cond-only".into(),
+                    schedule: GuidanceSchedule::Window(WindowSpec::last(0.8)),
+                    strategy: GuidanceStrategy::CondOnly,
+                    ssim: 0.8,
+                    cost_ms: 60.0,
+                },
+                FrontierPoint {
+                    label: "full CFG".into(),
+                    schedule: GuidanceSchedule::none(),
+                    strategy: GuidanceStrategy::CondOnly,
+                    ssim: 1.0,
+                    cost_ms: 100.0,
+                },
+            ],
+        };
+        let m =
+            FrontierManifest::seal("t", "synthetic", "synthetic", "fp", 8, 7.5, 2, vec![bucket]);
+        let search = Arc::new(PlanSearch::new(m).unwrap());
+        let cfg = ClusterConfig {
+            // the common fleet shape: both replicas share one frontier
+            planners: vec![Arc::clone(&search), Arc::clone(&search)],
+            ..ClusterConfig::homogeneous(2, continuous(4))
+        };
+        assert!(Arc::ptr_eq(cfg.planner_for(0).unwrap(), &search));
+        assert!(Arc::ptr_eq(cfg.planner_for(2).unwrap(), &search));
+        assert!(ClusterConfig::default().planner_for(0).is_none());
+        let set = ReplicaSet::start(engine(), cfg).unwrap();
+        // drive the shared frontier's global counters: one hit, one
+        // bucket miss
+        assert!(search.select(50, 0.1, 0.5).is_some());
+        assert!(search.select(500, 0.1, 0.5).is_none());
+        let stats = set.stats();
+        assert!(stats.planner_attached);
+        assert_eq!(
+            stats.planner_searches, 2,
+            "a shared frontier's counters are global — count once, not per replica"
+        );
+        assert_eq!(stats.planner_frontier_hits, 1);
+        assert_eq!(stats.planner_fallbacks, 1);
+        assert_eq!(stats.planner_floor_clamps, 0);
         set.shutdown();
     }
 

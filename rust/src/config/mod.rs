@@ -560,6 +560,83 @@ impl CostConfig {
     }
 }
 
+/// `[planner]` section: the deadline-optimal frontier plan search
+/// (DESIGN.md §16). Off by default — without a frontier source the QoS
+/// actuator keeps the legacy analytic widening.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PlannerConfig {
+    /// Path to a sealed frontier manifest (`sgd-serve tune --out …`).
+    /// Validated against the loaded runtime at startup: backend, preset,
+    /// model fingerprint and resolution must all match.
+    pub frontier_path: Option<String>,
+    /// Tune the loaded runtime at startup instead of loading a manifest
+    /// (mutually exclusive with `frontier_path`). Needs a `[cost]` table
+    /// source: the sweep prices candidates in measured milliseconds.
+    pub tune_on_start: bool,
+    /// Use the reduced fast sweep when tuning on start.
+    pub fast: bool,
+}
+
+impl PlannerConfig {
+    /// Is any frontier source configured?
+    pub fn enabled(&self) -> bool {
+        self.frontier_path.is_some() || self.tune_on_start
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.frontier_path.is_some() && self.tune_on_start {
+            return Err(Error::Config(
+                "planner frontier_path and tune_on_start are mutually exclusive — \
+                 configure exactly one frontier source"
+                    .into(),
+            ));
+        }
+        if self.fast && !self.tune_on_start {
+            return Err(Error::Config(
+                "planner fast requires tune_on_start = true (a loaded manifest carries \
+                 its own sweep)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build from the `[planner]` TOML section. Knobs without a frontier
+    /// source are an operator error, not a silent no-op (mirroring the
+    /// `[cost]`/`[telemetry]` rule).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = PlannerConfig::default();
+        if let Some(v) = doc.get("planner", "frontier_path") {
+            cfg.frontier_path = Some(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("planner frontier_path must be string".into()))?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = doc.get("planner", "tune_on_start") {
+            cfg.tune_on_start = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("planner tune_on_start must be bool".into()))?;
+        }
+        let knobs = ["fast"];
+        if !cfg.enabled() {
+            if let Some(orphan) = knobs.iter().find(|&&k| doc.get("planner", k).is_some()) {
+                return Err(Error::Config(format!(
+                    "planner {orphan} requires a frontier source (frontier_path or \
+                     tune_on_start)"
+                )));
+            }
+            return Ok(cfg);
+        }
+        if let Some(v) = doc.get("planner", "fast") {
+            cfg.fast =
+                v.as_bool().ok_or_else(|| Error::Config("planner fast must be bool".into()))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Complete deployment configuration (engine + server + qos + cluster +
 /// telemetry + artifacts).
 #[derive(Debug, Clone, Default)]
@@ -584,6 +661,10 @@ pub struct RunConfig {
     /// measured-cost table source, ms admission budget and fallback
     /// policy.
     pub cost: CostConfig,
+    /// `[planner]` section — off by default (see [`PlannerConfig`]): the
+    /// Pareto frontier source for deadline-optimal plan search at
+    /// admission (DESIGN.md §16).
+    pub planner: PlannerConfig,
     /// `[workload]` section — absent by default. A deployment file can
     /// carry its evaluation traffic shape (arrival process, img2img
     /// strength, variation fan-out, popularity skew) next to the
@@ -607,6 +688,15 @@ impl RunConfig {
         let cluster = crate::cluster::ClusterConfig::from_toml(&doc, &server)?;
         let engine = EngineConfig::from_toml(&doc)?;
         let workload = crate::workload::WorkloadSpec::from_toml(&doc, &engine)?;
+        let cost = CostConfig::from_toml(&doc)?;
+        let planner = PlannerConfig::from_toml(&doc)?;
+        if planner.tune_on_start && !cost.enabled() {
+            return Err(Error::Config(
+                "planner tune_on_start requires a [cost] table source (table_path or \
+                 calibrate_on_start) to price the sweep in milliseconds"
+                    .into(),
+            ));
+        }
         Ok(RunConfig {
             artifacts_dir,
             engine,
@@ -615,7 +705,8 @@ impl RunConfig {
             cluster,
             telemetry: TelemetryConfig::from_toml(&doc)?,
             cache: crate::cache::CacheConfig::from_toml(&doc)?,
-            cost: CostConfig::from_toml(&doc)?,
+            cost,
+            planner,
             workload,
         })
     }
@@ -926,6 +1017,40 @@ ewma_alpha = 0.3
         )
         .is_err());
         assert!(RunConfig::from_str("[cost]\ntable_path = 3\n").is_err());
+    }
+
+    #[test]
+    fn planner_section() {
+        // default: no frontier source, legacy actuator everywhere
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.planner, PlannerConfig::default());
+        assert!(!cfg.planner.enabled());
+        let cfg =
+            RunConfig::from_str("[planner]\nfrontier_path = \"frontier.json\"\n").unwrap();
+        assert_eq!(cfg.planner.frontier_path.as_deref(), Some("frontier.json"));
+        assert!(cfg.planner.enabled() && !cfg.planner.fast);
+        // tuning on start needs a cost source to price the sweep
+        assert!(RunConfig::from_str("[planner]\ntune_on_start = true\n").is_err());
+        let cfg = RunConfig::from_str(
+            "[cost]\ncalibrate_on_start = true\n[planner]\ntune_on_start = true\nfast = true\n",
+        )
+        .unwrap();
+        assert!(cfg.planner.tune_on_start && cfg.planner.fast && cfg.planner.enabled());
+        // orphan knobs without a frontier source are an operator error
+        assert!(RunConfig::from_str("[planner]\nfast = true\n").is_err());
+        // exactly one frontier source
+        assert!(RunConfig::from_str(
+            "[cost]\ncalibrate_on_start = true\n[planner]\nfrontier_path = \"f.json\"\ntune_on_start = true\n"
+        )
+        .is_err());
+        // fast only modifies a startup tune, not a loaded manifest
+        assert!(RunConfig::from_str(
+            "[planner]\nfrontier_path = \"f.json\"\nfast = true\n"
+        )
+        .is_err());
+        // invalid values are structured config errors
+        assert!(RunConfig::from_str("[planner]\nfrontier_path = 3\n").is_err());
+        assert!(RunConfig::from_str("[planner]\ntune_on_start = \"yes\"\n").is_err());
     }
 
     #[test]

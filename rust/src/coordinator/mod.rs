@@ -57,7 +57,7 @@ use std::time::{Duration, Instant};
 use crate::cache::{canonical_key, CacheConfig, CacheOutcome, RequestCache, SharedUncondCache};
 use crate::engine::{Engine, GenerationOutput, GenerationRequest};
 use crate::error::{Error, Result};
-use crate::guidance::{CostTable, StepMode};
+use crate::guidance::{CostTable, PlanSearch, StepMode};
 use crate::metrics::LatencyHistogram;
 use crate::qos::{expired, AdmissionDecision, QosMeta, QosPolicy};
 use crate::telemetry::{BatcherMetrics, CoordSink, Telemetry};
@@ -123,6 +123,12 @@ pub struct CoordinatorConfig {
     /// Millisecond admission budget per cohort iteration (continuous
     /// mode, requires `cost_table`; 0 = slots only).
     pub cost_budget_ms: f64,
+    /// Compiled Pareto frontier (DESIGN.md §16): when set, an installed
+    /// QoS policy degrades along the tuned frontier in O(1) at admission
+    /// instead of widening analytically, and [`CoordinatorStats`]
+    /// exposes the planner counter block. `None` keeps the legacy
+    /// actuator.
+    pub planner: Option<Arc<PlanSearch>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -136,6 +142,7 @@ impl Default for CoordinatorConfig {
             cache: CacheConfig::default(),
             cost_table: None,
             cost_budget_ms: 0.0,
+            planner: None,
         }
     }
 }
@@ -214,6 +221,18 @@ pub struct CoordinatorStats {
     /// ([`CostTable::shed_ratio`]; 0 when no table is attached — the
     /// analytic value is 0.5).
     pub cost_shed_ratio: f64,
+    /// Is a compiled frontier attached (DESIGN.md §16)?
+    pub planner_attached: bool,
+    /// Frontier lookups performed at admission (exactly one per eligible
+    /// admission — the O(1)-search ledger).
+    pub planner_searches: u64,
+    /// Lookups that landed on a frontier point.
+    pub planner_frontier_hits: u64,
+    /// Lookups that missed every bucket and fell back to the analytic
+    /// actuator.
+    pub planner_fallbacks: u64,
+    /// Demanded savings clamped up at the quality floor's frontier point.
+    pub planner_floor_clamps: u64,
     pub latency_ms_mean: f64,
     pub latency_ms_p50: f64,
     pub latency_ms_p90: f64,
@@ -581,6 +600,9 @@ pub struct Coordinator {
     /// Measured cost table (DESIGN.md §15); None prices in analytic units.
     cost_table: Option<Arc<CostTable>>,
     cost_budget_ms: f64,
+    /// Compiled Pareto frontier (DESIGN.md §16); None keeps the legacy
+    /// analytic actuator.
+    planner: Option<Arc<PlanSearch>>,
 }
 
 impl Coordinator {
@@ -647,11 +669,20 @@ impl Coordinator {
             // measured ratio instead of the analytic 0.5
             q.attach_cost_table(Arc::clone(t));
         }
+        if let (Some(q), Some(p)) = (&qos, &config.planner) {
+            // admission rewrites degrade along the compiled frontier
+            // instead of widening analytically (DESIGN.md §16)
+            q.attach_planner(Arc::clone(p));
+        }
         let cache = config.cache.enabled().then(|| Arc::new(CacheLayer::new(&config.cache)));
         if let (Some(s), Some(t)) = (&mut sink, &config.cost_table) {
             // retired plans price their steps into sg_step_cost_ms, and
             // the table's fallback counter reaches /metrics
             s.attach_cost(Arc::clone(t));
+        }
+        if let (Some(s), Some(p)) = (&mut sink, &config.planner) {
+            // the frontier search counters reach /metrics
+            s.attach_planner(Arc::clone(p));
         }
         let sink = sink.map(Arc::new);
         if let Some(s) = &sink {
@@ -787,12 +818,19 @@ impl Coordinator {
             cache,
             cost_table: config.cost_table,
             cost_budget_ms: config.cost_budget_ms,
+            planner: config.planner,
         })
     }
 
     /// The measured cost table this coordinator prices with, if any.
     pub fn cost_table(&self) -> Option<&Arc<CostTable>> {
         self.cost_table.as_ref()
+    }
+
+    /// The compiled frontier this coordinator's admission searches, if
+    /// any (DESIGN.md §16).
+    pub fn planner(&self) -> Option<&Arc<PlanSearch>> {
+        self.planner.as_ref()
     }
 
     /// The shared uncond-eps cache this coordinator's cohorts publish
@@ -1053,6 +1091,11 @@ impl Coordinator {
         } else {
             0.0
         };
+        let planner = self
+            .planner
+            .as_ref()
+            .map(|p| p.snapshot())
+            .unwrap_or_default();
         CoordinatorStats {
             mode: self.mode,
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -1104,6 +1147,11 @@ impl Coordinator {
                 .as_ref()
                 .map(|t| t.shed_ratio())
                 .unwrap_or(0.0),
+            planner_attached: self.planner.is_some(),
+            planner_searches: planner.searches,
+            planner_frontier_hits: planner.frontier_hits,
+            planner_fallbacks: planner.fallbacks,
+            planner_floor_clamps: planner.floor_clamps,
             latency_ms_mean: inner.latency.mean_ms(),
             latency_ms_p50: inner.latency.quantile_ms(0.5),
             latency_ms_p90: inner.latency.quantile_ms(0.9),

@@ -25,6 +25,10 @@
 //! * [`CostTable`] / [`CostManifest`] — the *measured* cost model:
 //!   calibrated per-step milliseconds every scheduling layer prices
 //!   plans in, sealed in a checksummed manifest (DESIGN.md §15);
+//! * [`tune_frontier`] / [`FrontierManifest`] / [`PlanSearch`] — the
+//!   deadline-optimal plan search: an offline Pareto sweep of this whole
+//!   grammar sealed into a frontier the QoS actuator consults in O(1)
+//!   at admission (DESIGN.md §16);
 //! * [`retuned_scale`] / [`GsTuner`] — the §3.4 guidance-scale retuning.
 
 mod adaptive;
@@ -32,6 +36,7 @@ mod cost;
 mod cost_table;
 mod gs_tuning;
 mod plan;
+mod planner;
 mod policy;
 mod strategy;
 mod window;
@@ -44,6 +49,10 @@ pub use cost_table::{
 pub(crate) use cost_table::fnv1a_hex as cost_table_fingerprint;
 pub use gs_tuning::{retuned_scale, GsTuner};
 pub use plan::{GuidancePlan, GuidanceSchedule, Segment, SegmentMode, StepPlan};
+pub use planner::{
+    tune_frontier, FrontierBucket, FrontierManifest, FrontierPoint, PlanSearch, PlannerSnapshot,
+    SelectedPlan, TuneProvenance, TunerConfig, FRONTIER_MANIFEST_VERSION,
+};
 pub use policy::{GuidanceMode, SelectiveGuidancePolicy};
 pub use strategy::{GuidanceStrategy, ReuseKind};
 pub use window::{WindowPosition, WindowSpec};

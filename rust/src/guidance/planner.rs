@@ -1,0 +1,868 @@
+//! Deadline-optimal plan search: the offline Pareto tuner and its O(1)
+//! admission-time consumer (DESIGN.md §16).
+//!
+//! The QoS [`crate::qos::WindowActuator`] reacts to load by *widening* a
+//! request's existing `Last` window — one ray through the schedule
+//! grammar. But the grammar (segments × interval × cadence × reuse) holds
+//! points that buy the same milliseconds back at strictly higher SSIM
+//! (the `fig6_interval_guidance` result: cadence/interval reuse beats a
+//! cond-only tail window at equal eval budget). The planner closes that
+//! gap in two phases:
+//!
+//! * **Offline** — [`tune_frontier`] sweeps [`TunerConfig::candidates`]
+//!   on the deterministic stack, scores each candidate with SSIM-vs-full-
+//!   CFG (a caller-supplied closure, so this module stays engine-free)
+//!   and prices it with [`GuidancePlan::cost_ms`] under the attached
+//!   [`CostTable`], then keeps only the non-dominated set per steps
+//!   bucket. **Dominance rule:** point A dominates B when
+//!   `A.cost_ms <= B.cost_ms` and `A.ssim >= B.ssim` with at least one
+//!   strict; the surviving frontier is strictly increasing in *both*
+//!   cost and SSIM. The result travels as a sealed [`FrontierManifest`]
+//!   — same version-gate / FNV-1a checksum / fingerprint-binding
+//!   machinery as [`super::CostManifest`], so a tampered frontier is
+//!   refused with a typed [`Error::Artifact`].
+//! * **Online** — [`PlanSearch::select`] answers "max quality that fits
+//!   this saving budget" with a bucket lookup plus one binary search
+//!   over the sorted frontier: O(log points), never a grammar sweep.
+//!   The searches / frontier-hit / fallback / floor-clamp counters are
+//!   the ledger the `plan_search` bench audits O(1) admission against
+//!   (candidate evaluation happens **only** at tune time —
+//!   [`FrontierManifest::candidates_swept`] is sealed and constant).
+//!
+//! Every frontier point is still an ordinary `(schedule, strategy)` pair
+//! compiled through [`GuidancePlan::compile`], so the eval-count
+//! invariant and bit-exactness suites cover searched plans unchanged:
+//! the planner is a pure pre-admission transform.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::cost_table::fnv1a_hex;
+use super::plan::{GuidancePlan, GuidanceSchedule};
+use super::strategy::{GuidanceStrategy, ReuseKind};
+use super::window::{WindowPosition, WindowSpec};
+use super::CostTable;
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+
+/// Frontier-manifest format version (bump on any shape change).
+pub const FRONTIER_MANIFEST_VERSION: i64 = 1;
+
+/// One non-dominated `(schedule, strategy)` point of a frontier bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierPoint {
+    /// Human label for tables and trace events, e.g. `"cadence /4 × hold/4"`.
+    pub label: String,
+    pub schedule: GuidanceSchedule,
+    pub strategy: GuidanceStrategy,
+    /// SSIM against the full-CFG baseline at this bucket's step count
+    /// (1.0 = bit-identical to the baseline).
+    pub ssim: f64,
+    /// Priced plan cost under the tune-time [`CostTable`].
+    pub cost_ms: f64,
+}
+
+impl FrontierPoint {
+    /// Fraction of the bucket's full-CFG cost this point saves.
+    pub fn saving(&self, full_cost_ms: f64) -> f64 {
+        if full_cost_ms <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.cost_ms / full_cost_ms).clamp(0.0, 1.0)
+    }
+}
+
+/// The serialized schedule shape: a `(kind, spec)` string pair that
+/// round-trips every [`GuidanceSchedule`] variant through the same
+/// parsers the TOML/CLI/wire surfaces use.
+fn schedule_to_spec(s: &GuidanceSchedule) -> (&'static str, String) {
+    match s {
+        GuidanceSchedule::Window(w) => ("window", format!("{}@{}", w.fraction, w.position.name())),
+        GuidanceSchedule::Segments(segs) => {
+            let items: Vec<String> = segs
+                .iter()
+                .map(|seg| {
+                    let bang =
+                        if seg.mode == super::plan::SegmentMode::Dual { "!" } else { "" };
+                    format!("{bang}{}-{}", seg.lo, seg.hi)
+                })
+                .collect();
+            ("segments", items.join(","))
+        }
+        GuidanceSchedule::Interval { lo, hi } => ("interval", format!("{lo}-{hi}")),
+        GuidanceSchedule::Cadence { every } => ("cadence", format!("{every}")),
+    }
+}
+
+fn schedule_from_spec(kind: &str, spec: &str) -> Result<GuidanceSchedule> {
+    let sched = match kind {
+        "window" => {
+            let (fraction, position) = spec.split_once('@').ok_or_else(|| {
+                Error::Artifact(format!("frontier window spec {spec:?} must be \"fraction@position\""))
+            })?;
+            let fraction: f64 = fraction.parse().map_err(|_| {
+                Error::Artifact(format!("frontier window spec {spec:?}: bad fraction"))
+            })?;
+            GuidanceSchedule::Window(WindowSpec { fraction, position: WindowPosition::parse(position)? })
+        }
+        "segments" => GuidanceSchedule::parse_segments(spec)?,
+        "interval" => GuidanceSchedule::parse_interval(spec)?,
+        "cadence" => GuidanceSchedule::Cadence {
+            every: spec.parse().map_err(|_| {
+                Error::Artifact(format!("frontier cadence spec {spec:?} is not an integer"))
+            })?,
+        },
+        other => {
+            return Err(Error::Artifact(format!("frontier schedule kind {other:?} unknown")))
+        }
+    };
+    sched.validate()?;
+    Ok(sched)
+}
+
+fn strategy_refresh(s: GuidanceStrategy) -> usize {
+    match s {
+        GuidanceStrategy::CondOnly => 0,
+        GuidanceStrategy::Reuse { refresh_every, .. } => refresh_every,
+    }
+}
+
+/// The frontier of one steps bucket: points sorted by ascending
+/// `cost_ms` (descending saving) and strictly ascending `ssim`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierBucket {
+    /// Step count the points were tuned at.
+    pub steps: usize,
+    /// Priced cost of the full-CFG baseline at this step count — the
+    /// denominator of every saving computation.
+    pub full_cost_ms: f64,
+    pub points: Vec<FrontierPoint>,
+}
+
+impl FrontierBucket {
+    /// A bucket the search can trust: at least one point, finite prices,
+    /// and strict non-domination (cost and SSIM both strictly increase).
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            return Err(Error::Artifact("frontier bucket steps must be >= 1".into()));
+        }
+        if !self.full_cost_ms.is_finite() || self.full_cost_ms <= 0.0 {
+            return Err(Error::Artifact(format!(
+                "frontier bucket {}: full_cost_ms {} must be finite and > 0",
+                self.steps, self.full_cost_ms
+            )));
+        }
+        if self.points.is_empty() {
+            return Err(Error::Artifact(format!("frontier bucket {} has no points", self.steps)));
+        }
+        for w in self.points.windows(2) {
+            if !(w[1].cost_ms > w[0].cost_ms && w[1].ssim > w[0].ssim) {
+                return Err(Error::Artifact(format!(
+                    "frontier bucket {}: points {:?} and {:?} are not strictly non-dominated",
+                    self.steps, w[0].label, w[1].label
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The sealed tuning artifact: the per-bucket frontiers plus the
+/// provenance (tool version, backend, model fingerprint, sweep size) a
+/// replica validates before trusting it. Same seal discipline as
+/// [`super::CostManifest`]: FNV-1a over the canonical JSON minus the
+/// `checksum` field, version-gated before anything else.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierManifest {
+    pub version: i64,
+    /// Crate version of the tuner that produced the frontier.
+    pub tool_version: String,
+    pub backend: String,
+    pub preset: String,
+    /// FNV-1a fingerprint of the model shape (16 hex digits).
+    pub model_fingerprint: String,
+    /// Latent resolution the SSIM scores bind to.
+    pub resolution: usize,
+    /// Guidance scale the candidates were compiled and scored at.
+    pub guidance_scale: f32,
+    /// Grammar candidates evaluated per bucket at tune time — the
+    /// constant side of the O(1)-admission ledger.
+    pub candidates_swept: usize,
+    /// Buckets sorted by ascending step count.
+    pub buckets: Vec<FrontierBucket>,
+    /// FNV-1a (16 hex digits) over the canonical JSON minus this field.
+    pub checksum: String,
+}
+
+impl FrontierManifest {
+    /// Build and seal a manifest (computes the checksum).
+    #[allow(clippy::too_many_arguments)]
+    pub fn seal(
+        tool_version: impl Into<String>,
+        backend: impl Into<String>,
+        preset: impl Into<String>,
+        model_fingerprint: impl Into<String>,
+        resolution: usize,
+        guidance_scale: f32,
+        candidates_swept: usize,
+        buckets: Vec<FrontierBucket>,
+    ) -> FrontierManifest {
+        let mut m = FrontierManifest {
+            version: FRONTIER_MANIFEST_VERSION,
+            tool_version: tool_version.into(),
+            backend: backend.into(),
+            preset: preset.into(),
+            model_fingerprint: model_fingerprint.into(),
+            resolution,
+            guidance_scale,
+            candidates_swept,
+            buckets,
+            checksum: String::new(),
+        };
+        m.checksum = m.compute_checksum();
+        m
+    }
+
+    /// The canonical payload — everything but the seal.
+    fn payload_json(&self) -> Value {
+        Value::obj()
+            .with("frontier_manifest_version", self.version)
+            .with("tool_version", self.tool_version.as_str())
+            .with("backend", self.backend.as_str())
+            .with("preset", self.preset.as_str())
+            .with("model_fingerprint", self.model_fingerprint.as_str())
+            .with("resolution", self.resolution)
+            .with("guidance_scale", self.guidance_scale as f64)
+            .with("candidates_swept", self.candidates_swept)
+            .with(
+                "buckets",
+                Value::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|b| {
+                            Value::obj()
+                                .with("steps", b.steps)
+                                .with("full_cost_ms", b.full_cost_ms)
+                                .with(
+                                    "points",
+                                    Value::Arr(
+                                        b.points
+                                            .iter()
+                                            .map(|p| {
+                                                let (kind, spec) = schedule_to_spec(&p.schedule);
+                                                Value::obj()
+                                                    .with("label", p.label.as_str())
+                                                    .with("schedule_kind", kind)
+                                                    .with("schedule_spec", spec)
+                                                    .with("strategy", p.strategy.name())
+                                                    .with(
+                                                        "refresh_every",
+                                                        strategy_refresh(p.strategy),
+                                                    )
+                                                    .with("ssim", p.ssim)
+                                                    .with("cost_ms", p.cost_ms)
+                                            })
+                                            .collect(),
+                                    ),
+                                )
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    fn compute_checksum(&self) -> String {
+        fnv1a_hex(self.payload_json().to_string().as_bytes())
+    }
+
+    pub fn to_json(&self) -> Value {
+        self.payload_json().with("checksum", self.checksum.as_str())
+    }
+
+    /// Parse + verify. Version gates first (an unknown shape cannot be
+    /// checksummed meaningfully), then the seal, then bucket validity.
+    pub fn from_json(v: &Value) -> Result<FrontierManifest> {
+        let version = v.get("frontier_manifest_version").and_then(Value::as_i64).unwrap_or(0);
+        if version != FRONTIER_MANIFEST_VERSION {
+            return Err(Error::Artifact(format!(
+                "frontier manifest version {version} unsupported (want {FRONTIER_MANIFEST_VERSION})"
+            )));
+        }
+        let req_str = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(String::from)
+                .ok_or_else(|| Error::Artifact(format!("frontier manifest missing {key}")))
+        };
+        let req_usize = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| Error::Artifact(format!("frontier manifest missing {key}")))
+        };
+        let buckets_json = v
+            .get("buckets")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Artifact("frontier manifest missing buckets".into()))?;
+        let mut buckets = Vec::with_capacity(buckets_json.len());
+        for b in buckets_json {
+            let points_json = b
+                .get("points")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| Error::Artifact("frontier bucket missing points".into()))?;
+            let mut points = Vec::with_capacity(points_json.len());
+            for p in points_json {
+                let field = |key: &str| -> Result<String> {
+                    p.get(key)
+                        .and_then(Value::as_str)
+                        .map(String::from)
+                        .ok_or_else(|| Error::Artifact(format!("frontier point missing {key}")))
+                };
+                let num = |key: &str| -> Result<f64> {
+                    p.get(key)
+                        .and_then(Value::as_f64)
+                        .ok_or_else(|| Error::Artifact(format!("frontier point missing {key}")))
+                };
+                let schedule =
+                    schedule_from_spec(&field("schedule_kind")?, &field("schedule_spec")?)?;
+                let refresh = p.get("refresh_every").and_then(Value::as_usize).unwrap_or(0);
+                let strategy = GuidanceStrategy::parse(&field("strategy")?, refresh)?;
+                points.push(FrontierPoint {
+                    label: field("label")?,
+                    schedule,
+                    strategy,
+                    ssim: num("ssim")?,
+                    cost_ms: num("cost_ms")?,
+                });
+            }
+            buckets.push(FrontierBucket {
+                steps: b
+                    .get("steps")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| Error::Artifact("frontier bucket missing steps".into()))?,
+                full_cost_ms: b
+                    .get("full_cost_ms")
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| Error::Artifact("frontier bucket missing full_cost_ms".into()))?,
+                points,
+            });
+        }
+        let m = FrontierManifest {
+            version,
+            tool_version: req_str("tool_version")?,
+            backend: req_str("backend")?,
+            preset: req_str("preset")?,
+            model_fingerprint: req_str("model_fingerprint")?,
+            resolution: req_usize("resolution")?,
+            guidance_scale: v
+                .get("guidance_scale")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| Error::Artifact("frontier manifest missing guidance_scale".into()))?
+                as f32,
+            candidates_swept: req_usize("candidates_swept")?,
+            buckets,
+            checksum: req_str("checksum")?,
+        };
+        let computed = m.compute_checksum();
+        if computed != m.checksum {
+            return Err(Error::Artifact(format!(
+                "frontier manifest checksum mismatch: file says {}, content hashes to {computed} \
+                 — the frontier was tampered with or hand-edited; retune instead",
+                m.checksum
+            )));
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<FrontierManifest> {
+        Self::from_json(&json::from_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| Error::io(format!("writing {}", path.display()), e))
+    }
+}
+
+/// The offline sweep shape: which grammar points [`tune_frontier`]
+/// evaluates per steps bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunerConfig {
+    /// Step counts to tune a frontier for.
+    pub steps_buckets: Vec<usize>,
+    /// `Last`-window fractions, each swept as cond-only and hold-reuse.
+    pub fractions: Vec<f64>,
+    /// Cadence periods (guide every k-th step, hold-reuse between).
+    pub cadences: Vec<usize>,
+    /// Guided intervals `(lo, hi)` (optimized outside, hold-reuse).
+    pub intervals: Vec<(f64, f64)>,
+    /// Refresh cadence for every hold-reuse candidate.
+    pub refresh_every: usize,
+    /// Guidance scale candidates are compiled and scored at.
+    pub guidance_scale: f32,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            steps_buckets: vec![20, 50],
+            fractions: vec![0.2, 0.4, 0.6, 0.8],
+            cadences: vec![2, 3, 4],
+            intervals: vec![(0.0, 0.5), (0.25, 0.75)],
+            refresh_every: 4,
+            guidance_scale: 7.5,
+        }
+    }
+}
+
+impl TunerConfig {
+    /// The CI / smoke sweep: one small bucket, fewer candidates.
+    pub fn fast() -> TunerConfig {
+        TunerConfig {
+            steps_buckets: vec![12],
+            fractions: vec![0.25, 0.5, 0.75],
+            cadences: vec![2, 4],
+            intervals: vec![(0.0, 0.5)],
+            refresh_every: 4,
+            guidance_scale: 7.5,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.steps_buckets.is_empty() {
+            return Err(Error::Config("tuner needs at least one steps bucket".into()));
+        }
+        if self.steps_buckets.iter().any(|&n| n == 0) {
+            return Err(Error::Config("tuner steps buckets must be >= 1".into()));
+        }
+        if !self.guidance_scale.is_finite() || self.guidance_scale < 0.0 {
+            return Err(Error::Config(format!(
+                "tuner guidance scale {} must be finite and >= 0",
+                self.guidance_scale
+            )));
+        }
+        Ok(())
+    }
+
+    /// The candidate enumeration, full-CFG baseline first. Every entry
+    /// validates through [`GuidanceSchedule::validate`] at compile time.
+    pub fn candidates(&self) -> Vec<(GuidanceSchedule, GuidanceStrategy)> {
+        let hold =
+            GuidanceStrategy::Reuse { kind: ReuseKind::Hold, refresh_every: self.refresh_every };
+        let mut out = vec![(GuidanceSchedule::none(), GuidanceStrategy::CondOnly)];
+        for &f in &self.fractions {
+            out.push((GuidanceSchedule::Window(WindowSpec::last(f)), GuidanceStrategy::CondOnly));
+            out.push((GuidanceSchedule::Window(WindowSpec::last(f)), hold));
+        }
+        for &k in &self.cadences {
+            out.push((GuidanceSchedule::Cadence { every: k }, hold));
+        }
+        for &(lo, hi) in &self.intervals {
+            out.push((GuidanceSchedule::Interval { lo, hi }, hold));
+        }
+        out
+    }
+}
+
+/// Provenance sealed into the manifest — what a replica validates the
+/// frontier against before trusting it (mirrors the calibrate seal).
+#[derive(Debug, Clone)]
+pub struct TuneProvenance {
+    pub tool_version: String,
+    pub backend: String,
+    pub preset: String,
+    pub model_fingerprint: String,
+    pub resolution: usize,
+}
+
+/// Sweep the grammar, score every candidate, keep the non-dominated set
+/// per bucket, seal. `score(schedule, strategy, steps)` returns the
+/// candidate's SSIM against the full-CFG baseline at `steps` — a closure
+/// so the guidance layer stays engine-free (`runtime::tune` supplies the
+/// engine-driven scorer; tests supply analytic ones). Candidates that
+/// compile to zero shed are scored 1.0 without calling the closure: an
+/// identical plan is bit-identical output by the determinism invariant.
+pub fn tune_frontier<F>(
+    cfg: &TunerConfig,
+    table: &CostTable,
+    prov: &TuneProvenance,
+    mut score: F,
+) -> Result<FrontierManifest>
+where
+    F: FnMut(&GuidanceSchedule, GuidanceStrategy, usize) -> Result<f64>,
+{
+    cfg.validate()?;
+    let candidates = cfg.candidates();
+    let mut buckets = Vec::with_capacity(cfg.steps_buckets.len());
+    for &steps in &cfg.steps_buckets {
+        let full = GuidancePlan::compile(
+            &GuidanceSchedule::none(),
+            cfg.guidance_scale,
+            GuidanceStrategy::CondOnly,
+            steps,
+        )?
+        .cost_ms(table);
+        let mut scored = Vec::with_capacity(candidates.len());
+        for (schedule, strategy) in &candidates {
+            let plan = GuidancePlan::compile(schedule, cfg.guidance_scale, *strategy, steps)?;
+            let cost_ms = plan.cost_ms(table);
+            let ssim = if plan.effective_fraction() == 0.0 {
+                1.0
+            } else {
+                score(schedule, *strategy, steps)?
+            };
+            if !ssim.is_finite() || !(0.0..=1.0).contains(&ssim) {
+                return Err(Error::Config(format!(
+                    "tuner score {ssim} for {} at {steps} steps outside [0, 1]",
+                    schedule.label()
+                )));
+            }
+            scored.push(FrontierPoint {
+                label: format!("{} × {}", schedule.label(), strategy.label()),
+                schedule: schedule.clone(),
+                strategy: *strategy,
+                ssim,
+                cost_ms,
+            });
+        }
+        // Pareto prune: ascending cost, ties broken by descending SSIM
+        // then label (deterministic); a point survives only when it buys
+        // strictly more SSIM than everything cheaper.
+        scored.sort_by(|a, b| {
+            a.cost_ms
+                .partial_cmp(&b.cost_ms)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.ssim.partial_cmp(&a.ssim).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.label.cmp(&b.label))
+        });
+        let mut points: Vec<FrontierPoint> = Vec::new();
+        for p in scored {
+            let improves = match points.last() {
+                Some(last) => p.ssim > last.ssim,
+                None => true,
+            };
+            if improves {
+                points.push(p);
+            }
+        }
+        let bucket = FrontierBucket { steps, full_cost_ms: full, points };
+        bucket.validate().map_err(|e| Error::Config(format!("tuner produced {e}")))?;
+        buckets.push(bucket);
+    }
+    buckets.sort_by_key(|b| b.steps);
+    Ok(FrontierManifest::seal(
+        prov.tool_version.clone(),
+        prov.backend.clone(),
+        prov.preset.clone(),
+        prov.model_fingerprint.clone(),
+        prov.resolution,
+        cfg.guidance_scale,
+        candidates.len(),
+        buckets,
+    ))
+}
+
+/// What [`PlanSearch::select`] hands the actuator: a frontier point plus
+/// its saving under the bucket it came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectedPlan {
+    pub schedule: GuidanceSchedule,
+    pub strategy: GuidanceStrategy,
+    pub ssim: f64,
+    pub cost_ms: f64,
+    /// `1 − cost_ms / full_cost_ms` of the matched bucket.
+    pub saving: f64,
+}
+
+/// Counter snapshot for `/stats` and telemetry (mirrors
+/// [`CostTable::fallback_count`]'s shared-observability discipline).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlannerSnapshot {
+    /// Admission-time frontier consultations.
+    pub searches: u64,
+    /// Searches a bucket answered.
+    pub frontier_hits: u64,
+    /// Searches with no usable bucket — the caller fell back to the
+    /// legacy analytic widening path.
+    pub fallbacks: u64,
+    /// Searches whose load-demanded saving exceeded the quality floor
+    /// and was clamped to the floor's frontier point.
+    pub floor_clamps: u64,
+}
+
+/// The O(1) admission-time consumer of a sealed frontier.
+#[derive(Debug)]
+pub struct PlanSearch {
+    manifest: FrontierManifest,
+    searches: AtomicU64,
+    frontier_hits: AtomicU64,
+    fallbacks: AtomicU64,
+    floor_clamps: AtomicU64,
+}
+
+/// Equality is the sealed frontier's identity (its checksum); the search
+/// counters are observability, not identity (mirrors [`CostTable`]'s
+/// counter-ignoring equality).
+impl PartialEq for PlanSearch {
+    fn eq(&self, other: &PlanSearch) -> bool {
+        self.manifest.checksum == other.manifest.checksum
+    }
+}
+
+impl PlanSearch {
+    /// Wrap a verified manifest; every bucket is re-validated so the hot
+    /// path can binary-search without checking shape.
+    pub fn new(manifest: FrontierManifest) -> Result<PlanSearch> {
+        if manifest.buckets.is_empty() {
+            return Err(Error::Artifact("frontier manifest has no buckets".into()));
+        }
+        for b in &manifest.buckets {
+            b.validate()?;
+        }
+        Ok(PlanSearch {
+            manifest,
+            searches: AtomicU64::new(0),
+            frontier_hits: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+            floor_clamps: AtomicU64::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &FrontierManifest {
+        &self.manifest
+    }
+
+    pub fn snapshot(&self) -> PlannerSnapshot {
+        PlannerSnapshot {
+            searches: self.searches.load(Ordering::Relaxed),
+            frontier_hits: self.frontier_hits.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            floor_clamps: self.floor_clamps.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The max-quality frontier point whose saving covers `needed_saving`
+    /// (fraction of full-CFG cost the load demands back), never shedding
+    /// past `floor_saving` (the quality floor's frontier-point budget).
+    ///
+    /// O(1) in the grammar: one nearest-bucket scan over the handful of
+    /// tuned buckets plus one binary search over the sorted frontier —
+    /// no candidate is compiled or scored here. Returns `None` (and
+    /// counts a fallback) when no tuned bucket is within 2× of `steps`;
+    /// the caller then uses the legacy analytic widening path.
+    pub fn select(
+        &self,
+        steps: usize,
+        needed_saving: f64,
+        floor_saving: f64,
+    ) -> Option<SelectedPlan> {
+        self.searches.fetch_add(1, Ordering::Relaxed);
+        let bucket = self
+            .manifest
+            .buckets
+            .iter()
+            .min_by(|a, b| {
+                a.steps
+                    .abs_diff(steps)
+                    .cmp(&b.steps.abs_diff(steps))
+                    .then(a.steps.cmp(&b.steps))
+            })
+            .filter(|b| b.steps <= steps.saturating_mul(2) && steps <= b.steps.saturating_mul(2));
+        let Some(bucket) = bucket else {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        self.frontier_hits.fetch_add(1, Ordering::Relaxed);
+        let floor = floor_saving.clamp(0.0, 1.0);
+        let mut needed = needed_saving.clamp(0.0, 1.0);
+        if needed > floor {
+            self.floor_clamps.fetch_add(1, Ordering::Relaxed);
+            needed = floor;
+        }
+        // saving decreases along the cost-ascending frontier, so "max
+        // quality with saving >= needed" is the most expensive point at
+        // or under the cost ceiling; when even the cheapest point saves
+        // too little, degrade to it (max available saving).
+        let ceiling = bucket.full_cost_ms * (1.0 - needed);
+        let idx = bucket.points.partition_point(|p| p.cost_ms <= ceiling + 1e-9);
+        let p = &bucket.points[idx.saturating_sub(1)];
+        Some(SelectedPlan {
+            schedule: p.schedule.clone(),
+            strategy: p.strategy,
+            ssim: p.ssim,
+            cost_ms: p.cost_ms,
+            saving: p.saving(bucket.full_cost_ms),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic engine-free quality model for tuner tests: quality
+    /// falls with effective shed, reuse strategies degrade slower than
+    /// cond-only (the fig5/fig6 shape).
+    fn analytic_score(
+        schedule: &GuidanceSchedule,
+        strategy: GuidanceStrategy,
+        steps: usize,
+    ) -> Result<f64> {
+        let plan = GuidancePlan::compile(schedule, 7.5, strategy, steps)?;
+        let f = plan.effective_fraction();
+        let penalty = match strategy {
+            GuidanceStrategy::CondOnly => 0.30,
+            GuidanceStrategy::Reuse { .. } => 0.12,
+        };
+        Ok((1.0 - penalty * f * f).clamp(0.0, 1.0))
+    }
+
+    fn prov() -> TuneProvenance {
+        TuneProvenance {
+            tool_version: "0.2.0".into(),
+            backend: "synthetic".into(),
+            preset: "t".into(),
+            model_fingerprint: "00000000deadbeef".into(),
+            resolution: 8,
+        }
+    }
+
+    fn tuned() -> FrontierManifest {
+        let table = CostTable::proportional(1.0, &[1, 2, 4]);
+        tune_frontier(&TunerConfig::default(), &table, &prov(), analytic_score).unwrap()
+    }
+
+    #[test]
+    fn frontier_is_strictly_non_dominated_and_anchored() {
+        let m = tuned();
+        assert_eq!(m.buckets.len(), 2);
+        for b in &m.buckets {
+            b.validate().unwrap();
+            // baseline anchor: the most expensive point is full CFG
+            let last = b.points.last().unwrap();
+            assert_eq!(last.ssim, 1.0);
+            assert!((last.cost_ms - b.full_cost_ms).abs() < 1e-9);
+            assert!(b.points.first().unwrap().cost_ms < b.full_cost_ms);
+        }
+        assert_eq!(m.candidates_swept, TunerConfig::default().candidates().len());
+    }
+
+    #[test]
+    fn schedule_specs_round_trip_every_kind() {
+        use super::super::plan::Segment;
+        for sched in [
+            GuidanceSchedule::none(),
+            GuidanceSchedule::Window(WindowSpec::last(0.35)),
+            GuidanceSchedule::Window(WindowSpec::first(0.2)),
+            GuidanceSchedule::Window(WindowSpec::at_offset(0.125, 0.5)),
+            GuidanceSchedule::Interval { lo: 0.25, hi: 0.75 },
+            GuidanceSchedule::Cadence { every: 4 },
+            GuidanceSchedule::Segments(vec![
+                Segment::optimized(0.0, 0.2),
+                Segment::dual(0.4, 0.6),
+            ]),
+        ] {
+            let (kind, spec) = schedule_to_spec(&sched);
+            let back = schedule_from_spec(kind, &spec).unwrap();
+            assert_eq!(back, sched, "{kind} {spec}");
+        }
+        assert!(schedule_from_spec("window", "0.3").is_err());
+        assert!(schedule_from_spec("cadence", "x").is_err());
+        assert!(schedule_from_spec("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn manifest_round_trips_bit_exact() {
+        let m = tuned();
+        let text = m.to_json().to_string();
+        let back = FrontierManifest::from_json(&json::from_str(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.to_json().to_string(), text, "canonical serialization");
+    }
+
+    #[test]
+    fn tampered_manifest_rejected_with_typed_error() {
+        let m = tuned();
+        let text = m.to_json().to_string();
+        let needle = format!("\"ssim\":{}", m.buckets[0].points[0].ssim);
+        let tampered = text.replacen(&needle, "\"ssim\":0.999999", 1);
+        assert_ne!(text, tampered, "tamper target must exist");
+        let err = FrontierManifest::from_json(&json::from_str(&tampered).unwrap()).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err:?}");
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn version_gate_before_checksum() {
+        let m = tuned();
+        let text = m
+            .to_json()
+            .to_string()
+            .replace("\"frontier_manifest_version\":1", "\"frontier_manifest_version\":9");
+        let err = FrontierManifest::from_json(&json::from_str(&text).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("version 9 unsupported"), "{err}");
+    }
+
+    #[test]
+    fn select_is_budget_monotone_and_floor_clamped() {
+        let ps = PlanSearch::new(tuned()).unwrap();
+        let floor = 0.5;
+        // the cheapest point's saving bounds what any demand can get
+        let max_saving = ps.select(50, 1.0, 1.0).unwrap().saving;
+        let mut prev_ssim = f64::NEG_INFINITY;
+        // needed saving falling 0.9 -> 0.0 == deadline budget rising
+        for i in (0..=18).rev() {
+            let needed = i as f64 * 0.05;
+            let sel = ps.select(50, needed, floor).expect("bucket hit");
+            assert!(sel.ssim >= prev_ssim, "more budget must never lose SSIM");
+            prev_ssim = sel.ssim;
+            // below the floor and within the frontier's reach, the
+            // selected plan must actually cover the demanded saving
+            if needed <= floor && needed <= max_saving {
+                assert!(sel.saving + 1e-9 >= needed, "needed {needed} got {}", sel.saving);
+            }
+        }
+        let snap = ps.snapshot();
+        assert_eq!(snap.searches, 20);
+        assert_eq!(snap.frontier_hits, 20);
+        assert_eq!(snap.fallbacks, 0);
+        // needed 0.55..0.9 exceeded the 0.5 floor
+        assert_eq!(snap.floor_clamps, 8);
+        // zero demand returns the full-CFG anchor
+        let idle = ps.select(50, 0.0, floor).unwrap();
+        assert_eq!(idle.ssim, 1.0);
+        assert_eq!(idle.saving, 0.0);
+    }
+
+    #[test]
+    fn select_falls_back_off_the_tuned_range() {
+        let ps = PlanSearch::new(tuned()).unwrap();
+        // buckets are 20 and 50; 8 steps is out of 2x range of both
+        assert!(ps.select(8, 0.3, 0.5).is_none());
+        assert!(ps.select(500, 0.3, 0.5).is_none());
+        // 30 steps maps to the nearest bucket (20, ties go lower)
+        assert!(ps.select(30, 0.3, 0.5).is_some());
+        let snap = ps.snapshot();
+        assert_eq!(snap.searches, 3);
+        assert_eq!(snap.frontier_hits, 1);
+        assert_eq!(snap.fallbacks, 2);
+    }
+
+    #[test]
+    fn tuning_is_deterministic() {
+        let a = tuned().to_json().to_string();
+        let b = tuned().to_json().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn degenerate_frontiers_are_refused() {
+        let m = tuned();
+        let empty = FrontierManifest::seal("0.2.0", "s", "t", "0", 8, 7.5, 0, vec![]);
+        assert!(matches!(PlanSearch::new(empty).unwrap_err(), Error::Artifact(_)));
+        // a dominated pair fails bucket validation
+        let mut bad = m.clone();
+        let p = bad.buckets[0].points[0].clone();
+        bad.buckets[0].points.insert(1, p);
+        assert!(FrontierBucket::validate(&bad.buckets[0]).is_err());
+    }
+}

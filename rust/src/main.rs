@@ -26,10 +26,13 @@
 //!           [--deadline-ms 0] [--adaptive] [--adaptive-threshold ...]
 //!           [--request-cache] [--dedup] [--preview-every 0]
 //!           [--metrics-addr 127.0.0.1:9090] [--no-telemetry]
-//!           [--cost-table cost_table.json]
+//!           [--cost-table cost_table.json] [--frontier frontier.json]
 //! sgd-serve calibrate [--artifacts artifacts/tiny] [--synthetic]
 //!           [--grid 1,2,4] [--samples 9] [--warmup 3] [--fast]
 //!           [--out cost_table.json]
+//! sgd-serve tune     [--artifacts artifacts/tiny] [--synthetic]
+//!           [--cost-table cost_table.json] [--fast]
+//!           [--out frontier.json]
 //! sgd-serve info     [--artifacts artifacts/tiny]
 //! ```
 //!
@@ -72,6 +75,16 @@
 //! (continuous admission, QoS deadlines, cluster routing) prices steps
 //! in measured milliseconds instead of analytic UNet-eval units.
 //!
+//! `tune` sweeps the selective-guidance schedule grammar on the loaded
+//! runtime, scores every candidate (SSIM against the full-CFG baseline,
+//! milliseconds from a cost table), prunes to the Pareto frontier and
+//! writes a sealed, checksummed frontier manifest (DESIGN.md §16).
+//! `serve --frontier path` (or a `[planner]` config section) loads such
+//! a manifest — validated against the running backend + model
+//! fingerprint — and QoS admission answers "cheapest plan above the
+//! deadline's quality" with one O(1) indexed lookup instead of the
+//! analytic window-widening actuator.
+//!
 //! `--replicas N` (or a `[cluster]` config section) runs a replica set
 //! instead of a single coordinator (DESIGN.md §11): each replica is its
 //! own coordinator shaped by the `[server]` keys (overridable per
@@ -86,16 +99,16 @@ use std::sync::Arc;
 
 use selective_guidance::cli::Cli;
 use selective_guidance::cluster::{ClusterConfig, ReplicaSet, ReplicaSpec, RoutePolicy};
-use selective_guidance::config::{CostConfig, EngineConfig, RunConfig};
+use selective_guidance::config::{CostConfig, EngineConfig, PlannerConfig, RunConfig};
 use selective_guidance::coordinator::{BatchMode, Coordinator, CoordinatorConfig};
 use selective_guidance::engine::{Engine, GenerationRequest};
 use selective_guidance::error::{Error, Result};
 use selective_guidance::guidance::{
-    AdaptiveConfig, CostManifest, CostTable, GuidanceSchedule, GuidanceStrategy, StepMode,
-    WindowPosition,
+    AdaptiveConfig, CostManifest, CostTable, FrontierManifest, GuidanceSchedule,
+    GuidanceStrategy, PlanSearch, StepMode, TunerConfig, WindowPosition,
 };
 use selective_guidance::qos::DeadlineQos;
-use selective_guidance::runtime::{calibrate, CalibrationConfig, ModelStack};
+use selective_guidance::runtime::{calibrate, tune, CalibrationConfig, ModelStack};
 use selective_guidance::scheduler::SchedulerKind;
 use selective_guidance::server::{GuidanceDefaults, MetricsScrape, Server};
 use selective_guidance::telemetry::CoordSink;
@@ -113,10 +126,11 @@ fn run() -> Result<()> {
         Some("generate") => cmd_generate(&cli),
         Some("serve") => cmd_serve(&cli),
         Some("calibrate") => cmd_calibrate(&cli),
+        Some("tune") => cmd_tune(&cli),
         Some("info") => cmd_info(&cli),
         Some(other) => Err(Error::Config(format!("unknown command {other:?}"))),
         None => {
-            eprintln!("usage: sgd-serve <generate|serve|calibrate|info> [options]");
+            eprintln!("usage: sgd-serve <generate|serve|calibrate|tune|info> [options]");
             Ok(())
         }
     }
@@ -408,6 +422,23 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     }
     run_cfg.cost.validate()?;
 
+    // planner overrides: --frontier points the [planner] section at a
+    // sealed frontier manifest (flags win over the config file's path)
+    if cli.flag("frontier") {
+        return Err(Error::Config("--frontier needs a value".into()));
+    }
+    if let Some(path) = cli.opt("frontier") {
+        if run_cfg.planner.tune_on_start {
+            return Err(Error::Config(
+                "--frontier conflicts with [planner] tune_on_start — \
+                 configure exactly one frontier source"
+                    .into(),
+            ));
+        }
+        run_cfg.planner.frontier_path = Some(path.to_string());
+    }
+    run_cfg.planner.validate()?;
+
     // telemetry overrides: --no-telemetry opts out, --metrics-addr
     // opens (or re-binds) the Prometheus scrape endpoint
     if cli.flag("metrics-addr") {
@@ -551,12 +582,22 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             );
         }
     }
+    // deadline-optimal plan search (DESIGN.md §16): resolve the
+    // [planner] section into a sealed Pareto frontier — loaded (and
+    // validated against this runtime) or swept on start — and hand the
+    // O(1) search to whichever scheduling plane this deployment runs
+    let plan_search = plan_search_from(&run_cfg.planner, &stack, cost_table.as_ref())?;
     if let Some(cfg) = cluster_cfg.as_mut() {
         if let Some(t) = &cost_table {
             // one fleet-shared table: replica weights, job pricing and
             // the ms admission tier all read the same measurements
             cfg.cost_tables = vec![Arc::clone(t)];
             cfg.cost_budget_ms = run_cfg.cost.budget_ms;
+        }
+        if let Some(p) = &plan_search {
+            // one fleet-shared frontier: every replica's admission
+            // degrades along the same sealed trade-off curve
+            cfg.planners = vec![Arc::clone(p)];
         }
     }
     if let Some(cfg) = &cluster_cfg {
@@ -631,6 +672,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 cache: run_cfg.cache.clone(),
                 cost_table: cost_table.clone(),
                 cost_budget_ms: run_cfg.cost.budget_ms,
+                planner: plan_search.clone(),
             };
             match run_cfg.server.mode {
                 BatchMode::Continuous => println!(
@@ -715,6 +757,117 @@ fn cost_table_from(cost: &CostConfig, stack: &ModelStack) -> Result<Option<Arc<C
         }
     }
     Ok(Some(Arc::new(table)))
+}
+
+/// Resolve the `[planner]` section against the loaded runtime: load the
+/// sealed frontier manifest (refusing a backend / model-fingerprint
+/// mismatch, like the cost path) or sweep one on start, then compile it
+/// into the O(1) admission search (DESIGN.md §16). `None` = planner
+/// off; under pressure admission degrades via the legacy analytic
+/// actuator.
+fn plan_search_from(
+    planner: &PlannerConfig,
+    stack: &Arc<ModelStack>,
+    cost_table: Option<&Arc<CostTable>>,
+) -> Result<Option<Arc<PlanSearch>>> {
+    if !planner.enabled() {
+        return Ok(None);
+    }
+    let manifest = match &planner.frontier_path {
+        Some(path) => {
+            let m = FrontierManifest::load(Path::new(path))?;
+            stack.validate_frontier_manifest(&m)?;
+            println!("planner: loaded sealed frontier {path} (checksum {})", m.checksum);
+            m
+        }
+        None => {
+            // tune_on_start: RunConfig cross-validation guarantees a
+            // [cost] source, so a resolved table is present here
+            let table = cost_table.ok_or_else(|| {
+                Error::Config(
+                    "planner tune_on_start requires a resolved cost table to price the sweep"
+                        .into(),
+                )
+            })?;
+            let cfg = if planner.fast { TunerConfig::fast() } else { TunerConfig::default() };
+            eprintln!(
+                "planner: sweeping {} schedule candidates on start ...",
+                cfg.candidates().len()
+            );
+            tune(Arc::clone(stack), &cfg, table)?
+        }
+    };
+    let plans: usize = manifest.buckets.iter().map(|b| b.points.len()).sum();
+    println!(
+        "planner: frontier ready — {} steps bucket(s), {} non-dominated plan(s) \
+         ({} candidates swept)",
+        manifest.buckets.len(),
+        plans,
+        manifest.candidates_swept,
+    );
+    Ok(Some(Arc::new(PlanSearch::new(manifest)?)))
+}
+
+/// `sgd-serve tune`: sweep the selective-guidance schedule grammar on
+/// the loaded runtime into a sealed Pareto-frontier manifest
+/// (DESIGN.md §16). Every candidate is scored on quality (SSIM against
+/// the full-CFG render at the same seed) and cost (milliseconds from a
+/// cost table: a sealed `--cost-table` manifest, else a fast
+/// calibration of this runtime); dominated plans are pruned.
+/// `--synthetic` sweeps the in-crate synthetic backend (the CI smoke
+/// shape); `--fast` uses the cheap sweep grid.
+fn cmd_tune(cli: &Cli) -> Result<()> {
+    for key in ["cost-table", "out"] {
+        if cli.flag(key) {
+            return Err(Error::Config(format!("--{key} needs a value")));
+        }
+    }
+    let stack = if cli.flag("synthetic") {
+        Arc::new(ModelStack::synthetic())
+    } else {
+        let dir = artifacts_dir(cli);
+        eprintln!("loading artifacts from {dir} ...");
+        Arc::new(ModelStack::load(&dir)?)
+    };
+    // price the sweep in measured milliseconds through the same [cost]
+    // resolution path `serve` uses (manifest validation + coverage
+    // checks included)
+    let cost_cfg = match cli.opt("cost-table") {
+        Some(path) => CostConfig { table_path: Some(path.to_string()), ..CostConfig::default() },
+        None => CostConfig { calibrate_on_start: true, ..CostConfig::default() },
+    };
+    let table = cost_table_from(&cost_cfg, &stack)?.expect("cost source configured");
+    let cfg = if cli.flag("fast") { TunerConfig::fast() } else { TunerConfig::default() };
+    eprintln!(
+        "tuning: sweeping {} schedule candidates over steps buckets {:?} ...",
+        cfg.candidates().len(),
+        cfg.steps_buckets,
+    );
+    let manifest = tune(Arc::clone(&stack), &cfg, &table)?;
+    for bucket in &manifest.buckets {
+        println!(
+            "frontier @ {} steps (full CFG {:.1} ms): {} non-dominated plan(s)",
+            bucket.steps,
+            bucket.full_cost_ms,
+            bucket.points.len()
+        );
+        for p in &bucket.points {
+            println!(
+                "  {:<28} ssim {:.4}  cost {:>7.1} ms  (saving {:.0}%)",
+                p.label,
+                p.ssim,
+                p.cost_ms,
+                p.saving(bucket.full_cost_ms) * 100.0,
+            );
+        }
+    }
+    let out = cli.opt("out").unwrap_or("frontier.json");
+    manifest.save(Path::new(out))?;
+    println!(
+        "wrote sealed frontier manifest to {out} (model fingerprint {}, checksum {})",
+        manifest.model_fingerprint, manifest.checksum,
+    );
+    Ok(())
 }
 
 /// `sgd-serve calibrate`: microbench the loaded runtime into a sealed

@@ -23,7 +23,9 @@
 //! is the mirror image, so quality recovers as load drains.
 
 use crate::engine::GenerationRequest;
-use crate::guidance::{GuidancePlan, GuidanceSchedule, GuidanceStrategy, WindowSpec};
+use crate::guidance::{
+    GuidancePlan, GuidanceSchedule, GuidanceStrategy, PlanSearch, SelectedPlan, WindowSpec,
+};
 
 use super::feedback::LoadSnapshot;
 use super::{QosConfig, QosMeta};
@@ -166,6 +168,62 @@ impl WindowActuator {
             }
         }
         (req.schedule.last_fraction(), widened)
+    }
+
+    /// Frontier-guided variant of [`Self::rewrite`]: instead of widening
+    /// the request's Last window analytically, degrade along the tuned
+    /// Pareto frontier (DESIGN.md §16). The load position still comes
+    /// from [`Self::fraction_for_request`], but it is converted into a
+    /// *cost saving* demand (`fraction · shed_ratio`, the measured
+    /// single-vs-dual ratio) and answered by [`PlanSearch::select`] with
+    /// the max-SSIM point that covers it — the quality floor becomes the
+    /// floor's own frontier point rather than a bare window clamp.
+    ///
+    /// The rewrite contract is unchanged from the legacy path: adaptive
+    /// requests and non-widenable schedules are never touched, and a
+    /// selected plan is applied only when its compiled effective shed
+    /// strictly exceeds what the request already gives up. A bucket miss
+    /// (no tuned steps bucket within 2× of the request) falls back to the
+    /// legacy analytic widening, so off-frontier traffic behaves exactly
+    /// as before. Returns `(applied_shed, widened, selected_point)`.
+    pub fn rewrite_along(
+        &self,
+        req: &mut GenerationRequest,
+        load: &LoadSnapshot,
+        meta: &QosMeta,
+        search: &PlanSearch,
+        shed_ratio: f64,
+    ) -> (f64, bool, Option<SelectedPlan>) {
+        if req.adaptive.is_some() || !req.schedule.widenable() {
+            return (req.schedule.last_fraction(), false, None);
+        }
+        let f = self.fraction_for_request(load, meta);
+        let ratio = shed_ratio.clamp(0.0, 1.0);
+        match search.select(req.steps, f * ratio, self.cfg.floor_fraction * ratio) {
+            Some(sel) => {
+                // same executed-shed comparison as the legacy path: both
+                // sides floor-rounded at this request's step count
+                let shed = GuidancePlan::compile(
+                    &sel.schedule,
+                    req.guidance_scale,
+                    sel.strategy,
+                    req.steps,
+                )
+                .map(|p| p.effective_fraction())
+                .unwrap_or(0.0);
+                if shed > req.effective_shed() {
+                    req.schedule = sel.schedule.clone();
+                    req.strategy = sel.strategy;
+                    (shed, true, Some(sel))
+                } else {
+                    (req.schedule.last_fraction(), false, None)
+                }
+            }
+            None => {
+                let (applied, widened) = self.rewrite(req, load, meta);
+                (applied, widened, None)
+            }
+        }
     }
 }
 
@@ -397,6 +455,96 @@ mod tests {
         assert!(!widened, "equal-shed rewrite fired");
         assert_eq!(req.schedule, before);
         assert_eq!(req.strategy, GuidanceStrategy::CondOnly);
+    }
+
+    /// A tuned frontier over the default grammar, priced on the
+    /// relabeled unit table (shed_ratio 0.5), scored with the fig5/fig6
+    /// analytic shape (reuse degrades slower than cond-only).
+    fn tuned_search() -> PlanSearch {
+        use crate::guidance::{tune_frontier, CostTable, TuneProvenance, TunerConfig};
+        let table = CostTable::proportional(1.0, &[1, 2, 4]);
+        let cfg = TunerConfig { steps_buckets: vec![50], ..TunerConfig::default() };
+        let prov = TuneProvenance {
+            tool_version: "test".into(),
+            backend: "synthetic".into(),
+            preset: "synthetic".into(),
+            model_fingerprint: "fp".into(),
+            resolution: 8,
+        };
+        let manifest = tune_frontier(&cfg, &table, &prov, |schedule, strategy, steps| {
+            let plan = GuidancePlan::compile(schedule, 7.5, strategy, steps)?;
+            let f = plan.effective_fraction();
+            let penalty = match strategy {
+                GuidanceStrategy::CondOnly => 0.30,
+                GuidanceStrategy::Reuse { .. } => 0.12,
+            };
+            Ok((1.0 - penalty * f * f).clamp(0.0, 1.0))
+        })
+        .unwrap();
+        PlanSearch::new(manifest).unwrap()
+    }
+
+    #[test]
+    fn rewrite_along_degrades_on_the_frontier() {
+        use crate::engine::GenerationRequest;
+        let a = actuator(0.5, 0, 10);
+        let meta = QosMeta::default();
+        let search = tuned_search();
+        // idle: the frontier answers with the full-CFG anchor, which
+        // sheds nothing — the request is untouched
+        let mut req = GenerationRequest::new("p").decode(false);
+        let (applied, widened, sel) = a.rewrite_along(&mut req, &load(0, 0.0), &meta, &search, 0.5);
+        assert!(!widened && sel.is_none());
+        assert_eq!(applied, 0.0);
+        assert_eq!(req.schedule, GuidanceSchedule::none());
+        // heavy load: rewritten to a frontier point that covers the
+        // floor's saving demand (0.5 · 0.5 = 0.25 of full cost)
+        let mut req = GenerationRequest::new("p").decode(false);
+        let (applied, widened, sel) =
+            a.rewrite_along(&mut req, &load(10, 0.0), &meta, &search, 0.5);
+        assert!(widened, "heavy load must rewrite the default schedule");
+        let sel = sel.expect("frontier point");
+        assert!(sel.saving + 1e-9 >= 0.25, "selected saving {} < demanded 0.25", sel.saving);
+        assert!(applied > 0.0);
+        assert_eq!(req.schedule, sel.schedule);
+        assert_eq!(req.strategy, sel.strategy);
+        // the frontier answer is at least as good as the legacy widening:
+        // same demand, but quality picked across the whole grammar
+        assert!(sel.ssim > 0.9, "frontier point quality {}", sel.ssim);
+    }
+
+    #[test]
+    fn rewrite_along_respects_legacy_guards() {
+        use crate::engine::GenerationRequest;
+        let a = actuator(0.5, 0, 10);
+        let meta = QosMeta::default();
+        let search = tuned_search();
+        let heavy = load(10, 0.0);
+        let before_counts = search.snapshot();
+        // adaptive requests are never rewritten and never searched
+        let mut req = GenerationRequest::new("p")
+            .adaptive(crate::guidance::AdaptiveConfig::default())
+            .decode(false);
+        let (applied, widened, sel) = a.rewrite_along(&mut req, &heavy, &meta, &search, 0.5);
+        assert!(!widened && sel.is_none());
+        assert_eq!(applied, 0.0);
+        // deliberate experiments (non-widenable schedules) are untouched
+        let mut req = GenerationRequest::new("p")
+            .with_schedule(GuidanceSchedule::Cadence { every: 4 })
+            .decode(false);
+        let before = req.schedule.clone();
+        let (_, widened, sel) = a.rewrite_along(&mut req, &heavy, &meta, &search, 0.5);
+        assert!(!widened && sel.is_none());
+        assert_eq!(req.schedule, before);
+        assert_eq!(search.snapshot().searches, before_counts.searches, "guards must not search");
+        // a step count with no tuned bucket within 2x falls back to the
+        // legacy analytic widening (counted as a planner fallback)
+        let mut req = GenerationRequest::new("p").steps(500).decode(false);
+        let (applied, widened, sel) = a.rewrite_along(&mut req, &heavy, &meta, &search, 0.5);
+        assert!(sel.is_none(), "bucket miss must not return a frontier point");
+        assert!(widened, "legacy fallback still widens under heavy load");
+        assert!((applied - 0.5).abs() < 1e-12);
+        assert_eq!(search.snapshot().fallbacks, before_counts.fallbacks + 1);
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! into a deadline miss. Admission control converts the failure mode
 //! into an explicit, *early* signal (429-style) the client can act on —
 //! retry against another replica, downgrade, or drop.
+//!
+//! Feasibility is judged against the widest *achievable* shed, which is
+//! the same bound whether the subsequent rewrite widens analytically or
+//! degrades along a tuned Pareto frontier (DESIGN.md §16): the frontier
+//! is floor-clamped, so the quality floor's frontier point never sheds
+//! more than the floor window this controller prices with.
 
 use std::time::{Duration, Instant};
 

@@ -45,7 +45,7 @@ pub mod sim;
 pub use actuator::{WindowActuator, SLOT_RAMP_START};
 pub use admission::{expired, AdmissionController, AdmissionDecision, RejectReason};
 pub use feedback::{LoadSnapshot, ServiceEstimator};
-pub use sim::{simulate, SimReport, SimSpec};
+pub use sim::{simulate, simulate_trace, AppliedPlan, SimReport, SimSpec};
 
 use std::sync::{Arc, OnceLock};
 use std::time::Duration;
@@ -127,6 +127,11 @@ pub struct QosMeta {
     /// or the standalone coordinator) and carried through requeues so a
     /// failover keeps appending to the *same* span (DESIGN.md §12).
     pub trace: Option<u64>,
+    /// Per-request opt-out from frontier plan search (DESIGN.md §16):
+    /// when set, admission uses the legacy analytic widening even with a
+    /// planner attached — for clients that depend on the exact legacy
+    /// actuator behavior or are running schedule experiments.
+    pub planner_opt_out: bool,
 }
 
 impl QosMeta {
@@ -138,6 +143,7 @@ impl QosMeta {
             deadline: Some(Duration::from_secs_f64(ms / 1e3)),
             priority: Priority::Standard,
             trace: None,
+            planner_opt_out: false,
         }
     }
 
@@ -359,6 +365,12 @@ pub trait QosPolicy: Send + Sync {
     /// switch from the analytic shed ratio (0.5) to the table's measured
     /// one. Default: ignored, for policies that price analytically.
     fn attach_cost_table(&self, _table: Arc<crate::guidance::CostTable>) {}
+
+    /// Wire a compiled frontier [`crate::guidance::PlanSearch`] into the
+    /// policy (DESIGN.md §16): the actuator degrades along the tuned
+    /// Pareto frontier instead of widening analytically. Default:
+    /// ignored, for policies that predate the planner.
+    fn attach_planner(&self, _search: Arc<crate::guidance::PlanSearch>) {}
 }
 
 /// The default policy: deadline-aware admission + load-driven window
@@ -372,6 +384,9 @@ pub struct DeadlineQos {
     telemetry: OnceLock<QosTelemetry>,
     /// Measured cost table (DESIGN.md §15); absent = analytic pricing.
     cost: OnceLock<Arc<crate::guidance::CostTable>>,
+    /// Compiled Pareto frontier (DESIGN.md §16); absent = legacy
+    /// analytic widening.
+    planner: OnceLock<Arc<crate::guidance::PlanSearch>>,
 }
 
 impl DeadlineQos {
@@ -384,6 +399,7 @@ impl DeadlineQos {
             counters: QosCounters::new(),
             telemetry: OnceLock::new(),
             cost: OnceLock::new(),
+            planner: OnceLock::new(),
             cfg,
         })
     }
@@ -407,6 +423,12 @@ impl DeadlineQos {
     /// Current load view (exposed for tests and the simulator).
     pub fn load(&self, queue_depth: usize) -> LoadSnapshot {
         self.estimator.snapshot(queue_depth)
+    }
+
+    /// The attached frontier search, when one was wired in (exposed for
+    /// the stats endpoints and the simulator).
+    pub fn planner(&self) -> Option<&Arc<crate::guidance::PlanSearch>> {
+        self.planner.get()
     }
 }
 
@@ -465,9 +487,21 @@ impl QosPolicy for DeadlineQos {
                 // guidance, near-CFG quality) -> CondOnly (drop). The
                 // actuator owns the whole rewrite — schedule edit,
                 // effective-shed floor, widenability — see
-                // WindowActuator::rewrite.
+                // WindowActuator::rewrite. With a frontier attached (and
+                // the request not opted out) the rewrite degrades along
+                // the tuned Pareto frontier instead (DESIGN.md §16).
                 let shed_before = req.effective_shed();
-                let (applied, widened) = self.actuator.rewrite(req, &load, meta);
+                let (applied, widened) = match self.planner.get() {
+                    Some(search) if !meta.planner_opt_out => {
+                        let (applied, widened, sel) =
+                            self.actuator.rewrite_along(req, &load, meta, search, self.shed_ratio());
+                        if let (Some(sel), Some(tm)) = (sel, self.telemetry.get()) {
+                            tm.on_plan_search(meta.trace, sel.ssim, sel.cost_ms);
+                        }
+                        (applied, widened)
+                    }
+                    _ => self.actuator.rewrite(req, &load, meta),
+                };
                 self.counters.inc_admitted();
                 self.counters.observe_fraction(applied, widened);
                 if let Some(tm) = self.telemetry.get() {
@@ -511,6 +545,10 @@ impl QosPolicy for DeadlineQos {
 
     fn attach_cost_table(&self, table: Arc<crate::guidance::CostTable>) {
         let _ = self.cost.set(table);
+    }
+
+    fn attach_planner(&self, search: Arc<crate::guidance::PlanSearch>) {
+        let _ = self.planner.set(search);
     }
 }
 
@@ -802,6 +840,82 @@ mod tests {
             req.schedule.last_fraction() > 0.0,
             "saturated slot occupancy must widen the window"
         );
+    }
+
+    #[test]
+    fn planner_attached_admission_rewrites_on_the_frontier() {
+        use crate::guidance::{
+            tune_frontier, CostTable, GuidancePlan, GuidanceStrategy, PlanSearch, TuneProvenance,
+            TunerConfig,
+        };
+        let cfg = QosConfig {
+            enabled: true,
+            ramp_low: 0,
+            ramp_high: 4,
+            floor_fraction: 0.5,
+            max_queue_depth: 64,
+            ..QosConfig::default()
+        };
+        let table = CostTable::proportional(1.0, &[1, 2, 4]);
+        let prov = TuneProvenance {
+            tool_version: "test".into(),
+            backend: "synthetic".into(),
+            preset: "synthetic".into(),
+            model_fingerprint: "fp".into(),
+            resolution: 8,
+        };
+        let manifest = tune_frontier(
+            &TunerConfig::default(),
+            &table,
+            &prov,
+            |schedule, strategy, steps| {
+                let f = GuidancePlan::compile(schedule, 7.5, strategy, steps)?.effective_fraction();
+                let penalty = match strategy {
+                    GuidanceStrategy::CondOnly => 0.30,
+                    GuidanceStrategy::Reuse { .. } => 0.12,
+                };
+                Ok((1.0 - penalty * f * f).clamp(0.0, 1.0))
+            },
+        )
+        .unwrap();
+        let search = Arc::new(PlanSearch::new(manifest).unwrap());
+
+        // two identical policies: one with the frontier attached
+        let legacy = loaded_policy(cfg.clone());
+        let planned = loaded_policy(cfg);
+        planned.attach_planner(Arc::clone(&search));
+        // attach is write-once, mirroring the other attach hooks
+        planned.attach_planner(Arc::clone(&search));
+        assert!(planned.planner().is_some() && legacy.planner().is_none());
+
+        // heavy load: the planner answers with a frontier point whose
+        // saving covers the floor demand — quality above the legacy
+        // cond-only floor window
+        let mut req = GenerationRequest::new("p").decode(false);
+        let mut meta = QosMeta::default();
+        assert!(matches!(planned.admit(&mut req, &mut meta, 4), AdmissionDecision::Admit));
+        assert!(req.effective_shed() > 0.0, "heavy load must shed");
+        let snap = search.snapshot();
+        assert_eq!(snap.searches, 1);
+        assert_eq!(snap.frontier_hits, 1);
+        assert_eq!(snap.fallbacks, 0);
+
+        // per-request opt-out: bit-exact legacy behavior, not searched
+        let mut opted = GenerationRequest::new("p").decode(false);
+        let mut opted_meta = QosMeta { planner_opt_out: true, ..QosMeta::default() };
+        let mut legacy_req = GenerationRequest::new("p").decode(false);
+        let mut legacy_meta = QosMeta::default();
+        assert!(matches!(
+            planned.admit(&mut opted, &mut opted_meta, 4),
+            AdmissionDecision::Admit
+        ));
+        assert!(matches!(
+            legacy.admit(&mut legacy_req, &mut legacy_meta, 4),
+            AdmissionDecision::Admit
+        ));
+        assert_eq!(opted.schedule, legacy_req.schedule);
+        assert_eq!(opted.strategy, legacy_req.strategy);
+        assert_eq!(search.snapshot().searches, 1, "opted-out request must not search");
     }
 
     #[test]

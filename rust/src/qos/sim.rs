@@ -22,6 +22,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use std::time::Duration;
 
 use crate::engine::GenerationRequest;
+use crate::guidance::{GuidanceSchedule, GuidanceStrategy};
 
 use super::{service_ms_at, AdmissionDecision, DeadlineQos, QosMeta, QosPolicy};
 
@@ -81,6 +82,19 @@ impl SimReport {
     }
 }
 
+/// The post-admission guidance plan one simulated request actually ran,
+/// plus its SLO outcome — what [`simulate_trace`] hands quality benches
+/// so they can replay exactly these (schedule, strategy) pairs through
+/// the real engine and score SSIM against full CFG (DESIGN.md §16).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppliedPlan {
+    pub schedule: GuidanceSchedule,
+    pub strategy: GuidanceStrategy,
+    pub steps: usize,
+    /// Completed within the SLO (expired / too-late requests are false).
+    pub slo_met: bool,
+}
+
 #[derive(Debug, Clone, Copy)]
 struct Queued {
     arrive_ms: f64,
@@ -89,6 +103,8 @@ struct Queued {
     fraction: f64,
     /// Expiry budget from arrival (None = no deadline enforcement).
     deadline_ms: Option<f64>,
+    /// This request's entry in the applied-plan trace.
+    plan_idx: usize,
 }
 
 /// Completion event ordered by finish time (min-heap via `Reverse`).
@@ -132,6 +148,7 @@ struct SimState<'a> {
     completed: usize,
     expired: usize,
     slo_met: usize,
+    plans: Vec<AppliedPlan>,
 }
 
 impl SimState<'_> {
@@ -189,6 +206,7 @@ impl SimState<'_> {
             self.completed += 1;
             if latency <= self.spec.deadline_ms {
                 self.slo_met += 1;
+                self.plans[head.plan_idx].slo_met = true;
             }
         }
     }
@@ -200,6 +218,19 @@ impl SimState<'_> {
 /// loop; pass a freshly-built [`DeadlineQos`] per run — it accumulates
 /// feedback state.
 pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos>) -> SimReport {
+    simulate_trace(arrivals_ms, spec, policy).0
+}
+
+/// [`simulate`] plus the per-request applied-plan trace: one
+/// [`AppliedPlan`] per *admitted* request (rejections leave no entry),
+/// in arrival order, with its eventual SLO outcome. Quality benches
+/// replay the trace's (schedule, strategy) pairs through the real engine
+/// to price what the actuation actually cost in SSIM.
+pub fn simulate_trace(
+    arrivals_ms: &[f64],
+    spec: &SimSpec,
+    policy: Option<&DeadlineQos>,
+) -> (SimReport, Vec<AppliedPlan>) {
     assert!(spec.workers >= 1, "sim needs at least one worker");
     debug_assert!(
         arrivals_ms.windows(2).all(|w| w[1] >= w[0]),
@@ -216,6 +247,7 @@ pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos
         completed: 0,
         expired: 0,
         slo_met: 0,
+        plans: Vec::with_capacity(arrivals_ms.len()),
     };
     let mut rejected = 0usize;
     let mut fractions: Vec<f64> = Vec::with_capacity(arrivals_ms.len());
@@ -238,11 +270,18 @@ pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos
                         // cold-cache steps pay dual cost)
                         let f = req.effective_shed();
                         fractions.push(f);
+                        st.plans.push(AppliedPlan {
+                            schedule: req.schedule.clone(),
+                            strategy: req.strategy,
+                            steps: req.steps,
+                            slo_met: false,
+                        });
                         st.queue.push_back(Queued {
                             arrive_ms: t,
                             service_ms: service_ms_at(spec.base_service_ms, spec.unet_share, f),
                             fraction: f,
                             deadline_ms: meta.deadline_ms(),
+                            plan_idx: st.plans.len() - 1,
                         });
                         st.outstanding += 1;
                     }
@@ -250,11 +289,18 @@ pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos
             }
             None => {
                 fractions.push(0.0);
+                st.plans.push(AppliedPlan {
+                    schedule: GuidanceSchedule::none(),
+                    strategy: GuidanceStrategy::CondOnly,
+                    steps: spec.steps,
+                    slo_met: false,
+                });
                 st.queue.push_back(Queued {
                     arrive_ms: t,
                     service_ms: spec.base_service_ms,
                     fraction: 0.0,
                     deadline_ms: None,
+                    plan_idx: st.plans.len() - 1,
                 });
                 st.outstanding += 1;
             }
@@ -276,7 +322,7 @@ pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos
             sorted[((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)]
         }
     };
-    SimReport {
+    let report = SimReport {
         offered: arrivals_ms.len(),
         completed: st.completed,
         rejected,
@@ -285,7 +331,8 @@ pub fn simulate(arrivals_ms: &[f64], spec: &SimSpec, policy: Option<&DeadlineQos
         mean_fraction,
         p50_latency_ms: pct(0.5),
         p90_latency_ms: pct(0.9),
-    }
+    };
+    (report, st.plans)
 }
 
 #[cfg(test)]
@@ -376,6 +423,28 @@ mod tests {
         assert!(on.expired > 0, "{on:?}");
         assert!(on.completed >= 1, "{on:?}");
         assert_eq!(on.completed + on.expired + on.rejected, 10, "{on:?}");
+    }
+
+    #[test]
+    fn trace_records_every_admitted_plan_with_its_slo_outcome() {
+        let arr = poisson(20.0, 400);
+        let spec = SimSpec::default();
+        let q = policy();
+        let (report, plans) = simulate_trace(&arr, &spec, Some(&q));
+        // one entry per admitted request, in arrival order
+        assert_eq!(plans.len(), report.offered - report.rejected);
+        // SLO flags reconcile exactly with the report
+        let met = plans.iter().filter(|p| p.slo_met).count();
+        assert_eq!(met, report.slo_met, "{report:?}");
+        // widened requests carry their actual post-admission schedule
+        assert!(
+            plans.iter().any(|p| p.schedule != crate::guidance::GuidanceSchedule::none()),
+            "overload must widen some plans"
+        );
+        assert!(plans.iter().all(|p| p.steps == spec.steps));
+        // the wrapper is the same replay minus the trace
+        let q2 = policy();
+        assert_eq!(simulate(&arr, &spec, Some(&q2)), report);
     }
 
     #[test]

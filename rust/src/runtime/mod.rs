@@ -14,10 +14,12 @@
 
 mod artifacts;
 mod calibrate;
+mod tune;
 mod synthetic;
 
 pub use artifacts::{ArtifactMeta, DType, Manifest, ModelMeta, TensorSpec};
 pub use calibrate::{calibrate, CalibrationConfig};
+pub use tune::tune;
 pub use synthetic::SyntheticModel;
 
 use std::collections::BTreeMap;
@@ -206,6 +208,46 @@ impl ModelStack {
             )));
         }
         self.manifest.validate_cost_manifest(cm)
+    }
+
+    /// Refuse a mismatched model/frontier pair (DESIGN.md §16): a sealed
+    /// plan frontier binds to the runtime its sweep measured the same
+    /// way a cost manifest does — backend, preset, shape fingerprint and
+    /// resolution must all match, else the SSIM/cost trade-offs it
+    /// promises say nothing about this deployment.
+    pub fn validate_frontier_manifest(
+        &self,
+        fm: &crate::guidance::FrontierManifest,
+    ) -> Result<()> {
+        if fm.backend != self.backend_name() {
+            return Err(Error::Artifact(format!(
+                "frontier manifest was tuned on the {:?} backend but this replica runs {:?} \
+                 — run `sgd-serve tune` against this runtime",
+                fm.backend,
+                self.backend_name()
+            )));
+        }
+        if fm.preset != self.manifest.model.preset {
+            return Err(Error::Artifact(format!(
+                "frontier manifest was tuned for preset {:?} but the loaded model is {:?}",
+                fm.preset, self.manifest.model.preset
+            )));
+        }
+        let want = self.manifest.model_fingerprint();
+        if fm.model_fingerprint != want {
+            return Err(Error::Artifact(format!(
+                "frontier manifest model fingerprint {} does not match the loaded model \
+                 ({want}) — the model shape changed since tuning; run `sgd-serve tune` again",
+                fm.model_fingerprint
+            )));
+        }
+        if fm.resolution != self.manifest.model.latent_size {
+            return Err(Error::Artifact(format!(
+                "frontier manifest resolution {} does not match the model latent size {}",
+                fm.resolution, self.manifest.model.latent_size
+            )));
+        }
+        Ok(())
     }
 
     /// Batch sizes with compiled UNet executables, descending.

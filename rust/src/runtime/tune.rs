@@ -1,0 +1,118 @@
+//! Runtime frontier tuning: sweep the schedule grammar on the loaded
+//! [`ModelStack`] into a sealed [`FrontierManifest`] (DESIGN.md §16).
+//!
+//! The planner's offline half. Every candidate plan in the tuner grid is
+//! *executed* on the loaded runtime and scored by SSIM against the
+//! full-CFG render of the same (prompt, seed, steps) triple; its price
+//! comes from a measured [`CostTable`] (DESIGN.md §15). The Pareto
+//! pruning itself lives in `guidance::planner::tune_frontier` — this
+//! module only supplies the engine-driven scorer, with the expensive
+//! full-CFG baseline rendered once per steps bucket and cached.
+//!
+//! CI tunes the synthetic stack (`tune --fast`); a machine with the
+//! PJRT artifacts tunes the real thing against its calibrated table.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::ModelStack;
+use crate::config::EngineConfig;
+use crate::engine::{Engine, GenerationRequest};
+use crate::error::Result;
+use crate::guidance::{
+    tune_frontier, CostTable, FrontierManifest, GuidanceSchedule, GuidanceStrategy,
+    TuneProvenance, TunerConfig,
+};
+use crate::image::RgbImage;
+use crate::prompts;
+use crate::quality::ssim;
+use crate::scheduler::SchedulerKind;
+
+/// The fixed (prompt, seed) probe every candidate is scored on. One
+/// probe keeps the sweep affordable and — because both the candidate and
+/// its full-CFG baseline share it — the *relative* SSIM ordering is what
+/// the frontier ranks, not the absolute number.
+const TUNE_SEED: u64 = 42;
+
+/// Sweep the tuner grid on the loaded runtime and seal the frontier.
+///
+/// `table` prices the candidates (use a calibrated table on real
+/// hardware, [`CostTable::proportional`] for deterministic CI); the
+/// provenance binds the manifest to this stack so a mismatched runtime
+/// refuses to load it.
+pub fn tune(stack: Arc<ModelStack>, cfg: &TunerConfig, table: &CostTable) -> Result<FrontierManifest> {
+    let model = stack.model();
+    let prov = TuneProvenance {
+        tool_version: env!("CARGO_PKG_VERSION").to_string(),
+        backend: stack.backend_name().to_string(),
+        preset: model.preset.clone(),
+        model_fingerprint: stack.manifest().model_fingerprint(),
+        resolution: model.latent_size,
+    };
+    let scale = cfg.guidance_scale;
+    let engine = Engine::new(stack, EngineConfig::default());
+    let request = |sched: GuidanceSchedule, strat: GuidanceStrategy, steps: usize| {
+        GenerationRequest::new(prompts::FIG2_PROMPT)
+            .steps(steps)
+            .scheduler(SchedulerKind::Ddim)
+            .guidance_scale(scale)
+            .seed(TUNE_SEED)
+            .with_schedule(sched)
+            .strategy(strat)
+            .decode(true)
+    };
+    // full-CFG baseline per steps bucket, rendered once
+    let mut baselines: HashMap<usize, RgbImage> = HashMap::new();
+    tune_frontier(cfg, table, &prov, |sched, strat, steps| {
+        if !baselines.contains_key(&steps) {
+            let base = engine.generate(&request(
+                GuidanceSchedule::none(),
+                GuidanceStrategy::CondOnly,
+                steps,
+            ))?;
+            baselines.insert(steps, base.image.expect("decode requested"));
+        }
+        let out = engine.generate(&request(sched.clone(), strat, steps))?;
+        Ok(ssim(&baselines[&steps], out.image.as_ref().expect("decode requested")))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tunes_the_synthetic_stack_into_a_sealed_frontier() {
+        let stack = Arc::new(ModelStack::synthetic());
+        let table = CostTable::proportional(1.0, &stack.model().batch_sizes);
+        let m = tune(Arc::clone(&stack), &TunerConfig::fast(), &table).unwrap();
+        assert_eq!(m.backend, "synthetic");
+        assert_eq!(m.preset, "synthetic");
+        assert_eq!(m.model_fingerprint, stack.manifest().model_fingerprint());
+        assert_eq!(m.resolution, stack.model().latent_size);
+        // the sealed manifest round-trips and re-validates
+        let back = FrontierManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.checksum, m.checksum);
+        for b in &m.buckets {
+            b.validate().unwrap();
+            // every bucket keeps its full-CFG anchor (saving 0, ssim 1)
+            let top = b.points.last().unwrap();
+            assert_eq!(top.ssim, 1.0);
+            assert!((top.cost_ms - b.full_cost_ms).abs() < 1e-9);
+            // measured SSIM ranks below the anchor for real shed
+            for p in &b.points[..b.points.len() - 1] {
+                assert!(p.ssim < 1.0 && p.cost_ms < b.full_cost_ms, "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tuning_is_deterministic() {
+        let stack = Arc::new(ModelStack::synthetic());
+        let table = CostTable::proportional(1.0, &stack.model().batch_sizes);
+        let cfg = TunerConfig::fast();
+        let a = tune(Arc::clone(&stack), &cfg, &table).unwrap();
+        let b = tune(stack, &cfg, &table).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}

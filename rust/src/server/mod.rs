@@ -158,6 +158,15 @@ impl Backend {
                             .with("model_ratio", s.cost_model_ratio)
                             .with("shed_ratio", s.cost_shed_ratio),
                     )
+                    .with(
+                        "planner",
+                        Value::obj()
+                            .with("attached", s.planner_attached)
+                            .with("searches", s.planner_searches as i64)
+                            .with("frontier_hits", s.planner_frontier_hits as i64)
+                            .with("fallbacks", s.planner_fallbacks as i64)
+                            .with("floor_clamps", s.planner_floor_clamps as i64),
+                    )
             }
             Backend::Cluster(set) => {
                 let s = set.stats();
@@ -214,6 +223,15 @@ impl Backend {
                         Value::obj()
                             .with("priced", s.cost_priced)
                             .with("fallbacks", s.cost_fallbacks as i64),
+                    )
+                    .with(
+                        "planner",
+                        Value::obj()
+                            .with("attached", s.planner_attached)
+                            .with("searches", s.planner_searches as i64)
+                            .with("frontier_hits", s.planner_frontier_hits as i64)
+                            .with("fallbacks", s.planner_fallbacks as i64)
+                            .with("floor_clamps", s.planner_floor_clamps as i64),
                     )
                     .with("replicas", Value::Arr(replicas))
             }

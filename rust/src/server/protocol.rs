@@ -233,6 +233,13 @@ pub fn parse_request_versioned(v: &Value, version: u8) -> Result<ServerRequest> 
             p.as_str().ok_or_else(|| Error::Protocol("priority must be a string".into()))?,
         )?;
     }
+    if let Some(p) = v.get("planner") {
+        // "planner": false opts this request out of frontier plan search
+        // (DESIGN.md §16) — it degrades via the legacy analytic actuator
+        meta.planner_opt_out = !p
+            .as_bool()
+            .ok_or_else(|| Error::Protocol("planner must be a boolean".into()))?;
+    }
     let return_image = v.get("return_image").and_then(Value::as_bool).unwrap_or(false);
     let return_latent = v.get("return_latent").and_then(Value::as_bool).unwrap_or(false);
     req.decode = return_image || req.decode;
@@ -702,6 +709,24 @@ mod tests {
         // defaults: no deadline, standard priority
         let sr = parse(r#"{"op":"generate","prompt":"x"}"#).unwrap();
         assert_eq!(sr.meta, crate::qos::QosMeta::default());
+    }
+
+    #[test]
+    fn planner_opt_out_parses() {
+        // explicit false opts out of frontier plan search
+        let sr = parse(r#"{"op":"generate","prompt":"x","planner":false}"#).unwrap();
+        assert!(sr.meta.planner_opt_out);
+        // explicit true and absent both leave the planner eligible
+        let sr = parse(r#"{"op":"generate","prompt":"x","planner":true}"#).unwrap();
+        assert!(!sr.meta.planner_opt_out);
+        let sr = parse(r#"{"op":"generate","prompt":"x"}"#).unwrap();
+        assert!(!sr.meta.planner_opt_out);
+        // type errors are protocol errors, not silent defaults
+        assert!(parse(r#"{"op":"generate","prompt":"x","planner":"off"}"#).is_err());
+        // v2 frames carry it too
+        let sr =
+            parse2(r#"{"v":2,"op":"generate","prompt":"x","planner":false}"#).unwrap();
+        assert!(sr.meta.planner_opt_out);
     }
 
     #[test]

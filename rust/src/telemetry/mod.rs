@@ -41,7 +41,7 @@ pub use trace::{Span, SpanEvent, TraceEvent, TraceId, TraceStore};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::guidance::{CostTable, StepMode};
+use crate::guidance::{CostTable, PlanSearch, StepMode};
 use crate::metrics::StepBreakdown;
 
 /// Default trace ring capacity (spans kept for `{"op":"trace"}`).
@@ -326,6 +326,9 @@ pub struct CoordSink {
     /// Measured-cost bundle, attached when the coordinator runs with a
     /// calibrated table (DESIGN.md §15).
     cost: Option<CostMetrics>,
+    /// Frontier-planner bundle, attached when the coordinator runs with
+    /// a compiled [`PlanSearch`] (DESIGN.md §16).
+    planner: Option<PlannerMetrics>,
     scope: String,
 }
 
@@ -363,6 +366,7 @@ impl CoordSink {
                 &l,
             ),
             cost: None,
+            planner: None,
             scope: scope.to_string(),
             t: Arc::clone(t),
         }
@@ -372,6 +376,12 @@ impl CoordSink {
     /// the `sg_step_cost_ms` histograms against this table.
     pub fn attach_cost(&mut self, table: Arc<CostTable>) {
         self.cost = Some(CostMetrics::new(&self.t, table));
+    }
+
+    /// Install the frontier-planner bundle: the search's counters are
+    /// mirrored into `sg_planner_*_total` on every admission/retire.
+    pub fn attach_planner(&mut self, search: Arc<PlanSearch>) {
+        self.planner = Some(PlannerMetrics::new(&self.t, search));
     }
 
     pub fn telemetry(&self) -> &Arc<Telemetry> {
@@ -421,6 +431,9 @@ impl CoordSink {
         }
         self.admitted.inc();
         self.queue_depth.set_usize(depth);
+        if let Some(p) = &self.planner {
+            p.refresh();
+        }
         if self.owns_terminal {
             self.t.event(trace, TraceEvent::Admitted { class });
         }
@@ -482,6 +495,9 @@ impl CoordSink {
         self.latency_ms.observe_ms(latency_ms);
         if let Some(c) = &self.cost {
             c.on_plan(plan_summary);
+        }
+        if let Some(p) = &self.planner {
+            p.refresh();
         }
         if trace.is_some() {
             for ev in plan_exec_events(plan_summary) {
@@ -621,6 +637,68 @@ impl CostMetrics {
     }
 }
 
+/// Frontier-planner telemetry (DESIGN.md §16): the [`PlanSearch`]'s
+/// internal counters mirrored as monotone Prometheus counters. Attached
+/// to a [`CoordSink`] when the coordinator runs with a compiled
+/// frontier; refreshed on every admission and retire, mirroring
+/// [`CostMetrics`]'s shared-counter discipline.
+pub struct PlannerMetrics {
+    enabled: bool,
+    search: Arc<PlanSearch>,
+    searches: Counter,
+    fallbacks: Counter,
+    floor_clamps: Counter,
+    /// Last mirrored values (registry counters are add-only, so the
+    /// shared snapshot is folded in as deltas).
+    seen_searches: AtomicU64,
+    seen_fallbacks: AtomicU64,
+    seen_floor_clamps: AtomicU64,
+}
+
+impl PlannerMetrics {
+    pub fn new(t: &Arc<Telemetry>, search: Arc<PlanSearch>) -> PlannerMetrics {
+        let r = t.registry();
+        let m = PlannerMetrics {
+            enabled: t.is_enabled(),
+            searches: r.counter(
+                "sg_planner_search_total",
+                "Admission-time frontier plan searches",
+                &[],
+            ),
+            fallbacks: r.counter(
+                "sg_planner_fallback_total",
+                "Searches that missed every tuned bucket and fell back to analytic widening",
+                &[],
+            ),
+            floor_clamps: r.counter(
+                "sg_planner_floor_clamp_total",
+                "Searches whose demanded saving was clamped to the quality floor",
+                &[],
+            ),
+            search,
+            seen_searches: AtomicU64::new(0),
+            seen_fallbacks: AtomicU64::new(0),
+            seen_floor_clamps: AtomicU64::new(0),
+        };
+        m.refresh();
+        m
+    }
+
+    /// Mirror the search's counters into the registry as monotone deltas.
+    pub fn refresh(&self) {
+        if !self.enabled {
+            return;
+        }
+        let snap = self.search.snapshot();
+        let prev = self.seen_searches.swap(snap.searches, Ordering::Relaxed);
+        self.searches.add(snap.searches.saturating_sub(prev));
+        let prev = self.seen_fallbacks.swap(snap.fallbacks, Ordering::Relaxed);
+        self.fallbacks.add(snap.fallbacks.saturating_sub(prev));
+        let prev = self.seen_floor_clamps.swap(snap.floor_clamps, Ordering::Relaxed);
+        self.floor_clamps.add(snap.floor_clamps.saturating_sub(prev));
+    }
+}
+
 /// QoS-layer telemetry: admission counters by class, shed reasons,
 /// queue depth + actuator position gauges, and the `actuator_rewrite`
 /// trace event.
@@ -692,6 +770,15 @@ impl QosTelemetry {
     pub fn on_deadline_miss(&self) {
         if self.enabled {
             self.deadline_missed.inc();
+        }
+    }
+
+    /// Frontier plan search applied a Pareto point to this admission:
+    /// record the selected point's predicted quality and priced cost on
+    /// the request's span (DESIGN.md §16).
+    pub fn on_plan_search(&self, trace: Option<TraceId>, ssim: f64, cost_ms: f64) {
+        if self.enabled {
+            self.t.event(trace, TraceEvent::PlanSearched { ssim, cost_ms });
         }
     }
 }
@@ -946,6 +1033,53 @@ mod tests {
         sink.on_retired(None, "1D", 1.0);
         let text = t.render_prometheus();
         assert!(text.contains("sg_cost_fallback_total 1"), "{text}");
+    }
+
+    #[test]
+    fn planner_metrics_mirror_search_counters() {
+        use crate::guidance::{
+            FrontierBucket, FrontierManifest, FrontierPoint, GuidanceSchedule, GuidanceStrategy,
+            WindowSpec,
+        };
+        let bucket = FrontierBucket {
+            steps: 50,
+            full_cost_ms: 100.0,
+            points: vec![
+                FrontierPoint {
+                    label: "floor".into(),
+                    schedule: GuidanceSchedule::Window(WindowSpec::last(0.5)),
+                    strategy: GuidanceStrategy::CondOnly,
+                    ssim: 0.9,
+                    cost_ms: 75.0,
+                },
+                FrontierPoint {
+                    label: "full".into(),
+                    schedule: GuidanceSchedule::none(),
+                    strategy: GuidanceStrategy::CondOnly,
+                    ssim: 1.0,
+                    cost_ms: 100.0,
+                },
+            ],
+        };
+        let manifest = FrontierManifest::seal("t", "synthetic", "p", "fp", 8, 7.5, 2, vec![bucket]);
+        let search = Arc::new(PlanSearch::new(manifest).unwrap());
+        let t = Telemetry::with_clock(16, Clock::manual());
+        let mut sink = CoordSink::new(&t, "single", true);
+        sink.attach_planner(Arc::clone(&search));
+        // one hit, one bucket miss, one floor clamp on the shared search
+        search.select(50, 0.1, 0.5);
+        search.select(500, 0.1, 0.5);
+        search.select(50, 0.9, 0.5);
+        sink.on_admitted(None, "standard", 1);
+        let text = t.render_prometheus();
+        assert!(text.contains("sg_planner_search_total 3"), "{text}");
+        assert!(text.contains("sg_planner_fallback_total 1"), "{text}");
+        assert!(text.contains("sg_planner_floor_clamp_total 1"), "{text}");
+        // refreshes fold in deltas, never double-count
+        sink.on_retired(None, "1D", 1.0);
+        let text = t.render_prometheus();
+        assert!(text.contains("sg_planner_search_total 3"), "{text}");
+        assert!(text.contains("sg_planner_fallback_total 1"), "{text}");
     }
 
     #[test]

@@ -38,6 +38,9 @@ pub enum TraceEvent {
     PlanExec { mode: char, steps: usize, evals: usize },
     /// QoS actuator rewrote the request's shed fraction at admission.
     ActuatorRewrite { from: f64, to: f64 },
+    /// Frontier plan search answered this admission: the selected
+    /// Pareto point's predicted quality and priced cost (DESIGN.md §16).
+    PlanSearched { ssim: f64, cost_ms: f64 },
     /// Failover: the request left replica `from` and was re-dispatched
     /// onto replica `to`.
     Requeued { from: usize, to: usize },
@@ -69,6 +72,7 @@ impl TraceEvent {
             TraceEvent::CohortJoin { .. } => "cohort_join",
             TraceEvent::PlanExec { .. } => "plan_exec",
             TraceEvent::ActuatorRewrite { .. } => "actuator_rewrite",
+            TraceEvent::PlanSearched { .. } => "plan_searched",
             TraceEvent::Requeued { .. } => "requeued",
             TraceEvent::CacheHit => "cache_hit",
             TraceEvent::DedupJoin => "dedup_join",
@@ -105,6 +109,9 @@ impl TraceEvent {
                 .with("steps", *steps as i64)
                 .with("evals", *evals as i64),
             TraceEvent::ActuatorRewrite { from, to } => v.with("from", *from).with("to", *to),
+            TraceEvent::PlanSearched { ssim, cost_ms } => {
+                v.with("ssim", *ssim).with("cost_ms", *cost_ms)
+            }
             TraceEvent::Requeued { from, to } => {
                 v.with("from", *from as i64).with("to", *to as i64)
             }
@@ -321,6 +328,9 @@ mod tests {
         assert!(TraceEvent::Rejected { code: 429, reason: "q".into() }.is_terminal());
         assert!(!TraceEvent::Admitted { class: "interactive" }.is_terminal());
         assert!(!TraceEvent::Requeued { from: 0, to: 1 }.is_terminal());
+        // a frontier search annotates the admission, it never closes it
+        assert!(!TraceEvent::PlanSearched { ssim: 0.97, cost_ms: 70.0 }.is_terminal());
+        assert_eq!(TraceEvent::PlanSearched { ssim: 0.97, cost_ms: 70.0 }.name(), "plan_searched");
         // cache events never close a span: a hit still retires, a dedup
         // join terminates only at fan-out delivery
         assert!(!TraceEvent::CacheHit.is_terminal());

@@ -197,6 +197,11 @@ pub struct WorkloadSpec {
     /// grows to `num_requests * variations` entries, all variations of
     /// an arrival landing at the same offset. 1 = no fan-out.
     pub variations: usize,
+    /// Frontier plan-search eligibility (DESIGN.md §16). `false` marks
+    /// every trace entry opted out ([`QosMeta::planner_opt_out`]): under
+    /// pressure those requests degrade via the legacy analytic actuator
+    /// instead of the sealed Pareto frontier. Default `true`.
+    pub planner: bool,
 }
 
 impl Default for WorkloadSpec {
@@ -218,6 +223,7 @@ impl Default for WorkloadSpec {
             zipf: None,
             strength: None,
             variations: 1,
+            planner: true,
         }
     }
 }
@@ -242,6 +248,7 @@ impl WorkloadSpec {
         // so a hostile spec can't panic Duration construction
         let meta = QosMeta {
             priority: self.priority,
+            planner_opt_out: !self.planner,
             ..self
                 .deadline_ms
                 .map(QosMeta::with_deadline_ms)
@@ -414,6 +421,10 @@ impl WorkloadSpec {
             if spec.variations == 0 {
                 return Err(bad("variations must be >= 1"));
             }
+        }
+        // ---- frontier plan-search eligibility (DESIGN.md §16)
+        if let Some(v) = doc.get(S, "planner") {
+            spec.planner = v.as_bool().ok_or_else(|| bad("planner must be bool"))?;
         }
         // ---- popularity skew (both-or-neither, like window knobs)
         let zipf_skew = match doc.get(S, "zipf_skew") {
@@ -828,6 +839,28 @@ mod tests {
     }
 
     #[test]
+    fn planner_opt_out_rides_the_trace() {
+        // default: every entry is frontier-eligible
+        let plain = WorkloadSpec { num_requests: 3, ..WorkloadSpec::default() }.synthesize();
+        assert!(plain.iter().all(|t| !t.meta.planner_opt_out));
+        // planner = false marks every entry opted out, composing with
+        // the rest of the QoS metadata
+        let spec = WorkloadSpec {
+            num_requests: 3,
+            planner: false,
+            deadline_ms: Some(900.0),
+            priority: Priority::Interactive,
+            ..WorkloadSpec::default()
+        };
+        let trace = spec.synthesize();
+        assert!(trace.iter().all(|t| {
+            t.meta.planner_opt_out
+                && t.meta.priority == Priority::Interactive
+                && (t.meta.deadline_ms().unwrap() - 900.0).abs() < 1e-9
+        }));
+    }
+
+    #[test]
     fn kill_spec_rides_the_workload_spec() {
         let spec = WorkloadSpec {
             num_requests: 4,
@@ -996,6 +1029,12 @@ mod tests {
         assert_eq!(spec.steps, 30);
         assert_eq!(spec.variations, 1);
         assert_eq!(spec.strength, None);
+        assert!(spec.planner, "frontier-eligible by default");
+        // planner = false opts the whole trace out of frontier search
+        let doc = TomlDoc::parse("[workload]\nplanner = false\n").unwrap();
+        let spec = WorkloadSpec::from_toml(&doc, &engine).unwrap().unwrap();
+        assert!(!spec.planner);
+        assert!(spec.synthesize().iter().all(|t| t.meta.planner_opt_out));
     }
 
     #[test]
@@ -1018,6 +1057,7 @@ mod tests {
         assert!(parse("[workload]\nstrength = 1.5\n").is_err());
         assert!(parse("[workload]\nvariations = 0\n").is_err());
         assert!(parse("[workload]\nvariations = \"many\"\n").is_err());
+        assert!(parse("[workload]\nplanner = \"off\"\n").is_err());
         // zipf knobs come as a pair
         assert!(parse("[workload]\nzipf_skew = 1.0\n").is_err());
         assert!(parse("[workload]\nzipf_catalog = 8\n").is_err());

@@ -1,0 +1,298 @@
+//! Deadline-optimal plan-search property suite (engine-free analytic
+//! scorers — always runs; seeded by `PROP_MASTER_SEED` like every prop
+//! suite).
+//!
+//! The ISSUE-10 properties:
+//!
+//! (a) [`tune_frontier`] is deterministic — the same sweep over the same
+//!     table seals byte-identical manifests — and every sealed bucket is
+//!     *strictly* non-dominated (cost and SSIM both strictly increase
+//!     along the frontier) with the full-CFG baseline as its anchor;
+//! (b) [`PlanSearch::select`] is monotone in budget: lowering the
+//!     demanded saving never loses SSIM, and within the frontier's
+//!     reach (and under the floor) the selected point actually covers
+//!     the demand;
+//! (c) any post-seal tamper — one byte in a string field, one nudged
+//!     score or price — fails the checksum with a typed
+//!     [`Error::Artifact`];
+//! (d) the planner is strictly opt-in: a policy without a frontier, and
+//!     a planner-attached policy serving an opted-out request, make
+//!     decisions bit-identical to the legacy analytic actuator;
+//! (e) the O(1)-admission ledger balances: every select is exactly one
+//!     search, every search is a frontier hit or a fallback, and the
+//!     sealed `candidates_swept` never moves at admission time.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use selective_guidance::engine::GenerationRequest;
+use selective_guidance::error::Error;
+use selective_guidance::guidance::{
+    tune_frontier, CostTable, FrontierManifest, GuidancePlan, GuidanceSchedule,
+    GuidanceStrategy, PlanSearch, TuneProvenance, TunerConfig, WindowSpec,
+};
+use selective_guidance::json;
+use selective_guidance::qos::{DeadlineQos, QosConfig, QosMeta, QosPolicy};
+use selective_guidance::testutil::prop::{forall, Gen};
+
+/// The fig5/fig6 analytic quality shape: SSIM falls with effective shed,
+/// reuse strategies degrade slower than cond-only. Deterministic and
+/// engine-free, so the properties run on any machine.
+fn analytic_score(
+    schedule: &GuidanceSchedule,
+    strategy: GuidanceStrategy,
+    steps: usize,
+) -> selective_guidance::error::Result<f64> {
+    let plan = GuidancePlan::compile(schedule, 7.5, strategy, steps)?;
+    let f = plan.effective_fraction();
+    let penalty = match strategy {
+        GuidanceStrategy::CondOnly => 0.30,
+        GuidanceStrategy::Reuse { .. } => 0.12,
+    };
+    Ok((1.0 - penalty * f * f).clamp(0.0, 1.0))
+}
+
+fn prov() -> TuneProvenance {
+    TuneProvenance {
+        tool_version: "prop".into(),
+        backend: "synthetic".into(),
+        preset: "synthetic".into(),
+        model_fingerprint: "00000000deadbeef".into(),
+        resolution: 8,
+    }
+}
+
+/// A random but valid sweep shape: buckets large enough that the
+/// grammar's fractions round to real shed, fractions/cadences/intervals
+/// drawn inside their domains.
+fn random_tuner(g: &mut Gen) -> TunerConfig {
+    let mut fractions = Vec::new();
+    for _ in 0..g.usize_in(1, 4) {
+        fractions.push(g.f64_in(0.1, 0.9));
+    }
+    let mut cadences = Vec::new();
+    for _ in 0..g.usize_in(1, 3) {
+        cadences.push(g.usize_in(2, 6));
+    }
+    let mut intervals = Vec::new();
+    for _ in 0..g.usize_in(0, 2) {
+        let lo = g.f64_in(0.0, 0.5);
+        intervals.push((lo, g.f64_in(lo + 0.2, 1.0)));
+    }
+    let mut steps_buckets = Vec::new();
+    let mut s = g.usize_in(10, 24);
+    for _ in 0..g.usize_in(1, 3) {
+        steps_buckets.push(s);
+        s = s * 2 + g.usize_in(1, 10);
+    }
+    TunerConfig {
+        steps_buckets,
+        fractions,
+        cadences,
+        intervals,
+        refresh_every: g.usize_in(0, 6),
+        guidance_scale: 7.5,
+    }
+}
+
+fn tuned(g: &mut Gen) -> (FrontierManifest, TunerConfig) {
+    let cfg = random_tuner(g);
+    let unit = *g.choose(&[0.25, 0.5, 1.0, 2.0]);
+    let table = CostTable::proportional(unit, &[1, 2, 4]);
+    let m = tune_frontier(&cfg, &table, &prov(), analytic_score).unwrap();
+    (m, cfg)
+}
+
+#[test]
+fn tuning_is_deterministic_and_strictly_non_dominated() {
+    forall("frontier determinism + dominance", 60, |g| {
+        let cfg = random_tuner(g);
+        let table = CostTable::proportional(*g.choose(&[0.5, 1.0, 2.0]), &[1, 2, 4]);
+        let a = tune_frontier(&cfg, &table, &prov(), analytic_score).unwrap();
+        let b = tune_frontier(&cfg, &table, &prov(), analytic_score).unwrap();
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "same sweep must seal byte-identical manifests"
+        );
+        assert_eq!(a.candidates_swept, cfg.candidates().len());
+        assert_eq!(a.buckets.len(), cfg.steps_buckets.len());
+        for bucket in &a.buckets {
+            bucket.validate().unwrap();
+            // strict non-domination: both axes strictly increase
+            for w in bucket.points.windows(2) {
+                assert!(w[1].cost_ms > w[0].cost_ms, "{:?}", bucket.steps);
+                assert!(w[1].ssim > w[0].ssim, "{:?}", bucket.steps);
+            }
+            // the full-CFG baseline anchors the expensive end
+            let anchor = bucket.points.last().unwrap();
+            assert_eq!(anchor.ssim, 1.0);
+            assert!((anchor.cost_ms - bucket.full_cost_ms).abs() < 1e-9);
+            // every point re-prices to its sealed cost under the same
+            // table (the frontier is ordinary compiled plans, not magic)
+            for p in &bucket.points {
+                let plan = GuidancePlan::compile(&p.schedule, 7.5, p.strategy, bucket.steps)
+                    .unwrap();
+                assert!((plan.cost_ms(&table) - p.cost_ms).abs() < 1e-9, "{}", p.label);
+            }
+        }
+    });
+}
+
+#[test]
+fn select_is_monotone_in_budget_and_covers_the_demand() {
+    forall("select budget monotonicity", 60, |g| {
+        let (m, cfg) = tuned(g);
+        let ps = PlanSearch::new(m).unwrap();
+        let floor = g.f64_in(0.2, 1.0);
+        let steps = *g.choose(&cfg.steps_buckets);
+        let max_saving = ps.select(steps, 1.0, 1.0).unwrap().saving;
+        let mut prev_ssim = f64::NEG_INFINITY;
+        for i in (0..=20).rev() {
+            let needed = i as f64 * 0.05;
+            let sel = ps.select(steps, needed, floor).expect("tuned bucket must hit");
+            assert!(
+                sel.ssim >= prev_ssim,
+                "more budget lost SSIM: needed {needed}, {} < {prev_ssim}",
+                sel.ssim
+            );
+            prev_ssim = sel.ssim;
+            if needed <= floor && needed <= max_saving {
+                assert!(
+                    sel.saving + 1e-9 >= needed,
+                    "demand {needed} uncovered: got {}",
+                    sel.saving
+                );
+            }
+        }
+        // zero demand always answers with the full-CFG anchor
+        let idle = ps.select(steps, 0.0, floor).unwrap();
+        assert_eq!(idle.ssim, 1.0);
+        assert_eq!(idle.saving, 0.0);
+    });
+}
+
+#[test]
+fn any_post_seal_tamper_fails_the_checksum() {
+    forall("frontier tamper", 60, |g| {
+        let (m, _) = tuned(g);
+        let mut bad = m.clone();
+        match g.usize_in(0, 4) {
+            0 => bad.backend.push('x'), // one extra byte in a string field
+            1 => bad.preset.push('y'),
+            2 => bad.resolution += 1,
+            3 => {
+                let b = g.usize_in(0, bad.buckets.len() - 1);
+                bad.buckets[b].full_cost_ms += 0.5;
+            }
+            _ => {
+                // make one frontier point promise more quality than the
+                // sweep measured
+                let b = g.usize_in(0, bad.buckets.len() - 1);
+                let p = g.usize_in(0, bad.buckets[b].points.len() - 1);
+                bad.buckets[b].points[p].ssim = (bad.buckets[b].points[p].ssim - 0.1).max(0.0);
+            }
+        }
+        let text = bad.to_json().to_string();
+        assert_ne!(text, m.to_json().to_string(), "the tamper must change the payload");
+        let err = FrontierManifest::from_json(&json::from_str(&text).unwrap()).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err:?}");
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    });
+}
+
+#[test]
+fn planner_off_is_bit_exact_legacy_admission() {
+    forall("planner opt-out equivalence", 40, |g| {
+        let cfg = QosConfig {
+            enabled: true,
+            ramp_low: g.usize_in(0, 2),
+            ramp_high: g.usize_in(3, 12),
+            floor_fraction: g.f64_in(0.1, 0.8),
+            max_queue_depth: 64,
+            ..QosConfig::default()
+        };
+        let service_ms = g.f64_in(20.0, 200.0);
+        let prime = |q: &DeadlineQos| {
+            for _ in 0..20 {
+                q.observe_batch(1, Duration::from_secs_f64(service_ms / 1e3), 0.0);
+            }
+        };
+        let legacy = DeadlineQos::new(cfg.clone()).unwrap();
+        let planned = DeadlineQos::new(cfg).unwrap();
+        prime(&legacy);
+        prime(&planned);
+        let (m, tuner_cfg) = tuned(g);
+        let search = Arc::new(PlanSearch::new(m).unwrap());
+        planned.attach_planner(Arc::clone(&search));
+
+        // identical request streams: explicit windows, rich schedules
+        // and bare defaults, at depths across the whole ramp
+        for _ in 0..8 {
+            let steps = if g.bool() {
+                *g.choose(&tuner_cfg.steps_buckets)
+            } else {
+                g.usize_in(4, 80)
+            };
+            let base = match g.usize_in(0, 2) {
+                0 => GenerationRequest::new("p").steps(steps),
+                1 => GenerationRequest::new("p")
+                    .steps(steps)
+                    .selective(WindowSpec::last(g.f64_in(0.0, 1.0))),
+                _ => GenerationRequest::new("p")
+                    .steps(steps)
+                    .with_schedule(GuidanceSchedule::Cadence { every: g.usize_in(2, 6) }),
+            }
+            .decode(false);
+            let depth = g.usize_in(0, 16);
+
+            // (d1) a planner-attached policy serving an opted-out
+            // request == the legacy policy, decision for decision
+            let mut a = base.clone();
+            let mut a_meta = QosMeta { planner_opt_out: true, ..QosMeta::default() };
+            let mut b = base.clone();
+            let mut b_meta = QosMeta::default();
+            let before = search.snapshot();
+            let da = format!("{:?}", planned.admit(&mut a, &mut a_meta, depth));
+            let db = format!("{:?}", legacy.admit(&mut b, &mut b_meta, depth));
+            assert_eq!(da, db, "admission decisions diverged");
+            assert_eq!(a.schedule, b.schedule, "opt-out schedule diverged");
+            assert_eq!(a.strategy, b.strategy, "opt-out strategy diverged");
+            assert_eq!(
+                search.snapshot(),
+                before,
+                "an opted-out request must never touch the frontier"
+            );
+        }
+    });
+}
+
+#[test]
+fn search_ledger_balances_and_candidates_stay_sealed() {
+    forall("O(1) admission ledger", 60, |g| {
+        let (m, cfg) = tuned(g);
+        let swept = m.candidates_swept;
+        let checksum = m.checksum.clone();
+        let ps = PlanSearch::new(m).unwrap();
+        let n = g.usize_in(1, 40);
+        for _ in 0..n {
+            // mix of on-frontier and off-frontier step counts
+            let steps = if g.bool() {
+                *g.choose(&cfg.steps_buckets)
+            } else {
+                g.usize_in(1, 2000)
+            };
+            let _ = ps.select(steps, g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0));
+        }
+        let snap = ps.snapshot();
+        // every select is exactly one search; every search resolves to a
+        // hit or a fallback, never both, never neither
+        assert_eq!(snap.searches, n as u64);
+        assert_eq!(snap.frontier_hits + snap.fallbacks, snap.searches);
+        assert!(snap.floor_clamps <= snap.frontier_hits);
+        // admission-time work never re-opens the sweep: the sealed
+        // candidate count and the manifest identity are constants
+        assert_eq!(ps.manifest().candidates_swept, swept);
+        assert_eq!(ps.manifest().checksum, checksum);
+    });
+}

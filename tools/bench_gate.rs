@@ -26,10 +26,12 @@
 //! ≥ 3.4× at 4 replicas, plan-cost routing p95 ≤ round-robin),
 //! `BENCH_telemetry.json` (observation overhead), `BENCH_cache.json`
 //! (amortization tiers), `BENCH_stream.json` (mid-flight cancel
-//! reclaiming ≥ 1.15× useful throughput, no scenario class starving) and
+//! reclaiming ≥ 1.15× useful throughput, no scenario class starving),
 //! `BENCH_cost.json` (ms-priced routing p95 ≤ unit-slot p95 on the
 //! speed-heterogeneous fleet, zero analytic fallbacks on the calibrated
-//! grid).
+//! grid) and `BENCH_planner.json` (frontier-guided admission: no SLO
+//! regression, strictly higher mean SSIM where the legacy actuator
+//! widened, exactly one O(1) frontier search per admission).
 //!
 //! Usage (from `rust/`, after `cargo bench -- --fast`):
 //!
